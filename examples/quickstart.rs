@@ -1,0 +1,55 @@
+//! Quickstart: the four tensorized hash families in ~60 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tensor_lsh::prelude::*;
+use tensor_lsh::workload::{pair_at_cosine, pair_at_distance, PairFormat};
+
+fn main() -> Result<()> {
+    let dims = vec![16usize, 16, 16];
+    let mut rng = Rng::new(42);
+
+    // A random low-rank tensor in CP format (16×16×16, CP rank 4)…
+    let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 4));
+
+    // …hashed by CP-E2LSH (Definition 10): K=8 codes, bucket width 4.
+    let cp_e2 = CpE2lsh::new(CpE2lshConfig { dims: dims.clone(), rank: 8, k: 8, w: 4.0, seed: 1 });
+    println!("CP-E2LSH codes: {:?}", cp_e2.hash(&x));
+
+    // …and by TT-E2LSH (Definition 11), CP-SRP (12), TT-SRP (13).
+    let tt_e2 = TtE2lsh::new(TtE2lshConfig { dims: dims.clone(), rank: 8, k: 8, w: 4.0, seed: 1 });
+    let cp_srp = CpSrp::new(CpSrpConfig { dims: dims.clone(), rank: 8, k: 8, seed: 1 });
+    let tt_srp = TtSrp::new(TtSrpConfig { dims: dims.clone(), rank: 8, k: 8, seed: 1 });
+    println!("TT-E2LSH codes: {:?}", tt_e2.hash(&x));
+    println!("CP-SRP   bits : {:?}", cp_srp.hash(&x));
+    println!("TT-SRP   bits : {:?}", tt_srp.hash(&x));
+
+    // The whole point: space. The naive method stores d^N floats per hash.
+    let naive = NaiveSrp::naive(&dims, 8, 1);
+    println!(
+        "\nprojection parameters: cp-srp {} f32 vs naive {} f32 ({}x smaller)",
+        cp_srp.param_count(),
+        naive.param_count(),
+        naive.param_count() / cp_srp.param_count()
+    );
+
+    // Collision probabilities follow the classical laws (Theorems 4 & 8):
+    // nearby pairs collide often, far pairs rarely.
+    let (near_x, near_y) = pair_at_distance(&mut rng, &dims, 1.0, PairFormat::Cp(2));
+    let (far_x, far_y) = pair_at_distance(&mut rng, &dims, 12.0, PairFormat::Cp(2));
+    let collide =
+        |h: &Vec<i32>, g: &Vec<i32>| h.iter().zip(g).filter(|(a, b)| a == b).count();
+    println!(
+        "\nE2LSH collisions out of 8 hashes: near(r=1) {} vs far(r=12) {}",
+        collide(&cp_e2.hash(&near_x), &cp_e2.hash(&near_y)),
+        collide(&cp_e2.hash(&far_x), &cp_e2.hash(&far_y)),
+    );
+    let (sim_x, sim_y) = pair_at_cosine(&mut rng, &dims, 0.95, PairFormat::Cp(2));
+    let (dis_x, dis_y) = pair_at_cosine(&mut rng, &dims, 0.0, PairFormat::Cp(2));
+    println!(
+        "SRP collisions out of 8 hashes: cos=0.95 {} vs cos=0 {}",
+        collide(&cp_srp.hash(&sim_x), &cp_srp.hash(&sim_y)),
+        collide(&cp_srp.hash(&dis_x), &cp_srp.hash(&dis_y)),
+    );
+    Ok(())
+}

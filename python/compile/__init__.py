@@ -1,0 +1,1 @@
+"""Build-time compile package: Pallas kernels (L1), JAX model (L2), AOT export."""

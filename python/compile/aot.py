@@ -1,0 +1,172 @@
+"""AOT export: lower the L2 hash pipelines to HLO text artifacts.
+
+Emits one ``artifacts/<name>.hlo.txt`` per hash family at the canonical
+serving shapes plus ``artifacts/manifest.json`` describing each artifact's
+inputs/outputs so the Rust runtime can load and drive them without any
+Python at request time.
+
+HLO *text* is the interchange format — NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Canonical serving configuration. The Rust side reads these from the
+# manifest; changing them here and re-running `make artifacts` is the only
+# coordination needed.
+CONFIG = {
+    "n_modes": 3,
+    "d": 32,          # per-mode dimension
+    "rank_in": 8,     # Rhat: input CP/TT rank
+    "rank_proj": 8,   # R: projection CP/TT rank
+    "k": 64,          # hashes per table signature
+    "batch": 64,      # queries per PJRT execution
+}
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _cp_factor_specs(batch_or_k, n, d, rank):
+    return [_spec((batch_or_k, d, rank)) for _ in range(n)]
+
+
+def _tt_core_specs(batch_or_k, n, d, rank):
+    specs = []
+    for i in range(n):
+        rp = 1 if i == 0 else rank
+        rn = 1 if i == n - 1 else rank
+        specs.append(_spec((batch_or_k, rp, d, rn)))
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_entries(cfg):
+    """Returns [(name, jitted_fn, example_specs, input_desc, output_desc)]."""
+    n, d = cfg["n_modes"], cfg["d"]
+    rin, rpj = cfg["rank_in"], cfg["rank_proj"]
+    k, batch = cfg["k"], cfg["batch"]
+    dn = d ** n
+
+    x_cp = _cp_factor_specs(batch, n, d, rin)
+    a_cp = _cp_factor_specs(k, n, d, rpj)
+    x_tt = _tt_core_specs(batch, n, d, rin)
+    g_tt = _tt_core_specs(k, n, d, rpj)
+    b_spec = _spec((k,))
+    w_spec = _spec(())
+    x_flat = _spec((batch, dn))
+    p_dense = _spec((k, dn))
+
+    def shapes(specs):
+        return [list(s.shape) for s in specs]
+
+    entries = []
+    entries.append((
+        "cp_e2lsh",
+        lambda *a: (model.cp_e2lsh(list(a[:n]), list(a[n:2 * n]), a[2 * n], a[2 * n + 1]),),
+        x_cp + a_cp + [b_spec, w_spec],
+        {"x_factors": shapes(x_cp), "a_factors": shapes(a_cp), "b": [k], "w": []},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "tt_e2lsh",
+        lambda *a: (model.tt_e2lsh(list(a[:n]), list(a[n:2 * n]), a[2 * n], a[2 * n + 1]),),
+        x_tt + g_tt + [b_spec, w_spec],
+        {"x_cores": shapes(x_tt), "g_cores": shapes(g_tt), "b": [k], "w": []},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "cp_srp",
+        lambda *a: (model.cp_srp(list(a[:n]), list(a[n:2 * n])),),
+        x_cp + a_cp,
+        {"x_factors": shapes(x_cp), "a_factors": shapes(a_cp)},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "tt_srp",
+        lambda *a: (model.tt_srp(list(a[:n]), list(a[n:2 * n])),),
+        x_tt + g_tt,
+        {"x_cores": shapes(x_tt), "g_cores": shapes(g_tt)},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "naive_e2lsh",
+        lambda x, p, b, w: (model.naive_e2lsh(x, p, b, w),),
+        [x_flat, p_dense, b_spec, w_spec],
+        {"x_flat": [list(x_flat.shape)], "proj": [list(p_dense.shape)], "b": [k], "w": []},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "naive_srp",
+        lambda x, p: (model.naive_srp(x, p),),
+        [x_flat, p_dense],
+        {"x_flat": [list(x_flat.shape)], "proj": [list(p_dense.shape)]},
+        {"codes": [batch, k], "dtype": "i32"},
+    ))
+    entries.append((
+        "cp_project",
+        lambda *a: (model.cp_project_z(list(a[:n]), list(a[n:2 * n])),),
+        x_cp + a_cp,
+        {"x_factors": shapes(x_cp), "a_factors": shapes(a_cp)},
+        {"z": [batch, k], "dtype": "f32"},
+    ))
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"config": CONFIG, "artifacts": {}}
+    for name, fn, specs, in_desc, out_desc in build_entries(CONFIG):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": in_desc,
+            "input_order": [list(s.shape) for s in specs],
+            "output": out_desc,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

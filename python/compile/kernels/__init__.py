@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for tensorized random-projection LSH.
+
+Each kernel computes the batched inner product between input tensors and a
+bank of K projection tensors — the compute hot-spot of CP-E2LSH / TT-E2LSH /
+CP-SRP / TT-SRP (Verma & Pratap, 2024) — and runs under ``interpret=True``
+so the lowered HLO executes on the CPU PJRT plugin (real-TPU lowering emits
+Mosaic custom-calls the CPU client cannot run).
+
+Conventions (all float32):
+  - CP input factors:  list of N arrays, shape (B, d_n, Rhat)
+  - CP proj factors:   list of N arrays, shape (K, d_n, R)    (raw +/-1 entries)
+  - TT input cores:    list of N arrays, shape (B, rp, d_n, rn), r_0 = r_N = 1
+  - TT proj cores:     list of N arrays, shape (K, rp, d_n, rn) (raw +/-1)
+  - dense input:       (B, D) with D = prod(d_n); dense proj: (K, D)
+
+The 1/sqrt(R) (CP, Definition 6) and 1/sqrt(R^{N-1}) (TT, Definition 7)
+normalizations are applied *inside* the kernels, so callers pass unscaled
+Rademacher factors.
+"""
+
+from .cp_inner import cp_project
+from .tt_inner import tt_project
+from .dense_inner import dense_project
+from . import ref
+
+__all__ = ["cp_project", "tt_project", "dense_project", "ref"]

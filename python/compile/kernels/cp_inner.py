@@ -1,0 +1,77 @@
+"""Pallas kernel: batched CP x CP inner products (Hadamard-of-Grams).
+
+Computes  z[b, k] = (1/sqrt(R)) * <P_k, X_b>  where
+
+  P_k = [[A1[k], ..., AN[k]]]   (CP rank-R projection tensor, Definition 6)
+  X_b = [[X1[b], ..., XN[b]]]   (CP rank-Rhat input tensor,   Definition 4)
+
+using the identity
+
+  <P_k, X_b> = sum_{r,s}  prod_n  (An[k]^T Xn[b])[r, s]
+
+i.e. a Hadamard product of per-mode Gram matrices followed by a full
+reduction — the O(N d max{R,Rhat}^2) algorithm of Remark 1 / Table 1.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): per grid step (one input
+tensor b) the kernel performs one fattened matmul per mode,
+(K*R, d) @ (d, Rhat) — the MXU-friendly core op — and keeps the (K, R, Rhat)
+Hadamard accumulator resident in VMEM across modes. interpret=True for CPU.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cp_kernel(*refs, n_modes: int):
+    # refs = x_1..x_N (each (1, d_n, Rhat)), a_1..a_N (each (K, d_n, R)), out (1, K)
+    x_refs = refs[:n_modes]
+    a_refs = refs[n_modes : 2 * n_modes]
+    o_ref = refs[2 * n_modes]
+    a0 = a_refs[0]
+    k_dim, _, r = a0.shape
+    rhat = x_refs[0].shape[2]
+    acc = jnp.ones((k_dim, r, rhat), dtype=jnp.float32)
+    for n in range(n_modes):
+        x = x_refs[n][0]  # (d_n, Rhat)
+        a = a_refs[n][...]  # (K, d_n, R)
+        # Fattened MXU matmul: (K*R, d) @ (d, Rhat) -> (K*R, Rhat)
+        d_n = a.shape[1]
+        a2 = jnp.transpose(a, (0, 2, 1)).reshape(k_dim * r, d_n)
+        gram = jnp.dot(a2, x, preferred_element_type=jnp.float32)
+        acc = acc * gram.reshape(k_dim, r, rhat)
+    z = jnp.sum(acc, axis=(1, 2)) * (1.0 / math.sqrt(r))
+    o_ref[0, :] = z
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cp_project(x_factors, a_factors, interpret: bool = True):
+    """Project CP-format inputs onto K CP-Rademacher tensors.
+
+    Args:
+      x_factors: list of N arrays (B, d_n, Rhat) — input CP factors.
+      a_factors: list of N arrays (K, d_n, R) — unscaled (+/-1) projection
+        factors; the 1/sqrt(R) scale of Definition 6 is applied here.
+    Returns:
+      (B, K) float32 projections z[b, k] = <P_k, X_b>.
+    """
+    n_modes = len(x_factors)
+    b_dim = x_factors[0].shape[0]
+    k_dim = a_factors[0].shape[0]
+    in_specs = [
+        pl.BlockSpec((1,) + x.shape[1:], lambda b, _n=None: (b, 0, 0))
+        for x in x_factors
+    ] + [pl.BlockSpec(a.shape, lambda b: (0, 0, 0)) for a in a_factors]
+    out_spec = pl.BlockSpec((1, k_dim), lambda b: (b, 0))
+    kernel = functools.partial(_cp_kernel, n_modes=n_modes)
+    return pl.pallas_call(
+        kernel,
+        grid=(b_dim,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b_dim, k_dim), jnp.float32),
+        interpret=interpret,
+    )(*x_factors, *a_factors)

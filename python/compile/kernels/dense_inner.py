@@ -1,0 +1,45 @@
+"""Pallas kernel: the naive baseline — dense Gaussian projection.
+
+Computes  z[b, k] = <p_k, x_b>  for reshaped tensors x_b in R^D
+(D = prod(d_n)) and dense Gaussian rows p_k — the O(d^N)-per-hash naive
+method of Tables 1 and 2 (reshape + E2LSH / SRP). One (K, D) @ (D,) matvec
+per grid step; the projection matrix is the whole working set, which is the
+point: it does not fit fast memory once d^N grows. interpret=True for CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, p_ref, o_ref):
+    x = x_ref[0]  # (D,)
+    p = p_ref[...]  # (K, D)
+    o_ref[0, :] = jnp.dot(p, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense_project(x_flat, proj, interpret: bool = True):
+    """Project flattened dense inputs onto K dense Gaussian vectors.
+
+    Args:
+      x_flat: (B, D) float32 — inputs reshaped to vectors.
+      proj:   (K, D) float32 — N(0,1) projection rows (pre-scaled).
+    Returns:
+      (B, K) float32 projections.
+    """
+    b_dim, d_dim = x_flat.shape
+    k_dim = proj.shape[0]
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(b_dim,),
+        in_specs=[
+            pl.BlockSpec((1, d_dim), lambda b: (b, 0)),
+            pl.BlockSpec((k_dim, d_dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, k_dim), jnp.float32),
+        interpret=interpret,
+    )(x_flat, proj)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two tiers:
+  * ``*_materialize``: reconstruct the full dense tensors and take the exact
+    inner product — the ground truth definition, O(d^N), used only in tests.
+  * ``*_project_ref``: the same efficient contraction as the kernels but in
+    plain jnp (no pallas) — structural cross-check and the L2 fallback.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense materialization
+# ---------------------------------------------------------------------------
+
+def cp_materialize(factors):
+    """Dense tensor from CP factors. factors: list of N arrays (d_n, R)."""
+    r = factors[0].shape[1]
+    shape = tuple(f.shape[0] for f in factors)
+    out = jnp.zeros(shape, dtype=jnp.float32)
+    for s in range(r):
+        term = factors[0][:, s]
+        for f in factors[1:]:
+            term = jnp.tensordot(term, f[:, s], axes=0)
+        out = out + term
+    return out
+
+
+def tt_materialize(cores):
+    """Dense tensor from TT cores. cores: list of N arrays (rp, d_n, rn)."""
+    out = cores[0]  # (1, d1, r1)
+    for core in cores[1:]:
+        # (1, d1..dk, r) x (r, d_{k+1}, r') -> (1, d1..d_{k+1}, r')
+        out = jnp.tensordot(out, core, axes=([out.ndim - 1], [0]))
+    return out[0, ..., 0]
+
+
+# ---------------------------------------------------------------------------
+# exact (materializing) oracles
+# ---------------------------------------------------------------------------
+
+def cp_project_materialize(x_factors, a_factors):
+    """Exact z[b,k] by materializing both CP tensors."""
+    b_dim = x_factors[0].shape[0]
+    k_dim = a_factors[0].shape[0]
+    r = a_factors[0].shape[2]
+    out = []
+    for b in range(b_dim):
+        xb = cp_materialize([f[b] for f in x_factors])
+        row = []
+        for k in range(k_dim):
+            pk = cp_materialize([a[k] for a in a_factors]) / math.sqrt(r)
+            row.append(jnp.sum(pk * xb))
+        out.append(jnp.stack(row))
+    return jnp.stack(out)
+
+
+def tt_project_materialize(x_cores, g_cores):
+    """Exact z[b,k] by materializing both TT tensors."""
+    b_dim = x_cores[0].shape[0]
+    k_dim = g_cores[0].shape[0]
+    n = len(g_cores)
+    r = max(g.shape[3] for g in g_cores)
+    scale = 1.0 / math.sqrt(float(r) ** (n - 1))
+    out = []
+    for b in range(b_dim):
+        xb = tt_materialize([c[b] for c in x_cores])
+        row = []
+        for k in range(k_dim):
+            tk = tt_materialize([g[k] for g in g_cores]) * scale
+            row.append(jnp.sum(tk * xb))
+        out.append(jnp.stack(row))
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# efficient jnp references (same algorithm as kernels, no pallas)
+# ---------------------------------------------------------------------------
+
+def cp_project_ref(x_factors, a_factors):
+    """Hadamard-of-Grams CP x CP projection in plain jnp."""
+    k_dim = a_factors[0].shape[0]
+    r = a_factors[0].shape[2]
+    rhat = x_factors[0].shape[2]
+    b_dim = x_factors[0].shape[0]
+    acc = jnp.ones((b_dim, k_dim, r, rhat), dtype=jnp.float32)
+    for x, a in zip(x_factors, a_factors):
+        gram = jnp.einsum("kdr,bds->bkrs", a, x)
+        acc = acc * gram
+    return jnp.sum(acc, axis=(2, 3)) / math.sqrt(r)
+
+
+def tt_project_ref(x_cores, g_cores):
+    """Transfer-matrix TT x TT projection in plain jnp."""
+    n = len(g_cores)
+    b_dim = x_cores[0].shape[0]
+    k_dim = g_cores[0].shape[0]
+    r = max(g.shape[3] for g in g_cores)
+    m = jnp.ones((b_dim, k_dim, 1, 1), dtype=jnp.float32)
+    for x, g in zip(x_cores, g_cores):
+        tmp = jnp.einsum("BKab,Baic->BKicb", m, x)
+        m = jnp.einsum("BKicb,Kbid->BKcd", tmp, g)
+    scale = 1.0 / math.sqrt(float(r) ** (n - 1))
+    return m[:, :, 0, 0] * scale
+
+
+def dense_project_ref(x_flat, proj):
+    """Naive dense projection in plain jnp."""
+    return x_flat @ proj.T

@@ -1,0 +1,84 @@
+"""Layer-2 JAX model: the six tensorized LSH hash families.
+
+Composes the Layer-1 Pallas projection kernels with the E2LSH / SRP
+discretizers into full hash pipelines
+
+    (input tensors, projection parameters, b, w)  ->  (B, K) int32 codes
+
+for CP-E2LSH (Def. 10), TT-E2LSH (Def. 11), CP-SRP (Def. 12), TT-SRP
+(Def. 13) and the two naive baselines (reshape + E2LSH [11] / SRP [6]).
+
+Build-time only: these functions are lowered once by ``compile.aot`` to HLO
+text and executed from the Rust coordinator via PJRT. Python is never on the
+request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cp_project, tt_project, dense_project
+
+
+# ---------------------------------------------------------------------------
+# discretizers
+# ---------------------------------------------------------------------------
+
+def e2lsh_codes(z, b, w):
+    """E2LSH discretization: floor((z + b) / w) (Eq. 3.3 / 4.1 / 4.20).
+
+    z: (B, K) projections; b: (K,) uniform offsets in [0, w); w: scalar ().
+    Returns (B, K) int32 hash codes (can be negative).
+    """
+    return jnp.floor((z + b[None, :]) / w).astype(jnp.int32)
+
+
+def srp_codes(z):
+    """SRP discretization: sign (Eq. 3.1 / 4.34 / 4.61) mapped to {0, 1}."""
+    return (z > 0.0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# hash families (projection kernel + discretizer)
+# ---------------------------------------------------------------------------
+
+def cp_e2lsh(x_factors, a_factors, b, w, interpret=True):
+    """CP-E2LSH (Definition 10): g(X) = floor((<P, X> + b) / w)."""
+    z = cp_project(x_factors, a_factors, interpret=interpret)
+    return e2lsh_codes(z, b, w)
+
+
+def tt_e2lsh(x_cores, g_cores, b, w, interpret=True):
+    """TT-E2LSH (Definition 11): g~(X) = floor((<T, X> + b) / w)."""
+    z = tt_project(x_cores, g_cores, interpret=interpret)
+    return e2lsh_codes(z, b, w)
+
+
+def cp_srp(x_factors, a_factors, interpret=True):
+    """CP-SRP (Definition 12): h(X) = sgn(<P, X>)."""
+    return srp_codes(cp_project(x_factors, a_factors, interpret=interpret))
+
+
+def tt_srp(x_cores, g_cores, interpret=True):
+    """TT-SRP (Definition 13): h~(X) = sgn(<T, X>)."""
+    return srp_codes(tt_project(x_cores, g_cores, interpret=interpret))
+
+
+def naive_e2lsh(x_flat, proj, b, w, interpret=True):
+    """Naive baseline: reshape + E2LSH [11] on the d^N-vector."""
+    z = dense_project(x_flat, proj, interpret=interpret)
+    return e2lsh_codes(z, b, w)
+
+
+def naive_srp(x_flat, proj, interpret=True):
+    """Naive baseline: reshape + SRP [6] on the d^N-vector."""
+    return srp_codes(dense_project(x_flat, proj, interpret=interpret))
+
+
+# Projection-only entry points (the coordinator sometimes wants raw z, e.g.
+# for multiprobe ranking which needs distances to bucket boundaries).
+
+def cp_project_z(x_factors, a_factors, interpret=True):
+    return cp_project(x_factors, a_factors, interpret=interpret)
+
+
+def tt_project_z(x_cores, g_cores, interpret=True):
+    return tt_project(x_cores, g_cores, interpret=interpret)

@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (N, B, K, d, Rhat, R); every draw asserts the
+kernel, the efficient-jnp reference, and the exact materializing oracle all
+agree to float32 tolerance.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cp_project, tt_project, dense_project, ref
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _cp_inputs(rng, n, b, k, d, rhat, r):
+    xf = [jnp.asarray(rng.normal(size=(b, d, rhat)).astype(np.float32)) for _ in range(n)]
+    af = [jnp.asarray(rng.choice([-1.0, 1.0], size=(k, d, r)).astype(np.float32)) for _ in range(n)]
+    return xf, af
+
+
+def _tt_shapes(n, r):
+    return [(1 if i == 0 else r, 1 if i == n - 1 else r) for i in range(n)]
+
+
+def _tt_inputs(rng, n, b, k, d, rhat, r, rademacher_proj=True):
+    xc = [jnp.asarray(rng.normal(size=(b, rp, d, rn)).astype(np.float32))
+          for rp, rn in _tt_shapes(n, rhat)]
+    if rademacher_proj:
+        gc = [jnp.asarray(rng.choice([-1.0, 1.0], size=(k, rp, d, rn)).astype(np.float32))
+              for rp, rn in _tt_shapes(n, r)]
+    else:
+        gc = [jnp.asarray(rng.normal(size=(k, rp, d, rn)).astype(np.float32))
+              for rp, rn in _tt_shapes(n, r)]
+    return xc, gc
+
+
+shape_strategy = st.tuples(
+    st.integers(2, 4),   # n modes
+    st.integers(1, 4),   # batch
+    st.integers(1, 6),   # k
+    st.integers(2, 8),   # d
+    st.integers(1, 4),   # rhat
+    st.integers(1, 4),   # r
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_cp_kernel_matches_refs(shape, seed):
+    n, b, k, d, rhat, r = shape
+    xf, af = _cp_inputs(_rng(seed), n, b, k, d, rhat, r)
+    z = np.asarray(cp_project(xf, af))
+    z_ref = np.asarray(ref.cp_project_ref(xf, af))
+    z_mat = np.asarray(ref.cp_project_materialize(xf, af))
+    np.testing.assert_allclose(z, z_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(z, z_mat, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_tt_kernel_matches_refs(shape, seed):
+    n, b, k, d, rhat, r = shape
+    xc, gc = _tt_inputs(_rng(seed), n, b, k, d, rhat, r)
+    z = np.asarray(tt_project(xc, gc))
+    z_ref = np.asarray(ref.tt_project_ref(xc, gc))
+    z_mat = np.asarray(ref.tt_project_materialize(xc, gc))
+    np.testing.assert_allclose(z, z_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(z, z_mat, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    k=st.integers(1, 8),
+    dim=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_kernel_matches_ref(b, k, dim, seed):
+    rng = _rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(k, dim)).astype(np.float32))
+    z = np.asarray(dense_project(x, p))
+    np.testing.assert_allclose(
+        z, np.asarray(ref.dense_project_ref(x, p)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_cp_scaling_is_inv_sqrt_r():
+    """Doubling R with identical repeated factors scales z by sqrt(2)... i.e.
+    the 1/sqrt(R) normalization of Definition 6 is really applied."""
+    rng = _rng(7)
+    n, b, k, d, rhat = 3, 2, 3, 5, 2
+    xf, af1 = _cp_inputs(rng, n, b, k, d, rhat, 1)
+    af2 = [jnp.concatenate([a, a], axis=2) for a in af1]  # rank 2, duplicated
+    z1 = np.asarray(cp_project(xf, af1))
+    z2 = np.asarray(cp_project(xf, af2))
+    # sum doubles, scale is 1/sqrt(2) instead of 1 -> z2 = sqrt(2) z1
+    np.testing.assert_allclose(z2, math.sqrt(2.0) * z1, rtol=1e-4, atol=1e-4)
+
+
+def test_tt_gaussian_proj_also_supported():
+    """TT kernel is distribution-agnostic (Gaussian cores, Definition 7 rem.)."""
+    rng = _rng(11)
+    xc, gc = _tt_inputs(rng, 3, 2, 3, 4, 2, 2, rademacher_proj=False)
+    z = np.asarray(tt_project(xc, gc))
+    z_mat = np.asarray(ref.tt_project_materialize(xc, gc))
+    np.testing.assert_allclose(z, z_mat, rtol=RTOL, atol=ATOL)
+
+
+def test_cp_inner_linearity():
+    """<P, aX + bY> = a<P, X> + b<P, Y> — projections are linear maps."""
+    rng = _rng(13)
+    n, b, k, d, rhat, r = 3, 1, 4, 6, 2, 3
+    xf, af = _cp_inputs(rng, n, b, k, d, rhat, r)
+    yf, _ = _cp_inputs(rng, n, b, k, d, rhat, r)
+    # CP sum: concatenate factor columns; scale one term's first factor.
+    a, c = 0.7, -1.3
+    sf = [jnp.concatenate([x * (a if i == 0 else 1.0), y * (c if i == 0 else 1.0)], axis=2)
+          for i, (x, y) in enumerate(zip(xf, yf))]
+    zs = np.asarray(cp_project(sf, af))
+    zx = np.asarray(cp_project(xf, af))
+    zy = np.asarray(cp_project(yf, af))
+    np.testing.assert_allclose(zs, a * zx + c * zy, rtol=1e-3, atol=1e-3)

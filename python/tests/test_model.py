@@ -1,0 +1,93 @@
+"""L2 model tests: discretizers and full hash pipelines."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_e2lsh_codes_floor_semantics():
+    z = jnp.asarray([[-1.01, -0.5, 0.0, 0.49, 0.5, 3.99]], dtype=jnp.float32)
+    b = jnp.zeros((6,), dtype=jnp.float32)
+    w = jnp.asarray(1.0, dtype=jnp.float32)
+    codes = np.asarray(model.e2lsh_codes(z, b, w))
+    np.testing.assert_array_equal(codes, [[-2, -1, 0, 0, 0, 3]])
+
+
+def test_e2lsh_codes_offset_and_width():
+    z = jnp.asarray([[0.9, 1.1]], dtype=jnp.float32)
+    b = jnp.asarray([0.2, 0.2], dtype=jnp.float32)
+    w = jnp.asarray(0.5, dtype=jnp.float32)
+    codes = np.asarray(model.e2lsh_codes(z, b, w))
+    np.testing.assert_array_equal(codes, [[2, 2]])
+
+
+def test_srp_codes_sign_semantics():
+    z = jnp.asarray([[-3.0, -1e-9, 0.0, 1e-9, 5.0]], dtype=jnp.float32)
+    codes = np.asarray(model.srp_codes(z))
+    np.testing.assert_array_equal(codes, [[0, 0, 0, 1, 1]])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_cp_e2lsh_pipeline_matches_manual(seed):
+    rng = _rng(seed)
+    n, b_dim, k, d, rhat, r = 3, 2, 4, 5, 2, 3
+    xf = [jnp.asarray(rng.normal(size=(b_dim, d, rhat)).astype(np.float32)) for _ in range(n)]
+    af = [jnp.asarray(rng.choice([-1.0, 1.0], size=(k, d, r)).astype(np.float32)) for _ in range(n)]
+    b = jnp.asarray(rng.uniform(0, 4.0, size=(k,)).astype(np.float32))
+    w = jnp.asarray(np.float32(4.0))
+    codes = np.asarray(model.cp_e2lsh(xf, af, b, w))
+    z = np.asarray(ref.cp_project_ref(xf, af))
+    manual = np.floor((z + np.asarray(b)[None, :]) / 4.0).astype(np.int32)
+    np.testing.assert_array_equal(codes, manual)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_tt_srp_pipeline_matches_manual(seed):
+    rng = _rng(seed)
+    n, b_dim, k, d, rhat, r = 3, 2, 4, 5, 2, 3
+    def cores(lead, rank, rademacher):
+        out = []
+        for i in range(n):
+            rp = 1 if i == 0 else rank
+            rn = 1 if i == n - 1 else rank
+            arr = (rng.choice([-1.0, 1.0], size=(lead, rp, d, rn)) if rademacher
+                   else rng.normal(size=(lead, rp, d, rn)))
+            out.append(jnp.asarray(arr.astype(np.float32)))
+        return out
+    xc = cores(b_dim, rhat, False)
+    gc = cores(k, r, True)
+    codes = np.asarray(model.tt_srp(xc, gc))
+    z = np.asarray(ref.tt_project_ref(xc, gc))
+    np.testing.assert_array_equal(codes, (z > 0).astype(np.int32))
+
+
+def test_srp_collision_rate_tracks_cosine():
+    """Statistical sanity: empirical CP-SRP collision rate over K hashes is
+    within a few points of 1 - theta/pi (Theorem 8) for a correlated pair."""
+    rng = _rng(123)
+    n, d, rhat, r, k = 3, 12, 2, 4, 4000
+    xf = [rng.normal(size=(1, d, rhat)).astype(np.float32) for _ in range(n)]
+    # y: perturb one factor slightly -> high cosine similarity
+    yf = [x.copy() for x in xf]
+    yf[0] = yf[0] + 0.1 * rng.normal(size=yf[0].shape).astype(np.float32)
+    af = [jnp.asarray(rng.choice([-1.0, 1.0], size=(k, d, r)).astype(np.float32))
+          for _ in range(n)]
+    xj = [jnp.asarray(x) for x in xf]
+    yj = [jnp.asarray(y) for y in yf]
+    hx = np.asarray(model.cp_srp(xj, af))[0]
+    hy = np.asarray(model.cp_srp(yj, af))[0]
+    rate = float((hx == hy).mean())
+    xd = np.asarray(ref.cp_materialize([x[0] for x in xf]))
+    yd = np.asarray(ref.cp_materialize([y[0] for y in yf]))
+    cos = float((xd * yd).sum() / (np.linalg.norm(xd) * np.linalg.norm(yd)))
+    expect = 1.0 - np.arccos(np.clip(cos, -1, 1)) / np.pi
+    assert abs(rate - expect) < 0.05, (rate, expect)

@@ -1,0 +1,119 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! A1 — projection entry distribution: Rademacher (the paper's Defs. 6–7)
+//!      vs Gaussian (the CP_N/TT_N variants). Same collision law; compare
+//!      generation cost, hash cost, and law conformance.
+//! A2 — multiprobe vs more tables: at a matched candidate budget, L tables
+//!      with T probes each vs (T+1)·L tables. Multiprobe buys recall
+//!      without duplicating projection parameters.
+//!
+//! Run: `cargo bench --bench ablations`
+use std::sync::Arc;
+use tensor_lsh::index::{recall_at_k, IndexConfig, LshIndex, Metric};
+use tensor_lsh::lsh::{CpSrp, CpSrpConfig, HashFamily, SrpHasher};
+use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::stats::srp_collision_prob;
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::util::timer::{bench, time_once};
+use tensor_lsh::workload::{low_rank_corpus, pair_at_cosine, DatasetSpec, PairFormat};
+
+fn main() {
+    ablation_distribution();
+    ablation_multiprobe();
+}
+
+fn ablation_distribution() {
+    println!("## A1: Rademacher vs Gaussian projection entries (dims 12³, R=4, K=256)");
+    println!("| distribution | gen time | hash time | max |emp − law| over cos grid |");
+    println!("|---|---|---|---|");
+    let dims = vec![12usize, 12, 12];
+    for dist in [Distribution::Rademacher, Distribution::Gaussian] {
+        let (bank, gen_ns) = time_once(|| {
+            CpRademacher::generate(7, &dims, 4, 256, dist)
+        });
+        let fam = SrpHasher::wrap(bank, "cp");
+        let mut rng = Rng::new(8);
+        let x = AnyTensor::Cp(tensor_lsh::tensor::CpTensor::random_gaussian(&mut rng, &dims, 3));
+        let t = bench(|| fam.hash(&x), 5, 5.0);
+        let mut max_dev = 0.0f64;
+        for &c in &[-0.5, 0.0, 0.5, 0.9] {
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for _ in 0..8 {
+                let (a, b) = pair_at_cosine(&mut rng, &dims, c, PairFormat::Dense);
+                let (ha, hb) = (fam.hash(&a), fam.hash(&b));
+                hits += ha.iter().zip(&hb).filter(|(x, y)| x == y).count();
+                total += ha.len();
+            }
+            max_dev = max_dev.max((hits as f64 / total as f64 - srp_collision_prob(c)).abs());
+        }
+        println!(
+            "| {} | {:.2} ms | {:.1} µs | {:.4} |",
+            dist.name(),
+            gen_ns / 1e6,
+            t.median_ns / 1e3,
+            max_dev
+        );
+        assert!(max_dev < 0.05, "{} violates the law: {max_dev}", dist.name());
+    }
+}
+
+fn ablation_multiprobe() {
+    println!("\n## A2: multiprobe vs more tables (dims 10³, n=1200, K=12, cp-srp)");
+    println!("| config | params (f32) | recall@10 | cand./query |");
+    println!("|---|---|---|---|");
+    let dims = vec![10usize, 10, 10];
+    let (items, _) = low_rank_corpus(&DatasetSpec {
+        dims: dims.clone(),
+        n_items: 1200,
+        rank: 3,
+        n_clusters: 20,
+        noise: 0.35,
+        seed: 11,
+    });
+    let mut rng = Rng::new(12);
+    let qids: Vec<usize> = (0..30).map(|_| rng.below(items.len())).collect();
+    let mut results = Vec::new();
+    for (label, l, probes) in [("L=4, probes=0", 4usize, 0usize),
+                               ("L=4, probes=4", 4, 4),
+                               ("L=8, probes=0", 8, 0),
+                               ("L=16, probes=0", 16, 0)] {
+        let cfg = IndexConfig {
+            family_builder: {
+                let dims = dims.clone();
+                Arc::new(move |t| {
+                    Arc::new(CpSrp::new(CpSrpConfig {
+                        dims: dims.clone(),
+                        rank: 4,
+                        k: 12,
+                        seed: 500 + t as u64,
+                    })) as Arc<dyn HashFamily>
+                })
+            },
+            n_tables: l,
+            metric: Metric::Cosine,
+            probes,
+        };
+        let index = LshIndex::build(&cfg, items.clone()).unwrap();
+        let params: usize = index.families().iter().map(|f| f.param_count()).sum();
+        let mut recall = 0.0;
+        let mut cands = 0usize;
+        for &qid in &qids {
+            let approx = index.search(index.item(qid), 10).unwrap();
+            let exact = index.exact_search(index.item(qid), 10).unwrap();
+            recall += recall_at_k(&approx, &exact);
+            cands += index.candidates(index.item(qid)).len();
+        }
+        recall /= qids.len() as f64;
+        println!(
+            "| {label} | {params} | {recall:.3} | {:.1} |",
+            cands as f64 / qids.len() as f64
+        );
+        results.push((label, l, probes, recall));
+    }
+    // Multiprobe at L=4 must beat plain L=4 and approach L=8.
+    let get = |lbl: &str| results.iter().find(|r| r.0 == lbl).unwrap().3;
+    assert!(get("L=4, probes=4") >= get("L=4, probes=0") - 0.01);
+    println!("\nA1/A2 OK");
+}

@@ -1,0 +1,53 @@
+//! Bench: coordinator throughput/latency vs worker count and batch policy —
+//! verifies the coordinator is not the bottleneck (DESIGN.md §9 L3 target).
+//! Run: `cargo bench --bench coordinator_throughput`
+use std::sync::Arc;
+use std::time::Duration;
+use tensor_lsh::bench_harness::index_config;
+use tensor_lsh::config::Family;
+use tensor_lsh::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::index::{LshIndex, Metric};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+
+fn main() {
+    let dims = vec![12usize, 12, 12];
+    let spec = DatasetSpec {
+        dims: dims.clone(),
+        n_items: 3000,
+        rank: 3,
+        n_clusters: 40,
+        noise: 0.3,
+        seed: 5,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 12, 8, 4.0, 5);
+    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let mut rng = Rng::new(6);
+    println!("## coordinator throughput (n=3000, L=8, K=12, cp-srp)");
+    println!("| workers | max_batch | QPS | p50 µs | p99 µs |");
+    println!("|---|---|---|---|---|");
+    let mut base_qps = 0.0;
+    for &workers in &[1usize, 2, 4, 8] {
+        for &max_batch in &[1usize, 16, 64] {
+            let queries: Vec<Query> = (0..4000)
+                .map(|i| Query::new(i, index.item(rng.below(index.len())).clone(), 10))
+                .collect();
+            let cfg = CoordinatorConfig {
+                n_workers: workers,
+                batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(200) },
+            };
+            let (_resp, snap) =
+                Coordinator::serve_trace(Arc::clone(&index), cfg, HashBackend::Native, queries)
+                    .unwrap();
+            println!(
+                "| {workers} | {max_batch} | {:.0} | {:.0} | {:.0} |",
+                snap.qps, snap.p50_us, snap.p99_us
+            );
+            if workers == 1 && max_batch == 1 {
+                base_qps = snap.qps;
+            }
+        }
+    }
+    println!("\n(1-worker unbatched baseline: {base_qps:.0} QPS)");
+}

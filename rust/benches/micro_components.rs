@@ -1,0 +1,34 @@
+//! Component micro-benchmarks for the query hot path (hash, candidate
+//! lookup, re-rank) — the measurements behind EXPERIMENTS.md §Perf.
+//! Run: `cargo bench --bench micro_components`
+use std::sync::Arc;
+use tensor_lsh::bench_harness::index_config;
+use tensor_lsh::config::Family;
+use tensor_lsh::index::{signature, LshIndex, Metric};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::util::timer::bench;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+
+fn main() {
+    let dims = vec![12usize, 12, 12];
+    let spec = DatasetSpec { dims: dims.clone(), n_items: 3000, rank: 3, n_clusters: 40, noise: 0.3, seed: 5 };
+    let (items, _) = low_rank_corpus(&spec);
+    let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 12, 8, 4.0, 5);
+    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let mut rng = Rng::new(6);
+    let q = index.item(rng.below(index.len())).clone();
+    let t_hash = bench(|| {
+        index.families().iter().map(|f| signature(&f.hash(&q))).collect::<Vec<u64>>()
+    }, 5, 10.0);
+    println!("hash 8 tables: {:.1} us", t_hash.median_ns/1e3);
+    let sigs: Vec<u64> = index.families().iter().map(|f| signature(&f.hash(&q))).collect();
+    let t_cand = bench(|| index.candidates_from_signatures(&sigs), 5, 10.0);
+    let cand = index.candidates_from_signatures(&sigs);
+    println!("candidates ({}): {:.1} us", cand.len(), t_cand.median_ns/1e3);
+    let t_rerank = bench(|| index.rerank_candidates(&q, cand.clone(), 10).unwrap(), 5, 10.0);
+    println!("rerank: {:.1} us", t_rerank.median_ns/1e3);
+    let t_clone = bench(|| q.clone(), 5, 10.0);
+    println!("query clone: {:.2} us", t_clone.median_ns/1e3);
+    let t_full = bench(|| index.search(&q, 10).unwrap(), 5, 10.0);
+    println!("full search: {:.1} us", t_full.median_ns/1e3);
+}

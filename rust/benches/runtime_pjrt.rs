@@ -1,0 +1,54 @@
+//! Bench: PJRT hash hot path vs native Rust hashing at the canonical
+//! artifact shape (per-hash ns, per-batch ms, codes/sec).
+//! Run: `cargo bench --bench runtime_pjrt`
+use tensor_lsh::lsh::{HashFamily, SrpHasher};
+use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::runtime::{find_artifact_dir, PjrtEngine};
+use tensor_lsh::tensor::{AnyTensor, CpTensor};
+use tensor_lsh::util::timer::bench;
+use tensor_lsh::util::fmt_duration;
+
+fn main() {
+    let Some(dir) = find_artifact_dir(None) else {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let mut engine = PjrtEngine::new(&dir).expect("engine");
+    engine.warmup().expect("warmup");
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let proj = CpRademacher::generate(3, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    let native = SrpHasher::wrap(proj.clone(), "cp");
+    let mut rng = Rng::new(1);
+    let batch: Vec<CpTensor> = (0..cfg.batch)
+        .map(|_| CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in))
+        .collect();
+    let any: Vec<AnyTensor> = batch.iter().map(|t| AnyTensor::Cp(t.clone())).collect();
+
+    let t_pjrt = bench(
+        || engine.hash_cp("cp_srp", &batch, &proj, None).unwrap(),
+        10,
+        20.0,
+    );
+    let t_native = bench(
+        || any.iter().map(|x| native.hash(x)).collect::<Vec<_>>(),
+        10,
+        20.0,
+    );
+    let codes = (cfg.batch * cfg.k) as f64;
+    println!("## PJRT vs native hash hot path (B={}, K={}, d={}, R={})",
+        cfg.batch, cfg.k, cfg.d, cfg.rank_proj);
+    println!(
+        "pjrt:   {}/batch  ({:.0} ns/hash, {:.2} Mcodes/s)",
+        fmt_duration(t_pjrt.median_ns),
+        t_pjrt.median_ns / codes,
+        codes / t_pjrt.median_ns * 1e3
+    );
+    println!(
+        "native: {}/batch  ({:.0} ns/hash, {:.2} Mcodes/s)",
+        fmt_duration(t_native.median_ns),
+        t_native.median_ns / codes,
+        codes / t_native.median_ns * 1e3
+    );
+}

@@ -1,0 +1,16 @@
+//! Bench T2: regenerate the paper's Table 2 (cosine LSH space/time).
+//! Run: `cargo bench --bench table2_cosine`
+use tensor_lsh::bench_harness::{table2_cosine, TableOptions};
+
+fn main() {
+    let rows = table2_cosine(&TableOptions::default());
+    let t = |f: &str, d: usize| {
+        rows.iter().find(|r| r.family == f && r.d == d && r.n_modes == 3).unwrap()
+    };
+    assert!(t("cp", 32).param_bytes < t("tt", 32).param_bytes);
+    assert!(t("tt", 32).param_bytes < t("naive", 32).param_bytes);
+    let naive_growth = t("naive", 32).ns_per_hash / t("naive", 8).ns_per_hash;
+    let cp_growth = t("cp", 32).ns_per_hash / t("cp", 8).ns_per_hash;
+    println!("\nnaive d-growth {naive_growth:.1}x vs cp {cp_growth:.1}x (d: 8→32, N=3)");
+    assert!(naive_growth > cp_growth, "Table 2 shape violated");
+}

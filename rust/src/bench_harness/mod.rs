@@ -1,0 +1,57 @@
+//! Regenerators for every table and figure of the paper (DESIGN.md §5).
+//!
+//! | id | paper artifact | function |
+//! |----|----------------|----------|
+//! | T1 | Table 1 (E2LSH space/time)        | [`table1_euclidean`] |
+//! | T2 | Table 2 (SRP space/time)          | [`table2_cosine`]    |
+//! | F1 | Thm 4/6 collision law             | [`fig_collision_e2lsh`] |
+//! | F2 | Thm 8/10 collision law            | [`fig_collision_srp`]   |
+//! | F3 | Thm 3/5 asymptotic normality      | [`fig_normality`]       |
+//! | F4 | validity-condition sweep          | [`fig_condition`]       |
+//! | F5 | ANN recall-vs-cost benchmark      | [`fig_recall`]          |
+//!
+//! Each function prints paper-style rows to stdout and returns structured
+//! rows so the bench binaries and integration tests can assert on *shape*
+//! (who wins, crossovers, CI coverage) rather than absolute numbers.
+
+mod figures;
+mod recall;
+mod tables;
+
+pub use figures::{
+    fig_collision_e2lsh, fig_collision_srp, fig_condition, fig_normality, CollisionRow,
+    ConditionRow, NormalityRow,
+};
+pub use recall::{fig_recall, index_config, index_config_family, RecallOptions, RecallRow};
+pub use tables::{table1_euclidean, table2_cosine, ComplexityRow, TableOptions};
+
+/// Print a markdown-style header + separator.
+pub fn print_header(cols: &[&str]) {
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+/// Least-squares slope of log(y) vs log(x) — scaling-exponent fits for the
+/// "shape must hold" assertions (naive ~ d^N vs tensorized ~ d).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|&v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|&v| v.ln()).collect();
+    let n = lx.len() as f64;
+    let (sx, sy) = (lx.iter().sum::<f64>(), ly.iter().sum::<f64>());
+    let sxy: f64 = lx.iter().zip(&ly).map(|(a, b)| a * b).sum();
+    let sxx: f64 = lx.iter().map(|a| a * a).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loglog_slope_recovers_power() {
+        let xs = [2.0, 4.0, 8.0, 16.0];
+        let ys: Vec<f64> = xs.iter().map(|&x: &f64| 3.0 * x.powf(2.5)).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.5).abs() < 1e-9);
+    }
+}

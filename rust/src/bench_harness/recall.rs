@@ -1,0 +1,242 @@
+//! F5 — the ANN benchmark: recall@k vs hash cost, naive vs CP vs TT.
+
+use super::print_header;
+use crate::config::Family;
+use crate::index::{recall_at_k, IndexConfig, LshIndex, Metric};
+use crate::lsh::{
+    CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, HashFamily, NaiveE2lsh, NaiveSrp, TtE2lsh,
+    TtE2lshConfig, TtSrp, TtSrpConfig,
+};
+use crate::rng::Rng;
+use crate::util::fmt_duration;
+use crate::util::timer::time_once;
+use crate::workload::{low_rank_corpus, DatasetSpec};
+use std::sync::Arc;
+
+/// One (family, L) measurement.
+#[derive(Clone, Debug)]
+pub struct RecallRow {
+    pub family: String,
+    pub l: usize,
+    pub recall_at_10: f64,
+    pub mean_query_ns: f64,
+    pub build_ns: f64,
+    pub mean_candidates: f64,
+}
+
+/// F5 options.
+#[derive(Clone, Debug)]
+pub struct RecallOptions {
+    pub dims: Vec<usize>,
+    pub n_items: usize,
+    pub n_queries: usize,
+    pub rank_in: usize,
+    pub rank_proj: usize,
+    pub k: usize,
+    pub l_grid: Vec<usize>,
+    pub metric: Metric,
+    pub w: f64,
+    pub seed: u64,
+    /// Include the naive baseline (costly at large shapes).
+    pub include_naive: bool,
+}
+
+impl Default for RecallOptions {
+    fn default() -> Self {
+        RecallOptions {
+            dims: vec![12, 12, 12],
+            n_items: 1500,
+            n_queries: 40,
+            rank_in: 3,
+            rank_proj: 4,
+            k: 10,
+            l_grid: vec![2, 4, 8, 16],
+            metric: Metric::Cosine,
+            w: 4.0,
+            seed: 99,
+            include_naive: true,
+        }
+    }
+}
+
+/// Construct one hash family instance for a (family, metric) selection —
+/// shared by the CLI, the examples, and [`index_config`].
+pub fn index_config_family(
+    family: Family,
+    metric: Metric,
+    dims: &[usize],
+    rank: usize,
+    k: usize,
+    w: f64,
+    seed: u64,
+) -> Arc<dyn HashFamily> {
+    match (family, metric) {
+        (Family::Cp, Metric::Cosine) => Arc::new(CpSrp::new(CpSrpConfig {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            seed,
+        })),
+        (Family::Tt, Metric::Cosine) => Arc::new(TtSrp::new(TtSrpConfig {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            seed,
+        })),
+        (Family::Naive, Metric::Cosine) => Arc::new(NaiveSrp::naive(dims, k, seed)),
+        (Family::Cp, Metric::Euclidean) => Arc::new(CpE2lsh::new(CpE2lshConfig {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            w,
+            seed,
+        })),
+        (Family::Tt, Metric::Euclidean) => Arc::new(TtE2lsh::new(TtE2lshConfig {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            w,
+            seed,
+        })),
+        (Family::Naive, Metric::Euclidean) => Arc::new(NaiveE2lsh::naive(dims, k, w, seed)),
+    }
+}
+
+/// Build an [`IndexConfig`] for a family at (K, L).
+pub fn index_config(
+    family: Family,
+    metric: Metric,
+    dims: Vec<usize>,
+    rank: usize,
+    k: usize,
+    l: usize,
+    w: f64,
+    seed: u64,
+) -> IndexConfig {
+    IndexConfig {
+        family_builder: Arc::new(move |t| {
+            index_config_family(family, metric, &dims, rank, k, w, seed + 1000 * t as u64)
+        }),
+        n_tables: l,
+        metric,
+        probes: 0,
+    }
+}
+
+/// F5 — run the recall/cost sweep and print rows.
+pub fn fig_recall(opts: &RecallOptions) -> Vec<RecallRow> {
+    println!(
+        "\n## F5: ANN recall@10 vs cost (dims={:?}, n={}, K={}, metric={:?})",
+        opts.dims, opts.n_items, opts.k, opts.metric
+    );
+    print_header(&["family", "L", "recall@10", "query time", "build time", "cand./query"]);
+    let spec = DatasetSpec {
+        dims: opts.dims.clone(),
+        n_items: opts.n_items,
+        rank: opts.rank_in,
+        n_clusters: 25,
+        noise: 0.35,
+        seed: opts.seed,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let mut rng = Rng::derive(opts.seed, &[0xF5]);
+    let query_ids: Vec<usize> =
+        (0..opts.n_queries).map(|_| rng.below(items.len())).collect();
+
+    // Ground truth once (exact scan on a throwaway single-table index).
+    let truth_cfg = index_config(
+        Family::Cp,
+        opts.metric,
+        opts.dims.clone(),
+        opts.rank_proj,
+        opts.k,
+        1,
+        opts.w,
+        opts.seed,
+    );
+    let truth_index = LshIndex::build(&truth_cfg, items.clone()).unwrap();
+    let exact: Vec<_> = query_ids
+        .iter()
+        .map(|&qid| truth_index.exact_search(truth_index.item(qid), 10).unwrap())
+        .collect();
+
+    let mut families = vec![Family::Cp, Family::Tt];
+    if opts.include_naive {
+        families.push(Family::Naive);
+    }
+    let mut rows = Vec::new();
+    for family in families {
+        for &l in &opts.l_grid {
+            let cfg = index_config(
+                family,
+                opts.metric,
+                opts.dims.clone(),
+                opts.rank_proj,
+                opts.k,
+                l,
+                opts.w,
+                opts.seed,
+            );
+            let (index, build_ns) = time_once(|| LshIndex::build(&cfg, items.clone()).unwrap());
+            let mut recalls = Vec::new();
+            let mut cands = 0usize;
+            let (responses, query_ns) = time_once(|| {
+                query_ids
+                    .iter()
+                    .map(|&qid| index.search(index.item(qid), 10).unwrap())
+                    .collect::<Vec<_>>()
+            });
+            for (resp, truth) in responses.iter().zip(&exact) {
+                recalls.push(recall_at_k(resp, truth));
+            }
+            for &qid in &query_ids {
+                cands += index.candidates(index.item(qid)).len();
+            }
+            let row = RecallRow {
+                family: family.name().to_string(),
+                l,
+                recall_at_10: recalls.iter().sum::<f64>() / recalls.len() as f64,
+                mean_query_ns: query_ns / opts.n_queries as f64,
+                build_ns,
+                mean_candidates: cands as f64 / opts.n_queries as f64,
+            };
+            println!(
+                "| {} | {} | {:.3} | {} | {} | {:.1} |",
+                row.family,
+                row.l,
+                row.recall_at_10,
+                fmt_duration(row.mean_query_ns),
+                fmt_duration(row.build_ns),
+                row.mean_candidates
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_increases_with_l() {
+        let opts = RecallOptions {
+            dims: vec![8, 8, 8],
+            n_items: 300,
+            n_queries: 12,
+            l_grid: vec![1, 8],
+            include_naive: false,
+            ..Default::default()
+        };
+        let rows = fig_recall(&opts);
+        let r = |f: &str, l: usize| {
+            rows.iter()
+                .find(|r| r.family == f && r.l == l)
+                .unwrap()
+                .recall_at_10
+        };
+        assert!(r("cp", 8) >= r("cp", 1) - 0.02);
+        assert!(r("cp", 8) > 0.4, "cp recall@L=8 {}", r("cp", 8));
+    }
+}

@@ -1,0 +1,245 @@
+//! T1/T2: the space/time complexity tables (paper Tables 1 and 2).
+//!
+//! The paper's tables are asymptotic; we regenerate them as *measured*
+//! rows — ns/hash and stored bytes for naive vs CP vs TT across (N, d, R)
+//! with CP-format inputs — and fit scaling exponents so the claimed shapes
+//! (`O(d^N)` vs `O(NdR·max²)`) are checkable numbers, not prose.
+
+use super::print_header;
+use crate::lsh::{
+    CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, HashFamily, NaiveE2lsh, NaiveSrp, TtE2lsh,
+    TtE2lshConfig, TtSrp, TtSrpConfig,
+};
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor};
+use crate::util::timer::bench;
+use crate::util::{fmt_bytes, fmt_duration};
+
+/// One measured row.
+#[derive(Clone, Debug)]
+pub struct ComplexityRow {
+    pub family: String,
+    pub n_modes: usize,
+    pub d: usize,
+    pub rank: usize,
+    pub k: usize,
+    /// Median ns for one K-signature hash of a CP-format input.
+    pub ns_per_hash: f64,
+    /// Stored projection parameters in bytes (f32).
+    pub param_bytes: usize,
+}
+
+/// Sweep options.
+#[derive(Clone, Debug)]
+pub struct TableOptions {
+    /// (n_modes, d) shape points. Default sweeps d at N=3 plus an N sweep.
+    pub shapes: Vec<(usize, usize)>,
+    /// Projection and input rank.
+    pub rank: usize,
+    /// Hashes per signature.
+    pub k: usize,
+    /// Timing samples.
+    pub samples: usize,
+    /// Minimum ms per timing sample.
+    pub min_sample_ms: f64,
+}
+
+impl Default for TableOptions {
+    fn default() -> Self {
+        TableOptions {
+            shapes: vec![(3, 8), (3, 16), (3, 32), (2, 16), (4, 8)],
+            rank: 8,
+            k: 8,
+            samples: 7,
+            min_sample_ms: 5.0,
+        }
+    }
+}
+
+fn measure(
+    fam: &dyn HashFamily,
+    input: &AnyTensor,
+    opts: &TableOptions,
+) -> f64 {
+    bench(|| fam.hash(input), opts.samples, opts.min_sample_ms).median_ns
+}
+
+fn run_table(
+    title: &str,
+    opts: &TableOptions,
+    build: impl Fn(&[usize], usize, usize, u64) -> Vec<(String, Box<dyn HashFamily>)>,
+) -> Vec<ComplexityRow> {
+    println!("\n## {title}");
+    println!(
+        "(K={}, R=R̂={}, input given in CP decomposition format)\n",
+        opts.k, opts.rank
+    );
+    print_header(&["family", "N", "d", "params", "ns/hash", "vs naive"]);
+    let mut rows = Vec::new();
+    for &(n, d) in &opts.shapes {
+        let dims = vec![d; n];
+        let mut rng = Rng::derive(7, &[n as u64, d as u64]);
+        let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, opts.rank));
+        let fams = build(&dims, opts.rank, opts.k, 11);
+        let naive_ns = fams
+            .iter()
+            .find(|(name, _)| name == "naive")
+            .map(|(_, f)| measure(f.as_ref(), &x, opts));
+        for (name, fam) in &fams {
+            let ns = if name == "naive" {
+                naive_ns.unwrap()
+            } else {
+                measure(fam.as_ref(), &x, opts)
+            };
+            let param_bytes = fam.param_count() * 4;
+            let speedup = naive_ns.map(|nv| nv / ns).unwrap_or(f64::NAN);
+            println!(
+                "| {name} | {n} | {d} | {} | {} | {:.1}x |",
+                fmt_bytes(param_bytes),
+                fmt_duration(ns),
+                speedup
+            );
+            rows.push(ComplexityRow {
+                family: name.clone(),
+                n_modes: n,
+                d,
+                rank: opts.rank,
+                k: opts.k,
+                ns_per_hash: ns,
+                param_bytes,
+            });
+        }
+    }
+    print_scaling_fits(&rows);
+    rows
+}
+
+fn print_scaling_fits(rows: &[ComplexityRow]) {
+    // Fit time vs d at fixed N=3 for each family.
+    println!("\nscaling-exponent fits (time ~ d^e at N=3):");
+    for fam in ["naive", "cp", "tt"] {
+        let pts: Vec<(f64, f64)> = rows
+            .iter()
+            .filter(|r| r.family == fam && r.n_modes == 3)
+            .map(|r| (r.d as f64, r.ns_per_hash))
+            .collect();
+        if pts.len() >= 2 {
+            let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+            let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+            println!("  {fam}: e ≈ {:.2}", super::loglog_slope(&xs, &ys));
+        }
+    }
+}
+
+/// T1 — regenerate Table 1 (LSH for Euclidean distance).
+pub fn table1_euclidean(opts: &TableOptions) -> Vec<ComplexityRow> {
+    run_table("Table 1: Euclidean-distance LSH, space & time", opts, |dims, r, k, seed| {
+        vec![
+            (
+                "naive".to_string(),
+                Box::new(NaiveE2lsh::naive(dims, k, 4.0, seed)) as Box<dyn HashFamily>,
+            ),
+            (
+                "cp".to_string(),
+                Box::new(CpE2lsh::new(CpE2lshConfig {
+                    dims: dims.to_vec(),
+                    rank: r,
+                    k,
+                    w: 4.0,
+                    seed,
+                })),
+            ),
+            (
+                "tt".to_string(),
+                Box::new(TtE2lsh::new(TtE2lshConfig {
+                    dims: dims.to_vec(),
+                    rank: r,
+                    k,
+                    w: 4.0,
+                    seed,
+                })),
+            ),
+        ]
+    })
+}
+
+/// T2 — regenerate Table 2 (LSH for cosine similarity).
+pub fn table2_cosine(opts: &TableOptions) -> Vec<ComplexityRow> {
+    run_table("Table 2: cosine-similarity LSH, space & time", opts, |dims, r, k, seed| {
+        vec![
+            (
+                "naive".to_string(),
+                Box::new(NaiveSrp::naive(dims, k, seed)) as Box<dyn HashFamily>,
+            ),
+            (
+                "cp".to_string(),
+                Box::new(CpSrp::new(CpSrpConfig { dims: dims.to_vec(), rank: r, k, seed })),
+            ),
+            (
+                "tt".to_string(),
+                Box::new(TtSrp::new(TtSrpConfig { dims: dims.to_vec(), rank: r, k, seed })),
+            ),
+        ]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> TableOptions {
+        TableOptions {
+            shapes: vec![(3, 6), (3, 12)],
+            rank: 4,
+            k: 4,
+            samples: 3,
+            min_sample_ms: 0.5,
+        }
+    }
+
+    #[test]
+    fn table1_shape_holds_at_small_scale() {
+        let rows = table1_euclidean(&quick_opts());
+        // Space: cp < tt < naive at every shape point.
+        for d in [6usize, 12] {
+            let get = |f: &str| {
+                rows.iter()
+                    .find(|r| r.family == f && r.d == d)
+                    .unwrap()
+                    .param_bytes
+            };
+            assert!(get("cp") < get("tt"));
+            assert!(get("tt") < get("naive"));
+        }
+        // Time: naive grows faster with d than cp (d^3 vs d).
+        let t = |f: &str, d: usize| {
+            rows.iter()
+                .find(|r| r.family == f && r.d == d)
+                .unwrap()
+                .ns_per_hash
+        };
+        let naive_growth = t("naive", 12) / t("naive", 6);
+        let cp_growth = t("cp", 12) / t("cp", 6);
+        assert!(
+            naive_growth > cp_growth,
+            "naive {naive_growth:.2}x vs cp {cp_growth:.2}x"
+        );
+    }
+
+    #[test]
+    fn table2_runs_and_orders_space() {
+        let rows = table2_cosine(&quick_opts());
+        assert!(!rows.is_empty());
+        let cp: usize = rows
+            .iter()
+            .filter(|r| r.family == "cp")
+            .map(|r| r.param_bytes)
+            .sum();
+        let naive: usize = rows
+            .iter()
+            .filter(|r| r.family == "naive")
+            .map(|r| r.param_bytes)
+            .sum();
+        assert!(cp < naive);
+    }
+}

@@ -1,0 +1,279 @@
+//! Layered application configuration: defaults ← JSON file ← `key=value`
+//! CLI overrides. Used by the `tensorlsh` binary and the examples.
+
+use crate::coordinator::BatcherConfig;
+use crate::coordinator::CoordinatorConfig;
+use crate::error::{Error, Result};
+use crate::index::Metric;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Hash family selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Cp,
+    Tt,
+    Naive,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        match s {
+            "cp" => Ok(Family::Cp),
+            "tt" => Ok(Family::Tt),
+            "naive" => Ok(Family::Naive),
+            other => Err(Error::Config(format!("unknown family '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Cp => "cp",
+            Family::Tt => "tt",
+            Family::Naive => "naive",
+        }
+    }
+}
+
+/// Full application configuration.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// Tensor mode dimensions.
+    pub dims: Vec<usize>,
+    /// Projection tensor rank R.
+    pub rank_proj: usize,
+    /// Corpus item rank R̂.
+    pub rank_in: usize,
+    /// Hashes per table signature.
+    pub k: usize,
+    /// Number of tables L.
+    pub l: usize,
+    /// E2LSH bucket width.
+    pub w: f64,
+    /// cp | tt | naive.
+    pub family: Family,
+    /// euclidean | cosine.
+    pub metric: Metric,
+    /// Multiprobe extra probes.
+    pub probes: usize,
+    /// Corpus size for generated workloads.
+    pub n_items: usize,
+    /// Neighbors per query.
+    pub top_k: usize,
+    /// Coordinator workers.
+    pub n_workers: usize,
+    /// Batch limit.
+    pub max_batch: usize,
+    /// Batch deadline (µs).
+    pub max_wait_us: u64,
+    /// Master seed.
+    pub seed: u64,
+    /// Artifact directory override (PJRT backend).
+    pub artifact_dir: Option<String>,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            dims: vec![32, 32, 32],
+            rank_proj: 8,
+            rank_in: 8,
+            k: 16,
+            l: 8,
+            w: 4.0,
+            family: Family::Cp,
+            metric: Metric::Cosine,
+            probes: 0,
+            n_items: 2000,
+            top_k: 10,
+            n_workers: 4,
+            max_batch: 64,
+            max_wait_us: 500,
+            seed: 42,
+            artifact_dir: None,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Coordinator view of this config.
+    pub fn coordinator(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            n_workers: self.n_workers,
+            batcher: BatcherConfig {
+                max_batch: self.max_batch,
+                max_wait: Duration::from_micros(self.max_wait_us),
+            },
+        }
+    }
+
+    /// Apply a JSON config file.
+    pub fn apply_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let root = parse(&text)?;
+        for (k, v) in root.as_obj()? {
+            self.set(k, &json_to_string(v))?;
+        }
+        Ok(())
+    }
+
+    /// Apply a single `key=value` override.
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("override '{kv}' is not key=value")))?;
+        self.set(k.trim(), v.trim())
+    }
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_usize = |v: &str| -> Result<usize> {
+            v.parse().map_err(|e| Error::Config(format!("{key}={v}: {e}")))
+        };
+        match key {
+            "dims" => {
+                self.dims = value
+                    .split(|c| c == ',' || c == 'x')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.trim().parse().map_err(|e| Error::Config(format!("dims: {e}"))))
+                    .collect::<Result<_>>()?;
+            }
+            "rank_proj" | "rank" => self.rank_proj = parse_usize(value)?,
+            "rank_in" => self.rank_in = parse_usize(value)?,
+            "k" => self.k = parse_usize(value)?,
+            "l" | "tables" => self.l = parse_usize(value)?,
+            "w" => {
+                self.w = value.parse().map_err(|e| Error::Config(format!("w: {e}")))?;
+                if self.w <= 0.0 {
+                    return Err(Error::Config("w must be > 0".into()));
+                }
+            }
+            "family" => self.family = Family::parse(value)?,
+            "metric" => {
+                self.metric = match value {
+                    "euclidean" | "l2" => Metric::Euclidean,
+                    "cosine" | "angular" => Metric::Cosine,
+                    other => return Err(Error::Config(format!("unknown metric '{other}'"))),
+                }
+            }
+            "probes" => self.probes = parse_usize(value)?,
+            "n_items" | "items" => self.n_items = parse_usize(value)?,
+            "top_k" => self.top_k = parse_usize(value)?,
+            "n_workers" | "workers" => self.n_workers = parse_usize(value)?,
+            "max_batch" => self.max_batch = parse_usize(value)?,
+            "max_wait_us" => {
+                self.max_wait_us =
+                    value.parse().map_err(|e| Error::Config(format!("max_wait_us: {e}")))?
+            }
+            "seed" => {
+                self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
+            }
+            "artifact_dir" => self.artifact_dir = Some(value.to_string()),
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Serialize for `tensorlsh info`.
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "dims".to_string(),
+            Json::Arr(self.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        m.insert("rank_proj".into(), Json::Num(self.rank_proj as f64));
+        m.insert("rank_in".into(), Json::Num(self.rank_in as f64));
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("l".into(), Json::Num(self.l as f64));
+        m.insert("w".into(), Json::Num(self.w));
+        m.insert("family".into(), Json::Str(self.family.name().into()));
+        m.insert(
+            "metric".into(),
+            Json::Str(
+                match self.metric {
+                    Metric::Euclidean => "euclidean",
+                    Metric::Cosine => "cosine",
+                }
+                .into(),
+            ),
+        );
+        m.insert("probes".into(), Json::Num(self.probes as f64));
+        m.insert("n_items".into(), Json::Num(self.n_items as f64));
+        m.insert("top_k".into(), Json::Num(self.top_k as f64));
+        m.insert("n_workers".into(), Json::Num(self.n_workers as f64));
+        m.insert("max_batch".into(), Json::Num(self.max_batch as f64));
+        m.insert("max_wait_us".into(), Json::Num(self.max_wait_us as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m).to_string_pretty()
+    }
+}
+
+fn json_to_string(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Num(n) => {
+            if n.fract() == 0.0 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        Json::Bool(b) => format!("{b}"),
+        Json::Arr(items) => items
+            .iter()
+            .map(json_to_string)
+            .collect::<Vec<_>>()
+            .join(","),
+        other => format!("{other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = AppConfig::default();
+        c.apply_override("dims=8,8,8").unwrap();
+        c.apply_override("family=tt").unwrap();
+        c.apply_override("metric=euclidean").unwrap();
+        c.apply_override("k=24").unwrap();
+        c.apply_override("w=2.5").unwrap();
+        assert_eq!(c.dims, vec![8, 8, 8]);
+        assert_eq!(c.family, Family::Tt);
+        assert_eq!(c.metric, Metric::Euclidean);
+        assert_eq!(c.k, 24);
+        assert!((c.w - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut c = AppConfig::default();
+        assert!(c.apply_override("nope=1").is_err());
+        assert!(c.apply_override("w=-1").is_err());
+        assert!(c.apply_override("family=foo").is_err());
+        assert!(c.apply_override("no_equals").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip(){
+        let mut c = AppConfig::default();
+        c.apply_override("dims=4x4").unwrap();
+        let json = c.to_json();
+        let tmp = std::env::temp_dir().join("tensorlsh_cfg_test.json");
+        std::fs::write(&tmp, &json).unwrap();
+        let mut c2 = AppConfig::default();
+        c2.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c2.dims, vec![4, 4]);
+        assert_eq!(c2.k, c.k);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn dims_accept_x_separator() {
+        let mut c = AppConfig::default();
+        c.apply_override("dims=16x8x4").unwrap();
+        assert_eq!(c.dims, vec![16, 8, 4]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Dynamic batching: size- and deadline-bounded batch formation.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum queries per batch (the PJRT artifact's batch dimension).
+    pub max_batch: usize,
+    /// Maximum time to hold the first query of a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// Pull the next batch from `rx`: blocks for the first item, then fills up
+/// to `max_batch` items or until `max_wait` elapses, whichever first.
+/// Returns `None` when the channel is closed and drained.
+pub fn drain_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + cfg.max_wait;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let b1 = drain_batch(&rx, &cfg).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = drain_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(1) };
+        let b = drain_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![42]);
+    }
+
+    #[test]
+    fn closed_channel_yields_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        drop(tx);
+        let cfg = BatcherConfig::default();
+        assert_eq!(drain_batch(&rx, &cfg), Some(vec![1]));
+        assert_eq!(drain_batch::<i32>(&rx, &cfg), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! Serving metrics: latency histogram, counters, throughput.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log-scaled latency histogram (µs buckets: 1, 2, 4, ... ~1.1e6).
+#[derive(Debug)]
+pub struct Histogram {
+    /// counts[i] covers [2^i, 2^{i+1}) µs.
+    counts: Vec<u64>,
+    /// Exact values kept for precise quantiles up to a cap (reservoir-free:
+    /// serving traces here are ≤ millions of queries, Vec<f32> is fine).
+    samples: Vec<f32>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; 21], samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, us: f64) {
+        let bucket = (us.max(1.0).log2() as usize).min(self.counts.len() - 1);
+        self.counts[bucket] += 1;
+        self.samples.push(us as f32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Exact quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() as f64 - 1.0) * q).round() as usize;
+        xs[idx] as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+/// Shared serving metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    pub queries: AtomicU64,
+    pub candidates: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    latency: Mutex<Histogram>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            queries: AtomicU64::new(0),
+            candidates: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::new()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_query(&self, latency_us: f64, n_candidates: usize) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.candidates.fetch_add(n_candidates as u64, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(latency_us);
+    }
+
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Snapshot for reports.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist = self.latency.lock().unwrap();
+        let queries = self.queries.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let elapsed = self.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            queries,
+            qps: queries as f64 / elapsed.max(1e-9),
+            mean_candidates: self.candidates.load(Ordering::Relaxed) as f64
+                / queries.max(1) as f64,
+            mean_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
+            p50_us: hist.quantile(0.50),
+            p95_us: hist.quantile(0.95),
+            p99_us: hist.quantile(0.99),
+            mean_us: hist.mean(),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub qps: f64,
+    pub mean_candidates: f64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "queries={} qps={:.0} batch≈{:.1} cand≈{:.1} latency(µs) p50={:.0} p95={:.0} p99={:.0} mean={:.0}",
+            self.queries,
+            self.qps,
+            self.mean_batch,
+            self.mean_candidates,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((h.quantile(0.99) - 99.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 0.5);
+    }
+
+    #[test]
+    fn metrics_snapshot_counts() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        for i in 0..4 {
+            m.record_query(100.0 + i as f64, 10);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, 4);
+        assert!((s.mean_candidates - 10.0).abs() < 1e-9);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert!(s.p50_us >= 100.0);
+        let text = format!("{s}");
+        assert!(text.contains("queries=4"));
+    }
+}

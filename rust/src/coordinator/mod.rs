@@ -1,0 +1,29 @@
+//! Layer-3 serving coordinator.
+//!
+//! vLLM-router-shaped pipeline over std threads (no async runtime needed —
+//! the workload is CPU-bound):
+//!
+//! ```text
+//!   clients ──► router (mpsc) ──► dynamic batcher ──► hash stage
+//!                                                (native or PJRT engine)
+//!                     workers ◄── (query, per-table signatures) ─┘
+//!                        │  candidate lookup + exact re-rank
+//!                        └──► response channel ──► clients
+//! ```
+//!
+//! * The **batcher** groups queries by size/deadline so the PJRT hash
+//!   artifact (fixed batch dimension) runs full.
+//! * The **hash stage** owns the (non-`Sync`) [`crate::runtime::PjrtEngine`]
+//!   when the PJRT backend is selected; the native backend hashes inline.
+//! * **Workers** share the read-only index via `Arc` — no locks on the hot
+//!   path.
+
+mod batcher;
+mod metrics;
+mod protocol;
+mod server;
+
+pub use batcher::{drain_batch, BatcherConfig};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use protocol::{Query, QueryResponse};
+pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams};

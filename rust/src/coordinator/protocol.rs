@@ -1,0 +1,46 @@
+//! Query/response protocol types.
+
+use crate::index::SearchResult;
+use crate::tensor::AnyTensor;
+
+/// A k-NN query.
+#[derive(Clone, Debug)]
+pub struct Query {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// Query tensor (any format the index's families accept).
+    pub tensor: AnyTensor,
+    /// Number of neighbors to return.
+    pub top_k: usize,
+}
+
+impl Query {
+    pub fn new(id: u64, tensor: AnyTensor, top_k: usize) -> Self {
+        Query { id, tensor, top_k }
+    }
+}
+
+/// Response to a [`Query`].
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub results: Vec<SearchResult>,
+    /// End-to-end latency observed inside the coordinator (µs).
+    pub latency_us: f64,
+    /// Candidates examined before re-ranking (cost signal).
+    pub n_candidates: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+
+    #[test]
+    fn query_construction() {
+        let t = AnyTensor::Dense(DenseTensor::zeros(&[2, 2]));
+        let q = Query::new(7, t, 5);
+        assert_eq!(q.id, 7);
+        assert_eq!(q.top_k, 5);
+    }
+}

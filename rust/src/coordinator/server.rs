@@ -1,0 +1,368 @@
+//! The coordinator: router → batcher → hash stage → worker pool.
+
+use super::batcher::{drain_batch, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::protocol::{Query, QueryResponse};
+use crate::error::{Error, Result};
+use crate::index::{signature, LshIndex};
+use crate::projection::CpRademacher;
+use crate::runtime::PjrtEngine;
+use crate::tensor::{AnyTensor, CpTensor};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator policy knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Re-rank worker threads.
+    pub n_workers: usize,
+    /// Batching policy (sized to the PJRT artifact batch for that backend).
+    pub batcher: BatcherConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { n_workers: 4, batcher: BatcherConfig::default() }
+    }
+}
+
+/// Parameters for the PJRT hash backend. The engine itself is created
+/// *inside* the hash-stage thread (PJRT executables are not `Send`).
+///
+/// **Banding**: the artifact computes `K` codes per query in one execution;
+/// the coordinator splits them into `bands` contiguous sub-signatures of
+/// `K/bands` codes — one per index table. The index must be built with
+/// families over the *same* band slices ([`CpRademacher::band`]) so native
+/// and PJRT signatures coincide.
+pub struct PjrtServingParams {
+    /// Directory containing `manifest.json` + `*.hlo.txt`.
+    pub artifact_dir: PathBuf,
+    /// Artifact to execute: `"cp_srp"` or `"cp_e2lsh"`.
+    pub artifact: String,
+    /// The K-wide CP projection bank (seeded identically to the index's).
+    pub bank: CpRademacher,
+    /// Number of bands = index tables; must divide the manifest K.
+    pub bands: usize,
+    /// E2LSH offsets (length K) + bucket width; `None` for SRP.
+    pub e2lsh: Option<(Vec<f64>, f64)>,
+}
+
+/// How signatures are computed.
+pub enum HashBackend {
+    /// Each worker hashes with the index's native families.
+    Native,
+    /// A dedicated stage executes the AOT artifacts via PJRT.
+    Pjrt(PjrtServingParams),
+}
+
+struct HashedQuery {
+    query: Query,
+    /// Per-table signatures; `None` means the worker hashes natively itself
+    /// (native backend — parallelizes hashing across the pool).
+    sigs: Option<Vec<u64>>,
+    submitted: Instant,
+}
+
+/// Running coordinator instance.
+pub struct Coordinator {
+    input: Option<Sender<(Query, Instant)>>,
+    output: Receiver<Result<QueryResponse>>,
+    metrics: Arc<Metrics>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spin up the pipeline over a built index.
+    pub fn start(index: Arc<LshIndex>, cfg: CoordinatorConfig, backend: HashBackend) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (in_tx, in_rx) = channel::<(Query, Instant)>();
+        let (out_tx, out_rx) = channel::<Result<QueryResponse>>();
+
+        // Worker pool: consumes hashed queries, re-ranks, responds.
+        let mut worker_txs: Vec<Sender<HashedQuery>> = Vec::new();
+        let mut threads = Vec::new();
+        for _ in 0..cfg.n_workers.max(1) {
+            let (wtx, wrx) = channel::<HashedQuery>();
+            worker_txs.push(wtx);
+            let index = Arc::clone(&index);
+            let metrics = Arc::clone(&metrics);
+            let out_tx = out_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                for hq in wrx {
+                    let sigs = match hq.sigs {
+                        Some(s) => s,
+                        None => index
+                            .families()
+                            .iter()
+                            .map(|f| signature(&f.hash(&hq.query.tensor)))
+                            .collect(),
+                    };
+                    let cand = index.candidates_from_signatures(&sigs);
+                    let n_candidates = cand.len();
+                    let resp = index
+                        .rerank_candidates(&hq.query.tensor, cand, hq.query.top_k)
+                        .map(|results| {
+                            let latency_us =
+                                hq.submitted.elapsed().as_secs_f64() * 1e6;
+                            metrics.record_query(latency_us, n_candidates);
+                            QueryResponse {
+                                id: hq.query.id,
+                                results,
+                                latency_us,
+                                n_candidates,
+                            }
+                        });
+                    if out_tx.send(resp).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(out_tx);
+
+        // Hash stage: batches queries; computes per-table signatures on this
+        // thread only for the PJRT backend (one artifact execution per
+        // batch). Native hashing happens inside the workers, in parallel.
+        {
+            let metrics = Arc::clone(&metrics);
+            let batcher = cfg.batcher;
+            threads.push(std::thread::spawn(move || {
+                let mut engine_state = match &backend {
+                    HashBackend::Pjrt(p) => match PjrtEngine::new(&p.artifact_dir) {
+                        Ok(e) => Some(e),
+                        Err(err) => {
+                            eprintln!("coordinator: PJRT engine init failed: {err}");
+                            None
+                        }
+                    },
+                    HashBackend::Native => None,
+                };
+                let mut rr = 0usize;
+                while let Some(batch) = drain_batch(&in_rx, &batcher) {
+                    metrics.record_batch(batch.len());
+                    let hashed = match (&backend, engine_state.as_mut()) {
+                        (HashBackend::Pjrt(p), Some(engine)) => {
+                            match hash_batch_pjrt(engine, p, &batch) {
+                                Ok(h) => h,
+                                Err(err) => {
+                                    eprintln!("coordinator: PJRT hash failed: {err}; falling back to native");
+                                    defer_to_workers(&batch)
+                                }
+                            }
+                        }
+                        _ => defer_to_workers(&batch),
+                    };
+                    for hq in hashed {
+                        let _ = worker_txs[rr % worker_txs.len()].send(hq);
+                        rr += 1;
+                    }
+                }
+            }));
+        }
+
+        Coordinator { input: Some(in_tx), output: out_rx, metrics, threads }
+    }
+
+    /// Enqueue a query.
+    pub fn submit(&self, q: Query) -> Result<()> {
+        self.input
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("coordinator already closed".into()))?
+            .send((q, Instant::now()))
+            .map_err(|_| Error::Coordinator("input channel closed".into()))
+    }
+
+    /// Receive the next response (blocking; `None` after shutdown drains).
+    pub fn recv(&self) -> Option<Result<QueryResponse>> {
+        self.output.recv().ok()
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Close intake, wait for the pipeline to drain, and join threads.
+    /// Returns the final metrics snapshot.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.input.take(); // closes the router channel
+        // Drain remaining responses so workers can finish sending.
+        while self.output.recv().is_ok() {}
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.metrics.snapshot()
+    }
+
+    /// Convenience: push a whole trace through and collect all responses
+    /// (in completion order) plus final metrics.
+    pub fn serve_trace(
+        index: Arc<LshIndex>,
+        cfg: CoordinatorConfig,
+        backend: HashBackend,
+        queries: Vec<Query>,
+    ) -> Result<(Vec<QueryResponse>, MetricsSnapshot)> {
+        let n = queries.len();
+        let coord = Coordinator::start(index, cfg, backend);
+        for q in queries {
+            coord.submit(q)?;
+        }
+        let mut responses = Vec::with_capacity(n);
+        for _ in 0..n {
+            match coord.recv() {
+                Some(Ok(r)) => responses.push(r),
+                Some(Err(e)) => return Err(e),
+                None => break,
+            }
+        }
+        let snap = coord.shutdown();
+        Ok((responses, snap))
+    }
+}
+
+fn defer_to_workers(batch: &[(Query, Instant)]) -> Vec<HashedQuery> {
+    batch
+        .iter()
+        .map(|(q, t0)| HashedQuery { query: q.clone(), sigs: None, submitted: *t0 })
+        .collect()
+}
+
+/// PJRT hashing: for each table, execute the artifact over the batch (in
+/// manifest-batch chunks) and collect signatures.
+fn hash_batch_pjrt(
+    engine: &mut PjrtEngine,
+    params: &PjrtServingParams,
+    batch: &[(Query, Instant)],
+) -> Result<Vec<HashedQuery>> {
+    let cp_batch: Vec<CpTensor> = batch
+        .iter()
+        .map(|(q, _)| match &q.tensor {
+            AnyTensor::Cp(t) => Ok(t.clone()),
+            other => Err(Error::InvalidParameter(format!(
+                "PJRT cp backend needs CP queries, got {}",
+                other.format()
+            ))),
+        })
+        .collect::<Result<_>>()?;
+    let max_b = engine.manifest().config.batch;
+    let k_total = engine.manifest().config.k;
+    if params.bands == 0 || k_total % params.bands != 0 {
+        return Err(Error::InvalidParameter(format!(
+            "bands {} must divide manifest K {k_total}",
+            params.bands
+        )));
+    }
+    let band_k = k_total / params.bands;
+    let e2 = params.e2lsh.as_ref().map(|(bs, w)| (bs.as_slice(), *w));
+    let mut sigs_per_query: Vec<Vec<u64>> =
+        vec![Vec::with_capacity(params.bands); batch.len()];
+    let mut start = 0;
+    while start < cp_batch.len() {
+        let end = (start + max_b).min(cp_batch.len());
+        // ONE artifact execution yields all K codes; banding splits them
+        // into one signature per table.
+        let codes = engine.hash_cp(&params.artifact, &cp_batch[start..end], &params.bank, e2)?;
+        for (off, row) in codes.iter().enumerate() {
+            for band in 0..params.bands {
+                let slice = &row[band * band_k..(band + 1) * band_k];
+                sigs_per_query[start + off].push(signature(slice));
+            }
+        }
+        start = end;
+    }
+    Ok(batch
+        .iter()
+        .zip(sigs_per_query)
+        .map(|((q, t0), sigs)| HashedQuery { query: q.clone(), sigs: Some(sigs), submitted: *t0 })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{IndexConfig, Metric};
+    use crate::lsh::{CpSrp, CpSrpConfig, HashFamily};
+    use crate::workload::{low_rank_corpus, DatasetSpec};
+
+    fn build_index(dims: Vec<usize>, n_items: usize) -> Arc<LshIndex> {
+        let spec = DatasetSpec {
+            dims: dims.clone(),
+            n_items,
+            rank: 2,
+            n_clusters: 8,
+            noise: 0.25,
+            seed: 21,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let cfg = IndexConfig {
+            family_builder: Arc::new(move |t| {
+                Arc::new(CpSrp::new(CpSrpConfig {
+                    dims: dims.clone(),
+                    rank: 4,
+                    k: 10,
+                    seed: 400 + t as u64,
+                })) as Arc<dyn HashFamily>
+            }),
+            n_tables: 6,
+            metric: Metric::Cosine,
+            probes: 0,
+        };
+        Arc::new(LshIndex::build(&cfg, items).unwrap())
+    }
+
+    #[test]
+    fn native_trace_roundtrip() {
+        let index = build_index(vec![6, 6, 6], 150);
+        let queries: Vec<Query> = (0..40)
+            .map(|i| Query::new(i, index.item((i as usize * 3) % 150).clone(), 5))
+            .collect();
+        let (responses, snap) = Coordinator::serve_trace(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 3, ..Default::default() },
+            HashBackend::Native,
+            queries,
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 40);
+        assert_eq!(snap.queries, 40);
+        // Every response's top hit must be the query itself (items queried).
+        for r in &responses {
+            assert_eq!(r.results[0].id, (r.id as usize * 3) % 150, "resp {}", r.id);
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_error() {
+        let index = build_index(vec![4, 4], 20);
+        let coord = Coordinator::start(
+            index.clone(),
+            CoordinatorConfig::default(),
+            HashBackend::Native,
+        );
+        coord.submit(Query::new(0, index.item(0).clone(), 1)).unwrap();
+        let _ = coord.recv().unwrap().unwrap();
+        let snap = coord.shutdown();
+        assert_eq!(snap.queries, 1);
+    }
+
+    #[test]
+    fn responses_preserve_ids_under_concurrency() {
+        let index = build_index(vec![5, 5, 5], 100);
+        let queries: Vec<Query> = (0..64)
+            .map(|i| Query::new(1000 + i, index.item(i as usize % 100).clone(), 3))
+            .collect();
+        let (responses, _) = Coordinator::serve_trace(
+            index,
+            CoordinatorConfig { n_workers: 4, ..Default::default() },
+            HashBackend::Native,
+            queries,
+        )
+        .unwrap();
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (1000..1064).collect::<Vec<_>>());
+    }
+}

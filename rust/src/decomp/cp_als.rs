@@ -1,0 +1,171 @@
+//! CP decomposition via Alternating Least Squares.
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::tensor::{CpTensor, DenseTensor, Factor};
+
+/// Options for [`cp_als`].
+#[derive(Clone, Debug)]
+pub struct CpAlsOptions {
+    /// Target CP rank.
+    pub rank: usize,
+    /// Maximum ALS sweeps.
+    pub max_iters: usize,
+    /// Stop when the relative change in reconstruction error drops below this.
+    pub tol: f64,
+    /// RNG seed for the factor initialization.
+    pub seed: u64,
+}
+
+impl Default for CpAlsOptions {
+    fn default() -> Self {
+        CpAlsOptions { rank: 4, max_iters: 50, tol: 1e-6, seed: 0 }
+    }
+}
+
+/// Khatri–Rao product of `factors[m]` for all m ≠ skip, modes in increasing
+/// order (matching `DenseTensor::unfold_mode`'s column convention):
+/// rows indexed row-major by (i_{m1}, i_{m2}, ...), columns by rank.
+fn khatri_rao_skip(factors: &[Matrix], skip: usize) -> Matrix {
+    let r = factors[0].cols;
+    let modes: Vec<usize> = (0..factors.len()).filter(|&m| m != skip).collect();
+    let total_rows: usize = modes.iter().map(|&m| factors[m].rows).product();
+    let mut out = Matrix::zeros(total_rows, r);
+    let mut idx = vec![0usize; modes.len()];
+    for row in 0..total_rows {
+        for c in 0..r {
+            let mut v = 1.0;
+            for (k, &m) in modes.iter().enumerate() {
+                v *= factors[m][(idx[k], c)];
+            }
+            out[(row, c)] = v;
+        }
+        for k in (0..modes.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < factors[modes[k]].rows {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    out
+}
+
+/// Reconstruction error ‖X − [[A]]‖_F of the current factors.
+fn recon_error(x: &DenseTensor, factors: &[Matrix]) -> f64 {
+    let cp = factors_to_cp(factors);
+    let rec = cp.materialize();
+    let mut err = 0.0f64;
+    for (a, b) in x.data.iter().zip(&rec.data) {
+        err += (*a as f64 - *b as f64).powi(2);
+    }
+    err.sqrt()
+}
+
+fn factors_to_cp(factors: &[Matrix]) -> CpTensor {
+    let fs = factors
+        .iter()
+        .map(|m| Factor { d: m.rows, r: m.cols, data: m.to_f32() })
+        .collect();
+    CpTensor::new(fs).expect("consistent ALS factors")
+}
+
+/// CP-ALS: fit a rank-`opts.rank` CP decomposition to a dense tensor.
+///
+/// Standard alternating update: for each mode n,
+/// `A⁽ⁿ⁾ ← X₍ₙ₎ · KR(A⁽ᵐ⁾, m≠n) · (⊛_{m≠n} A⁽ᵐ⁾ᵀA⁽ᵐ⁾)⁻¹`,
+/// with the SPD solve done by Cholesky.
+pub fn cp_als(x: &DenseTensor, opts: &CpAlsOptions) -> Result<CpTensor> {
+    let n = x.shape.len();
+    let r = opts.rank;
+    let mut rng = Rng::derive(opts.seed, &[0xC9_A15]);
+    let mut factors: Vec<Matrix> = x
+        .shape
+        .iter()
+        .map(|&d| Matrix::from_fn(d, r, |_, _| rng.normal()))
+        .collect();
+    let unfolds: Vec<Matrix> = (0..n).map(|m| x.unfold_mode(m)).collect();
+
+    let mut prev_err = f64::INFINITY;
+    for _ in 0..opts.max_iters {
+        for mode in 0..n {
+            let kr = khatri_rao_skip(&factors, mode); // (rest, r)
+            let mttkrp = unfolds[mode].matmul(&kr)?; // (d_mode, r)
+            // V = Hadamard of Grams over m != mode  (r x r), SPD.
+            let mut v = Matrix::from_fn(r, r, |_, _| 1.0);
+            for (m, f) in factors.iter().enumerate() {
+                if m == mode {
+                    continue;
+                }
+                let g = f.transpose().matmul(f)?;
+                for i in 0..r {
+                    for j in 0..r {
+                        v[(i, j)] *= g[(i, j)];
+                    }
+                }
+            }
+            // A = MTTKRP · V⁻¹  ⇔  Vᵀ Aᵀ = MTTKRPᵀ (V symmetric).
+            let at = v.solve_spd(&mttkrp.transpose())?;
+            factors[mode] = at.transpose();
+        }
+        let err = recon_error(x, &factors);
+        if (prev_err - err).abs() <= opts.tol * (1.0 + err) {
+            prev_err = err;
+            break;
+        }
+        prev_err = err;
+    }
+    let _ = prev_err;
+    Ok(factors_to_cp(&factors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::AnyTensor;
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Rng::new(40);
+        let truth = CpTensor::random_gaussian(&mut rng, &[5, 6, 4], 2);
+        let dense = truth.materialize();
+        let fit = cp_als(&dense, &CpAlsOptions { rank: 3, max_iters: 120, tol: 1e-12, seed: 1 })
+            .unwrap();
+        let rec = fit.materialize();
+        let mut err = 0.0f64;
+        for (a, b) in dense.data.iter().zip(&rec.data) {
+            err += (*a as f64 - *b as f64).powi(2);
+        }
+        let rel = err.sqrt() / dense.frob_norm();
+        assert!(rel < 1e-3, "rel recon err {rel}");
+    }
+
+    #[test]
+    fn fitted_tensor_has_requested_rank_and_dims() {
+        let mut rng = Rng::new(41);
+        let dense = DenseTensor::random_gaussian(&mut rng, &[4, 4, 4]);
+        let fit = cp_als(&dense, &CpAlsOptions { rank: 5, max_iters: 10, tol: 1e-6, seed: 2 })
+            .unwrap();
+        assert_eq!(fit.rank(), 5);
+        assert_eq!(fit.dims(), vec![4, 4, 4]);
+        // Approximation shouldn't be worse than the zero tensor.
+        let rec = AnyTensor::Cp(fit);
+        let x = AnyTensor::Dense(dense.clone());
+        assert!(x.distance(&rec).unwrap() < dense.frob_norm());
+    }
+
+    #[test]
+    fn khatri_rao_matches_definition() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = Matrix::eye(2);
+        // skip mode 2 (c): KR(a, b): row (i,j) -> a[i,:] * b[j,:]
+        let kr = khatri_rao_skip(&[a, b, c], 2);
+        assert_eq!(kr.rows, 4);
+        assert_eq!(kr.row(0), &[5.0, 12.0]);
+        assert_eq!(kr.row(1), &[7.0, 16.0]);
+        assert_eq!(kr.row(2), &[15.0, 24.0]);
+        assert_eq!(kr.row(3), &[21.0, 32.0]);
+    }
+}

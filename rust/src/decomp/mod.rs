@@ -1,0 +1,13 @@
+//! Tensor decompositions — the ingestion path from dense data into the
+//! CP/TT formats the hash families are fast on.
+//!
+//! The paper's Tables 1–2 complexities assume "the input tensor is given in
+//! CP (or TT) decomposition format"; these routines are how a user gets
+//! there from raw arrays. CP rank is NP-hard to compute exactly ([15, 16] in
+//! the paper) — CP-ALS is the standard heuristic; TT-SVD is quasi-optimal.
+
+mod cp_als;
+mod tt_svd;
+
+pub use cp_als::{cp_als, CpAlsOptions};
+pub use tt_svd::{tt_svd, TtSvdOptions};

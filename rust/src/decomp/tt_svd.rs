@@ -1,0 +1,148 @@
+//! TT decomposition via sequential truncated SVD (Oseledets' TT-SVD).
+
+use crate::error::Result;
+use crate::linalg::{svd_thin, Matrix};
+use crate::tensor::{DenseTensor, TtCore, TtTensor};
+
+/// Options for [`tt_svd`].
+#[derive(Clone, Debug)]
+pub struct TtSvdOptions {
+    /// Cap on every internal bond rank.
+    pub max_rank: usize,
+    /// Relative truncation tolerance, distributed across the N−1 SVDs as
+    /// `tol·‖X‖_F/√(N−1)` (the standard quasi-optimal budget split).
+    pub rel_tol: f64,
+}
+
+impl Default for TtSvdOptions {
+    fn default() -> Self {
+        TtSvdOptions { max_rank: usize::MAX, rel_tol: 0.0 }
+    }
+}
+
+/// TT-SVD: factor a dense tensor into TT format.
+///
+/// Sweep k = 1..N−1: reshape the carry into `(r_{k−1}·d_k, rest)`, take a
+/// truncated SVD, keep `U` as the k-th core and push `diag(s)·Vᵀ` right.
+pub fn tt_svd(x: &DenseTensor, opts: &TtSvdOptions) -> Result<TtTensor> {
+    let dims = x.shape.clone();
+    let n = dims.len();
+    if n == 1 {
+        let mut core = TtCore::zeros(1, dims[0], 1);
+        core.data = x.data.clone();
+        return Ok(TtTensor { cores: vec![core], scale: 1.0 });
+    }
+    let norm = x.frob_norm();
+    let budget = if opts.rel_tol > 0.0 && norm > 0.0 {
+        opts.rel_tol * norm / ((n - 1) as f64).sqrt()
+    } else {
+        0.0
+    };
+
+    let mut cores: Vec<TtCore> = Vec::with_capacity(n);
+    // carry: (r_prev * d_k, rest) matrix, f64.
+    let mut rest: usize = dims.iter().skip(1).product();
+    let mut carry = Matrix::zeros(dims[0], rest);
+    for (i, &v) in x.data.iter().enumerate() {
+        carry.data[i] = v as f64;
+    }
+    let mut r_prev = 1usize;
+    for k in 0..n - 1 {
+        let dk = dims[k];
+        let svd = svd_thin(&carry)?;
+        let full = svd.s.len();
+        let mut rk = if budget > 0.0 { svd.rank_for_tol(budget) } else { full };
+        rk = rk.min(opts.max_rank).max(1);
+        // Core k: U's first rk columns reshaped (r_prev, dk, rk).
+        let mut core = TtCore::zeros(r_prev, dk, rk);
+        for row in 0..r_prev * dk {
+            let (a, i) = (row / dk, row % dk);
+            for b in 0..rk {
+                core.set(a, i, b, svd.u[(row, b)] as f32);
+            }
+        }
+        cores.push(core);
+        // carry ← diag(s[..rk]) · Vt[..rk, :], reshaped for the next mode.
+        let next_d = dims[k + 1];
+        let next_rest = rest / next_d;
+        let mut next = Matrix::zeros(rk * next_d, next_rest);
+        for a in 0..rk {
+            let s = svd.s[a];
+            for c in 0..rest {
+                let v = s * svd.vt[(a, c)];
+                // column c of old = (i_next, tail): row-major split
+                let (i, tail) = (c / next_rest, c % next_rest);
+                next[(a * next_d + i, tail)] = v;
+            }
+        }
+        carry = next;
+        rest = next_rest;
+        r_prev = rk;
+    }
+    // Last core: carry is (r_prev * d_{N-1}, 1).
+    let dk = dims[n - 1];
+    let mut core = TtCore::zeros(r_prev, dk, 1);
+    for row in 0..r_prev * dk {
+        core.set(row / dk, row % dk, 0, carry[(row, 0)] as f32);
+    }
+    cores.push(core);
+    TtTensor::new(cores).map(|mut t| {
+        t.scale = 1.0;
+        t
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+
+    fn rel_err(a: &DenseTensor, b: &DenseTensor) -> f64 {
+        let mut e = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            e += (*x as f64 - *y as f64).powi(2);
+        }
+        e.sqrt() / a.frob_norm().max(1e-300)
+    }
+
+    #[test]
+    fn exact_reconstruction_full_rank() {
+        let mut rng = Rng::new(50);
+        let x = DenseTensor::random_gaussian(&mut rng, &[3, 4, 5]);
+        let tt = tt_svd(&x, &TtSvdOptions::default()).unwrap();
+        assert!(rel_err(&x, &tt.materialize()) < 1e-6);
+    }
+
+    #[test]
+    fn low_rank_input_gets_low_ranks() {
+        let mut rng = Rng::new(51);
+        let cp = CpTensor::random_gaussian(&mut rng, &[4, 5, 6], 2);
+        let x = cp.materialize();
+        let tt = tt_svd(&x, &TtSvdOptions { max_rank: usize::MAX, rel_tol: 1e-6 }).unwrap();
+        assert!(tt.max_rank() <= 2, "rank {}", tt.max_rank());
+        assert!(rel_err(&x, &tt.materialize()) < 1e-4);
+    }
+
+    #[test]
+    fn rank_cap_respected_and_quasi_optimal() {
+        let mut rng = Rng::new(52);
+        let x = DenseTensor::random_gaussian(&mut rng, &[4, 4, 4, 4]);
+        let tt = tt_svd(&x, &TtSvdOptions { max_rank: 3, rel_tol: 0.0 }).unwrap();
+        assert!(tt.max_rank() <= 3);
+        // Truncation error exists but is bounded well below the norm.
+        let e = rel_err(&x, &tt.materialize());
+        assert!(e > 0.0 && e < 1.0, "err {e}");
+    }
+
+    #[test]
+    fn order_one_and_two() {
+        let mut rng = Rng::new(53);
+        let v = DenseTensor::random_gaussian(&mut rng, &[7]);
+        let tv = tt_svd(&v, &TtSvdOptions::default()).unwrap();
+        assert!(rel_err(&v, &tv.materialize()) < 1e-7);
+        let m = DenseTensor::random_gaussian(&mut rng, &[5, 6]);
+        let tm = tt_svd(&m, &TtSvdOptions::default()).unwrap();
+        assert!(rel_err(&m, &tm.materialize()) < 1e-6);
+    }
+}

@@ -1,0 +1,48 @@
+//! Library error type.
+
+use thiserror::Error;
+
+/// Errors produced by tensor-lsh.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Tensor shapes are incompatible for the requested operation.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// A parameter is out of its valid domain.
+    #[error("invalid parameter: {0}")]
+    InvalidParameter(String),
+
+    /// A numerical routine failed to converge or produced a degenerate value.
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    /// Configuration file / CLI parse problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse problem (hand-rolled parser in `util::json`).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// PJRT runtime problem (artifact missing, compile/execute failure).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator problem (channel closed, worker panicked, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,424 @@
+//! Multi-table LSH index: the ANN data structure the hash families plug into.
+//!
+//! Classic Indyk–Motwani construction: `L` tables, each keyed by a `K`-hash
+//! signature from an independently seeded family; a query probes its bucket
+//! in every table, the candidate union is exactly re-ranked. Multiprobe
+//! (query-directed for E2LSH, lowest-margin bit flips for SRP) trades extra
+//! probes for fewer tables — an extension feature ablated in the benches.
+
+mod multiprobe;
+mod table;
+
+pub use multiprobe::{e2lsh_probes, srp_probes};
+pub use table::{signature, HashTable};
+
+use crate::error::{Error, Result};
+use crate::lsh::HashFamily;
+use crate::tensor::AnyTensor;
+use std::sync::Arc;
+
+/// Which metric the index re-ranks by (must match the hash family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Euclidean,
+    Cosine,
+}
+
+/// Index configuration.
+#[derive(Clone)]
+pub struct IndexConfig {
+    /// Builds the hash family for table `t` (independent seeds per table).
+    pub family_builder: Arc<dyn Fn(usize) -> Arc<dyn HashFamily> + Send + Sync>,
+    /// Number of tables L.
+    pub n_tables: usize,
+    /// Re-ranking metric.
+    pub metric: Metric,
+    /// Multiprobe extra probes per table (0 = exact-bucket only).
+    pub probes: usize,
+}
+
+/// A search hit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchResult {
+    pub id: usize,
+    /// Distance (Euclidean metric) or similarity (cosine metric).
+    pub score: f64,
+}
+
+/// Multi-table LSH index over owned tensors.
+pub struct LshIndex {
+    families: Vec<Arc<dyn HashFamily>>,
+    tables: Vec<HashTable>,
+    items: Vec<AnyTensor>,
+    /// Cached Frobenius norms (re-ranking needs ‖item‖ for every candidate;
+    /// recomputing it per candidate dominated the query path — §Perf).
+    norms: Vec<f64>,
+    metric: Metric,
+    probes: usize,
+}
+
+impl LshIndex {
+    /// Build an empty index.
+    pub fn new(cfg: &IndexConfig) -> Result<Self> {
+        if cfg.n_tables == 0 {
+            return Err(Error::InvalidParameter("n_tables must be ≥ 1".into()));
+        }
+        let families: Vec<Arc<dyn HashFamily>> =
+            (0..cfg.n_tables).map(|t| (cfg.family_builder)(t)).collect();
+        let metric_ok = match cfg.metric {
+            Metric::Euclidean => families.iter().all(|f| f.is_euclidean()),
+            Metric::Cosine => families.iter().all(|f| !f.is_euclidean()),
+        };
+        if !metric_ok {
+            return Err(Error::InvalidParameter(
+                "hash family proxy does not match index metric".into(),
+            ));
+        }
+        let tables = (0..cfg.n_tables).map(|_| HashTable::new()).collect();
+        Ok(LshIndex {
+            families,
+            tables,
+            items: Vec::new(),
+            norms: Vec::new(),
+            metric: cfg.metric,
+            probes: cfg.probes,
+        })
+    }
+
+    /// Number of indexed items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if no items were inserted.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Number of tables L.
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Access an indexed item.
+    pub fn item(&self, id: usize) -> &AnyTensor {
+        &self.items[id]
+    }
+
+    /// Insert a tensor; returns its id.
+    pub fn insert(&mut self, x: AnyTensor) -> usize {
+        let sigs: Vec<u64> = self
+            .families
+            .iter()
+            .map(|fam| signature(&fam.hash(&x)))
+            .collect();
+        self.insert_with_signatures(x, &sigs)
+    }
+
+    /// Insert with precomputed per-table signatures (the PJRT bulk-build
+    /// path: hash thousands of items through the AOT artifact in batches,
+    /// then insert here).
+    pub fn insert_with_signatures(&mut self, x: AnyTensor, sigs: &[u64]) -> usize {
+        debug_assert_eq!(sigs.len(), self.tables.len());
+        let id = self.items.len();
+        for (table, &sig) in self.tables.iter_mut().zip(sigs) {
+            table.insert(sig, id as u32);
+        }
+        self.norms.push(x.frob_norm());
+        self.items.push(x);
+        id
+    }
+
+    /// Bulk build.
+    pub fn build(cfg: &IndexConfig, items: Vec<AnyTensor>) -> Result<Self> {
+        let mut idx = LshIndex::new(cfg)?;
+        for x in items {
+            idx.insert(x);
+        }
+        Ok(idx)
+    }
+
+    /// Candidate ids for a query (deduplicated, unranked).
+    pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
+        let mut seen = vec![false; self.items.len()];
+        let mut out = Vec::new();
+        for (fam, table) in self.families.iter().zip(&self.tables) {
+            let z = fam.project(q);
+            let codes = fam.discretize(&z);
+            let mut sigs = vec![signature(&codes)];
+            if self.probes > 0 {
+                // Family-specific multiprobe (exact boundary distances for
+                // E2LSH, sign margins for SRP).
+                sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
+            }
+            for sig in sigs {
+                for &id in table.bucket(sig) {
+                    let id = id as usize;
+                    if !seen[id] {
+                        seen[id] = true;
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The per-table hash families (the coordinator's hash stage computes
+    /// signatures out-of-band — natively or via PJRT — and probes with
+    /// [`LshIndex::candidates_from_signatures`]).
+    pub fn families(&self) -> &[Arc<dyn HashFamily>] {
+        &self.families
+    }
+
+    /// Candidate ids given one precomputed signature per table.
+    pub fn candidates_from_signatures(&self, sigs: &[u64]) -> Vec<usize> {
+        debug_assert_eq!(sigs.len(), self.tables.len());
+        let mut seen = vec![false; self.items.len()];
+        let mut out = Vec::new();
+        for (table, &sig) in self.tables.iter().zip(sigs) {
+            for &id in table.bucket(sig) {
+                let id = id as usize;
+                if !seen[id] {
+                    seen[id] = true;
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// k-NN search from precomputed per-table signatures (exact re-rank).
+    pub fn search_with_signatures(
+        &self,
+        q: &AnyTensor,
+        sigs: &[u64],
+        k: usize,
+    ) -> Result<Vec<SearchResult>> {
+        let cand = self.candidates_from_signatures(sigs);
+        self.rerank_candidates(q, cand, k)
+    }
+
+    /// Exact re-rank of a candidate set against a query. Uses the cached
+    /// item norms, so each candidate costs one inner product.
+    pub fn rerank_candidates(
+        &self,
+        q: &AnyTensor,
+        cand: Vec<usize>,
+        k: usize,
+    ) -> Result<Vec<SearchResult>> {
+        let qn = q.frob_norm();
+        let mut scored: Vec<SearchResult> = cand
+            .into_iter()
+            .map(|id| {
+                let inner = self.items[id].inner(q)?;
+                let score = match self.metric {
+                    Metric::Euclidean => {
+                        let n = self.norms[id];
+                        (n * n + qn * qn - 2.0 * inner).max(0.0).sqrt()
+                    }
+                    Metric::Cosine => {
+                        let denom = self.norms[id] * qn;
+                        if denom == 0.0 {
+                            return Err(crate::error::Error::Numerical(
+                                "cosine of zero tensor".into(),
+                            ));
+                        }
+                        (inner / denom).clamp(-1.0, 1.0)
+                    }
+                };
+                Ok(SearchResult { id, score })
+            })
+            .collect::<Result<_>>()?;
+        match self.metric {
+            Metric::Euclidean => {
+                scored.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            }
+            Metric::Cosine => scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap()),
+        }
+        scored.truncate(k);
+        Ok(scored)
+    }
+
+    /// k-NN search: probe, union candidates, exact re-rank.
+    pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
+        let cand = self.candidates(q);
+        self.rerank_candidates(q, cand, k)
+    }
+
+    /// Exact (linear-scan) k-NN — the ground truth for recall measurements.
+    pub fn exact_search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
+        self.rerank_candidates(q, (0..self.items.len()).collect(), k)
+    }
+
+    /// Bucket-occupancy statistics (mean/max bucket size per table) — used
+    /// by the serving metrics endpoint.
+    pub fn occupancy(&self) -> Vec<(f64, usize)> {
+        self.tables.iter().map(|t| t.occupancy()).collect()
+    }
+}
+
+/// Recall@k of approximate results vs exact ground truth.
+pub fn recall_at_k(approx: &[SearchResult], exact: &[SearchResult]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let truth: std::collections::HashSet<usize> = exact.iter().map(|r| r.id).collect();
+    let hit = approx.iter().filter(|r| truth.contains(&r.id)).count();
+    hit as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::rng::Rng;
+    use crate::workload::{low_rank_corpus, DatasetSpec};
+
+    fn cosine_config(dims: Vec<usize>, k: usize, l: usize, probes: usize) -> IndexConfig {
+        IndexConfig {
+            family_builder: Arc::new(move |t| {
+                Arc::new(CpSrp::new(CpSrpConfig {
+                    dims: dims.clone(),
+                    rank: 4,
+                    k,
+                    seed: 1000 + t as u64,
+                })) as Arc<dyn HashFamily>
+            }),
+            n_tables: l,
+            metric: Metric::Cosine,
+            probes,
+        }
+    }
+
+    #[test]
+    fn insert_search_finds_self() {
+        let spec = DatasetSpec {
+            dims: vec![8, 8, 8],
+            n_items: 200,
+            rank: 2,
+            n_clusters: 10,
+            noise: 0.3,
+            seed: 9,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let cfg = cosine_config(spec.dims.clone(), 10, 8, 0);
+        let idx = LshIndex::build(&cfg, items.clone()).unwrap();
+        assert_eq!(idx.len(), 200);
+        // Querying with an indexed item must return it first (cos = 1).
+        for probe_id in [0usize, 42, 199] {
+            let res = idx.search(&items[probe_id], 3).unwrap();
+            assert_eq!(res[0].id, probe_id);
+            assert!((res[0].score - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn recall_reasonable_on_clustered_corpus() {
+        let spec = DatasetSpec {
+            dims: vec![8, 8, 8],
+            n_items: 400,
+            rank: 2,
+            n_clusters: 8,
+            noise: 0.25,
+            seed: 10,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let cfg = cosine_config(spec.dims.clone(), 8, 12, 0);
+        let idx = LshIndex::build(&cfg, items).unwrap();
+        let mut rng = Rng::new(11);
+        let mut recalls = Vec::new();
+        for _ in 0..20 {
+            let qid = rng.below(idx.len());
+            let q = idx.item(qid).clone();
+            let approx = idx.search(&q, 10).unwrap();
+            let exact = idx.exact_search(&q, 10).unwrap();
+            recalls.push(recall_at_k(&approx, &exact));
+        }
+        let mean = recalls.iter().sum::<f64>() / recalls.len() as f64;
+        assert!(mean > 0.5, "mean recall {mean}");
+    }
+
+    #[test]
+    fn euclidean_metric_works_with_e2lsh() {
+        let dims = vec![6usize, 6, 6];
+        let cfg = IndexConfig {
+            family_builder: {
+                let dims = dims.clone();
+                Arc::new(move |t| {
+                    Arc::new(TtE2lsh::new(TtE2lshConfig {
+                        dims: dims.clone(),
+                        rank: 3,
+                        k: 6,
+                        w: 4.0,
+                        seed: 50 + t as u64,
+                    })) as Arc<dyn HashFamily>
+                })
+            },
+            n_tables: 6,
+            metric: Metric::Euclidean,
+            probes: 0,
+        };
+        let spec = DatasetSpec {
+            dims: dims.clone(),
+            n_items: 100,
+            rank: 2,
+            n_clusters: 5,
+            noise: 0.2,
+            seed: 12,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let idx = LshIndex::build(&cfg, items.clone()).unwrap();
+        let res = idx.search(&items[7], 1).unwrap();
+        assert_eq!(res[0].id, 7);
+        assert!(res[0].score < 1e-4);
+    }
+
+    #[test]
+    fn metric_family_mismatch_rejected() {
+        let dims = vec![4usize, 4];
+        let cfg = IndexConfig {
+            family_builder: {
+                let dims = dims.clone();
+                Arc::new(move |t| {
+                    Arc::new(CpSrp::new(CpSrpConfig {
+                        dims: dims.clone(),
+                        rank: 2,
+                        k: 4,
+                        seed: t as u64,
+                    })) as Arc<dyn HashFamily>
+                })
+            },
+            n_tables: 2,
+            metric: Metric::Euclidean, // SRP is a cosine family -> reject
+            probes: 0,
+        };
+        assert!(LshIndex::new(&cfg).is_err());
+    }
+
+    #[test]
+    fn multiprobe_returns_superset_of_candidates() {
+        let spec = DatasetSpec {
+            dims: vec![8, 8, 8],
+            n_items: 300,
+            rank: 2,
+            n_clusters: 6,
+            noise: 0.3,
+            seed: 13,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let cfg0 = cosine_config(spec.dims.clone(), 10, 4, 0);
+        let cfg4 = cosine_config(spec.dims.clone(), 10, 4, 4);
+        let idx0 = LshIndex::build(&cfg0, items.clone()).unwrap();
+        let idx4 = LshIndex::build(&cfg4, items.clone()).unwrap();
+        let mut rng = Rng::new(14);
+        for _ in 0..10 {
+            let q = idx0.item(rng.below(idx0.len())).clone();
+            let c0: std::collections::HashSet<_> =
+                idx0.candidates(&q).into_iter().collect();
+            let c4: std::collections::HashSet<_> =
+                idx4.candidates(&q).into_iter().collect();
+            assert!(c0.is_subset(&c4));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Multiprobe signature generation.
+//!
+//! Instead of more tables, probe the buckets *most likely* to hold a near
+//! neighbor (Lv et al.-style, adapted to our two discretizers):
+//!
+//! * SRP: flip the bits whose projection magnitude |z_k| is smallest — those
+//!   sign decisions are the least confident.
+//! * E2LSH: step the coordinates whose projection sits closest to a bucket
+//!   boundary by ±1 — the query-directed probe set restricted to single-
+//!   coordinate perturbations (extends to pairs via ranked composition).
+
+use super::table::signature;
+
+/// Extra probe signatures for an SRP family: flip up to `probes` least-
+/// confident bits, then the best pair of them. Returns ≤ `probes` signatures.
+pub fn srp_probes(codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
+    let mut order: Vec<usize> = (0..codes.len()).collect();
+    order.sort_by(|&a, &b| z[a].abs().partial_cmp(&z[b].abs()).unwrap());
+    let mut out = Vec::with_capacity(probes);
+    // Single flips in confidence order.
+    for &k in order.iter().take(probes) {
+        let mut c = codes.to_vec();
+        c[k] = 1 - c[k];
+        out.push(signature(&c));
+    }
+    // If budget remains beyond single flips, add double flips of the least
+    // confident pair combinations.
+    let mut budget = probes.saturating_sub(out.len());
+    'outer: for i in 0..order.len().min(probes) {
+        for j in i + 1..order.len().min(probes) {
+            if budget == 0 {
+                break 'outer;
+            }
+            let mut c = codes.to_vec();
+            c[order[i]] = 1 - c[order[i]];
+            c[order[j]] = 1 - c[order[j]];
+            out.push(signature(&c));
+            budget -= 1;
+        }
+    }
+    out
+}
+
+/// Extra probe signatures for an E2LSH family: for each coordinate, the
+/// fractional position of `z_k + b_k` inside its bucket is unknown here
+/// (offsets live inside the hasher), but the *code geometry* still ranks
+/// perturbations: we use the distance of z_k to the reconstructed bucket
+/// centre implied by the code. Callers that retain (b, w) can rank exactly;
+/// this approximation probes ±1 on every coordinate in a fixed order, which
+/// preserves the superset property multiprobe needs.
+pub fn e2lsh_probes(codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
+    let k = codes.len();
+    let mut deltas: Vec<(f64, usize, i32)> = Vec::with_capacity(2 * k);
+    for i in 0..k {
+        // Rank by |z| fractional residue as a cheap confidence proxy.
+        let frac = z[i] - z[i].floor();
+        deltas.push((frac.min(1.0 - frac), i, 1));
+        deltas.push((frac.min(1.0 - frac), i, -1));
+    }
+    deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    deltas
+        .into_iter()
+        .take(probes)
+        .map(|(_, i, step)| {
+            let mut c = codes.to_vec();
+            c[i] += step;
+            signature(&c)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srp_probes_flip_least_confident_first() {
+        let codes = vec![1, 0, 1, 0];
+        let z = vec![5.0, -0.01, 3.0, -2.0]; // bit 1 least confident
+        let probes = srp_probes(&codes, &z, 1);
+        let mut expect = codes.clone();
+        expect[1] = 1;
+        assert_eq!(probes, vec![signature(&expect)]);
+    }
+
+    #[test]
+    fn srp_probe_count_bounded() {
+        let codes = vec![1; 8];
+        let z = vec![1.0; 8];
+        assert!(srp_probes(&codes, &z, 5).len() >= 5);
+        assert!(srp_probes(&codes, &z, 0).is_empty());
+    }
+
+    #[test]
+    fn e2lsh_probes_are_adjacent_codes() {
+        let codes = vec![3, -1];
+        let z = vec![3.4, -0.9];
+        let sigs = e2lsh_probes(&codes, &z, 4);
+        assert_eq!(sigs.len(), 4);
+        // All probes correspond to ±1 steps of a single coordinate.
+        let expected: Vec<u64> = vec![
+            signature(&[4, -1]),
+            signature(&[2, -1]),
+            signature(&[3, 0]),
+            signature(&[3, -2]),
+        ];
+        for s in sigs {
+            assert!(expected.contains(&s));
+        }
+    }
+}

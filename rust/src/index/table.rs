@@ -1,0 +1,82 @@
+//! A single hash table: signature → bucket of item ids.
+
+use std::collections::HashMap;
+
+/// Pack a K-vector of hash codes into a u64 signature (FNV-1a over the
+/// little-endian bytes). Collisions across distinct code vectors are
+/// negligible at our scales and only cost extra re-rank work, never
+/// correctness (candidates are exactly re-ranked).
+pub fn signature(codes: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &c in codes {
+        for b in c.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Signature-keyed bucket table.
+#[derive(Clone, Debug, Default)]
+pub struct HashTable {
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+impl HashTable {
+    pub fn new() -> Self {
+        HashTable { buckets: HashMap::new() }
+    }
+
+    /// Append an id to a bucket.
+    pub fn insert(&mut self, sig: u64, id: u32) {
+        self.buckets.entry(sig).or_default().push(id);
+    }
+
+    /// The bucket for a signature (empty slice if none).
+    pub fn bucket(&self, sig: u64) -> &[u32] {
+        self.buckets.get(&sig).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of non-empty buckets.
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// (mean, max) bucket size.
+    pub fn occupancy(&self) -> (f64, usize) {
+        if self.buckets.is_empty() {
+            return (0.0, 0);
+        }
+        let total: usize = self.buckets.values().map(|v| v.len()).sum();
+        let max = self.buckets.values().map(|v| v.len()).max().unwrap_or(0);
+        (total as f64 / self.buckets.len() as f64, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_distinguishes_codes() {
+        assert_ne!(signature(&[1, 2, 3]), signature(&[1, 2, 4]));
+        assert_ne!(signature(&[0]), signature(&[0, 0]));
+        assert_eq!(signature(&[-5, 7]), signature(&[-5, 7]));
+    }
+
+    #[test]
+    fn insert_and_lookup() {
+        let mut t = HashTable::new();
+        t.insert(42, 1);
+        t.insert(42, 2);
+        t.insert(7, 3);
+        assert_eq!(t.bucket(42), &[1, 2]);
+        assert_eq!(t.bucket(7), &[3]);
+        assert_eq!(t.bucket(999), &[] as &[u32]);
+        assert_eq!(t.n_buckets(), 2);
+        let (mean, max) = t.occupancy();
+        assert_eq!(max, 2);
+        assert!((mean - 1.5).abs() < 1e-12);
+    }
+}

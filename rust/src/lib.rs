@@ -1,0 +1,73 @@
+//! # tensor-lsh
+//!
+//! Production-grade implementation of **“Improving LSH via Tensorized Random
+//! Projection”** (Verma & Pratap, 2024): locality-sensitive hash families for
+//! tensor data under Euclidean distance (CP-E2LSH, TT-E2LSH) and cosine
+//! similarity (CP-SRP, TT-SRP), plus the naive reshape-and-project baselines,
+//! a multi-table ANN index, and a serving coordinator whose hash hot path can
+//! execute either natively or through AOT-compiled XLA artifacts via PJRT.
+//!
+//! ## Layout
+//!
+//! Substrates (built from scratch — no external numeric crates):
+//! * [`rng`] — deterministic splittable RNG, Rademacher/Gaussian samplers.
+//! * [`linalg`] — dense matrices, QR, Jacobi SVD (f64 internals).
+//! * [`tensor`] — dense / CP / TT tensors and all inner-product pairings at
+//!   the paper's complexities (Tables 1–2).
+//! * [`decomp`] — CP-ALS and TT-SVD so dense data can be ingested.
+//! * [`stats`] — collision laws, normal CDF, KS test, confidence intervals.
+//! * [`workload`] — synthetic corpora and controlled-distance pair generators.
+//!
+//! Core library:
+//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families.
+//! * [`lsh`] — the six hash families behind common traits + parameter planning.
+//! * [`index`] — multi-table LSH index with multiprobe and exact re-ranking.
+//! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle.
+//! * [`coordinator`] — request router, dynamic batcher, worker pool, metrics.
+//! * [`bench_harness`] — regenerators for every table/figure of the paper.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tensor_lsh::prelude::*;
+//!
+//! let mut rng = Rng::new(42);
+//! let x = CpTensor::random_gaussian(&mut rng, &[32, 32, 32], 8);
+//! let fam = CpE2lsh::new(CpE2lshConfig {
+//!     dims: vec![32, 32, 32], rank: 8, k: 16, w: 4.0, seed: 7,
+//! });
+//! let codes = fam.hash(&AnyTensor::Cp(x));
+//! assert_eq!(codes.len(), 16);
+//! ```
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod decomp;
+pub mod error;
+pub mod index;
+pub mod linalg;
+pub mod lsh;
+pub mod projection;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::error::{Error, Result};
+    pub use crate::index::{IndexConfig, LshIndex, SearchResult};
+    pub use crate::lsh::{
+        CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, E2lshFamily, HashFamily, NaiveE2lsh,
+        NaiveSrp, SrpFamily, TtE2lsh, TtE2lshConfig, TtSrp, TtSrpConfig,
+    };
+    pub use crate::projection::{CpRademacher, GaussianDense, Projection, TtRademacher};
+    pub use crate::rng::Rng;
+    pub use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+}

@@ -1,0 +1,276 @@
+//! Minimal dense linear algebra (f64) — substrate for the decompositions.
+//!
+//! Row-major [`Matrix`] with matmul, transpose, Householder QR and one-sided
+//! Jacobi SVD. Built from scratch (no external numeric crates are available
+//! offline); accuracy is verified against algebraic identities in the unit
+//! tests and, indirectly, by the decomposition reconstruction-error tests.
+
+mod qr;
+mod svd;
+
+pub use qr::qr_thin;
+pub use svd::{svd_thin, Svd};
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::ShapeMismatch(format!(
+                "from_rows: {}x{} needs {} entries, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data: data.to_vec() })
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Convert an f32 row-major buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        Matrix { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+    }
+
+    /// Back to f32.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * other` (blocked i-k-j loop order).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for j in 0..brow.len() {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    /// Elementwise subtraction.
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::ShapeMismatch("sub: dims differ".into()));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Solve the symmetric positive-definite system `A x = b` for many RHS
+    /// via Cholesky with diagonal regularization fallback. `self` is A
+    /// (n×n), `b` is (n×m); returns (n×m).
+    pub fn solve_spd(&self, b: &Matrix) -> Result<Matrix> {
+        if self.rows != self.cols || self.rows != b.rows {
+            return Err(Error::ShapeMismatch("solve_spd: dims".into()));
+        }
+        let n = self.rows;
+        let mut l = self.clone();
+        // Regularize: scale-aware jitter keeps ALS stable for collinear factors.
+        let jitter = 1e-12 * (1.0 + self.max_abs());
+        for i in 0..n {
+            l[(i, i)] += jitter;
+        }
+        // In-place Cholesky (lower).
+        for j in 0..n {
+            for k in 0..j {
+                let ljk = l[(j, k)];
+                for i in j..n {
+                    let v = l[(i, k)];
+                    l[(i, j)] -= v * ljk;
+                }
+            }
+            let d = l[(j, j)];
+            if d <= 0.0 {
+                return Err(Error::Numerical(format!("solve_spd: pivot {d} at {j}")));
+            }
+            let inv = 1.0 / d.sqrt();
+            for i in j..n {
+                l[(i, j)] *= inv;
+            }
+        }
+        // Forward/back substitution per column of rhs.
+        let substitute = |l: &Matrix, rhs: &Matrix| {
+            let m = rhs.cols;
+            let mut x = rhs.clone();
+            for c in 0..m {
+                // L y = b
+                for i in 0..n {
+                    let mut s = x[(i, c)];
+                    for k in 0..i {
+                        s -= l[(i, k)] * x[(k, c)];
+                    }
+                    x[(i, c)] = s / l[(i, i)];
+                }
+                // L^T x = y
+                for i in (0..n).rev() {
+                    let mut s = x[(i, c)];
+                    for k in i + 1..n {
+                        s -= l[(k, i)] * x[(k, c)];
+                    }
+                    x[(i, c)] = s / l[(i, i)];
+                }
+            }
+            x
+        };
+        let mut x = substitute(&l, b);
+        // One step of iterative refinement cleans up ill-conditioned systems.
+        let resid = b.sub(&self.matmul(&x)?)?;
+        let dx = substitute(&l, &resid);
+        for (xi, di) in x.data.iter_mut().zip(&dx.data) {
+            *xi += di;
+        }
+        Ok(x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 5, 7);
+        let i = Matrix::eye(7);
+        let p = a.matmul(&i).unwrap();
+        assert!(a.sub(&p).unwrap().frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 4, 6);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn solve_spd_recovers_solution() {
+        let mut rng = Rng::new(3);
+        let g = random(&mut rng, 6, 6);
+        let a = g.transpose().matmul(&g).unwrap(); // SPD
+        let x_true = random(&mut rng, 6, 2);
+        let b = a.matmul(&x_true).unwrap();
+        let x = a.solve_spd(&b).unwrap();
+        assert!(x.sub(&x_true).unwrap().frob_norm() < 1e-8);
+    }
+}

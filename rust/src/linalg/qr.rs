@@ -1,0 +1,109 @@
+//! Thin Householder QR.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// Thin QR factorization of an m×n matrix with m ≥ n: returns (Q m×n with
+/// orthonormal columns, R n×n upper-triangular) such that A = Q R.
+pub fn qr_thin(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        return Err(Error::ShapeMismatch(format!("qr_thin: m={m} < n={n}")));
+    }
+    let mut r = a.clone();
+    // Householder vectors stored column-by-column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Compute the Householder reflector for column k, rows k..m.
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|&x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v v^T / (v^T v) to R[k.., k..].
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[(i, j)];
+                }
+                let scale = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    r[(i, j)] -= scale * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Extract upper-triangular R (n×n).
+    let mut rr = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    // Form thin Q by applying reflectors to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|&x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= scale * v[i - k];
+            }
+        }
+    }
+    Ok((q, rr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Rng::new(4);
+        for &(m, n) in &[(6usize, 4usize), (5, 5), (20, 3)] {
+            let a = Matrix::from_fn(m, n, |_, _| rng.normal());
+            let (q, r) = qr_thin(&a).unwrap();
+            let qr = q.matmul(&r).unwrap();
+            assert!(a.sub(&qr).unwrap().frob_norm() < 1e-10, "recon {m}x{n}");
+            let qtq = q.transpose().matmul(&q).unwrap();
+            assert!(qtq.sub(&Matrix::eye(n)).unwrap().frob_norm() < 1e-10);
+            // R upper-triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r[(i, j)].abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_rejects_wide() {
+        assert!(qr_thin(&Matrix::zeros(2, 5)).is_err());
+    }
+}

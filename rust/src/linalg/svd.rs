@@ -1,0 +1,196 @@
+//! Thin SVD via one-sided Jacobi rotations.
+//!
+//! For A (m×n, any aspect after an internal QR/transposition step) returns
+//! A = U diag(s) Vᵀ with U m×n, Vᵀ n×n, s descending. Accuracy target is
+//! ~1e-10 relative — plenty for TT-SVD truncation decisions on f32 data.
+
+use super::{qr_thin, Matrix};
+use crate::error::Result;
+
+/// Thin singular value decomposition.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub vt: Matrix,
+}
+
+/// One-sided Jacobi SVD on a tall (m ≥ n) matrix.
+fn jacobi_tall(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    // Work on columns of W = A (m×n); accumulate V (n×n).
+    let mut w = a.clone();
+    let mut v = Matrix::eye(n);
+    let eps = 1e-15;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // Gram entries for the column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off = off.max(apq.abs() / (app.sqrt() * aqq.sqrt() + 1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    // Singular values = column norms of W; U = W normalized.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sig = vec![0.0f64; n];
+    for j in 0..n {
+        let mut norm = 0.0;
+        for i in 0..m {
+            norm += w[(i, j)] * w[(i, j)];
+        }
+        sig[j] = norm.sqrt();
+    }
+    order.sort_by(|&a, &b| sig[b].partial_cmp(&sig[a]).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s = vec![0.0f64; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        s[new_j] = sig[old_j];
+        let inv = if sig[old_j] > 0.0 { 1.0 / sig[old_j] } else { 0.0 };
+        for i in 0..m {
+            u[(i, new_j)] = w[(i, old_j)] * inv;
+        }
+        for i in 0..n {
+            vt[(new_j, i)] = v[(i, old_j)];
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Thin SVD of an arbitrary matrix.
+///
+/// Tall case: QR preconditioning then Jacobi on R (n×n) for speed.
+/// Wide case: transpose, decompose, swap factors.
+pub fn svd_thin(a: &Matrix) -> Result<Svd> {
+    if a.rows >= a.cols {
+        if a.rows > 2 * a.cols {
+            // Precondition: A = Q R, SVD(R) = Ur S Vt, U = Q Ur.
+            let (q, r) = qr_thin(a)?;
+            let inner = jacobi_tall(&r);
+            let u = q.matmul(&inner.u)?;
+            Ok(Svd { u, s: inner.s, vt: inner.vt })
+        } else {
+            Ok(jacobi_tall(a))
+        }
+    } else {
+        let at = a.transpose();
+        let svd_t = svd_thin(&at)?;
+        // A = (U S Vt)^T of A^T  =>  U_a = V, Vt_a = U^T.
+        Ok(Svd { u: svd_t.vt.transpose(), s: svd_t.s, vt: svd_t.u.transpose() })
+    }
+}
+
+impl Svd {
+    /// Reconstruct U diag(s) Vt.
+    pub fn reconstruct(&self) -> Result<Matrix> {
+        let mut us = self.u.clone();
+        for i in 0..us.rows {
+            for j in 0..us.cols {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        us.matmul(&self.vt)
+    }
+
+    /// Smallest rank whose tail singular values satisfy
+    /// sqrt(sum_{i>r} s_i^2) <= tol (absolute).
+    pub fn rank_for_tol(&self, tol: f64) -> usize {
+        let mut tail = 0.0;
+        let mut r = self.s.len();
+        for i in (0..self.s.len()).rev() {
+            tail += self.s[i] * self.s[i];
+            if tail.sqrt() > tol {
+                break;
+            }
+            r = i;
+        }
+        r.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn check(a: &Matrix) {
+        let svd = svd_thin(a).unwrap();
+        let rec = svd.reconstruct().unwrap();
+        let err = a.sub(&rec).unwrap().frob_norm() / a.frob_norm().max(1e-300);
+        assert!(err < 1e-9, "recon err {err} for {}x{}", a.rows, a.cols);
+        // Descending singular values.
+        for i in 1..svd.s.len() {
+            assert!(svd.s[i - 1] >= svd.s[i] - 1e-12);
+        }
+        // Orthonormal columns of U and rows of Vt.
+        let k = svd.s.len();
+        let utu = svd.u.transpose().matmul(&svd.u).unwrap();
+        assert!(utu.sub(&Matrix::eye(k)).unwrap().frob_norm() < 1e-8);
+        let vvt = svd.vt.matmul(&svd.vt.transpose()).unwrap();
+        assert!(vvt.sub(&Matrix::eye(k)).unwrap().frob_norm() < 1e-8);
+    }
+
+    #[test]
+    fn svd_shapes() {
+        let mut rng = Rng::new(8);
+        for &(m, n) in &[(6usize, 4usize), (4, 6), (5, 5), (30, 4), (3, 17)] {
+            let a = Matrix::from_fn(m, n, |_, _| rng.normal());
+            check(&a);
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        let mut rng = Rng::new(9);
+        // rank-2 matrix 8x6
+        let b = Matrix::from_fn(8, 2, |_, _| rng.normal());
+        let c = Matrix::from_fn(2, 6, |_, _| rng.normal());
+        let a = b.matmul(&c).unwrap();
+        let svd = svd_thin(&a).unwrap();
+        check(&a);
+        assert!(svd.s[2] < 1e-10 * svd.s[0]);
+        assert_eq!(svd.rank_for_tol(1e-8), 2);
+    }
+
+    #[test]
+    fn svd_known_diagonal() {
+        let a = Matrix::from_rows(3, 3, &[3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]).unwrap();
+        let svd = svd_thin(&a).unwrap();
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+        assert!((svd.s[2] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,454 @@
+//! The six LSH families of the paper, behind common traits.
+//!
+//! Euclidean distance (E2LSH discretizer, Eq. 3.3): [`CpE2lsh`]
+//! (Definition 10), [`TtE2lsh`] (Definition 11), [`NaiveE2lsh`] (reshape +
+//! Datar et al. [11]).
+//!
+//! Cosine similarity (sign discretizer, Eq. 3.1): [`CpSrp`] (Definition 12),
+//! [`TtSrp`] (Definition 13), [`NaiveSrp`] (reshape + Charikar [6]).
+//!
+//! Every family is a bank of K hash functions; [`HashFamily::hash`] returns
+//! the K-vector of codes that the index packs into a bucket signature.
+
+mod planner;
+
+pub use planner::{
+    cp_condition_ratio, plan_cosine, plan_euclidean, plan_parameters, tt_condition_ratio,
+    validity_report, LshPlan, ValidityReport,
+};
+
+use crate::projection::{CpRademacher, Distribution, GaussianDense, Projection, TtRademacher};
+use crate::rng::Rng;
+use crate::stats;
+use crate::tensor::AnyTensor;
+
+/// A bank of K locality-sensitive hash functions.
+pub trait HashFamily: Send + Sync {
+    /// Hashes per signature (K).
+    fn k(&self) -> usize;
+
+    /// Hash a tensor to K integer codes.
+    fn hash(&self, x: &AnyTensor) -> Vec<i32> {
+        self.discretize(&self.project(x))
+    }
+
+    /// The K raw projections (pre-discretization) — multiprobe needs these.
+    fn project(&self, x: &AnyTensor) -> Vec<f64>;
+
+    /// Discretize raw projections into codes.
+    fn discretize(&self, z: &[f64]) -> Vec<i32>;
+
+    /// Stored parameter count (space column of Tables 1–2).
+    fn param_count(&self) -> usize;
+
+    /// Family name, e.g. "cp-e2lsh".
+    fn name(&self) -> String;
+
+    /// Analytic single-hash collision probability given the *distance proxy*:
+    /// Euclidean distance r for E2LSH families, cosine similarity for SRP
+    /// families. This is the `p(·)` of Theorems 4/6/8/10.
+    fn analytic_collision(&self, proxy: f64) -> f64;
+
+    /// True for E2LSH-style families (proxy = distance), false for SRP
+    /// (proxy = cosine similarity).
+    fn is_euclidean(&self) -> bool;
+
+    /// Multiprobe: up to `probes` extra bucket signatures beyond the exact
+    /// one, most-promising first. The default is a geometry-agnostic
+    /// heuristic; families with discretizer state override it (E2LSH uses
+    /// exact distances to the bucket boundaries via (b, w)).
+    fn probe_signatures(&self, codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
+        if self.is_euclidean() {
+            crate::index::e2lsh_probes(codes, z, probes)
+        } else {
+            crate::index::srp_probes(codes, z, probes)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic hashers over a projection bank
+// ---------------------------------------------------------------------------
+
+/// E2LSH discretizer over any projection family:
+/// `h_k(x) = ⌊(⟨P_k, x⟩ + b_k)/w⌋` (Eq. 3.3 / 4.1 / 4.20).
+#[derive(Clone, Debug)]
+pub struct E2lshHasher<P: Projection> {
+    pub proj: P,
+    pub b: Vec<f64>,
+    pub w: f64,
+    label: &'static str,
+}
+
+impl<P: Projection> E2lshHasher<P> {
+    /// Wrap a projection bank with fresh uniform offsets `b_k ∈ [0, w)`.
+    pub fn wrap(proj: P, w: f64, seed: u64, label: &'static str) -> Self {
+        assert!(w > 0.0, "bucket width must be positive");
+        let mut rng = Rng::derive(seed, &[0xB0FF5E7]);
+        let b = (0..proj.k()).map(|_| rng.uniform(0.0, w)).collect();
+        E2lshHasher { proj, b, w, label }
+    }
+
+    /// Wrap with explicit offsets (banding: a band family must carry the
+    /// matching slice of the full bank's offsets).
+    pub fn with_offsets(proj: P, b: Vec<f64>, w: f64, label: &'static str) -> Self {
+        assert!(w > 0.0, "bucket width must be positive");
+        assert_eq!(b.len(), proj.k(), "offsets must match bank width");
+        E2lshHasher { proj, b, w, label }
+    }
+}
+
+impl<P: Projection> HashFamily for E2lshHasher<P> {
+    fn k(&self) -> usize {
+        self.proj.k()
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        self.proj.project(x)
+    }
+
+    fn discretize(&self, z: &[f64]) -> Vec<i32> {
+        z.iter()
+            .zip(&self.b)
+            .map(|(&v, &b)| ((v + b) / self.w).floor() as i32)
+            .collect()
+    }
+
+    fn param_count(&self) -> usize {
+        self.proj.param_count() + self.b.len()
+    }
+
+    fn name(&self) -> String {
+        format!("{}-e2lsh", self.label)
+    }
+
+    fn analytic_collision(&self, r: f64) -> f64 {
+        stats::e2lsh_collision_prob(r, self.w)
+    }
+
+    fn is_euclidean(&self) -> bool {
+        true
+    }
+
+    /// Exact query-directed multiprobe (Lv et al.): for every coordinate,
+    /// the distance from `z_k + b_k` to its lower/upper bucket boundary
+    /// ranks the ±1 perturbations; the `probes` closest boundaries win.
+    fn probe_signatures(&self, codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
+        let k = codes.len();
+        let mut cands: Vec<(f64, usize, i32)> = Vec::with_capacity(2 * k);
+        for i in 0..k {
+            let pos = (z[i] + self.b[i]) / self.w - codes[i] as f64; // in [0,1)
+            cands.push((pos, i, -1)); // distance to lower boundary
+            cands.push((1.0 - pos, i, 1)); // distance to upper boundary
+        }
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cands
+            .into_iter()
+            .take(probes)
+            .map(|(_, i, step)| {
+                let mut c = codes.to_vec();
+                c[i] += step;
+                crate::index::signature(&c)
+            })
+            .collect()
+    }
+}
+
+/// SRP discretizer over any projection family: `h_k(x) = sgn(⟨P_k, x⟩)`
+/// (Eq. 3.1 / 4.34 / 4.61).
+#[derive(Clone, Debug)]
+pub struct SrpHasher<P: Projection> {
+    pub proj: P,
+    label: &'static str,
+}
+
+impl<P: Projection> SrpHasher<P> {
+    pub fn wrap(proj: P, label: &'static str) -> Self {
+        SrpHasher { proj, label }
+    }
+}
+
+impl<P: Projection> HashFamily for SrpHasher<P> {
+    fn k(&self) -> usize {
+        self.proj.k()
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        self.proj.project(x)
+    }
+
+    fn discretize(&self, z: &[f64]) -> Vec<i32> {
+        z.iter().map(|&v| if v > 0.0 { 1 } else { 0 }).collect()
+    }
+
+    fn param_count(&self) -> usize {
+        self.proj.param_count()
+    }
+
+    fn name(&self) -> String {
+        format!("{}-srp", self.label)
+    }
+
+    fn analytic_collision(&self, cosine: f64) -> f64 {
+        stats::srp_collision_prob(cosine)
+    }
+
+    fn is_euclidean(&self) -> bool {
+        false
+    }
+}
+
+/// Marker traits so generic code can demand the right proxy semantics.
+pub trait E2lshFamily: HashFamily {
+    fn w(&self) -> f64;
+}
+pub trait SrpFamily: HashFamily {}
+
+impl<P: Projection> E2lshFamily for E2lshHasher<P> {
+    fn w(&self) -> f64 {
+        self.w
+    }
+}
+impl<P: Projection> SrpFamily for SrpHasher<P> {}
+
+// ---------------------------------------------------------------------------
+// The six concrete families
+// ---------------------------------------------------------------------------
+
+/// CP-E2LSH (Definition 10).
+pub type CpE2lsh = E2lshHasher<CpRademacher>;
+/// TT-E2LSH (Definition 11).
+pub type TtE2lsh = E2lshHasher<TtRademacher>;
+/// Naive baseline: reshape + E2LSH [11].
+pub type NaiveE2lsh = E2lshHasher<GaussianDense>;
+/// CP-SRP (Definition 12).
+pub type CpSrp = SrpHasher<CpRademacher>;
+/// TT-SRP (Definition 13).
+pub type TtSrp = SrpHasher<TtRademacher>;
+/// Naive baseline: reshape + SRP [6].
+pub type NaiveSrp = SrpHasher<GaussianDense>;
+
+/// Configuration for [`CpE2lsh`].
+#[derive(Clone, Debug)]
+pub struct CpE2lshConfig {
+    pub dims: Vec<usize>,
+    /// Projection tensor CP rank R.
+    pub rank: usize,
+    /// Hashes per signature.
+    pub k: usize,
+    /// Bucket width w.
+    pub w: f64,
+    pub seed: u64,
+}
+
+impl CpE2lsh {
+    pub fn new(cfg: CpE2lshConfig) -> Self {
+        let proj = CpRademacher::generate(cfg.seed, &cfg.dims, cfg.rank, cfg.k, Distribution::Rademacher);
+        E2lshHasher::wrap(proj, cfg.w, cfg.seed, "cp")
+    }
+}
+
+/// Configuration for [`TtE2lsh`].
+#[derive(Clone, Debug)]
+pub struct TtE2lshConfig {
+    pub dims: Vec<usize>,
+    /// Projection tensor TT rank R.
+    pub rank: usize,
+    pub k: usize,
+    pub w: f64,
+    pub seed: u64,
+}
+
+impl TtE2lsh {
+    pub fn new(cfg: TtE2lshConfig) -> Self {
+        let proj = TtRademacher::generate(cfg.seed, &cfg.dims, cfg.rank, cfg.k, Distribution::Rademacher);
+        E2lshHasher::wrap(proj, cfg.w, cfg.seed, "tt")
+    }
+}
+
+/// Configuration for [`CpSrp`].
+#[derive(Clone, Debug)]
+pub struct CpSrpConfig {
+    pub dims: Vec<usize>,
+    pub rank: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl CpSrp {
+    pub fn new(cfg: CpSrpConfig) -> Self {
+        let proj = CpRademacher::generate(cfg.seed, &cfg.dims, cfg.rank, cfg.k, Distribution::Rademacher);
+        SrpHasher::wrap(proj, "cp")
+    }
+}
+
+/// Configuration for [`TtSrp`].
+#[derive(Clone, Debug)]
+pub struct TtSrpConfig {
+    pub dims: Vec<usize>,
+    pub rank: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl TtSrp {
+    pub fn new(cfg: TtSrpConfig) -> Self {
+        let proj = TtRademacher::generate(cfg.seed, &cfg.dims, cfg.rank, cfg.k, Distribution::Rademacher);
+        SrpHasher::wrap(proj, "tt")
+    }
+}
+
+impl NaiveE2lsh {
+    /// Naive baseline constructor.
+    pub fn naive(dims: &[usize], k: usize, w: f64, seed: u64) -> Self {
+        E2lshHasher::wrap(GaussianDense::generate(seed, dims, k), w, seed, "naive")
+    }
+}
+
+impl NaiveSrp {
+    /// Naive baseline constructor.
+    pub fn naive(dims: &[usize], k: usize, seed: u64) -> Self {
+        SrpHasher::wrap(GaussianDense::generate(seed, dims, k), "naive")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::CpTensor;
+    use crate::workload::{pair_at_cosine, pair_at_distance, PairFormat};
+
+    fn dims() -> Vec<usize> {
+        vec![6, 6, 6]
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_sized() {
+        let fam = CpE2lsh::new(CpE2lshConfig { dims: dims(), rank: 4, k: 12, w: 4.0, seed: 3 });
+        let mut rng = Rng::new(100);
+        let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims(), 2));
+        let h1 = fam.hash(&x);
+        let h2 = fam.hash(&x);
+        assert_eq!(h1, h2);
+        assert_eq!(h1.len(), 12);
+        assert_eq!(fam.name(), "cp-e2lsh");
+    }
+
+    #[test]
+    fn srp_codes_are_bits() {
+        let fam = TtSrp::new(TtSrpConfig { dims: dims(), rank: 3, k: 20, seed: 4 });
+        let mut rng = Rng::new(101);
+        let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims(), 2));
+        assert!(fam.hash(&x).iter().all(|&c| c == 0 || c == 1));
+        assert!(!fam.is_euclidean());
+    }
+
+    #[test]
+    fn all_families_agree_on_input_format_invariance() {
+        let mut rng = Rng::new(102);
+        let xc = CpTensor::random_gaussian(&mut rng, &dims(), 2);
+        let variants = [
+            AnyTensor::Cp(xc.clone()),
+            AnyTensor::Tt(xc.to_tt()),
+            AnyTensor::Dense(xc.materialize()),
+        ];
+        let fams: Vec<Box<dyn HashFamily>> = vec![
+            Box::new(CpE2lsh::new(CpE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 5 })),
+            Box::new(TtE2lsh::new(TtE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 5 })),
+            Box::new(CpSrp::new(CpSrpConfig { dims: dims(), rank: 3, k: 8, seed: 5 })),
+            Box::new(TtSrp::new(TtSrpConfig { dims: dims(), rank: 3, k: 8, seed: 5 })),
+            Box::new(NaiveE2lsh::naive(&dims(), 8, 4.0, 5)),
+            Box::new(NaiveSrp::naive(&dims(), 8, 5)),
+        ];
+        for fam in &fams {
+            let h0 = fam.hash(&variants[0]);
+            for v in &variants[1..] {
+                // Identical tensor in a different format must hash identically
+                // (up to f32 boundary effects, which these seeds avoid).
+                assert_eq!(fam.hash(v), h0, "family {}", fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn e2lsh_empirical_collision_tracks_analytic() {
+        // Single-hash collision rate over many k at controlled distance.
+        // N=3 puts the CLT exponent at D^(1/30) (Theorem 4), so convergence
+        // is slow at small shapes — use 8^3 = 512 elements and a finite-shape
+        // tolerance; tight-tolerance validation at scale is experiment F1.
+        let k = 3000;
+        let d = vec![8usize, 8, 8];
+        let fam = CpE2lsh::new(CpE2lshConfig { dims: d.clone(), rank: 4, k, w: 4.0, seed: 7 });
+        let mut rng = Rng::new(103);
+        for &r in &[0.5f64, 2.0, 4.0] {
+            let (x, y) = pair_at_distance(&mut rng, &d, r, PairFormat::Cp(2));
+            let (hx, hy) = (fam.hash(&x), fam.hash(&y));
+            let rate =
+                hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64 / k as f64;
+            let expect = fam.analytic_collision(r);
+            assert!(
+                (rate - expect).abs() < 0.07,
+                "r={r}: rate {rate} vs analytic {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn srp_empirical_collision_tracks_analytic() {
+        let k = 3000;
+        let fam = CpSrp::new(CpSrpConfig { dims: dims(), rank: 4, k, seed: 8 });
+        let mut rng = Rng::new(104);
+        for &c in &[0.9f64, 0.5, 0.0, -0.5] {
+            let (x, y) = pair_at_cosine(&mut rng, &dims(), c, PairFormat::Cp(2));
+            let (hx, hy) = (fam.hash(&x), fam.hash(&y));
+            let rate =
+                hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64 / k as f64;
+            let expect = fam.analytic_collision(c);
+            assert!(
+                (rate - expect).abs() < 0.04,
+                "cos={c}: rate {rate} vs analytic {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn e2lsh_probe_signatures_rank_by_boundary_distance() {
+        let fam = CpE2lsh::new(CpE2lshConfig { dims: dims(), rank: 2, k: 3, w: 4.0, seed: 9 });
+        // Choose z so that (z + b)/w sits at known fractional positions.
+        let z: Vec<f64> = (0..3).map(|i| 4.0 * (i as f64 + 0.5) - fam.b[i]).collect();
+        let codes = fam.discretize(&z);
+        // All fractions are exactly 0.5 ⇒ every ±1 step is equidistant; ask
+        // for all 6 probes and check they are exactly the single-step codes.
+        let probes = fam.probe_signatures(&codes, &z, 6);
+        assert_eq!(probes.len(), 6);
+        let mut expected = Vec::new();
+        for i in 0..3 {
+            for step in [-1, 1] {
+                let mut c = codes.clone();
+                c[i] += step;
+                expected.push(crate::index::signature(&c));
+            }
+        }
+        for p in probes {
+            assert!(expected.contains(&p));
+        }
+        // A coordinate close to its upper boundary must be probed first.
+        let z2: Vec<f64> = vec![4.0 * 0.99 - fam.b[0], 4.0 * 0.5 - fam.b[1], 4.0 * 0.5 - fam.b[2]];
+        let codes2 = fam.discretize(&z2);
+        let first = fam.probe_signatures(&codes2, &z2, 1)[0];
+        let mut up = codes2.clone();
+        up[0] += 1;
+        assert_eq!(first, crate::index::signature(&up));
+    }
+
+    #[test]
+    fn space_ordering_matches_tables() {
+        let d = dims();
+        let (k, r) = (8usize, 4usize);
+        let cp = CpE2lsh::new(CpE2lshConfig { dims: d.clone(), rank: r, k, w: 4.0, seed: 1 });
+        let tt = TtE2lsh::new(TtE2lshConfig { dims: d.clone(), rank: r, k, w: 4.0, seed: 1 });
+        let nv = NaiveE2lsh::naive(&d, k, 4.0, 1);
+        assert!(cp.param_count() < tt.param_count());
+        assert!(tt.param_count() < nv.param_count());
+    }
+}

@@ -1,0 +1,161 @@
+//! LSH parameter planning and the paper's validity conditions.
+//!
+//! * [`plan_parameters`] — classical (K, L) selection from the `(R₁, R₂, P₁,
+//!   P₂)`-sensitivity of Definition 1: `ρ = ln(1/P₁)/ln(1/P₂)`,
+//!   `L = ⌈n^ρ⌉` for success probability `1 − δ`.
+//! * [`cp_condition_ratio`] / [`tt_condition_ratio`] — the asymptotic
+//!   validity conditions of Theorems 3–10:
+//!   CP: `√R·N^{4/5} = o(D^{(3N−8)/(10N)})`,
+//!   TT: `√(R^{N−1})·N^{4/5} = o(D^{(3N−8)/(10N)})`, `D = Π dₙ`.
+//!   The *ratio* (LHS/RHS) is the practitioners' diagnostic: ≪ 1 means the
+//!   CLT is trustworthy at this shape; F4 sweeps it.
+
+use crate::stats;
+
+/// Outcome of (K, L) planning.
+#[derive(Clone, Debug)]
+pub struct LshPlan {
+    /// Hashes per table signature.
+    pub k: usize,
+    /// Number of tables.
+    pub l: usize,
+    /// Sensitivity exponent ρ = ln(1/p1)/ln(1/p2).
+    pub rho: f64,
+    /// Single-hash collision probabilities at the near/far thresholds.
+    pub p1: f64,
+    pub p2: f64,
+    /// Probability a near neighbor is found in ≥1 table.
+    pub recall_bound: f64,
+}
+
+/// Plan (K, L) for an E2LSH-style family with bucket width `w`, near radius
+/// `r1`, far radius `r2 = c·r1`, corpus size `n`, failure budget `delta`.
+pub fn plan_parameters(
+    n: usize,
+    p1: f64,
+    p2: f64,
+    delta: f64,
+) -> LshPlan {
+    assert!(p1 > p2 && p2 > 0.0 && p1 < 1.0, "need 1 > p1 > p2 > 0");
+    let rho = (1.0 / p1).ln() / (1.0 / p2).ln();
+    // K chosen so that far points collide on a full signature with prob ~1/n.
+    let k = ((n as f64).ln() / (1.0 / p2).ln()).ceil().max(1.0) as usize;
+    // Per-table near-neighbor full-signature collision prob.
+    let p1k = p1.powi(k as i32);
+    // L tables so that miss probability (1 - p1^K)^L <= delta.
+    let l = if p1k >= 1.0 {
+        1
+    } else {
+        (delta.ln() / (1.0 - p1k).ln()).ceil().max(1.0) as usize
+    };
+    let recall_bound = 1.0 - (1.0 - p1k).powi(l as i32);
+    LshPlan { k, l, rho, p1, p2, recall_bound }
+}
+
+/// Plan parameters for Euclidean search: near radius `r1`, approximation
+/// factor `c` (far = c·r1), bucket width `w`.
+pub fn plan_euclidean(n: usize, r1: f64, c: f64, w: f64, delta: f64) -> LshPlan {
+    let p1 = stats::e2lsh_collision_prob(r1, w);
+    let p2 = stats::e2lsh_collision_prob(c * r1, w);
+    plan_parameters(n, p1, p2, delta)
+}
+
+/// Plan parameters for cosine search: near similarity `s1`, far `s2`.
+pub fn plan_cosine(n: usize, s1: f64, s2: f64, delta: f64) -> LshPlan {
+    let p1 = stats::srp_collision_prob(s1);
+    let p2 = stats::srp_collision_prob(s2);
+    plan_parameters(n, p1, p2, delta)
+}
+
+/// Validity diagnostic for the CP families (Theorems 3/4/7/8):
+/// returns `√R·N^{4/5} / D^{(3N−8)/(10N)}` with `D = Π dims`.
+pub fn cp_condition_ratio(dims: &[usize], rank: usize) -> f64 {
+    let n = dims.len() as f64;
+    let d: f64 = dims.iter().map(|&x| x as f64).product();
+    let exponent = (3.0 * n - 8.0) / (10.0 * n);
+    (rank as f64).sqrt() * n.powf(0.8) / d.powf(exponent)
+}
+
+/// Validity diagnostic for the TT families (Theorems 5/6/9/10):
+/// returns `√(R^{N−1})·N^{4/5} / D^{(3N−8)/(10N)}`.
+pub fn tt_condition_ratio(dims: &[usize], rank: usize) -> f64 {
+    let n = dims.len() as f64;
+    let d: f64 = dims.iter().map(|&x| x as f64).product();
+    let exponent = (3.0 * n - 8.0) / (10.0 * n);
+    (rank as f64).powf((n - 1.0) / 2.0) * n.powf(0.8) / d.powf(exponent)
+}
+
+/// Structured report on whether a configuration sits inside the theorems'
+/// asymptotic validity regime.
+#[derive(Clone, Debug)]
+pub struct ValidityReport {
+    pub cp_ratio: f64,
+    pub tt_ratio: f64,
+    /// Heuristic verdicts (ratio < 1 — the o(·) is asymptotic; this is the
+    /// practitioner's finite-shape proxy, calibrated by experiment F4).
+    pub cp_ok: bool,
+    pub tt_ok: bool,
+}
+
+/// Evaluate both conditions at a shape/rank.
+pub fn validity_report(dims: &[usize], rank: usize) -> ValidityReport {
+    let cp_ratio = cp_condition_ratio(dims, rank);
+    let tt_ratio = tt_condition_ratio(dims, rank);
+    ValidityReport { cp_ratio, tt_ratio, cp_ok: cp_ratio < 1.0, tt_ok: tt_ratio < 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shapes() {
+        let plan = plan_euclidean(10_000, 1.0, 2.0, 4.0, 0.05);
+        assert!(plan.k >= 1 && plan.l >= 1);
+        assert!(plan.p1 > plan.p2);
+        assert!(plan.rho > 0.0 && plan.rho < 1.0);
+        assert!(plan.recall_bound >= 0.95 - 1e-9);
+    }
+
+    #[test]
+    fn plan_cosine_sane() {
+        let plan = plan_cosine(100_000, 0.9, 0.5, 0.1);
+        assert!(plan.recall_bound >= 0.9 - 1e-9);
+        assert!(plan.l < 10_000, "L exploded: {}", plan.l);
+    }
+
+    #[test]
+    fn bigger_corpus_needs_more_tables() {
+        let a = plan_cosine(1_000, 0.9, 0.3, 0.05);
+        let b = plan_cosine(1_000_000, 0.9, 0.3, 0.05);
+        assert!(b.k >= a.k);
+    }
+
+    #[test]
+    #[should_panic(expected = "need 1 > p1 > p2 > 0")]
+    fn plan_rejects_bad_probs() {
+        plan_parameters(10, 0.2, 0.9, 0.1);
+    }
+
+    #[test]
+    fn condition_ratios_move_the_right_way() {
+        // Growing d (more elements) shrinks both ratios…
+        assert!(cp_condition_ratio(&[32, 32, 32], 8) < cp_condition_ratio(&[8, 8, 8], 8));
+        // …growing R grows them…
+        assert!(cp_condition_ratio(&[16, 16, 16], 32) > cp_condition_ratio(&[16, 16, 16], 2));
+        // …and TT's dependence on R is much steeper than CP's (√R^{N−1} vs √R):
+        // at N=4, growing R 4→64 multiplies the TT ratio by 16^1.5 = 64 but
+        // the CP ratio only by 4.
+        let cp_growth = cp_condition_ratio(&[8, 8, 8, 8], 64) / cp_condition_ratio(&[8, 8, 8, 8], 4);
+        let tt_growth = tt_condition_ratio(&[8, 8, 8, 8], 64) / tt_condition_ratio(&[8, 8, 8, 8], 4);
+        assert!(tt_growth > cp_growth * 4.0);
+    }
+
+    #[test]
+    fn validity_report_flags_extremes() {
+        let ok = validity_report(&[64, 64, 64, 64], 2);
+        assert!(ok.cp_ok);
+        let bad = validity_report(&[4, 4, 4], 4096);
+        assert!(!bad.cp_ok && !bad.tt_ok);
+    }
+}

@@ -1,0 +1,329 @@
+//! `tensorlsh` — CLI for the tensorized-LSH serving stack.
+//!
+//! ```text
+//! tensorlsh <command> [--config file.json] [key=value ...]
+//!
+//! commands:
+//!   info     show effective config, validity report, artifact manifest
+//!   plan     (K, L) parameter planning from collision probabilities
+//!   hash     hash one random tensor with the configured family
+//!   search   build a synthetic corpus + index, report recall
+//!   serve    run the coordinator over a synthetic query trace
+//!   exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all
+//! ```
+
+use std::sync::Arc;
+use tensor_lsh::bench_harness as bh;
+use tensor_lsh::config::AppConfig;
+use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, Query};
+use tensor_lsh::error::{Error, Result};
+use tensor_lsh::index::{recall_at_k, LshIndex, Metric};
+use tensor_lsh::lsh::{plan_cosine, plan_euclidean, validity_report, HashFamily};
+use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::runtime::{find_artifact_dir, Manifest};
+use tensor_lsh::tensor::{AnyTensor, CpTensor};
+use tensor_lsh::workload::{low_rank_corpus, zipf_trace, DatasetSpec, PairFormat};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print_usage();
+        return;
+    }
+    match run(&args[0], &args[1..]) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "tensorlsh — tensorized random-projection LSH (CP/TT-E2LSH, CP/TT-SRP)\n\n\
+         usage: tensorlsh <command> [--config file.json] [key=value ...]\n\n\
+         commands:\n\
+         \x20 info     show effective config, validity report, artifact manifest\n\
+         \x20 plan     (K, L) planning from collision probabilities\n\
+         \x20 hash     hash one random tensor with the configured family\n\
+         \x20 search   build a synthetic corpus + index, report recall\n\
+         \x20 serve    run the coordinator over a synthetic query trace\n\
+         \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
+         config keys: dims rank_proj rank_in k l w family metric probes\n\
+         \x20            n_items top_k n_workers max_batch max_wait_us seed artifact_dir"
+    );
+}
+
+fn parse_config(rest: &[String]) -> Result<(AppConfig, Vec<String>)> {
+    let mut cfg = AppConfig::default();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if a == "--config" {
+            i += 1;
+            let path = rest
+                .get(i)
+                .ok_or_else(|| Error::Config("--config needs a path".into()))?;
+            cfg.apply_file(path)?;
+        } else if a.contains('=') {
+            cfg.apply_override(a)?;
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok((cfg, positional))
+}
+
+fn run(cmd: &str, rest: &[String]) -> Result<()> {
+    let (cfg, positional) = parse_config(rest)?;
+    match cmd {
+        "info" => cmd_info(&cfg),
+        "plan" => cmd_plan(&cfg),
+        "hash" => cmd_hash(&cfg),
+        "search" => cmd_search(&cfg),
+        "serve" => cmd_serve(&cfg, positional.iter().any(|p| p == "pjrt")),
+        "exp" => cmd_exp(&cfg, &positional),
+        other => {
+            print_usage();
+            Err(Error::Config(format!("unknown command '{other}'")))
+        }
+    }
+}
+
+fn cmd_info(cfg: &AppConfig) -> Result<()> {
+    println!("# effective config\n{}", cfg.to_json());
+    let rep = validity_report(&cfg.dims, cfg.rank_proj);
+    println!(
+        "\n# validity (Theorems 4/6/8/10 finite-shape proxy)\n\
+         cp condition ratio: {:.3} ({})\ntt condition ratio: {:.3} ({})",
+        rep.cp_ratio,
+        if rep.cp_ok { "ok" } else { "outside asymptotic regime" },
+        rep.tt_ratio,
+        if rep.tt_ok { "ok" } else { "outside asymptotic regime" },
+    );
+    match find_artifact_dir(cfg.artifact_dir.as_deref()) {
+        Some(dir) => {
+            let m = Manifest::load(&dir)?;
+            println!("\n# artifacts ({})\n{}", dir.display(), m.summary());
+        }
+        None => println!("\n# artifacts: none found (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_plan(cfg: &AppConfig) -> Result<()> {
+    let plan = match cfg.metric {
+        Metric::Euclidean => plan_euclidean(cfg.n_items, 1.0, 2.0, cfg.w, 0.05),
+        Metric::Cosine => plan_cosine(cfg.n_items, 0.9, 0.5, 0.05),
+    };
+    println!(
+        "n={} → ρ={:.3}, K={}, L={}, p1={:.3}, p2={:.3}, recall bound={:.3}",
+        cfg.n_items, plan.rho, plan.k, plan.l, plan.p1, plan.p2, plan.recall_bound
+    );
+    Ok(())
+}
+
+fn family_for(cfg: &AppConfig, seed: u64) -> Arc<dyn HashFamily> {
+    bh::index_config_family(cfg.family, cfg.metric, &cfg.dims, cfg.rank_proj, cfg.k, cfg.w, seed)
+}
+
+fn cmd_hash(cfg: &AppConfig) -> Result<()> {
+    let fam = family_for(cfg, cfg.seed);
+    let mut rng = Rng::new(cfg.seed);
+    let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &cfg.dims, cfg.rank_in));
+    let t0 = std::time::Instant::now();
+    let codes = fam.hash(&x);
+    let dt = t0.elapsed();
+    println!("family: {}", fam.name());
+    println!("codes ({}): {:?}", codes.len(), codes);
+    println!("params: {} f32 ({} bytes)", fam.param_count(), fam.param_count() * 4);
+    println!("hash time: {:.1} µs", dt.as_secs_f64() * 1e6);
+    Ok(())
+}
+
+fn build_corpus_index(cfg: &AppConfig) -> Result<(Arc<LshIndex>, Vec<AnyTensor>)> {
+    let spec = DatasetSpec {
+        dims: cfg.dims.clone(),
+        n_items: cfg.n_items,
+        rank: cfg.rank_in,
+        n_clusters: (cfg.n_items / 50).max(2),
+        noise: 0.35,
+        seed: cfg.seed,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let icfg = bh::index_config(
+        cfg.family,
+        cfg.metric,
+        cfg.dims.clone(),
+        cfg.rank_proj,
+        cfg.k,
+        cfg.l,
+        cfg.w,
+        cfg.seed,
+    );
+    let index = Arc::new(LshIndex::build(&icfg, items.clone())?);
+    Ok((index, items))
+}
+
+fn cmd_search(cfg: &AppConfig) -> Result<()> {
+    let (index, _items) = build_corpus_index(cfg)?;
+    let mut rng = Rng::derive(cfg.seed, &[0x5EA]);
+    let n_q = 30.min(cfg.n_items);
+    let mut recall_sum = 0.0;
+    for _ in 0..n_q {
+        let qid = rng.below(index.len());
+        let q = index.item(qid).clone();
+        let approx = index.search(&q, cfg.top_k)?;
+        let exact = index.exact_search(&q, cfg.top_k)?;
+        recall_sum += recall_at_k(&approx, &exact);
+    }
+    println!(
+        "index: n={} L={} K={} family={} metric={:?}",
+        index.len(),
+        index.n_tables(),
+        cfg.k,
+        cfg.family.name(),
+        cfg.metric
+    );
+    for (t, (mean, max)) in index.occupancy().iter().enumerate() {
+        if t < 3 {
+            println!("table {t}: mean bucket {mean:.2}, max bucket {max}");
+        }
+    }
+    println!("recall@{} over {} queries: {:.3}", cfg.top_k, n_q, recall_sum / n_q as f64);
+    Ok(())
+}
+
+fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
+    let (index, backend) = if pjrt {
+        // PJRT serving uses the manifest shapes and LSH banding: the K-wide
+        // artifact output is split into `cfg.l` sub-signatures per query.
+        let dir = find_artifact_dir(cfg.artifact_dir.as_deref())
+            .ok_or_else(|| Error::Runtime("artifacts not found (run `make artifacts`)".into()))?;
+        let manifest = Manifest::load(&dir)?;
+        let mcfg = manifest.config.clone();
+        if mcfg.k % cfg.l != 0 {
+            return Err(Error::Config(format!(
+                "l={} must divide the artifact K={} for banding",
+                cfg.l, mcfg.k
+            )));
+        }
+        let dims = mcfg.dims();
+        let band_k = mcfg.k / cfg.l;
+        let bank = CpRademacher::generate(
+            cfg.seed,
+            &dims,
+            mcfg.rank_proj,
+            mcfg.k,
+            Distribution::Rademacher,
+        );
+        let spec = DatasetSpec {
+            dims: dims.clone(),
+            n_items: cfg.n_items,
+            rank: mcfg.rank_in,
+            n_clusters: (cfg.n_items / 50).max(2),
+            noise: 0.35,
+            seed: cfg.seed,
+        };
+        let (items, _) = low_rank_corpus(&spec);
+        let icfg = tensor_lsh::index::IndexConfig {
+            family_builder: {
+                let bank = bank.clone();
+                Arc::new(move |t| {
+                    Arc::new(tensor_lsh::lsh::SrpHasher::wrap(bank.band(t, band_k), "cp"))
+                        as Arc<dyn HashFamily>
+                })
+            },
+            n_tables: cfg.l,
+            metric: Metric::Cosine,
+            probes: cfg.probes,
+        };
+        let index = Arc::new(LshIndex::build(&icfg, items)?);
+        let backend = HashBackend::Pjrt(PjrtServingParams {
+            artifact_dir: dir,
+            artifact: "cp_srp".into(),
+            bank,
+            bands: cfg.l,
+            e2lsh: None,
+        });
+        (index, backend)
+    } else {
+        let (index, _items) = build_corpus_index(cfg)?;
+        (index, HashBackend::Native)
+    };
+    let mut rng = Rng::derive(cfg.seed, &[0x5E71]);
+    let trace = zipf_trace(&mut rng, index.len(), 4 * cfg.n_items.min(2000), 1.1);
+    let queries: Vec<Query> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| Query::new(i as u64, index.item(id).clone(), cfg.top_k))
+        .collect();
+    let (responses, snap) =
+        Coordinator::serve_trace(index, cfg.coordinator(), backend, queries)?;
+    println!("served {} queries ({})", responses.len(), if pjrt { "pjrt" } else { "native" });
+    println!("{snap}");
+    Ok(())
+}
+
+fn cmd_exp(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let which = positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = positional.iter().any(|p| p == "quick");
+    let scale = if quick { 1 } else { 4 };
+    let run_one = |id: &str| -> Result<()> {
+        match id {
+            "t1" => {
+                bh::table1_euclidean(&bh::TableOptions::default());
+            }
+            "t2" => {
+                bh::table2_cosine(&bh::TableOptions::default());
+            }
+            "f1" => {
+                bh::fig_collision_e2lsh(
+                    &[10, 10, 10], 4, cfg.w, 512 * scale, 8 * scale, cfg.seed,
+                    PairFormat::Dense,
+                );
+                // Documented finite-shape deviation: low-rank CP pairs.
+                bh::fig_collision_e2lsh(
+                    &[10, 10, 10], 4, cfg.w, 512 * scale, 8 * scale, cfg.seed,
+                    PairFormat::Cp(2),
+                );
+            }
+            "f2" => {
+                bh::fig_collision_srp(
+                    &[10, 10, 10], 4, 512 * scale, 8 * scale, cfg.seed, PairFormat::Dense,
+                );
+                bh::fig_collision_srp(
+                    &[10, 10, 10], 4, 512 * scale, 8 * scale, cfg.seed, PairFormat::Cp(2),
+                );
+            }
+            "f3" => {
+                bh::fig_normality(&[4, 6, 8, 12, 16], 3, 4, 1000 * scale, cfg.seed, None);
+                // Low-rank inputs: KS plateaus (finite-shape regime).
+                bh::fig_normality(&[4, 8, 16], 3, 4, 1000 * scale, cfg.seed, Some(3));
+            }
+            "f4" => {
+                bh::fig_condition(&[8, 8, 8], &[1, 2, 4, 8, 16, 32, 64], 1000 * scale, cfg.seed);
+            }
+            "f5" => {
+                bh::fig_recall(&bh::RecallOptions {
+                    n_items: if quick { 400 } else { 1500 },
+                    ..Default::default()
+                });
+            }
+            other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in ["t1", "t2", "f1", "f2", "f3", "f4", "f5"] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

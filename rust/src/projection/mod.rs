@@ -1,0 +1,498 @@
+//! Random projection families: banks of K projection tensors.
+//!
+//! * [`CpRademacher`] — K iid `CP_Rad(R)` (or `CP_N(R)`) tensors
+//!   (Definition 6 / 8): `O(KNdR)` space.
+//! * [`TtRademacher`] — K iid `TT_Rad(R)` (or `TT_N(R)`) tensors
+//!   (Definition 7 / 9): `O(KNdR²)` space.
+//! * [`GaussianDense`] — the naive baseline: K dense `N(0,1)` tensors of
+//!   `d^N` entries each.
+//!
+//! All are generated deterministically from `(seed, k-index)` via
+//! [`Rng::derive`], so the native and PJRT hash paths regenerate identical
+//! parameters.
+
+use crate::rng::{GaussianSampler, RademacherSampler, Rng, Sampler};
+use crate::tensor::{AnyTensor, CpTensor, TtTensor};
+
+/// Entry distribution for the low-rank projection families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// ±1 entries (the paper's main construction).
+    Rademacher,
+    /// N(0,1) entries (the Gaussian variants noted after Defs. 6–7).
+    Gaussian,
+}
+
+impl Distribution {
+    fn sampler(&self) -> &'static dyn Sampler {
+        match self {
+            Distribution::Rademacher => &RademacherSampler,
+            Distribution::Gaussian => &GaussianSampler,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Rademacher => "rademacher",
+            Distribution::Gaussian => "gaussian",
+        }
+    }
+}
+
+/// A bank of K projection tensors: maps any tensor to `R^K`.
+pub trait Projection: Send + Sync {
+    /// Number of projections K.
+    fn k(&self) -> usize;
+
+    /// Project a tensor: returns the K inner products `⟨P_k, X⟩`.
+    fn project(&self, x: &AnyTensor) -> Vec<f64>;
+
+    /// Stored parameter count (the space column of Tables 1–2).
+    fn param_count(&self) -> usize;
+
+    /// Family name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// K CP-distributed projection tensors (Definitions 6 and 8).
+///
+/// Besides the per-tensor representation, the bank keeps a *stacked* layout
+/// per mode — `(d, K·R)` row-major — so projecting one input touches each
+/// input factor row once for all K projections (the same fattened-matmul
+/// trick the Pallas kernel uses for the MXU). This is the native hash hot
+/// path; see EXPERIMENTS.md §Perf.
+#[derive(Clone, Debug)]
+pub struct CpRademacher {
+    pub tensors: Vec<CpTensor>,
+    pub dims: Vec<usize>,
+    pub rank: usize,
+    pub distribution: Distribution,
+    pub seed: u64,
+    /// Per-mode stacked factors: `stacked[n][i * K*R + k*R + r] =
+    /// tensors[k].factors[n].get(i, r)` (unscaled ±1 entries).
+    stacked: Vec<Vec<f32>>,
+}
+
+impl CpRademacher {
+    /// Generate K rank-R CP projection tensors over `dims` from `seed`.
+    pub fn generate(
+        seed: u64,
+        dims: &[usize],
+        rank: usize,
+        k: usize,
+        distribution: Distribution,
+    ) -> Self {
+        let tensors: Vec<CpTensor> = (0..k)
+            .map(|i| {
+                let mut rng = Rng::derive(seed, &[0xC9, i as u64]);
+                CpTensor::random_projection(&mut rng, dims, rank, distribution.sampler())
+            })
+            .collect();
+        let stacked = Self::stack(&tensors, dims, rank);
+        CpRademacher { tensors, dims: dims.to_vec(), rank, distribution, seed, stacked }
+    }
+
+    fn stack(tensors: &[CpTensor], dims: &[usize], rank: usize) -> Vec<Vec<f32>> {
+        let k = tensors.len();
+        dims.iter()
+            .enumerate()
+            .map(|(n, &d)| {
+                let mut buf = vec![0.0f32; d * k * rank];
+                for (ki, t) in tensors.iter().enumerate() {
+                    let f = &t.factors[n];
+                    for i in 0..d {
+                        let src = f.row(i);
+                        let dst = &mut buf[i * k * rank + ki * rank..][..rank];
+                        dst.copy_from_slice(src);
+                    }
+                }
+                buf
+            })
+            .collect()
+    }
+
+    /// Fused projection of a CP-format input: per mode one pass over the
+    /// stacked bank computes all K Gram blocks at once, then a Hadamard
+    /// reduction. `O(Nd·K·R·R̂)` flops.
+    ///
+    /// Layout: `gram`/`acc` are `(R̂, K·R)` so the *inner* loops run over the
+    /// long contiguous `K·R` axis (R̂ is typically 2–16 — too short to
+    /// vectorize; K·R is 48–512). See EXPERIMENTS.md §Perf step 4.
+    fn project_cp_fused(&self, x: &CpTensor) -> Vec<f64> {
+        let k = self.tensors.len();
+        let r = self.rank;
+        let rhat = x.rank();
+        let kr = k * r;
+        let mut acc = vec![1.0f32; rhat * kr];
+        let mut gram = vec![0.0f32; rhat * kr];
+        for (n, stacked) in self.stacked.iter().enumerate() {
+            gram.iter_mut().for_each(|v| *v = 0.0);
+            let xf = &x.factors[n];
+            for i in 0..xf.d {
+                let srow = &stacked[i * kr..(i + 1) * kr];
+                let xrow = xf.row(i);
+                // gram[s, :] += x[i, s] * srow[:] — long contiguous axpy.
+                for (s, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let g = &mut gram[s * kr..(s + 1) * kr];
+                    for (gj, &sv) in g.iter_mut().zip(srow) {
+                        *gj += xv * sv;
+                    }
+                }
+            }
+            for (a, &g) in acc.iter_mut().zip(gram.iter()) {
+                *a *= g;
+            }
+        }
+        // Reduce: z_k = scale_k · x.scale · Σ_{s, r} acc[s, k·R + r].
+        let mut z = vec![0.0f64; k];
+        for s in 0..rhat {
+            let row = &acc[s * kr..(s + 1) * kr];
+            for ki in 0..k {
+                let mut sum = 0.0f32;
+                for &v in &row[ki * r..(ki + 1) * r] {
+                    sum += v;
+                }
+                z[ki] += sum as f64;
+            }
+        }
+        let xs = x.scale as f64;
+        for (zi, t) in z.iter_mut().zip(&self.tensors) {
+            *zi *= t.scale as f64 * xs;
+        }
+        z
+    }
+
+    /// The `band`-th contiguous slice of `band_k` projection tensors — LSH
+    /// banding: one K-wide bank hashed once serves K/band_k tables. The
+    /// sliced bank hashes identically to codes `[band·band_k, (band+1)·band_k)`
+    /// of the full bank.
+    pub fn band(&self, band: usize, band_k: usize) -> CpRademacher {
+        let lo = band * band_k;
+        let hi = (lo + band_k).min(self.tensors.len());
+        let tensors = self.tensors[lo..hi].to_vec();
+        let stacked = Self::stack(&tensors, &self.dims, self.rank);
+        CpRademacher {
+            tensors,
+            dims: self.dims.clone(),
+            rank: self.rank,
+            distribution: self.distribution,
+            seed: self.seed,
+            stacked,
+        }
+    }
+}
+
+impl Projection for CpRademacher {
+    fn k(&self) -> usize {
+        self.tensors.len()
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        use crate::tensor::inner;
+        match x {
+            // Hot path: fused K-batched Gram contraction.
+            AnyTensor::Cp(xc) => self.project_cp_fused(xc),
+            AnyTensor::Tt(xt) => self
+                .tensors
+                .iter()
+                .map(|p| inner::cp_tt(p, xt))
+                .collect(),
+            AnyTensor::Dense(xd) => self
+                .tensors
+                .iter()
+                .map(|p| inner::dense_cp(xd, p))
+                .collect(),
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.param_count()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "cp"
+    }
+}
+
+/// K TT-distributed projection tensors (Definitions 7 and 9).
+#[derive(Clone, Debug)]
+pub struct TtRademacher {
+    pub tensors: Vec<TtTensor>,
+    pub dims: Vec<usize>,
+    pub rank: usize,
+    pub distribution: Distribution,
+    pub seed: u64,
+}
+
+impl TtRademacher {
+    /// Generate K rank-R TT projection tensors over `dims` from `seed`.
+    pub fn generate(
+        seed: u64,
+        dims: &[usize],
+        rank: usize,
+        k: usize,
+        distribution: Distribution,
+    ) -> Self {
+        let tensors = (0..k)
+            .map(|i| {
+                let mut rng = Rng::derive(seed, &[0x77, i as u64]);
+                TtTensor::random_projection(&mut rng, dims, rank, distribution.sampler())
+            })
+            .collect();
+        TtRademacher { tensors, dims: dims.to_vec(), rank, distribution, seed }
+    }
+
+    /// Fused projection of a TT-format input: one transfer-matrix sweep
+    /// carries all K projections at once (the Rust mirror of the Pallas
+    /// `tt_inner` kernel). The input core slices `X[a, i, :]` are walked
+    /// once per mode instead of once per projection, inner loops run over
+    /// contiguous core rows, and accumulation is f32 (summed in f64 at the
+    /// end) — see EXPERIMENTS.md §Perf step 6.
+    fn project_tt_fused(&self, x: &TtTensor) -> Vec<f64> {
+        let k = self.tensors.len();
+        let n = x.order();
+        // m[k, a, b]: transfer between input bond a and projection bond b.
+        let mut m: Vec<f32> = vec![1.0; k];
+        let (mut ra, mut rb) = (1usize, 1usize);
+        let mut tmp: Vec<f32> = Vec::new();
+        for mode in 0..n {
+            let xc = &x.cores[mode];
+            let (d, na) = (xc.d, xc.r1);
+            let nb = self.tensors[0].cores[mode].r1;
+            // tmp[k, i, b, a'] = Σ_a m[k, a, b] · x[a, i, a']
+            tmp.clear();
+            tmp.resize(k * d * rb * na, 0.0);
+            for ki in 0..k {
+                let mk = &m[ki * ra * rb..(ki + 1) * ra * rb];
+                let tk = &mut tmp[ki * d * rb * na..(ki + 1) * d * rb * na];
+                for a in 0..ra {
+                    for b in 0..rb {
+                        let mv = mk[a * rb + b];
+                        if mv == 0.0 {
+                            continue;
+                        }
+                        for i in 0..d {
+                            // x slice (a, i, :) is contiguous.
+                            let xrow = &xc.data[(a * d + i) * na..(a * d + i + 1) * na];
+                            let trow = &mut tk[(i * rb + b) * na..(i * rb + b + 1) * na];
+                            for (t, &xv) in trow.iter_mut().zip(xrow) {
+                                *t += mv * xv;
+                            }
+                        }
+                    }
+                }
+            }
+            // m'[k, a', b'] = Σ_{i, b} tmp[k, i, b, a'] · g_k[b, i, b']
+            let mut next = vec![0.0f32; k * na * nb];
+            for (ki, t) in self.tensors.iter().enumerate() {
+                let gc = &t.cores[mode];
+                let tk = &tmp[ki * d * rb * na..(ki + 1) * d * rb * na];
+                let nk = &mut next[ki * na * nb..(ki + 1) * na * nb];
+                for i in 0..d {
+                    for b in 0..rb {
+                        let trow = &tk[(i * rb + b) * na..(i * rb + b + 1) * na];
+                        // g slice (b, i, :) is contiguous.
+                        let grow = &gc.data[(b * d + i) * nb..(b * d + i + 1) * nb];
+                        for (ap, &tv) in trow.iter().enumerate() {
+                            if tv == 0.0 {
+                                continue;
+                            }
+                            let nrow = &mut nk[ap * nb..(ap + 1) * nb];
+                            for (nv, &gv) in nrow.iter_mut().zip(grow) {
+                                *nv += tv * gv;
+                            }
+                        }
+                    }
+                }
+            }
+            m = next;
+            ra = na;
+            rb = nb;
+        }
+        debug_assert_eq!(ra * rb, 1);
+        let xs = x.scale as f64;
+        m.iter()
+            .zip(&self.tensors)
+            .map(|(&v, t)| v as f64 * t.scale as f64 * xs)
+            .collect()
+    }
+
+    /// Banding slice (see [`CpRademacher::band`]).
+    pub fn band(&self, band: usize, band_k: usize) -> TtRademacher {
+        let lo = band * band_k;
+        let hi = (lo + band_k).min(self.tensors.len());
+        TtRademacher {
+            tensors: self.tensors[lo..hi].to_vec(),
+            dims: self.dims.clone(),
+            rank: self.rank,
+            distribution: self.distribution,
+            seed: self.seed,
+        }
+    }
+}
+
+impl Projection for TtRademacher {
+    fn k(&self) -> usize {
+        self.tensors.len()
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        use crate::tensor::inner;
+        match x {
+            // Hot path: fused K-batched transfer sweep.
+            AnyTensor::Tt(xt) => self.project_tt_fused(xt),
+            // CP inputs: convert once to TT (exact, O(NdR̂²)) and fuse —
+            // beats K independent cp_tt sweeps for K ≫ R̂.
+            AnyTensor::Cp(xc) => self.project_tt_fused(&xc.to_tt()),
+            AnyTensor::Dense(xd) => self
+                .tensors
+                .iter()
+                .map(|t| inner::dense_tt(xd, t))
+                .collect(),
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.param_count()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "tt"
+    }
+}
+
+/// The naive baseline: K dense Gaussian tensors (E2LSH [11] / SRP [6] after
+/// reshaping). `O(K·d^N)` space and time.
+#[derive(Clone, Debug)]
+pub struct GaussianDense {
+    /// Row-major (K, D) projection matrix over the flattened tensor.
+    pub rows: Vec<Vec<f32>>,
+    pub dims: Vec<usize>,
+    pub seed: u64,
+}
+
+impl GaussianDense {
+    /// Generate K dense Gaussian projection rows over `dims` from `seed`.
+    pub fn generate(seed: u64, dims: &[usize], k: usize) -> Self {
+        let d: usize = dims.iter().product();
+        let rows = (0..k)
+            .map(|i| {
+                let mut rng = Rng::derive(seed, &[0xDE, i as u64]);
+                let mut row = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut row);
+                row
+            })
+            .collect();
+        GaussianDense { rows, dims: dims.to_vec(), seed }
+    }
+}
+
+impl Projection for GaussianDense {
+    fn k(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        // The naive method's contract: reshape to a d^N vector first.
+        let dense = x.materialize();
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut acc = 0.0f64;
+                for (a, b) in row.iter().zip(&dense.data) {
+                    acc += *a as f64 * *b as f64;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn param_count(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = CpRademacher::generate(5, &[4, 4, 4], 3, 4, Distribution::Rademacher);
+        let b = CpRademacher::generate(5, &[4, 4, 4], 3, 4, Distribution::Rademacher);
+        assert_eq!(a.tensors[2].factors[1].data, b.tensors[2].factors[1].data);
+        let c = CpRademacher::generate(6, &[4, 4, 4], 3, 4, Distribution::Rademacher);
+        assert_ne!(a.tensors[0].factors[0].data, c.tensors[0].factors[0].data);
+    }
+
+    #[test]
+    fn param_counts_match_tables() {
+        let dims = [10usize, 10, 10];
+        let (n, d, r, k) = (3usize, 10usize, 4usize, 8usize);
+        let cp = CpRademacher::generate(1, &dims, r, k, Distribution::Rademacher);
+        assert_eq!(cp.param_count(), k * n * d * r); // O(KNdR)
+        let tt = TtRademacher::generate(1, &dims, r, k, Distribution::Rademacher);
+        assert_eq!(tt.param_count(), k * (d * r + r * d * r + r * d)); // O(KNdR²)
+        let nv = GaussianDense::generate(1, &dims, k);
+        assert_eq!(nv.param_count(), k * d.pow(n as u32)); // O(K d^N)
+        assert!(cp.param_count() < nv.param_count());
+        assert!(tt.param_count() < nv.param_count());
+    }
+
+    #[test]
+    fn projections_agree_across_input_formats() {
+        let mut rng = Rng::new(90);
+        let dims = [5usize, 4, 3];
+        let xc = CpTensor::random_gaussian(&mut rng, &dims, 2);
+        let x_dense = AnyTensor::Dense(xc.materialize());
+        let x_cp = AnyTensor::Cp(xc.clone());
+        let x_tt = AnyTensor::Tt(xc.to_tt());
+        for proj in [
+            Box::new(CpRademacher::generate(3, &dims, 3, 6, Distribution::Rademacher))
+                as Box<dyn Projection>,
+            Box::new(TtRademacher::generate(3, &dims, 3, 6, Distribution::Rademacher)),
+        ] {
+            let zd = proj.project(&x_dense);
+            let zc = proj.project(&x_cp);
+            let zt = proj.project(&x_tt);
+            for i in 0..6 {
+                assert_close(zc[i], zd[i], 1e-3, 1e-3);
+                assert_close(zt[i], zd[i], 1e-3, 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn cp_projection_variance_is_norm_squared() {
+        // Theorem 3: Var(<P, X>) = ||X||_F² — check empirically over many k.
+        let mut rng = Rng::new(91);
+        let dims = [6usize, 6, 6];
+        let x = CpTensor::random_gaussian(&mut rng, &dims, 3);
+        let norm2 = x.frob_norm().powi(2);
+        let proj = CpRademacher::generate(17, &dims, 4, 4000, Distribution::Rademacher);
+        let z = proj.project(&AnyTensor::Cp(x));
+        let var = stats::variance(&z);
+        assert_close(var, norm2, 0.1, 0.0); // 10% statistical tolerance
+    }
+
+    #[test]
+    fn tt_projection_variance_is_norm_squared() {
+        // Theorem 5 analogue for TT.
+        let mut rng = Rng::new(92);
+        let dims = [6usize, 6, 6];
+        let x = CpTensor::random_gaussian(&mut rng, &dims, 3);
+        let norm2 = x.frob_norm().powi(2);
+        let proj = TtRademacher::generate(18, &dims, 4, 4000, Distribution::Rademacher);
+        let z = proj.project(&AnyTensor::Cp(x));
+        assert_close(stats::variance(&z), norm2, 0.1, 0.0);
+    }
+}

@@ -1,0 +1,303 @@
+//! Deterministic, splittable random number generation.
+//!
+//! Everything stochastic in the library (projection tensors, offsets,
+//! workloads) flows through [`Rng`], a xoshiro256++ generator seeded via
+//! SplitMix64. Streams are derived with [`Rng::derive`] so that e.g. table
+//! `t`, hash `k`, mode `n` gets an independent, *reproducible* substream —
+//! the property the paper's hash families need (the same `(seed, k)` must
+//! regenerate the same projection tensor on every node, and in both the
+//! native and the AOT/PJRT hash paths).
+
+mod sampler;
+
+pub use sampler::{GaussianSampler, RademacherSampler, Sampler};
+
+/// SplitMix64 step — used for seeding and stream derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached spare normal deviate (polar method produces pairs).
+    spare_normal: Option<f64>,
+    /// Bit pool for cheap Rademacher draws.
+    bit_pool: u64,
+    bits_left: u32,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None, bit_pool: 0, bits_left: 0 }
+    }
+
+    /// Derive an independent substream keyed by `ids` (e.g. `[table, k, mode]`).
+    ///
+    /// Mixing is hash-based (SplitMix64 over the concatenation), so derived
+    /// streams are stable across program runs and node boundaries.
+    pub fn derive(seed: u64, ids: &[u64]) -> Self {
+        let mut state = seed ^ 0xD1B5_4A32_D192_ED03;
+        let mut acc = splitmix64(&mut state);
+        for &id in ids {
+            state ^= id.wrapping_mul(0x9E3779B97F4A7C15);
+            acc ^= splitmix64(&mut state).rotate_left(17);
+        }
+        Rng::new(acc)
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal deviate (Marsaglia polar method, pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Rademacher deviate: ±1 with probability 1/2 each (bit-pooled).
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.bits_left == 0 {
+            self.bit_pool = self.next_u64();
+            self.bits_left = 64;
+        }
+        let bit = self.bit_pool & 1;
+        self.bit_pool >>= 1;
+        self.bits_left -= 1;
+        if bit == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Fill a slice with Rademacher ±1 (f32).
+    pub fn fill_rademacher_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.rademacher();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed index in [0, n) with exponent `s` (inverse-CDF on the
+    /// precomputed harmonic weights is overkill; rejection sampling is fine
+    /// for workload generation).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse transform on H_{n,s} computed incrementally would be O(n);
+        // use the standard rejection sampler for the Zipf distribution.
+        debug_assert!(n > 0);
+        if n == 1 {
+            return 0;
+        }
+        let nf = n as f64;
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = ((nf + 1.0).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s));
+            let k = x.floor().max(1.0);
+            if k <= nf {
+                let ratio = (k / x).powf(s) * x / k;
+                if v * ratio <= 1.0 {
+                    return k as usize - 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(123);
+        let mut b = Rng::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn derive_is_stable_and_independent() {
+        let mut a1 = Rng::derive(7, &[1, 2, 3]);
+        let mut a2 = Rng::derive(7, &[1, 2, 3]);
+        let mut b = Rng::derive(7, &[1, 2, 4]);
+        assert_eq!(a1.next_u64(), a2.next_u64());
+        let mut collisions = 0;
+        for _ in 0..64 {
+            if a1.next_u64() == b.next_u64() {
+                collisions += 1;
+            }
+        }
+        assert!(collisions < 2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::new(42);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.uniform(2.0, 4.0);
+            assert!((2.0..4.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 3.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(42);
+        let n = 100_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            m1 += v;
+            m2 += v * v;
+            m4 += v * v * v * v;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.02);
+        assert!((m2 / nf - 1.0).abs() < 0.02);
+        assert!((m4 / nf - 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn rademacher_is_pm_one_and_balanced() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let mut pos = 0usize;
+        for _ in 0..n {
+            let v = r.rademacher();
+            assert!(v == 1.0 || v == -1.0);
+            if v == 1.0 {
+                pos += 1;
+            }
+        }
+        let frac = pos as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_to_head() {
+        let mut r = Rng::new(11);
+        let mut counts = [0usize; 100];
+        for _ in 0..50_000 {
+            counts[r.zipf(100, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[9]);
+        assert!(counts[9] > counts[60]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

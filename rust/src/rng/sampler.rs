@@ -1,0 +1,95 @@
+//! Distribution samplers with a common interface.
+//!
+//! The projection families (`projection::*`) are generic over the entry
+//! distribution: the paper defines CP/TT-Rademacher tensors (Definitions 6–7)
+//! and notes the Gaussian variants; both yield the same asymptotic law, and
+//! the benches ablate them.
+
+use super::Rng;
+
+/// A scalar distribution sampler that fills f32 buffers.
+pub trait Sampler: Send + Sync {
+    /// Draw a single deviate.
+    fn sample(&self, rng: &mut Rng) -> f32;
+
+    /// Fill a buffer with iid deviates.
+    fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng);
+        }
+    }
+
+    /// Variance of the distribution (used in space/variance accounting).
+    fn variance(&self) -> f64;
+
+    /// Display name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Rademacher ±1 entries (Definition 6/7 of the paper).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RademacherSampler;
+
+impl Sampler for RademacherSampler {
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f32 {
+        rng.rademacher()
+    }
+
+    fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        rng.fill_rademacher_f32(out);
+    }
+
+    fn variance(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "rademacher"
+    }
+}
+
+/// Standard normal entries (the CP/TT-Gaussian variants).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GaussianSampler;
+
+impl Sampler for GaussianSampler {
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f32 {
+        rng.normal() as f32
+    }
+
+    fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        rng.fill_normal_f32(out);
+    }
+
+    fn variance(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rademacher_fill_matches_scalar_path_distribution() {
+        let mut rng = Rng::new(1);
+        let mut buf = vec![0.0f32; 1000];
+        RademacherSampler.fill(&mut rng, &mut buf);
+        assert!(buf.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn gaussian_fill_mean_near_zero() {
+        let mut rng = Rng::new(2);
+        let mut buf = vec![0.0f32; 50_000];
+        GaussianSampler.fill(&mut rng, &mut buf);
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02);
+    }
+}

@@ -1,0 +1,300 @@
+//! PJRT execution engine: compile-once, execute-per-batch.
+
+use super::manifest::Manifest;
+use crate::error::{Error, Result};
+use crate::projection::{CpRademacher, TtRademacher};
+use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A batch of query tensors in the format the artifact expects.
+pub enum HashBatchInput<'a> {
+    /// CP-format queries (each rank = manifest `rank_in`).
+    Cp(&'a [CpTensor]),
+    /// TT-format queries (uniform rank = manifest `rank_in`).
+    Tt(&'a [TtTensor]),
+    /// Dense queries (flattened internally).
+    Dense(&'a [DenseTensor]),
+}
+
+impl HashBatchInput<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            HashBatchInput::Cp(v) => v.len(),
+            HashBatchInput::Tt(v) => v.len(),
+            HashBatchInput::Dense(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Compile-once PJRT engine over the artifact bundle.
+///
+/// Not `Sync`: PJRT executables are driven from whichever thread owns the
+/// engine (the coordinator gives the hash stage a dedicated owner thread).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and parse the manifest. Artifacts compile
+    /// lazily on first use (compilation is ~100 ms each).
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self.manifest.artifact(name)?.clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::Runtime(format!("load {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Force compilation of every artifact (warmup).
+    pub fn warmup(&mut self) -> Result<()> {
+        for name in self.manifest.names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("sync {name}: {e}")))?;
+        result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))
+    }
+
+    /// Hash a batch through one of the `cp_*` artifacts.
+    ///
+    /// `proj` supplies the K CP-Rademacher projection tensors (raw ±1
+    /// factors; the kernel applies the 1/√R of Definition 6 itself).
+    /// For `cp_e2lsh`, `b`/`w` are the offsets and bucket width; pass
+    /// `None` for `cp_srp`. Returns per-query K-code rows.
+    pub fn hash_cp(
+        &mut self,
+        name: &str,
+        batch: &[CpTensor],
+        proj: &CpRademacher,
+        e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.config.clone();
+        let (n, d, rin, rpj, k) = (cfg.n_modes, cfg.d, cfg.rank_in, cfg.rank_proj, cfg.k);
+        self.check_batch(batch.len(), cfg.batch)?;
+        for t in batch {
+            if t.dims() != cfg.dims() || t.rank() != rin {
+                return Err(Error::ShapeMismatch(format!(
+                    "cp batch item dims {:?} rank {} vs manifest dims {:?} rank {rin}",
+                    t.dims(),
+                    t.rank(),
+                    cfg.dims()
+                )));
+            }
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * n + 2);
+        // x factors: (B, d, rin) per mode; scale folded into mode 0.
+        for mode in 0..n {
+            let mut data = vec![0.0f32; cfg.batch * d * rin];
+            for (bi, t) in batch.iter().enumerate() {
+                let f = &t.factors[mode];
+                let s = if mode == 0 { t.scale } else { 1.0 };
+                for i in 0..d {
+                    for r in 0..rin {
+                        data[(bi * d + i) * rin + r] = s * f.get(i, r);
+                    }
+                }
+            }
+            inputs.push(lit3(&data, cfg.batch, d, rin)?);
+        }
+        // projection factors: (K, d, rpj) per mode, raw ±1.
+        for mode in 0..n {
+            let mut data = vec![0.0f32; k * d * rpj];
+            for (ki, t) in proj.tensors.iter().enumerate() {
+                let f = &t.factors[mode];
+                for i in 0..d {
+                    for r in 0..rpj {
+                        data[(ki * d + i) * rpj + r] = f.get(i, r);
+                    }
+                }
+            }
+            inputs.push(lit3(&data, k, d, rpj)?);
+        }
+        if let Some((b, w)) = e2lsh {
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            inputs.push(xla::Literal::vec1(&bf));
+            inputs.push(xla::Literal::scalar(w as f32));
+        }
+        let out = self.execute(name, &inputs)?;
+        split_codes(&out, batch.len(), k)
+    }
+
+    /// Hash a batch through one of the `tt_*` artifacts (TT queries +
+    /// TT-Rademacher projections; 1/√(R^{N−1}) applied in-kernel).
+    pub fn hash_tt(
+        &mut self,
+        name: &str,
+        batch: &[TtTensor],
+        proj: &TtRademacher,
+        e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.config.clone();
+        let (n, d, rin, rpj, k) = (cfg.n_modes, cfg.d, cfg.rank_in, cfg.rank_proj, cfg.k);
+        self.check_batch(batch.len(), cfg.batch)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * n + 2);
+        for mode in 0..n {
+            let (rp, rn) = tt_bonds(mode, n, rin);
+            let mut data = vec![0.0f32; cfg.batch * rp * d * rn];
+            for (bi, t) in batch.iter().enumerate() {
+                let core = &t.cores[mode];
+                if core.r0 != rp || core.r1 != rn || core.d != d {
+                    return Err(Error::ShapeMismatch(format!(
+                        "tt core {mode}: ({},{},{}) vs manifest ({rp},{d},{rn})",
+                        core.r0, core.d, core.r1
+                    )));
+                }
+                let s = if mode == 0 { t.scale } else { 1.0 };
+                for (j, &v) in core.data.iter().enumerate() {
+                    data[bi * rp * d * rn + j] = s * v;
+                }
+            }
+            inputs.push(lit4(&data, cfg.batch, rp, d, rn)?);
+        }
+        for mode in 0..n {
+            let (rp, rn) = tt_bonds(mode, n, rpj);
+            let mut data = vec![0.0f32; k * rp * d * rn];
+            for (ki, t) in proj.tensors.iter().enumerate() {
+                let core = &t.cores[mode];
+                for (j, &v) in core.data.iter().enumerate() {
+                    data[ki * rp * d * rn + j] = v;
+                }
+            }
+            inputs.push(lit4(&data, k, rp, d, rn)?);
+        }
+        if let Some((b, w)) = e2lsh {
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            inputs.push(xla::Literal::vec1(&bf));
+            inputs.push(xla::Literal::scalar(w as f32));
+        }
+        let out = self.execute(name, &inputs)?;
+        split_codes(&out, batch.len(), k)
+    }
+
+    /// Hash a dense batch through a `naive_*` artifact with an explicit
+    /// (K, D) projection matrix.
+    pub fn hash_dense(
+        &mut self,
+        name: &str,
+        batch: &[DenseTensor],
+        proj_rows: &[Vec<f32>],
+        e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.config.clone();
+        let dflat: usize = cfg.dims().iter().product();
+        let k = cfg.k;
+        self.check_batch(batch.len(), cfg.batch)?;
+        let mut xdata = vec![0.0f32; cfg.batch * dflat];
+        for (bi, t) in batch.iter().enumerate() {
+            if t.data.len() != dflat {
+                return Err(Error::ShapeMismatch(format!(
+                    "dense item has {} elements, manifest needs {dflat}",
+                    t.data.len()
+                )));
+            }
+            xdata[bi * dflat..(bi + 1) * dflat].copy_from_slice(&t.data);
+        }
+        let mut pdata = vec![0.0f32; k * dflat];
+        for (ki, row) in proj_rows.iter().enumerate() {
+            pdata[ki * dflat..(ki + 1) * dflat].copy_from_slice(row);
+        }
+        let mut inputs = vec![
+            xla::Literal::vec1(&xdata)
+                .reshape(&[cfg.batch as i64, dflat as i64])
+                .map_err(|e| Error::Runtime(e.to_string()))?,
+            xla::Literal::vec1(&pdata)
+                .reshape(&[k as i64, dflat as i64])
+                .map_err(|e| Error::Runtime(e.to_string()))?,
+        ];
+        if let Some((b, w)) = e2lsh {
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            inputs.push(xla::Literal::vec1(&bf));
+            inputs.push(xla::Literal::scalar(w as f32));
+        }
+        let out = self.execute(name, &inputs)?;
+        split_codes(&out, batch.len(), k)
+    }
+
+    fn check_batch(&self, got: usize, want: usize) -> Result<()> {
+        if got == 0 || got > want {
+            return Err(Error::InvalidParameter(format!(
+                "batch size {got} out of range 1..={want} (pad/split at the coordinator)"
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn tt_bonds(mode: usize, n: usize, rank: usize) -> (usize, usize) {
+    (
+        if mode == 0 { 1 } else { rank },
+        if mode == n - 1 { 1 } else { rank },
+    )
+}
+
+fn lit3(data: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[a as i64, b as i64, c as i64])
+        .map_err(|e| Error::Runtime(e.to_string()))
+}
+
+fn lit4(data: &[f32], a: usize, b: usize, c: usize, d: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[a as i64, b as i64, c as i64, d as i64])
+        .map_err(|e| Error::Runtime(e.to_string()))
+}
+
+/// Slice the (B_manifest, K) i32 output literal into `n_real` code rows.
+fn split_codes(out: &xla::Literal, n_real: usize, k: usize) -> Result<Vec<Vec<i32>>> {
+    let flat: Vec<i32> = out
+        .to_vec::<i32>()
+        .map_err(|e| Error::Runtime(format!("output to_vec<i32>: {e}")))?;
+    Ok((0..n_real).map(|b| flat[b * k..(b + 1) * k].to_vec()).collect())
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Canonical serving shapes (mirrors `aot.CONFIG`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestConfig {
+    pub n_modes: usize,
+    pub d: usize,
+    pub rank_in: usize,
+    pub rank_proj: usize,
+    pub k: usize,
+    pub batch: usize,
+}
+
+impl ManifestConfig {
+    /// Mode dimensions as a vec (uniform d across modes).
+    pub fn dims(&self) -> Vec<usize> {
+        vec![self.d; self.n_modes]
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Parameter shapes in call order.
+    pub input_order: Vec<Vec<usize>>,
+    pub sha256: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest file.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse_str(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn parse_str(text: &str) -> Result<Manifest> {
+        let root = parse(text)?;
+        let cfg = root.get("config")?;
+        let config = ManifestConfig {
+            n_modes: cfg.get("n_modes")?.as_usize()?,
+            d: cfg.get("d")?.as_usize()?,
+            rank_in: cfg.get("rank_in")?.as_usize()?,
+            rank_proj: cfg.get("rank_proj")?.as_usize()?,
+            k: cfg.get("k")?.as_usize()?,
+            batch: cfg.get("batch")?.as_usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in root.get("artifacts")?.as_obj()? {
+            let input_order = entry
+                .get("input_order")?
+                .as_arr()?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: entry.get("file")?.as_str()?.to_string(),
+                    input_order,
+                    sha256: entry
+                        .get("sha256")
+                        .map(|j| j.as_str().unwrap_or("").to_string())
+                        .unwrap_or_default(),
+                },
+            );
+        }
+        Ok(Manifest { config, artifacts })
+    }
+
+    /// Fetch an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// Names of all artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Pretty JSON round-trip (for `tensorlsh info`).
+    pub fn summary(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "config".to_string(),
+            Json::Obj(BTreeMap::from([
+                ("n_modes".into(), Json::Num(self.config.n_modes as f64)),
+                ("d".into(), Json::Num(self.config.d as f64)),
+                ("rank_in".into(), Json::Num(self.config.rank_in as f64)),
+                ("rank_proj".into(), Json::Num(self.config.rank_proj as f64)),
+                ("k".into(), Json::Num(self.config.k as f64)),
+                ("batch".into(), Json::Num(self.config.batch as f64)),
+            ])),
+        );
+        obj.insert(
+            "artifacts".to_string(),
+            Json::Arr(self.names().iter().map(|n| Json::Str(n.to_string())).collect()),
+        );
+        Json::Obj(obj).to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "config": {"n_modes": 3, "d": 8, "rank_in": 2, "rank_proj": 2, "k": 4, "batch": 2},
+        "artifacts": {
+            "cp_srp": {
+                "file": "cp_srp.hlo.txt",
+                "inputs": {"x_factors": [[2, 8, 2]]},
+                "input_order": [[2, 8, 2], [2, 8, 2], [2, 8, 2], [4, 8, 2], [4, 8, 2], [4, 8, 2]],
+                "output": {"codes": [2, 4], "dtype": "i32"},
+                "sha256": "abc",
+                "bytes": 100
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.config.d, 8);
+        assert_eq!(m.config.dims(), vec![8, 8, 8]);
+        let a = m.artifact("cp_srp").unwrap();
+        assert_eq!(a.file, "cp_srp.hlo.txt");
+        assert_eq!(a.input_order.len(), 6);
+        assert_eq!(a.input_order[3], vec![4, 8, 2]);
+        assert!(m.artifact("nope").is_err());
+        assert!(m.summary().contains("cp_srp"));
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain the six families + projection entry.
+        if let Some(dir) = crate::runtime::find_artifact_dir(None) {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["cp_e2lsh", "tt_e2lsh", "cp_srp", "tt_srp", "naive_e2lsh", "naive_srp"] {
+                assert!(m.artifacts.contains_key(name), "missing {name}");
+            }
+        }
+    }
+}

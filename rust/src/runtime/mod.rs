@@ -1,0 +1,50 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 hash pipelines
+//! to HLO **text** under `artifacts/`; this module loads them with
+//! `HloModuleProto::from_text_file`, compiles once per artifact on the PJRT
+//! CPU client, and executes them from the serving hot path. Python is never
+//! on the request path.
+//!
+//! The projection parameters are *inputs* to the HLO functions, so the Rust
+//! side regenerates them with the same seeded RNG as the native hash path —
+//! the two paths are numerically interchangeable (verified in
+//! `rust/tests/runtime_hlo.rs`).
+
+mod engine;
+mod manifest;
+
+pub use engine::{HashBatchInput, PjrtEngine};
+pub use manifest::{ArtifactMeta, Manifest, ManifestConfig};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: explicit arg, `TENSOR_LSH_ARTIFACTS` env
+/// var, or walk up from CWD looking for `artifacts/manifest.json`.
+pub fn find_artifact_dir(explicit: Option<&str>) -> Option<std::path::PathBuf> {
+    if let Some(dir) = explicit {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+        return None;
+    }
+    if let Ok(env) = std::env::var("TENSOR_LSH_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    for _ in 0..5 {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    None
+}

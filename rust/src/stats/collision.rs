@@ -1,0 +1,93 @@
+//! Analytic collision probabilities — the laws Theorems 4/6/8/10 transfer
+//! from E2LSH [11] and SRP [6] to the tensorized families.
+
+use super::normal::{normal_cdf, normal_pdf};
+
+/// E2LSH collision probability `p(r; w)` (Eq. 3.4 / 4.17 / 4.33):
+///
+/// `p(r) = ∫₀ʷ (1/r)·f(t/r)·(1 − t/w) dt`, `f` the folded-normal density.
+///
+/// Closed form (Datar et al. [11]):
+/// `p(r) = 1 − 2Φ(−w/r) − (2r/(√(2π)·w))·(1 − e^{−w²/(2r²)})`.
+pub fn e2lsh_collision_prob(r: f64, w: f64) -> f64 {
+    assert!(w > 0.0, "bucket width must be positive");
+    if r <= 0.0 {
+        return 1.0;
+    }
+    let c = w / r;
+    let p = 1.0 - 2.0 * normal_cdf(-c)
+        - (2.0 / ((2.0 * std::f64::consts::PI).sqrt() * c)) * (1.0 - (-c * c / 2.0).exp());
+    p.clamp(0.0, 1.0)
+}
+
+/// The same probability by adaptive quadrature of Eq. 3.4 directly —
+/// a cross-check used in tests and the F1 harness.
+pub fn e2lsh_collision_prob_quadrature(r: f64, w: f64) -> f64 {
+    if r <= 0.0 {
+        return 1.0;
+    }
+    let f = |t: f64| (2.0 * normal_pdf(t / r) / r) * (1.0 - t / w);
+    super::adaptive_simpson(&f, 0.0, w, 1e-12).clamp(0.0, 1.0)
+}
+
+/// SRP collision probability (Eq. 3.2 / 4.58 / 4.81): `1 − θ/π` for
+/// cosine similarity `cos θ = s`.
+pub fn srp_collision_prob(cosine: f64) -> f64 {
+    let s = cosine.clamp(-1.0, 1.0);
+    1.0 - s.acos() / std::f64::consts::PI
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_quadrature() {
+        for &w in &[1.0, 2.0, 4.0, 8.0] {
+            for &r in &[0.1, 0.5, 1.0, 2.0, 5.0, 20.0] {
+                let a = e2lsh_collision_prob(r, w);
+                let b = e2lsh_collision_prob_quadrature(r, w);
+                assert!((a - b).abs() < 1e-8, "w={w} r={r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn e2lsh_prob_monotone_decreasing_in_r() {
+        let w = 4.0;
+        let mut prev = 1.0;
+        for i in 1..200 {
+            let r = i as f64 * 0.1;
+            let p = e2lsh_collision_prob(r, w);
+            assert!(p <= prev + 1e-12, "not monotone at r={r}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn e2lsh_limits() {
+        assert!((e2lsh_collision_prob(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!(e2lsh_collision_prob(1e-6, 4.0) > 0.999);
+        assert!(e2lsh_collision_prob(1e6, 4.0) < 1e-4);
+    }
+
+    #[test]
+    fn srp_known_values() {
+        assert!((srp_collision_prob(1.0) - 1.0).abs() < 1e-12);
+        assert!((srp_collision_prob(-1.0) - 0.0).abs() < 1e-12);
+        assert!((srp_collision_prob(0.0) - 0.5).abs() < 1e-12);
+        // cos 60° = 0.5 -> θ = π/3 -> p = 2/3
+        assert!((srp_collision_prob(0.5) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn srp_monotone_increasing_in_cosine() {
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let c = -1.0 + 2.0 * i as f64 / 100.0;
+            let p = srp_collision_prob(c);
+            assert!(p >= prev - 1e-12);
+            prev = p;
+        }
+    }
+}

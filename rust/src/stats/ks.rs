@@ -1,0 +1,84 @@
+//! Kolmogorov–Smirnov goodness-of-fit test (one-sample).
+
+use super::normal::normal_cdf;
+
+/// KS statistic of `samples` against an arbitrary CDF.
+pub fn ks_statistic_with_cdf(samples: &[f64], cdf: &dyn Fn(f64) -> f64) -> f64 {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in xs.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// KS statistic against the standard normal — the F3 experiment's metric for
+/// Theorems 3/5 (⟨P,X⟩/‖X‖_F → N(0,1)).
+pub fn ks_statistic_normal(samples: &[f64]) -> f64 {
+    ks_statistic_with_cdf(samples, &normal_cdf)
+}
+
+/// Asymptotic KS p-value via the Kolmogorov distribution
+/// `Q(λ) = 2 Σ_{k≥1} (−1)^{k−1} e^{−2k²λ²}` with the usual finite-n
+/// refinement `λ = (√n + 0.12 + 0.11/√n)·D`.
+pub fn ks_p_value(d: f64, n: usize) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let sn = (n as f64).sqrt();
+    let lambda = (sn + 0.12 + 0.11 / sn) * d;
+    let mut sum = 0.0;
+    let mut sign = 1.0;
+    for k in 1..=100 {
+        let term = (-2.0 * (k as f64) * (k as f64) * lambda * lambda).exp();
+        sum += sign * term;
+        sign = -sign;
+        if term < 1e-12 {
+            break;
+        }
+    }
+    (2.0 * sum).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn normal_samples_pass() {
+        let mut rng = Rng::new(60);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let d = ks_statistic_normal(&xs);
+        assert!(d < 0.025, "D={d}");
+        assert!(ks_p_value(d, xs.len()) > 0.01);
+    }
+
+    #[test]
+    fn uniform_samples_fail_against_normal() {
+        let mut rng = Rng::new(61);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let d = ks_statistic_normal(&xs);
+        assert!(d > 0.05, "D={d}");
+        assert!(ks_p_value(d, xs.len()) < 1e-6);
+    }
+
+    #[test]
+    fn uniform_samples_pass_against_uniform_cdf() {
+        let mut rng = Rng::new(62);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.next_f64()).collect();
+        let d = ks_statistic_with_cdf(&xs, &|x| x.clamp(0.0, 1.0));
+        assert!(d < 0.025, "D={d}");
+    }
+
+    #[test]
+    fn p_value_decreases_with_d() {
+        assert!(ks_p_value(0.01, 1000) > ks_p_value(0.05, 1000));
+        assert!(ks_p_value(0.05, 1000) > ks_p_value(0.2, 1000));
+    }
+}

@@ -1,0 +1,135 @@
+//! Statistical substrate: collision laws, normal CDF, goodness-of-fit tests
+//! and confidence intervals used by the theory-validation experiments.
+
+mod collision;
+mod ks;
+mod normal;
+
+pub use collision::{e2lsh_collision_prob, e2lsh_collision_prob_quadrature, srp_collision_prob};
+pub use ks::{ks_p_value, ks_statistic_normal, ks_statistic_with_cdf};
+pub use normal::{erf, normal_cdf, normal_pdf};
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Standardized central moments (skewness, excess kurtosis).
+pub fn skew_kurtosis(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    let n = xs.len() as f64;
+    if n < 3.0 {
+        return (0.0, 0.0);
+    }
+    let (mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0);
+    for &x in xs {
+        let d = x - m;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    let sd = m2.sqrt();
+    if sd == 0.0 {
+        return (0.0, 0.0);
+    }
+    (m3 / (sd * sd * sd), m4 / (m2 * m2) - 3.0)
+}
+
+/// Wilson score interval for a binomial proportion at normal quantile `z`
+/// (z = 1.96 for 95%). Returns (lo, hi).
+pub fn wilson_interval(successes: usize, n: usize, z: f64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let nf = n as f64;
+    let p = successes as f64 / nf;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = (z / denom) * ((p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt());
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Adaptive Simpson quadrature on [a, b].
+pub fn adaptive_simpson(f: &dyn Fn(f64) -> f64, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson(f: &dyn Fn(f64) -> f64, a: f64, fa: f64, b: f64, fb: f64) -> (f64, f64, f64) {
+        let m = 0.5 * (a + b);
+        let fm = f(m);
+        ((b - a) / 6.0 * (fa + 4.0 * fm + fb), m, fm)
+    }
+    fn recurse(
+        f: &dyn Fn(f64) -> f64,
+        a: f64,
+        fa: f64,
+        b: f64,
+        fb: f64,
+        whole: f64,
+        m: f64,
+        fm: f64,
+        tol: f64,
+        depth: usize,
+    ) -> f64 {
+        let (left, lm, flm) = simpson(f, a, fa, m, fm);
+        let (right, rm, frm) = simpson(f, m, fm, b, fb);
+        if depth == 0 || (left + right - whole).abs() <= 15.0 * tol {
+            left + right + (left + right - whole) / 15.0
+        } else {
+            recurse(f, a, fa, m, fm, left, lm, flm, tol / 2.0, depth - 1)
+                + recurse(f, m, fm, b, fb, right, rm, frm, tol / 2.0, depth - 1)
+        }
+    }
+    let (fa, fb) = (f(a), f(b));
+    let (whole, m, fm) = simpson(f, a, fa, b, fb);
+    recurse(f, a, fa, b, fb, whole, m, fm, tol, 40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_known() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wilson_contains_p_hat_and_shrinks() {
+        let (lo1, hi1) = wilson_interval(50, 100, 1.96);
+        assert!(lo1 < 0.5 && 0.5 < hi1);
+        let (lo2, hi2) = wilson_interval(5000, 10000, 1.96);
+        assert!(hi2 - lo2 < hi1 - lo1);
+    }
+
+    #[test]
+    fn simpson_integrates_polynomials_exactly() {
+        let v = adaptive_simpson(&|x| x * x * x, 0.0, 2.0, 1e-12);
+        assert!((v - 4.0).abs() < 1e-10);
+        let v = adaptive_simpson(&|x| (-x * x / 2.0).exp(), -8.0, 8.0, 1e-12);
+        assert!((v - (2.0 * std::f64::consts::PI).sqrt()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn skew_kurtosis_of_symmetric_uniformish() {
+        let xs: Vec<f64> = (0..10001).map(|i| i as f64 / 10000.0).collect();
+        let (sk, ku) = skew_kurtosis(&xs);
+        assert!(sk.abs() < 1e-10);
+        assert!((ku - (-1.2)).abs() < 0.01); // uniform excess kurtosis = -6/5
+    }
+}

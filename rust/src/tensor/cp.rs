@@ -1,0 +1,298 @@
+//! CP/PARAFAC format tensor (Definition 4) and CP-Rademacher generation
+//! (Definition 6).
+
+use super::dense::DenseTensor;
+use super::tt::{TtCore, TtTensor};
+use crate::error::{Error, Result};
+use crate::rng::{Rng, Sampler};
+
+/// A d×R factor matrix, row-major (row = mode index, column = rank).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Factor {
+    pub d: usize,
+    pub r: usize,
+    pub data: Vec<f32>,
+}
+
+impl Factor {
+    pub fn zeros(d: usize, r: usize) -> Self {
+        Factor { d, r, data: vec![0.0; d * r] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.r + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.r + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.r..(i + 1) * self.r]
+    }
+
+    /// Column `j` as a fresh vector.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.d).map(|i| self.get(i, j)).collect()
+    }
+}
+
+/// Tensor in CP decomposition format: `X = scale · Σ_r a_r⁽¹⁾ ∘ … ∘ a_r⁽ᴺ⁾`.
+///
+/// The extra `scale` carries normalizations like the `1/√R` of
+/// CP-Rademacher projection tensors without touching the factors.
+#[derive(Clone, Debug)]
+pub struct CpTensor {
+    pub factors: Vec<Factor>,
+    pub scale: f32,
+}
+
+impl CpTensor {
+    /// Construct, validating consistent rank across modes.
+    pub fn new(factors: Vec<Factor>) -> Result<Self> {
+        if factors.is_empty() {
+            return Err(Error::InvalidParameter("CP tensor needs ≥1 mode".into()));
+        }
+        let r = factors[0].r;
+        if factors.iter().any(|f| f.r != r) {
+            return Err(Error::ShapeMismatch("CP factor ranks differ".into()));
+        }
+        Ok(CpTensor { factors, scale: 1.0 })
+    }
+
+    /// IID Gaussian factors — a generic random low-rank tensor (workloads).
+    pub fn random_gaussian(rng: &mut Rng, dims: &[usize], rank: usize) -> Self {
+        let factors = dims
+            .iter()
+            .map(|&d| {
+                let mut f = Factor::zeros(d, rank);
+                rng.fill_normal_f32(&mut f.data);
+                f
+            })
+            .collect();
+        CpTensor { factors, scale: 1.0 }
+    }
+
+    /// CP-distributed random tensor with entries from `sampler` and the
+    /// 1/√R normalization of Definition 6 (`CP_Rad(R)` / `CP_N(R)`).
+    pub fn random_projection(
+        rng: &mut Rng,
+        dims: &[usize],
+        rank: usize,
+        sampler: &dyn Sampler,
+    ) -> Self {
+        let factors = dims
+            .iter()
+            .map(|&d| {
+                let mut f = Factor::zeros(d, rank);
+                sampler.fill(rng, &mut f.data);
+                f
+            })
+            .collect();
+        CpTensor { factors, scale: 1.0 / (rank as f32).sqrt() }
+    }
+
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Mode dimensions.
+    pub fn dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.d).collect()
+    }
+
+    /// CP rank R.
+    pub fn rank(&self) -> usize {
+        self.factors[0].r
+    }
+
+    /// Stored parameter count (`O(NdR)` — the Tables 1–2 space column).
+    pub fn param_count(&self) -> usize {
+        self.factors.iter().map(|f| f.data.len()).sum()
+    }
+
+    /// Materialize to dense (O(R·d^N); reference/test path).
+    pub fn materialize(&self) -> DenseTensor {
+        let dims = self.dims();
+        let mut out = DenseTensor::zeros(&dims);
+        let r = self.rank();
+        let n = self.order();
+        let mut idx = vec![0usize; n];
+        for flat in 0..out.data.len() {
+            let mut acc = 0.0f64;
+            for s in 0..r {
+                let mut term = 1.0f64;
+                for (ax, f) in self.factors.iter().enumerate() {
+                    term *= f.get(idx[ax], s) as f64;
+                }
+                acc += term;
+            }
+            out.data[flat] = (acc * self.scale as f64) as f32;
+            for ax in (0..n).rev() {
+                idx[ax] += 1;
+                if idx[ax] < dims[ax] {
+                    break;
+                }
+                idx[ax] = 0;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm without materializing: ‖X‖² = scale²·Σ_{r,s} Π_n
+    /// (A⁽ⁿ⁾ᵀA⁽ⁿ⁾)[r,s] — O(NdR²).
+    pub fn frob_norm(&self) -> f64 {
+        let r = self.rank();
+        let mut had = vec![1.0f64; r * r];
+        for f in &self.factors {
+            // Gram = A^T A, accumulated in f64.
+            for a in 0..r {
+                for b in 0..r {
+                    let mut g = 0.0f64;
+                    for i in 0..f.d {
+                        g += f.get(i, a) as f64 * f.get(i, b) as f64;
+                    }
+                    had[a * r + b] *= g;
+                }
+            }
+        }
+        let sum: f64 = had.iter().sum();
+        (self.scale as f64).abs() * sum.max(0.0).sqrt()
+    }
+
+    /// Convert to TT format exactly: bond ranks = CP rank R, middle cores are
+    /// diagonal stacks `Gₙ[r, i, r'] = δ_{rr'}·A⁽ⁿ⁾[i, r]` — O(NdR²) space.
+    pub fn to_tt(&self) -> TtTensor {
+        let n = self.order();
+        let r = self.rank();
+        let mut cores = Vec::with_capacity(n);
+        for (ax, f) in self.factors.iter().enumerate() {
+            let (r0, r1) = (
+                if ax == 0 { 1 } else { r },
+                if ax == n - 1 { 1 } else { r },
+            );
+            let mut core = TtCore::zeros(r0, f.d, r1);
+            for i in 0..f.d {
+                for s in 0..r {
+                    let v = f.get(i, s);
+                    match (ax == 0, ax == n - 1) {
+                        (true, true) => {
+                            // order-1 tensor: sum over rank collapses here
+                            let cur = core.get(0, i, 0);
+                            core.set(0, i, 0, cur + v);
+                        }
+                        (true, false) => core.set(0, i, s, v),
+                        (false, true) => core.set(s, i, 0, v),
+                        (false, false) => core.set(s, i, s, v),
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        TtTensor { cores, scale: self.scale }
+    }
+
+    /// CP sum: concatenate rank terms (folds both scales into the first
+    /// factor so the result has scale 1). `alpha*self + beta*other`.
+    pub fn add_scaled(&self, alpha: f32, other: &CpTensor, beta: f32) -> Result<CpTensor> {
+        super::check_same_shape(&self.dims(), &other.dims())?;
+        let n = self.order();
+        let mut factors = Vec::with_capacity(n);
+        for ax in 0..n {
+            let (fa, fb) = (&self.factors[ax], &other.factors[ax]);
+            let mut f = Factor::zeros(fa.d, fa.r + fb.r);
+            let (sa, sb) = if ax == 0 {
+                (alpha * self.scale, beta * other.scale)
+            } else {
+                (1.0, 1.0)
+            };
+            for i in 0..fa.d {
+                for j in 0..fa.r {
+                    f.set(i, j, sa * fa.get(i, j));
+                }
+                for j in 0..fb.r {
+                    f.set(i, fa.r + j, sb * fb.get(i, j));
+                }
+            }
+            factors.push(f);
+        }
+        Ok(CpTensor { factors, scale: 1.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSampler, RademacherSampler};
+
+    #[test]
+    fn rank_one_materialize_known() {
+        // X = a ∘ b with a=[1,2], b=[3,4,5]
+        let mut fa = Factor::zeros(2, 1);
+        fa.data = vec![1.0, 2.0];
+        let mut fb = Factor::zeros(3, 1);
+        fb.data = vec![3.0, 4.0, 5.0];
+        let t = CpTensor::new(vec![fa, fb]).unwrap();
+        let d = t.materialize();
+        assert_eq!(d.data, vec![3.0, 4.0, 5.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn frob_norm_matches_materialized() {
+        let mut rng = Rng::new(10);
+        let t = CpTensor::random_gaussian(&mut rng, &[4, 5, 3], 3);
+        let d = t.materialize();
+        assert!((t.frob_norm() - d.frob_norm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn projection_scale_applied() {
+        let mut rng = Rng::new(11);
+        let t = CpTensor::random_projection(&mut rng, &[3, 3], 4, &RademacherSampler);
+        assert!((t.scale - 0.5).abs() < 1e-7);
+        assert!(t.factors.iter().all(|f| f.data.iter().all(|&v| v == 1.0 || v == -1.0)));
+        let g = CpTensor::random_projection(&mut rng, &[3, 3], 4, &GaussianSampler);
+        assert!(g.factors[0].data.iter().any(|&v| v.abs() > 1e-4 && v.abs() != 1.0));
+    }
+
+    #[test]
+    fn to_tt_preserves_entries() {
+        let mut rng = Rng::new(12);
+        for dims in [vec![3usize, 4], vec![3, 4, 2], vec![2, 3, 2, 3]] {
+            let t = CpTensor::random_gaussian(&mut rng, &dims, 3);
+            let tt = t.to_tt();
+            let (a, b) = (t.materialize(), tt.materialize());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_scaled_matches_dense() {
+        let mut rng = Rng::new(13);
+        let a = CpTensor::random_gaussian(&mut rng, &[3, 4, 2], 2);
+        let b = CpTensor::random_gaussian(&mut rng, &[3, 4, 2], 3);
+        let s = a.add_scaled(2.0, &b, -0.5).unwrap();
+        assert_eq!(s.rank(), 5);
+        let mut expect = a.materialize();
+        expect.scale(2.0);
+        expect.axpy(-0.5, &b.materialize()).unwrap();
+        let got = s.materialize();
+        for (x, y) in got.data.iter().zip(&expect.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn new_validates_ranks() {
+        let fa = Factor::zeros(2, 2);
+        let fb = Factor::zeros(3, 3);
+        assert!(CpTensor::new(vec![fa, fb]).is_err());
+        assert!(CpTensor::new(vec![]).is_err());
+    }
+}

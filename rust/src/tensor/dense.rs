@@ -1,0 +1,217 @@
+//! Dense row-major N-dimensional tensor.
+
+use super::{numel, strides};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Dense row-major tensor of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl DenseTensor {
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        DenseTensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    /// Build from shape + flat data.
+    pub fn from_data(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if data.len() != numel(shape) {
+            return Err(Error::ShapeMismatch(format!(
+                "from_data: shape {:?} needs {} elements, got {}",
+                shape,
+                numel(shape),
+                data.len()
+            )));
+        }
+        Ok(DenseTensor { shape: shape.to_vec(), data })
+    }
+
+    /// Build elementwise from multi-index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> f32) -> Self {
+        let mut t = DenseTensor::zeros(shape);
+        let n = t.data.len();
+        let mut idx = vec![0usize; shape.len()];
+        for flat in 0..n {
+            t.data[flat] = f(&idx);
+            // advance multi-index (row-major)
+            for ax in (0..shape.len()).rev() {
+                idx[ax] += 1;
+                if idx[ax] < shape[ax] {
+                    break;
+                }
+                idx[ax] = 0;
+            }
+        }
+        t
+    }
+
+    /// IID standard normal entries.
+    pub fn random_gaussian(rng: &mut Rng, shape: &[usize]) -> Self {
+        let mut t = DenseTensor::zeros(shape);
+        rng.fill_normal_f32(&mut t.data);
+        t
+    }
+
+    /// Flat offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let st = strides(&self.shape);
+        idx.iter().zip(&st).map(|(i, s)| i * s).sum()
+    }
+
+    /// Element access by multi-index.
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn get_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.offset(idx);
+        &mut self.data[o]
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry| (the paper's ‖X‖_max).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Elementwise `self + alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &DenseTensor) -> Result<()> {
+        super::check_same_shape(&self.shape, &other.shape)?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Mode-n unfolding as an f64 matrix of shape (dₙ, D/dₙ).
+    ///
+    /// Columns are indexed by the remaining indices in row-major order with
+    /// mode n removed — the convention CP-ALS and TT-SVD below rely on.
+    pub fn unfold_mode(&self, mode: usize) -> Matrix {
+        let n = self.shape.len();
+        assert!(mode < n);
+        let dn = self.shape[mode];
+        let rest = self.data.len() / dn;
+        let st = strides(&self.shape);
+        let mut m = Matrix::zeros(dn, rest);
+        // Iterate all elements; compute (row=idx[mode], col=rank of remaining).
+        let mut idx = vec![0usize; n];
+        for flat in 0..self.data.len() {
+            let mut col = 0usize;
+            for ax in 0..n {
+                if ax == mode {
+                    continue;
+                }
+                col = col * self.shape[ax] + idx[ax];
+            }
+            m[(idx[mode], col)] = self.data[flat] as f64;
+            let _ = st; // strides kept for clarity; flat order matches idx walk
+            for ax in (0..n).rev() {
+                idx[ax] += 1;
+                if idx[ax] < self.shape[ax] {
+                    break;
+                }
+                idx[ax] = 0;
+            }
+        }
+        m
+    }
+
+    /// Reshape (same numel) — returns a view-copy with the new shape.
+    pub fn reshape(&self, shape: &[usize]) -> Result<DenseTensor> {
+        if numel(shape) != self.data.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        Ok(DenseTensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Normalize to unit Frobenius norm (no-op on zero tensors).
+    pub fn normalize(&mut self) {
+        let n = self.frob_norm();
+        if n > 0.0 {
+            self.scale((1.0 / n) as f32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_get_roundtrip() {
+        let t = DenseTensor::from_fn(&[2, 3, 4], |idx| {
+            (idx[0] * 100 + idx[1] * 10 + idx[2]) as f32
+        });
+        assert_eq!(t.get(&[1, 2, 3]), 123.0);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+        assert_eq!(t.get(&[1, 0, 2]), 102.0);
+    }
+
+    #[test]
+    fn from_data_validates() {
+        assert!(DenseTensor::from_data(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(DenseTensor::from_data(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn unfold_mode_matches_definition() {
+        // 2x3 matrix as a tensor: unfold(0) == itself, unfold(1) == transpose.
+        let t = DenseTensor::from_data(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let m0 = t.unfold_mode(0);
+        assert_eq!(m0.data, vec![1., 2., 3., 4., 5., 6.]);
+        let m1 = t.unfold_mode(1);
+        assert_eq!(m1.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn unfold_preserves_norm() {
+        let mut rng = crate::rng::Rng::new(3);
+        let t = DenseTensor::random_gaussian(&mut rng, &[3, 4, 5]);
+        for mode in 0..3 {
+            let m = t.unfold_mode(mode);
+            assert!((m.frob_norm() - t.frob_norm()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = DenseTensor::from_data(&[2], vec![1.0, 2.0]).unwrap();
+        let b = DenseTensor::from_data(&[2], vec![3.0, -1.0]).unwrap();
+        a.axpy(2.0, &b).unwrap();
+        assert_eq!(a.data, vec![7.0, 0.0]);
+        assert!((a.frob_norm() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut rng = crate::rng::Rng::new(4);
+        let mut t = DenseTensor::random_gaussian(&mut rng, &[4, 4]);
+        t.normalize();
+        assert!((t.frob_norm() - 1.0).abs() < 1e-6);
+    }
+}

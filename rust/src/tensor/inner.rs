@@ -1,0 +1,340 @@
+//! Inner products between tensor formats — the hash hot path.
+//!
+//! Each pairing implements the algorithm behind the complexity claims of the
+//! paper's Tables 1–2 (via Remarks 1–2 / Rakhshan & Rabusseau):
+//!
+//! | pairing      | algorithm                         | cost                  |
+//! |--------------|-----------------------------------|-----------------------|
+//! | cp · cp      | Hadamard product of per-mode Grams| `O(Nd·max{R,R̂}²)`     |
+//! | tt · tt      | transfer-matrix sweep             | `O(Nd·max{R,R̂}³)`     |
+//! | cp · tt      | delta-structured transfer sweep   | `O(Nd·max{R,R̂}³)`     |
+//! | dense · dense| flat dot product                  | `O(d^N)`              |
+//! | dense · cp   | sequential mode contraction       | `O(R̂·d^N)`            |
+//! | dense · tt   | sequential core contraction       | `O(R̂²·d^N)`           |
+//!
+//! All accumulation is f64; inputs are f32 tensors.
+
+use super::cp::CpTensor;
+use super::dense::DenseTensor;
+use super::tt::TtTensor;
+
+/// ⟨X, Y⟩ for dense tensors: flat dot product.
+pub fn dense_dense(a: &DenseTensor, b: &DenseTensor) -> f64 {
+    debug_assert_eq!(a.shape, b.shape);
+    let mut acc = 0.0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+/// ⟨X, Y⟩ for CP tensors via the Hadamard product of per-mode Gram matrices:
+/// `Σ_{r,s} Π_n (A⁽ⁿ⁾ᵀ B⁽ⁿ⁾)[r,s]` — `O(Nd·RaRb)` = `O(Nd·max{R,R̂}²)`.
+pub fn cp_cp(a: &CpTensor, b: &CpTensor) -> f64 {
+    let (ra, rb) = (a.rank(), b.rank());
+    // Stack buffers for the common small-rank case (no allocation on the
+    // re-ranking hot path); heap fallback for very high ranks.
+    const STACK: usize = 256;
+    if ra * rb <= STACK {
+        let mut had = [1.0f64; STACK];
+        let mut gram = [0.0f64; STACK];
+        let m = ra * rb;
+        for (fa, fb) in a.factors.iter().zip(&b.factors) {
+            gram[..m].iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..fa.d {
+                let ar = fa.row(i);
+                let br = fb.row(i);
+                for (p, &av) in ar.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let av = av as f64;
+                    let grow = &mut gram[p * rb..(p + 1) * rb];
+                    for (g, &bv) in grow.iter_mut().zip(br) {
+                        *g += av * bv as f64;
+                    }
+                }
+            }
+            for (h, g) in had[..m].iter_mut().zip(&gram[..m]) {
+                *h *= *g;
+            }
+        }
+        let sum: f64 = had[..m].iter().sum();
+        return sum * a.scale as f64 * b.scale as f64;
+    }
+    let mut had = vec![1.0f64; ra * rb];
+    let mut gram = vec![0.0f64; ra * rb];
+    for (fa, fb) in a.factors.iter().zip(&b.factors) {
+        gram.iter_mut().for_each(|v| *v = 0.0);
+        // Gram = Faᵀ Fb, accumulated row-of-Fa × row-of-Fb (cache friendly:
+        // both rows are contiguous).
+        for i in 0..fa.d {
+            let ar = fa.row(i);
+            let br = fb.row(i);
+            for (p, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let av = av as f64;
+                let grow = &mut gram[p * rb..(p + 1) * rb];
+                for (q, &bv) in br.iter().enumerate() {
+                    grow[q] += av * bv as f64;
+                }
+            }
+        }
+        for (h, g) in had.iter_mut().zip(&gram) {
+            *h *= *g;
+        }
+    }
+    let sum: f64 = had.iter().sum();
+    sum * a.scale as f64 * b.scale as f64
+}
+
+/// ⟨X, Y⟩ for TT tensors via the transfer-matrix sweep:
+/// `M ← Σ_i (Gₐ[:,i,:] ⊗ G_b[:,i,:])ᵀ M` — `O(Nd·r²·r̂ + Nd·r·r̂²)`.
+pub fn tt_tt(a: &TtTensor, b: &TtTensor) -> f64 {
+    // M[p, q]: bond-p of a × bond-q of b. Starts 1×1 = [1].
+    let mut m = vec![1.0f64];
+    let (mut pa, mut pb) = (1usize, 1usize);
+    for (ca, cb) in a.cores.iter().zip(&b.cores) {
+        let (na, nb) = (ca.r1, cb.r1);
+        // tmp[i, q, p'] = Σ_p m[p, q] · ca[p, i, p']
+        let mut tmp = vec![0.0f64; ca.d * pb * na];
+        for p in 0..pa {
+            for q in 0..pb {
+                let mv = m[p * pb + q];
+                if mv == 0.0 {
+                    continue;
+                }
+                for i in 0..ca.d {
+                    let base = (i * pb + q) * na;
+                    for ap in 0..na {
+                        tmp[base + ap] += mv * ca.get(p, i, ap) as f64;
+                    }
+                }
+            }
+        }
+        // m'[p', q'] = Σ_{i, q} tmp[i, q, p'] · cb[q, i, q']
+        let mut next = vec![0.0f64; na * nb];
+        for i in 0..ca.d {
+            for q in 0..pb {
+                let tbase = (i * pb + q) * na;
+                for qp in 0..nb {
+                    let bv = cb.get(q, i, qp) as f64;
+                    if bv == 0.0 {
+                        continue;
+                    }
+                    for ap in 0..na {
+                        next[ap * nb + qp] += tmp[tbase + ap] * bv;
+                    }
+                }
+            }
+        }
+        m = next;
+        pa = na;
+        pb = nb;
+    }
+    m[0] * a.scale as f64 * b.scale as f64
+}
+
+/// ⟨X, Y⟩ for CP × TT without converting: exploit the delta structure of the
+/// CP-as-TT cores. Maintains M ∈ R^{R̂×r}:
+/// `M'[s, q'] = Σ_{i, q} A⁽ⁿ⁾[i, s] · M[s, q] · G⁽ⁿ⁾[q, i, q']`
+/// — `O(Nd·R̂·r²)` = `O(Nd·max{R,R̂}³)`.
+pub fn cp_tt(a: &CpTensor, b: &TtTensor) -> f64 {
+    let ra = a.rank();
+    let mut m: Vec<f64> = vec![1.0; ra]; // bond dim of b starts at 1
+    let mut pb = 1usize;
+    for (fa, cb) in a.factors.iter().zip(&b.cores) {
+        let nb = cb.r1;
+        let mut next = vec![0.0f64; ra * nb];
+        for i in 0..fa.d {
+            let arow = fa.row(i);
+            for q in 0..pb {
+                for qp in 0..nb {
+                    let bv = cb.get(q, i, qp) as f64;
+                    if bv == 0.0 {
+                        continue;
+                    }
+                    for (s, &av) in arow.iter().enumerate() {
+                        next[s * nb + qp] += av as f64 * m[s * pb + q] * bv;
+                    }
+                }
+            }
+        }
+        m = next;
+        pb = nb;
+    }
+    let sum: f64 = m.iter().sum();
+    sum * a.scale as f64 * b.scale as f64
+}
+
+/// ⟨X, P⟩ for dense × CP via simultaneous mode contraction:
+/// contract X's first mode with all R̂ columns at once, then sweep.
+/// Cost `O(R̂·d^N)` — first contraction dominates.
+pub fn dense_cp(x: &DenseTensor, p: &CpTensor) -> f64 {
+    let r = p.rank();
+    let dims = p.dims();
+    let n = dims.len();
+    // acc[s, rest]: per-rank partially contracted tensor, rest shrinks.
+    let d0 = dims[0];
+    let rest0 = x.data.len() / d0;
+    let f0 = &p.factors[0];
+    let mut acc = vec![0.0f64; r * rest0];
+    for i in 0..d0 {
+        let xrow = &x.data[i * rest0..(i + 1) * rest0];
+        let frow = f0.row(i);
+        for (s, &fv) in frow.iter().enumerate() {
+            if fv == 0.0 {
+                continue;
+            }
+            let fv = fv as f64;
+            let arow = &mut acc[s * rest0..(s + 1) * rest0];
+            for (av, &xv) in arow.iter_mut().zip(xrow) {
+                *av += fv * xv as f64;
+            }
+        }
+    }
+    let mut rest = rest0;
+    for ax in 1..n {
+        let d = dims[ax];
+        let new_rest = rest / d;
+        let f = &p.factors[ax];
+        let mut next = vec![0.0f64; r * new_rest];
+        for s in 0..r {
+            for i in 0..d {
+                let fv = f.get(i, s) as f64;
+                if fv == 0.0 {
+                    continue;
+                }
+                let abase = s * rest + i * new_rest;
+                let nbase = s * new_rest;
+                for j in 0..new_rest {
+                    next[nbase + j] += fv * acc[abase + j];
+                }
+            }
+        }
+        acc = next;
+        rest = new_rest;
+    }
+    debug_assert_eq!(rest, 1);
+    let sum: f64 = (0..r).map(|s| acc[s]).sum();
+    sum * p.scale as f64
+}
+
+/// ⟨X, T⟩ for dense × TT via sequential core contraction:
+/// `W₀ = X`, `Wₙ[b, rest] = Σ_{a,i} Gₙ[a,i,b]·Wₙ₋₁[a, i, rest]`.
+/// Cost `O(r̂²·d^N)` — first contractions dominate.
+pub fn dense_tt(x: &DenseTensor, t: &TtTensor) -> f64 {
+    let dims = t.dims();
+    let n = dims.len();
+    // w: (bond, rest) row-major, starts (1, d^N) = X.
+    let mut w: Vec<f64> = x.data.iter().map(|&v| v as f64).collect();
+    let mut bond = 1usize;
+    let mut rest = w.len();
+    for ax in 0..n {
+        let core = &t.cores[ax];
+        let d = dims[ax];
+        let new_rest = rest / d;
+        let nb = core.r1;
+        let mut next = vec![0.0f64; nb * new_rest];
+        for a in 0..bond {
+            for i in 0..d {
+                let wbase = (a * d + i) * new_rest;
+                for b in 0..nb {
+                    let gv = core.get(a, i, b) as f64;
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    let nbase = b * new_rest;
+                    for j in 0..new_rest {
+                        next[nbase + j] += gv * w[wbase + j];
+                    }
+                }
+            }
+        }
+        w = next;
+        bond = nb;
+        rest = new_rest;
+    }
+    debug_assert_eq!(bond * rest, 1);
+    w[0] * t.scale as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn close(a: f64, b: f64) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn cp_cp_matches_dense() {
+        let mut rng = Rng::new(30);
+        let a = CpTensor::random_gaussian(&mut rng, &[4, 5, 3], 3);
+        let mut b = CpTensor::random_gaussian(&mut rng, &[4, 5, 3], 2);
+        b.scale = 0.7;
+        close(cp_cp(&a, &b), dense_dense(&a.materialize(), &b.materialize()));
+    }
+
+    #[test]
+    fn tt_tt_matches_dense() {
+        let mut rng = Rng::new(31);
+        let a = TtTensor::random_gaussian(&mut rng, &[4, 3, 5], 3);
+        let mut b = TtTensor::random_gaussian(&mut rng, &[4, 3, 5], 2);
+        b.scale = -1.3;
+        close(tt_tt(&a, &b), dense_dense(&a.materialize(), &b.materialize()));
+    }
+
+    #[test]
+    fn cp_tt_matches_dense_and_conversion() {
+        let mut rng = Rng::new(32);
+        let a = CpTensor::random_gaussian(&mut rng, &[3, 4, 2, 3], 3);
+        let b = TtTensor::random_gaussian(&mut rng, &[3, 4, 2, 3], 2);
+        let direct = cp_tt(&a, &b);
+        close(direct, dense_dense(&a.materialize(), &b.materialize()));
+        // also agree with converting CP→TT then tt_tt
+        close(direct, tt_tt(&a.to_tt(), &b));
+    }
+
+    #[test]
+    fn dense_cp_matches_dense() {
+        let mut rng = Rng::new(33);
+        let x = DenseTensor::random_gaussian(&mut rng, &[4, 3, 5]);
+        let mut p = CpTensor::random_gaussian(&mut rng, &[4, 3, 5], 3);
+        p.scale = 0.25;
+        close(dense_cp(&x, &p), dense_dense(&x, &p.materialize()));
+    }
+
+    #[test]
+    fn dense_tt_matches_dense() {
+        let mut rng = Rng::new(34);
+        let x = DenseTensor::random_gaussian(&mut rng, &[4, 3, 5]);
+        let mut t = TtTensor::random_gaussian(&mut rng, &[4, 3, 5], 3);
+        t.scale = 2.0;
+        close(dense_tt(&x, &t), dense_dense(&x, &t.materialize()));
+    }
+
+    #[test]
+    fn inner_with_self_is_norm_squared() {
+        let mut rng = Rng::new(35);
+        let a = CpTensor::random_gaussian(&mut rng, &[5, 4, 3], 2);
+        close(cp_cp(&a, &a), a.frob_norm().powi(2));
+        let t = TtTensor::random_gaussian(&mut rng, &[5, 4, 3], 2);
+        close(tt_tt(&t, &t), t.frob_norm().powi(2));
+    }
+
+    #[test]
+    fn order_one_tensors() {
+        // N=1 edge case: everything is a plain dot product.
+        let mut rng = Rng::new(36);
+        let x = DenseTensor::random_gaussian(&mut rng, &[7]);
+        let p = CpTensor::random_gaussian(&mut rng, &[7], 2);
+        let t = TtTensor::random_gaussian(&mut rng, &[7], 1);
+        close(dense_cp(&x, &p), dense_dense(&x, &p.materialize()));
+        close(dense_tt(&x, &t), dense_dense(&x, &t.materialize()));
+        close(cp_tt(&p, &t), dense_dense(&p.materialize(), &t.materialize()));
+    }
+}

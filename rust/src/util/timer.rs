@@ -1,0 +1,99 @@
+//! Micro-benchmark timing helpers (criterion is unavailable offline; the
+//! bench binaries use this instead: warmup + adaptive iteration count +
+//! robust statistics).
+
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Median nanoseconds per iteration.
+    pub median_ns: f64,
+    /// Mean nanoseconds per iteration.
+    pub mean_ns: f64,
+    /// Min / max observed per-iteration time across samples.
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: usize,
+}
+
+impl Timing {
+    /// Throughput in ops/sec at the median.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Benchmark a closure: warm up, pick an iteration count that makes each
+/// sample ≥ `min_sample_ms`, then take `samples` samples and report robust
+/// statistics. The closure should return something observable to prevent
+/// dead-code elimination; we black-box it.
+pub fn bench<T>(mut f: impl FnMut() -> T, samples: usize, min_sample_ms: f64) -> Timing {
+    // Warmup + calibration.
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+        if elapsed >= min_sample_ms || iters >= 1 << 24 {
+            break;
+        }
+        let growth = if elapsed <= 0.01 {
+            16.0
+        } else {
+            (min_sample_ms / elapsed * 1.3).max(2.0)
+        };
+        iters = ((iters as f64) * growth).ceil() as usize;
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = per_iter[per_iter.len() / 2];
+    let mean_ns = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    Timing {
+        median_ns,
+        mean_ns,
+        min_ns: per_iter[0],
+        max_ns: *per_iter.last().unwrap(),
+        samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Quick one-shot wall-clock measurement (for long operations).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_nanos() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let t = bench(|| (0..100).sum::<u64>(), 5, 0.5);
+        assert!(t.median_ns > 0.0);
+        assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
+        assert!(t.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ns) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(ns >= 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic corpora shaped like the paper's §1 motivating applications.
+
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+/// What a generated dataset should look like.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Mode dimensions of every item.
+    pub dims: Vec<usize>,
+    /// Number of items.
+    pub n_items: usize,
+    /// Representation rank of generated items (CP/TT formats).
+    pub rank: usize,
+    /// Number of latent clusters (items are cluster centroid + noise).
+    pub n_clusters: usize,
+    /// Noise scale relative to the centroid norm.
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DatasetSpec {
+    fn default() -> Self {
+        DatasetSpec {
+            dims: vec![16, 16, 16],
+            n_items: 1000,
+            rank: 4,
+            n_clusters: 20,
+            noise: 0.3,
+            seed: 0,
+        }
+    }
+}
+
+/// Generic clustered low-rank corpus in CP format.
+///
+/// Items are `centroid_c + noise·Z` with both components CP tensors; cluster
+/// structure gives the ANN benchmarks non-trivial neighborhoods. Returns the
+/// items and their cluster labels.
+pub fn low_rank_corpus(spec: &DatasetSpec) -> (Vec<AnyTensor>, Vec<usize>) {
+    let mut rng = Rng::derive(spec.seed, &[0x10_0C0_11]);
+    let centroids: Vec<CpTensor> = (0..spec.n_clusters)
+        .map(|_| {
+            let mut c = CpTensor::random_gaussian(&mut rng, &spec.dims, spec.rank);
+            let n = c.frob_norm().max(1e-30);
+            c.scale = (1.0 / n) as f32;
+            c
+        })
+        .collect();
+    let mut items = Vec::with_capacity(spec.n_items);
+    let mut labels = Vec::with_capacity(spec.n_items);
+    for _ in 0..spec.n_items {
+        let c = rng.below(spec.n_clusters);
+        let z = CpTensor::random_gaussian(&mut rng, &spec.dims, spec.rank);
+        let zn = z.frob_norm().max(1e-30);
+        let item = centroids[c]
+            .add_scaled(1.0, &z, (spec.noise / zn) as f32)
+            .expect("same dims");
+        items.push(AnyTensor::Cp(item));
+        labels.push(c);
+    }
+    (items, labels)
+}
+
+/// Procedural "image patch" corpus (order-3: height × width × channel-band),
+/// mimicking near-duplicate detection: each item is a smooth base pattern
+/// plus small perturbations; near-duplicates share the base.
+pub fn image_patches(
+    rng: &mut Rng,
+    n_groups: usize,
+    dups_per_group: usize,
+    side: usize,
+    bands: usize,
+    perturb: f64,
+) -> (Vec<AnyTensor>, Vec<usize>) {
+    let dims = [side, side, bands];
+    let mut items = Vec::new();
+    let mut labels = Vec::new();
+    for g in 0..n_groups {
+        // Smooth base: sum of a few separable sinusoid-like rank-1 terms.
+        let base = smooth_patch(rng, side, bands);
+        for _ in 0..dups_per_group {
+            let mut img = base.clone();
+            let mut noise = DenseTensor::random_gaussian(rng, &dims);
+            noise.normalize();
+            img.axpy(perturb as f32, &noise).expect("same dims");
+            img.normalize();
+            items.push(AnyTensor::Dense(img));
+            labels.push(g);
+        }
+    }
+    (items, labels)
+}
+
+fn smooth_patch(rng: &mut Rng, side: usize, bands: usize) -> DenseTensor {
+    let terms = 3;
+    let mut out = DenseTensor::zeros(&[side, side, bands]);
+    for _ in 0..terms {
+        let (fx, fy) = (rng.uniform(0.5, 3.0), rng.uniform(0.5, 3.0));
+        let (px, py) = (rng.uniform(0.0, 6.28), rng.uniform(0.0, 6.28));
+        let amp = rng.uniform(0.5, 1.5);
+        let band_w: Vec<f64> = (0..bands).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for i in 0..side {
+            for j in 0..side {
+                let v = amp
+                    * (fx * i as f64 / side as f64 * 6.28 + px).sin()
+                    * (fy * j as f64 / side as f64 * 6.28 + py).cos();
+                for (b, &bw) in band_w.iter().enumerate() {
+                    *out.get_mut(&[i, j, b]) += (v * bw) as f32;
+                }
+            }
+        }
+    }
+    out.normalize();
+    out
+}
+
+/// Synthetic EEG-like epochs (order-3: channel × time × frequency-band) in
+/// TT format: epochs cluster around a small set of prototype "brain states"
+/// (prototype + low-rank noise, TT addition keeps everything in TT format).
+pub fn eeg_epochs(
+    rng: &mut Rng,
+    n_items: usize,
+    channels: usize,
+    time: usize,
+    bands: usize,
+    rank: usize,
+) -> Vec<AnyTensor> {
+    let dims = [channels, time, bands];
+    let n_states = (n_items / 40).clamp(2, 32);
+    let prototypes: Vec<TtTensor> = (0..n_states)
+        .map(|_| {
+            let mut t = TtTensor::random_gaussian(rng, &dims, rank);
+            let n = t.frob_norm().max(1e-30);
+            t.scale = (1.0 / n) as f32;
+            t
+        })
+        .collect();
+    (0..n_items)
+        .map(|_| {
+            let proto = &prototypes[rng.below(n_states)];
+            let noise = TtTensor::random_gaussian(rng, &dims, rank);
+            let nn = noise.frob_norm().max(1e-30);
+            let mut t = proto
+                .add_scaled(1.0, &noise, (0.35 / nn) as f32)
+                .expect("same dims");
+            let n = t.frob_norm().max(1e-30);
+            t.scale /= n as f32;
+            AnyTensor::Tt(t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_items_have_cluster_structure() {
+        let spec = DatasetSpec {
+            dims: vec![6, 6, 6],
+            n_items: 60,
+            rank: 2,
+            n_clusters: 3,
+            noise: 0.2,
+            seed: 42,
+        };
+        let (items, labels) = low_rank_corpus(&spec);
+        assert_eq!(items.len(), 60);
+        // Same-cluster items should be closer on average than cross-cluster.
+        let mut same = (0.0, 0usize);
+        let mut diff = (0.0, 0usize);
+        for i in 0..20 {
+            for j in i + 1..20 {
+                let d = items[i].distance(&items[j]).unwrap();
+                if labels[i] == labels[j] {
+                    same = (same.0 + d, same.1 + 1);
+                } else {
+                    diff = (diff.0 + d, diff.1 + 1);
+                }
+            }
+        }
+        if same.1 > 0 && diff.1 > 0 {
+            assert!(same.0 / same.1 as f64 <= diff.0 / diff.1 as f64);
+        }
+    }
+
+    #[test]
+    fn image_patches_group_structure() {
+        let mut rng = Rng::new(7);
+        let (items, labels) = image_patches(&mut rng, 4, 3, 8, 2, 0.1);
+        assert_eq!(items.len(), 12);
+        // Duplicates of the same group are very similar.
+        let cos_same = items[0].cosine(&items[1]).unwrap();
+        assert!(cos_same > 0.9, "{cos_same}");
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[0], labels[3 * 1]);
+    }
+
+    #[test]
+    fn eeg_epochs_are_unit_tt() {
+        let mut rng = Rng::new(8);
+        let items = eeg_epochs(&mut rng, 5, 4, 10, 3, 2);
+        assert_eq!(items.len(), 5);
+        for it in &items {
+            assert_eq!(it.format(), "tt");
+            assert!((it.frob_norm() - 1.0).abs() < 1e-3);
+        }
+    }
+}

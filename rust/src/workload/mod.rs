@@ -1,0 +1,42 @@
+//! Synthetic workloads: corpora, controlled-similarity pairs, query traces.
+//!
+//! The paper has no empirical section, so these generators are designed to
+//! exercise exactly the quantities its theory speaks about: pairs at a
+//! *controlled* Euclidean distance `r` (for the p(r) law of Theorems 4/6),
+//! pairs at a controlled cosine similarity (Theorems 8/10), and low-rank
+//! corpora shaped like the applications §1 motivates (image patches, EEG
+//! epochs) for the ANN benchmarks.
+
+mod datasets;
+mod pairs;
+
+pub use datasets::{eeg_epochs, image_patches, low_rank_corpus, DatasetSpec};
+pub use pairs::{pair_at_cosine, pair_at_distance, PairFormat};
+
+use crate::rng::Rng;
+
+/// Zipf-distributed query trace over `n` corpus items: returns `len` indices.
+pub fn zipf_trace(rng: &mut Rng, n: usize, len: usize, exponent: f64) -> Vec<usize> {
+    (0..len).map(|_| rng.zipf(n, exponent)).collect()
+}
+
+/// Uniform query trace.
+pub fn uniform_trace(rng: &mut Rng, n: usize, len: usize) -> Vec<usize> {
+    (0..len).map(|_| rng.below(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_in_range() {
+        let mut rng = Rng::new(70);
+        for i in zipf_trace(&mut rng, 50, 200, 1.1) {
+            assert!(i < 50);
+        }
+        for i in uniform_trace(&mut rng, 50, 200) {
+            assert!(i < 50);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Pairs of tensors at controlled distance / cosine similarity.
+//!
+//! The collision-law experiments (F1/F2) need, for each target `r` or `cosθ`,
+//! many independent pairs `(X, Y)` hitting the target *exactly* — otherwise
+//! the measured curve is smeared. Construction is done in dense space
+//! (exact norms), then optionally re-expressed in CP form; CP re-expression
+//! is exact because both constructions are linear combinations of CP tensors
+//! (`CpTensor::add_scaled` concatenates rank terms).
+
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor};
+
+/// Output format for generated pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairFormat {
+    Dense,
+    /// CP format; the i32 is the rank of each random component.
+    Cp(usize),
+}
+
+/// Generate `(X, Y)` with `‖X − Y‖_F = r` exactly (up to f32 rounding) and
+/// `‖X‖_F = 1`.
+///
+/// `X = U/‖U‖`, `Y = X + r·V/‖V‖` with `U, V` independent random tensors.
+pub fn pair_at_distance(
+    rng: &mut Rng,
+    dims: &[usize],
+    r: f64,
+    format: PairFormat,
+) -> (AnyTensor, AnyTensor) {
+    match format {
+        PairFormat::Dense => {
+            let mut x = DenseTensor::random_gaussian(rng, dims);
+            x.normalize();
+            let mut v = DenseTensor::random_gaussian(rng, dims);
+            v.normalize();
+            let mut y = x.clone();
+            y.axpy(r as f32, &v).expect("same dims");
+            (AnyTensor::Dense(x), AnyTensor::Dense(y))
+        }
+        PairFormat::Cp(rank) => {
+            let u = CpTensor::random_gaussian(rng, dims, rank);
+            let un = u.frob_norm().max(1e-30);
+            let mut x = u;
+            x.scale = (1.0 / un) as f32;
+            let v = CpTensor::random_gaussian(rng, dims, rank);
+            let vn = v.frob_norm().max(1e-30);
+            let y = x
+                .add_scaled(1.0, &v, (r / vn) as f32)
+                .expect("same dims");
+            (AnyTensor::Cp(x), AnyTensor::Cp(y))
+        }
+    }
+}
+
+/// Generate `(X, Y)` with cosine similarity exactly `cos_theta` and unit
+/// norms: `Y = cosθ·X + sinθ·Z⊥` where `Z⊥` is `Z` orthogonalized against
+/// `X` (exact Gram–Schmidt in the tensor inner-product space).
+pub fn pair_at_cosine(
+    rng: &mut Rng,
+    dims: &[usize],
+    cos_theta: f64,
+    format: PairFormat,
+) -> (AnyTensor, AnyTensor) {
+    let c = cos_theta.clamp(-1.0, 1.0);
+    let s = (1.0 - c * c).max(0.0).sqrt();
+    match format {
+        PairFormat::Dense => {
+            let mut x = DenseTensor::random_gaussian(rng, dims);
+            x.normalize();
+            let mut z = DenseTensor::random_gaussian(rng, dims);
+            // z ⟂ x
+            let mut dot = 0.0f64;
+            for (a, b) in z.data.iter().zip(&x.data) {
+                dot += *a as f64 * *b as f64;
+            }
+            z.axpy(-(dot as f32), &x).expect("same dims");
+            z.normalize();
+            let mut y = x.clone();
+            y.scale(c as f32);
+            y.axpy(s as f32, &z).expect("same dims");
+            (AnyTensor::Dense(x), AnyTensor::Dense(y))
+        }
+        PairFormat::Cp(rank) => {
+            let u = CpTensor::random_gaussian(rng, dims, rank);
+            let un = u.frob_norm().max(1e-30);
+            let mut x = u;
+            x.scale = (1.0 / un) as f32;
+            let z0 = CpTensor::random_gaussian(rng, dims, rank);
+            // Orthogonalize in CP form: z = z0 - <z0,x> x (rank grows by R̂).
+            let dot = crate::tensor::inner::cp_cp(&z0, &x);
+            let z = z0.add_scaled(1.0, &x, -dot as f32).expect("same dims");
+            let zn = z.frob_norm().max(1e-30);
+            let y = x
+                .add_scaled(c as f32, &z, (s / zn) as f32)
+                .expect("same dims");
+            (AnyTensor::Cp(x), AnyTensor::Cp(y))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, proptest};
+
+    #[test]
+    fn distance_pairs_hit_target() {
+        proptest("pair_at_distance", 24, |rng| {
+            let r = rng.uniform(0.05, 4.0);
+            let fmt = if rng.below(2) == 0 { PairFormat::Dense } else { PairFormat::Cp(2) };
+            let (x, y) = pair_at_distance(rng, &[4, 5, 3], r, fmt);
+            assert_close(x.distance(&y).unwrap(), r, 2e-3, 2e-3);
+            assert_close(x.frob_norm(), 1.0, 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn cosine_pairs_hit_target() {
+        proptest("pair_at_cosine", 24, |rng| {
+            let c = rng.uniform(-0.95, 0.95);
+            let fmt = if rng.below(2) == 0 { PairFormat::Dense } else { PairFormat::Cp(2) };
+            let (x, y) = pair_at_cosine(rng, &[4, 5, 3], c, fmt);
+            assert_close(x.cosine(&y).unwrap(), c, 5e-3, 5e-3);
+            assert_close(x.frob_norm(), 1.0, 1e-3, 1e-3);
+            assert_close(y.frob_norm(), 1.0, 5e-3, 5e-3);
+        });
+    }
+
+    #[test]
+    fn cp_pairs_stay_in_cp_format() {
+        let mut rng = Rng::new(80);
+        let (x, y) = pair_at_distance(&mut rng, &[3, 3, 3], 1.0, PairFormat::Cp(2));
+        assert_eq!(x.format(), "cp");
+        assert_eq!(y.format(), "cp");
+        // Y = X + r·V concatenates ranks: 2 + 2 = 4.
+        assert_eq!(y.rank(), 4);
+    }
+}

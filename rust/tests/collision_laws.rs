@@ -1,0 +1,127 @@
+//! Statistical integration tests: the theorems' collision laws and CLTs at
+//! moderate scale (the full-scale versions are the F1–F4 benches).
+
+use tensor_lsh::bench_harness::{
+    fig_collision_e2lsh, fig_collision_srp, fig_condition, fig_normality,
+};
+use tensor_lsh::lsh::{validity_report, TtSrp, TtSrpConfig};
+use tensor_lsh::lsh::HashFamily;
+use tensor_lsh::rng::Rng;
+use tensor_lsh::stats::{ks_statistic_normal, srp_collision_prob, wilson_interval};
+use tensor_lsh::workload::{pair_at_cosine, PairFormat};
+
+/// Theorem 4 / 6: measured collision curves track the analytic E2LSH law.
+#[test]
+fn e2lsh_collision_law_holds() {
+    let rows = fig_collision_e2lsh(&[10, 10, 10], 4, 4.0, 512, 8, 1234, PairFormat::Dense);
+    for row in &rows {
+        assert!(
+            (row.cp_rate - row.analytic).abs() < 0.06,
+            "CP-E2LSH off-law: {row:?}"
+        );
+        assert!(
+            (row.tt_rate - row.analytic).abs() < 0.06,
+            "TT-E2LSH off-law: {row:?}"
+        );
+    }
+    // Monotone decreasing empirical curve.
+    for w in rows.windows(2) {
+        assert!(w[1].cp_rate <= w[0].cp_rate + 0.03);
+    }
+}
+
+/// Theorem 8 / 10: measured SRP collision curves track 1 − θ/π.
+#[test]
+fn srp_collision_law_holds() {
+    let rows = fig_collision_srp(&[10, 10, 10], 4, 512, 8, 4321, PairFormat::Dense);
+    for row in &rows {
+        assert!(
+            (row.cp_rate - row.analytic).abs() < 0.06,
+            "CP-SRP off-law: {row:?}"
+        );
+        assert!(
+            (row.tt_rate - row.analytic).abs() < 0.06,
+            "TT-SRP off-law: {row:?}"
+        );
+    }
+    for w in rows.windows(2) {
+        assert!(w[1].cp_rate >= w[0].cp_rate - 0.03);
+    }
+}
+
+/// Theorem 3 / 5: KS statistic shrinks as the tensor grows.
+#[test]
+fn normality_improves_with_shape() {
+    let rows = fig_normality(&[4, 16], 3, 4, 2500, 99, None);
+    for fam in ["cp", "tt"] {
+        let small = rows.iter().find(|r| r.d == 4 && r.family == fam).unwrap();
+        let big = rows.iter().find(|r| r.d == 16 && r.family == fam).unwrap();
+        assert!(
+            big.ks <= small.ks + 0.01,
+            "{fam}: KS grew from {:.4} (d=4) to {:.4} (d=16)",
+            small.ks,
+            big.ks
+        );
+        assert!(big.ks < 0.05, "{fam}: KS too large at d=16: {}", big.ks);
+    }
+}
+
+/// Theorem 4 vs 6: the TT condition degrades much faster in R.
+#[test]
+fn validity_condition_separation() {
+    let rows = fig_condition(&[8, 8, 8], &[2, 8, 64], 2000, 7);
+    let growth = |get: fn(&tensor_lsh::bench_harness::ConditionRow) -> f64| {
+        get(rows.last().unwrap()) / get(&rows[0])
+    };
+    // For N=3 the TT/CP growth ratio is exactly cp_growth (√R^{N−1} vs √R):
+    assert!(growth(|r| r.tt_ratio) > 4.0 * growth(|r| r.cp_ratio));
+    // The structured report agrees with the raw ratios.
+    let rep = validity_report(&[8, 8, 8], 64);
+    assert!(!rep.tt_ok);
+}
+
+/// Per-hash independence: collisions across a K-bank are approximately
+/// Bernoulli — the binomial CI contains the analytic rate.
+#[test]
+fn bank_collisions_binomial() {
+    let dims = vec![10usize, 10, 10];
+    let k = 4000;
+    let fam = TtSrp::new(TtSrpConfig { dims: dims.clone(), rank: 4, k, seed: 55 });
+    let mut rng = Rng::new(56);
+    let cos = 0.7;
+    let (x, y) = pair_at_cosine(&mut rng, &dims, cos, PairFormat::Cp(2));
+    let (hx, hy) = (fam.hash(&x), fam.hash(&y));
+    let hits = hx.iter().zip(&hy).filter(|(a, b)| a == b).count();
+    let (lo, hi) = wilson_interval(hits, k, 2.58); // 99% CI
+    let expect = srp_collision_prob(cos);
+    assert!(
+        (lo - 0.02..=hi + 0.02).contains(&expect),
+        "analytic {expect:.4} outside CI [{lo:.4}, {hi:.4}]"
+    );
+}
+
+/// Gaussian-entry variants (CP_N / TT_N) also satisfy the normality law —
+/// the remark after Definitions 6–7.
+#[test]
+fn gaussian_variant_normality() {
+    use tensor_lsh::projection::{CpRademacher, Distribution, Projection, TtRademacher};
+    use tensor_lsh::tensor::{AnyTensor, CpTensor};
+    let dims = vec![10usize, 10, 10];
+    let mut rng = Rng::new(57);
+    let x = CpTensor::random_gaussian(&mut rng, &dims, 3);
+    let norm = x.frob_norm();
+    let xa = AnyTensor::Cp(x);
+    for which in ["cp", "tt"] {
+        let z: Vec<f64> = if which == "cp" {
+            CpRademacher::generate(58, &dims, 4, 3000, Distribution::Gaussian).project(&xa)
+        } else {
+            TtRademacher::generate(59, &dims, 4, 3000, Distribution::Gaussian).project(&xa)
+        };
+        let std: Vec<f64> = z.iter().map(|v| v / norm).collect();
+        let ks = ks_statistic_normal(&std);
+        // Product-of-Gaussians projections are leptokurtic; at N=3 the
+        // validity condition converges as D^(1/30), so KS plateaus ~0.05-0.07
+        // at feasible shapes. Assert the law approximately holds.
+        assert!(ks < 0.09, "{which}-gaussian KS {ks}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration tests: corpus → decomposition → hash families →
+//! index → coordinator, all through the public API.
+
+use std::sync::Arc;
+use tensor_lsh::bench_harness::{index_config, index_config_family};
+use tensor_lsh::config::{AppConfig, Family};
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::decomp::{cp_als, tt_svd, CpAlsOptions, TtSvdOptions};
+use tensor_lsh::index::{recall_at_k, LshIndex, Metric};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::tensor::{AnyTensor, CpTensor, DenseTensor};
+use tensor_lsh::workload::{eeg_epochs, image_patches, low_rank_corpus, DatasetSpec};
+
+/// Dense sensor data → CP-ALS ingestion → CP-SRP hashing must place the
+/// decomposed tensor in the same buckets as the dense original.
+#[test]
+fn decompose_then_hash_is_consistent() {
+    let mut rng = Rng::new(1);
+    let dims = vec![6usize, 7, 5];
+    let truth = CpTensor::random_gaussian(&mut rng, &dims, 2);
+    let dense = truth.materialize();
+
+    let cp = cp_als(&dense, &CpAlsOptions { rank: 3, max_iters: 80, tol: 1e-10, seed: 2 })
+        .expect("cp-als");
+    let tt = tt_svd(&dense, &TtSvdOptions { max_rank: 4, rel_tol: 1e-6 }).expect("tt-svd");
+
+    let fam = index_config_family(Family::Cp, Metric::Cosine, &dims, 4, 16, 4.0, 3);
+    let h_dense = fam.hash(&AnyTensor::Dense(dense.clone()));
+    let h_cp = fam.hash(&AnyTensor::Cp(cp));
+    let h_tt = fam.hash(&AnyTensor::Tt(tt));
+    // Near-exact reconstructions ⇒ nearly all sign bits agree.
+    let agree = |a: &Vec<i32>, b: &Vec<i32>| {
+        a.iter().zip(b).filter(|(x, y)| x == y).count()
+    };
+    assert!(agree(&h_dense, &h_cp) >= 15, "cp {:?} vs {:?}", h_cp, h_dense);
+    assert!(agree(&h_dense, &h_tt) >= 15, "tt {:?} vs {:?}", h_tt, h_dense);
+}
+
+/// Mixed-format corpus (dense + CP + TT) in one index.
+#[test]
+fn mixed_format_corpus_index() {
+    let mut rng = Rng::new(4);
+    let dims = vec![8usize, 8, 4];
+    let mut items: Vec<AnyTensor> = Vec::new();
+    let (patches, _) = image_patches(&mut rng, 10, 2, 8, 4, 0.1);
+    items.extend(patches); // dense
+    let (cp_items, _) = low_rank_corpus(&DatasetSpec {
+        dims: dims.clone(),
+        n_items: 40,
+        rank: 2,
+        n_clusters: 4,
+        noise: 0.3,
+        seed: 5,
+    });
+    items.extend(cp_items); // cp
+    items.extend(eeg_epochs(&mut rng, 40, 8, 8, 4, 2)); // tt
+
+    let cfg = index_config(Family::Tt, Metric::Cosine, dims, 4, 10, 8, 4.0, 6);
+    let index = LshIndex::build(&cfg, items).expect("build");
+    assert_eq!(index.len(), 100);
+    for qid in [0usize, 30, 70, 99] {
+        let res = index.search(index.item(qid), 1).expect("search");
+        assert_eq!(res[0].id, qid, "self-retrieval failed for {qid}");
+    }
+}
+
+/// The whole serving pipeline at once, CLI-config driven.
+#[test]
+fn config_to_coordinator_pipeline() {
+    let mut cfg = AppConfig::default();
+    for kv in ["dims=8,8,8", "n_items=300", "k=10", "l=8", "family=cp", "metric=cosine"] {
+        cfg.apply_override(kv).unwrap();
+    }
+    let spec = DatasetSpec {
+        dims: cfg.dims.clone(),
+        n_items: cfg.n_items,
+        rank: 2,
+        n_clusters: 10,
+        noise: 0.3,
+        seed: cfg.seed,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let icfg = index_config(
+        cfg.family,
+        cfg.metric,
+        cfg.dims.clone(),
+        cfg.rank_proj,
+        cfg.k,
+        cfg.l,
+        cfg.w,
+        cfg.seed,
+    );
+    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let queries: Vec<Query> = (0..50)
+        .map(|i| Query::new(i, index.item(i as usize % 300).clone(), 5))
+        .collect();
+    let (responses, snap) = Coordinator::serve_trace(
+        Arc::clone(&index),
+        CoordinatorConfig::default(),
+        HashBackend::Native,
+        queries,
+    )
+    .unwrap();
+    assert_eq!(responses.len(), 50);
+    assert_eq!(snap.queries, 50);
+    let self_hits = responses
+        .iter()
+        .filter(|r| r.results.first().map(|h| h.id) == Some(r.id as usize % 300))
+        .count();
+    assert!(self_hits >= 48, "self-retrieval {self_hits}/50");
+}
+
+/// Recall improves with tables on every metric/family combination.
+#[test]
+fn recall_improves_with_tables_all_families() {
+    let dims = vec![8usize, 8, 8];
+    let (items, _) = low_rank_corpus(&DatasetSpec {
+        dims: dims.clone(),
+        n_items: 250,
+        rank: 2,
+        n_clusters: 8,
+        noise: 0.3,
+        seed: 7,
+    });
+    let mut rng = Rng::new(8);
+    let qids: Vec<usize> = (0..10).map(|_| rng.below(items.len())).collect();
+    for family in [Family::Cp, Family::Tt] {
+        for metric in [Metric::Cosine, Metric::Euclidean] {
+            let mut recalls = Vec::new();
+            for l in [1usize, 10] {
+                let cfg =
+                    index_config(family, metric, dims.clone(), 4, 8, l, 4.0, 9);
+                let index = LshIndex::build(&cfg, items.clone()).unwrap();
+                let mut sum = 0.0;
+                for &qid in &qids {
+                    let approx = index.search(index.item(qid), 10).unwrap();
+                    let exact = index.exact_search(index.item(qid), 10).unwrap();
+                    sum += recall_at_k(&approx, &exact);
+                }
+                recalls.push(sum / qids.len() as f64);
+            }
+            assert!(
+                recalls[1] >= recalls[0] - 0.05,
+                "{family:?}/{metric:?}: recall L=1 {} vs L=10 {}",
+                recalls[0],
+                recalls[1]
+            );
+        }
+    }
+}
+
+/// Dense tensors round-trip through both decompositions with small error,
+/// and the hash-relevant quantities (norm, inner products) are preserved.
+#[test]
+fn decomposition_preserves_geometry() {
+    let mut rng = Rng::new(10);
+    let dims = vec![5usize, 6, 4];
+    let a = CpTensor::random_gaussian(&mut rng, &dims, 2).materialize();
+    let b = CpTensor::random_gaussian(&mut rng, &dims, 2).materialize();
+    let ta = tt_svd(&a, &TtSvdOptions::default()).unwrap();
+    let tb = tt_svd(&b, &TtSvdOptions::default()).unwrap();
+    let dense_inner = tensor_lsh::tensor::inner::dense_dense(&a, &b);
+    let tt_inner = tensor_lsh::tensor::inner::tt_tt(&ta, &tb);
+    assert!((dense_inner - tt_inner).abs() < 1e-2 * (1.0 + dense_inner.abs()));
+    assert!((ta.frob_norm() - a.frob_norm()).abs() < 1e-3);
+}
+
+/// The naive family's reshape contract: a tensor and its flattened view
+/// hash identically.
+#[test]
+fn naive_reshape_contract() {
+    let mut rng = Rng::new(11);
+    let dims = vec![4usize, 3, 5];
+    let x = DenseTensor::random_gaussian(&mut rng, &dims);
+    let flat = x.reshape(&[60]).unwrap();
+    let fam = index_config_family(Family::Naive, Metric::Cosine, &dims, 4, 8, 4.0, 12);
+    assert_eq!(
+        fam.hash(&AnyTensor::Dense(x)),
+        fam.hash(&AnyTensor::Dense(flat))
+    );
+}

@@ -1,0 +1,180 @@
+//! Property-based tests over the library's core invariants (seeded random
+//! inputs via `testutil::proptest`; failing seeds are reported for replay).
+
+use tensor_lsh::bench_harness::index_config_family;
+use tensor_lsh::config::Family;
+use tensor_lsh::index::{signature, Metric};
+use tensor_lsh::lsh::{CpSrp, CpSrpConfig, HashFamily};
+use tensor_lsh::stats;
+use tensor_lsh::tensor::{inner, AnyTensor, CpTensor, TtTensor};
+use tensor_lsh::testutil::{assert_close, proptest, random_any_tensor, random_dims};
+use tensor_lsh::workload::{pair_at_distance, PairFormat};
+
+/// ⟨·,·⟩ agrees across every format pairing with the dense ground truth.
+#[test]
+fn prop_inner_product_format_invariance() {
+    proptest("inner_format_invariance", 48, |rng| {
+        let dims = random_dims(rng, (1, 4), (2, 6));
+        let a = random_any_tensor(rng, &dims, 3);
+        let b = random_any_tensor(rng, &dims, 3);
+        let fast = a.inner(&b).unwrap();
+        let slow = inner::dense_dense(&a.materialize(), &b.materialize());
+        assert_close(fast, slow, 2e-3, 2e-3);
+    });
+}
+
+/// Norms: ‖X‖² == ⟨X, X⟩ in every format.
+#[test]
+fn prop_norm_is_self_inner() {
+    proptest("norm_self_inner", 48, |rng| {
+        let dims = random_dims(rng, (1, 4), (2, 6));
+        let x = random_any_tensor(rng, &dims, 3);
+        assert_close(x.frob_norm().powi(2), x.inner(&x).unwrap(), 2e-3, 2e-3);
+    });
+}
+
+/// CP→TT conversion preserves every entry.
+#[test]
+fn prop_cp_to_tt_exact() {
+    proptest("cp_to_tt", 32, |rng| {
+        let dims = random_dims(rng, (2, 4), (2, 5));
+        let rank = 1 + rng.below(3);
+        let cp = CpTensor::random_gaussian(rng, &dims, rank);
+        let (a, b) = (cp.materialize(), cp.to_tt().materialize());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    });
+}
+
+/// TT addition is exact (block-diagonal cores).
+#[test]
+fn prop_tt_add_exact() {
+    proptest("tt_add", 32, |rng| {
+        let dims = random_dims(rng, (1, 4), (2, 5));
+        let (ra, rb) = (1 + rng.below(3), 1 + rng.below(3));
+        let alpha = rng.uniform(-2.0, 2.0) as f32;
+        let beta = rng.uniform(-2.0, 2.0) as f32;
+        let a = TtTensor::random_gaussian(rng, &dims, ra);
+        let b = TtTensor::random_gaussian(rng, &dims, rb);
+        let s = a.add_scaled(alpha, &b, beta).unwrap();
+        let mut expect = a.materialize();
+        expect.scale(alpha);
+        expect.axpy(beta, &b.materialize()).unwrap();
+        for (x, y) in s.materialize().data.iter().zip(&expect.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    });
+}
+
+/// Hashing is deterministic and format-invariant for every family.
+#[test]
+fn prop_hash_determinism_and_format_invariance() {
+    proptest("hash_determinism", 24, |rng| {
+        let dims = random_dims(rng, (2, 3), (3, 6));
+        let family = match rng.below(3) {
+            0 => Family::Cp,
+            1 => Family::Tt,
+            _ => Family::Naive,
+        };
+        let metric = if rng.below(2) == 0 { Metric::Cosine } else { Metric::Euclidean };
+        let fam = index_config_family(family, metric, &dims, 3, 6, 4.0, rng.next_u64());
+        let cp = CpTensor::random_gaussian(rng, &dims, 2);
+        let variants = [
+            AnyTensor::Cp(cp.clone()),
+            AnyTensor::Tt(cp.to_tt()),
+            AnyTensor::Dense(cp.materialize()),
+        ];
+        let h0 = fam.hash(&variants[0]);
+        assert_eq!(h0.len(), 6);
+        for v in &variants {
+            assert_eq!(fam.hash(v), h0, "family {}", fam.name());
+        }
+    });
+}
+
+/// E2LSH shift invariance: hashing X and X+delta where ‖delta‖ ≪ w rarely
+/// changes more than a few codes (locality), while a large shift changes
+/// many (sensitivity).
+#[test]
+fn prop_e2lsh_locality() {
+    proptest("e2lsh_locality", 16, |rng| {
+        let dims = vec![8usize, 8, 8];
+        let fam = index_config_family(Family::Cp, Metric::Euclidean, &dims, 4, 64, 4.0, 77);
+        let (x, y_near) = pair_at_distance(rng, &dims, 0.05, PairFormat::Cp(2));
+        let (_, y_far) = pair_at_distance(rng, &dims, 50.0, PairFormat::Cp(2));
+        let hx = fam.hash(&x);
+        let near_diff = hx.iter().zip(fam.hash(&y_near)).filter(|(a, b)| **a != *b).count();
+        let far_diff = hx.iter().zip(fam.hash(&y_far)).filter(|(a, b)| **a != *b).count();
+        assert!(near_diff <= 8, "near pair changed {near_diff}/64 codes");
+        assert!(far_diff >= 32, "far pair changed only {far_diff}/64 codes");
+    });
+}
+
+/// Signatures: equal code vectors ⇒ equal signatures; perturbing any single
+/// code changes the signature.
+#[test]
+fn prop_signature_sensitivity() {
+    proptest("signature", 64, |rng| {
+        let len = 1 + rng.below(32);
+        let codes: Vec<i32> = (0..len).map(|_| rng.below(1000) as i32 - 500).collect();
+        let sig = signature(&codes);
+        assert_eq!(sig, signature(&codes));
+        let mut mutated = codes.clone();
+        let pos = rng.below(len);
+        mutated[pos] = mutated[pos].wrapping_add(1);
+        assert_ne!(sig, signature(&mutated));
+    });
+}
+
+/// Collision law sanity under random (r, w): closed form == quadrature,
+/// p monotone in r, and within [0, 1].
+#[test]
+fn prop_collision_law_consistency() {
+    proptest("collision_law", 64, |rng| {
+        let w = rng.uniform(0.5, 10.0);
+        let r = rng.uniform(0.01, 30.0);
+        let p = stats::e2lsh_collision_prob(r, w);
+        let q = stats::e2lsh_collision_prob_quadrature(r, w);
+        assert!((0.0..=1.0).contains(&p));
+        assert_close(p, q, 1e-6, 1e-8);
+        let p2 = stats::e2lsh_collision_prob(r * 1.3, w);
+        assert!(p2 <= p + 1e-12);
+    });
+}
+
+/// The banding identity: hashing with a band slice equals slicing the full
+/// bank's codes — the invariant the PJRT serving path relies on.
+#[test]
+fn prop_banding_identity() {
+    proptest("banding", 16, |rng| {
+        let dims = vec![6usize, 5, 4];
+        let full = CpSrp::new(CpSrpConfig { dims: dims.clone(), rank: 3, k: 12, seed: 31 });
+        let x = AnyTensor::Cp(CpTensor::random_gaussian(rng, &dims, 2));
+        let codes = full.hash(&x);
+        for band in 0..3 {
+            let band_fam =
+                tensor_lsh::lsh::SrpHasher::wrap(full.proj.band(band, 4), "cp");
+            assert_eq!(band_fam.hash(&x), codes[band * 4..(band + 1) * 4].to_vec());
+        }
+    });
+}
+
+/// Projection linearity: z(aX + bY) = a·z(X) + b·z(Y).
+#[test]
+fn prop_projection_linearity() {
+    proptest("proj_linearity", 24, |rng| {
+        let dims = random_dims(rng, (2, 3), (3, 5));
+        let fam = index_config_family(Family::Cp, Metric::Cosine, &dims, 3, 5, 4.0, 13);
+        let a = CpTensor::random_gaussian(rng, &dims, 2);
+        let b = CpTensor::random_gaussian(rng, &dims, 2);
+        let (ca, cb) = (rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0));
+        let s = a.add_scaled(ca as f32, &b, cb as f32).unwrap();
+        let za = fam.project(&AnyTensor::Cp(a));
+        let zb = fam.project(&AnyTensor::Cp(b));
+        let zs = fam.project(&AnyTensor::Cp(s));
+        for i in 0..5 {
+            assert_close(zs[i], ca * za[i] + cb * zb[i], 2e-3, 2e-3);
+        }
+    });
+}

@@ -1,0 +1,178 @@
+//! Integration: the AOT/PJRT hash path must agree with the native Rust path.
+//!
+//! These tests load the real `artifacts/` bundle (produced by
+//! `make artifacts`), execute the HLO through the PJRT CPU client, and
+//! compare codes against the pure-Rust implementation fed the *same* seeded
+//! projection parameters. Agreement is asserted at ≥ 99.5% of codes — the
+//! two paths accumulate in f64 (Rust) vs f32 (XLA), so a code that lands
+//! within ~1e-5 of a bucket boundary may legitimately differ.
+//!
+//! Skipped (with a notice) if `artifacts/` is missing.
+
+use tensor_lsh::lsh::{E2lshHasher, HashFamily, SrpHasher};
+use tensor_lsh::projection::{CpRademacher, Distribution, TtRademacher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::runtime::{find_artifact_dir, PjrtEngine};
+use tensor_lsh::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    match find_artifact_dir(None) {
+        Some(dir) => Some(PjrtEngine::new(&dir).expect("engine init")),
+        None => {
+            eprintln!("SKIP: artifacts/ not found — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn agreement(a: &[Vec<i32>], b: &[Vec<i32>]) -> f64 {
+    let total: usize = a.iter().map(|r| r.len()).sum();
+    let same: usize = a
+        .iter()
+        .zip(b)
+        .map(|(ra, rb)| ra.iter().zip(rb).filter(|(x, y)| x == y).count())
+        .sum();
+    same as f64 / total as f64
+}
+
+#[test]
+fn pjrt_cp_srp_matches_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let seed = 7u64;
+    let proj = CpRademacher::generate(seed, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    let native = SrpHasher::wrap(proj.clone(), "cp");
+    let mut rng = Rng::new(99);
+    let batch: Vec<CpTensor> = (0..cfg.batch)
+        .map(|_| CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in))
+        .collect();
+    let pjrt_codes = engine.hash_cp("cp_srp", &batch, &proj, None).expect("pjrt hash");
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native.hash(&AnyTensor::Cp(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_codes, &native_codes);
+    assert!(agree >= 0.995, "cp_srp agreement {agree}");
+}
+
+#[test]
+fn pjrt_cp_e2lsh_matches_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let seed = 11u64;
+    let w = 4.0;
+    let proj = CpRademacher::generate(seed, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    let native = E2lshHasher::wrap(proj.clone(), w, seed, "cp");
+    let mut rng = Rng::new(100);
+    let batch: Vec<CpTensor> = (0..17) // partial batch exercises padding
+        .map(|_| CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in))
+        .collect();
+    let pjrt_codes = engine
+        .hash_cp("cp_e2lsh", &batch, &proj, Some((&native.b, w)))
+        .expect("pjrt hash");
+    assert_eq!(pjrt_codes.len(), 17);
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native.hash(&AnyTensor::Cp(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_codes, &native_codes);
+    assert!(agree >= 0.995, "cp_e2lsh agreement {agree}");
+}
+
+#[test]
+fn pjrt_tt_families_match_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let seed = 13u64;
+    let proj = TtRademacher::generate(seed, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    let mut rng = Rng::new(101);
+    let batch: Vec<TtTensor> = (0..cfg.batch)
+        .map(|_| TtTensor::random_gaussian(&mut rng, &dims, cfg.rank_in))
+        .collect();
+
+    // SRP
+    let native_srp = SrpHasher::wrap(proj.clone(), "tt");
+    let pjrt_srp = engine.hash_tt("tt_srp", &batch, &proj, None).expect("tt_srp");
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native_srp.hash(&AnyTensor::Tt(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_srp, &native_codes);
+    assert!(agree >= 0.995, "tt_srp agreement {agree}");
+
+    // E2LSH
+    let w = 4.0;
+    let native_e2 = E2lshHasher::wrap(proj.clone(), w, seed, "tt");
+    let pjrt_e2 = engine
+        .hash_tt("tt_e2lsh", &batch, &proj, Some((&native_e2.b, w)))
+        .expect("tt_e2lsh");
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native_e2.hash(&AnyTensor::Tt(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_e2, &native_codes);
+    assert!(agree >= 0.995, "tt_e2lsh agreement {agree}");
+}
+
+#[test]
+fn pjrt_naive_families_match_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let seed = 17u64;
+    let proj = tensor_lsh::projection::GaussianDense::generate(seed, &dims, cfg.k);
+    let mut rng = Rng::new(102);
+    let batch: Vec<DenseTensor> = (0..8)
+        .map(|_| {
+            DenseTensor::random_gaussian(&mut rng, &[dims.iter().product::<usize>()])
+        })
+        .collect();
+
+    let native_srp = SrpHasher::wrap(proj.clone(), "naive");
+    let pjrt_srp = engine
+        .hash_dense("naive_srp", &batch, &proj.rows, None)
+        .expect("naive_srp");
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native_srp.hash(&AnyTensor::Dense(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_srp, &native_codes);
+    assert!(agree >= 0.995, "naive_srp agreement {agree}");
+
+    let w = 4.0;
+    let native_e2 = E2lshHasher::wrap(proj.clone(), w, seed, "naive");
+    let pjrt_e2 = engine
+        .hash_dense("naive_e2lsh", &batch, &proj.rows, Some((&native_e2.b, w)))
+        .expect("naive_e2lsh");
+    let native_codes: Vec<Vec<i32>> = batch
+        .iter()
+        .map(|t| native_e2.hash(&AnyTensor::Dense(t.clone())))
+        .collect();
+    let agree = agreement(&pjrt_e2, &native_codes);
+    assert!(agree >= 0.995, "naive_e2lsh agreement {agree}");
+}
+
+#[test]
+fn pjrt_batch_validation() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.manifest().config.clone();
+    let dims = cfg.dims();
+    let proj = CpRademacher::generate(1, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    // Empty batch rejected.
+    assert!(engine.hash_cp("cp_srp", &[], &proj, None).is_err());
+    // Oversized batch rejected.
+    let mut rng = Rng::new(5);
+    let too_many: Vec<CpTensor> = (0..cfg.batch + 1)
+        .map(|_| CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in))
+        .collect();
+    assert!(engine.hash_cp("cp_srp", &too_many, &proj, None).is_err());
+    // Wrong rank rejected.
+    let bad = vec![CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in + 1)];
+    assert!(engine.hash_cp("cp_srp", &bad, &proj, None).is_err());
+    // Unknown artifact rejected.
+    let ok = vec![CpTensor::random_gaussian(&mut rng, &dims, cfg.rank_in)];
+    assert!(engine.hash_cp("nonexistent", &ok, &proj, None).is_err());
+}
