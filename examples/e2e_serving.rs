@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use tensor_lsh::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, Query,
 };
-use tensor_lsh::index::{recall_at_k, signature, IndexConfig, LshIndex, Metric};
+use tensor_lsh::index::{recall_at_k, signature, IndexConfig, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{HashFamily, SrpHasher};
 use tensor_lsh::projection::{CpRademacher, Distribution};
 use tensor_lsh::rng::Rng;
@@ -31,6 +31,7 @@ use tensor_lsh::workload::zipf_trace;
 const N_ITEMS: usize = 10_000;
 const N_QUERIES: usize = 2_000;
 const BANDS: usize = 8; // K=64 codes → 8 tables × 8 codes
+const SHARDS: usize = 8; // serving index shards (re-rank fan-out width)
 const TOP_K: usize = 10;
 const SEED: u64 = 20240710;
 
@@ -110,7 +111,7 @@ fn main() -> tensor_lsh::Result<()> {
         metric: Metric::Cosine,
         probes: 0,
     };
-    let mut index = LshIndex::new(&icfg)?;
+    let index = ShardedLshIndex::new(&icfg, SHARDS)?;
     let mut start = 0;
     while start < items.len() {
         let end = (start + cfg.batch).min(items.len());
@@ -126,9 +127,10 @@ fn main() -> tensor_lsh::Result<()> {
     let index = Arc::new(index);
     let build_s = t0.elapsed().as_secs_f64();
     println!(
-        "index: {} items × {} tables hashed via PJRT + inserted in {:.2}s ({:.0} items/s)",
+        "index: {} items × {} tables × {} shards hashed via PJRT + inserted in {:.2}s ({:.0} items/s)",
         index.len(),
         BANDS,
+        SHARDS,
         build_s,
         N_ITEMS as f64 / build_s
     );

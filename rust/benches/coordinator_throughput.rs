@@ -1,12 +1,19 @@
-//! Bench: coordinator throughput/latency vs worker count and batch policy —
-//! verifies the coordinator is not the bottleneck (DESIGN.md §9 L3 target).
+//! Bench: coordinator throughput/latency vs worker count and batch policy on
+//! the sharded index + batched CP-E2LSH hash path (EXPERIMENTS.md §Serving).
+//!
+//! The headline number is the last block: batched (max_batch ≥ 32) vs
+//! single-item (max_batch = 1) throughput at the same worker count — the
+//! batched+sharded path's win from amortized stacked-factor hashing plus
+//! shard-parallel re-ranking.
+//!
 //! Run: `cargo bench --bench coordinator_throughput`
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 use tensor_lsh::bench_harness::index_config;
 use tensor_lsh::config::Family;
 use tensor_lsh::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, Query};
-use tensor_lsh::index::{LshIndex, Metric};
+use tensor_lsh::index::{Metric, ShardedLshIndex};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
 
@@ -21,17 +28,20 @@ fn main() {
         seed: 5,
     };
     let (items, _) = low_rank_corpus(&spec);
-    let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 12, 8, 4.0, 5);
-    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let shards = 8usize;
+    let icfg = index_config(Family::Cp, Metric::Euclidean, dims.clone(), 4, 12, 8, 4.0, 5);
+    let index = Arc::new(ShardedLshIndex::build_parallel(&icfg, items, shards).unwrap());
     let mut rng = Rng::new(6);
-    println!("## coordinator throughput (n=3000, L=8, K=12, cp-srp)");
+    println!("## coordinator throughput (n=3000, L=8, K=12, cp-e2lsh, shards={shards})");
     println!("| workers | max_batch | QPS | p50 µs | p99 µs |");
     println!("|---|---|---|---|---|");
-    let mut base_qps = 0.0;
-    for &workers in &[1usize, 2, 4, 8] {
-        for &max_batch in &[1usize, 16, 64] {
+    let worker_grid = [1usize, 2, 4, 8];
+    let batch_grid = [1usize, 32, 64];
+    let mut qps: HashMap<(usize, usize), f64> = HashMap::new();
+    for &workers in &worker_grid {
+        for &max_batch in &batch_grid {
             let queries: Vec<Query> = (0..4000)
-                .map(|i| Query::new(i, index.item(rng.below(index.len())).clone(), 10))
+                .map(|i| Query::new(i, index.item(rng.below(index.len())), 10))
                 .collect();
             let cfg = CoordinatorConfig {
                 n_workers: workers,
@@ -44,10 +54,23 @@ fn main() {
                 "| {workers} | {max_batch} | {:.0} | {:.0} | {:.0} |",
                 snap.qps, snap.p50_us, snap.p99_us
             );
-            if workers == 1 && max_batch == 1 {
-                base_qps = snap.qps;
-            }
+            qps.insert((workers, max_batch), snap.qps);
         }
     }
-    println!("\n(1-worker unbatched baseline: {base_qps:.0} QPS)");
+    println!("\n## batched vs single-item speedup (same worker count)");
+    let mut best = 0.0f64;
+    for &workers in &worker_grid {
+        let single = qps[&(workers, 1)];
+        let batched = qps[&(workers, 32)].max(qps[&(workers, 64)]);
+        let ratio = batched / single;
+        best = best.max(ratio);
+        println!(
+            "workers={workers}: batched {batched:.0} QPS vs single-item {single:.0} QPS \
+             → {ratio:.2}x"
+        );
+    }
+    println!(
+        "\nbest batched/single-item speedup at batch ≥ 32: {best:.2}x (target ≥ 1.50x: {})",
+        if best >= 1.5 { "MET" } else { "NOT MET" }
+    );
 }

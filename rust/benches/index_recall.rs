@@ -1,6 +1,12 @@
-//! Bench F5: ANN recall@10 vs hash cost (naive vs CP vs TT).
+//! Bench F5: ANN recall@10 vs hash cost (naive vs CP vs TT), plus the
+//! sharded/batched query path vs the single-shard per-item reference.
 //! Run: `cargo bench --bench index_recall`
-use tensor_lsh::bench_harness::{fig_recall, RecallOptions};
+use tensor_lsh::bench_harness::{fig_recall, index_config, RecallOptions};
+use tensor_lsh::config::Family;
+use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::util::timer::time_once;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
 
 fn main() {
     let rows = fig_recall(&RecallOptions::default());
@@ -14,5 +20,40 @@ fn main() {
         );
     }
     assert!(r("cp", 8).mean_query_ns < r("naive", 8).mean_query_ns * 2.0);
+
+    // ---- sharded + batched query path vs single-shard per-item ----------
+    let dims = vec![12usize, 12, 12];
+    let (items, _) = low_rank_corpus(&DatasetSpec {
+        dims: dims.clone(),
+        n_items: 1500,
+        rank: 3,
+        n_clusters: 25,
+        noise: 0.35,
+        seed: 99,
+    });
+    let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 10, 8, 4.0, 99);
+    let single = LshIndex::build(&icfg, items.clone()).unwrap();
+    let sharded = ShardedLshIndex::build_parallel(&icfg, items.clone(), 8).unwrap();
+    let queries: Vec<AnyTensor> =
+        (0..256).map(|i| items[(i * 37) % items.len()].clone()).collect();
+    // Equivalence spot check: sharded+batched returns the single-shard
+    // result set (full test coverage in tests/sharding.rs).
+    let batched = sharded.search_batch(&queries, 10).unwrap();
+    for (q, res) in queries.iter().zip(&batched).take(32) {
+        assert_eq!(&single.search(q, 10).unwrap(), res, "sharded/batched mismatch");
+    }
+    let (_r1, t_single) = time_once(|| {
+        queries.iter().map(|q| single.search(q, 10).unwrap()).collect::<Vec<_>>()
+    });
+    let (_r2, t_batched) = time_once(|| sharded.search_batch(&queries, 10).unwrap());
+    println!(
+        "\n## sharded/batched query path (n=1500, L=8, K=10, cp-srp, shards=8, 256 queries)"
+    );
+    println!(
+        "single-shard per-item: {:.1} µs/query | sharded batched: {:.1} µs/query ({:.2}x)",
+        t_single / 256.0 / 1e3,
+        t_batched / 256.0 / 1e3,
+        t_single / t_batched
+    );
     println!("\nF5 OK");
 }

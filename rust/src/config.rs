@@ -63,6 +63,8 @@ pub struct AppConfig {
     pub top_k: usize,
     /// Coordinator workers.
     pub n_workers: usize,
+    /// Index shards (serving path).
+    pub shards: usize,
     /// Batch limit.
     pub max_batch: usize,
     /// Batch deadline (µs).
@@ -88,6 +90,7 @@ impl Default for AppConfig {
             n_items: 2000,
             top_k: 10,
             n_workers: 4,
+            shards: 4,
             max_batch: 64,
             max_wait_us: 500,
             seed: 42,
@@ -160,6 +163,12 @@ impl AppConfig {
             "n_items" | "items" => self.n_items = parse_usize(value)?,
             "top_k" => self.top_k = parse_usize(value)?,
             "n_workers" | "workers" => self.n_workers = parse_usize(value)?,
+            "shards" | "n_shards" => {
+                self.shards = parse_usize(value)?;
+                if self.shards == 0 {
+                    return Err(Error::Config("shards must be ≥ 1".into()));
+                }
+            }
             "max_batch" => self.max_batch = parse_usize(value)?,
             "max_wait_us" => {
                 self.max_wait_us =
@@ -201,6 +210,7 @@ impl AppConfig {
         m.insert("n_items".into(), Json::Num(self.n_items as f64));
         m.insert("top_k".into(), Json::Num(self.top_k as f64));
         m.insert("n_workers".into(), Json::Num(self.n_workers as f64));
+        m.insert("shards".into(), Json::Num(self.shards as f64));
         m.insert("max_batch".into(), Json::Num(self.max_batch as f64));
         m.insert("max_wait_us".into(), Json::Num(self.max_wait_us as f64));
         m.insert("seed".into(), Json::Num(self.seed as f64));
@@ -252,6 +262,7 @@ mod tests {
         let mut c = AppConfig::default();
         assert!(c.apply_override("nope=1").is_err());
         assert!(c.apply_override("w=-1").is_err());
+        assert!(c.apply_override("shards=0").is_err());
         assert!(c.apply_override("family=foo").is_err());
         assert!(c.apply_override("no_equals").is_err());
     }

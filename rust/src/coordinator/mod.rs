@@ -1,22 +1,31 @@
 //! Layer-3 serving coordinator.
 //!
-//! vLLM-router-shaped pipeline over std threads (no async runtime needed —
-//! the workload is CPU-bound):
+//! vLLM-router-shaped scatter-gather pipeline over std threads (no async
+//! runtime needed — the workload is CPU-bound):
 //!
 //! ```text
-//!   clients ──► router (mpsc) ──► dynamic batcher ──► hash stage
-//!                                                (native or PJRT engine)
-//!                     workers ◄── (query, per-table signatures) ─┘
-//!                        │  candidate lookup + exact re-rank
-//!                        └──► response channel ──► clients
+//!   clients ──► router (mpsc) ──► dynamic batcher ──► batched hash stage
+//!                                         (native project_batch or PJRT)
+//!              ┌── scatter: (ticket, query, per-table signatures) ──┘
+//!   worker 0 ◄─┤  probes + re-ranks shards {0, W, 2W, …}
+//!   worker 1 ◄─┤  probes + re-ranks shards {1, W+1, …}
+//!      ⋮       │         per-shard top-k partials
+//!              └──► aggregator ── merge → response channel ──► clients
 //! ```
 //!
-//! * The **batcher** groups queries by size/deadline so the PJRT hash
-//!   artifact (fixed batch dimension) runs full.
+//! * The **batcher** groups queries by size/deadline so both batched hash
+//!   paths run full (the PJRT artifact has a fixed batch dimension; the
+//!   native path amortizes one stacked-factor pass per mode across the
+//!   batch via [`crate::lsh::HashFamily::project_batch`]).
 //! * The **hash stage** owns the (non-`Sync`) [`crate::runtime::PjrtEngine`]
-//!   when the PJRT backend is selected; the native backend hashes inline.
-//! * **Workers** share the read-only index via `Arc` — no locks on the hot
-//!   path.
+//!   when the PJRT backend is selected; the native backend batch-hashes on
+//!   this stage and falls in for PJRT on engine failure.
+//! * **Workers** fan re-ranking out across the
+//!   [`crate::index::ShardedLshIndex`]'s shards: worker `w` owns shards
+//!   `s ≡ w (mod W)` and read-locks only those, so queries and online
+//!   inserts interleave freely.
+//! * The **aggregator** merges per-shard top-k partials
+//!   ([`crate::index::merge_partials`]) and records end-to-end latency.
 
 mod batcher;
 mod metrics;

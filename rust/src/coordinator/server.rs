@@ -1,13 +1,22 @@
-//! The coordinator: router → batcher → hash stage → worker pool.
+//! The coordinator: router → batcher → batched hash stage → shard-parallel
+//! worker pool → aggregator.
+//!
+//! Scatter-gather over a [`ShardedLshIndex`]: the hash stage computes every
+//! query's per-table signatures for the whole batch at once (native batched
+//! hashing or one PJRT artifact execution), then scatters each query to all
+//! workers; worker `w` probes and exactly re-ranks only the shards it owns
+//! (`shard ≡ w mod W`), and the aggregator merges the per-shard top-k
+//! partials into the response.
 
 use super::batcher::{drain_batch, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{Query, QueryResponse};
 use crate::error::{Error, Result};
-use crate::index::{signature, LshIndex};
+use crate::index::{merge_partials, signature, SearchResult, ShardedLshIndex};
 use crate::projection::CpRademacher;
 use crate::runtime::PjrtEngine;
 use crate::tensor::{AnyTensor, CpTensor};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -17,7 +26,8 @@ use std::time::Instant;
 /// Coordinator policy knobs.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Re-rank worker threads.
+    /// Re-rank worker threads (clamped to the shard count: each worker must
+    /// own at least one shard).
     pub n_workers: usize,
     /// Batching policy (sized to the PJRT artifact batch for that backend).
     pub batcher: BatcherConfig,
@@ -52,18 +62,43 @@ pub struct PjrtServingParams {
 
 /// How signatures are computed.
 pub enum HashBackend {
-    /// Each worker hashes with the index's native families.
+    /// The hash stage batch-hashes with the index's native families
+    /// ([`crate::lsh::HashFamily::project_batch`] under the hood).
     Native,
-    /// A dedicated stage executes the AOT artifacts via PJRT.
+    /// A dedicated stage executes the AOT artifacts via PJRT, falling back
+    /// to native batched hashing if the engine is unavailable.
     Pjrt(PjrtServingParams),
 }
 
-struct HashedQuery {
+/// A hashed query: everything a worker needs to probe its shards.
+struct QueryJob {
     query: Query,
-    /// Per-table signatures; `None` means the worker hashes natively itself
-    /// (native backend — parallelizes hashing across the pool).
-    sigs: Option<Vec<u64>>,
+    /// Per-table signature lists (exact signature [+ multiprobe extras]).
+    sigs: Vec<Vec<u64>>,
     submitted: Instant,
+}
+
+/// Scatter unit: one per (query, worker).
+struct ShardTask {
+    ticket: u64,
+    job: Arc<QueryJob>,
+}
+
+/// Gather unit: one worker's merged partial for one query.
+struct Partial {
+    ticket: u64,
+    job: Arc<QueryJob>,
+    result: Result<Vec<SearchResult>>,
+    n_candidates: usize,
+}
+
+/// Aggregation state for one in-flight query.
+struct Pending {
+    job: Arc<QueryJob>,
+    remaining: usize,
+    acc: Vec<SearchResult>,
+    n_candidates: usize,
+    error: Option<Error>,
 }
 
 /// Running coordinator instance.
@@ -75,58 +110,138 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spin up the pipeline over a built index.
-    pub fn start(index: Arc<LshIndex>, cfg: CoordinatorConfig, backend: HashBackend) -> Self {
+    /// Spin up the pipeline over a built sharded index.
+    pub fn start(
+        index: Arc<ShardedLshIndex>,
+        cfg: CoordinatorConfig,
+        backend: HashBackend,
+    ) -> Self {
         let metrics = Arc::new(Metrics::new());
+        if matches!(backend, HashBackend::Pjrt(_)) && index.probes() > 0 {
+            // The artifact returns codes only (no raw projections), so
+            // PJRT-hashed queries probe exact buckets; only the native
+            // fallback path can add multiprobe signatures.
+            eprintln!(
+                "coordinator: index configured with probes={} but the PJRT backend \
+                 hashes exact-bucket signatures only — multiprobe applies on the \
+                 native path alone",
+                index.probes()
+            );
+        }
         let (in_tx, in_rx) = channel::<(Query, Instant)>();
         let (out_tx, out_rx) = channel::<Result<QueryResponse>>();
+        let (part_tx, part_rx) = channel::<Partial>();
 
-        // Worker pool: consumes hashed queries, re-ranks, responds.
-        let mut worker_txs: Vec<Sender<HashedQuery>> = Vec::new();
+        // Worker pool: worker w owns shards {s : s ≡ w (mod W)} and re-ranks
+        // them for every query (shard-parallel fan-out).
+        let n_workers = cfg.n_workers.max(1).min(index.n_shards());
+        let mut worker_txs: Vec<Sender<ShardTask>> = Vec::new();
         let mut threads = Vec::new();
-        for _ in 0..cfg.n_workers.max(1) {
-            let (wtx, wrx) = channel::<HashedQuery>();
+        for w in 0..n_workers {
+            let (wtx, wrx) = channel::<ShardTask>();
             worker_txs.push(wtx);
             let index = Arc::clone(&index);
-            let metrics = Arc::clone(&metrics);
-            let out_tx = out_tx.clone();
+            let part_tx = part_tx.clone();
+            let shards: Vec<usize> = (w..index.n_shards()).step_by(n_workers).collect();
             threads.push(std::thread::spawn(move || {
-                for hq in wrx {
-                    let sigs = match hq.sigs {
-                        Some(s) => s,
-                        None => index
-                            .families()
-                            .iter()
-                            .map(|f| signature(&f.hash(&hq.query.tensor)))
-                            .collect(),
+                for task in wrx {
+                    let job = task.job;
+                    let mut acc: Vec<SearchResult> = Vec::new();
+                    let mut n_candidates = 0usize;
+                    let mut error = None;
+                    for &s in &shards {
+                        match index.shard_search(s, &job.query.tensor, &job.sigs, job.query.top_k)
+                        {
+                            Ok((partial, nc)) => {
+                                acc.extend(partial);
+                                n_candidates += nc;
+                            }
+                            Err(e) => {
+                                error = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    let result = match error {
+                        Some(e) => Err(e),
+                        None => Ok(acc),
                     };
-                    let cand = index.candidates_from_signatures(&sigs);
-                    let n_candidates = cand.len();
-                    let resp = index
-                        .rerank_candidates(&hq.query.tensor, cand, hq.query.top_k)
-                        .map(|results| {
+                    let sent = part_tx.send(Partial {
+                        ticket: task.ticket,
+                        job,
+                        result,
+                        n_candidates,
+                    });
+                    if sent.is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(part_tx);
+
+        // Aggregator: gathers one partial per worker per query, merges the
+        // per-shard top-k lists, records metrics, responds.
+        {
+            let index = Arc::clone(&index);
+            let metrics = Arc::clone(&metrics);
+            let expected = n_workers;
+            threads.push(std::thread::spawn(move || {
+                let mut pending: HashMap<u64, Pending> = HashMap::new();
+                for p in part_rx {
+                    let entry = pending.entry(p.ticket).or_insert_with(|| Pending {
+                        job: Arc::clone(&p.job),
+                        remaining: expected,
+                        acc: Vec::new(),
+                        n_candidates: 0,
+                        error: None,
+                    });
+                    entry.remaining -= 1;
+                    entry.n_candidates += p.n_candidates;
+                    match p.result {
+                        Ok(partial) => entry.acc.extend(partial),
+                        Err(e) => {
+                            if entry.error.is_none() {
+                                entry.error = Some(e);
+                            }
+                        }
+                    }
+                    if entry.remaining > 0 {
+                        continue;
+                    }
+                    let done = pending.remove(&p.ticket).expect("pending entry");
+                    let resp = match done.error {
+                        Some(e) => Err(e),
+                        None => {
+                            let results = merge_partials(
+                                index.metric(),
+                                vec![done.acc],
+                                done.job.query.top_k,
+                            );
                             let latency_us =
-                                hq.submitted.elapsed().as_secs_f64() * 1e6;
-                            metrics.record_query(latency_us, n_candidates);
-                            QueryResponse {
-                                id: hq.query.id,
+                                done.job.submitted.elapsed().as_secs_f64() * 1e6;
+                            metrics.record_query(latency_us, done.n_candidates);
+                            Ok(QueryResponse {
+                                id: done.job.query.id,
                                 results,
                                 latency_us,
-                                n_candidates,
-                            }
-                        });
+                                n_candidates: done.n_candidates,
+                            })
+                        }
+                    };
                     if out_tx.send(resp).is_err() {
                         break;
                     }
                 }
             }));
         }
-        drop(out_tx);
 
-        // Hash stage: batches queries; computes per-table signatures on this
-        // thread only for the PJRT backend (one artifact execution per
-        // batch). Native hashing happens inside the workers, in parallel.
+        // Hash stage: forms batches and computes per-table signatures for
+        // the whole batch at once — one PJRT artifact execution, or one
+        // native `project_batch` pass per table — then scatters each query
+        // to every worker under a fresh ticket.
         {
+            let index = Arc::clone(&index);
             let metrics = Arc::clone(&metrics);
             let batcher = cfg.batcher;
             threads.push(std::thread::spawn(move || {
@@ -134,30 +249,39 @@ impl Coordinator {
                     HashBackend::Pjrt(p) => match PjrtEngine::new(&p.artifact_dir) {
                         Ok(e) => Some(e),
                         Err(err) => {
-                            eprintln!("coordinator: PJRT engine init failed: {err}");
+                            eprintln!(
+                                "coordinator: PJRT engine init failed: {err}; \
+                                 using native batched hashing"
+                            );
                             None
                         }
                     },
                     HashBackend::Native => None,
                 };
-                let mut rr = 0usize;
+                let mut ticket = 0u64;
                 while let Some(batch) = drain_batch(&in_rx, &batcher) {
                     metrics.record_batch(batch.len());
-                    let hashed = match (&backend, engine_state.as_mut()) {
+                    let jobs = match (&backend, engine_state.as_mut()) {
                         (HashBackend::Pjrt(p), Some(engine)) => {
                             match hash_batch_pjrt(engine, p, &batch) {
-                                Ok(h) => h,
+                                Ok(jobs) => jobs,
                                 Err(err) => {
-                                    eprintln!("coordinator: PJRT hash failed: {err}; falling back to native");
-                                    defer_to_workers(&batch)
+                                    eprintln!(
+                                        "coordinator: PJRT hash failed: {err}; \
+                                         falling back to native"
+                                    );
+                                    hash_batch_native(&index, batch)
                                 }
                             }
                         }
-                        _ => defer_to_workers(&batch),
+                        _ => hash_batch_native(&index, batch),
                     };
-                    for hq in hashed {
-                        let _ = worker_txs[rr % worker_txs.len()].send(hq);
-                        rr += 1;
+                    for job in jobs {
+                        let job = Arc::new(job);
+                        for wtx in &worker_txs {
+                            let _ = wtx.send(ShardTask { ticket, job: Arc::clone(&job) });
+                        }
+                        ticket += 1;
                     }
                 }
             }));
@@ -200,7 +324,7 @@ impl Coordinator {
     /// Convenience: push a whole trace through and collect all responses
     /// (in completion order) plus final metrics.
     pub fn serve_trace(
-        index: Arc<LshIndex>,
+        index: Arc<ShardedLshIndex>,
         cfg: CoordinatorConfig,
         backend: HashBackend,
         queries: Vec<Query>,
@@ -223,20 +347,42 @@ impl Coordinator {
     }
 }
 
-fn defer_to_workers(batch: &[(Query, Instant)]) -> Vec<HashedQuery> {
-    batch
-        .iter()
-        .map(|(q, t0)| HashedQuery { query: q.clone(), sigs: None, submitted: *t0 })
+/// Native batched hashing: one `project_batch` pass per table for the whole
+/// batch (see [`ShardedLshIndex::signatures_batch`]), including multiprobe
+/// signatures when the index is configured with probes. The query tensors
+/// are moved out and back rather than cloned — this runs per batch on the
+/// serving hot path.
+fn hash_batch_native(
+    index: &ShardedLshIndex,
+    batch: Vec<(Query, Instant)>,
+) -> Vec<QueryJob> {
+    let mut metas = Vec::with_capacity(batch.len());
+    let mut tensors = Vec::with_capacity(batch.len());
+    for (q, t0) in batch {
+        let Query { id, tensor, top_k } = q;
+        metas.push((id, top_k, t0));
+        tensors.push(tensor);
+    }
+    let sigs_batch = index.signatures_batch(&tensors);
+    metas
+        .into_iter()
+        .zip(tensors)
+        .zip(sigs_batch)
+        .map(|(((id, top_k, submitted), tensor), sigs)| QueryJob {
+            query: Query { id, tensor, top_k },
+            sigs,
+            submitted,
+        })
         .collect()
 }
 
-/// PJRT hashing: for each table, execute the artifact over the batch (in
-/// manifest-batch chunks) and collect signatures.
+/// PJRT hashing: execute the artifact over the batch (in manifest-batch
+/// chunks) and band the K codes into one exact signature per table.
 fn hash_batch_pjrt(
     engine: &mut PjrtEngine,
     params: &PjrtServingParams,
     batch: &[(Query, Instant)],
-) -> Result<Vec<HashedQuery>> {
+) -> Result<Vec<QueryJob>> {
     let cp_batch: Vec<CpTensor> = batch
         .iter()
         .map(|(q, _)| match &q.tensor {
@@ -257,7 +403,7 @@ fn hash_batch_pjrt(
     }
     let band_k = k_total / params.bands;
     let e2 = params.e2lsh.as_ref().map(|(bs, w)| (bs.as_slice(), *w));
-    let mut sigs_per_query: Vec<Vec<u64>> =
+    let mut sigs_per_query: Vec<Vec<Vec<u64>>> =
         vec![Vec::with_capacity(params.bands); batch.len()];
     let mut start = 0;
     while start < cp_batch.len() {
@@ -268,7 +414,7 @@ fn hash_batch_pjrt(
         for (off, row) in codes.iter().enumerate() {
             for band in 0..params.bands {
                 let slice = &row[band * band_k..(band + 1) * band_k];
-                sigs_per_query[start + off].push(signature(slice));
+                sigs_per_query[start + off].push(vec![signature(slice)]);
             }
         }
         start = end;
@@ -276,7 +422,7 @@ fn hash_batch_pjrt(
     Ok(batch
         .iter()
         .zip(sigs_per_query)
-        .map(|((q, t0), sigs)| HashedQuery { query: q.clone(), sigs: Some(sigs), submitted: *t0 })
+        .map(|((q, t0), sigs)| QueryJob { query: q.clone(), sigs, submitted: *t0 })
         .collect())
 }
 
@@ -287,7 +433,7 @@ mod tests {
     use crate::lsh::{CpSrp, CpSrpConfig, HashFamily};
     use crate::workload::{low_rank_corpus, DatasetSpec};
 
-    fn build_index(dims: Vec<usize>, n_items: usize) -> Arc<LshIndex> {
+    fn build_index(dims: Vec<usize>, n_items: usize, n_shards: usize) -> Arc<ShardedLshIndex> {
         let spec = DatasetSpec {
             dims: dims.clone(),
             n_items,
@@ -310,14 +456,14 @@ mod tests {
             metric: Metric::Cosine,
             probes: 0,
         };
-        Arc::new(LshIndex::build(&cfg, items).unwrap())
+        Arc::new(ShardedLshIndex::build(&cfg, items, n_shards).unwrap())
     }
 
     #[test]
     fn native_trace_roundtrip() {
-        let index = build_index(vec![6, 6, 6], 150);
+        let index = build_index(vec![6, 6, 6], 150, 4);
         let queries: Vec<Query> = (0..40)
-            .map(|i| Query::new(i, index.item((i as usize * 3) % 150).clone(), 5))
+            .map(|i| Query::new(i, index.item((i as usize * 3) % 150), 5))
             .collect();
         let (responses, snap) = Coordinator::serve_trace(
             Arc::clone(&index),
@@ -335,14 +481,33 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_matches_offline_sharded_search() {
+        let index = build_index(vec![6, 6, 6], 200, 5);
+        let queries: Vec<Query> = (0..32)
+            .map(|i| Query::new(i, index.item((i as usize * 5) % 200), 7))
+            .collect();
+        let (responses, _) = Coordinator::serve_trace(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 4, ..Default::default() },
+            HashBackend::Native,
+            queries.clone(),
+        )
+        .unwrap();
+        for r in &responses {
+            let offline = index.search(&queries[r.id as usize].tensor, 7).unwrap();
+            assert_eq!(r.results, offline, "resp {}", r.id);
+        }
+    }
+
+    #[test]
     fn submit_after_shutdown_is_error() {
-        let index = build_index(vec![4, 4], 20);
+        let index = build_index(vec![4, 4], 20, 2);
         let coord = Coordinator::start(
-            index.clone(),
+            Arc::clone(&index),
             CoordinatorConfig::default(),
             HashBackend::Native,
         );
-        coord.submit(Query::new(0, index.item(0).clone(), 1)).unwrap();
+        coord.submit(Query::new(0, index.item(0), 1)).unwrap();
         let _ = coord.recv().unwrap().unwrap();
         let snap = coord.shutdown();
         assert_eq!(snap.queries, 1);
@@ -350,9 +515,9 @@ mod tests {
 
     #[test]
     fn responses_preserve_ids_under_concurrency() {
-        let index = build_index(vec![5, 5, 5], 100);
+        let index = build_index(vec![5, 5, 5], 100, 8);
         let queries: Vec<Query> = (0..64)
-            .map(|i| Query::new(1000 + i, index.item(i as usize % 100).clone(), 3))
+            .map(|i| Query::new(1000 + i, index.item(i as usize % 100), 3))
             .collect();
         let (responses, _) = Coordinator::serve_trace(
             index,
@@ -364,5 +529,21 @@ mod tests {
         let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (1000..1064).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_workers_than_shards_is_clamped() {
+        let index = build_index(vec![5, 5], 60, 2);
+        let queries: Vec<Query> =
+            (0..20).map(|i| Query::new(i, index.item(i as usize % 60), 3)).collect();
+        let (responses, snap) = Coordinator::serve_trace(
+            index,
+            CoordinatorConfig { n_workers: 16, ..Default::default() },
+            HashBackend::Native,
+            queries,
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 20);
+        assert_eq!(snap.queries, 20);
     }
 }

@@ -1,48 +1,92 @@
 //! Library error type.
+//!
+//! Hand-rolled (no `thiserror`): the crate builds with zero external
+//! dependencies so the whole stack compiles offline.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by tensor-lsh.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Tensor shapes are incompatible for the requested operation.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     /// A parameter is out of its valid domain.
-    #[error("invalid parameter: {0}")]
     InvalidParameter(String),
 
     /// A numerical routine failed to converge or produced a degenerate value.
-    #[error("numerical failure: {0}")]
     Numerical(String),
 
     /// Configuration file / CLI parse problem.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse problem (hand-rolled parser in `util::json`).
-    #[error("json error: {0}")]
     Json(String),
 
-    /// PJRT runtime problem (artifact missing, compile/execute failure).
-    #[error("runtime error: {0}")]
+    /// PJRT runtime problem (artifact missing, compile/execute failure, or
+    /// the crate was built without the `pjrt` feature).
     Runtime(String),
 
     /// Coordinator problem (channel closed, worker panicked, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidParameter(m) => write!(f, "invalid parameter: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Runtime(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_carry_context() {
+        assert_eq!(
+            Error::ShapeMismatch("a vs b".into()).to_string(),
+            "shape mismatch: a vs b"
+        );
+        assert_eq!(Error::Config("bad key".into()).to_string(), "config error: bad key");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(e.source().is_some());
+        assert!(Error::Numerical("x".into()).source().is_none());
     }
 }

@@ -5,11 +5,24 @@
 //! in every table, the candidate union is exactly re-ranked. Multiprobe
 //! (query-directed for E2LSH, lowest-margin bit flips for SRP) trades extra
 //! probes for fewer tables — an extension feature ablated in the benches.
+//!
+//! Two index structures share the table/re-rank machinery:
+//!
+//! * [`LshIndex`] — the single-shard reference structure (`&mut self`
+//!   inserts). Simple, deterministic, and the ground truth the sharded
+//!   equivalence tests compare against.
+//! * [`ShardedLshIndex`] — the serving structure: `S` shards (item id mod
+//!   `S`), each behind its own `RwLock`, so inserts take `&self`, queries
+//!   run lock-free-in-practice across coordinator workers, and re-ranking
+//!   fans out shard-by-shard. Batched hashing enters through
+//!   [`crate::lsh::HashFamily::hash_batch`].
 
 mod multiprobe;
+mod shard;
 mod table;
 
 pub use multiprobe::{e2lsh_probes, srp_probes};
+pub use shard::{merge_partials, ShardedLshIndex};
 pub use table::{signature, HashTable};
 
 use crate::error::{Error, Result};
@@ -57,23 +70,80 @@ pub struct LshIndex {
     probes: usize,
 }
 
+/// Instantiate and validate the per-table hash families of a config —
+/// shared by [`LshIndex`] and [`ShardedLshIndex`] so both structures hash
+/// identically for the same config.
+pub(crate) fn build_families(cfg: &IndexConfig) -> Result<Vec<Arc<dyn HashFamily>>> {
+    if cfg.n_tables == 0 {
+        return Err(Error::InvalidParameter("n_tables must be ≥ 1".into()));
+    }
+    let families: Vec<Arc<dyn HashFamily>> =
+        (0..cfg.n_tables).map(|t| (cfg.family_builder)(t)).collect();
+    let metric_ok = match cfg.metric {
+        Metric::Euclidean => families.iter().all(|f| f.is_euclidean()),
+        Metric::Cosine => families.iter().all(|f| !f.is_euclidean()),
+    };
+    if !metric_ok {
+        return Err(Error::InvalidParameter(
+            "hash family proxy does not match index metric".into(),
+        ));
+    }
+    Ok(families)
+}
+
+/// Score one candidate against a query: Euclidean distance or cosine
+/// similarity from the cached item norm plus a single inner product. Both
+/// index structures re-rank through this, so their scores are identical.
+pub(crate) fn score_candidate(
+    metric: Metric,
+    item: &AnyTensor,
+    norm: f64,
+    q: &AnyTensor,
+    qn: f64,
+) -> Result<f64> {
+    let inner = item.inner(q)?;
+    match metric {
+        Metric::Euclidean => Ok((norm * norm + qn * qn - 2.0 * inner).max(0.0).sqrt()),
+        Metric::Cosine => {
+            let denom = norm * qn;
+            if denom == 0.0 {
+                return Err(Error::Numerical("cosine of zero tensor".into()));
+            }
+            Ok((inner / denom).clamp(-1.0, 1.0))
+        }
+    }
+}
+
+/// Order results best-first for the metric (ascending distance, descending
+/// similarity).
+pub(crate) fn sort_results(metric: Metric, scored: &mut [SearchResult]) {
+    match metric {
+        Metric::Euclidean => scored.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap()),
+        Metric::Cosine => scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap()),
+    }
+}
+
+/// Batched bucket signatures: one [`HashFamily::hash_batch`] pass per table,
+/// transposed to per-item rows (`out[i][t]` = item `i`'s signature in table
+/// `t`). The single code path behind every bulk build, so batched and
+/// per-item insertion stay bit-identical by construction.
+pub(crate) fn batch_signatures(
+    families: &[Arc<dyn HashFamily>],
+    items: &[AnyTensor],
+) -> Vec<Vec<u64>> {
+    let per_table: Vec<Vec<u64>> = families
+        .iter()
+        .map(|fam| fam.hash_batch(items).iter().map(|codes| signature(codes)).collect())
+        .collect();
+    (0..items.len())
+        .map(|i| per_table.iter().map(|t| t[i]).collect())
+        .collect()
+}
+
 impl LshIndex {
     /// Build an empty index.
     pub fn new(cfg: &IndexConfig) -> Result<Self> {
-        if cfg.n_tables == 0 {
-            return Err(Error::InvalidParameter("n_tables must be ≥ 1".into()));
-        }
-        let families: Vec<Arc<dyn HashFamily>> =
-            (0..cfg.n_tables).map(|t| (cfg.family_builder)(t)).collect();
-        let metric_ok = match cfg.metric {
-            Metric::Euclidean => families.iter().all(|f| f.is_euclidean()),
-            Metric::Cosine => families.iter().all(|f| !f.is_euclidean()),
-        };
-        if !metric_ok {
-            return Err(Error::InvalidParameter(
-                "hash family proxy does not match index metric".into(),
-            ));
-        }
+        let families = build_families(cfg)?;
         let tables = (0..cfg.n_tables).map(|_| HashTable::new()).collect();
         Ok(LshIndex {
             families,
@@ -129,12 +199,22 @@ impl LshIndex {
         id
     }
 
-    /// Bulk build.
+    /// Insert a batch: one [`HashFamily::hash_batch`] pass per table instead
+    /// of one hash per (item, table). Bit-identical signatures to per-item
+    /// [`LshIndex::insert`]; returns the assigned id range.
+    pub fn insert_batch(&mut self, items: Vec<AnyTensor>) -> std::ops::Range<usize> {
+        let start = self.items.len();
+        let sig_rows = batch_signatures(&self.families, &items);
+        for (x, sigs) in items.into_iter().zip(sig_rows) {
+            self.insert_with_signatures(x, &sigs);
+        }
+        start..self.items.len()
+    }
+
+    /// Bulk build (batched hashing).
     pub fn build(cfg: &IndexConfig, items: Vec<AnyTensor>) -> Result<Self> {
         let mut idx = LshIndex::new(cfg)?;
-        for x in items {
-            idx.insert(x);
-        }
+        idx.insert_batch(items);
         Ok(idx)
     }
 
@@ -211,31 +291,11 @@ impl LshIndex {
         let mut scored: Vec<SearchResult> = cand
             .into_iter()
             .map(|id| {
-                let inner = self.items[id].inner(q)?;
-                let score = match self.metric {
-                    Metric::Euclidean => {
-                        let n = self.norms[id];
-                        (n * n + qn * qn - 2.0 * inner).max(0.0).sqrt()
-                    }
-                    Metric::Cosine => {
-                        let denom = self.norms[id] * qn;
-                        if denom == 0.0 {
-                            return Err(crate::error::Error::Numerical(
-                                "cosine of zero tensor".into(),
-                            ));
-                        }
-                        (inner / denom).clamp(-1.0, 1.0)
-                    }
-                };
+                let score = score_candidate(self.metric, &self.items[id], self.norms[id], q, qn)?;
                 Ok(SearchResult { id, score })
             })
             .collect::<Result<_>>()?;
-        match self.metric {
-            Metric::Euclidean => {
-                scored.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
-            }
-            Metric::Cosine => scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap()),
-        }
+        sort_results(self.metric, &mut scored);
         scored.truncate(k);
         Ok(scored)
     }

@@ -1,0 +1,589 @@
+//! Sharded, concurrently-readable multi-table LSH index.
+//!
+//! [`ShardedLshIndex`] splits the corpus into `S` shards by item id
+//! (`shard = id mod S`). Every shard owns its own bucket tables, items and
+//! norm cache behind an `RwLock`, while the per-table hash families are
+//! shared across shards — so for the same [`IndexConfig`] a sharded index
+//! buckets exactly like the single-shard [`super::LshIndex`] and returns the
+//! same [`SearchResult`] set (verified by the equivalence tests below and in
+//! `tests/sharding.rs`).
+//!
+//! What sharding buys at serving time:
+//!
+//! * **`&self` everywhere** — inserts write-lock one shard only, queries
+//!   read-lock shards independently, so coordinator workers run fully
+//!   concurrently and online inserts interleave with reads.
+//! * **Fan-out re-ranking** — [`ShardedLshIndex::shard_search`] is the
+//!   per-shard unit of work the coordinator scatters across its worker
+//!   pool; partial top-k lists merge with [`merge_partials`] (a global
+//!   top-k member is necessarily top-k within its shard, so per-shard
+//!   truncation loses nothing).
+//! * **Parallel builds** — [`ShardedLshIndex::build_parallel`] hashes and
+//!   inserts each shard's slice on its own thread via batched hashing.
+
+use super::table::{signature, HashTable};
+use super::{
+    batch_signatures, build_families, score_candidate, sort_results, IndexConfig, Metric,
+    SearchResult,
+};
+use crate::error::Result;
+use crate::lsh::HashFamily;
+use crate::tensor::AnyTensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One shard: bucket tables over shard-local slots plus the backing items.
+struct Shard {
+    tables: Vec<HashTable>,
+    /// Local slot → global item id.
+    ids: Vec<usize>,
+    items: Vec<AnyTensor>,
+    /// Cached Frobenius norms (same re-rank shortcut as [`super::LshIndex`]).
+    norms: Vec<f64>,
+}
+
+impl Shard {
+    fn new(n_tables: usize) -> Self {
+        Shard {
+            tables: (0..n_tables).map(|_| HashTable::new()).collect(),
+            ids: Vec::new(),
+            items: Vec::new(),
+            norms: Vec::new(),
+        }
+    }
+
+    fn insert(&mut self, id: usize, x: AnyTensor, sigs: &[u64]) {
+        debug_assert_eq!(sigs.len(), self.tables.len());
+        let slot = self.items.len() as u32;
+        for (table, &sig) in self.tables.iter_mut().zip(sigs) {
+            table.insert(sig, slot);
+        }
+        self.ids.push(id);
+        self.norms.push(x.frob_norm());
+        self.items.push(x);
+    }
+
+    /// Deduplicated local candidate slots for per-table signature lists
+    /// (exact signature first, then any multiprobe extras).
+    fn candidate_slots(&self, sigs: &[Vec<u64>]) -> Vec<u32> {
+        let mut seen = vec![false; self.items.len()];
+        let mut out = Vec::new();
+        for (table, tsigs) in self.tables.iter().zip(sigs) {
+            for &sig in tsigs {
+                for &slot in table.bucket(sig) {
+                    let s = slot as usize;
+                    if !seen[s] {
+                        seen[s] = true;
+                        out.push(slot);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact re-rank of local slots; returns the shard's top-k with global
+    /// ids.
+    fn rerank(
+        &self,
+        metric: Metric,
+        q: &AnyTensor,
+        qn: f64,
+        slots: Vec<u32>,
+        k: usize,
+    ) -> Result<Vec<SearchResult>> {
+        let mut scored = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let s = slot as usize;
+            let score = score_candidate(metric, &self.items[s], self.norms[s], q, qn)?;
+            scored.push(SearchResult { id: self.ids[s], score });
+        }
+        sort_results(metric, &mut scored);
+        scored.truncate(k);
+        Ok(scored)
+    }
+}
+
+/// Merge per-shard top-k partials into the global top-k. Because shards
+/// partition the corpus, the union of per-shard top-k lists contains every
+/// global top-k member; one sort + truncate finishes the job.
+pub fn merge_partials(
+    metric: Metric,
+    partials: Vec<Vec<SearchResult>>,
+    k: usize,
+) -> Vec<SearchResult> {
+    let mut merged: Vec<SearchResult> = partials.into_iter().flatten().collect();
+    sort_results(metric, &mut merged);
+    merged.truncate(k);
+    merged
+}
+
+/// Sharded multi-table LSH index (see the module docs).
+pub struct ShardedLshIndex {
+    families: Vec<Arc<dyn HashFamily>>,
+    shards: Vec<RwLock<Shard>>,
+    metric: Metric,
+    probes: usize,
+    /// Monotonic global id source; also the item count once inserts settle.
+    next_id: AtomicUsize,
+}
+
+impl ShardedLshIndex {
+    /// Build an empty sharded index. `n_shards` ≥ 1; the same
+    /// config-validation rules as [`super::LshIndex::new`] apply.
+    pub fn new(cfg: &IndexConfig, n_shards: usize) -> Result<Self> {
+        if n_shards == 0 {
+            return Err(crate::error::Error::InvalidParameter(
+                "n_shards must be ≥ 1".into(),
+            ));
+        }
+        let families = build_families(cfg)?;
+        let shards = (0..n_shards)
+            .map(|_| RwLock::new(Shard::new(cfg.n_tables)))
+            .collect();
+        Ok(ShardedLshIndex {
+            families,
+            shards,
+            metric: cfg.metric,
+            probes: cfg.probes,
+            next_id: AtomicUsize::new(0),
+        })
+    }
+
+    /// Number of indexed items.
+    pub fn len(&self) -> usize {
+        self.next_id.load(Ordering::SeqCst)
+    }
+
+    /// True if no items were inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of shards S.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of tables L.
+    pub fn n_tables(&self) -> usize {
+        self.families.len()
+    }
+
+    /// Re-ranking metric.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Multiprobe extra probes per table.
+    pub fn probes(&self) -> usize {
+        self.probes
+    }
+
+    /// The per-table hash families (shared across shards).
+    pub fn families(&self) -> &[Arc<dyn HashFamily>] {
+        &self.families
+    }
+
+    fn shard_of(&self, id: usize) -> usize {
+        id % self.shards.len()
+    }
+
+    /// Clone out an indexed item by global id.
+    pub fn item(&self, id: usize) -> AnyTensor {
+        let shard = self.shards[self.shard_of(id)].read().unwrap();
+        // Sequential builds place id at slot id/S; concurrent inserts may
+        // permute within the shard, so fall back to a scan.
+        let guess = id / self.shards.len();
+        let slot = if shard.ids.get(guess) == Some(&id) {
+            guess
+        } else {
+            shard
+                .ids
+                .iter()
+                .position(|&g| g == id)
+                .unwrap_or_else(|| panic!("item id {id} not present"))
+        };
+        shard.items[slot].clone()
+    }
+
+    /// Insert a tensor (hashes with the shared families); returns its id.
+    /// Takes `&self`: only the target shard is write-locked.
+    pub fn insert(&self, x: AnyTensor) -> usize {
+        let sigs: Vec<u64> = self
+            .families
+            .iter()
+            .map(|fam| signature(&fam.hash(&x)))
+            .collect();
+        self.insert_with_signatures(x, &sigs)
+    }
+
+    /// Insert with precomputed per-table signatures (the PJRT bulk-build
+    /// path).
+    pub fn insert_with_signatures(&self, x: AnyTensor, sigs: &[u64]) -> usize {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.shards[self.shard_of(id)]
+            .write()
+            .unwrap()
+            .insert(id, x, sigs);
+        id
+    }
+
+    /// Bulk build with batched hashing, single-threaded (deterministic id =
+    /// position order, like [`super::LshIndex::build`]).
+    pub fn build(cfg: &IndexConfig, items: Vec<AnyTensor>, n_shards: usize) -> Result<Self> {
+        let idx = ShardedLshIndex::new(cfg, n_shards)?;
+        let sig_rows = batch_signatures(&idx.families, &items);
+        for (x, sigs) in items.into_iter().zip(sig_rows) {
+            idx.insert_with_signatures(x, &sigs);
+        }
+        Ok(idx)
+    }
+
+    /// Bulk build with one thread per shard: each thread batch-hashes and
+    /// inserts only its own shard's slice (id = position order, identical
+    /// index to [`ShardedLshIndex::build`]).
+    pub fn build_parallel(
+        cfg: &IndexConfig,
+        items: Vec<AnyTensor>,
+        n_shards: usize,
+    ) -> Result<Self> {
+        let idx = ShardedLshIndex::new(cfg, n_shards)?;
+        let n = items.len();
+        let mut ids_per_shard: Vec<Vec<usize>> = (0..n_shards).map(|_| Vec::new()).collect();
+        let mut items_per_shard: Vec<Vec<AnyTensor>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for (id, x) in items.into_iter().enumerate() {
+            ids_per_shard[id % n_shards].push(id);
+            items_per_shard[id % n_shards].push(x);
+        }
+        std::thread::scope(|scope| {
+            for (s, (ids, xs)) in ids_per_shard
+                .into_iter()
+                .zip(items_per_shard.into_iter())
+                .enumerate()
+            {
+                let idx = &idx;
+                scope.spawn(move || {
+                    let sig_rows = batch_signatures(&idx.families, &xs);
+                    let mut shard = idx.shards[s].write().unwrap();
+                    for ((id, x), sigs) in ids.into_iter().zip(xs).zip(sig_rows) {
+                        shard.insert(id, x, &sigs);
+                    }
+                });
+            }
+        });
+        idx.next_id.store(n, Ordering::SeqCst);
+        Ok(idx)
+    }
+
+    /// Per-table signature lists for a query: the exact bucket signature
+    /// first, then up to `probes` multiprobe extras (family-specific).
+    pub fn signatures(&self, q: &AnyTensor) -> Vec<Vec<u64>> {
+        self.families
+            .iter()
+            .map(|fam| {
+                let z = fam.project(q);
+                let codes = fam.discretize(&z);
+                let mut sigs = vec![signature(&codes)];
+                if self.probes > 0 {
+                    sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
+                }
+                sigs
+            })
+            .collect()
+    }
+
+    /// Batched [`ShardedLshIndex::signatures`]: one
+    /// [`HashFamily::project_batch`] pass per table for the whole batch.
+    /// `out[b][t]` lists table `t`'s signatures for query `b`.
+    pub fn signatures_batch(&self, qs: &[AnyTensor]) -> Vec<Vec<Vec<u64>>> {
+        let mut out: Vec<Vec<Vec<u64>>> = (0..qs.len())
+            .map(|_| Vec::with_capacity(self.families.len()))
+            .collect();
+        for fam in &self.families {
+            let zs = fam.project_batch(qs);
+            for (b, z) in zs.into_iter().enumerate() {
+                let codes = fam.discretize(&z);
+                let mut sigs = vec![signature(&codes)];
+                if self.probes > 0 {
+                    sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
+                }
+                out[b].push(sigs);
+            }
+        }
+        out
+    }
+
+    /// Probe one shard and exactly re-rank its candidates: the coordinator's
+    /// fan-out unit. Returns the shard-local top-k (global ids) and the
+    /// number of candidates examined.
+    pub fn shard_search(
+        &self,
+        shard: usize,
+        q: &AnyTensor,
+        sigs: &[Vec<u64>],
+        k: usize,
+    ) -> Result<(Vec<SearchResult>, usize)> {
+        let qn = q.frob_norm();
+        let guard = self.shards[shard].read().unwrap();
+        let slots = guard.candidate_slots(sigs);
+        let n_candidates = slots.len();
+        let partial = guard.rerank(self.metric, q, qn, slots, k)?;
+        Ok((partial, n_candidates))
+    }
+
+    /// k-NN search from per-table signature lists: probe + re-rank every
+    /// shard, merge the partials.
+    pub fn search_with_table_signatures(
+        &self,
+        q: &AnyTensor,
+        sigs: &[Vec<u64>],
+        k: usize,
+    ) -> Result<Vec<SearchResult>> {
+        let mut partials = Vec::with_capacity(self.shards.len());
+        for s in 0..self.shards.len() {
+            let (partial, _) = self.shard_search(s, q, sigs, k)?;
+            partials.push(partial);
+        }
+        Ok(merge_partials(self.metric, partials, k))
+    }
+
+    /// k-NN search: hash, probe all shards, exact re-rank, merge. Same
+    /// result set as [`super::LshIndex::search`] for the same config.
+    pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
+        let sigs = self.signatures(q);
+        self.search_with_table_signatures(q, &sigs, k)
+    }
+
+    /// Batched k-NN search: batch-amortized hashing, then per-query
+    /// probe/re-rank. `out[b]` equals `search(&qs[b], k)`.
+    pub fn search_batch(&self, qs: &[AnyTensor], k: usize) -> Result<Vec<Vec<SearchResult>>> {
+        let sigs_batch = self.signatures_batch(qs);
+        qs.iter()
+            .zip(&sigs_batch)
+            .map(|(q, sigs)| self.search_with_table_signatures(q, sigs, k))
+            .collect()
+    }
+
+    /// Deduplicated global candidate ids for a query (unranked) — the
+    /// sharded analogue of [`super::LshIndex::candidates`].
+    pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
+        let sigs = self.signatures(q);
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            for slot in guard.candidate_slots(&sigs) {
+                out.push(guard.ids[slot as usize]);
+            }
+        }
+        out
+    }
+
+    /// Exact (linear-scan) k-NN — ground truth for recall measurements.
+    pub fn exact_search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
+        let qn = q.frob_norm();
+        let mut partials = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            let slots: Vec<u32> = (0..guard.items.len() as u32).collect();
+            partials.push(guard.rerank(self.metric, q, qn, slots, k)?);
+        }
+        Ok(merge_partials(self.metric, partials, k))
+    }
+
+    /// Bucket-occupancy statistics per table, aggregated across shards:
+    /// (mean bucket size over all shards' buckets, max bucket size).
+    pub fn occupancy(&self) -> Vec<(f64, usize)> {
+        let n_tables = self.n_tables();
+        let mut entries = vec![0usize; n_tables];
+        let mut buckets = vec![0usize; n_tables];
+        let mut max = vec![0usize; n_tables];
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            for (t, table) in guard.tables.iter().enumerate() {
+                let (_, m) = table.occupancy();
+                entries[t] += guard.items.len();
+                buckets[t] += table.n_buckets();
+                max[t] = max[t].max(m);
+            }
+        }
+        (0..n_tables)
+            .map(|t| {
+                let mean = if buckets[t] == 0 {
+                    0.0
+                } else {
+                    entries[t] as f64 / buckets[t] as f64
+                };
+                (mean, max[t])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::LshIndex;
+    use super::*;
+    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::rng::Rng;
+    use crate::workload::{low_rank_corpus, DatasetSpec};
+
+    fn cosine_config(dims: Vec<usize>, k: usize, l: usize, probes: usize) -> IndexConfig {
+        IndexConfig {
+            family_builder: Arc::new(move |t| {
+                Arc::new(CpSrp::new(CpSrpConfig {
+                    dims: dims.clone(),
+                    rank: 4,
+                    k,
+                    seed: 3000 + t as u64,
+                })) as Arc<dyn HashFamily>
+            }),
+            n_tables: l,
+            metric: Metric::Cosine,
+            probes,
+        }
+    }
+
+    fn corpus(dims: Vec<usize>, n: usize, seed: u64) -> Vec<AnyTensor> {
+        let spec = DatasetSpec {
+            dims,
+            n_items: n,
+            rank: 2,
+            n_clusters: 8,
+            noise: 0.3,
+            seed,
+        };
+        low_rank_corpus(&spec).0
+    }
+
+    #[test]
+    fn sharded_matches_single_shard_results() {
+        let dims = vec![8usize, 8, 8];
+        let items = corpus(dims.clone(), 300, 31);
+        let cfg = cosine_config(dims, 10, 8, 0);
+        let single = LshIndex::build(&cfg, items.clone()).unwrap();
+        for n_shards in [1usize, 3, 8] {
+            let sharded = ShardedLshIndex::build(&cfg, items.clone(), n_shards).unwrap();
+            assert_eq!(sharded.len(), single.len());
+            let mut rng = Rng::new(32);
+            for _ in 0..15 {
+                let qid = rng.below(single.len());
+                let q = single.item(qid).clone();
+                let a = single.search(&q, 10).unwrap();
+                let b = sharded.search(&q, 10).unwrap();
+                assert_eq!(a, b, "n_shards={n_shards} qid={qid}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_shard_euclidean_with_probes() {
+        let dims = vec![6usize, 6, 6];
+        let items = corpus(dims.clone(), 200, 33);
+        let cfg = IndexConfig {
+            family_builder: {
+                let dims = dims.clone();
+                Arc::new(move |t| {
+                    Arc::new(TtE2lsh::new(TtE2lshConfig {
+                        dims: dims.clone(),
+                        rank: 3,
+                        k: 6,
+                        w: 4.0,
+                        seed: 70 + t as u64,
+                    })) as Arc<dyn HashFamily>
+                })
+            },
+            n_tables: 6,
+            metric: Metric::Euclidean,
+            probes: 3,
+        };
+        let single = LshIndex::build(&cfg, items.clone()).unwrap();
+        let sharded = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
+        let mut rng = Rng::new(34);
+        for _ in 0..10 {
+            let q = single.item(rng.below(single.len())).clone();
+            assert_eq!(single.search(&q, 5).unwrap(), sharded.search(&q, 5).unwrap());
+            // Candidate unions agree as sets.
+            let mut ca = single.candidates(&q);
+            let mut cb = sharded.candidates(&q);
+            ca.sort_unstable();
+            cb.sort_unstable();
+            assert_eq!(ca, cb);
+        }
+    }
+
+    #[test]
+    fn parallel_build_equals_sequential_build() {
+        let dims = vec![8usize, 8, 8];
+        let items = corpus(dims.clone(), 240, 35);
+        let cfg = cosine_config(dims, 8, 6, 0);
+        let seq = ShardedLshIndex::build(&cfg, items.clone(), 5).unwrap();
+        let par = ShardedLshIndex::build_parallel(&cfg, items.clone(), 5).unwrap();
+        assert_eq!(par.len(), seq.len());
+        let mut rng = Rng::new(36);
+        for _ in 0..10 {
+            let q = &items[rng.below(items.len())];
+            assert_eq!(seq.search(q, 8).unwrap(), par.search(q, 8).unwrap());
+        }
+    }
+
+    #[test]
+    fn search_batch_equals_per_query_search() {
+        let dims = vec![8usize, 8, 8];
+        let items = corpus(dims.clone(), 250, 37);
+        let cfg = cosine_config(dims, 10, 6, 2);
+        let idx = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
+        let queries: Vec<AnyTensor> = (0..24).map(|i| items[i * 7 % items.len()].clone()).collect();
+        let batched = idx.search_batch(&queries, 5).unwrap();
+        for (q, res) in queries.iter().zip(&batched) {
+            assert_eq!(&idx.search(q, 5).unwrap(), res);
+        }
+    }
+
+    #[test]
+    fn concurrent_inserts_and_reads_take_shared_ref() {
+        let dims = vec![6usize, 6];
+        let cfg = cosine_config(dims.clone(), 6, 4, 0);
+        let idx = ShardedLshIndex::new(&cfg, 4).unwrap();
+        let items = corpus(dims, 120, 38);
+        std::thread::scope(|scope| {
+            for chunk in items.chunks(30) {
+                let idx = &idx;
+                scope.spawn(move || {
+                    for x in chunk {
+                        let id = idx.insert(x.clone());
+                        // Reads interleave with writes: own insert is findable.
+                        let got = idx.item(id);
+                        assert!(got.same_dims(x));
+                    }
+                });
+            }
+        });
+        assert_eq!(idx.len(), 120);
+        // Every id is present exactly once across shards.
+        let mut all: Vec<usize> = Vec::new();
+        for s in 0..idx.n_shards() {
+            let guard = idx.shards[s].read().unwrap();
+            all.extend(guard.ids.iter().copied());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..120).collect::<Vec<_>>());
+        // And self-queries hit themselves.
+        let q = idx.item(17);
+        let res = idx.search(&q, 1).unwrap();
+        assert_eq!(res[0].id, 17);
+    }
+
+    #[test]
+    fn occupancy_accounts_every_item_per_table() {
+        let dims = vec![6usize, 6];
+        let items = corpus(dims.clone(), 90, 39);
+        let cfg = cosine_config(dims, 6, 3, 0);
+        let idx = ShardedLshIndex::build(&cfg, items, 3).unwrap();
+        for (mean, max) in idx.occupancy() {
+            assert!(mean >= 1.0);
+            assert!(max >= 1);
+        }
+    }
+}

@@ -19,16 +19,26 @@
 //! * [`workload`] — synthetic corpora and controlled-distance pair generators.
 //!
 //! Core library:
-//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families.
-//! * [`lsh`] — the six hash families behind common traits + parameter planning.
-//! * [`index`] — multi-table LSH index with multiprobe and exact re-ranking.
-//! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle.
-//! * [`coordinator`] — request router, dynamic batcher, worker pool, metrics.
+//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families,
+//!   with batch-amortized stacked-factor projection ([`projection::Projection::project_batch`]).
+//! * [`lsh`] — the six hash families behind common traits + parameter planning;
+//!   [`lsh::HashFamily::hash_batch`] hashes whole serving batches at once.
+//! * [`index`] — multi-table LSH index with multiprobe and exact re-ranking:
+//!   the single-shard reference [`index::LshIndex`] and the concurrently
+//!   readable, `&self`-insert [`index::ShardedLshIndex`] the serving stack
+//!   runs on.
+//! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle
+//!   (stubbed out unless the `pjrt` feature is enabled).
+//! * [`coordinator`] — request router, dynamic batcher, batched hash stage,
+//!   shard-parallel scatter-gather worker pool, metrics.
 //! * [`bench_harness`] — regenerators for every table/figure of the paper.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! Hash a low-rank CP tensor with CP-E2LSH (this example is a compiled,
+//! executed doctest — `cargo test` runs it):
+//!
+//! ```
 //! use tensor_lsh::prelude::*;
 //!
 //! let mut rng = Rng::new(42);
@@ -36,8 +46,43 @@
 //! let fam = CpE2lsh::new(CpE2lshConfig {
 //!     dims: vec![32, 32, 32], rank: 8, k: 16, w: 4.0, seed: 7,
 //! });
-//! let codes = fam.hash(&AnyTensor::Cp(x));
+//! let codes = fam.hash(&AnyTensor::Cp(x.clone()));
 //! assert_eq!(codes.len(), 16);
+//!
+//! // Batched hashing is bit-identical to per-item hashing.
+//! let batch = vec![AnyTensor::Cp(x.clone()), AnyTensor::Cp(x)];
+//! assert_eq!(fam.hash_batch(&batch), vec![codes.clone(), codes]);
+//! ```
+//!
+//! Build a sharded index and search it (queries and inserts both take
+//! `&self`, so this scales across coordinator workers):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tensor_lsh::prelude::*;
+//!
+//! let dims = vec![8usize, 8, 8];
+//! let mut rng = Rng::new(7);
+//! let items: Vec<AnyTensor> = (0..200)
+//!     .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+//!     .collect();
+//! let cfg = IndexConfig {
+//!     family_builder: {
+//!         let dims = dims.clone();
+//!         Arc::new(move |t| {
+//!             Arc::new(CpSrp::new(CpSrpConfig {
+//!                 dims: dims.clone(), rank: 4, k: 10, seed: 100 + t as u64,
+//!             })) as Arc<dyn HashFamily>
+//!         })
+//!     },
+//!     n_tables: 8,
+//!     metric: Metric::Cosine,
+//!     probes: 0,
+//! };
+//! let index = ShardedLshIndex::build_parallel(&cfg, items.clone(), 4)?;
+//! let hits = index.search(&items[3], 5)?;
+//! assert_eq!(hits[0].id, 3); // an indexed item is its own nearest neighbor
+//! # Ok::<(), tensor_lsh::Error>(())
 //! ```
 
 pub mod bench_harness;
@@ -62,7 +107,7 @@ pub use error::{Error, Result};
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::error::{Error, Result};
-    pub use crate::index::{IndexConfig, LshIndex, SearchResult};
+    pub use crate::index::{IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex};
     pub use crate::lsh::{
         CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, E2lshFamily, HashFamily, NaiveE2lsh,
         NaiveSrp, SrpFamily, TtE2lsh, TtE2lshConfig, TtSrp, TtSrpConfig,

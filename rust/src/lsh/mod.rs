@@ -32,8 +32,29 @@ pub trait HashFamily: Send + Sync {
         self.discretize(&self.project(x))
     }
 
+    /// Hash a batch of tensors: `out[b]` equals `hash(&xs[b])` bit-for-bit.
+    ///
+    /// Goes through [`HashFamily::project_batch`], so families whose
+    /// projection bank has a batch-amortized layout (the CP stacked factors)
+    /// hash a serving batch in one fattened pass per mode instead of one per
+    /// item. The index and the coordinator's hash stage feed whole batches
+    /// through this path.
+    fn hash_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<i32>> {
+        self.project_batch(xs)
+            .iter()
+            .map(|z| self.discretize(z))
+            .collect()
+    }
+
     /// The K raw projections (pre-discretization) — multiprobe needs these.
     fn project(&self, x: &AnyTensor) -> Vec<f64>;
+
+    /// Raw projections for a batch; `out[b]` equals `project(&xs[b])`
+    /// bit-for-bit. Default loops; hashers over batch-capable projection
+    /// banks override to delegate to [`crate::projection::Projection::project_batch`].
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.project(x)).collect()
+    }
 
     /// Discretize raw projections into codes.
     fn discretize(&self, z: &[f64]) -> Vec<i32>;
@@ -107,6 +128,10 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
         self.proj.project(x)
     }
 
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        self.proj.project_batch(xs)
+    }
+
     fn discretize(&self, z: &[f64]) -> Vec<i32> {
         z.iter()
             .zip(&self.b)
@@ -175,6 +200,10 @@ impl<P: Projection> HashFamily for SrpHasher<P> {
 
     fn project(&self, x: &AnyTensor) -> Vec<f64> {
         self.proj.project(x)
+    }
+
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        self.proj.project_batch(xs)
     }
 
     fn discretize(&self, z: &[f64]) -> Vec<i32> {
@@ -368,6 +397,33 @@ mod tests {
                 assert_eq!(fam.hash(v), h0, "family {}", fam.name());
             }
         }
+    }
+
+    #[test]
+    fn hash_batch_equals_per_item_hash_for_all_families() {
+        // Satellite acceptance: for a fixed seed, `hash_batch` must equal
+        // per-item `hash` exactly, across all six families and mixed ranks.
+        let mut rng = Rng::new(105);
+        let batch: Vec<AnyTensor> = (0..9)
+            .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims(), 1 + i % 4)))
+            .collect();
+        let fams: Vec<Box<dyn HashFamily>> = vec![
+            Box::new(CpE2lsh::new(CpE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 55 })),
+            Box::new(TtE2lsh::new(TtE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 55 })),
+            Box::new(CpSrp::new(CpSrpConfig { dims: dims(), rank: 3, k: 8, seed: 55 })),
+            Box::new(TtSrp::new(TtSrpConfig { dims: dims(), rank: 3, k: 8, seed: 55 })),
+            Box::new(NaiveE2lsh::naive(&dims(), 8, 4.0, 55)),
+            Box::new(NaiveSrp::naive(&dims(), 8, 55)),
+        ];
+        for fam in &fams {
+            let hb = fam.hash_batch(&batch);
+            assert_eq!(hb.len(), batch.len(), "family {}", fam.name());
+            for (x, codes) in batch.iter().zip(&hb) {
+                assert_eq!(&fam.hash(x), codes, "family {}", fam.name());
+            }
+        }
+        // Empty batches are fine.
+        assert!(fams[0].hash_batch(&[]).is_empty());
     }
 
     #[test]

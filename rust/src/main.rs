@@ -17,7 +17,7 @@ use tensor_lsh::bench_harness as bh;
 use tensor_lsh::config::AppConfig;
 use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, Query};
 use tensor_lsh::error::{Error, Result};
-use tensor_lsh::index::{recall_at_k, LshIndex, Metric};
+use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{plan_cosine, plan_euclidean, validity_report, HashFamily};
 use tensor_lsh::projection::{CpRademacher, Distribution};
 use tensor_lsh::rng::Rng;
@@ -52,7 +52,8 @@ fn print_usage() {
          \x20 serve    run the coordinator over a synthetic query trace\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
          config keys: dims rank_proj rank_in k l w family metric probes\n\
-         \x20            n_items top_k n_workers max_batch max_wait_us seed artifact_dir"
+         \x20            n_items top_k n_workers shards max_batch max_wait_us\n\
+         \x20            seed artifact_dir"
     );
 }
 
@@ -198,6 +199,31 @@ fn cmd_search(cfg: &AppConfig) -> Result<()> {
     Ok(())
 }
 
+/// Synthetic corpus → sharded serving index (parallel build, one thread per
+/// shard).
+fn build_corpus_sharded(cfg: &AppConfig) -> Result<Arc<ShardedLshIndex>> {
+    let spec = DatasetSpec {
+        dims: cfg.dims.clone(),
+        n_items: cfg.n_items,
+        rank: cfg.rank_in,
+        n_clusters: (cfg.n_items / 50).max(2),
+        noise: 0.35,
+        seed: cfg.seed,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let icfg = bh::index_config(
+        cfg.family,
+        cfg.metric,
+        cfg.dims.clone(),
+        cfg.rank_proj,
+        cfg.k,
+        cfg.l,
+        cfg.w,
+        cfg.seed,
+    );
+    Ok(Arc::new(ShardedLshIndex::build_parallel(&icfg, items, cfg.shards)?))
+}
+
 fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
     let (index, backend) = if pjrt {
         // PJRT serving uses the manifest shapes and LSH banding: the K-wide
@@ -240,9 +266,12 @@ fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
             },
             n_tables: cfg.l,
             metric: Metric::Cosine,
-            probes: cfg.probes,
+            // The PJRT artifact emits exact-bucket codes only; a probed
+            // index would silently diverge between the PJRT path and the
+            // native fallback, so banded serving pins probes to 0.
+            probes: 0,
         };
-        let index = Arc::new(LshIndex::build(&icfg, items)?);
+        let index = Arc::new(ShardedLshIndex::build(&icfg, items, cfg.shards)?);
         let backend = HashBackend::Pjrt(PjrtServingParams {
             artifact_dir: dir,
             artifact: "cp_srp".into(),
@@ -252,15 +281,14 @@ fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
         });
         (index, backend)
     } else {
-        let (index, _items) = build_corpus_index(cfg)?;
-        (index, HashBackend::Native)
+        (build_corpus_sharded(cfg)?, HashBackend::Native)
     };
     let mut rng = Rng::derive(cfg.seed, &[0x5E71]);
     let trace = zipf_trace(&mut rng, index.len(), 4 * cfg.n_items.min(2000), 1.1);
     let queries: Vec<Query> = trace
         .iter()
         .enumerate()
-        .map(|(i, &id)| Query::new(i as u64, index.item(id).clone(), cfg.top_k))
+        .map(|(i, &id)| Query::new(i as u64, index.item(id), cfg.top_k))
         .collect();
     let (responses, snap) =
         Coordinator::serve_trace(index, cfg.coordinator(), backend, queries)?;

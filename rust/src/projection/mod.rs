@@ -47,6 +47,18 @@ pub trait Projection: Send + Sync {
     /// Project a tensor: returns the K inner products `⟨P_k, X⟩`.
     fn project(&self, x: &AnyTensor) -> Vec<f64>;
 
+    /// Project a batch of tensors: `out[b][k] = ⟨P_k, X_b⟩`.
+    ///
+    /// The default just loops [`Projection::project`]; families with a
+    /// stacked parameter layout override it to amortize one fattened pass
+    /// per *mode* across the whole batch instead of per item (see
+    /// [`CpRademacher`] and EXPERIMENTS.md §Batch). Implementations must be
+    /// bit-identical to the per-item path so batched and unbatched hashing
+    /// land in the same buckets.
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.project(x)).collect()
+    }
+
     /// Stored parameter count (the space column of Tables 1–2).
     fn param_count(&self) -> usize;
 
@@ -165,6 +177,94 @@ impl CpRademacher {
         z
     }
 
+    /// Batched fused projection: one pass over each mode's stacked bank
+    /// serves the *whole batch*, so the `(d, K·R)` stacked factors are
+    /// streamed from memory once per mode instead of once per item — the
+    /// batch-amortized layout the serving hash stage runs on (EXPERIMENTS.md
+    /// §Batch).
+    ///
+    /// Per item this performs exactly the floating-point operations of
+    /// [`CpRademacher::project_cp_fused`] in exactly the same order (the
+    /// `i`-outer/`item`-inner loop swap keeps every per-item accumulation
+    /// sequence intact), so batched codes are bit-identical to per-item
+    /// codes.
+    fn project_cp_fused_batch(&self, xs: &[&CpTensor]) -> Vec<Vec<f64>> {
+        let k = self.tensors.len();
+        let r = self.rank;
+        let kr = k * r;
+        // Per-item offsets into the shared gram/acc scratch (ranks R̂ may
+        // differ across items).
+        let mut offs = Vec::with_capacity(xs.len() + 1);
+        let mut total = 0usize;
+        for x in xs {
+            offs.push(total);
+            total += x.rank() * kr;
+        }
+        offs.push(total);
+        let mut acc = vec![1.0f32; total];
+        let mut gram = vec![0.0f32; total];
+        for (n, stacked) in self.stacked.iter().enumerate() {
+            gram.iter_mut().for_each(|v| *v = 0.0);
+            let d = self.dims[n];
+            for i in 0..d {
+                let srow = &stacked[i * kr..(i + 1) * kr];
+                for (b, x) in xs.iter().enumerate() {
+                    let g = &mut gram[offs[b]..offs[b + 1]];
+                    let xrow = x.factors[n].row(i);
+                    // gram[s, :] += x[i, s] * srow[:] — same contiguous axpy
+                    // as the single-item kernel.
+                    for (s, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let gs = &mut g[s * kr..(s + 1) * kr];
+                        for (gj, &sv) in gs.iter_mut().zip(srow) {
+                            *gj += xv * sv;
+                        }
+                    }
+                }
+            }
+            for (a, &g) in acc.iter_mut().zip(gram.iter()) {
+                *a *= g;
+            }
+        }
+        // Reduce per item: z_k = scale_k · x.scale · Σ_{s, r} acc[s, k·R + r].
+        xs.iter()
+            .enumerate()
+            .map(|(b, x)| {
+                let rhat = x.rank();
+                let a = &acc[offs[b]..offs[b + 1]];
+                let mut z = vec![0.0f64; k];
+                for s in 0..rhat {
+                    let row = &a[s * kr..(s + 1) * kr];
+                    for (ki, zi) in z.iter_mut().enumerate() {
+                        let mut sum = 0.0f32;
+                        for &v in &row[ki * r..(ki + 1) * r] {
+                            sum += v;
+                        }
+                        *zi += sum as f64;
+                    }
+                }
+                let xs_scale = x.scale as f64;
+                for (zi, t) in z.iter_mut().zip(&self.tensors) {
+                    *zi *= t.scale as f64 * xs_scale;
+                }
+                z
+            })
+            .collect()
+    }
+
+    /// True if `x` is a CP tensor over exactly this bank's mode dims.
+    fn dims_match_cp(&self, x: &AnyTensor) -> bool {
+        match x {
+            AnyTensor::Cp(xc) => {
+                xc.factors.len() == self.dims.len()
+                    && xc.factors.iter().zip(&self.dims).all(|(f, &d)| f.d == d)
+            }
+            _ => false,
+        }
+    }
+
     /// The `band`-th contiguous slice of `band_k` projection tensors — LSH
     /// banding: one K-wide bank hashed once serves K/band_k tables. The
     /// sliced bank hashes identically to codes `[band·band_k, (band+1)·band_k)`
@@ -205,6 +305,23 @@ impl Projection for CpRademacher {
                 .iter()
                 .map(|p| inner::dense_cp(xd, p))
                 .collect(),
+        }
+    }
+
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        // The batch kernel needs a uniform CP layout; mixed/foreign batches
+        // fall back to the per-item path (numerically identical either way).
+        if xs.len() > 1 && xs.iter().all(|x| self.dims_match_cp(x)) {
+            let cps: Vec<&CpTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Cp(xc) => xc,
+                    _ => unreachable!("dims_match_cp admits only CP tensors"),
+                })
+                .collect();
+            self.project_cp_fused_batch(&cps)
+        } else {
+            xs.iter().map(|x| self.project(x)).collect()
         }
     }
 
@@ -467,6 +584,48 @@ mod tests {
             for i in 0..6 {
                 assert_close(zc[i], zd[i], 1e-3, 1e-3);
                 assert_close(zt[i], zd[i], 1e-3, 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn cp_project_batch_is_bit_identical_to_per_item() {
+        let mut rng = Rng::new(93);
+        let dims = [6usize, 5, 4];
+        let proj = CpRademacher::generate(21, &dims, 4, 10, Distribution::Rademacher);
+        // Mixed ranks exercise the per-item offsets of the batch kernel.
+        let batch: Vec<AnyTensor> = (0..7)
+            .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+            .collect();
+        let zb = proj.project_batch(&batch);
+        assert_eq!(zb.len(), batch.len());
+        for (x, zrow) in batch.iter().zip(&zb) {
+            let z1 = proj.project(x);
+            // Bit-identical, not just close: batched and per-item hashing
+            // must land in the same buckets.
+            assert_eq!(&z1, zrow);
+        }
+    }
+
+    #[test]
+    fn project_batch_falls_back_on_mixed_formats() {
+        let mut rng = Rng::new(94);
+        let dims = [5usize, 4, 3];
+        let xc = CpTensor::random_gaussian(&mut rng, &dims, 2);
+        let batch = vec![
+            AnyTensor::Cp(xc.clone()),
+            AnyTensor::Tt(xc.to_tt()),
+            AnyTensor::Dense(xc.materialize()),
+        ];
+        for proj in [
+            Box::new(CpRademacher::generate(3, &dims, 3, 6, Distribution::Rademacher))
+                as Box<dyn Projection>,
+            Box::new(TtRademacher::generate(3, &dims, 3, 6, Distribution::Rademacher)),
+            Box::new(GaussianDense::generate(3, &dims, 6)),
+        ] {
+            let zb = proj.project_batch(&batch);
+            for (x, zrow) in batch.iter().zip(&zb) {
+                assert_eq!(&proj.project(x), zrow, "{} batch mismatch", proj.name());
             }
         }
     }

@@ -1,0 +1,107 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is off.
+//!
+//! The real engine (`engine.rs`) needs the `xla` crate and an XLA toolchain,
+//! neither of which is vendored, so the default build swaps in this stub
+//! with the identical public surface. [`PjrtEngine::new`] always fails with
+//! [`Error::Runtime`]; callers that handle engine-init failure (the
+//! coordinator falls back to the native batched hash path, the PJRT tests
+//! and benches skip) keep working unchanged.
+
+use super::manifest::Manifest;
+use crate::error::{Error, Result};
+use crate::projection::{CpRademacher, TtRademacher};
+use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+
+/// A batch of query tensors in the format the artifact expects.
+pub enum HashBatchInput<'a> {
+    /// CP-format queries (each rank = manifest `rank_in`).
+    Cp(&'a [CpTensor]),
+    /// TT-format queries (uniform rank = manifest `rank_in`).
+    Tt(&'a [TtTensor]),
+    /// Dense queries (flattened internally).
+    Dense(&'a [DenseTensor]),
+}
+
+impl HashBatchInput<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            HashBatchInput::Cp(v) => v.len(),
+            HashBatchInput::Tt(v) => v.len(),
+            HashBatchInput::Dense(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "tensor-lsh was built without the `pjrt` feature; the PJRT backend is \
+         unavailable (rebuild with `--features pjrt` and an `xla` dependency)"
+            .into(),
+    )
+}
+
+/// Feature-gated placeholder for the PJRT execution engine.
+pub struct PjrtEngine {
+    manifest: Manifest,
+}
+
+impl PjrtEngine {
+    /// Always fails: the crate was built without PJRT support. The manifest
+    /// is still parsed first so configuration errors surface identically.
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        let _ = Manifest::load(dir)?;
+        Err(unavailable())
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string.
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Force compilation of every artifact (warmup).
+    pub fn warmup(&mut self) -> Result<()> {
+        Err(unavailable())
+    }
+
+    /// Hash a batch through one of the `cp_*` artifacts.
+    pub fn hash_cp(
+        &mut self,
+        _name: &str,
+        _batch: &[CpTensor],
+        _proj: &CpRademacher,
+        _e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        Err(unavailable())
+    }
+
+    /// Hash a batch through one of the `tt_*` artifacts.
+    pub fn hash_tt(
+        &mut self,
+        _name: &str,
+        _batch: &[TtTensor],
+        _proj: &TtRademacher,
+        _e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        Err(unavailable())
+    }
+
+    /// Hash a dense batch through a `naive_*` artifact.
+    pub fn hash_dense(
+        &mut self,
+        _name: &str,
+        _batch: &[DenseTensor],
+        _proj_rows: &[Vec<f32>],
+        _e2lsh: Option<(&[f64], f64)>,
+    ) -> Result<Vec<Vec<i32>>> {
+        Err(unavailable())
+    }
+}

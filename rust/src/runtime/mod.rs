@@ -11,6 +11,10 @@
 //! the two paths are numerically interchangeable (verified in
 //! `rust/tests/runtime_hlo.rs`).
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod manifest;
 

@@ -6,7 +6,7 @@ use tensor_lsh::bench_harness::{index_config, index_config_family};
 use tensor_lsh::config::{AppConfig, Family};
 use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, Query};
 use tensor_lsh::decomp::{cp_als, tt_svd, CpAlsOptions, TtSvdOptions};
-use tensor_lsh::index::{recall_at_k, LshIndex, Metric};
+use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::{AnyTensor, CpTensor, DenseTensor};
 use tensor_lsh::workload::{eeg_epochs, image_patches, low_rank_corpus, DatasetSpec};
@@ -90,9 +90,9 @@ fn config_to_coordinator_pipeline() {
         cfg.w,
         cfg.seed,
     );
-    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let index = Arc::new(ShardedLshIndex::build_parallel(&icfg, items, 4).unwrap());
     let queries: Vec<Query> = (0..50)
-        .map(|i| Query::new(i, index.item(i as usize % 300).clone(), 5))
+        .map(|i| Query::new(i, index.item(i as usize % 300), 5))
         .collect();
     let (responses, snap) = Coordinator::serve_trace(
         Arc::clone(&index),

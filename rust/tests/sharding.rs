@@ -1,0 +1,140 @@
+//! Shard/batch equivalence: the sharded, batched serving path must return
+//! exactly what the single-shard per-item reference path returns, across
+//! families, metrics, shard counts, and the coordinator pipeline.
+
+use std::sync::Arc;
+use tensor_lsh::bench_harness::index_config;
+use tensor_lsh::config::Family;
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+
+fn corpus(dims: Vec<usize>, n: usize, seed: u64) -> Vec<AnyTensor> {
+    low_rank_corpus(&DatasetSpec {
+        dims,
+        n_items: n,
+        rank: 2,
+        n_clusters: 8,
+        noise: 0.3,
+        seed,
+    })
+    .0
+}
+
+/// For a fixed seed, `hash_batch` equals per-item `hash` through the exact
+/// families an index instantiates.
+#[test]
+fn index_families_hash_batch_equals_hash() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 16, 41);
+    for (family, metric) in [
+        (Family::Cp, Metric::Cosine),
+        (Family::Cp, Metric::Euclidean),
+        (Family::Tt, Metric::Cosine),
+        (Family::Tt, Metric::Euclidean),
+    ] {
+        let cfg = index_config(family, metric, dims.clone(), 4, 8, 4, 4.0, 42);
+        let index = LshIndex::build(&cfg, items.clone()).unwrap();
+        for fam in index.families() {
+            let hb = fam.hash_batch(&items);
+            for (x, codes) in items.iter().zip(&hb) {
+                assert_eq!(&fam.hash(x), codes, "{family:?}/{metric:?}");
+            }
+        }
+    }
+}
+
+/// A sharded index returns the same `SearchResult`s as the pre-refactor
+/// single-shard path, for every family × metric and several shard counts.
+#[test]
+fn sharded_equals_single_shard_across_families() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 300, 43);
+    let mut rng = Rng::new(44);
+    for (family, metric) in [
+        (Family::Cp, Metric::Cosine),
+        (Family::Cp, Metric::Euclidean),
+        (Family::Tt, Metric::Cosine),
+        (Family::Tt, Metric::Euclidean),
+    ] {
+        let cfg = index_config(family, metric, dims.clone(), 4, 8, 6, 4.0, 45);
+        let single = LshIndex::build(&cfg, items.clone()).unwrap();
+        for n_shards in [1usize, 4, 7] {
+            let sharded =
+                ShardedLshIndex::build_parallel(&cfg, items.clone(), n_shards).unwrap();
+            for _ in 0..8 {
+                let q = single.item(rng.below(single.len())).clone();
+                assert_eq!(
+                    single.search(&q, 10).unwrap(),
+                    sharded.search(&q, 10).unwrap(),
+                    "{family:?}/{metric:?} shards={n_shards}"
+                );
+            }
+        }
+    }
+}
+
+/// `search_batch` equals per-query `search`, and the sharded exact scan
+/// equals the single-shard exact scan.
+#[test]
+fn batched_and_exact_paths_are_equivalent() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 260, 46);
+    let cfg = index_config(Family::Cp, Metric::Cosine, dims, 4, 10, 8, 4.0, 47);
+    let single = LshIndex::build(&cfg, items.clone()).unwrap();
+    let sharded = ShardedLshIndex::build(&cfg, items.clone(), 5).unwrap();
+    let queries: Vec<AnyTensor> = (0..20).map(|i| items[i * 13 % items.len()].clone()).collect();
+    let batched = sharded.search_batch(&queries, 6).unwrap();
+    for (q, res) in queries.iter().zip(&batched) {
+        assert_eq!(&sharded.search(q, 6).unwrap(), res);
+        assert_eq!(&single.search(q, 6).unwrap(), res);
+        assert_eq!(
+            single.exact_search(q, 6).unwrap(),
+            sharded.exact_search(q, 6).unwrap()
+        );
+    }
+}
+
+/// The coordinator's scatter-gather pipeline returns exactly the offline
+/// sharded search results.
+#[test]
+fn coordinator_pipeline_equals_offline_search() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 240, 48);
+    let cfg = index_config(Family::Cp, Metric::Cosine, dims, 4, 10, 6, 4.0, 49);
+    let index = Arc::new(ShardedLshIndex::build_parallel(&cfg, items, 6).unwrap());
+    let queries: Vec<Query> = (0..48)
+        .map(|i| Query::new(i, index.item(i as usize * 5 % 240), 5))
+        .collect();
+    let (responses, snap) = Coordinator::serve_trace(
+        Arc::clone(&index),
+        CoordinatorConfig { n_workers: 4, ..Default::default() },
+        HashBackend::Native,
+        queries.clone(),
+    )
+    .unwrap();
+    assert_eq!(responses.len(), 48);
+    assert_eq!(snap.queries, 48);
+    for r in &responses {
+        let offline = index.search(&queries[r.id as usize].tensor, 5).unwrap();
+        assert_eq!(r.results, offline, "resp {}", r.id);
+    }
+}
+
+/// Online inserts (through `&self`) are immediately visible to searches.
+#[test]
+fn online_inserts_visible_to_searches() {
+    let dims = vec![6usize, 6, 6];
+    let items = corpus(dims.clone(), 100, 50);
+    let cfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 8, 6, 4.0, 51);
+    let index = ShardedLshIndex::build(&cfg, items, 4).unwrap();
+    let extra = corpus(dims, 10, 52);
+    for x in &extra {
+        let id = index.insert(x.clone());
+        let hit = index.search(x, 1).unwrap();
+        assert_eq!(hit[0].id, id, "fresh insert must be its own nearest neighbor");
+    }
+    assert_eq!(index.len(), 110);
+}
