@@ -1,13 +1,20 @@
 //! Bench: coordinator throughput/latency vs worker count and batch policy on
-//! the sharded index + batched CP-E2LSH hash path (EXPERIMENTS.md §Serving).
+//! the sharded index + flat batched hash path (EXPERIMENTS.md §Serving).
 //!
-//! The headline number is the last block: batched (max_batch ≥ 32) vs
-//! single-item (max_batch = 1) throughput at the same worker count — the
-//! batched+sharded path's win from amortized stacked-factor hashing plus
-//! shard-parallel re-ranking.
+//! Runs the full pipeline for **CP-E2LSH and TT-E2LSH**. The headline number
+//! is the per-family summary block: batched (`max_batch ≥ 32`) vs
+//! single-item (`max_batch = 1`) throughput at the same worker count —
+//! `max_batch = 1` degenerates to the pre-refactor per-item hash loop, so
+//! the ratio isolates the stacked batch kernels' win (CP stacked factors,
+//! TT stacked block-diagonal cores) plus amortized batching overhead.
+//!
+//! Emits machine-readable `BENCH_coordinator.json` (items/sec and
+//! mean/p50/p99 ns per item for every cell, plus the speedup summary) so
+//! the perf trajectory is tracked across PRs. Set `BENCH_SMOKE=1` for a
+//! seconds-long smoke run (CI parses the JSON it writes).
 //!
 //! Run: `cargo bench --bench coordinator_throughput`
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 use tensor_lsh::bench_harness::index_config;
@@ -15,33 +22,60 @@ use tensor_lsh::config::Family;
 use tensor_lsh::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, Query};
 use tensor_lsh::index::{Metric, ShardedLshIndex};
 use tensor_lsh::rng::Rng;
+use tensor_lsh::util::json::Json;
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
 
-fn main() {
-    let dims = vec![12usize, 12, 12];
-    let spec = DatasetSpec {
-        dims: dims.clone(),
-        n_items: 3000,
-        rank: 3,
-        n_clusters: 40,
-        noise: 0.3,
-        seed: 5,
-    };
-    let (items, _) = low_rank_corpus(&spec);
-    let shards = 8usize;
-    let icfg = index_config(Family::Cp, Metric::Euclidean, dims.clone(), 4, 12, 8, 4.0, 5);
-    let index = Arc::new(ShardedLshIndex::build_parallel(&icfg, items, shards).unwrap());
+const SPEEDUP_TARGET: f64 = 1.5;
+
+struct Cell {
+    family: &'static str,
+    workers: usize,
+    max_batch: usize,
+    items_per_sec: f64,
+    mean_ns_per_item: f64,
+    p50_ns_per_item: f64,
+    p99_ns_per_item: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("family".into(), Json::Str(self.family.into()));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("max_batch".into(), Json::Num(self.max_batch as f64));
+        m.insert("items_per_sec".into(), Json::Num(self.items_per_sec));
+        m.insert("mean_ns_per_item".into(), Json::Num(self.mean_ns_per_item));
+        m.insert("p50_ns_per_item".into(), Json::Num(self.p50_ns_per_item));
+        m.insert("p99_ns_per_item".into(), Json::Num(self.p99_ns_per_item));
+        Json::Obj(m)
+    }
+}
+
+/// Drive one family through the worker × batch grid; returns the best
+/// batched/single-item speedup at equal worker count.
+fn run_family(
+    label: &'static str,
+    index: Arc<ShardedLshIndex>,
+    n_queries: usize,
+    worker_grid: &[usize],
+    batch_grid: &[usize],
+    top_k: usize,
+    cells: &mut Vec<Cell>,
+) -> f64 {
     let mut rng = Rng::new(6);
-    println!("## coordinator throughput (n=3000, L=8, K=12, cp-e2lsh, shards={shards})");
+    println!(
+        "\n## coordinator throughput ({label}, n={}, L={}, shards={})",
+        index.len(),
+        index.n_tables(),
+        index.n_shards()
+    );
     println!("| workers | max_batch | QPS | p50 µs | p99 µs |");
     println!("|---|---|---|---|---|");
-    let worker_grid = [1usize, 2, 4, 8];
-    let batch_grid = [1usize, 32, 64];
-    let mut qps: HashMap<(usize, usize), f64> = HashMap::new();
-    for &workers in &worker_grid {
-        for &max_batch in &batch_grid {
-            let queries: Vec<Query> = (0..4000)
-                .map(|i| Query::new(i, index.item(rng.below(index.len())), 10))
+    let mut qps: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for &workers in worker_grid {
+        for &max_batch in batch_grid {
+            let queries: Vec<Query> = (0..n_queries)
+                .map(|i| Query::new(i as u64, index.item(rng.below(index.len())), top_k))
                 .collect();
             let cfg = CoordinatorConfig {
                 n_workers: workers,
@@ -55,13 +89,26 @@ fn main() {
                 snap.qps, snap.p50_us, snap.p99_us
             );
             qps.insert((workers, max_batch), snap.qps);
+            cells.push(Cell {
+                family: label,
+                workers,
+                max_batch,
+                items_per_sec: snap.qps,
+                mean_ns_per_item: snap.mean_us * 1e3,
+                p50_ns_per_item: snap.p50_us * 1e3,
+                p99_ns_per_item: snap.p99_us * 1e3,
+            });
         }
     }
-    println!("\n## batched vs single-item speedup (same worker count)");
+    println!("\n## {label}: batched vs single-item speedup (same worker count)");
     let mut best = 0.0f64;
-    for &workers in &worker_grid {
+    for &workers in worker_grid {
         let single = qps[&(workers, 1)];
-        let batched = qps[&(workers, 32)].max(qps[&(workers, 64)]);
+        let batched = batch_grid
+            .iter()
+            .filter(|&&b| b > 1)
+            .map(|&b| qps[&(workers, b)])
+            .fold(0.0f64, f64::max);
         let ratio = batched / single;
         best = best.max(ratio);
         println!(
@@ -70,7 +117,67 @@ fn main() {
         );
     }
     println!(
-        "\nbest batched/single-item speedup at batch ≥ 32: {best:.2}x (target ≥ 1.50x: {})",
-        if best >= 1.5 { "MET" } else { "NOT MET" }
+        "{label}: best batched/single-item speedup at batch ≥ 32: {best:.2}x \
+         (target ≥ {SPEEDUP_TARGET:.2}x: {})",
+        if best >= SPEEDUP_TARGET { "MET" } else { "NOT MET" }
     );
+    best
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_items, n_queries) = if smoke { (300, 300) } else { (3000, 3000) };
+    let worker_grid: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+    let batch_grid: &[usize] = if smoke { &[1, 32] } else { &[1, 32, 64] };
+    let dims = vec![12usize, 12, 12];
+    let spec = DatasetSpec {
+        dims: dims.clone(),
+        n_items,
+        rank: 3,
+        n_clusters: 40,
+        noise: 0.3,
+        seed: 5,
+    };
+    let (items, _) = low_rank_corpus(&spec);
+    let shards = 8usize;
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    let mut tt_best = 0.0f64;
+    for (family, label) in [(Family::Cp, "cp-e2lsh"), (Family::Tt, "tt-e2lsh")] {
+        let icfg = index_config(family, Metric::Euclidean, dims.clone(), 4, 12, 8, 4.0, 5);
+        let index =
+            Arc::new(ShardedLshIndex::build_parallel(&icfg, items.clone(), shards).unwrap());
+        let best =
+            run_family(label, index, n_queries, worker_grid, batch_grid, 10, &mut cells);
+        if matches!(family, Family::Tt) {
+            tt_best = best;
+        }
+        speedups.insert(
+            format!("{label}_batched_vs_single_item"),
+            Json::Num((best * 100.0).round() / 100.0),
+        );
+    }
+    speedups.insert("target".into(), Json::Num(SPEEDUP_TARGET));
+    speedups.insert("tt_target_met".into(), Json::Bool(tt_best >= SPEEDUP_TARGET));
+
+    let mut config = BTreeMap::new();
+    config.insert(
+        "dims".into(),
+        Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    config.insert("n_items".into(), Json::Num(n_items as f64));
+    config.insert("n_queries_per_cell".into(), Json::Num(n_queries as f64));
+    config.insert("k".into(), Json::Num(12.0));
+    config.insert("l".into(), Json::Num(8.0));
+    config.insert("shards".into(), Json::Num(shards as f64));
+    config.insert("smoke".into(), Json::Bool(smoke));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("coordinator_throughput".into()));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("runs".into(), Json::Arr(cells.iter().map(Cell::to_json).collect()));
+    root.insert("speedup".into(), Json::Obj(speedups));
+    let path = "BENCH_coordinator.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
 }

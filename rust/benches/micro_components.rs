@@ -1,34 +1,170 @@
 //! Component micro-benchmarks for the query hot path (hash, candidate
-//! lookup, re-rank) — the measurements behind EXPERIMENTS.md §Perf.
+//! lookup, re-rank) — the measurements behind EXPERIMENTS.md §Perf — plus
+//! the flat-batch vs per-item hashing comparison behind §Layout.
+//!
+//! Emits machine-readable `BENCH_batch.json` (mean/p50/p99 ns per item and
+//! items/sec for the per-item loop and the flat [`CodeMatrix`] path, CP and
+//! TT) so the perf trajectory is tracked across PRs. Set `BENCH_SMOKE=1`
+//! for a seconds-long smoke run.
+//!
 //! Run: `cargo bench --bench micro_components`
+use std::collections::BTreeMap;
 use std::sync::Arc;
-use tensor_lsh::bench_harness::index_config;
+use tensor_lsh::bench_harness::{index_config, index_config_family};
 use tensor_lsh::config::Family;
-use tensor_lsh::index::{signature, LshIndex, Metric};
+use tensor_lsh::index::{signature, CodeMatrix, LshIndex, Metric};
+use tensor_lsh::lsh::HashFamily;
 use tensor_lsh::rng::Rng;
-use tensor_lsh::util::timer::bench;
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::util::json::Json;
+use tensor_lsh::util::timer::{bench, Timing};
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
 
+/// One measured hashing path, normalized per item.
+struct Entry {
+    family: &'static str,
+    path: &'static str,
+    mean_ns_per_item: f64,
+    p50_ns_per_item: f64,
+    p99_ns_per_item: f64,
+    items_per_sec: f64,
+}
+
+impl Entry {
+    fn from_timing(family: &'static str, path: &'static str, t: &Timing, batch: usize) -> Self {
+        let b = batch as f64;
+        Entry {
+            family,
+            path,
+            mean_ns_per_item: t.mean_ns / b,
+            p50_ns_per_item: t.median_ns / b,
+            p99_ns_per_item: t.p99_ns / b,
+            items_per_sec: b * 1e9 / t.median_ns,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("family".into(), Json::Str(self.family.into()));
+        m.insert("path".into(), Json::Str(self.path.into()));
+        m.insert("mean_ns_per_item".into(), Json::Num(self.mean_ns_per_item));
+        m.insert("p50_ns_per_item".into(), Json::Num(self.p50_ns_per_item));
+        m.insert("p99_ns_per_item".into(), Json::Num(self.p99_ns_per_item));
+        m.insert("items_per_sec".into(), Json::Num(self.items_per_sec));
+        Json::Obj(m)
+    }
+}
+
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_items, samples, min_ms) = if smoke { (400, 3, 1.0) } else { (3000, 5, 10.0) };
+    let batch = 64usize;
     let dims = vec![12usize, 12, 12];
-    let spec = DatasetSpec { dims: dims.clone(), n_items: 3000, rank: 3, n_clusters: 40, noise: 0.3, seed: 5 };
+    let spec = DatasetSpec {
+        dims: dims.clone(),
+        n_items,
+        rank: 3,
+        n_clusters: 40,
+        noise: 0.3,
+        seed: 5,
+    };
     let (items, _) = low_rank_corpus(&spec);
+
+    // Per-stage costs of one query (EXPERIMENTS.md §Perf).
     let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 12, 8, 4.0, 5);
-    let index = Arc::new(LshIndex::build(&icfg, items).unwrap());
+    let index = Arc::new(LshIndex::build(&icfg, items.clone()).unwrap());
     let mut rng = Rng::new(6);
     let q = index.item(rng.below(index.len())).clone();
-    let t_hash = bench(|| {
-        index.families().iter().map(|f| signature(&f.hash(&q))).collect::<Vec<u64>>()
-    }, 5, 10.0);
-    println!("hash 8 tables: {:.1} us", t_hash.median_ns/1e3);
+    let t_hash = bench(
+        || index.families().iter().map(|f| signature(&f.hash(&q))).collect::<Vec<u64>>(),
+        samples,
+        min_ms,
+    );
+    println!("hash 8 tables: {:.1} us", t_hash.median_ns / 1e3);
     let sigs: Vec<u64> = index.families().iter().map(|f| signature(&f.hash(&q))).collect();
-    let t_cand = bench(|| index.candidates_from_signatures(&sigs), 5, 10.0);
+    let t_cand = bench(|| index.candidates_from_signatures(&sigs), samples, min_ms);
     let cand = index.candidates_from_signatures(&sigs);
-    println!("candidates ({}): {:.1} us", cand.len(), t_cand.median_ns/1e3);
-    let t_rerank = bench(|| index.rerank_candidates(&q, cand.clone(), 10).unwrap(), 5, 10.0);
-    println!("rerank: {:.1} us", t_rerank.median_ns/1e3);
-    let t_clone = bench(|| q.clone(), 5, 10.0);
-    println!("query clone: {:.2} us", t_clone.median_ns/1e3);
-    let t_full = bench(|| index.search(&q, 10).unwrap(), 5, 10.0);
-    println!("full search: {:.1} us", t_full.median_ns/1e3);
+    println!("candidates ({}): {:.1} us", cand.len(), t_cand.median_ns / 1e3);
+    let t_rerank =
+        bench(|| index.rerank_candidates(&q, cand.clone(), 10).unwrap(), samples, min_ms);
+    println!("rerank: {:.1} us", t_rerank.median_ns / 1e3);
+    let t_clone = bench(|| q.clone(), samples, min_ms);
+    println!("query clone: {:.2} us", t_clone.median_ns / 1e3);
+    let t_full = bench(|| index.search(&q, 10).unwrap(), samples, min_ms);
+    println!("full search: {:.1} us", t_full.median_ns / 1e3);
+
+    // Flat batch vs per-item hashing, CP and TT (EXPERIMENTS.md §Layout):
+    // the same L-table signature computation, once through the legacy
+    // per-(item, table) loop and once through one CodeMatrix per batch.
+    let qbatch: Vec<AnyTensor> =
+        (0..batch).map(|i| index.item((i * 7) % index.len()).clone()).collect();
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    println!("\n## flat CodeMatrix vs per-item hashing (batch={batch}, L=8, K=12)");
+    for (family, label) in [(Family::Cp, "cp-e2lsh"), (Family::Tt, "tt-e2lsh")] {
+        let families: Vec<Arc<dyn HashFamily>> = (0..8u64)
+            .map(|t| {
+                index_config_family(family, Metric::Euclidean, &dims, 4, 12, 4.0, 5 + 1000 * t)
+            })
+            .collect();
+        let t_item = bench(
+            || {
+                qbatch
+                    .iter()
+                    .map(|x| families.iter().map(|f| signature(&f.hash(x))).collect::<Vec<u64>>())
+                    .collect::<Vec<_>>()
+            },
+            samples,
+            min_ms,
+        );
+        let t_flat = bench(|| CodeMatrix::build(&families, &qbatch), samples, min_ms);
+        let speedup = t_item.median_ns / t_flat.median_ns;
+        println!(
+            "{label}: per-item {:.2} us/item vs flat batch {:.2} us/item → {speedup:.2}x",
+            t_item.median_ns / 1e3 / batch as f64,
+            t_flat.median_ns / 1e3 / batch as f64,
+        );
+        entries.push(Entry::from_timing(label, "per_item", &t_item, batch));
+        entries.push(Entry::from_timing(label, "flat_batch", &t_flat, batch));
+        speedups.insert(
+            format!("{label}_flat_vs_per_item"),
+            Json::Num((speedup * 100.0).round() / 100.0),
+        );
+    }
+
+    let mut config = BTreeMap::new();
+    config.insert(
+        "dims".into(),
+        Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    config.insert("n_items".into(), Json::Num(n_items as f64));
+    config.insert("batch".into(), Json::Num(batch as f64));
+    config.insert("k".into(), Json::Num(12.0));
+    config.insert("l".into(), Json::Num(8.0));
+    config.insert("smoke".into(), Json::Bool(smoke));
+
+    let mut stages = BTreeMap::new();
+    for (name, t) in [
+        ("hash_8_tables", &t_hash),
+        ("candidates", &t_cand),
+        ("rerank", &t_rerank),
+        ("query_clone", &t_clone),
+        ("full_search", &t_full),
+    ] {
+        let mut m = BTreeMap::new();
+        m.insert("median_ns".into(), Json::Num(t.median_ns));
+        m.insert("mean_ns".into(), Json::Num(t.mean_ns));
+        m.insert("p99_ns".into(), Json::Num(t.p99_ns));
+        stages.insert(name.to_string(), Json::Obj(m));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("micro_components".into()));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("stages".into(), Json::Obj(stages));
+    root.insert("entries".into(), Json::Arr(entries.iter().map(Entry::to_json).collect()));
+    root.insert("speedup".into(), Json::Obj(speedups));
+    let path = "BENCH_batch.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
 }

@@ -15,8 +15,10 @@
 //!
 //! * The **batcher** groups queries by size/deadline so both batched hash
 //!   paths run full (the PJRT artifact has a fixed batch dimension; the
-//!   native path amortizes one stacked-factor pass per mode across the
-//!   batch via [`crate::lsh::HashFamily::project_batch`]).
+//!   native path amortizes one stacked-parameter pass per mode across the
+//!   batch via [`crate::lsh::HashFamily::project_batch_into`], writing into
+//!   a flat [`crate::index::HashScratch`] arena the stage reuses across
+//!   batches).
 //! * The **hash stage** owns the (non-`Sync`) [`crate::runtime::PjrtEngine`]
 //!   when the PJRT backend is selected; the native backend batch-hashes on
 //!   this stage and falls in for PJRT on engine failure.

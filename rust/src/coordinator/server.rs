@@ -12,7 +12,7 @@ use super::batcher::{drain_batch, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{Query, QueryResponse};
 use crate::error::{Error, Result};
-use crate::index::{merge_partials, signature, SearchResult, ShardedLshIndex};
+use crate::index::{merge_partials, signature, HashScratch, SearchResult, ShardedLshIndex};
 use crate::projection::CpRademacher;
 use crate::runtime::PjrtEngine;
 use crate::tensor::{AnyTensor, CpTensor};
@@ -259,6 +259,10 @@ impl Coordinator {
                     HashBackend::Native => None,
                 };
                 let mut ticket = 0u64;
+                // Flat hash arena, reused across every batch this stage
+                // serves: buffers grow to the high-water batch once, then
+                // steady-state hashing allocates nothing (§Layout).
+                let mut scratch = HashScratch::new();
                 while let Some(batch) = drain_batch(&in_rx, &batcher) {
                     metrics.record_batch(batch.len());
                     let jobs = match (&backend, engine_state.as_mut()) {
@@ -270,11 +274,11 @@ impl Coordinator {
                                         "coordinator: PJRT hash failed: {err}; \
                                          falling back to native"
                                     );
-                                    hash_batch_native(&index, batch)
+                                    hash_batch_native(&index, batch, &mut scratch)
                                 }
                             }
                         }
-                        _ => hash_batch_native(&index, batch),
+                        _ => hash_batch_native(&index, batch, &mut scratch),
                     };
                     for job in jobs {
                         let job = Arc::new(job);
@@ -347,14 +351,16 @@ impl Coordinator {
     }
 }
 
-/// Native batched hashing: one `project_batch` pass per table for the whole
-/// batch (see [`ShardedLshIndex::signatures_batch`]), including multiprobe
-/// signatures when the index is configured with probes. The query tensors
-/// are moved out and back rather than cloned — this runs per batch on the
-/// serving hot path.
+/// Native batched hashing: one flat `project_batch_into` pass per table for
+/// the whole batch (see [`ShardedLshIndex::signatures_batch_with`]),
+/// including multiprobe signatures when the index is configured with
+/// probes. The query tensors are moved out and back rather than cloned, and
+/// the projection/code buffers live in the caller's reusable arena — this
+/// runs per batch on the serving hot path.
 fn hash_batch_native(
     index: &ShardedLshIndex,
     batch: Vec<(Query, Instant)>,
+    scratch: &mut HashScratch,
 ) -> Vec<QueryJob> {
     let mut metas = Vec::with_capacity(batch.len());
     let mut tensors = Vec::with_capacity(batch.len());
@@ -363,7 +369,7 @@ fn hash_batch_native(
         metas.push((id, top_k, t0));
         tensors.push(tensor);
     }
-    let sigs_batch = index.signatures_batch(&tensors);
+    let sigs_batch = index.signatures_batch_with(&tensors, scratch);
     metas
         .into_iter()
         .zip(tensors)

@@ -1,0 +1,205 @@
+//! Flat, arena-backed code buffer: the SoA layout bucket signatures are
+//! computed from (EXPERIMENTS.md §Layout).
+//!
+//! A [`CodeMatrix`] holds a whole batch's hash codes in one row-major
+//! `(batch, n_tables, K)` i32 allocation plus the precomputed `u64` bucket
+//! signature of every `(item, table)` row — replacing the
+//! `Vec<Vec<u64>>`/`Vec<Vec<i32>>` nests (one heap block per item per
+//! table) the bulk-build and serving paths used to shuffle around. Like
+//! [`ProjectionMatrix`], it is an arena: [`CodeMatrix::rebuild`] re-shapes
+//! the buffers in place so a long-lived holder hashes every batch after the
+//! first allocation-free.
+
+use super::table::signature_strided;
+use crate::lsh::HashFamily;
+use crate::projection::ProjectionMatrix;
+use crate::tensor::AnyTensor;
+use std::sync::Arc;
+
+/// Row-major `(batch, n_tables, K)` code buffer + per-(item, table) bucket
+/// signatures. `codes_row(b, t)` is item `b`'s K codes under table `t`'s
+/// family; `sigs_row(b)` is the per-table signature slice the index insert
+/// and probe entry points consume directly.
+#[derive(Clone, Debug, Default)]
+pub struct CodeMatrix {
+    n_tables: usize,
+    k: usize,
+    batch: usize,
+    codes: Vec<i32>,
+    sigs: Vec<u64>,
+}
+
+impl CodeMatrix {
+    /// An empty matrix (no allocation); fill it with [`CodeMatrix::rebuild`].
+    pub fn empty() -> Self {
+        CodeMatrix::default()
+    }
+
+    /// Hash a batch through one family per table into a fresh matrix.
+    pub fn build(families: &[Arc<dyn HashFamily>], xs: &[AnyTensor]) -> Self {
+        let mut m = CodeMatrix::empty();
+        let mut scratch = ProjectionMatrix::empty();
+        m.rebuild(families, xs, &mut scratch);
+        m
+    }
+
+    /// Hash a batch through one family per table, reusing this matrix's
+    /// allocations and the caller's projection arena (the arena contract:
+    /// after the high-water batch, no allocation per batch).
+    ///
+    /// One [`HashFamily::hash_codes_into`] pass per table writes the strided
+    /// code columns; signatures then hash each `(item, table)` row in place.
+    /// This is the same code path [`HashFamily::hash_batch`] wraps, so
+    /// matrix codes are bit-identical to per-item `hash` codes.
+    pub fn rebuild(
+        &mut self,
+        families: &[Arc<dyn HashFamily>],
+        xs: &[AnyTensor],
+        scratch: &mut ProjectionMatrix,
+    ) {
+        let n_tables = families.len();
+        let k = families.first().map_or(0, |f| f.k());
+        // Hard assert (not debug): a mismatched-K family would silently
+        // stride-corrupt every row after it in release builds.
+        assert!(
+            families.iter().all(|f| f.k() == k),
+            "CodeMatrix requires all tables to share K"
+        );
+        self.n_tables = n_tables;
+        self.k = k;
+        self.batch = xs.len();
+        self.codes.clear();
+        self.codes.resize(xs.len() * n_tables * k, 0);
+        self.sigs.clear();
+        self.sigs.resize(xs.len() * n_tables, 0);
+        let stride = n_tables * k;
+        for (t, fam) in families.iter().enumerate() {
+            fam.hash_codes_into(xs, scratch, &mut self.codes, t * k, stride);
+        }
+        for b in 0..self.batch {
+            for t in 0..n_tables {
+                self.sigs[b * n_tables + t] =
+                    signature_strided(&self.codes[(b * n_tables + t) * k..], k, 1);
+            }
+        }
+    }
+
+    /// Number of items in the batch.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Number of tables L.
+    pub fn n_tables(&self) -> usize {
+        self.n_tables
+    }
+
+    /// Codes per (item, table) row.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// True if the matrix holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.batch == 0
+    }
+
+    /// Item `b`'s K codes under table `t`.
+    #[inline]
+    pub fn codes_row(&self, b: usize, t: usize) -> &[i32] {
+        let start = (b * self.n_tables + t) * self.k;
+        &self.codes[start..start + self.k]
+    }
+
+    /// Item `b`'s bucket signature in table `t`.
+    #[inline]
+    pub fn sig(&self, b: usize, t: usize) -> u64 {
+        self.sigs[b * self.n_tables + t]
+    }
+
+    /// Item `b`'s per-table signatures — the slice the index's
+    /// `insert_codes` / `candidates_from_codes` entry points consume.
+    #[inline]
+    pub fn sigs_row(&self, b: usize) -> &[u64] {
+        &self.sigs[b * self.n_tables..(b + 1) * self.n_tables]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::signature;
+    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+
+    fn families(dims: &[usize]) -> Vec<Arc<dyn HashFamily>> {
+        (0..3u64)
+            .map(|t| {
+                Arc::new(CpSrp::new(CpSrpConfig {
+                    dims: dims.to_vec(),
+                    rank: 3,
+                    k: 6,
+                    seed: 900 + t,
+                })) as Arc<dyn HashFamily>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn code_matrix_rows_equal_per_item_hash() {
+        let dims = vec![5usize, 4, 3];
+        let fams = families(&dims);
+        let mut rng = Rng::new(71);
+        let xs: Vec<AnyTensor> = (0..7)
+            .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+            .collect();
+        let cm = CodeMatrix::build(&fams, &xs);
+        assert_eq!(cm.batch(), 7);
+        assert_eq!(cm.n_tables(), 3);
+        assert_eq!(cm.k(), 6);
+        for (b, x) in xs.iter().enumerate() {
+            for (t, fam) in fams.iter().enumerate() {
+                let codes = fam.hash(x);
+                assert_eq!(cm.codes_row(b, t), codes.as_slice(), "b={b} t={t}");
+                assert_eq!(cm.sig(b, t), signature(&codes), "b={b} t={t}");
+            }
+            assert_eq!(cm.sigs_row(b).len(), 3);
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_handles_resizes() {
+        let dims = vec![4usize, 4];
+        let fams: Vec<Arc<dyn HashFamily>> = (0..2u64)
+            .map(|t| {
+                Arc::new(TtE2lsh::new(TtE2lshConfig {
+                    dims: dims.clone(),
+                    rank: 2,
+                    k: 5,
+                    w: 4.0,
+                    seed: 30 + t,
+                })) as Arc<dyn HashFamily>
+            })
+            .collect();
+        let mut rng = Rng::new(72);
+        let big: Vec<AnyTensor> = (0..6)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+            .collect();
+        let small = big[..2].to_vec();
+        let mut cm = CodeMatrix::empty();
+        let mut scratch = ProjectionMatrix::empty();
+        cm.rebuild(&fams, &big, &mut scratch);
+        assert_eq!(cm.batch(), 6);
+        cm.rebuild(&fams, &small, &mut scratch);
+        assert_eq!(cm.batch(), 2);
+        for (b, x) in small.iter().enumerate() {
+            for (t, fam) in fams.iter().enumerate() {
+                assert_eq!(cm.codes_row(b, t), fam.hash(x).as_slice());
+            }
+        }
+        assert!(!cm.is_empty());
+        cm.rebuild(&fams, &[], &mut scratch);
+        assert!(cm.is_empty());
+    }
+}

@@ -17,16 +17,19 @@
 //!   fans out shard-by-shard. Batched hashing enters through
 //!   [`crate::lsh::HashFamily::hash_batch`].
 
+mod codes;
 mod multiprobe;
 mod shard;
 mod table;
 
+pub use codes::CodeMatrix;
 pub use multiprobe::{e2lsh_probes, srp_probes};
 pub use shard::{merge_partials, ShardedLshIndex};
-pub use table::{signature, HashTable};
+pub use table::{signature, signature_strided, HashTable};
 
 use crate::error::{Error, Result};
 use crate::lsh::HashFamily;
+use crate::projection::ProjectionMatrix;
 use crate::tensor::AnyTensor;
 use std::sync::Arc;
 
@@ -123,21 +126,20 @@ pub(crate) fn sort_results(metric: Metric, scored: &mut [SearchResult]) {
     }
 }
 
-/// Batched bucket signatures: one [`HashFamily::hash_batch`] pass per table,
-/// transposed to per-item rows (`out[i][t]` = item `i`'s signature in table
-/// `t`). The single code path behind every bulk build, so batched and
-/// per-item insertion stay bit-identical by construction.
-pub(crate) fn batch_signatures(
-    families: &[Arc<dyn HashFamily>],
-    items: &[AnyTensor],
-) -> Vec<Vec<u64>> {
-    let per_table: Vec<Vec<u64>> = families
-        .iter()
-        .map(|fam| fam.hash_batch(items).iter().map(|codes| signature(codes)).collect())
-        .collect();
-    (0..items.len())
-        .map(|i| per_table.iter().map(|t| t[i]).collect())
-        .collect()
+/// Reusable scratch for the flat batched hash path: the projection arena
+/// plus one code row. Long-lived holders (the coordinator's hash stage)
+/// keep one across batches so steady-state hashing allocates nothing
+/// (EXPERIMENTS.md §Layout).
+#[derive(Debug, Default)]
+pub struct HashScratch {
+    pub(crate) z: ProjectionMatrix,
+    pub(crate) codes: Vec<i32>,
+}
+
+impl HashScratch {
+    pub fn new() -> Self {
+        HashScratch::default()
+    }
 }
 
 impl LshIndex {
@@ -199,14 +201,22 @@ impl LshIndex {
         id
     }
 
-    /// Insert a batch: one [`HashFamily::hash_batch`] pass per table instead
+    /// Insert row `b` of a precomputed [`CodeMatrix`] — the flat bulk-build
+    /// entry point: signatures come straight off the matrix row, no
+    /// per-item Vec. Returns the assigned id.
+    pub fn insert_codes(&mut self, x: AnyTensor, codes: &CodeMatrix, b: usize) -> usize {
+        debug_assert_eq!(codes.n_tables(), self.tables.len());
+        self.insert_with_signatures(x, codes.sigs_row(b))
+    }
+
+    /// Insert a batch: one flat [`CodeMatrix`] for the whole batch instead
     /// of one hash per (item, table). Bit-identical signatures to per-item
     /// [`LshIndex::insert`]; returns the assigned id range.
     pub fn insert_batch(&mut self, items: Vec<AnyTensor>) -> std::ops::Range<usize> {
         let start = self.items.len();
-        let sig_rows = batch_signatures(&self.families, &items);
-        for (x, sigs) in items.into_iter().zip(sig_rows) {
-            self.insert_with_signatures(x, &sigs);
+        let cm = CodeMatrix::build(&self.families, &items);
+        for (b, x) in items.into_iter().enumerate() {
+            self.insert_codes(x, &cm, b);
         }
         start..self.items.len()
     }
@@ -249,6 +259,13 @@ impl LshIndex {
     /// [`LshIndex::candidates_from_signatures`]).
     pub fn families(&self) -> &[Arc<dyn HashFamily>] {
         &self.families
+    }
+
+    /// Candidate ids for row `b` of a precomputed [`CodeMatrix`] — the flat
+    /// analogue of [`LshIndex::candidates_from_signatures`].
+    pub fn candidates_from_codes(&self, codes: &CodeMatrix, b: usize) -> Vec<usize> {
+        debug_assert_eq!(codes.n_tables(), self.tables.len());
+        self.candidates_from_signatures(codes.sigs_row(b))
     }
 
     /// Candidate ids given one precomputed signature per table.

@@ -11,34 +11,66 @@
 
 use super::table::signature;
 
-/// Extra probe signatures for an SRP family: flip up to `probes` least-
-/// confident bits, then the best pair of them. Returns ≤ `probes` signatures.
+/// Extra probe signatures for an SRP family: the `probes` cheapest sign
+/// perturbations, where a single flip of bit `i` costs `|z_i|` and a pair
+/// flip of bits `i, j` costs `|z_i| + |z_j|` (ties prefer singles, then
+/// lower bit indices). Returns ≤ `probes` signatures.
+///
+/// This makes the single/pair budget split explicit: the old formulation
+/// computed the pair budget *after* spending the whole budget on single
+/// flips, so the documented pair-flip probes never ran whenever `K ≥
+/// probes`. Ranking singles and pairs together by cost fixes that — a pair
+/// of two very-low-margin bits now outranks a confident single — and any
+/// pair selected necessarily has both of its (cheaper) singles selected
+/// too, so pair enumeration over the `min(K, probes)` least-confident bits
+/// is exhaustive for the top-`probes` set.
+///
+/// One scratch row is perturbed in place per probe — no per-probe clone.
 pub fn srp_probes(codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
-    let mut order: Vec<usize> = (0..codes.len()).collect();
-    order.sort_by(|&a, &b| z[a].abs().partial_cmp(&z[b].abs()).unwrap());
-    let mut out = Vec::with_capacity(probes);
-    // Single flips in confidence order.
-    for &k in order.iter().take(probes) {
-        let mut c = codes.to_vec();
-        c[k] = 1 - c[k];
-        out.push(signature(&c));
+    let k = codes.len();
+    if probes == 0 || k == 0 {
+        return Vec::new();
     }
-    // If budget remains beyond single flips, add double flips of the least
-    // confident pair combinations.
-    let mut budget = probes.saturating_sub(out.len());
-    'outer: for i in 0..order.len().min(probes) {
-        for j in i + 1..order.len().min(probes) {
-            if budget == 0 {
-                break 'outer;
-            }
-            let mut c = codes.to_vec();
-            c[order[i]] = 1 - c[order[i]];
-            c[order[j]] = 1 - c[order[j]];
-            out.push(signature(&c));
-            budget -= 1;
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| z[a].abs().partial_cmp(&z[b].abs()).unwrap());
+    // Candidates: (cost, first flip, second flip or usize::MAX for singles).
+    let m = k.min(probes);
+    let mut cands: Vec<(f64, usize, usize)> = Vec::with_capacity(k + m * (m - 1) / 2);
+    for &i in &order {
+        cands.push((z[i].abs(), i, usize::MAX));
+    }
+    for a in 0..m {
+        for b in a + 1..m {
+            let (i, j) = (order[a].min(order[b]), order[a].max(order[b]));
+            cands.push((z[i].abs() + z[j].abs(), i, j));
         }
     }
-    out
+    // Cost-ascending; equal cost prefers singles over pairs, then lower bit
+    // indices — a total, deterministic order.
+    cands.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap()
+            .then((a.2 != usize::MAX).cmp(&(b.2 != usize::MAX)))
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+    });
+    let mut scratch = codes.to_vec();
+    cands
+        .into_iter()
+        .take(probes)
+        .map(|(_, i, j)| {
+            scratch[i] = 1 - scratch[i];
+            if j != usize::MAX {
+                scratch[j] = 1 - scratch[j];
+            }
+            let sig = signature(&scratch);
+            scratch[i] = 1 - scratch[i];
+            if j != usize::MAX {
+                scratch[j] = 1 - scratch[j];
+            }
+            sig
+        })
+        .collect()
 }
 
 /// Extra probe signatures for an E2LSH family: for each coordinate, the
@@ -58,13 +90,16 @@ pub fn e2lsh_probes(codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
         deltas.push((frac.min(1.0 - frac), i, -1));
     }
     deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // One scratch row perturbed in place per probe — no per-probe clone.
+    let mut scratch = codes.to_vec();
     deltas
         .into_iter()
         .take(probes)
         .map(|(_, i, step)| {
-            let mut c = codes.to_vec();
-            c[i] += step;
-            signature(&c)
+            scratch[i] += step;
+            let sig = signature(&scratch);
+            scratch[i] -= step;
+            sig
         })
         .collect()
 }
@@ -89,6 +124,44 @@ mod tests {
         let z = vec![1.0; 8];
         assert!(srp_probes(&codes, &z, 5).len() >= 5);
         assert!(srp_probes(&codes, &z, 0).is_empty());
+    }
+
+    #[test]
+    fn srp_pair_flips_run_even_when_k_exceeds_probes() {
+        // Regression (satellite): the pre-fix budget split computed the
+        // pair budget after spending everything on single flips, so for
+        // K ≥ probes no pair-flip probe was ever emitted. With bits 1 and 2
+        // both near the hyperplane, their pair flip is cheaper than any
+        // confident single flip and must appear in the probe set.
+        let codes = vec![1, 0, 1, 0];
+        let z = vec![9.0, 0.01, 0.02, 8.0];
+        let probes = srp_probes(&codes, &z, 3);
+        assert_eq!(probes.len(), 3);
+        let flip = |bits: &[usize]| {
+            let mut c = codes.clone();
+            for &b in bits {
+                c[b] = 1 - c[b];
+            }
+            signature(&c)
+        };
+        // Cost order: single(1)=0.01, single(2)=0.02, pair(1,2)=0.03, …
+        assert_eq!(probes, vec![flip(&[1]), flip(&[2]), flip(&[1, 2])]);
+        // And the pair never outranks its own singles.
+        let two = srp_probes(&codes, &z, 2);
+        assert_eq!(two, vec![flip(&[1]), flip(&[2])]);
+    }
+
+    #[test]
+    fn srp_probes_are_unique_and_differ_from_exact_bucket() {
+        let codes = vec![1, 0, 1, 0, 1, 1];
+        let z = vec![0.5, -0.4, 0.3, -0.2, 0.1, 0.6];
+        let probes = srp_probes(&codes, &z, 8);
+        assert_eq!(probes.len(), 8);
+        let mut uniq: Vec<u64> = probes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), probes.len(), "no duplicate probe buckets");
+        assert!(!probes.contains(&signature(&codes)), "exact bucket is not a probe");
     }
 
     #[test]

@@ -21,9 +21,10 @@
 //! * **Parallel builds** — [`ShardedLshIndex::build_parallel`] hashes and
 //!   inserts each shard's slice on its own thread via batched hashing.
 
+use super::codes::CodeMatrix;
 use super::table::{signature, HashTable};
 use super::{
-    batch_signatures, build_families, score_candidate, sort_results, IndexConfig, Metric,
+    build_families, score_candidate, sort_results, HashScratch, IndexConfig, Metric,
     SearchResult,
 };
 use crate::error::Result;
@@ -229,13 +230,20 @@ impl ShardedLshIndex {
         id
     }
 
+    /// Insert row `b` of a precomputed [`CodeMatrix`] — the flat bulk-build
+    /// entry point (signatures come straight off the matrix row).
+    pub fn insert_codes(&self, x: AnyTensor, codes: &CodeMatrix, b: usize) -> usize {
+        debug_assert_eq!(codes.n_tables(), self.n_tables());
+        self.insert_with_signatures(x, codes.sigs_row(b))
+    }
+
     /// Bulk build with batched hashing, single-threaded (deterministic id =
     /// position order, like [`super::LshIndex::build`]).
     pub fn build(cfg: &IndexConfig, items: Vec<AnyTensor>, n_shards: usize) -> Result<Self> {
         let idx = ShardedLshIndex::new(cfg, n_shards)?;
-        let sig_rows = batch_signatures(&idx.families, &items);
-        for (x, sigs) in items.into_iter().zip(sig_rows) {
-            idx.insert_with_signatures(x, &sigs);
+        let cm = CodeMatrix::build(&idx.families, &items);
+        for (b, x) in items.into_iter().enumerate() {
+            idx.insert_codes(x, &cm, b);
         }
         Ok(idx)
     }
@@ -265,10 +273,10 @@ impl ShardedLshIndex {
             {
                 let idx = &idx;
                 scope.spawn(move || {
-                    let sig_rows = batch_signatures(&idx.families, &xs);
+                    let cm = CodeMatrix::build(&idx.families, &xs);
                     let mut shard = idx.shards[s].write().unwrap();
-                    for ((id, x), sigs) in ids.into_iter().zip(xs).zip(sig_rows) {
-                        shard.insert(id, x, &sigs);
+                    for (b, (id, x)) in ids.into_iter().zip(xs).enumerate() {
+                        shard.insert(id, x, cm.sigs_row(b));
                     }
                 });
             }
@@ -295,21 +303,37 @@ impl ShardedLshIndex {
     }
 
     /// Batched [`ShardedLshIndex::signatures`]: one
-    /// [`HashFamily::project_batch`] pass per table for the whole batch.
-    /// `out[b][t]` lists table `t`'s signatures for query `b`.
+    /// [`HashFamily::project_batch_into`] pass per table for the whole
+    /// batch. `out[b][t]` lists table `t`'s signatures for query `b`.
     pub fn signatures_batch(&self, qs: &[AnyTensor]) -> Vec<Vec<Vec<u64>>> {
+        self.signatures_batch_with(qs, &mut HashScratch::new())
+    }
+
+    /// [`ShardedLshIndex::signatures_batch`] over a caller-owned
+    /// [`HashScratch`]: projections land in the flat arena and codes in one
+    /// reused row, so a long-lived holder (the coordinator's hash stage)
+    /// hashes every batch after the first without per-item or per-batch
+    /// allocation (beyond the returned signature lists themselves).
+    pub fn signatures_batch_with(
+        &self,
+        qs: &[AnyTensor],
+        scratch: &mut HashScratch,
+    ) -> Vec<Vec<Vec<u64>>> {
         let mut out: Vec<Vec<Vec<u64>>> = (0..qs.len())
             .map(|_| Vec::with_capacity(self.families.len()))
             .collect();
         for fam in &self.families {
-            let zs = fam.project_batch(qs);
-            for (b, z) in zs.into_iter().enumerate() {
-                let codes = fam.discretize(&z);
-                let mut sigs = vec![signature(&codes)];
+            fam.project_batch_into(qs, &mut scratch.z);
+            scratch.codes.clear();
+            scratch.codes.resize(fam.k(), 0);
+            for (b, sigs_out) in out.iter_mut().enumerate() {
+                let z = scratch.z.row(b);
+                fam.discretize_into(z, &mut scratch.codes);
+                let mut sigs = vec![signature(&scratch.codes)];
                 if self.probes > 0 {
-                    sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
+                    sigs.extend(fam.probe_signatures(&scratch.codes, z, self.probes));
                 }
-                out[b].push(sigs);
+                sigs_out.push(sigs);
             }
         }
         out

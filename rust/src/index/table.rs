@@ -6,10 +6,21 @@ use std::collections::HashMap;
 /// little-endian bytes). Collisions across distinct code vectors are
 /// negligible at our scales and only cost extra re-rank work, never
 /// correctness (candidates are exactly re-ranked).
+#[inline]
 pub fn signature(codes: &[i32]) -> u64 {
+    signature_strided(codes, codes.len(), 1)
+}
+
+/// [`signature`] over a strided view: hashes the `k` codes
+/// `codes[0], codes[stride], …, codes[(k−1)·stride]` without copying them
+/// out, byte-identical to [`signature`] on the gathered vector. Lets
+/// column-striped code layouts (a `CodeMatrix` row viewed per table, a
+/// transposed buffer) produce bucket signatures allocation-free.
+#[inline]
+pub fn signature_strided(codes: &[i32], k: usize, stride: usize) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for &c in codes {
-        for b in c.to_le_bytes() {
+    for i in 0..k {
+        for b in codes[i * stride].to_le_bytes() {
             h ^= b as u64;
             h = h.wrapping_mul(0x100000001b3);
         }
@@ -63,6 +74,25 @@ mod tests {
         assert_ne!(signature(&[1, 2, 3]), signature(&[1, 2, 4]));
         assert_ne!(signature(&[0]), signature(&[0, 0]));
         assert_eq!(signature(&[-5, 7]), signature(&[-5, 7]));
+    }
+
+    #[test]
+    fn signature_strided_is_byte_identical_to_copied_signature() {
+        // Satellite acceptance: the strided view must produce exactly the
+        // FNV-1a value of the gathered vector, for every stride.
+        let flat: Vec<i32> = vec![3, -7, 0, 42, -1, 9, 1000, -999, 5, 8, 13, 21];
+        for stride in 1..=4usize {
+            for k in 0..=flat.len() / stride {
+                let gathered: Vec<i32> = (0..k).map(|i| flat[i * stride]).collect();
+                assert_eq!(
+                    signature_strided(&flat, k, stride),
+                    signature(&gathered),
+                    "k={k} stride={stride}"
+                );
+            }
+        }
+        // Unit stride over the full slice IS `signature`.
+        assert_eq!(signature_strided(&flat, flat.len(), 1), signature(&flat));
     }
 
     #[test]

@@ -19,14 +19,23 @@
 //! * [`workload`] — synthetic corpora and controlled-distance pair generators.
 //!
 //! Core library:
-//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families,
-//!   with batch-amortized stacked-factor projection ([`projection::Projection::project_batch`]).
+//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families.
+//!   Batches project through the flat SoA path
+//!   ([`projection::Projection::project_batch_into`] into a
+//!   [`projection::ProjectionMatrix`] arena); both CP and TT banks keep
+//!   stacked per-mode parameter layouts so one fattened pass per mode serves
+//!   the whole batch.
 //! * [`lsh`] — the six hash families behind common traits + parameter planning;
-//!   [`lsh::HashFamily::hash_batch`] hashes whole serving batches at once.
+//!   [`lsh::HashFamily::hash_codes_into`] hashes whole serving batches into
+//!   flat strided code buffers ([`lsh::HashFamily::hash_batch`] is the
+//!   nested-Vec compatibility wrapper).
 //! * [`index`] — multi-table LSH index with multiprobe and exact re-ranking:
 //!   the single-shard reference [`index::LshIndex`] and the concurrently
 //!   readable, `&self`-insert [`index::ShardedLshIndex`] the serving stack
-//!   runs on.
+//!   runs on. Bulk builds and the serving hash stage move codes as one
+//!   [`index::CodeMatrix`] per batch (codes + precomputed bucket
+//!   signatures), consumed by slice (`insert_codes`,
+//!   `candidates_from_codes`) rather than per-item vectors.
 //! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle
 //!   (stubbed out unless the `pjrt` feature is enabled).
 //! * [`coordinator`] — request router, dynamic batcher, batched hash stage,
@@ -107,12 +116,16 @@ pub use error::{Error, Result};
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::error::{Error, Result};
-    pub use crate::index::{IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex};
+    pub use crate::index::{
+        CodeMatrix, HashScratch, IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex,
+    };
     pub use crate::lsh::{
         CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, E2lshFamily, HashFamily, NaiveE2lsh,
         NaiveSrp, SrpFamily, TtE2lsh, TtE2lshConfig, TtSrp, TtSrpConfig,
     };
-    pub use crate::projection::{CpRademacher, GaussianDense, Projection, TtRademacher};
+    pub use crate::projection::{
+        CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
+    };
     pub use crate::rng::Rng;
     pub use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
 }

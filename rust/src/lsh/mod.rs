@@ -17,7 +17,9 @@ pub use planner::{
     validity_report, LshPlan, ValidityReport,
 };
 
-use crate::projection::{CpRademacher, Distribution, GaussianDense, Projection, TtRademacher};
+use crate::projection::{
+    CpRademacher, Distribution, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
+};
 use crate::rng::Rng;
 use crate::stats;
 use crate::tensor::AnyTensor;
@@ -34,30 +36,74 @@ pub trait HashFamily: Send + Sync {
 
     /// Hash a batch of tensors: `out[b]` equals `hash(&xs[b])` bit-for-bit.
     ///
-    /// Goes through [`HashFamily::project_batch`], so families whose
-    /// projection bank has a batch-amortized layout (the CP stacked factors)
-    /// hash a serving batch in one fattened pass per mode instead of one per
-    /// item. The index and the coordinator's hash stage feed whole batches
-    /// through this path.
+    /// Nested-Vec compatibility wrapper (one Vec per item) over the flat
+    /// path; hot paths use [`HashFamily::hash_codes_into`] /
+    /// [`crate::index::CodeMatrix`] instead.
     fn hash_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<i32>> {
-        self.project_batch(xs)
-            .iter()
-            .map(|z| self.discretize(z))
-            .collect()
+        let mut scratch = ProjectionMatrix::empty();
+        self.project_batch_into(xs, &mut scratch);
+        (0..xs.len()).map(|b| self.discretize(scratch.row(b))).collect()
+    }
+
+    /// Hash a batch straight into a strided flat code buffer: item `b`'s K
+    /// codes land at `out[b·stride + offset ..][..K]`. This is the single
+    /// code path behind every batched hash — [`HashFamily::hash_batch`] and
+    /// [`crate::index::CodeMatrix`] both route through it, so flat and
+    /// nested hashing are bit-identical by construction. `scratch` is the
+    /// caller's reusable projection arena.
+    fn hash_codes_into(
+        &self,
+        xs: &[AnyTensor],
+        scratch: &mut ProjectionMatrix,
+        out: &mut [i32],
+        offset: usize,
+        stride: usize,
+    ) {
+        self.project_batch_into(xs, scratch);
+        let k = self.k();
+        for b in 0..xs.len() {
+            let dst = &mut out[b * stride + offset..b * stride + offset + k];
+            self.discretize_into(scratch.row(b), dst);
+        }
     }
 
     /// The K raw projections (pre-discretization) — multiprobe needs these.
     fn project(&self, x: &AnyTensor) -> Vec<f64>;
 
-    /// Raw projections for a batch; `out[b]` equals `project(&xs[b])`
-    /// bit-for-bit. Default loops; hashers over batch-capable projection
-    /// banks override to delegate to [`crate::projection::Projection::project_batch`].
-    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
-        xs.iter().map(|x| self.project(x)).collect()
+    /// Raw projections for a batch into a flat `(batch, K)` matrix;
+    /// `out.row(b)` equals `project(&xs[b])` bit-for-bit. Default loops;
+    /// hashers over batch-capable projection banks override to delegate to
+    /// [`crate::projection::Projection::project_batch_into`], so families
+    /// with a stacked parameter layout (CP factors, TT block-diagonal cores)
+    /// hash a serving batch in one fattened pass per mode instead of one per
+    /// item.
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        out.reset(xs.len(), self.k());
+        for (b, x) in xs.iter().enumerate() {
+            let z = self.project(x);
+            out.row_mut(b).copy_from_slice(&z);
+        }
     }
 
+    /// Raw projections for a batch; `out[b]` equals `project(&xs[b])`
+    /// bit-for-bit. Nested-Vec compatibility wrapper over
+    /// [`HashFamily::project_batch_into`].
+    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+        let mut out = ProjectionMatrix::empty();
+        self.project_batch_into(xs, &mut out);
+        out.into_rows()
+    }
+
+    /// Discretize raw projections into a caller-provided code row
+    /// (`out.len() == z.len()`), allocation-free.
+    fn discretize_into(&self, z: &[f64], out: &mut [i32]);
+
     /// Discretize raw projections into codes.
-    fn discretize(&self, z: &[f64]) -> Vec<i32>;
+    fn discretize(&self, z: &[f64]) -> Vec<i32> {
+        let mut out = vec![0i32; z.len()];
+        self.discretize_into(z, &mut out);
+        out
+    }
 
     /// Stored parameter count (space column of Tables 1–2).
     fn param_count(&self) -> usize;
@@ -128,15 +174,14 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
         self.proj.project(x)
     }
 
-    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
-        self.proj.project_batch(xs)
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        self.proj.project_batch_into(xs, out);
     }
 
-    fn discretize(&self, z: &[f64]) -> Vec<i32> {
-        z.iter()
-            .zip(&self.b)
-            .map(|(&v, &b)| ((v + b) / self.w).floor() as i32)
-            .collect()
+    fn discretize_into(&self, z: &[f64], out: &mut [i32]) {
+        for ((o, &v), &b) in out.iter_mut().zip(z).zip(&self.b) {
+            *o = ((v + b) / self.w).floor() as i32;
+        }
     }
 
     fn param_count(&self) -> usize {
@@ -158,6 +203,7 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
     /// Exact query-directed multiprobe (Lv et al.): for every coordinate,
     /// the distance from `z_k + b_k` to its lower/upper bucket boundary
     /// ranks the ±1 perturbations; the `probes` closest boundaries win.
+    /// One scratch row is perturbed in place per probe — no per-probe clone.
     fn probe_signatures(&self, codes: &[i32], z: &[f64], probes: usize) -> Vec<u64> {
         let k = codes.len();
         let mut cands: Vec<(f64, usize, i32)> = Vec::with_capacity(2 * k);
@@ -167,13 +213,15 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
             cands.push((1.0 - pos, i, 1)); // distance to upper boundary
         }
         cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut scratch = codes.to_vec();
         cands
             .into_iter()
             .take(probes)
             .map(|(_, i, step)| {
-                let mut c = codes.to_vec();
-                c[i] += step;
-                crate::index::signature(&c)
+                scratch[i] += step;
+                let sig = crate::index::signature(&scratch);
+                scratch[i] -= step;
+                sig
             })
             .collect()
     }
@@ -202,12 +250,14 @@ impl<P: Projection> HashFamily for SrpHasher<P> {
         self.proj.project(x)
     }
 
-    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
-        self.proj.project_batch(xs)
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        self.proj.project_batch_into(xs, out);
     }
 
-    fn discretize(&self, z: &[f64]) -> Vec<i32> {
-        z.iter().map(|&v| if v > 0.0 { 1 } else { 0 }).collect()
+    fn discretize_into(&self, z: &[f64], out: &mut [i32]) {
+        for (o, &v) in out.iter_mut().zip(z) {
+            *o = i32::from(v > 0.0);
+        }
     }
 
     fn param_count(&self) -> usize {

@@ -1,0 +1,118 @@
+//! Flat, arena-backed projection buffer: the SoA layout the batched hash
+//! path runs on (EXPERIMENTS.md §Layout).
+//!
+//! A [`ProjectionMatrix`] is one row-major `(batch, K)` f64 allocation that
+//! replaces the `Vec<Vec<f64>>` the nested batch APIs used to return — one
+//! heap block per batch instead of one per item. The buffer is an *arena*:
+//! [`ProjectionMatrix::reset`] re-shapes it in place, so a long-lived holder
+//! (the coordinator's hash stage, an index bulk build) allocates at the
+//! high-water mark once and then hashes every subsequent batch
+//! allocation-free.
+
+/// Row-major `(batch, K)` matrix of raw projections: `row(b)[k] = ⟨P_k, X_b⟩`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProjectionMatrix {
+    k: usize,
+    batch: usize,
+    data: Vec<f64>,
+}
+
+impl ProjectionMatrix {
+    /// An empty matrix (no allocation); shape it with
+    /// [`ProjectionMatrix::reset`].
+    pub fn empty() -> Self {
+        ProjectionMatrix { k: 0, batch: 0, data: Vec::new() }
+    }
+
+    /// A zero-filled `(batch, K)` matrix.
+    pub fn zeros(batch: usize, k: usize) -> Self {
+        ProjectionMatrix { k, batch, data: vec![0.0; batch * k] }
+    }
+
+    /// Re-shape in place to `(batch, K)`, zero-filled. Keeps the existing
+    /// allocation whenever it is large enough (the arena contract).
+    pub fn reset(&mut self, batch: usize, k: usize) {
+        self.k = k;
+        self.batch = batch;
+        self.data.clear();
+        self.data.resize(batch * k, 0.0);
+    }
+
+    /// Number of rows (items) in the batch.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Number of projections K per row.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// True if the matrix holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.batch == 0
+    }
+
+    /// Row `b`: the K projections of item `b`.
+    #[inline]
+    pub fn row(&self, b: usize) -> &[f64] {
+        &self.data[b * self.k..(b + 1) * self.k]
+    }
+
+    /// Mutable row `b`.
+    #[inline]
+    pub fn row_mut(&mut self, b: usize) -> &mut [f64] {
+        &mut self.data[b * self.k..(b + 1) * self.k]
+    }
+
+    /// The whole flat buffer (row-major).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Split into per-item rows (compatibility shim for the nested-Vec
+    /// batch APIs; allocates one Vec per item — not for hot paths).
+    pub fn into_rows(self) -> Vec<Vec<f64>> {
+        (0..self.batch).map(|b| self.row(b).to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_contiguous_and_indexed() {
+        let mut m = ProjectionMatrix::zeros(3, 2);
+        m.row_mut(1).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.row(1), &[5.0, 6.0]);
+        assert_eq!(m.as_slice(), &[0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+        assert_eq!(m.batch(), 3);
+        assert_eq!(m.k(), 2);
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut m = ProjectionMatrix::zeros(2, 4);
+        m.row_mut(0)[0] = 9.0;
+        let cap_before = m.data.capacity();
+        m.reset(1, 3);
+        assert_eq!(m.batch(), 1);
+        assert_eq!(m.k(), 3);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+        // Shrinking reuses the allocation (arena contract).
+        assert!(m.data.capacity() >= cap_before.min(3));
+        m.reset(0, 5);
+        assert!(m.is_empty());
+        assert_eq!(m.into_rows(), Vec::<Vec<f64>>::new());
+    }
+
+    #[test]
+    fn into_rows_matches_layout() {
+        let mut m = ProjectionMatrix::zeros(2, 2);
+        m.row_mut(0).copy_from_slice(&[1.0, 2.0]);
+        m.row_mut(1).copy_from_slice(&[3.0, 4.0]);
+        assert_eq!(m.into_rows(), vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+}

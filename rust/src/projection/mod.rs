@@ -11,6 +11,10 @@
 //! [`Rng::derive`], so the native and PJRT hash paths regenerate identical
 //! parameters.
 
+mod matrix;
+
+pub use matrix::ProjectionMatrix;
+
 use crate::rng::{GaussianSampler, RademacherSampler, Rng, Sampler};
 use crate::tensor::{AnyTensor, CpTensor, TtTensor};
 
@@ -47,16 +51,33 @@ pub trait Projection: Send + Sync {
     /// Project a tensor: returns the K inner products `⟨P_k, X⟩`.
     fn project(&self, x: &AnyTensor) -> Vec<f64>;
 
-    /// Project a batch of tensors: `out[b][k] = ⟨P_k, X_b⟩`.
+    /// Project a batch into a flat `(batch, K)` matrix:
+    /// `out.row(b)[k] = ⟨P_k, X_b⟩`. This is the batch hot path — one arena
+    /// write per batch, no per-item allocation.
     ///
-    /// The default just loops [`Projection::project`]; families with a
-    /// stacked parameter layout override it to amortize one fattened pass
-    /// per *mode* across the whole batch instead of per item (see
-    /// [`CpRademacher`] and EXPERIMENTS.md §Batch). Implementations must be
+    /// The default loops [`Projection::project`]; families with a stacked
+    /// parameter layout override it to amortize one fattened pass per *mode*
+    /// across the whole batch instead of per item (see [`CpRademacher`],
+    /// [`TtRademacher`] and EXPERIMENTS.md §Layout). Implementations must be
     /// bit-identical to the per-item path so batched and unbatched hashing
     /// land in the same buckets.
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        per_item_project_into(self, xs, out);
+    }
+
+    /// [`Projection::project_batch_into`] into a fresh matrix.
+    fn project_batch_flat(&self, xs: &[AnyTensor]) -> ProjectionMatrix {
+        let mut out = ProjectionMatrix::empty();
+        self.project_batch_into(xs, &mut out);
+        out
+    }
+
+    /// Project a batch of tensors: `out[b][k] = ⟨P_k, X_b⟩`.
+    ///
+    /// Nested-Vec compatibility wrapper over the flat path (one Vec per
+    /// item); hot paths should use [`Projection::project_batch_into`].
     fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
-        xs.iter().map(|x| self.project(x)).collect()
+        self.project_batch_flat(xs).into_rows()
     }
 
     /// Stored parameter count (the space column of Tables 1–2).
@@ -64,6 +85,33 @@ pub trait Projection: Send + Sync {
 
     /// Family name for reports.
     fn name(&self) -> &'static str;
+}
+
+/// True if `x` is a CP tensor over exactly the mode dims `dims` — the
+/// uniform-layout guard both fused batch kernels dispatch on.
+fn cp_dims_match(dims: &[usize], x: &AnyTensor) -> bool {
+    match x {
+        AnyTensor::Cp(xc) => {
+            xc.factors.len() == dims.len()
+                && xc.factors.iter().zip(dims).all(|(f, &d)| f.d == d)
+        }
+        _ => false,
+    }
+}
+
+/// Per-item fallback behind the flat batch API: mixed-format or
+/// foreign-shape batches project one item at a time (numerically identical
+/// to the fused overrides by the trait contract).
+fn per_item_project_into<P: Projection + ?Sized>(
+    proj: &P,
+    xs: &[AnyTensor],
+    out: &mut ProjectionMatrix,
+) {
+    out.reset(xs.len(), proj.k());
+    for (b, x) in xs.iter().enumerate() {
+        let z = proj.project(x);
+        out.row_mut(b).copy_from_slice(&z);
+    }
 }
 
 /// K CP-distributed projection tensors (Definitions 6 and 8).
@@ -181,15 +229,16 @@ impl CpRademacher {
     /// serves the *whole batch*, so the `(d, K·R)` stacked factors are
     /// streamed from memory once per mode instead of once per item — the
     /// batch-amortized layout the serving hash stage runs on (EXPERIMENTS.md
-    /// §Batch).
+    /// §Batch). Writes rows of the flat `(batch, K)` output in place.
     ///
     /// Per item this performs exactly the floating-point operations of
     /// [`CpRademacher::project_cp_fused`] in exactly the same order (the
     /// `i`-outer/`item`-inner loop swap keeps every per-item accumulation
     /// sequence intact), so batched codes are bit-identical to per-item
     /// codes.
-    fn project_cp_fused_batch(&self, xs: &[&CpTensor]) -> Vec<Vec<f64>> {
+    fn project_cp_fused_batch_into(&self, xs: &[&CpTensor], out: &mut ProjectionMatrix) {
         let k = self.tensors.len();
+        out.reset(xs.len(), k);
         let r = self.rank;
         let kr = k * r;
         // Per-item offsets into the shared gram/acc scratch (ranks R̂ may
@@ -228,41 +277,32 @@ impl CpRademacher {
                 *a *= g;
             }
         }
-        // Reduce per item: z_k = scale_k · x.scale · Σ_{s, r} acc[s, k·R + r].
-        xs.iter()
-            .enumerate()
-            .map(|(b, x)| {
-                let rhat = x.rank();
-                let a = &acc[offs[b]..offs[b + 1]];
-                let mut z = vec![0.0f64; k];
-                for s in 0..rhat {
-                    let row = &a[s * kr..(s + 1) * kr];
-                    for (ki, zi) in z.iter_mut().enumerate() {
-                        let mut sum = 0.0f32;
-                        for &v in &row[ki * r..(ki + 1) * r] {
-                            sum += v;
-                        }
-                        *zi += sum as f64;
+        // Reduce per item: z_k = scale_k · x.scale · Σ_{s, r} acc[s, k·R + r],
+        // accumulated directly in the output row (rows start zeroed).
+        for (b, x) in xs.iter().enumerate() {
+            let rhat = x.rank();
+            let a = &acc[offs[b]..offs[b + 1]];
+            let z = out.row_mut(b);
+            for s in 0..rhat {
+                let row = &a[s * kr..(s + 1) * kr];
+                for (ki, zi) in z.iter_mut().enumerate() {
+                    let mut sum = 0.0f32;
+                    for &v in &row[ki * r..(ki + 1) * r] {
+                        sum += v;
                     }
+                    *zi += sum as f64;
                 }
-                let xs_scale = x.scale as f64;
-                for (zi, t) in z.iter_mut().zip(&self.tensors) {
-                    *zi *= t.scale as f64 * xs_scale;
-                }
-                z
-            })
-            .collect()
+            }
+            let xs_scale = x.scale as f64;
+            for (zi, t) in z.iter_mut().zip(&self.tensors) {
+                *zi *= t.scale as f64 * xs_scale;
+            }
+        }
     }
 
     /// True if `x` is a CP tensor over exactly this bank's mode dims.
     fn dims_match_cp(&self, x: &AnyTensor) -> bool {
-        match x {
-            AnyTensor::Cp(xc) => {
-                xc.factors.len() == self.dims.len()
-                    && xc.factors.iter().zip(&self.dims).all(|(f, &d)| f.d == d)
-            }
-            _ => false,
-        }
+        cp_dims_match(&self.dims, x)
     }
 
     /// The `band`-th contiguous slice of `band_k` projection tensors — LSH
@@ -308,7 +348,7 @@ impl Projection for CpRademacher {
         }
     }
 
-    fn project_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<f64>> {
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
         // The batch kernel needs a uniform CP layout; mixed/foreign batches
         // fall back to the per-item path (numerically identical either way).
         if xs.len() > 1 && xs.iter().all(|x| self.dims_match_cp(x)) {
@@ -319,9 +359,9 @@ impl Projection for CpRademacher {
                     _ => unreachable!("dims_match_cp admits only CP tensors"),
                 })
                 .collect();
-            self.project_cp_fused_batch(&cps)
+            self.project_cp_fused_batch_into(&cps, out);
         } else {
-            xs.iter().map(|x| self.project(x)).collect()
+            per_item_project_into(self, xs, out);
         }
     }
 
@@ -334,7 +374,27 @@ impl Projection for CpRademacher {
     }
 }
 
+/// One mode of the stacked TT bank: the K tensors' `(r0, d, r1)` cores for
+/// that mode concatenated k-major — the nonzero blocks of the
+/// `(K·r0, d, K·r1)` block-diagonal core one batched sweep multiplies
+/// through (EXPERIMENTS.md §Layout).
+#[derive(Clone, Debug)]
+struct TtStackedMode {
+    r0: usize,
+    d: usize,
+    r1: usize,
+    /// `data[ki·r0·d·r1 ..]` is tensor `ki`'s core, in its native
+    /// `(r0, d, r1)` row-major layout.
+    data: Vec<f32>,
+}
+
 /// K TT-distributed projection tensors (Definitions 7 and 9).
+///
+/// Besides the per-tensor representation, the bank keeps a *stacked* layout
+/// per mode — the K cores concatenated into one contiguous block-diagonal
+/// buffer — so the batched transfer sweep streams each mode's parameters
+/// from one allocation for the whole batch instead of chasing K separate
+/// tensors per item (the TT analogue of [`CpRademacher`]'s stacked factors).
 #[derive(Clone, Debug)]
 pub struct TtRademacher {
     pub tensors: Vec<TtTensor>,
@@ -342,6 +402,7 @@ pub struct TtRademacher {
     pub rank: usize,
     pub distribution: Distribution,
     pub seed: u64,
+    stacked: Vec<TtStackedMode>,
 }
 
 impl TtRademacher {
@@ -353,13 +414,35 @@ impl TtRademacher {
         k: usize,
         distribution: Distribution,
     ) -> Self {
-        let tensors = (0..k)
+        let tensors: Vec<TtTensor> = (0..k)
             .map(|i| {
                 let mut rng = Rng::derive(seed, &[0x77, i as u64]);
                 TtTensor::random_projection(&mut rng, dims, rank, distribution.sampler())
             })
             .collect();
-        TtRademacher { tensors, dims: dims.to_vec(), rank, distribution, seed }
+        let stacked = Self::stack(&tensors);
+        TtRademacher { tensors, dims: dims.to_vec(), rank, distribution, seed, stacked }
+    }
+
+    /// Concatenate the K tensors' cores mode-by-mode. All bank tensors share
+    /// [`TtTensor::uniform_ranks`] bond shapes, so each mode's blocks are
+    /// homogeneous.
+    fn stack(tensors: &[TtTensor]) -> Vec<TtStackedMode> {
+        let Some(first) = tensors.first() else {
+            return Vec::new();
+        };
+        (0..first.order())
+            .map(|mode| {
+                let c0 = &first.cores[mode];
+                let mut data = Vec::with_capacity(tensors.len() * c0.data.len());
+                for t in tensors {
+                    debug_assert_eq!(t.cores[mode].r0, c0.r0);
+                    debug_assert_eq!(t.cores[mode].r1, c0.r1);
+                    data.extend_from_slice(&t.cores[mode].data);
+                }
+                TtStackedMode { r0: c0.r0, d: c0.d, r1: c0.r1, data }
+            })
+            .collect()
     }
 
     /// Fused projection of a TT-format input: one transfer-matrix sweep
@@ -437,16 +520,135 @@ impl TtRademacher {
             .collect()
     }
 
+    /// Batched fused projection: the mode-outer / item-inner sweep streams
+    /// each mode's stacked block-diagonal core buffer once for the *whole
+    /// batch* (all K projections of every item), instead of re-walking the
+    /// K scattered cores per item — the TT counterpart of
+    /// [`CpRademacher::project_cp_fused_batch_into`].
+    ///
+    /// Per item this performs exactly the floating-point operations of
+    /// [`TtRademacher::project_tt_fused`] in exactly the same order (the
+    /// per-item transfer state `m_b` is private to its item; the stacked
+    /// buffer holds the same f32 values as the per-tensor cores), so batched
+    /// codes are bit-identical to per-item codes.
+    fn project_tt_fused_batch_into(&self, xs: &[&TtTensor], out: &mut ProjectionMatrix) {
+        let k = self.tensors.len();
+        out.reset(xs.len(), k);
+        if xs.is_empty() || k == 0 {
+            return;
+        }
+        // Per-item transfer state m_b[k, a, b] and input bond rank; the
+        // projection bond rank rb is bank-wide.
+        let mut ms: Vec<Vec<f32>> = xs.iter().map(|_| vec![1.0f32; k]).collect();
+        let mut ras: Vec<usize> = vec![1usize; xs.len()];
+        let mut rb = 1usize;
+        let mut tmp: Vec<f32> = Vec::new();
+        let mut next: Vec<f32> = Vec::new();
+        for (mode, sm) in self.stacked.iter().enumerate() {
+            debug_assert_eq!(sm.r0, rb);
+            let d = sm.d;
+            let nb = sm.r1;
+            let core_len = sm.r0 * d * sm.r1;
+            for (bi, x) in xs.iter().enumerate() {
+                let xc = &x.cores[mode];
+                let na = xc.r1;
+                let ra = ras[bi];
+                let m = &ms[bi];
+                // tmp[k, i, b, a'] = Σ_a m[k, a, b] · x[a, i, a'] — same op
+                // order as the per-item kernel, scratch reused across items.
+                tmp.clear();
+                tmp.resize(k * d * rb * na, 0.0);
+                for ki in 0..k {
+                    let mk = &m[ki * ra * rb..(ki + 1) * ra * rb];
+                    let tk = &mut tmp[ki * d * rb * na..(ki + 1) * d * rb * na];
+                    for a in 0..ra {
+                        for b in 0..rb {
+                            let mv = mk[a * rb + b];
+                            if mv == 0.0 {
+                                continue;
+                            }
+                            for i in 0..d {
+                                // x slice (a, i, :) is contiguous.
+                                let xrow = &xc.data[(a * d + i) * na..(a * d + i + 1) * na];
+                                let trow =
+                                    &mut tk[(i * rb + b) * na..(i * rb + b + 1) * na];
+                                for (t, &xv) in trow.iter_mut().zip(xrow) {
+                                    *t += mv * xv;
+                                }
+                            }
+                        }
+                    }
+                }
+                // m'[k, a', b'] = Σ_{i, b} tmp[k, i, b, a'] · g_k[b, i, b'] —
+                // the g reads stream the stacked buffer block ki.
+                next.clear();
+                next.resize(k * na * nb, 0.0);
+                for ki in 0..k {
+                    let gdata = &sm.data[ki * core_len..(ki + 1) * core_len];
+                    let tk = &tmp[ki * d * rb * na..(ki + 1) * d * rb * na];
+                    let nk = &mut next[ki * na * nb..(ki + 1) * na * nb];
+                    for i in 0..d {
+                        for b in 0..rb {
+                            let trow = &tk[(i * rb + b) * na..(i * rb + b + 1) * na];
+                            // g slice (b, i, :) is contiguous within block ki.
+                            let grow = &gdata[(b * d + i) * nb..(b * d + i + 1) * nb];
+                            for (ap, &tv) in trow.iter().enumerate() {
+                                if tv == 0.0 {
+                                    continue;
+                                }
+                                let nrow = &mut nk[ap * nb..(ap + 1) * nb];
+                                for (nv, &gv) in nrow.iter_mut().zip(grow) {
+                                    *nv += tv * gv;
+                                }
+                            }
+                        }
+                    }
+                }
+                std::mem::swap(&mut ms[bi], &mut next);
+                ras[bi] = na;
+            }
+            rb = nb;
+        }
+        // Boundary ranks close to 1×1: ms[bi] holds the K scalars.
+        for (bi, x) in xs.iter().enumerate() {
+            debug_assert_eq!(ms[bi].len(), k);
+            let xs_scale = x.scale as f64;
+            let zrow = out.row_mut(bi);
+            for ((zi, &v), t) in zrow.iter_mut().zip(&ms[bi]).zip(&self.tensors) {
+                *zi = v as f64 * t.scale as f64 * xs_scale;
+            }
+        }
+    }
+
+    /// True if `x` is a TT tensor over exactly this bank's mode dims.
+    fn dims_match_tt(&self, x: &AnyTensor) -> bool {
+        match x {
+            AnyTensor::Tt(xt) => {
+                xt.cores.len() == self.dims.len()
+                    && xt.cores.iter().zip(&self.dims).all(|(c, &d)| c.d == d)
+            }
+            _ => false,
+        }
+    }
+
+    /// True if `x` is a CP tensor over exactly this bank's mode dims.
+    fn dims_match_cp(&self, x: &AnyTensor) -> bool {
+        cp_dims_match(&self.dims, x)
+    }
+
     /// Banding slice (see [`CpRademacher::band`]).
     pub fn band(&self, band: usize, band_k: usize) -> TtRademacher {
         let lo = band * band_k;
         let hi = (lo + band_k).min(self.tensors.len());
+        let tensors = self.tensors[lo..hi].to_vec();
+        let stacked = Self::stack(&tensors);
         TtRademacher {
-            tensors: self.tensors[lo..hi].to_vec(),
+            tensors,
             dims: self.dims.clone(),
             rank: self.rank,
             distribution: self.distribution,
             seed: self.seed,
+            stacked,
         }
     }
 }
@@ -469,6 +671,35 @@ impl Projection for TtRademacher {
                 .iter()
                 .map(|t| inner::dense_tt(xd, t))
                 .collect(),
+        }
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        // The stacked batch sweep needs a uniform TT layout. CP batches
+        // convert exactly per item (the same `to_tt` the per-item path
+        // applies) and then share one sweep; anything else falls back to
+        // the per-item path (numerically identical either way).
+        if xs.len() > 1 && xs.iter().all(|x| self.dims_match_tt(x)) {
+            let tts: Vec<&TtTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Tt(xt) => xt,
+                    _ => unreachable!("dims_match_tt admits only TT tensors"),
+                })
+                .collect();
+            self.project_tt_fused_batch_into(&tts, out);
+        } else if xs.len() > 1 && xs.iter().all(|x| self.dims_match_cp(x)) {
+            let tts: Vec<TtTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Cp(xc) => xc.to_tt(),
+                    _ => unreachable!("dims_match_cp admits only CP tensors"),
+                })
+                .collect();
+            let refs: Vec<&TtTensor> = tts.iter().collect();
+            self.project_tt_fused_batch_into(&refs, out);
+        } else {
+            per_item_project_into(self, xs, out);
         }
     }
 
@@ -525,6 +756,22 @@ impl Projection for GaussianDense {
                 acc
             })
             .collect()
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        // Same arithmetic and order as `project`, written straight into the
+        // flat rows (no per-item Vec<f64>).
+        out.reset(xs.len(), self.rows.len());
+        for (b, x) in xs.iter().enumerate() {
+            let dense = x.materialize();
+            for (zi, row) in out.row_mut(b).iter_mut().zip(&self.rows) {
+                let mut acc = 0.0f64;
+                for (a, v) in row.iter().zip(&dense.data) {
+                    acc += *a as f64 * *v as f64;
+                }
+                *zi = acc;
+            }
+        }
     }
 
     fn param_count(&self) -> usize {
@@ -604,6 +851,55 @@ mod tests {
             // Bit-identical, not just close: batched and per-item hashing
             // must land in the same buckets.
             assert_eq!(&z1, zrow);
+        }
+    }
+
+    #[test]
+    fn tt_project_batch_is_bit_identical_to_per_item() {
+        let mut rng = Rng::new(95);
+        let dims = [6usize, 5, 4];
+        for dist in [Distribution::Rademacher, Distribution::Gaussian] {
+            let proj = TtRademacher::generate(22, &dims, 3, 8, dist);
+            // TT batches (mixed input bond ranks) hit the stacked sweep
+            // directly; CP batches convert per item and share it.
+            let tt_batch: Vec<AnyTensor> = (0..6)
+                .map(|i| AnyTensor::Tt(TtTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+                .collect();
+            let cp_batch: Vec<AnyTensor> = (0..5)
+                .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+                .collect();
+            for batch in [&tt_batch, &cp_batch] {
+                let zb = proj.project_batch(batch);
+                assert_eq!(zb.len(), batch.len());
+                for (x, zrow) in batch.iter().zip(&zb) {
+                    // Bit-identical, not just close: batched and per-item
+                    // hashing must land in the same buckets.
+                    assert_eq!(&proj.project(x), zrow, "{dist:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn project_batch_into_reuses_the_arena_across_batches() {
+        let mut rng = Rng::new(96);
+        let dims = [5usize, 4, 3];
+        let proj = CpRademacher::generate(33, &dims, 3, 6, Distribution::Rademacher);
+        let big: Vec<AnyTensor> = (0..8)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+            .collect();
+        let small: Vec<AnyTensor> = big[..3].to_vec();
+        let mut m = ProjectionMatrix::empty();
+        proj.project_batch_into(&big, &mut m);
+        assert_eq!(m.batch(), 8);
+        for (b, x) in big.iter().enumerate() {
+            assert_eq!(proj.project(x).as_slice(), m.row(b));
+        }
+        // Shrinking reuse: stale rows from the larger batch must not leak.
+        proj.project_batch_into(&small, &mut m);
+        assert_eq!(m.batch(), 3);
+        for (b, x) in small.iter().enumerate() {
+            assert_eq!(proj.project(x).as_slice(), m.row(b));
         }
     }
 

@@ -11,6 +11,10 @@ pub struct Timing {
     pub median_ns: f64,
     /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// 99th-percentile nanoseconds per iteration across samples (the max
+    /// sample unless `samples` ≥ 100 — the bench reports it for the
+    /// machine-readable BENCH_*.json trajectory files).
+    pub p99_ns: f64,
     /// Min / max observed per-iteration time across samples.
     pub min_ns: f64,
     pub max_ns: f64,
@@ -61,9 +65,12 @@ pub fn bench<T>(mut f: impl FnMut() -> T, samples: usize, min_sample_ms: f64) ->
     per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median_ns = per_iter[per_iter.len() / 2];
     let mean_ns = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let p99_idx = (((per_iter.len() as f64 - 1.0) * 0.99).round() as usize)
+        .min(per_iter.len() - 1);
     Timing {
         median_ns,
         mean_ns,
+        p99_ns: per_iter[p99_idx],
         min_ns: per_iter[0],
         max_ns: *per_iter.last().unwrap(),
         samples,
@@ -87,6 +94,7 @@ mod tests {
         let t = bench(|| (0..100).sum::<u64>(), 5, 0.5);
         assert!(t.median_ns > 0.0);
         assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
+        assert!(t.median_ns <= t.p99_ns && t.p99_ns <= t.max_ns);
         assert!(t.ops_per_sec() > 0.0);
     }
 

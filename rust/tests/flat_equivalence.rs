@@ -1,0 +1,205 @@
+//! Flat-path equivalence (satellite acceptance for the SoA refactor):
+//!
+//! * the batched stacked-TT projection is **bit-identical** to per-item
+//!   `project` for Rademacher and Gaussian entries across ranks and orders;
+//! * `CodeMatrix`-based insert/query returns exactly the same candidates as
+//!   the legacy per-item path on a seeded corpus.
+
+use std::sync::Arc;
+use tensor_lsh::bench_harness::index_config;
+use tensor_lsh::config::Family;
+use tensor_lsh::index::{signature, CodeMatrix, LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::lsh::HashFamily;
+use tensor_lsh::projection::{
+    CpRademacher, Distribution, Projection, ProjectionMatrix, TtRademacher,
+};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::tensor::{AnyTensor, CpTensor, TtTensor};
+use tensor_lsh::testutil::proptest;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+
+/// Batched stacked-TT projection is bit-identical to per-item `project`
+/// across entry distributions, projection ranks, tensor orders, input
+/// formats, and input ranks.
+#[test]
+fn prop_stacked_tt_batch_is_bit_identical_to_per_item() {
+    proptest("stacked_tt_batch_bit_identical", 24, |rng| {
+        let order = 2 + rng.below(3); // 2..=4
+        let dims: Vec<usize> = (0..order).map(|_| 3 + rng.below(4)).collect();
+        let rank = 1 + rng.below(4);
+        let k = 2 + rng.below(7);
+        let dist = if rng.below(2) == 0 {
+            Distribution::Rademacher
+        } else {
+            Distribution::Gaussian
+        };
+        let proj = TtRademacher::generate(rng.below(1 << 20) as u64, &dims, rank, k, dist);
+        let batch_len = 2 + rng.below(6);
+        let as_tt = rng.below(2) == 0;
+        let batch: Vec<AnyTensor> = (0..batch_len)
+            .map(|_| {
+                let r = 1 + rng.below(3);
+                if as_tt {
+                    AnyTensor::Tt(TtTensor::random_gaussian(rng, &dims, r))
+                } else {
+                    AnyTensor::Cp(CpTensor::random_gaussian(rng, &dims, r))
+                }
+            })
+            .collect();
+        let mut flat = ProjectionMatrix::empty();
+        proj.project_batch_into(&batch, &mut flat);
+        assert_eq!(flat.batch(), batch.len());
+        assert_eq!(flat.k(), k);
+        for (b, x) in batch.iter().enumerate() {
+            // Bit-identical (assert_eq on f64), not approximately equal:
+            // both paths must land every item in the same bucket.
+            assert_eq!(
+                proj.project(x).as_slice(),
+                flat.row(b),
+                "dims={dims:?} rank={rank} k={k} dist={dist:?} tt={as_tt} b={b}"
+            );
+        }
+    });
+}
+
+/// Same property for the CP stacked kernel (kept alongside the TT one so a
+/// regression in either fused path fails this suite).
+#[test]
+fn prop_stacked_cp_batch_is_bit_identical_to_per_item() {
+    proptest("stacked_cp_batch_bit_identical", 24, |rng| {
+        let order = 2 + rng.below(3);
+        let dims: Vec<usize> = (0..order).map(|_| 3 + rng.below(4)).collect();
+        let rank = 1 + rng.below(4);
+        let k = 2 + rng.below(7);
+        let dist = if rng.below(2) == 0 {
+            Distribution::Rademacher
+        } else {
+            Distribution::Gaussian
+        };
+        let proj = CpRademacher::generate(rng.below(1 << 20) as u64, &dims, rank, k, dist);
+        let batch: Vec<AnyTensor> = (0..2 + rng.below(6))
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(rng, &dims, 1 + rng.below(3))))
+            .collect();
+        let mut flat = ProjectionMatrix::empty();
+        proj.project_batch_into(&batch, &mut flat);
+        for (b, x) in batch.iter().enumerate() {
+            assert_eq!(proj.project(x).as_slice(), flat.row(b), "b={b}");
+        }
+    });
+}
+
+fn seeded_corpus(dims: &[usize], n: usize, seed: u64) -> Vec<AnyTensor> {
+    low_rank_corpus(&DatasetSpec {
+        dims: dims.to_vec(),
+        n_items: n,
+        rank: 2,
+        n_clusters: 8,
+        noise: 0.3,
+        seed,
+    })
+    .0
+}
+
+/// `CodeMatrix`-based insert + query returns exactly the candidates of the
+/// legacy per-item path, across families and metrics.
+#[test]
+fn code_matrix_insert_and_query_match_per_item_path() {
+    let dims = vec![8usize, 8, 8];
+    let items = seeded_corpus(&dims, 220, 61);
+    for (family, metric) in [
+        (Family::Cp, Metric::Cosine),
+        (Family::Cp, Metric::Euclidean),
+        (Family::Tt, Metric::Cosine),
+        (Family::Tt, Metric::Euclidean),
+    ] {
+        let cfg = index_config(family, metric, dims.clone(), 4, 8, 5, 4.0, 62);
+        // Legacy path: per-item hash + insert.
+        let mut legacy = LshIndex::new(&cfg).unwrap();
+        for x in &items {
+            legacy.insert(x.clone());
+        }
+        // Flat path: one CodeMatrix for the corpus, insert_codes rows.
+        let mut flat = LshIndex::new(&cfg).unwrap();
+        let cm = CodeMatrix::build(flat.families(), &items);
+        for (b, x) in items.iter().enumerate() {
+            flat.insert_codes(x.clone(), &cm, b);
+        }
+        assert_eq!(legacy.len(), flat.len());
+        let mut rng = Rng::new(63);
+        for _ in 0..12 {
+            let qid = rng.below(items.len());
+            let q = &items[qid];
+            // Candidate sets agree element-for-element (same visit order).
+            assert_eq!(
+                legacy.candidates(q),
+                flat.candidates(q),
+                "{family:?}/{metric:?} qid={qid}"
+            );
+            // And the flat query entry point agrees with the legacy one.
+            let qcm = CodeMatrix::build(flat.families(), std::slice::from_ref(q));
+            let sigs: Vec<u64> = flat
+                .families()
+                .iter()
+                .map(|fam| signature(&fam.hash(q)))
+                .collect();
+            assert_eq!(
+                flat.candidates_from_codes(&qcm, 0),
+                flat.candidates_from_signatures(&sigs),
+                "{family:?}/{metric:?} qid={qid}"
+            );
+            // Full searches are therefore identical too.
+            assert_eq!(
+                legacy.search(q, 10).unwrap(),
+                flat.search(q, 10).unwrap(),
+                "{family:?}/{metric:?} qid={qid}"
+            );
+        }
+    }
+}
+
+/// The sharded flat build (CodeMatrix under `build`/`build_parallel`)
+/// produces exactly the per-item-insert index.
+#[test]
+fn sharded_code_matrix_build_matches_per_item_inserts() {
+    let dims = vec![8usize, 8, 8];
+    let items = seeded_corpus(&dims, 180, 64);
+    let cfg = index_config(Family::Tt, Metric::Euclidean, dims, 3, 8, 5, 4.0, 65);
+    let built = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
+    let manual = ShardedLshIndex::new(&cfg, 4).unwrap();
+    for x in &items {
+        manual.insert(x.clone());
+    }
+    let mut rng = Rng::new(66);
+    for _ in 0..10 {
+        let q = &items[rng.below(items.len())];
+        assert_eq!(built.search(q, 8).unwrap(), manual.search(q, 8).unwrap());
+        let mut ca = built.candidates(q);
+        let mut cb = manual.candidates(q);
+        ca.sort_unstable();
+        cb.sort_unstable();
+        assert_eq!(ca, cb);
+    }
+}
+
+/// The flat strided hash path (`hash_codes_into` with a table offset) lays
+/// codes out exactly as the per-item `hash` reports them.
+#[test]
+fn strided_hash_codes_match_per_item_hash() {
+    let dims = vec![6usize, 6, 6];
+    let items = seeded_corpus(&dims, 24, 67);
+    let cfg = index_config(Family::Cp, Metric::Cosine, dims, 4, 10, 3, 4.0, 68);
+    let idx = LshIndex::new(&cfg).unwrap();
+    let families: Vec<Arc<dyn HashFamily>> = idx.families().to_vec();
+    let (l, k) = (families.len(), families[0].k());
+    let mut codes = vec![0i32; items.len() * l * k];
+    let mut scratch = ProjectionMatrix::empty();
+    for (t, fam) in families.iter().enumerate() {
+        fam.hash_codes_into(&items, &mut scratch, &mut codes, t * k, l * k);
+    }
+    for (b, x) in items.iter().enumerate() {
+        for (t, fam) in families.iter().enumerate() {
+            let row = &codes[(b * l + t) * k..(b * l + t + 1) * k];
+            assert_eq!(row, fam.hash(x).as_slice(), "b={b} t={t}");
+        }
+    }
+}
