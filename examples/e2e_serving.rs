@@ -20,9 +20,9 @@ use std::time::{Duration, Instant};
 use tensor_lsh::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, Query,
 };
-use tensor_lsh::index::{recall_at_k, signature, IndexConfig, Metric, ShardedLshIndex};
-use tensor_lsh::lsh::{HashFamily, SrpHasher};
-use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::index::{recall_at_k, signature, ShardedLshIndex};
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::projection::CpRademacher;
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, PjrtEngine};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
@@ -95,23 +95,20 @@ fn main() -> tensor_lsh::Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    // ---- one K-wide projection bank, banded into table families ----------
-    let bank = CpRademacher::generate(SEED, &dims, cfg.rank_proj, cfg.k, Distribution::Rademacher);
+    // ---- one banded spec: a K-wide bank sliced into table families -------
+    // The spec expresses the artifact's layout declaratively: K/BANDS codes
+    // per table, all slices of one bank seeded at SEED — the same bank the
+    // PJRT executor projects with, so both paths bucket identically.
+    let mut lsh_spec =
+        LshSpec::cosine(FamilyKind::Cp, dims.clone(), cfg.rank_proj, band_k, BANDS)
+            .with_banded(true)
+            .with_seed(SEED, 0);
+    lsh_spec.serving.shards = SHARDS;
+    let bank: CpRademacher = lsh_spec.cp_bank()?;
 
     // ---- bulk index build through the PJRT artifact ----------------------
     let t0 = Instant::now();
-    let icfg = IndexConfig {
-        family_builder: {
-            let bank = bank.clone();
-            Arc::new(move |t| {
-                Arc::new(SrpHasher::wrap(bank.band(t, band_k), "cp")) as Arc<dyn HashFamily>
-            })
-        },
-        n_tables: BANDS,
-        metric: Metric::Cosine,
-        probes: 0,
-    };
-    let index = ShardedLshIndex::new(&icfg, SHARDS)?;
+    let index = ShardedLshIndex::from_spec(&lsh_spec)?;
     let mut start = 0;
     while start < items.len() {
         let end = (start + cfg.batch).min(items.len());

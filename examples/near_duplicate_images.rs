@@ -7,10 +7,7 @@
 //!
 //! Run: `cargo run --release --example near_duplicate_images`
 
-use std::sync::Arc;
-use tensor_lsh::index::{IndexConfig, LshIndex, Metric};
-use tensor_lsh::lsh::{CpSrp, CpSrpConfig, HashFamily};
-use tensor_lsh::rng::Rng;
+use tensor_lsh::prelude::*;
 use tensor_lsh::workload::image_patches;
 
 fn main() -> tensor_lsh::Result<()> {
@@ -29,23 +26,11 @@ fn main() -> tensor_lsh::Result<()> {
         bands
     );
 
-    let cfg = IndexConfig {
-        family_builder: {
-            let dims = dims.clone();
-            Arc::new(move |t| {
-                Arc::new(CpSrp::new(CpSrpConfig {
-                    dims: dims.clone(),
-                    rank: 8,
-                    k: 12,
-                    seed: 7 + t as u64,
-                })) as Arc<dyn HashFamily>
-            })
-        },
-        n_tables: 8,
-        metric: Metric::Cosine,
-        probes: 2,
-    };
-    let index = LshIndex::build(&cfg, items)?;
+    // One declarative spec: CP-SRP, rank 8, K=12, L=8 tables, 2 probes.
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims, 8, 12, 8)
+        .with_probes(2)
+        .with_seed(7, 1);
+    let index = IndexBuilder::new(spec).build_with(items)?;
 
     // For every patch, retrieve its nearest neighbors (excluding itself)
     // and check they come from the same duplicate group.

@@ -1,4 +1,6 @@
-//! Quickstart: the four tensorized hash families in ~60 lines.
+//! Quickstart: the declarative spec API in ~60 lines — hash with the four
+//! tensorized families, then build and search a whole index from one
+//! `LshSpec`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -12,26 +14,46 @@ fn main() -> Result<()> {
     // A random low-rank tensor in CP format (16×16×16, CP rank 4)…
     let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 4));
 
-    // …hashed by CP-E2LSH (Definition 10): K=8 codes, bucket width 4.
-    let cp_e2 = CpE2lsh::new(CpE2lshConfig { dims: dims.clone(), rank: 8, k: 8, w: 4.0, seed: 1 });
+    // …hashed by the four families of the paper (Definitions 10–13). One
+    // FamilySpec describes any of them; build(seed) instantiates it.
+    let cp_e2 = FamilySpec::e2lsh(FamilyKind::Cp, dims.clone(), 8, 8, 4.0).build(1)?;
+    let tt_e2 = FamilySpec::e2lsh(FamilyKind::Tt, dims.clone(), 8, 8, 4.0).build(1)?;
+    let cp_srp = FamilySpec::srp(FamilyKind::Cp, dims.clone(), 8, 8).build(1)?;
+    let tt_srp = FamilySpec::srp(FamilyKind::Tt, dims.clone(), 8, 8).build(1)?;
     println!("CP-E2LSH codes: {:?}", cp_e2.hash(&x));
-
-    // …and by TT-E2LSH (Definition 11), CP-SRP (12), TT-SRP (13).
-    let tt_e2 = TtE2lsh::new(TtE2lshConfig { dims: dims.clone(), rank: 8, k: 8, w: 4.0, seed: 1 });
-    let cp_srp = CpSrp::new(CpSrpConfig { dims: dims.clone(), rank: 8, k: 8, seed: 1 });
-    let tt_srp = TtSrp::new(TtSrpConfig { dims: dims.clone(), rank: 8, k: 8, seed: 1 });
     println!("TT-E2LSH codes: {:?}", tt_e2.hash(&x));
     println!("CP-SRP   bits : {:?}", cp_srp.hash(&x));
     println!("TT-SRP   bits : {:?}", tt_srp.hash(&x));
 
     // The whole point: space. The naive method stores d^N floats per hash.
-    let naive = NaiveSrp::naive(&dims, 8, 1);
+    let naive = FamilySpec::srp(FamilyKind::Naive, dims.clone(), 8, 8).build(1)?;
     println!(
         "\nprojection parameters: cp-srp {} f32 vs naive {} f32 ({}x smaller)",
         cp_srp.param_count(),
         naive.param_count(),
         naive.param_count() / cp_srp.param_count()
     );
+
+    // An entire multi-table index from one serializable spec — this is the
+    // whole build, spec to searchable index:
+    let items: Vec<AnyTensor> = (0..300)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+        .collect();
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 8, 10, 8);
+    let index = IndexBuilder::new(spec.clone()).build_with(items.clone())?;
+    let hits = index.search(&items[7], 5)?;
+    assert_eq!(hits[0].id, 7); // an indexed item is its own nearest neighbor
+    println!(
+        "\nindexed {} items in {} tables; top hit for item 7 is itself (cos {:.3})",
+        index.len(),
+        index.n_tables(),
+        hits[0].score
+    );
+
+    // The spec round-trips through JSON — store it next to the index and
+    // every rebuild is bit-identical.
+    assert_eq!(LshSpec::from_json_str(&spec.to_json_string())?, spec);
+    println!("spec JSON round-trips ({} bytes)", spec.to_json_string().len());
 
     // Collision probabilities follow the classical laws (Theorems 4 & 8):
     // nearby pairs collide often, far pairs rarely.

@@ -8,9 +8,8 @@
 //!      without duplicating projection parameters.
 //!
 //! Run: `cargo bench --bench ablations`
-use std::sync::Arc;
-use tensor_lsh::index::{recall_at_k, IndexConfig, LshIndex, Metric};
-use tensor_lsh::lsh::{CpSrp, CpSrpConfig, HashFamily, SrpHasher};
+use tensor_lsh::index::{recall_at_k, LshIndex};
+use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec, SrpHasher};
 use tensor_lsh::projection::{CpRademacher, Distribution};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::stats::srp_collision_prob;
@@ -79,23 +78,10 @@ fn ablation_multiprobe() {
                                ("L=4, probes=4", 4, 4),
                                ("L=8, probes=0", 8, 0),
                                ("L=16, probes=0", 16, 0)] {
-        let cfg = IndexConfig {
-            family_builder: {
-                let dims = dims.clone();
-                Arc::new(move |t| {
-                    Arc::new(CpSrp::new(CpSrpConfig {
-                        dims: dims.clone(),
-                        rank: 4,
-                        k: 12,
-                        seed: 500 + t as u64,
-                    })) as Arc<dyn HashFamily>
-                })
-            },
-            n_tables: l,
-            metric: Metric::Cosine,
-            probes,
-        };
-        let index = LshIndex::build(&cfg, items.clone()).unwrap();
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 4, 12, l)
+            .with_probes(probes)
+            .with_seed(500, 1);
+        let index = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
         let params: usize = index.families().iter().map(|f| f.param_count()).sum();
         let mut recall = 0.0;
         let mut cands = 0usize;

@@ -9,18 +9,19 @@
 //! TT stacked block-diagonal cores) plus amortized batching overhead.
 //!
 //! Emits machine-readable `BENCH_coordinator.json` (items/sec and
-//! mean/p50/p99 ns per item for every cell, plus the speedup summary) so
-//! the perf trajectory is tracked across PRs. Set `BENCH_SMOKE=1` for a
-//! seconds-long smoke run (CI parses the JSON it writes).
+//! mean/p50/p99 ns per item for every cell, plus the speedup summary, plus
+//! the serialized `LshSpec` each family's index was built from — the
+//! provenance stamp that makes bench trajectories like-for-like comparable
+//! across PRs). Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI
+//! parses the JSON it writes).
 //!
 //! Run: `cargo bench --bench coordinator_throughput`
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
-use tensor_lsh::bench_harness::index_config;
-use tensor_lsh::config::Family;
 use tensor_lsh::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, Query};
-use tensor_lsh::index::{Metric, ShardedLshIndex};
+use tensor_lsh::index::ShardedLshIndex;
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::util::json::Json;
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
@@ -142,14 +143,22 @@ fn main() {
     let shards = 8usize;
     let mut cells: Vec<Cell> = Vec::new();
     let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    let mut specs: BTreeMap<String, Json> = BTreeMap::new();
     let mut tt_best = 0.0f64;
-    for (family, label) in [(Family::Cp, "cp-e2lsh"), (Family::Tt, "tt-e2lsh")] {
-        let icfg = index_config(family, Metric::Euclidean, dims.clone(), 4, 12, 8, 4.0, 5);
-        let index =
-            Arc::new(ShardedLshIndex::build_parallel(&icfg, items.clone(), shards).unwrap());
+    for (family, label) in [(FamilyKind::Cp, "cp-e2lsh"), (FamilyKind::Tt, "tt-e2lsh")] {
+        // One declarative spec builds the index and is stamped verbatim
+        // into the report, so a future run can rebuild the exact setup.
+        let lsh_spec = LshSpec::euclidean(family, dims.clone(), 4, 12, 8, 4.0)
+            .with_seed(5, 1000)
+            .with_serving(tensor_lsh::lsh::ServingSpec {
+                shards,
+                ..Default::default()
+            });
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&lsh_spec, items.clone()).unwrap());
+        specs.insert(label.to_string(), lsh_spec.to_json());
         let best =
             run_family(label, index, n_queries, worker_grid, batch_grid, 10, &mut cells);
-        if matches!(family, Family::Tt) {
+        if matches!(family, FamilyKind::Tt) {
             tt_best = best;
         }
         speedups.insert(
@@ -175,6 +184,7 @@ fn main() {
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("coordinator_throughput".into()));
     root.insert("config".into(), Json::Obj(config));
+    root.insert("specs".into(), Json::Obj(specs));
     root.insert("runs".into(), Json::Arr(cells.iter().map(Cell::to_json).collect()));
     root.insert("speedup".into(), Json::Obj(speedups));
     let path = "BENCH_coordinator.json";

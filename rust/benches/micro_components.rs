@@ -4,16 +4,15 @@
 //!
 //! Emits machine-readable `BENCH_batch.json` (mean/p50/p99 ns per item and
 //! items/sec for the per-item loop and the flat [`CodeMatrix`] path, CP and
-//! TT) so the perf trajectory is tracked across PRs. Set `BENCH_SMOKE=1`
-//! for a seconds-long smoke run.
+//! TT, plus the serialized `LshSpec` provenance stamp for each measured
+//! family) so the perf trajectory is tracked like-for-like across PRs. Set
+//! `BENCH_SMOKE=1` for a seconds-long smoke run.
 //!
 //! Run: `cargo bench --bench micro_components`
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use tensor_lsh::bench_harness::{index_config, index_config_family};
-use tensor_lsh::config::Family;
-use tensor_lsh::index::{signature, CodeMatrix, LshIndex, Metric};
-use tensor_lsh::lsh::HashFamily;
+use tensor_lsh::index::{signature, CodeMatrix, LshIndex};
+use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::AnyTensor;
 use tensor_lsh::util::json::Json;
@@ -71,8 +70,8 @@ fn main() {
     let (items, _) = low_rank_corpus(&spec);
 
     // Per-stage costs of one query (EXPERIMENTS.md §Perf).
-    let icfg = index_config(Family::Cp, Metric::Cosine, dims.clone(), 4, 12, 8, 4.0, 5);
-    let index = Arc::new(LshIndex::build(&icfg, items.clone()).unwrap());
+    let stage_spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 4, 12, 8).with_seed(5, 1000);
+    let index = Arc::new(LshIndex::build_from_spec(&stage_spec, items.clone()).unwrap());
     let mut rng = Rng::new(6);
     let q = index.item(rng.below(index.len())).clone();
     let t_hash = bench(
@@ -100,13 +99,13 @@ fn main() {
         (0..batch).map(|i| index.item((i * 7) % index.len()).clone()).collect();
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    let mut specs: BTreeMap<String, Json> = BTreeMap::new();
     println!("\n## flat CodeMatrix vs per-item hashing (batch={batch}, L=8, K=12)");
-    for (family, label) in [(Family::Cp, "cp-e2lsh"), (Family::Tt, "tt-e2lsh")] {
-        let families: Vec<Arc<dyn HashFamily>> = (0..8u64)
-            .map(|t| {
-                index_config_family(family, Metric::Euclidean, &dims, 4, 12, 4.0, 5 + 1000 * t)
-            })
-            .collect();
+    for (family, label) in [(FamilyKind::Cp, "cp-e2lsh"), (FamilyKind::Tt, "tt-e2lsh")] {
+        let lsh_spec =
+            LshSpec::euclidean(family, dims.clone(), 4, 12, 8, 4.0).with_seed(5, 1000);
+        specs.insert(label.to_string(), lsh_spec.to_json());
+        let families: Vec<Arc<dyn HashFamily>> = lsh_spec.families().unwrap();
         let t_item = bench(
             || {
                 qbatch
@@ -158,9 +157,11 @@ fn main() {
         stages.insert(name.to_string(), Json::Obj(m));
     }
 
+    specs.insert("stage_timings".to_string(), stage_spec.to_json());
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("micro_components".into()));
     root.insert("config".into(), Json::Obj(config));
+    root.insert("specs".into(), Json::Obj(specs));
     root.insert("stages".into(), Json::Obj(stages));
     root.insert("entries".into(), Json::Arr(entries.iter().map(Entry::to_json).collect()));
     root.insert("speedup".into(), Json::Obj(speedups));

@@ -2,8 +2,7 @@
 
 use super::print_header;
 use crate::lsh::{
-    cp_condition_ratio, tt_condition_ratio, CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig,
-    HashFamily, TtE2lsh, TtE2lshConfig, TtSrp, TtSrpConfig,
+    cp_condition_ratio, tt_condition_ratio, FamilyKind, FamilySpec, HashFamily,
 };
 use crate::projection::{CpRademacher, Distribution, Projection, TtRademacher};
 use crate::rng::Rng;
@@ -65,8 +64,12 @@ pub fn fig_collision_e2lsh(
 ) -> Vec<CollisionRow> {
     println!("\n## F1: E2LSH collision vs distance (w={w}, R={rank}, dims={dims:?}, pairs={format:?})");
     print_header(&["r", "analytic p(r)", "CP-E2LSH", "CP 95% CI", "TT-E2LSH", "TT 95% CI"]);
-    let cp = CpE2lsh::new(CpE2lshConfig { dims: dims.to_vec(), rank, k, w, seed });
-    let tt = TtE2lsh::new(TtE2lshConfig { dims: dims.to_vec(), rank, k, w, seed });
+    let cp = FamilySpec::e2lsh(FamilyKind::Cp, dims.to_vec(), rank, k, w)
+        .build(seed)
+        .expect("valid F1 point");
+    let tt = FamilySpec::e2lsh(FamilyKind::Tt, dims.to_vec(), rank, k, w)
+        .build(seed)
+        .expect("valid F1 point");
     let mut rng = Rng::derive(seed, &[0xF1]);
     let rs = [0.25 * w, 0.5 * w, w, 1.5 * w, 2.0 * w, 3.0 * w];
     let mut rows = Vec::new();
@@ -108,8 +111,12 @@ pub fn fig_collision_srp(
 ) -> Vec<CollisionRow> {
     println!("\n## F2: SRP collision vs cosine similarity (R={rank}, dims={dims:?}, pairs={format:?})");
     print_header(&["cos θ", "analytic 1−θ/π", "CP-SRP", "CP 95% CI", "TT-SRP", "TT 95% CI"]);
-    let cp = CpSrp::new(CpSrpConfig { dims: dims.to_vec(), rank, k, seed });
-    let tt = TtSrp::new(TtSrpConfig { dims: dims.to_vec(), rank, k, seed });
+    let cp = FamilySpec::srp(FamilyKind::Cp, dims.to_vec(), rank, k)
+        .build(seed)
+        .expect("valid F2 point");
+    let tt = FamilySpec::srp(FamilyKind::Tt, dims.to_vec(), rank, k)
+        .build(seed)
+        .expect("valid F2 point");
     let mut rng = Rng::derive(seed, &[0xF2]);
     let cosines = [-0.8, -0.4, 0.0, 0.4, 0.7, 0.9, 0.99];
     let mut rows = Vec::new();

@@ -3,10 +3,7 @@
 use super::print_header;
 use crate::config::Family;
 use crate::index::{recall_at_k, IndexConfig, LshIndex, Metric};
-use crate::lsh::{
-    CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, HashFamily, NaiveE2lsh, NaiveSrp, TtE2lsh,
-    TtE2lshConfig, TtSrp, TtSrpConfig,
-};
+use crate::lsh::{FamilySpec, HashFamily, LshSpec};
 use crate::rng::Rng;
 use crate::util::fmt_duration;
 use crate::util::timer::time_once;
@@ -60,7 +57,8 @@ impl Default for RecallOptions {
 }
 
 /// Construct one hash family instance for a (family, metric) selection —
-/// shared by the CLI, the examples, and [`index_config`].
+/// shared by the CLI, the examples, and [`index_config`]. Thin wrapper over
+/// [`FamilySpec::build`], the crate's single family constructor path.
 pub fn index_config_family(
     family: Family,
     metric: Metric,
@@ -70,39 +68,14 @@ pub fn index_config_family(
     w: f64,
     seed: u64,
 ) -> Arc<dyn HashFamily> {
-    match (family, metric) {
-        (Family::Cp, Metric::Cosine) => Arc::new(CpSrp::new(CpSrpConfig {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            seed,
-        })),
-        (Family::Tt, Metric::Cosine) => Arc::new(TtSrp::new(TtSrpConfig {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            seed,
-        })),
-        (Family::Naive, Metric::Cosine) => Arc::new(NaiveSrp::naive(dims, k, seed)),
-        (Family::Cp, Metric::Euclidean) => Arc::new(CpE2lsh::new(CpE2lshConfig {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            w,
-            seed,
-        })),
-        (Family::Tt, Metric::Euclidean) => Arc::new(TtE2lsh::new(TtE2lshConfig {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            w,
-            seed,
-        })),
-        (Family::Naive, Metric::Euclidean) => Arc::new(NaiveE2lsh::naive(dims, k, w, seed)),
-    }
+    FamilySpec { kind: family, dims: dims.to_vec(), rank, k, metric, w }
+        .build(seed)
+        .expect("valid bench family parameters")
 }
 
-/// Build an [`IndexConfig`] for a family at (K, L).
+/// Build an [`IndexConfig`] for a family at (K, L): the historical bench
+/// parameter tuple, routed through a declarative [`LshSpec`] (seed stride
+/// 1000, as this harness has always used).
 pub fn index_config(
     family: Family,
     metric: Metric,
@@ -113,14 +86,10 @@ pub fn index_config(
     w: f64,
     seed: u64,
 ) -> IndexConfig {
-    IndexConfig {
-        family_builder: Arc::new(move |t| {
-            index_config_family(family, metric, &dims, rank, k, w, seed + 1000 * t as u64)
-        }),
-        n_tables: l,
-        metric,
-        probes: 0,
-    }
+    LshSpec::new(FamilySpec { kind: family, dims, rank, k, metric, w }, l)
+        .with_seed(seed, 1000)
+        .index_config()
+        .expect("valid bench spec")
 }
 
 /// F5 — run the recall/cost sweep and print rows.

@@ -6,11 +6,9 @@
 //! (`O(d^N)` vs `O(NdR·max²)`) are checkable numbers, not prose.
 
 use super::print_header;
-use crate::lsh::{
-    CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, HashFamily, NaiveE2lsh, NaiveSrp, TtE2lsh,
-    TtE2lshConfig, TtSrp, TtSrpConfig,
-};
+use crate::lsh::{FamilyKind, FamilySpec, HashFamily};
 use crate::rng::Rng;
+use std::sync::Arc;
 use crate::tensor::{AnyTensor, CpTensor};
 use crate::util::timer::bench;
 use crate::util::{fmt_bytes, fmt_duration};
@@ -67,7 +65,7 @@ fn measure(
 fn run_table(
     title: &str,
     opts: &TableOptions,
-    build: impl Fn(&[usize], usize, usize, u64) -> Vec<(String, Box<dyn HashFamily>)>,
+    build: impl Fn(&[usize], usize, usize, u64) -> Vec<(String, Arc<dyn HashFamily>)>,
 ) -> Vec<ComplexityRow> {
     println!("\n## {title}");
     println!(
@@ -134,52 +132,30 @@ fn print_scaling_fits(rows: &[ComplexityRow]) {
 /// T1 — regenerate Table 1 (LSH for Euclidean distance).
 pub fn table1_euclidean(opts: &TableOptions) -> Vec<ComplexityRow> {
     run_table("Table 1: Euclidean-distance LSH, space & time", opts, |dims, r, k, seed| {
-        vec![
-            (
-                "naive".to_string(),
-                Box::new(NaiveE2lsh::naive(dims, k, 4.0, seed)) as Box<dyn HashFamily>,
-            ),
-            (
-                "cp".to_string(),
-                Box::new(CpE2lsh::new(CpE2lshConfig {
-                    dims: dims.to_vec(),
-                    rank: r,
-                    k,
-                    w: 4.0,
-                    seed,
-                })),
-            ),
-            (
-                "tt".to_string(),
-                Box::new(TtE2lsh::new(TtE2lshConfig {
-                    dims: dims.to_vec(),
-                    rank: r,
-                    k,
-                    w: 4.0,
-                    seed,
-                })),
-            ),
-        ]
+        [FamilyKind::Naive, FamilyKind::Cp, FamilyKind::Tt]
+            .into_iter()
+            .map(|kind| {
+                let fam = FamilySpec::e2lsh(kind, dims.to_vec(), r, k, 4.0)
+                    .build(seed)
+                    .expect("valid table sweep point");
+                (kind.name().to_string(), fam)
+            })
+            .collect()
     })
 }
 
 /// T2 — regenerate Table 2 (LSH for cosine similarity).
 pub fn table2_cosine(opts: &TableOptions) -> Vec<ComplexityRow> {
     run_table("Table 2: cosine-similarity LSH, space & time", opts, |dims, r, k, seed| {
-        vec![
-            (
-                "naive".to_string(),
-                Box::new(NaiveSrp::naive(dims, k, seed)) as Box<dyn HashFamily>,
-            ),
-            (
-                "cp".to_string(),
-                Box::new(CpSrp::new(CpSrpConfig { dims: dims.to_vec(), rank: r, k, seed })),
-            ),
-            (
-                "tt".to_string(),
-                Box::new(TtSrp::new(TtSrpConfig { dims: dims.to_vec(), rank: r, k, seed })),
-            ),
-        ]
+        [FamilyKind::Naive, FamilyKind::Cp, FamilyKind::Tt]
+            .into_iter()
+            .map(|kind| {
+                let fam = FamilySpec::srp(kind, dims.to_vec(), r, k)
+                    .build(seed)
+                    .expect("valid table sweep point");
+                (kind.name().to_string(), fam)
+            })
+            .collect()
     })
 }
 

@@ -1,76 +1,35 @@
 //! Layered application configuration: defaults ← JSON file ← `key=value`
 //! CLI overrides. Used by the `tensorlsh` binary and the examples.
+//!
+//! [`AppConfig`] is a thin workload wrapper around one declarative
+//! [`LshSpec`]: every LSH/serving key parses straight into the spec (which
+//! validates at parse time), and `AppConfig::spec` is handed as-is to the
+//! `from_spec` constructors of the index, coordinator, and CLI commands.
+//! Only the workload knobs that describe *data* rather than the index
+//! (corpus size, input rank, top-k, artifact dir) live beside it.
 
-use crate::coordinator::BatcherConfig;
 use crate::coordinator::CoordinatorConfig;
 use crate::error::{Error, Result};
 use crate::index::Metric;
+use crate::lsh::spec::{FamilyKind, LshSpec};
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
-use std::time::Duration;
 
-/// Hash family selector.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Family {
-    Cp,
-    Tt,
-    Naive,
-}
+/// Hash family selector (re-exported spec type; `Family::parse` lists the
+/// accepted values in its error).
+pub use crate::lsh::spec::FamilyKind as Family;
 
-impl Family {
-    pub fn parse(s: &str) -> Result<Family> {
-        match s {
-            "cp" => Ok(Family::Cp),
-            "tt" => Ok(Family::Tt),
-            "naive" => Ok(Family::Naive),
-            other => Err(Error::Config(format!("unknown family '{other}'"))),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Family::Cp => "cp",
-            Family::Tt => "tt",
-            Family::Naive => "naive",
-        }
-    }
-}
-
-/// Full application configuration.
-#[derive(Clone, Debug)]
+/// Full application configuration: one [`LshSpec`] plus workload knobs.
+#[derive(Clone, Debug, PartialEq)]
 pub struct AppConfig {
-    /// Tensor mode dimensions.
-    pub dims: Vec<usize>,
-    /// Projection tensor rank R.
-    pub rank_proj: usize,
-    /// Corpus item rank R̂.
+    /// The declarative index/serving spec every layer builds from.
+    pub spec: LshSpec,
+    /// Corpus item rank R̂ (generated workloads).
     pub rank_in: usize,
-    /// Hashes per table signature.
-    pub k: usize,
-    /// Number of tables L.
-    pub l: usize,
-    /// E2LSH bucket width.
-    pub w: f64,
-    /// cp | tt | naive.
-    pub family: Family,
-    /// euclidean | cosine.
-    pub metric: Metric,
-    /// Multiprobe extra probes.
-    pub probes: usize,
     /// Corpus size for generated workloads.
     pub n_items: usize,
     /// Neighbors per query.
     pub top_k: usize,
-    /// Coordinator workers.
-    pub n_workers: usize,
-    /// Index shards (serving path).
-    pub shards: usize,
-    /// Batch limit.
-    pub max_batch: usize,
-    /// Batch deadline (µs).
-    pub max_wait_us: u64,
-    /// Master seed.
-    pub seed: u64,
     /// Artifact directory override (PJRT backend).
     pub artifact_dir: Option<String>,
 }
@@ -78,47 +37,47 @@ pub struct AppConfig {
 impl Default for AppConfig {
     fn default() -> Self {
         AppConfig {
-            dims: vec![32, 32, 32],
-            rank_proj: 8,
+            spec: LshSpec::cosine(FamilyKind::Cp, vec![32, 32, 32], 8, 16, 8),
             rank_in: 8,
-            k: 16,
-            l: 8,
-            w: 4.0,
-            family: Family::Cp,
-            metric: Metric::Cosine,
-            probes: 0,
             n_items: 2000,
             top_k: 10,
-            n_workers: 4,
-            shards: 4,
-            max_batch: 64,
-            max_wait_us: 500,
-            seed: 42,
             artifact_dir: None,
         }
     }
 }
 
 impl AppConfig {
-    /// Coordinator view of this config.
+    /// Coordinator view of this config (off the spec's serving knobs).
     pub fn coordinator(&self) -> CoordinatorConfig {
-        CoordinatorConfig {
-            n_workers: self.n_workers,
-            batcher: BatcherConfig {
-                max_batch: self.max_batch,
-                max_wait: Duration::from_micros(self.max_wait_us),
-            },
-        }
+        CoordinatorConfig::from_spec(&self.spec)
     }
 
-    /// Apply a JSON config file.
+    /// Apply a JSON config file. Two formats are accepted: the canonical
+    /// nested spec document printed by `tensorlsh info` / `plan` (an object
+    /// with a `"family"` object — so the planned-spec round trip works;
+    /// workload keys like `n_items`/`top_k` may sit beside the spec keys),
+    /// or a flat `key: value` object with the same keys as the CLI
+    /// overrides. Unknown keys are rejected in both formats.
     pub fn apply_file(&mut self, path: &str) -> Result<()> {
         let text = std::fs::read_to_string(path)?;
         let root = parse(&text)?;
+        let nested = matches!(root.as_obj()?.get("family"), Some(Json::Obj(_)));
+        if nested {
+            // Peel the app-level workload keys off the document; the rest
+            // must parse as a spec (which rejects unknown keys itself).
+            let mut doc = root.as_obj()?.clone();
+            for key in ["n_items", "items", "top_k", "rank_in", "artifact_dir"] {
+                if let Some(v) = doc.remove(key) {
+                    self.set(key, &json_to_string(&v))?;
+                }
+            }
+            self.spec = LshSpec::from_json(&Json::Obj(doc))?;
+            return Ok(());
+        }
         for (k, v) in root.as_obj()? {
             self.set(k, &json_to_string(v))?;
         }
-        Ok(())
+        self.spec.validate()
     }
 
     /// Apply a single `key=value` override.
@@ -133,87 +92,97 @@ impl AppConfig {
         let parse_usize = |v: &str| -> Result<usize> {
             v.parse().map_err(|e| Error::Config(format!("{key}={v}: {e}")))
         };
+        // Spec numerics are validated here, at parse time, with typed
+        // errors — not downstream where they would surface as panics.
+        let parse_pos = |v: &str| -> Result<usize> {
+            let x = parse_usize(v)?;
+            if x == 0 {
+                return Err(Error::InvalidSpec(format!("{key} must be ≥ 1")));
+            }
+            Ok(x)
+        };
+        let parse_u64 = |v: &str| -> Result<u64> {
+            v.parse().map_err(|e| Error::Config(format!("{key}={v}: {e}")))
+        };
         match key {
             "dims" => {
-                self.dims = value
+                let dims: Vec<usize> = value
                     .split(|c| c == ',' || c == 'x')
                     .filter(|s| !s.is_empty())
                     .map(|s| s.trim().parse().map_err(|e| Error::Config(format!("dims: {e}"))))
                     .collect::<Result<_>>()?;
+                if dims.is_empty() {
+                    return Err(Error::InvalidSpec("dims must not be empty".into()));
+                }
+                if dims.contains(&0) {
+                    return Err(Error::InvalidSpec("every mode dimension must be ≥ 1".into()));
+                }
+                self.spec.family.dims = dims;
             }
-            "rank_proj" | "rank" => self.rank_proj = parse_usize(value)?,
-            "rank_in" => self.rank_in = parse_usize(value)?,
-            "k" => self.k = parse_usize(value)?,
-            "l" | "tables" => self.l = parse_usize(value)?,
+            "rank_proj" | "rank" => self.spec.family.rank = parse_pos(value)?,
+            "rank_in" => self.rank_in = parse_pos(value)?,
+            "k" => self.spec.family.k = parse_pos(value)?,
+            "l" | "tables" => self.spec.l = parse_pos(value)?,
             "w" => {
-                self.w = value.parse().map_err(|e| Error::Config(format!("w: {e}")))?;
-                if self.w <= 0.0 {
-                    return Err(Error::Config("w must be > 0".into()));
+                let w: f64 =
+                    value.parse().map_err(|e| Error::Config(format!("w: {e}")))?;
+                if !(w > 0.0 && w.is_finite()) {
+                    return Err(Error::InvalidSpec("w must be > 0".into()));
+                }
+                self.spec.family.w = w;
+            }
+            "family" => self.spec.family.kind = Family::parse(value)?,
+            "metric" => self.spec.family.metric = Metric::parse(value)?,
+            "probes" => self.spec.probes = parse_usize(value)?,
+            "banded" => {
+                self.spec.banded = match value {
+                    "true" => true,
+                    "false" => false,
+                    other => {
+                        return Err(Error::Config(format!("banded={other}: expected true/false")))
+                    }
                 }
             }
-            "family" => self.family = Family::parse(value)?,
-            "metric" => {
-                self.metric = match value {
-                    "euclidean" | "l2" => Metric::Euclidean,
-                    "cosine" | "angular" => Metric::Cosine,
-                    other => return Err(Error::Config(format!("unknown metric '{other}'"))),
-                }
-            }
-            "probes" => self.probes = parse_usize(value)?,
-            "n_items" | "items" => self.n_items = parse_usize(value)?,
-            "top_k" => self.top_k = parse_usize(value)?,
-            "n_workers" | "workers" => self.n_workers = parse_usize(value)?,
-            "shards" | "n_shards" => {
-                self.shards = parse_usize(value)?;
-                if self.shards == 0 {
-                    return Err(Error::Config("shards must be ≥ 1".into()));
-                }
-            }
-            "max_batch" => self.max_batch = parse_usize(value)?,
-            "max_wait_us" => {
-                self.max_wait_us =
-                    value.parse().map_err(|e| Error::Config(format!("max_wait_us: {e}")))?
-            }
-            "seed" => {
-                self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
-            }
+            "n_items" | "items" => self.n_items = parse_pos(value)?,
+            "top_k" => self.top_k = parse_pos(value)?,
+            "n_workers" | "workers" => self.spec.serving.n_workers = parse_pos(value)?,
+            "shards" | "n_shards" => self.spec.serving.shards = parse_pos(value)?,
+            "max_batch" => self.spec.serving.max_batch = parse_pos(value)?,
+            "max_wait_us" => self.spec.serving.max_wait_us = parse_u64(value)?,
+            "seed" => self.spec.seeds.base = parse_u64(value)?,
+            "seed_stride" => self.spec.seeds.stride = parse_u64(value)?,
             "artifact_dir" => self.artifact_dir = Some(value.to_string()),
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
         Ok(())
     }
 
-    /// Serialize for `tensorlsh info`.
+    /// Serialize the flat key set (file-round-trippable; for the canonical
+    /// nested spec document use `self.spec.to_json_string()`).
     pub fn to_json(&self) -> String {
+        let s = &self.spec;
         let mut m = BTreeMap::new();
         m.insert(
             "dims".to_string(),
-            Json::Arr(self.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+            Json::Arr(s.family.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
         );
-        m.insert("rank_proj".into(), Json::Num(self.rank_proj as f64));
+        m.insert("rank_proj".into(), Json::Num(s.family.rank as f64));
         m.insert("rank_in".into(), Json::Num(self.rank_in as f64));
-        m.insert("k".into(), Json::Num(self.k as f64));
-        m.insert("l".into(), Json::Num(self.l as f64));
-        m.insert("w".into(), Json::Num(self.w));
-        m.insert("family".into(), Json::Str(self.family.name().into()));
-        m.insert(
-            "metric".into(),
-            Json::Str(
-                match self.metric {
-                    Metric::Euclidean => "euclidean",
-                    Metric::Cosine => "cosine",
-                }
-                .into(),
-            ),
-        );
-        m.insert("probes".into(), Json::Num(self.probes as f64));
+        m.insert("k".into(), Json::Num(s.family.k as f64));
+        m.insert("l".into(), Json::Num(s.l as f64));
+        m.insert("w".into(), Json::Num(s.family.w));
+        m.insert("family".into(), Json::Str(s.family.kind.name().into()));
+        m.insert("metric".into(), Json::Str(s.family.metric.name().into()));
+        m.insert("probes".into(), Json::Num(s.probes as f64));
+        m.insert("banded".into(), Json::Bool(s.banded));
         m.insert("n_items".into(), Json::Num(self.n_items as f64));
         m.insert("top_k".into(), Json::Num(self.top_k as f64));
-        m.insert("n_workers".into(), Json::Num(self.n_workers as f64));
-        m.insert("shards".into(), Json::Num(self.shards as f64));
-        m.insert("max_batch".into(), Json::Num(self.max_batch as f64));
-        m.insert("max_wait_us".into(), Json::Num(self.max_wait_us as f64));
-        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("n_workers".into(), Json::Num(s.serving.n_workers as f64));
+        m.insert("shards".into(), Json::Num(s.serving.shards as f64));
+        m.insert("max_batch".into(), Json::Num(s.serving.max_batch as f64));
+        m.insert("max_wait_us".into(), Json::Num(s.serving.max_wait_us as f64));
+        m.insert("seed".into(), Json::Num(s.seeds.base as f64));
+        m.insert("seed_stride".into(), Json::Num(s.seeds.stride as f64));
         Json::Obj(m).to_string_pretty()
     }
 }
@@ -250,11 +219,15 @@ mod tests {
         c.apply_override("metric=euclidean").unwrap();
         c.apply_override("k=24").unwrap();
         c.apply_override("w=2.5").unwrap();
-        assert_eq!(c.dims, vec![8, 8, 8]);
-        assert_eq!(c.family, Family::Tt);
-        assert_eq!(c.metric, Metric::Euclidean);
-        assert_eq!(c.k, 24);
-        assert!((c.w - 2.5).abs() < 1e-12);
+        c.apply_override("seed=7").unwrap();
+        c.apply_override("seed_stride=11").unwrap();
+        assert_eq!(c.spec.family.dims, vec![8, 8, 8]);
+        assert_eq!(c.spec.family.kind, Family::Tt);
+        assert_eq!(c.spec.family.metric, Metric::Euclidean);
+        assert_eq!(c.spec.family.k, 24);
+        assert!((c.spec.family.w - 2.5).abs() < 1e-12);
+        assert_eq!((c.spec.seeds.base, c.spec.seeds.stride), (7, 11));
+        c.spec.validate().unwrap();
     }
 
     #[test]
@@ -265,26 +238,80 @@ mod tests {
         assert!(c.apply_override("shards=0").is_err());
         assert!(c.apply_override("family=foo").is_err());
         assert!(c.apply_override("no_equals").is_err());
+        // Spec numerics rejected at parse time with typed errors.
+        for bad in ["k=0", "l=0", "rank_proj=0", "dims=", "dims=4,0", "w=0", "max_batch=0"] {
+            match c.apply_override(bad) {
+                Err(Error::InvalidSpec(_)) => {}
+                other => panic!("{bad}: expected InvalidSpec, got {other:?}"),
+            }
+        }
+        // Family parse errors name the accepted values.
+        let msg = match c.apply_override("family=foo") {
+            Err(e) => e.to_string(),
+            ok => panic!("{ok:?}"),
+        };
+        assert!(msg.contains("cp") && msg.contains("tt") && msg.contains("naive"), "{msg}");
     }
 
     #[test]
-    fn file_roundtrip(){
+    fn file_roundtrip() {
         let mut c = AppConfig::default();
         c.apply_override("dims=4x4").unwrap();
+        c.apply_override("banded=true").unwrap();
         let json = c.to_json();
         let tmp = std::env::temp_dir().join("tensorlsh_cfg_test.json");
         std::fs::write(&tmp, &json).unwrap();
         let mut c2 = AppConfig::default();
         c2.apply_file(tmp.to_str().unwrap()).unwrap();
-        assert_eq!(c2.dims, vec![4, 4]);
-        assert_eq!(c2.k, c.k);
+        assert_eq!(c2.spec.family.dims, vec![4, 4]);
+        assert_eq!(c2.spec.family.k, c.spec.family.k);
+        assert!(c2.spec.banded);
+        assert_eq!(c2, c);
         let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn nested_spec_document_round_trips_through_config_file() {
+        // The `plan`/`info` workflow: save the printed spec JSON, feed it
+        // back with --config.
+        let spec = LshSpec::cosine(Family::Tt, vec![6, 6, 6], 3, 9, 5)
+            .with_probes(1)
+            .with_seed(77, 13);
+        let tmp = std::env::temp_dir().join("tensorlsh_spec_doc_test.json");
+        std::fs::write(&tmp, spec.to_json_string()).unwrap();
+        let mut c = AppConfig::default();
+        c.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c.spec, spec);
+
+        // Workload keys may sit beside the spec keys; typos are rejected,
+        // not silently defaulted.
+        let with_items = spec.to_json_string().replacen('{', "{\n  \"n_items\": 9000,", 1);
+        std::fs::write(&tmp, &with_items).unwrap();
+        let mut c2 = AppConfig::default();
+        c2.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c2.n_items, 9000);
+        assert_eq!(c2.spec, spec);
+        let with_typo = spec.to_json_string().replacen('{', "{\n  \"probess\": 4,", 1);
+        std::fs::write(&tmp, &with_typo).unwrap();
+        let mut c3 = AppConfig::default();
+        assert!(matches!(
+            c3.apply_file(tmp.to_str().unwrap()),
+            Err(Error::InvalidSpec(_))
+        ));
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn oversized_seed_rejected_at_validation() {
+        let mut c = AppConfig::default();
+        c.apply_override("seed=18446744073709551615").unwrap();
+        assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))));
     }
 
     #[test]
     fn dims_accept_x_separator() {
         let mut c = AppConfig::default();
         c.apply_override("dims=16x8x4").unwrap();
-        assert_eq!(c.dims, vec![16, 8, 4]);
+        assert_eq!(c.spec.family.dims, vec![16, 8, 4]);
     }
 }

@@ -29,6 +29,11 @@
 //! * The **aggregator** merges per-shard top-k partials
 //!   ([`crate::index::merge_partials`]) and records end-to-end latency.
 
+//! The whole pipeline is configurable from one declarative
+//! [`crate::lsh::spec::LshSpec`]: [`CoordinatorConfig::from_spec`] reads the
+//! spec's serving knobs, and [`crate::lsh::spec::CoordinatorBuilder`] wraps
+//! index build + pipeline start behind a fluent surface.
+
 mod batcher;
 mod metrics;
 mod protocol;

@@ -13,6 +13,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{Query, QueryResponse};
 use crate::error::{Error, Result};
 use crate::index::{merge_partials, signature, HashScratch, SearchResult, ShardedLshIndex};
+use crate::lsh::spec::LshSpec;
 use crate::projection::CpRademacher;
 use crate::runtime::PjrtEngine;
 use crate::tensor::{AnyTensor, CpTensor};
@@ -36,6 +37,21 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig { n_workers: 4, batcher: BatcherConfig::default() }
+    }
+}
+
+impl CoordinatorConfig {
+    /// The coordinator policy view of a declarative [`LshSpec`]: workers and
+    /// batching come off `spec.serving`, so the spec that hashed the corpus
+    /// also configures the pipeline that serves it.
+    pub fn from_spec(spec: &LshSpec) -> Self {
+        CoordinatorConfig {
+            n_workers: spec.serving.n_workers,
+            batcher: BatcherConfig {
+                max_batch: spec.serving.max_batch,
+                max_wait: std::time::Duration::from_micros(spec.serving.max_wait_us),
+            },
+        }
     }
 }
 
@@ -435,8 +451,7 @@ fn hash_batch_pjrt(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::index::{IndexConfig, Metric};
-    use crate::lsh::{CpSrp, CpSrpConfig, HashFamily};
+    use crate::lsh::{CoordinatorBuilder, FamilyKind};
     use crate::workload::{low_rank_corpus, DatasetSpec};
 
     fn build_index(dims: Vec<usize>, n_items: usize, n_shards: usize) -> Arc<ShardedLshIndex> {
@@ -449,20 +464,10 @@ mod tests {
             seed: 21,
         };
         let (items, _) = low_rank_corpus(&spec);
-        let cfg = IndexConfig {
-            family_builder: Arc::new(move |t| {
-                Arc::new(CpSrp::new(CpSrpConfig {
-                    dims: dims.clone(),
-                    rank: 4,
-                    k: 10,
-                    seed: 400 + t as u64,
-                })) as Arc<dyn HashFamily>
-            }),
-            n_tables: 6,
-            metric: Metric::Cosine,
-            probes: 0,
-        };
-        Arc::new(ShardedLshIndex::build(&cfg, items, n_shards).unwrap())
+        let lsh = LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 6).with_seed(400, 1);
+        Arc::new(
+            ShardedLshIndex::build(&lsh.index_config().unwrap(), items, n_shards).unwrap(),
+        )
     }
 
     #[test]
@@ -483,6 +488,36 @@ mod tests {
         // Every response's top hit must be the query itself (items queried).
         for r in &responses {
             assert_eq!(r.results[0].id, (r.id as usize * 3) % 150, "resp {}", r.id);
+        }
+    }
+
+    #[test]
+    fn coordinator_builder_serves_from_one_spec() {
+        let dims = vec![6usize, 6, 6];
+        let data = DatasetSpec {
+            dims: dims.clone(),
+            n_items: 120,
+            rank: 2,
+            n_clusters: 8,
+            noise: 0.25,
+            seed: 22,
+        };
+        let (items, _) = low_rank_corpus(&data);
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 6).with_seed(400, 1);
+        let serving = CoordinatorBuilder::new(spec).workers(3).shards(4).max_batch(16);
+        assert_eq!(serving.config().n_workers, 3);
+        assert_eq!(serving.config().batcher.max_batch, 16);
+        let index = serving.build_index(items.clone()).unwrap();
+        assert_eq!(index.n_shards(), 4);
+        let queries: Vec<Query> =
+            (0..20).map(|i| Query::new(i, index.item(i as usize % 120), 5)).collect();
+        let (responses, snap) = serving.serve_trace(Arc::clone(&index), queries).unwrap();
+        assert_eq!(responses.len(), 20);
+        assert_eq!(snap.queries, 20);
+        // Coordinator responses equal offline sharded search.
+        for r in &responses {
+            let offline = index.search(&index.item(r.id as usize % 120), 5).unwrap();
+            assert_eq!(r.results, offline, "resp {}", r.id);
         }
     }
 

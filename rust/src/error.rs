@@ -14,6 +14,11 @@ pub enum Error {
     /// A parameter is out of its valid domain.
     InvalidParameter(String),
 
+    /// A declarative [`crate::lsh::spec::LshSpec`] / [`crate::lsh::spec::FamilySpec`]
+    /// failed validation (bad numerics, metric/family mismatch, or a
+    /// dims/rank combination outside the theorems' validity regime).
+    InvalidSpec(String),
+
     /// A numerical routine failed to converge or produced a degenerate value.
     Numerical(String),
 
@@ -39,6 +44,7 @@ impl fmt::Display for Error {
         match self {
             Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
             Error::InvalidParameter(m) => write!(f, "invalid parameter: {m}"),
+            Error::InvalidSpec(m) => write!(f, "invalid spec: {m}"),
             Error::Numerical(m) => write!(f, "numerical failure: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
@@ -78,6 +84,10 @@ mod tests {
             "shape mismatch: a vs b"
         );
         assert_eq!(Error::Config("bad key".into()).to_string(), "config error: bad key");
+        assert_eq!(
+            Error::InvalidSpec("k must be ≥ 1".into()).to_string(),
+            "invalid spec: k must be ≥ 1"
+        );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
     }

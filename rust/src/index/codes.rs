@@ -129,19 +129,16 @@ impl CodeMatrix {
 mod tests {
     use super::*;
     use crate::index::signature;
-    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::lsh::{FamilyKind, FamilySpec};
     use crate::rng::Rng;
     use crate::tensor::CpTensor;
 
     fn families(dims: &[usize]) -> Vec<Arc<dyn HashFamily>> {
         (0..3u64)
             .map(|t| {
-                Arc::new(CpSrp::new(CpSrpConfig {
-                    dims: dims.to_vec(),
-                    rank: 3,
-                    k: 6,
-                    seed: 900 + t,
-                })) as Arc<dyn HashFamily>
+                FamilySpec::srp(FamilyKind::Cp, dims.to_vec(), 3, 6)
+                    .build(900 + t)
+                    .unwrap()
             })
             .collect()
     }
@@ -173,13 +170,9 @@ mod tests {
         let dims = vec![4usize, 4];
         let fams: Vec<Arc<dyn HashFamily>> = (0..2u64)
             .map(|t| {
-                Arc::new(TtE2lsh::new(TtE2lshConfig {
-                    dims: dims.clone(),
-                    rank: 2,
-                    k: 5,
-                    w: 4.0,
-                    seed: 30 + t,
-                })) as Arc<dyn HashFamily>
+                FamilySpec::e2lsh(FamilyKind::Tt, dims.clone(), 2, 5, 4.0)
+                    .build(30 + t)
+                    .unwrap()
             })
             .collect();
         let mut rng = Rng::new(72);

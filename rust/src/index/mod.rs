@@ -28,6 +28,7 @@ pub use shard::{merge_partials, ShardedLshIndex};
 pub use table::{signature, signature_strided, HashTable};
 
 use crate::error::{Error, Result};
+use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::projection::ProjectionMatrix;
 use crate::tensor::AnyTensor;
@@ -40,10 +41,39 @@ pub enum Metric {
     Cosine,
 }
 
+impl Metric {
+    /// Parse a metric name as it appears in configs and CLI overrides.
+    pub fn parse(s: &str) -> Result<Metric> {
+        match s {
+            "euclidean" | "l2" => Ok(Metric::Euclidean),
+            "cosine" | "angular" => Ok(Metric::Cosine),
+            other => Err(Error::InvalidSpec(format!(
+                "unknown metric '{other}' (expected one of: euclidean, cosine)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::Cosine => "cosine",
+        }
+    }
+}
+
 /// Index configuration.
+///
+/// Construct it with [`IndexConfig::from_spec`] (or skip it entirely via
+/// [`LshIndex::from_spec`] / [`ShardedLshIndex::from_spec`]); the closure
+/// field is the legacy escape hatch for families a spec cannot express.
 #[derive(Clone)]
 pub struct IndexConfig {
     /// Builds the hash family for table `t` (independent seeds per table).
+    #[deprecated(
+        since = "0.2.0",
+        note = "hand-rolled closures are not serializable; build the config \
+                from an lsh::spec::LshSpec via IndexConfig::from_spec"
+    )]
     pub family_builder: Arc<dyn Fn(usize) -> Arc<dyn HashFamily> + Send + Sync>,
     /// Number of tables L.
     pub n_tables: usize,
@@ -51,6 +81,36 @@ pub struct IndexConfig {
     pub metric: Metric,
     /// Multiprobe extra probes per table (0 = exact-bucket only).
     pub probes: usize,
+}
+
+impl IndexConfig {
+    /// The closure-based config, built *from* a declarative spec. The L
+    /// table families are instantiated once up front via
+    /// [`LshSpec::families`] (banded specs generate their full-width bank
+    /// exactly once) and the closure just hands out shared clones.
+    ///
+    /// The closure serves exactly tables `0..spec.l`; raising `n_tables`
+    /// by hand afterwards panics with a descriptive message (a spec-built
+    /// config has no family to offer beyond its spec).
+    pub fn from_spec(spec: &LshSpec) -> Result<IndexConfig> {
+        let families = spec.families()?;
+        #[allow(deprecated)]
+        let cfg = IndexConfig {
+            family_builder: Arc::new(move |t| {
+                families.get(t).cloned().unwrap_or_else(|| {
+                    panic!(
+                        "table {t} out of range: this config was built from a spec \
+                         with l = {} tables",
+                        families.len()
+                    )
+                })
+            }),
+            n_tables: spec.l,
+            metric: spec.family.metric,
+            probes: spec.probes,
+        };
+        Ok(cfg)
+    }
 }
 
 /// A search hit.
@@ -80,6 +140,7 @@ pub(crate) fn build_families(cfg: &IndexConfig) -> Result<Vec<Arc<dyn HashFamily
     if cfg.n_tables == 0 {
         return Err(Error::InvalidParameter("n_tables must be ≥ 1".into()));
     }
+    #[allow(deprecated)]
     let families: Vec<Arc<dyn HashFamily>> =
         (0..cfg.n_tables).map(|t| (cfg.family_builder)(t)).collect();
     let metric_ok = match cfg.metric {
@@ -228,6 +289,16 @@ impl LshIndex {
         Ok(idx)
     }
 
+    /// Empty index from a declarative [`LshSpec`] (validates the spec).
+    pub fn from_spec(spec: &LshSpec) -> Result<Self> {
+        LshIndex::new(&IndexConfig::from_spec(spec)?)
+    }
+
+    /// Bulk build from a declarative [`LshSpec`] (batched hashing).
+    pub fn build_from_spec(spec: &LshSpec, items: Vec<AnyTensor>) -> Result<Self> {
+        LshIndex::build(&IndexConfig::from_spec(spec)?, items)
+    }
+
     /// Candidate ids for a query (deduplicated, unranked).
     pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
         let mut seen = vec![false; self.items.len()];
@@ -348,24 +419,17 @@ pub fn recall_at_k(approx: &[SearchResult], exact: &[SearchResult]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::lsh::{FamilyKind, LshSpec};
     use crate::rng::Rng;
     use crate::workload::{low_rank_corpus, DatasetSpec};
 
     fn cosine_config(dims: Vec<usize>, k: usize, l: usize, probes: usize) -> IndexConfig {
-        IndexConfig {
-            family_builder: Arc::new(move |t| {
-                Arc::new(CpSrp::new(CpSrpConfig {
-                    dims: dims.clone(),
-                    rank: 4,
-                    k,
-                    seed: 1000 + t as u64,
-                })) as Arc<dyn HashFamily>
-            }),
-            n_tables: l,
-            metric: Metric::Cosine,
-            probes,
-        }
+        IndexConfig::from_spec(
+            &LshSpec::cosine(FamilyKind::Cp, dims, 4, k, l)
+                .with_probes(probes)
+                .with_seed(1000, 1),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -419,23 +483,10 @@ mod tests {
     #[test]
     fn euclidean_metric_works_with_e2lsh() {
         let dims = vec![6usize, 6, 6];
-        let cfg = IndexConfig {
-            family_builder: {
-                let dims = dims.clone();
-                Arc::new(move |t| {
-                    Arc::new(TtE2lsh::new(TtE2lshConfig {
-                        dims: dims.clone(),
-                        rank: 3,
-                        k: 6,
-                        w: 4.0,
-                        seed: 50 + t as u64,
-                    })) as Arc<dyn HashFamily>
-                })
-            },
-            n_tables: 6,
-            metric: Metric::Euclidean,
-            probes: 0,
-        };
+        let cfg = IndexConfig::from_spec(
+            &LshSpec::euclidean(FamilyKind::Tt, dims.clone(), 3, 6, 6, 4.0).with_seed(50, 1),
+        )
+        .unwrap();
         let spec = DatasetSpec {
             dims: dims.clone(),
             n_items: 100,
@@ -451,19 +502,21 @@ mod tests {
         assert!(res[0].score < 1e-4);
     }
 
+    /// The deprecated closure escape hatch: a hand-rolled `family_builder`
+    /// can disagree with the declared metric (a spec cannot), and
+    /// `build_families` must still catch it.
     #[test]
+    #[allow(deprecated)]
     fn metric_family_mismatch_rejected() {
+        use crate::lsh::FamilySpec;
         let dims = vec![4usize, 4];
         let cfg = IndexConfig {
             family_builder: {
                 let dims = dims.clone();
                 Arc::new(move |t| {
-                    Arc::new(CpSrp::new(CpSrpConfig {
-                        dims: dims.clone(),
-                        rank: 2,
-                        k: 4,
-                        seed: t as u64,
-                    })) as Arc<dyn HashFamily>
+                    FamilySpec::srp(FamilyKind::Cp, dims.clone(), 2, 4)
+                        .build(t as u64)
+                        .unwrap()
                 })
             },
             n_tables: 2,
@@ -471,6 +524,13 @@ mod tests {
             probes: 0,
         };
         assert!(LshIndex::new(&cfg).is_err());
+    }
+
+    #[test]
+    fn from_spec_rejects_invalid_specs_with_typed_errors() {
+        let bad = LshSpec::cosine(FamilyKind::Cp, vec![8, 8], 4, 0, 4);
+        assert!(matches!(LshIndex::from_spec(&bad), Err(Error::InvalidSpec(_))));
+        assert!(matches!(IndexConfig::from_spec(&bad), Err(Error::InvalidSpec(_))));
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::{
     SearchResult,
 };
 use crate::error::Result;
+use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::tensor::AnyTensor;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -235,6 +236,19 @@ impl ShardedLshIndex {
     pub fn insert_codes(&self, x: AnyTensor, codes: &CodeMatrix, b: usize) -> usize {
         debug_assert_eq!(codes.n_tables(), self.n_tables());
         self.insert_with_signatures(x, codes.sigs_row(b))
+    }
+
+    /// Empty sharded index from a declarative [`LshSpec`]: families, table
+    /// count, metric, probes, *and* the shard count all come off the spec
+    /// (`spec.serving.shards`).
+    pub fn from_spec(spec: &LshSpec) -> Result<Self> {
+        ShardedLshIndex::new(&IndexConfig::from_spec(spec)?, spec.serving.shards)
+    }
+
+    /// Bulk build from a declarative [`LshSpec`] (one build thread per
+    /// shard; identical index to the sequential build).
+    pub fn build_from_spec(spec: &LshSpec, items: Vec<AnyTensor>) -> Result<Self> {
+        ShardedLshIndex::build_parallel(&IndexConfig::from_spec(spec)?, items, spec.serving.shards)
     }
 
     /// Bulk build with batched hashing, single-threaded (deterministic id =
@@ -449,24 +463,17 @@ impl ShardedLshIndex {
 mod tests {
     use super::super::LshIndex;
     use super::*;
-    use crate::lsh::{CpSrp, CpSrpConfig, TtE2lsh, TtE2lshConfig};
+    use crate::lsh::FamilyKind;
     use crate::rng::Rng;
     use crate::workload::{low_rank_corpus, DatasetSpec};
 
     fn cosine_config(dims: Vec<usize>, k: usize, l: usize, probes: usize) -> IndexConfig {
-        IndexConfig {
-            family_builder: Arc::new(move |t| {
-                Arc::new(CpSrp::new(CpSrpConfig {
-                    dims: dims.clone(),
-                    rank: 4,
-                    k,
-                    seed: 3000 + t as u64,
-                })) as Arc<dyn HashFamily>
-            }),
-            n_tables: l,
-            metric: Metric::Cosine,
-            probes,
-        }
+        IndexConfig::from_spec(
+            &LshSpec::cosine(FamilyKind::Cp, dims, 4, k, l)
+                .with_probes(probes)
+                .with_seed(3000, 1),
+        )
+        .unwrap()
     }
 
     fn corpus(dims: Vec<usize>, n: usize, seed: u64) -> Vec<AnyTensor> {
@@ -505,23 +512,12 @@ mod tests {
     fn sharded_matches_single_shard_euclidean_with_probes() {
         let dims = vec![6usize, 6, 6];
         let items = corpus(dims.clone(), 200, 33);
-        let cfg = IndexConfig {
-            family_builder: {
-                let dims = dims.clone();
-                Arc::new(move |t| {
-                    Arc::new(TtE2lsh::new(TtE2lshConfig {
-                        dims: dims.clone(),
-                        rank: 3,
-                        k: 6,
-                        w: 4.0,
-                        seed: 70 + t as u64,
-                    })) as Arc<dyn HashFamily>
-                })
-            },
-            n_tables: 6,
-            metric: Metric::Euclidean,
-            probes: 3,
-        };
+        let cfg = IndexConfig::from_spec(
+            &LshSpec::euclidean(FamilyKind::Tt, dims.clone(), 3, 6, 6, 4.0)
+                .with_probes(3)
+                .with_seed(70, 1),
+        )
+        .unwrap();
         let single = LshIndex::build(&cfg, items.clone()).unwrap();
         let sharded = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
         let mut rng = Rng::new(34);
@@ -549,6 +545,24 @@ mod tests {
         for _ in 0..10 {
             let q = &items[rng.below(items.len())];
             assert_eq!(seq.search(q, 8).unwrap(), par.search(q, 8).unwrap());
+        }
+    }
+
+    #[test]
+    fn from_spec_uses_the_specs_shard_count_and_matches_config_path() {
+        let dims = vec![8usize, 8, 8];
+        let items = corpus(dims.clone(), 120, 40);
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 8, 6).with_seed(3000, 1);
+        let via_cfg = ShardedLshIndex::build(
+            &IndexConfig::from_spec(&spec).unwrap(),
+            items.clone(),
+            spec.serving.shards,
+        )
+        .unwrap();
+        let via_spec = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+        assert_eq!(via_spec.n_shards(), spec.serving.shards);
+        for q in items.iter().take(8) {
+            assert_eq!(via_cfg.search(q, 5).unwrap(), via_spec.search(q, 5).unwrap());
         }
     }
 

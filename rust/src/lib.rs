@@ -25,7 +25,10 @@
 //!   [`projection::ProjectionMatrix`] arena); both CP and TT banks keep
 //!   stacked per-mode parameter layouts so one fattened pass per mode serves
 //!   the whole batch.
-//! * [`lsh`] — the six hash families behind common traits + parameter planning;
+//! * [`lsh`] — the six hash families behind common traits + parameter
+//!   planning, all constructed from the declarative [`lsh::spec::LshSpec`]
+//!   (JSON round-trippable; fluent [`lsh::spec::IndexBuilder`] /
+//!   [`lsh::spec::CoordinatorBuilder`] on top);
 //!   [`lsh::HashFamily::hash_codes_into`] hashes whole serving batches into
 //!   flat strided code buffers ([`lsh::HashFamily::hash_batch`] is the
 //!   nested-Vec compatibility wrapper).
@@ -44,30 +47,30 @@
 //!
 //! ## Quickstart
 //!
-//! Hash a low-rank CP tensor with CP-E2LSH (this example is a compiled,
-//! executed doctest — `cargo test` runs it):
+//! Everything builds from one declarative, JSON round-trippable
+//! [`lsh::spec::LshSpec`]. Hash a low-rank CP tensor with CP-E2LSH (this
+//! example is a compiled, executed doctest — `cargo test` runs it):
 //!
 //! ```
 //! use tensor_lsh::prelude::*;
 //!
 //! let mut rng = Rng::new(42);
 //! let x = CpTensor::random_gaussian(&mut rng, &[32, 32, 32], 8);
-//! let fam = CpE2lsh::new(CpE2lshConfig {
-//!     dims: vec![32, 32, 32], rank: 8, k: 16, w: 4.0, seed: 7,
-//! });
+//! let fam = FamilySpec::e2lsh(FamilyKind::Cp, vec![32, 32, 32], 8, 16, 4.0).build(7)?;
 //! let codes = fam.hash(&AnyTensor::Cp(x.clone()));
 //! assert_eq!(codes.len(), 16);
 //!
 //! // Batched hashing is bit-identical to per-item hashing.
 //! let batch = vec![AnyTensor::Cp(x.clone()), AnyTensor::Cp(x)];
 //! assert_eq!(fam.hash_batch(&batch), vec![codes.clone(), codes]);
+//! # Ok::<(), tensor_lsh::Error>(())
 //! ```
 //!
-//! Build a sharded index and search it (queries and inserts both take
-//! `&self`, so this scales across coordinator workers):
+//! Build a sharded index with the fluent [`lsh::spec::IndexBuilder`] and
+//! search it (queries and inserts both take `&self`, so this scales across
+//! coordinator workers):
 //!
 //! ```
-//! use std::sync::Arc;
 //! use tensor_lsh::prelude::*;
 //!
 //! let dims = vec![8usize, 8, 8];
@@ -75,22 +78,27 @@
 //! let items: Vec<AnyTensor> = (0..200)
 //!     .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
 //!     .collect();
-//! let cfg = IndexConfig {
-//!     family_builder: {
-//!         let dims = dims.clone();
-//!         Arc::new(move |t| {
-//!             Arc::new(CpSrp::new(CpSrpConfig {
-//!                 dims: dims.clone(), rank: 4, k: 10, seed: 100 + t as u64,
-//!             })) as Arc<dyn HashFamily>
-//!         })
-//!     },
-//!     n_tables: 8,
-//!     metric: Metric::Cosine,
-//!     probes: 0,
-//! };
-//! let index = ShardedLshIndex::build_parallel(&cfg, items.clone(), 4)?;
+//! // CP-SRP, rank 4, K=10 hashes per signature, L=8 tables.
+//! let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 8).with_seed(100, 1);
+//! let index = IndexBuilder::new(spec.clone()).shards(4).build_sharded_with(items.clone())?;
 //! let hits = index.search(&items[3], 5)?;
 //! assert_eq!(hits[0].id, 3); // an indexed item is its own nearest neighbor
+//!
+//! // The spec round-trips through JSON, so the exact serving config can be
+//! // stored, diffed, and rebuilt bit-identically.
+//! assert_eq!(LshSpec::from_json_str(&spec.to_json_string())?, spec);
+//! # Ok::<(), tensor_lsh::Error>(())
+//! ```
+//!
+//! Let the planner pick K and L from the paper's collision laws (gated by
+//! the theorems' validity conditions — see [`lsh::LshSpec::planned`]):
+//!
+//! ```
+//! use tensor_lsh::prelude::*;
+//!
+//! let spec = LshSpec::cosine(FamilyKind::Cp, vec![64, 64, 64, 64], 2, 1, 1)
+//!     .planned(10_000, 0.9, 0.3, 0.5)?; // n, near sim, far sim, delta
+//! assert!(spec.family.k > 1 && spec.l >= 1);
 //! # Ok::<(), tensor_lsh::Error>(())
 //! ```
 
@@ -120,9 +128,12 @@ pub mod prelude {
         CodeMatrix, HashScratch, IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex,
     };
     pub use crate::lsh::{
-        CpE2lsh, CpE2lshConfig, CpSrp, CpSrpConfig, E2lshFamily, HashFamily, NaiveE2lsh,
-        NaiveSrp, SrpFamily, TtE2lsh, TtE2lshConfig, TtSrp, TtSrpConfig,
+        CoordinatorBuilder, E2lshFamily, FamilyKind, FamilySpec, HashFamily, IndexBuilder,
+        LshSpec, SeedPolicy, ServingSpec, SrpFamily,
     };
+    pub use crate::lsh::{CpE2lsh, CpSrp, NaiveE2lsh, NaiveSrp, TtE2lsh, TtSrp};
+    #[allow(deprecated)]
+    pub use crate::lsh::{CpE2lshConfig, CpSrpConfig, TtE2lshConfig, TtSrpConfig};
     pub use crate::projection::{
         CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
     };

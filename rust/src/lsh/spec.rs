@@ -1,0 +1,1104 @@
+//! Declarative LSH configuration: one plain-data, JSON round-trippable spec
+//! drives planner → family → index → coordinator → CLI.
+//!
+//! The paper's four tensorized families (CP/TT × E2LSH/SRP) plus the naive
+//! baselines all share one parameter tuple — family kind, mode dims,
+//! projection rank, K hashes per signature, L tables, bucket width w,
+//! metric, multiprobe budget, and a seed policy. [`FamilySpec`] captures the
+//! per-table part, [`LshSpec`] the whole index (and the serving knobs the
+//! coordinator needs), and everything downstream builds *from* the spec:
+//!
+//! * [`LshSpec::family`] instantiates table `t`'s [`HashFamily`] — it
+//!   replaces the hand-rolled `family_builder` closures of
+//!   [`IndexConfig`] (which survive only as a deprecated escape hatch that
+//!   [`IndexConfig::from_spec`] builds from the spec).
+//! * [`LshIndex::from_spec`] / [`ShardedLshIndex::from_spec`] /
+//!   [`crate::coordinator::CoordinatorConfig::from_spec`] construct every
+//!   layer of the stack from the same value.
+//! * [`LshSpec::planned`] wires `lsh::planner`: K and L come from the
+//!   classical (R₁, R₂, P₁, P₂) theory, gated by [`validity_report`] so a
+//!   dims/rank combination outside the theorems' asymptotic regime is a
+//!   typed [`Error::InvalidSpec`] instead of a silent bad index.
+//! * [`LshSpec::to_json`] / [`LshSpec::from_json_str`] round-trip through
+//!   `util::json` (zero deps), so serving configs are reproducible and the
+//!   benches stamp the exact spec into their `BENCH_*.json` reports.
+//!
+//! The fluent layers on top: [`IndexBuilder`] for offline indexes,
+//! [`CoordinatorBuilder`] for the serving pipeline.
+//!
+//! ```
+//! use tensor_lsh::prelude::*;
+//!
+//! let spec = LshSpec::cosine(FamilyKind::Cp, vec![8, 8, 8], 4, 10, 8);
+//! let json = spec.to_json_string();
+//! assert_eq!(LshSpec::from_json_str(&json)?, spec);
+//! let index = IndexBuilder::new(spec).build()?; // empty LshIndex
+//! assert_eq!(index.n_tables(), 8);
+//! # Ok::<(), tensor_lsh::Error>(())
+//! ```
+
+use super::planner::{plan_parameters, validity_report, LshPlan};
+use super::{E2lshHasher, HashFamily, SrpHasher};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, HashBackend, MetricsSnapshot, Query, QueryResponse,
+};
+use crate::error::{Error, Result};
+use crate::index::{IndexConfig, LshIndex, Metric, ShardedLshIndex};
+use crate::projection::{CpRademacher, Distribution, GaussianDense, TtRademacher};
+use crate::stats;
+use crate::tensor::AnyTensor;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Which projection construction a family uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FamilyKind {
+    /// CP-format Rademacher projections (Definitions 10/12).
+    Cp,
+    /// TT-format Rademacher projections (Definitions 11/13).
+    Tt,
+    /// Dense Gaussian baseline (reshape + E2LSH [11] / SRP [6]).
+    Naive,
+}
+
+impl FamilyKind {
+    /// Parse a family name as it appears in configs and CLI overrides.
+    pub fn parse(s: &str) -> Result<FamilyKind> {
+        match s {
+            "cp" => Ok(FamilyKind::Cp),
+            "tt" => Ok(FamilyKind::Tt),
+            "naive" => Ok(FamilyKind::Naive),
+            other => Err(Error::InvalidSpec(format!(
+                "unknown family '{other}' (expected one of: cp, tt, naive)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FamilyKind::Cp => "cp",
+            FamilyKind::Tt => "tt",
+            FamilyKind::Naive => "naive",
+        }
+    }
+}
+
+/// Plain-data description of one bank of K hash functions: everything
+/// [`FamilySpec::build`] needs except the seed (which the enclosing
+/// [`LshSpec`]'s [`SeedPolicy`] supplies per table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FamilySpec {
+    pub kind: FamilyKind,
+    /// Tensor mode dimensions (d₁ … d_N).
+    pub dims: Vec<usize>,
+    /// Projection tensor rank R (ignored by [`FamilyKind::Naive`]).
+    pub rank: usize,
+    /// Hashes per table signature.
+    pub k: usize,
+    /// Discretizer selector: Euclidean ⇒ E2LSH floors, Cosine ⇒ SRP signs.
+    pub metric: Metric,
+    /// E2LSH bucket width (used only under the Euclidean metric).
+    pub w: f64,
+}
+
+impl FamilySpec {
+    /// SRP family over the cosine metric.
+    pub fn srp(kind: FamilyKind, dims: Vec<usize>, rank: usize, k: usize) -> FamilySpec {
+        FamilySpec { kind, dims, rank, k, metric: Metric::Cosine, w: 4.0 }
+    }
+
+    /// E2LSH family over the Euclidean metric with bucket width `w`.
+    pub fn e2lsh(kind: FamilyKind, dims: Vec<usize>, rank: usize, k: usize, w: f64) -> FamilySpec {
+        FamilySpec { kind, dims, rank, k, metric: Metric::Euclidean, w }
+    }
+
+    /// Numeric validation (typed errors instead of downstream panics).
+    pub fn validate(&self) -> Result<()> {
+        if self.dims.is_empty() {
+            return Err(Error::InvalidSpec("dims must not be empty".into()));
+        }
+        if let Some(&d) = self.dims.iter().find(|&&d| d == 0) {
+            return Err(Error::InvalidSpec(format!("mode dimension {d} must be ≥ 1")));
+        }
+        if self.rank == 0 {
+            return Err(Error::InvalidSpec("rank must be ≥ 1".into()));
+        }
+        if self.k == 0 {
+            return Err(Error::InvalidSpec("k must be ≥ 1".into()));
+        }
+        if self.metric == Metric::Euclidean && !(self.w > 0.0 && self.w.is_finite()) {
+            return Err(Error::InvalidSpec(format!("w must be > 0 (got {})", self.w)));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn cp_proj(&self, seed: u64, k: usize) -> CpRademacher {
+        CpRademacher::generate(seed, &self.dims, self.rank, k, Distribution::Rademacher)
+    }
+
+    pub(crate) fn tt_proj(&self, seed: u64, k: usize) -> TtRademacher {
+        TtRademacher::generate(seed, &self.dims, self.rank, k, Distribution::Rademacher)
+    }
+
+    /// Instantiate the family with every projection drawn from `seed`. This
+    /// is the single constructor path all six families share — the
+    /// deprecated per-family `*Config::new` shims and the
+    /// [`LshSpec::family`] tables both route through it.
+    pub fn build(&self, seed: u64) -> Result<Arc<dyn HashFamily>> {
+        self.validate()?;
+        Ok(match (self.kind, self.metric) {
+            (FamilyKind::Cp, Metric::Cosine) => {
+                Arc::new(SrpHasher::wrap(self.cp_proj(seed, self.k), "cp"))
+            }
+            (FamilyKind::Tt, Metric::Cosine) => {
+                Arc::new(SrpHasher::wrap(self.tt_proj(seed, self.k), "tt"))
+            }
+            (FamilyKind::Naive, Metric::Cosine) => Arc::new(SrpHasher::wrap(
+                GaussianDense::generate(seed, &self.dims, self.k),
+                "naive",
+            )),
+            (FamilyKind::Cp, Metric::Euclidean) => {
+                Arc::new(E2lshHasher::wrap(self.cp_proj(seed, self.k), self.w, seed, "cp"))
+            }
+            (FamilyKind::Tt, Metric::Euclidean) => {
+                Arc::new(E2lshHasher::wrap(self.tt_proj(seed, self.k), self.w, seed, "tt"))
+            }
+            (FamilyKind::Naive, Metric::Euclidean) => Arc::new(E2lshHasher::wrap(
+                GaussianDense::generate(seed, &self.dims, self.k),
+                self.w,
+                seed,
+                "naive",
+            )),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind.name().into()));
+        m.insert(
+            "dims".to_string(),
+            Json::Arr(self.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        m.insert("rank".to_string(), Json::Num(self.rank as f64));
+        m.insert("k".to_string(), Json::Num(self.k as f64));
+        m.insert("metric".to_string(), Json::Str(self.metric.name().into()));
+        m.insert("w".to_string(), Json::Num(self.w));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<FamilySpec> {
+        reject_unknown(v, &["kind", "dims", "rank", "k", "metric", "w"], "family")?;
+        let dims = v
+            .get("dims")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_usize)
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(FamilySpec {
+            kind: FamilyKind::parse(v.get("kind")?.as_str()?)?,
+            dims,
+            rank: v.get("rank")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            metric: Metric::parse(v.get("metric")?.as_str()?)?,
+            w: v.get("w")?.as_f64()?,
+        })
+    }
+}
+
+/// How per-table seeds derive from one master seed: table `t` hashes with
+/// `base + stride·t` (wrapping). Serializable, unlike a closure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeedPolicy {
+    pub base: u64,
+    pub stride: u64,
+}
+
+impl Default for SeedPolicy {
+    /// Stride 1000 — the spacing the bench harness has always used, so
+    /// spec-built indexes are bit-identical to the historical construction.
+    fn default() -> Self {
+        SeedPolicy { base: 42, stride: 1000 }
+    }
+}
+
+impl SeedPolicy {
+    pub fn new(base: u64, stride: u64) -> Self {
+        SeedPolicy { base, stride }
+    }
+
+    /// The seed table `t` draws its projections (and E2LSH offsets) from.
+    pub fn table_seed(&self, table: usize) -> u64 {
+        self.base.wrapping_add(self.stride.wrapping_mul(table as u64))
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("base".to_string(), Json::Num(self.base as f64));
+        m.insert("stride".to_string(), Json::Num(self.stride as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<SeedPolicy> {
+        reject_unknown(v, &["base", "stride"], "seeds")?;
+        Ok(SeedPolicy { base: as_u64(v.get("base")?)?, stride: as_u64(v.get("stride")?)? })
+    }
+}
+
+/// Serving-side knobs the coordinator and sharded index read off the spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServingSpec {
+    /// Index shards (re-rank fan-out width).
+    pub shards: usize,
+    /// Coordinator re-rank workers.
+    pub n_workers: usize,
+    /// Dynamic batcher: max queries per hash batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: batch deadline in microseconds.
+    pub max_wait_us: u64,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec { shards: 4, n_workers: 4, max_batch: 64, max_wait_us: 500 }
+    }
+}
+
+impl ServingSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::InvalidSpec("shards must be ≥ 1".into()));
+        }
+        if self.n_workers == 0 {
+            return Err(Error::InvalidSpec("n_workers must be ≥ 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::InvalidSpec("max_batch must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("shards".to_string(), Json::Num(self.shards as f64));
+        m.insert("n_workers".to_string(), Json::Num(self.n_workers as f64));
+        m.insert("max_batch".to_string(), Json::Num(self.max_batch as f64));
+        m.insert("max_wait_us".to_string(), Json::Num(self.max_wait_us as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<ServingSpec> {
+        reject_unknown(v, &["shards", "n_workers", "max_batch", "max_wait_us"], "serving")?;
+        Ok(ServingSpec {
+            shards: v.get("shards")?.as_usize()?,
+            n_workers: v.get("n_workers")?.as_usize()?,
+            max_batch: v.get("max_batch")?.as_usize()?,
+            max_wait_us: as_u64(v.get("max_wait_us")?)?,
+        })
+    }
+}
+
+/// The whole index, declaratively: per-table family template, table count,
+/// multiprobe budget, seed policy, banding flag, serving knobs. One value
+/// of this type drives every constructor in the crate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LshSpec {
+    pub family: FamilySpec,
+    /// Number of tables L.
+    pub l: usize,
+    /// Multiprobe extra probes per table (0 = exact bucket only).
+    pub probes: usize,
+    /// LSH banding: when true, one `K·L`-wide projection bank seeded at
+    /// `seeds.base` is generated and table `t` hashes with codes
+    /// `[t·K, (t+1)·K)` of it — the layout the PJRT artifacts emit, so the
+    /// native index buckets identically to artifact-hashed signatures.
+    /// `seeds.stride` is unused in this mode.
+    pub banded: bool,
+    pub seeds: SeedPolicy,
+    pub serving: ServingSpec,
+}
+
+impl LshSpec {
+    /// Spec with default probes (0), seeds, serving knobs.
+    pub fn new(family: FamilySpec, l: usize) -> LshSpec {
+        LshSpec {
+            family,
+            l,
+            probes: 0,
+            banded: false,
+            seeds: SeedPolicy::default(),
+            serving: ServingSpec::default(),
+        }
+    }
+
+    /// Cosine (SRP) index spec.
+    pub fn cosine(kind: FamilyKind, dims: Vec<usize>, rank: usize, k: usize, l: usize) -> LshSpec {
+        LshSpec::new(FamilySpec::srp(kind, dims, rank, k), l)
+    }
+
+    /// Euclidean (E2LSH) index spec with bucket width `w`.
+    pub fn euclidean(
+        kind: FamilyKind,
+        dims: Vec<usize>,
+        rank: usize,
+        k: usize,
+        l: usize,
+        w: f64,
+    ) -> LshSpec {
+        LshSpec::new(FamilySpec::e2lsh(kind, dims, rank, k, w), l)
+    }
+
+    // -- fluent setters ----------------------------------------------------
+
+    pub fn with_k(mut self, k: usize) -> LshSpec {
+        self.family.k = k;
+        self
+    }
+
+    pub fn with_tables(mut self, l: usize) -> LshSpec {
+        self.l = l;
+        self
+    }
+
+    pub fn with_probes(mut self, probes: usize) -> LshSpec {
+        self.probes = probes;
+        self
+    }
+
+    pub fn with_w(mut self, w: f64) -> LshSpec {
+        self.family.w = w;
+        self
+    }
+
+    pub fn with_seed(mut self, base: u64, stride: u64) -> LshSpec {
+        self.seeds = SeedPolicy::new(base, stride);
+        self
+    }
+
+    pub fn with_banded(mut self, banded: bool) -> LshSpec {
+        self.banded = banded;
+        self
+    }
+
+    pub fn with_serving(mut self, serving: ServingSpec) -> LshSpec {
+        self.serving = serving;
+        self
+    }
+
+    // -- validation --------------------------------------------------------
+
+    /// Validate every numeric field (typed [`Error::InvalidSpec`] instead
+    /// of downstream panics). `from_spec` constructors and JSON parsing all
+    /// call this.
+    pub fn validate(&self) -> Result<()> {
+        self.family.validate()?;
+        self.serving.validate()?;
+        if self.l == 0 {
+            return Err(Error::InvalidSpec("l (tables) must be ≥ 1".into()));
+        }
+        if !self.banded && self.l > 1 && self.seeds.stride == 0 {
+            return Err(Error::InvalidSpec(
+                "seed stride 0 with l > 1 would make every table identical".into(),
+            ));
+        }
+        if self.banded && self.family.kind == FamilyKind::Naive {
+            return Err(Error::InvalidSpec(
+                "banding needs a low-rank bank (cp or tt), not the naive family".into(),
+            ));
+        }
+        // JSON numbers are f64: integers ≥ 2^53 would round-trip lossily,
+        // breaking the to_json/from_json identity this type promises.
+        for (name, v) in [
+            ("seed base", self.seeds.base),
+            ("seed stride", self.seeds.stride),
+            ("max_wait_us", self.serving.max_wait_us),
+        ] {
+            if v >= MAX_JSON_INT {
+                return Err(Error::InvalidSpec(format!(
+                    "{name} {v} does not fit a JSON number exactly (must be < 2^53)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    // -- planner wiring ----------------------------------------------------
+
+    /// Classical (K, L) planning for this spec's family and metric over a
+    /// corpus of `n` items with failure budget `delta`.
+    ///
+    /// Threshold semantics follow the metric: under Euclidean, `r1` is the
+    /// near radius and the far radius is `c·r1` (approximation factor
+    /// `c > 1`); under cosine, `r1` is the near *similarity* and `c` the far
+    /// similarity (`-1 < c < r1 ≤ 1`).
+    pub fn plan(&self, n: usize, r1: f64, c: f64, delta: f64) -> Result<LshPlan> {
+        self.family.validate()?;
+        if n < 2 {
+            return Err(Error::InvalidSpec(format!("corpus size n={n} must be ≥ 2 to plan")));
+        }
+        if !(delta > 0.0 && delta < 1.0) {
+            return Err(Error::InvalidSpec(format!("delta={delta} must lie in (0, 1)")));
+        }
+        let (p1, p2) = match self.family.metric {
+            Metric::Euclidean => {
+                if !(r1 > 0.0 && r1.is_finite()) {
+                    return Err(Error::InvalidSpec(format!("near radius r1={r1} must be > 0")));
+                }
+                if !(c > 1.0 && c.is_finite()) {
+                    return Err(Error::InvalidSpec(format!(
+                        "approximation factor c={c} must be > 1"
+                    )));
+                }
+                (
+                    stats::e2lsh_collision_prob(r1, self.family.w),
+                    stats::e2lsh_collision_prob(c * r1, self.family.w),
+                )
+            }
+            Metric::Cosine => {
+                if !(-1.0 < c && c < r1 && r1 <= 1.0) {
+                    return Err(Error::InvalidSpec(format!(
+                        "cosine planning takes near similarity r1 and far similarity c \
+                         with -1 < c < r1 ≤ 1 (got r1={r1}, c={c})"
+                    )));
+                }
+                (stats::srp_collision_prob(r1), stats::srp_collision_prob(c))
+            }
+        };
+        if !(p1 > p2 && p2 > 0.0 && p1 < 1.0) {
+            return Err(Error::InvalidSpec(format!(
+                "collision probabilities p1={p1:.4}, p2={p2:.4} do not satisfy 1 > p1 > p2 > 0"
+            )));
+        }
+        Ok(plan_parameters(n, p1, p2, delta))
+    }
+
+    /// The planned version of this spec: K and L replaced by the planner's
+    /// choice, after [`validity_report`] confirms the dims/rank combination
+    /// sits inside the family's asymptotic validity regime (Theorems
+    /// 4/6/8/10). Rejections are typed [`Error::InvalidSpec`]s.
+    pub fn planned(mut self, n: usize, r1: f64, c: f64, delta: f64) -> Result<LshSpec> {
+        let rep = validity_report(&self.family.dims, self.family.rank);
+        match self.family.kind {
+            FamilyKind::Cp if !rep.cp_ok => {
+                return Err(Error::InvalidSpec(format!(
+                    "CP validity ratio {:.3} ≥ 1 at dims {:?}, rank {}: the CLT of \
+                     Theorems 4/8 is not trustworthy at this shape (grow D or shrink R)",
+                    rep.cp_ratio, self.family.dims, self.family.rank
+                )));
+            }
+            FamilyKind::Tt if !rep.tt_ok => {
+                return Err(Error::InvalidSpec(format!(
+                    "TT validity ratio {:.3} ≥ 1 at dims {:?}, rank {}: the CLT of \
+                     Theorems 6/10 is not trustworthy at this shape (grow D or shrink R)",
+                    rep.tt_ratio, self.family.dims, self.family.rank
+                )));
+            }
+            _ => {}
+        }
+        let plan = self.plan(n, r1, c, delta)?;
+        self.family.k = plan.k;
+        self.l = plan.l;
+        self.validate()?;
+        Ok(self)
+    }
+
+    // -- family / bank construction ----------------------------------------
+
+    /// Build table `t`'s hash family. Replaces the hand-rolled
+    /// `family_builder` closures: per-table seeds come from the
+    /// [`SeedPolicy`] (or, when [`LshSpec::banded`], table `t` carries band
+    /// `t` of the one full-width bank).
+    ///
+    /// Panics on an invalid spec — the `from_spec` constructors validate
+    /// first; call [`LshSpec::try_family`] to keep the typed error.
+    pub fn family(&self, table: usize) -> Arc<dyn HashFamily> {
+        self.try_family(table)
+            .expect("invalid LshSpec — validate() before family()")
+    }
+
+    /// [`LshSpec::family`], returning validation failures as typed errors.
+    pub fn try_family(&self, table: usize) -> Result<Arc<dyn HashFamily>> {
+        self.validate()?;
+        if table >= self.l {
+            return Err(Error::InvalidSpec(format!(
+                "table {table} out of range (l = {})",
+                self.l
+            )));
+        }
+        if self.banded {
+            self.banded_family(table)
+        } else {
+            self.family.build(self.seeds.table_seed(table))
+        }
+    }
+
+    /// All L table families at once. For banded specs this generates the
+    /// full bank **once** and slices every band off it (unlike L separate
+    /// [`LshSpec::try_family`] calls, which regenerate the bank per table) —
+    /// the `from_spec` index constructors route through here.
+    pub fn families(&self) -> Result<Vec<Arc<dyn HashFamily>>> {
+        self.validate()?;
+        if !self.banded {
+            return (0..self.l).map(|t| self.try_family(t)).collect();
+        }
+        let (k, w, base) = (self.family.k, self.family.w, self.seeds.base);
+        Ok(match (self.family.kind, self.family.metric) {
+            (FamilyKind::Cp, Metric::Cosine) => {
+                let bank = self.cp_bank()?;
+                (0..self.l)
+                    .map(|t| {
+                        Arc::new(SrpHasher::wrap(bank.band(t, k), "cp")) as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Tt, Metric::Cosine) => {
+                let bank = self.tt_bank()?;
+                (0..self.l)
+                    .map(|t| {
+                        Arc::new(SrpHasher::wrap(bank.band(t, k), "tt")) as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Cp, Metric::Euclidean) => {
+                let full = E2lshHasher::wrap(self.cp_bank()?, w, base, "cp");
+                (0..self.l)
+                    .map(|t| {
+                        let b = full.b[t * k..(t + 1) * k].to_vec();
+                        Arc::new(E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "cp"))
+                            as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Tt, Metric::Euclidean) => {
+                let full = E2lshHasher::wrap(self.tt_bank()?, w, base, "tt");
+                (0..self.l)
+                    .map(|t| {
+                        let b = full.b[t * k..(t + 1) * k].to_vec();
+                        Arc::new(E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "tt"))
+                            as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Naive, _) => unreachable!("validate() rejects banded naive"),
+        })
+    }
+
+    /// The full `K·L`-wide CP projection bank a banded spec slices — the
+    /// same bank the PJRT serving path hands to the artifact executor.
+    pub fn cp_bank(&self) -> Result<CpRademacher> {
+        if self.family.kind != FamilyKind::Cp {
+            return Err(Error::InvalidSpec(format!(
+                "cp_bank on a {} spec",
+                self.family.kind.name()
+            )));
+        }
+        self.family.validate()?;
+        Ok(self.family.cp_proj(self.seeds.base, self.family.k * self.l))
+    }
+
+    /// TT analogue of [`LshSpec::cp_bank`].
+    pub fn tt_bank(&self) -> Result<TtRademacher> {
+        if self.family.kind != FamilyKind::Tt {
+            return Err(Error::InvalidSpec(format!(
+                "tt_bank on a {} spec",
+                self.family.kind.name()
+            )));
+        }
+        self.family.validate()?;
+        Ok(self.family.tt_proj(self.seeds.base, self.family.k * self.l))
+    }
+
+    /// Band `t` of the full bank, wrapped in the metric's discretizer. The
+    /// E2LSH offsets are the matching slice of the full-width hasher's, so
+    /// banded tables discretize exactly like code slices of the full bank.
+    fn banded_family(&self, table: usize) -> Result<Arc<dyn HashFamily>> {
+        let k = self.family.k;
+        let w = self.family.w;
+        Ok(match (self.family.kind, self.family.metric) {
+            (FamilyKind::Cp, Metric::Cosine) => {
+                Arc::new(SrpHasher::wrap(self.cp_bank()?.band(table, k), "cp"))
+            }
+            (FamilyKind::Tt, Metric::Cosine) => {
+                Arc::new(SrpHasher::wrap(self.tt_bank()?.band(table, k), "tt"))
+            }
+            (FamilyKind::Cp, Metric::Euclidean) => {
+                let bank = self.cp_bank()?;
+                let band = bank.band(table, k);
+                let full = E2lshHasher::wrap(bank, w, self.seeds.base, "cp");
+                let b = full.b[table * k..(table + 1) * k].to_vec();
+                Arc::new(E2lshHasher::with_offsets(band, b, w, "cp"))
+            }
+            (FamilyKind::Tt, Metric::Euclidean) => {
+                let bank = self.tt_bank()?;
+                let band = bank.band(table, k);
+                let full = E2lshHasher::wrap(bank, w, self.seeds.base, "tt");
+                let b = full.b[table * k..(table + 1) * k].to_vec();
+                Arc::new(E2lshHasher::with_offsets(band, b, w, "tt"))
+            }
+            (FamilyKind::Naive, _) => unreachable!("validate() rejects banded naive"),
+        })
+    }
+
+    /// The deprecated closure-based [`IndexConfig`], built *from* this spec
+    /// (escape hatch for code still on the legacy constructor surface).
+    pub fn index_config(&self) -> Result<IndexConfig> {
+        IndexConfig::from_spec(self)
+    }
+
+    // -- JSON --------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("family".to_string(), self.family.to_json());
+        m.insert("l".to_string(), Json::Num(self.l as f64));
+        m.insert("probes".to_string(), Json::Num(self.probes as f64));
+        m.insert("banded".to_string(), Json::Bool(self.banded));
+        m.insert("seeds".to_string(), self.seeds.to_json());
+        m.insert("serving".to_string(), self.serving.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse and validate a spec. `banded`, `seeds`, and `serving` may be
+    /// omitted in hand-written files (defaults apply), but unknown keys are
+    /// rejected — a typo must not silently become a default.
+    /// [`LshSpec::to_json`] always writes every section, so print → parse
+    /// is the identity.
+    pub fn from_json(v: &Json) -> Result<LshSpec> {
+        reject_unknown(v, &["family", "l", "probes", "banded", "seeds", "serving"], "spec")?;
+        let obj = v.as_obj()?;
+        let spec = LshSpec {
+            family: FamilySpec::from_json(v.get("family")?)?,
+            l: v.get("l")?.as_usize()?,
+            probes: match obj.get("probes") {
+                Some(p) => p.as_usize()?,
+                None => 0,
+            },
+            banded: match obj.get("banded") {
+                Some(Json::Bool(b)) => *b,
+                Some(other) => {
+                    return Err(Error::Json(format!("expected bool for 'banded', got {other:?}")))
+                }
+                None => false,
+            },
+            seeds: match obj.get("seeds") {
+                Some(s) => SeedPolicy::from_json(s)?,
+                None => SeedPolicy::default(),
+            },
+            serving: match obj.get("serving") {
+                Some(s) => ServingSpec::from_json(s)?,
+                None => ServingSpec::default(),
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<LshSpec> {
+        LshSpec::from_json(&parse(text)?)
+    }
+}
+
+/// Largest integer a JSON (f64) number represents exactly: 2^53.
+const MAX_JSON_INT: u64 = 1 << 53;
+
+/// Reject unknown keys in a spec JSON object — a misspelled key must fail
+/// parsing, not silently fall back to a default.
+fn reject_unknown(v: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    for key in v.as_obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(Error::InvalidSpec(format!(
+                "unknown {what} key '{key}' (expected one of: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a non-negative integer that must fit u64 exactly.
+fn as_u64(v: &Json) -> Result<u64> {
+    let f = v.as_f64()?;
+    if f < 0.0 || f.fract() != 0.0 || f >= MAX_JSON_INT as f64 {
+        return Err(Error::Json(format!("expected non-negative integer (< 2^53), got {f}")));
+    }
+    Ok(f as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Fluent builders
+// ---------------------------------------------------------------------------
+
+/// Fluent construction of [`LshIndex`] / [`ShardedLshIndex`] from an
+/// [`LshSpec`].
+///
+/// ```
+/// use tensor_lsh::prelude::*;
+///
+/// let index = IndexBuilder::new(LshSpec::cosine(FamilyKind::Tt, vec![6, 6, 6], 3, 8, 4))
+///     .probes(2)
+///     .seed(9, 1)
+///     .build()?;
+/// assert_eq!(index.n_tables(), 4);
+/// # Ok::<(), tensor_lsh::Error>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct IndexBuilder {
+    spec: LshSpec,
+}
+
+impl IndexBuilder {
+    pub fn new(spec: LshSpec) -> IndexBuilder {
+        IndexBuilder { spec }
+    }
+
+    /// Number of tables L.
+    pub fn tables(mut self, l: usize) -> IndexBuilder {
+        self.spec.l = l;
+        self
+    }
+
+    /// Multiprobe extras per table.
+    pub fn probes(mut self, probes: usize) -> IndexBuilder {
+        self.spec.probes = probes;
+        self
+    }
+
+    /// Seed policy: table `t` seeds at `base + stride·t`.
+    pub fn seed(mut self, base: u64, stride: u64) -> IndexBuilder {
+        self.spec.seeds = SeedPolicy::new(base, stride);
+        self
+    }
+
+    /// Shard count for the sharded builds.
+    pub fn shards(mut self, shards: usize) -> IndexBuilder {
+        self.spec.serving.shards = shards;
+        self
+    }
+
+    /// Replace K and L with the planner's choice (see [`LshSpec::planned`]).
+    pub fn planned(mut self, n: usize, r1: f64, c: f64, delta: f64) -> Result<IndexBuilder> {
+        self.spec = self.spec.planned(n, r1, c, delta)?;
+        Ok(self)
+    }
+
+    pub fn spec(&self) -> &LshSpec {
+        &self.spec
+    }
+
+    pub fn into_spec(self) -> LshSpec {
+        self.spec
+    }
+
+    /// Empty single-shard index.
+    pub fn build(self) -> Result<LshIndex> {
+        LshIndex::from_spec(&self.spec)
+    }
+
+    /// Bulk-built single-shard index (batched hashing).
+    pub fn build_with(self, items: Vec<AnyTensor>) -> Result<LshIndex> {
+        LshIndex::build_from_spec(&self.spec, items)
+    }
+
+    /// Empty sharded serving index (`spec.serving.shards` shards).
+    pub fn build_sharded(self) -> Result<ShardedLshIndex> {
+        ShardedLshIndex::from_spec(&self.spec)
+    }
+
+    /// Bulk-built sharded index (one build thread per shard).
+    pub fn build_sharded_with(self, items: Vec<AnyTensor>) -> Result<ShardedLshIndex> {
+        ShardedLshIndex::build_from_spec(&self.spec, items)
+    }
+}
+
+/// Fluent construction of the serving pipeline from an [`LshSpec`]: the
+/// same spec that hashed the corpus configures the coordinator.
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use tensor_lsh::prelude::*;
+///
+/// # fn items() -> Vec<AnyTensor> { Vec::new() }
+/// let spec = LshSpec::cosine(FamilyKind::Cp, vec![8, 8, 8], 4, 10, 6);
+/// let serving = CoordinatorBuilder::new(spec).workers(4).max_batch(32);
+/// let index = serving.build_index(items())?;
+/// let _coordinator = serving.start(Arc::clone(&index));
+/// # Ok::<(), tensor_lsh::Error>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct CoordinatorBuilder {
+    spec: LshSpec,
+}
+
+impl CoordinatorBuilder {
+    pub fn new(spec: LshSpec) -> CoordinatorBuilder {
+        CoordinatorBuilder { spec }
+    }
+
+    pub fn workers(mut self, n: usize) -> CoordinatorBuilder {
+        self.spec.serving.n_workers = n;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> CoordinatorBuilder {
+        self.spec.serving.shards = shards;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> CoordinatorBuilder {
+        self.spec.serving.max_batch = max_batch;
+        self
+    }
+
+    pub fn max_wait_us(mut self, us: u64) -> CoordinatorBuilder {
+        self.spec.serving.max_wait_us = us;
+        self
+    }
+
+    pub fn spec(&self) -> &LshSpec {
+        &self.spec
+    }
+
+    /// The coordinator policy view of the spec.
+    pub fn config(&self) -> CoordinatorConfig {
+        CoordinatorConfig::from_spec(&self.spec)
+    }
+
+    /// Hash + insert a corpus into a fresh sharded index per the spec.
+    pub fn build_index(&self, items: Vec<AnyTensor>) -> Result<Arc<ShardedLshIndex>> {
+        Ok(Arc::new(ShardedLshIndex::build_from_spec(&self.spec, items)?))
+    }
+
+    /// Spin up the pipeline over a built index (native hash backend).
+    pub fn start(&self, index: Arc<ShardedLshIndex>) -> Coordinator {
+        Coordinator::start(index, self.config(), HashBackend::Native)
+    }
+
+    /// Push a whole query trace through a fresh coordinator and collect the
+    /// responses plus final metrics (native hash backend).
+    pub fn serve_trace(
+        &self,
+        index: Arc<ShardedLshIndex>,
+        queries: Vec<Query>,
+    ) -> Result<(Vec<QueryResponse>, MetricsSnapshot)> {
+        Coordinator::serve_trace(index, self.config(), HashBackend::Native, queries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::CodeMatrix;
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+
+    fn batch(dims: &[usize], n: usize, seed: u64) -> Vec<AnyTensor> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, dims, 2)))
+            .collect()
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let spec = LshSpec::euclidean(FamilyKind::Tt, vec![6, 7, 8], 3, 9, 5, 2.5)
+            .with_probes(4)
+            .with_seed(123456789, 17)
+            .with_serving(ServingSpec {
+                shards: 3,
+                n_workers: 2,
+                max_batch: 16,
+                max_wait_us: 250,
+            });
+        let text = spec.to_json_string();
+        let back = LshSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+        // And a second trip is stable.
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn json_defaults_apply_to_minimal_documents() {
+        let spec = LshSpec::from_json_str(
+            r#"{
+                "family": {"kind": "cp", "dims": [8, 8], "rank": 4, "k": 6,
+                           "metric": "cosine", "w": 4.0},
+                "l": 3
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.probes, 0);
+        assert!(!spec.banded);
+        assert_eq!(spec.seeds, SeedPolicy::default());
+        assert_eq!(spec.serving, ServingSpec::default());
+    }
+
+    #[test]
+    fn invalid_numerics_are_typed_errors() {
+        let base = LshSpec::cosine(FamilyKind::Cp, vec![8, 8], 4, 6, 3);
+        for bad in [
+            base.clone().with_k(0),
+            base.clone().with_tables(0),
+            LshSpec::cosine(FamilyKind::Cp, vec![], 4, 6, 3),
+            LshSpec::cosine(FamilyKind::Cp, vec![8, 0], 4, 6, 3),
+            LshSpec::cosine(FamilyKind::Cp, vec![8, 8], 0, 6, 3),
+            LshSpec::euclidean(FamilyKind::Cp, vec![8, 8], 4, 6, 3, 0.0),
+            LshSpec::euclidean(FamilyKind::Cp, vec![8, 8], 4, 6, 3, -1.0),
+            base.clone().with_seed(1, 0),
+            // Seeds ≥ 2^53 would round-trip lossily through JSON numbers.
+            base.clone().with_seed(u64::MAX, 1),
+            base.clone().with_seed(1, 1 << 53),
+            LshSpec::cosine(FamilyKind::Naive, vec![8, 8], 1, 6, 3).with_banded(true),
+        ] {
+            match bad.validate() {
+                Err(Error::InvalidSpec(_)) => {}
+                other => panic!("expected InvalidSpec, got {other:?}"),
+            }
+        }
+        // JSON parsing validates too.
+        let err = LshSpec::from_json_str(
+            r#"{"family": {"kind": "cp", "dims": [8], "rank": 4, "k": 0,
+                           "metric": "cosine", "w": 4.0}, "l": 3}"#,
+        );
+        assert!(matches!(err, Err(Error::InvalidSpec(_))));
+        // Misspelled keys fail parsing instead of silently defaulting.
+        let typo = LshSpec::from_json_str(
+            r#"{"family": {"kind": "cp", "dims": [8], "rank": 4, "k": 6,
+                           "metric": "cosine", "w": 4.0}, "l": 3, "probess": 4}"#,
+        );
+        assert!(matches!(typo, Err(Error::InvalidSpec(_))));
+        assert!(matches!(FamilyKind::parse("foo"), Err(Error::InvalidSpec(_))));
+        let msg = match FamilyKind::parse("foo") {
+            Err(Error::InvalidSpec(m)) => m,
+            other => panic!("{other:?}"),
+        };
+        assert!(msg.contains("cp") && msg.contains("tt") && msg.contains("naive"), "{msg}");
+    }
+
+    #[test]
+    fn spec_families_match_direct_construction() {
+        // The spec path must be bit-identical to hand-built hashers at the
+        // same seeds — this is what makes the builder migration safe.
+        let dims = vec![6usize, 6, 6];
+        let spec = LshSpec::euclidean(FamilyKind::Cp, dims.clone(), 3, 8, 4, 4.0)
+            .with_seed(70, 1000);
+        let xs = batch(&dims, 5, 1);
+        for t in 0..spec.l {
+            let seed = 70 + 1000 * t as u64;
+            let direct = E2lshHasher::wrap(
+                CpRademacher::generate(seed, &dims, 3, 8, Distribution::Rademacher),
+                4.0,
+                seed,
+                "cp",
+            );
+            let fam = spec.family(t);
+            assert_eq!(fam.name(), "cp-e2lsh");
+            for x in &xs {
+                assert_eq!(fam.hash(x), direct.hash(x), "table {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_families_slice_the_full_bank() {
+        // A banded spec's table t must hash exactly like codes
+        // [t·K, (t+1)·K) of the one full-width hasher — for SRP and E2LSH.
+        let dims = vec![6usize, 6, 6];
+        let xs = batch(&dims, 4, 2);
+        for metric in [Metric::Cosine, Metric::Euclidean] {
+            let spec = LshSpec {
+                family: FamilySpec {
+                    kind: FamilyKind::Cp,
+                    dims: dims.clone(),
+                    rank: 3,
+                    k: 4,
+                    metric,
+                    w: 4.0,
+                },
+                l: 3,
+                probes: 0,
+                banded: true,
+                seeds: SeedPolicy::new(99, 0),
+                serving: ServingSpec::default(),
+            };
+            let bank = spec.cp_bank().unwrap();
+            assert_eq!(crate::projection::Projection::k(&bank), 12);
+            let full: Arc<dyn HashFamily> = match metric {
+                Metric::Cosine => Arc::new(SrpHasher::wrap(bank, "cp")),
+                Metric::Euclidean => Arc::new(E2lshHasher::wrap(bank, 4.0, 99, "cp")),
+            };
+            // Per-table construction and the one-bank families() path must
+            // both equal slices of the full hasher's codes.
+            let fams = spec.families().unwrap();
+            for x in &xs {
+                let full_codes = full.hash(x);
+                for t in 0..3 {
+                    let band_codes = full_codes[t * 4..(t + 1) * 4].to_vec();
+                    assert_eq!(
+                        spec.family(t).hash(x),
+                        band_codes,
+                        "metric {metric:?} band {t}"
+                    );
+                    assert_eq!(fams[t].hash(x), band_codes, "families() band {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_sets_k_l_from_theory_and_gates_validity() {
+        // Valid regime: big D, small R.
+        let spec = LshSpec::cosine(FamilyKind::Cp, vec![64, 64, 64, 64], 2, 1, 1)
+            .planned(10_000, 0.9, 0.3, 0.5)
+            .unwrap();
+        assert!(spec.family.k > 1 && spec.l >= 1);
+        let plan = spec.plan(10_000, 0.9, 0.3, 0.5).unwrap();
+        assert_eq!((plan.k, plan.l), (spec.family.k, spec.l));
+        assert!(plan.recall_bound >= 0.5 - 1e-9);
+
+        // Outside the regime: typed rejection, not a bad index.
+        let bad = LshSpec::cosine(FamilyKind::Cp, vec![4, 4, 4], 4096, 8, 4)
+            .planned(10_000, 0.9, 0.3, 0.5);
+        assert!(matches!(bad, Err(Error::InvalidSpec(_))));
+
+        // Degenerate thresholds are typed errors, not planner panics.
+        let degenerate = LshSpec::cosine(FamilyKind::Cp, vec![64, 64, 64, 64], 2, 1, 1)
+            .plan(10_000, 0.3, 0.9, 0.5);
+        assert!(matches!(degenerate, Err(Error::InvalidSpec(_))));
+        let bad_c = LshSpec::euclidean(FamilyKind::Cp, vec![64, 64, 64, 64], 2, 1, 1, 4.0)
+            .plan(10_000, 1.0, 0.5, 0.5);
+        assert!(matches!(bad_c, Err(Error::InvalidSpec(_))));
+    }
+
+    #[test]
+    fn index_builder_builds_both_structures_identically() {
+        let dims = vec![8usize, 8, 8];
+        let items = batch(&dims, 60, 3);
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 6).with_seed(1000, 1);
+        let single = IndexBuilder::new(spec.clone()).build_with(items.clone()).unwrap();
+        let sharded = IndexBuilder::new(spec.clone())
+            .shards(3)
+            .build_sharded_with(items.clone())
+            .unwrap();
+        assert_eq!(single.len(), sharded.len());
+        for q in items.iter().take(8) {
+            assert_eq!(single.search(q, 5).unwrap(), sharded.search(q, 5).unwrap());
+        }
+        // Codes off the spec's family list equal the index's own families.
+        let cm_spec = CodeMatrix::build(&spec.families().unwrap(), &items[..8]);
+        let cm_index = CodeMatrix::build(single.families(), &items[..8]);
+        for b in 0..8 {
+            assert_eq!(cm_spec.sigs_row(b), cm_index.sigs_row(b));
+        }
+    }
+
+    #[test]
+    fn try_family_rejects_out_of_range_table() {
+        let spec = LshSpec::cosine(FamilyKind::Cp, vec![8, 8], 2, 4, 2);
+        assert!(spec.try_family(1).is_ok());
+        assert!(matches!(spec.try_family(2), Err(Error::InvalidSpec(_))));
+    }
+}

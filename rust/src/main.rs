@@ -1,11 +1,19 @@
 //! `tensorlsh` — CLI for the tensorized-LSH serving stack.
 //!
+//! Every command is driven by one declarative [`LshSpec`] (parsed from the
+//! config file / `key=value` overrides into [`AppConfig`]): the same spec
+//! that `info` prints is what `search` indexes with, `serve` serves with,
+//! and `plan` rewrites K/L on from the collision-probability theory.
+//!
 //! ```text
 //! tensorlsh <command> [--config file.json] [key=value ...]
 //!
 //! commands:
-//!   info     show effective config, validity report, artifact manifest
-//!   plan     (K, L) parameter planning from collision probabilities
+//!   info     show effective config + canonical spec JSON, validity report,
+//!            artifact manifest
+//!   plan     (K, L) parameter planning from collision probabilities;
+//!            prints the planned spec JSON on stdout (summary on stderr),
+//!            so `plan > spec.json` feeds straight back into `--config`
 //!   hash     hash one random tensor with the configured family
 //!   search   build a synthetic corpus + index, report recall
 //!   serve    run the coordinator over a synthetic query trace
@@ -18,8 +26,7 @@ use tensor_lsh::config::AppConfig;
 use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, Query};
 use tensor_lsh::error::{Error, Result};
 use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
-use tensor_lsh::lsh::{plan_cosine, plan_euclidean, validity_report, HashFamily};
-use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::lsh::{validity_report, HashFamily, LshSpec};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, Manifest};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
@@ -45,15 +52,17 @@ fn print_usage() {
         "tensorlsh — tensorized random-projection LSH (CP/TT-E2LSH, CP/TT-SRP)\n\n\
          usage: tensorlsh <command> [--config file.json] [key=value ...]\n\n\
          commands:\n\
-         \x20 info     show effective config, validity report, artifact manifest\n\
-         \x20 plan     (K, L) planning from collision probabilities\n\
+         \x20 info     show effective config + spec JSON, validity report, artifacts\n\
+         \x20 plan     (K, L) planning from collision probabilities; prints the\n\
+         \x20          planned spec JSON on stdout (plan > spec.json, then\n\
+         \x20          feed it back with --config spec.json)\n\
          \x20 hash     hash one random tensor with the configured family\n\
          \x20 search   build a synthetic corpus + index, report recall\n\
          \x20 serve    run the coordinator over a synthetic query trace\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
-         config keys: dims rank_proj rank_in k l w family metric probes\n\
+         config keys: dims rank_proj rank_in k l w family metric probes banded\n\
          \x20            n_items top_k n_workers shards max_batch max_wait_us\n\
-         \x20            seed artifact_dir"
+         \x20            seed seed_stride artifact_dir"
     );
 }
 
@@ -76,6 +85,7 @@ fn parse_config(rest: &[String]) -> Result<(AppConfig, Vec<String>)> {
         }
         i += 1;
     }
+    cfg.spec.validate()?;
     Ok((cfg, positional))
 }
 
@@ -97,7 +107,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
     println!("# effective config\n{}", cfg.to_json());
-    let rep = validity_report(&cfg.dims, cfg.rank_proj);
+    println!(
+        "\n# canonical spec (this document feeds straight back into --config)\n{}",
+        cfg.spec.to_json_string()
+    );
+    let rep = validity_report(&cfg.spec.family.dims, cfg.spec.family.rank);
     println!(
         "\n# validity (Theorems 4/6/8/10 finite-shape proxy)\n\
          cp condition ratio: {:.3} ({})\ntt condition ratio: {:.3} ({})",
@@ -117,25 +131,35 @@ fn cmd_info(cfg: &AppConfig) -> Result<()> {
 }
 
 fn cmd_plan(cfg: &AppConfig) -> Result<()> {
-    let plan = match cfg.metric {
-        Metric::Euclidean => plan_euclidean(cfg.n_items, 1.0, 2.0, cfg.w, 0.05),
-        Metric::Cosine => plan_cosine(cfg.n_items, 0.9, 0.5, 0.05),
+    // Metric-appropriate default thresholds: Euclidean plans at near radius
+    // 1 with approximation factor 2; cosine at near/far similarity 0.9/0.5.
+    let (r1, c) = match cfg.spec.family.metric {
+        Metric::Euclidean => (1.0, 2.0),
+        Metric::Cosine => (0.9, 0.5),
     };
-    println!(
+    // The planned spec gates on the validity report (typed InvalidSpec when
+    // the dims/rank combination is outside the theorems' regime) — run the
+    // gate first so no success-looking summary precedes a failure.
+    let planned = cfg.spec.clone().planned(cfg.n_items, r1, c, 0.05)?;
+    let plan = planned.plan(cfg.n_items, r1, c, 0.05)?;
+    // Summary goes to stderr so stdout is the pure planned-spec JSON:
+    // `tensorlsh plan > spec.json && tensorlsh serve --config spec.json`.
+    eprintln!(
         "n={} → ρ={:.3}, K={}, L={}, p1={:.3}, p2={:.3}, recall bound={:.3}",
         cfg.n_items, plan.rho, plan.k, plan.l, plan.p1, plan.p2, plan.recall_bound
     );
+    println!("{}", planned.to_json_string());
     Ok(())
 }
 
-fn family_for(cfg: &AppConfig, seed: u64) -> Arc<dyn HashFamily> {
-    bh::index_config_family(cfg.family, cfg.metric, &cfg.dims, cfg.rank_proj, cfg.k, cfg.w, seed)
-}
-
 fn cmd_hash(cfg: &AppConfig) -> Result<()> {
-    let fam = family_for(cfg, cfg.seed);
-    let mut rng = Rng::new(cfg.seed);
-    let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &cfg.dims, cfg.rank_in));
+    let fam: Arc<dyn HashFamily> = cfg.spec.try_family(0)?;
+    let mut rng = Rng::new(cfg.spec.seeds.base);
+    let x = AnyTensor::Cp(CpTensor::random_gaussian(
+        &mut rng,
+        &cfg.spec.family.dims,
+        cfg.rank_in,
+    ));
     let t0 = std::time::Instant::now();
     let codes = fam.hash(&x);
     let dt = t0.elapsed();
@@ -146,33 +170,21 @@ fn cmd_hash(cfg: &AppConfig) -> Result<()> {
     Ok(())
 }
 
-fn build_corpus_index(cfg: &AppConfig) -> Result<(Arc<LshIndex>, Vec<AnyTensor>)> {
+fn corpus(cfg: &AppConfig) -> Vec<AnyTensor> {
     let spec = DatasetSpec {
-        dims: cfg.dims.clone(),
+        dims: cfg.spec.family.dims.clone(),
         n_items: cfg.n_items,
         rank: cfg.rank_in,
         n_clusters: (cfg.n_items / 50).max(2),
         noise: 0.35,
-        seed: cfg.seed,
+        seed: cfg.spec.seeds.base,
     };
-    let (items, _) = low_rank_corpus(&spec);
-    let icfg = bh::index_config(
-        cfg.family,
-        cfg.metric,
-        cfg.dims.clone(),
-        cfg.rank_proj,
-        cfg.k,
-        cfg.l,
-        cfg.w,
-        cfg.seed,
-    );
-    let index = Arc::new(LshIndex::build(&icfg, items.clone())?);
-    Ok((index, items))
+    low_rank_corpus(&spec).0
 }
 
 fn cmd_search(cfg: &AppConfig) -> Result<()> {
-    let (index, _items) = build_corpus_index(cfg)?;
-    let mut rng = Rng::derive(cfg.seed, &[0x5EA]);
+    let index = Arc::new(LshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x5EA]);
     let n_q = 30.min(cfg.n_items);
     let mut recall_sum = 0.0;
     for _ in 0..n_q {
@@ -186,9 +198,9 @@ fn cmd_search(cfg: &AppConfig) -> Result<()> {
         "index: n={} L={} K={} family={} metric={:?}",
         index.len(),
         index.n_tables(),
-        cfg.k,
-        cfg.family.name(),
-        cfg.metric
+        cfg.spec.family.k,
+        cfg.spec.family.kind.name(),
+        cfg.spec.family.metric
     );
     for (t, (mean, max)) in index.occupancy().iter().enumerate() {
         if t < 3 {
@@ -199,91 +211,61 @@ fn cmd_search(cfg: &AppConfig) -> Result<()> {
     Ok(())
 }
 
-/// Synthetic corpus → sharded serving index (parallel build, one thread per
-/// shard).
-fn build_corpus_sharded(cfg: &AppConfig) -> Result<Arc<ShardedLshIndex>> {
-    let spec = DatasetSpec {
-        dims: cfg.dims.clone(),
-        n_items: cfg.n_items,
-        rank: cfg.rank_in,
-        n_clusters: (cfg.n_items / 50).max(2),
-        noise: 0.35,
-        seed: cfg.seed,
-    };
-    let (items, _) = low_rank_corpus(&spec);
-    let icfg = bh::index_config(
-        cfg.family,
-        cfg.metric,
-        cfg.dims.clone(),
-        cfg.rank_proj,
-        cfg.k,
-        cfg.l,
-        cfg.w,
-        cfg.seed,
-    );
-    Ok(Arc::new(ShardedLshIndex::build_parallel(&icfg, items, cfg.shards)?))
-}
-
 fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
     let (index, backend) = if pjrt {
         // PJRT serving uses the manifest shapes and LSH banding: the K-wide
-        // artifact output is split into `cfg.l` sub-signatures per query.
+        // artifact output is split into `l` sub-signatures per query. A
+        // banded LshSpec expresses exactly that layout, so the native index
+        // and the artifact path bucket identically.
         let dir = find_artifact_dir(cfg.artifact_dir.as_deref())
             .ok_or_else(|| Error::Runtime("artifacts not found (run `make artifacts`)".into()))?;
         let manifest = Manifest::load(&dir)?;
         let mcfg = manifest.config.clone();
-        if mcfg.k % cfg.l != 0 {
+        if mcfg.k % cfg.spec.l != 0 {
             return Err(Error::Config(format!(
                 "l={} must divide the artifact K={} for banding",
-                cfg.l, mcfg.k
+                cfg.spec.l, mcfg.k
             )));
         }
-        let dims = mcfg.dims();
-        let band_k = mcfg.k / cfg.l;
-        let bank = CpRademacher::generate(
-            cfg.seed,
-            &dims,
+        let band_k = mcfg.k / cfg.spec.l;
+        let mut spec = LshSpec::cosine(
+            tensor_lsh::lsh::FamilyKind::Cp,
+            mcfg.dims(),
             mcfg.rank_proj,
-            mcfg.k,
-            Distribution::Rademacher,
-        );
-        let spec = DatasetSpec {
-            dims: dims.clone(),
+            band_k,
+            cfg.spec.l,
+        )
+        .with_banded(true)
+        .with_seed(cfg.spec.seeds.base, 0)
+        .with_serving(cfg.spec.serving);
+        // The artifact emits exact-bucket codes only; a probed index would
+        // silently diverge between the PJRT path and the native fallback,
+        // so banded serving pins probes to 0.
+        spec.probes = 0;
+        let data = DatasetSpec {
+            dims: spec.family.dims.clone(),
             n_items: cfg.n_items,
             rank: mcfg.rank_in,
             n_clusters: (cfg.n_items / 50).max(2),
             noise: 0.35,
-            seed: cfg.seed,
+            seed: spec.seeds.base,
         };
-        let (items, _) = low_rank_corpus(&spec);
-        let icfg = tensor_lsh::index::IndexConfig {
-            family_builder: {
-                let bank = bank.clone();
-                Arc::new(move |t| {
-                    Arc::new(tensor_lsh::lsh::SrpHasher::wrap(bank.band(t, band_k), "cp"))
-                        as Arc<dyn HashFamily>
-                })
-            },
-            n_tables: cfg.l,
-            metric: Metric::Cosine,
-            // The PJRT artifact emits exact-bucket codes only; a probed
-            // index would silently diverge between the PJRT path and the
-            // native fallback, so banded serving pins probes to 0.
-            probes: 0,
-        };
-        let index = Arc::new(ShardedLshIndex::build(&icfg, items, cfg.shards)?);
+        let (items, _) = low_rank_corpus(&data);
+        let bank = spec.cp_bank()?;
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items)?);
         let backend = HashBackend::Pjrt(PjrtServingParams {
             artifact_dir: dir,
             artifact: "cp_srp".into(),
             bank,
-            bands: cfg.l,
+            bands: spec.l,
             e2lsh: None,
         });
         (index, backend)
     } else {
-        (build_corpus_sharded(cfg)?, HashBackend::Native)
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+        (index, HashBackend::Native)
     };
-    let mut rng = Rng::derive(cfg.seed, &[0x5E71]);
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x5E71]);
     let trace = zipf_trace(&mut rng, index.len(), 4 * cfg.n_items.min(2000), 1.1);
     let queries: Vec<Query> = trace
         .iter()
@@ -301,6 +283,8 @@ fn cmd_exp(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let which = positional.first().map(|s| s.as_str()).unwrap_or("all");
     let quick = positional.iter().any(|p| p == "quick");
     let scale = if quick { 1 } else { 4 };
+    let seed = cfg.spec.seeds.base;
+    let w = cfg.spec.family.w;
     let run_one = |id: &str| -> Result<()> {
         match id {
             "t1" => {
@@ -311,30 +295,30 @@ fn cmd_exp(cfg: &AppConfig, positional: &[String]) -> Result<()> {
             }
             "f1" => {
                 bh::fig_collision_e2lsh(
-                    &[10, 10, 10], 4, cfg.w, 512 * scale, 8 * scale, cfg.seed,
+                    &[10, 10, 10], 4, w, 512 * scale, 8 * scale, seed,
                     PairFormat::Dense,
                 );
                 // Documented finite-shape deviation: low-rank CP pairs.
                 bh::fig_collision_e2lsh(
-                    &[10, 10, 10], 4, cfg.w, 512 * scale, 8 * scale, cfg.seed,
+                    &[10, 10, 10], 4, w, 512 * scale, 8 * scale, seed,
                     PairFormat::Cp(2),
                 );
             }
             "f2" => {
                 bh::fig_collision_srp(
-                    &[10, 10, 10], 4, 512 * scale, 8 * scale, cfg.seed, PairFormat::Dense,
+                    &[10, 10, 10], 4, 512 * scale, 8 * scale, seed, PairFormat::Dense,
                 );
                 bh::fig_collision_srp(
-                    &[10, 10, 10], 4, 512 * scale, 8 * scale, cfg.seed, PairFormat::Cp(2),
+                    &[10, 10, 10], 4, 512 * scale, 8 * scale, seed, PairFormat::Cp(2),
                 );
             }
             "f3" => {
-                bh::fig_normality(&[4, 6, 8, 12, 16], 3, 4, 1000 * scale, cfg.seed, None);
+                bh::fig_normality(&[4, 6, 8, 12, 16], 3, 4, 1000 * scale, seed, None);
                 // Low-rank inputs: KS plateaus (finite-shape regime).
-                bh::fig_normality(&[4, 8, 16], 3, 4, 1000 * scale, cfg.seed, Some(3));
+                bh::fig_normality(&[4, 8, 16], 3, 4, 1000 * scale, seed, Some(3));
             }
             "f4" => {
-                bh::fig_condition(&[8, 8, 8], &[1, 2, 4, 8, 16, 32, 64], 1000 * scale, cfg.seed);
+                bh::fig_condition(&[8, 8, 8], &[1, 2, 4, 8, 16, 32, 64], 1000 * scale, seed);
             }
             "f5" => {
                 bh::fig_recall(&bh::RecallOptions {

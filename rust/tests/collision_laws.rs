@@ -4,7 +4,7 @@
 use tensor_lsh::bench_harness::{
     fig_collision_e2lsh, fig_collision_srp, fig_condition, fig_normality,
 };
-use tensor_lsh::lsh::{validity_report, TtSrp, TtSrpConfig};
+use tensor_lsh::lsh::{validity_report, FamilyKind, FamilySpec};
 use tensor_lsh::lsh::HashFamily;
 use tensor_lsh::rng::Rng;
 use tensor_lsh::stats::{ks_statistic_normal, srp_collision_prob, wilson_interval};
@@ -86,7 +86,7 @@ fn validity_condition_separation() {
 fn bank_collisions_binomial() {
     let dims = vec![10usize, 10, 10];
     let k = 4000;
-    let fam = TtSrp::new(TtSrpConfig { dims: dims.clone(), rank: 4, k, seed: 55 });
+    let fam = FamilySpec::srp(FamilyKind::Tt, dims.clone(), 4, k).build(55).unwrap();
     let mut rng = Rng::new(56);
     let cos = 0.7;
     let (x, y) = pair_at_cosine(&mut rng, &dims, cos, PairFormat::Cp(2));

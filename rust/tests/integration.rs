@@ -68,29 +68,22 @@ fn mixed_format_corpus_index() {
 #[test]
 fn config_to_coordinator_pipeline() {
     let mut cfg = AppConfig::default();
-    for kv in ["dims=8,8,8", "n_items=300", "k=10", "l=8", "family=cp", "metric=cosine"] {
+    let overrides =
+        ["dims=8,8,8", "n_items=300", "k=10", "l=8", "family=cp", "metric=cosine", "shards=4"];
+    for kv in overrides {
         cfg.apply_override(kv).unwrap();
     }
     let spec = DatasetSpec {
-        dims: cfg.dims.clone(),
+        dims: cfg.spec.family.dims.clone(),
         n_items: cfg.n_items,
         rank: 2,
         n_clusters: 10,
         noise: 0.3,
-        seed: cfg.seed,
+        seed: cfg.spec.seeds.base,
     };
     let (items, _) = low_rank_corpus(&spec);
-    let icfg = index_config(
-        cfg.family,
-        cfg.metric,
-        cfg.dims.clone(),
-        cfg.rank_proj,
-        cfg.k,
-        cfg.l,
-        cfg.w,
-        cfg.seed,
-    );
-    let index = Arc::new(ShardedLshIndex::build_parallel(&icfg, items, 4).unwrap());
+    // The parsed AppConfig's spec drives the index directly.
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, items).unwrap());
     let queries: Vec<Query> = (0..50)
         .map(|i| Query::new(i, index.item(i as usize % 300), 5))
         .collect();

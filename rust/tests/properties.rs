@@ -4,7 +4,7 @@
 use tensor_lsh::bench_harness::index_config_family;
 use tensor_lsh::config::Family;
 use tensor_lsh::index::{signature, Metric};
-use tensor_lsh::lsh::{CpSrp, CpSrpConfig, HashFamily};
+use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec};
 use tensor_lsh::stats;
 use tensor_lsh::tensor::{inner, AnyTensor, CpTensor, TtTensor};
 use tensor_lsh::testutil::{assert_close, proptest, random_any_tensor, random_dims};
@@ -149,13 +149,15 @@ fn prop_collision_law_consistency() {
 fn prop_banding_identity() {
     proptest("banding", 16, |rng| {
         let dims = vec![6usize, 5, 4];
-        let full = CpSrp::new(CpSrpConfig { dims: dims.clone(), rank: 3, k: 12, seed: 31 });
+        // A banded spec (K=4 per table, L=3 bands) over one 12-wide bank.
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 3, 4, 3)
+            .with_banded(true)
+            .with_seed(31, 0);
+        let full = tensor_lsh::lsh::SrpHasher::wrap(spec.cp_bank().unwrap(), "cp");
         let x = AnyTensor::Cp(CpTensor::random_gaussian(rng, &dims, 2));
         let codes = full.hash(&x);
         for band in 0..3 {
-            let band_fam =
-                tensor_lsh::lsh::SrpHasher::wrap(full.proj.band(band, 4), "cp");
-            assert_eq!(band_fam.hash(&x), codes[band * 4..(band + 1) * 4].to_vec());
+            assert_eq!(spec.family(band).hash(&x), codes[band * 4..(band + 1) * 4].to_vec());
         }
     });
 }

@@ -1,0 +1,199 @@
+//! The spec layer's contract: JSON round-trips are the identity, and the
+//! declarative builder path constructs bit-identical indexes to the legacy
+//! hand-rolled `family_builder` closures it replaced.
+
+use std::sync::Arc;
+use tensor_lsh::index::{CodeMatrix, IndexConfig, LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::lsh::{
+    E2lshHasher, FamilyKind, FamilySpec, HashFamily, IndexBuilder, LshSpec, SeedPolicy,
+    ServingSpec, SrpHasher,
+};
+use tensor_lsh::projection::{CpRademacher, Distribution, TtRademacher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::tensor::{AnyTensor, CpTensor};
+use tensor_lsh::testutil::proptest;
+
+fn items(dims: &[usize], n: usize, seed: u64) -> Vec<AnyTensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, dims, 2)))
+        .collect()
+}
+
+/// spec → JSON → spec is the identity, over randomized field combinations.
+#[test]
+fn prop_spec_json_roundtrip_identity() {
+    proptest("spec json roundtrip", 64, |rng| {
+        let kinds = [FamilyKind::Cp, FamilyKind::Tt, FamilyKind::Naive];
+        let metrics = [Metric::Cosine, Metric::Euclidean];
+        let kind = kinds[rng.below(3)];
+        let n_modes = 2 + rng.below(3);
+        let dims: Vec<usize> = (0..n_modes).map(|_| 2 + rng.below(14)).collect();
+        let spec = LshSpec {
+            family: FamilySpec {
+                kind,
+                dims,
+                rank: 1 + rng.below(8),
+                k: 1 + rng.below(24),
+                metric: metrics[rng.below(2)],
+                w: 0.25 + rng.uniform(0.0, 8.0),
+            },
+            l: 1 + rng.below(16),
+            probes: rng.below(5),
+            // Banding needs a low-rank bank; keep naive specs unbanded.
+            banded: kind != FamilyKind::Naive && rng.below(2) == 1,
+            seeds: SeedPolicy::new(rng.next_u64() >> 12, 1 + (rng.next_u64() >> 40)),
+            serving: ServingSpec {
+                shards: 1 + rng.below(8),
+                n_workers: 1 + rng.below(8),
+                max_batch: 1 + rng.below(128),
+                max_wait_us: rng.below(2000) as u64,
+            },
+        };
+        spec.validate().unwrap();
+        let text = spec.to_json_string();
+        let back = LshSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec, "round-trip changed the spec:\n{text}");
+        // Stability: a second print is byte-identical.
+        assert_eq!(back.to_json_string(), text);
+    });
+}
+
+/// Builder vs legacy closure: same seeds ⇒ bit-identical `CodeMatrix` (codes
+/// and bucket signatures) on both `LshIndex` and `ShardedLshIndex`, and
+/// identical search results.
+#[test]
+#[allow(deprecated)]
+fn builder_equals_legacy_closure_bit_for_bit() {
+    let dims = vec![8usize, 8, 8];
+    let corpus = items(&dims, 120, 61);
+    for metric in [Metric::Cosine, Metric::Euclidean] {
+        let spec = LshSpec {
+            family: FamilySpec {
+                kind: FamilyKind::Tt,
+                dims: dims.clone(),
+                rank: 3,
+                k: 8,
+                metric,
+                w: 4.0,
+            },
+            l: 5,
+            probes: 2,
+            banded: false,
+            seeds: SeedPolicy::new(900, 1000),
+            serving: ServingSpec { shards: 3, ..Default::default() },
+        };
+        // The legacy path: a hand-rolled closure wrapping the projections
+        // directly, exactly as pre-spec call sites did.
+        let legacy_cfg = IndexConfig {
+            family_builder: {
+                let dims = dims.clone();
+                Arc::new(move |t| {
+                    let seed = 900 + 1000 * t as u64;
+                    let proj =
+                        TtRademacher::generate(seed, &dims, 3, 8, Distribution::Rademacher);
+                    match metric {
+                        Metric::Euclidean => {
+                            Arc::new(E2lshHasher::wrap(proj, 4.0, seed, "tt"))
+                                as Arc<dyn HashFamily>
+                        }
+                        Metric::Cosine => Arc::new(SrpHasher::wrap(proj, "tt")),
+                    }
+                })
+            },
+            n_tables: 5,
+            metric,
+            probes: 2,
+        };
+
+        // Single-shard structure.
+        let new_single = IndexBuilder::new(spec.clone()).build_with(corpus.clone()).unwrap();
+        let old_single = LshIndex::build(&legacy_cfg, corpus.clone()).unwrap();
+        let cm_new = CodeMatrix::build(new_single.families(), &corpus);
+        let cm_old = CodeMatrix::build(old_single.families(), &corpus);
+        assert_eq!(cm_new.batch(), cm_old.batch());
+        for b in 0..corpus.len() {
+            for t in 0..5 {
+                assert_eq!(
+                    cm_new.codes_row(b, t),
+                    cm_old.codes_row(b, t),
+                    "metric {metric:?} item {b} table {t}"
+                );
+            }
+            assert_eq!(cm_new.sigs_row(b), cm_old.sigs_row(b));
+        }
+
+        // Sharded structure.
+        let new_sharded = ShardedLshIndex::build_from_spec(&spec, corpus.clone()).unwrap();
+        let old_sharded = ShardedLshIndex::build(&legacy_cfg, corpus.clone(), 3).unwrap();
+        for q in corpus.iter().take(12) {
+            assert_eq!(new_sharded.signatures(q), old_sharded.signatures(q));
+            assert_eq!(
+                new_sharded.search(q, 7).unwrap(),
+                old_sharded.search(q, 7).unwrap()
+            );
+            assert_eq!(new_single.search(q, 7).unwrap(), new_sharded.search(q, 7).unwrap());
+        }
+    }
+}
+
+/// Acceptance: a planner-derived spec survives a JSON round-trip and builds
+/// a `ShardedLshIndex` whose codes are bit-identical to the legacy
+/// construction at the same (planned) parameters.
+#[test]
+#[allow(deprecated)]
+fn planned_spec_roundtrips_and_matches_legacy_codes() {
+    // Big-D / small-R shape so the validity gate passes (Theorems 4/8).
+    let dims = vec![64usize, 64, 64, 64];
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 2, 1, 1)
+        .with_seed(42, 1000)
+        .planned(10_000, 0.9, 0.3, 0.5)
+        .unwrap();
+    assert!(spec.family.k > 1, "planner should raise K, got {}", spec.family.k);
+    assert!(spec.l >= 1);
+
+    // JSON round-trip preserves the planned parameters exactly.
+    let spec = LshSpec::from_json_str(&spec.to_json_string()).unwrap();
+
+    let corpus = items(&dims, 24, 62);
+    let planned_index = ShardedLshIndex::build_from_spec(&spec, corpus.clone()).unwrap();
+
+    // Legacy construction at the planned (K, L): hand-rolled closure.
+    let (k, l) = (spec.family.k, spec.l);
+    let legacy_cfg = IndexConfig {
+        family_builder: {
+            let dims = dims.clone();
+            Arc::new(move |t| {
+                let seed = 42 + 1000 * t as u64;
+                Arc::new(SrpHasher::wrap(
+                    CpRademacher::generate(seed, &dims, 2, k, Distribution::Rademacher),
+                    "cp",
+                )) as Arc<dyn HashFamily>
+            })
+        },
+        n_tables: l,
+        metric: Metric::Cosine,
+        probes: 0,
+    };
+    let legacy_index =
+        ShardedLshIndex::build(&legacy_cfg, corpus.clone(), spec.serving.shards).unwrap();
+
+    let cm_planned = CodeMatrix::build(planned_index.families(), &corpus);
+    let cm_legacy = CodeMatrix::build(legacy_index.families(), &corpus);
+    for b in 0..corpus.len() {
+        for t in 0..l {
+            assert_eq!(
+                cm_planned.codes_row(b, t),
+                cm_legacy.codes_row(b, t),
+                "item {b} table {t}"
+            );
+        }
+        assert_eq!(cm_planned.sigs_row(b), cm_legacy.sigs_row(b));
+    }
+    for q in corpus.iter().take(6) {
+        assert_eq!(
+            planned_index.search(q, 5).unwrap(),
+            legacy_index.search(q, 5).unwrap()
+        );
+    }
+}
