@@ -18,7 +18,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tensor_lsh::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, Query,
+    BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, QueryRequest,
 };
 use tensor_lsh::index::{recall_at_k, signature, ShardedLshIndex};
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
@@ -138,10 +138,10 @@ fn main() -> tensor_lsh::Result<()> {
     // ---- query trace (Zipf over corpus; rank matches the artifact) -------
     let mut rng_q = Rng::derive(SEED, &[2]);
     let trace = zipf_trace(&mut rng_q, N_ITEMS, N_QUERIES, 1.1);
-    let queries: Vec<Query> = trace
+    let queries: Vec<QueryRequest> = trace
         .iter()
         .enumerate()
-        .map(|(i, &id)| Query::new(i as u64, AnyTensor::Cp(items[id].clone()), TOP_K))
+        .map(|(i, &id)| QueryRequest::new(i as u64, AnyTensor::Cp(items[id].clone()), TOP_K))
         .collect();
 
     // ---- phase 1: flood (throughput) --------------------------------------
@@ -169,7 +169,7 @@ fn main() -> tensor_lsh::Result<()> {
     let sample = 50usize;
     let mut recall_sum = 0.0;
     for r in responses.iter().take(sample) {
-        let exact = index.exact_search(&queries[r.id as usize].tensor, TOP_K)?;
+        let exact = index.exact_search(&queries[r.id as usize].query.tensor, TOP_K)?;
         recall_sum += recall_at_k(&r.results, &exact);
     }
     let recall = recall_sum / sample as f64;

@@ -43,16 +43,25 @@ fn main() -> Result<()> {
 
     let index = IndexBuilder::new(spec).build_with(items)?;
 
+    // One QueryOpts drives every query; the per-response stats report the
+    // candidate workload the planner's (K, L) actually produces.
+    let opts = QueryOpts::top_k(10);
     let mut recall_sum = 0.0;
+    let mut cand_sum = 0usize;
     let n_q = 50;
     for _ in 0..n_q {
         let qid = rng.below(index.len());
         let q = index.item(qid).clone();
-        let approx = index.search(&q, 10)?;
+        let approx = index.query_with(&q, &opts)?;
         let exact = index.exact_search(&q, 10)?;
-        recall_sum += tensor_lsh::index::recall_at_k(&approx, &exact);
+        recall_sum += tensor_lsh::index::recall_at_k(&approx.hits, &exact);
+        cand_sum += approx.stats.candidates_examined;
     }
-    println!("TT-E2LSH recall@10 over {n_q} queries: {:.3}", recall_sum / n_q as f64);
+    println!(
+        "TT-E2LSH recall@10 over {n_q} queries: {:.3} ({:.1} candidates/query)",
+        recall_sum / n_q as f64,
+        cand_sum as f64 / n_q as f64
+    );
     for (t, (mean, max)) in index.occupancy().iter().enumerate().take(3) {
         println!("table {t}: mean bucket {mean:.1}, max {max}");
     }

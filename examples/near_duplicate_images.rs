@@ -33,14 +33,16 @@ fn main() -> tensor_lsh::Result<()> {
     let index = IndexBuilder::new(spec).build_with(items)?;
 
     // For every patch, retrieve its nearest neighbors (excluding itself)
-    // and check they come from the same duplicate group.
+    // and check they come from the same duplicate group. The response
+    // stats give the candidate counts directly — no second probing pass.
+    let opts = QueryOpts::top_k(dups);
     let mut correct = 0usize;
     let mut total = 0usize;
     let mut candidates = 0usize;
     for id in 0..index.len() {
-        let hits = index.search(index.item(id), dups)?;
-        candidates += index.candidates(index.item(id)).len();
-        for h in hits.iter().filter(|h| h.id != id) {
+        let resp = index.query_with(index.item(id), &opts)?;
+        candidates += resp.stats.candidates_generated;
+        for h in resp.hits.iter().filter(|h| h.id != id) {
             total += 1;
             if labels[h.id] == labels[id] {
                 correct += 1;

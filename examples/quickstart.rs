@@ -41,13 +41,36 @@ fn main() -> Result<()> {
         .collect();
     let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 8, 10, 8);
     let index = IndexBuilder::new(spec.clone()).build_with(items.clone())?;
-    let hits = index.search(&items[7], 5)?;
-    assert_eq!(hits[0].id, 7); // an indexed item is its own nearest neighbor
+
+    // Queries are plain-data `Query` values: k plus call-time knobs. The
+    // response carries the hits AND what they cost.
+    let resp = index.query(&Query::new(items[7].clone(), 5))?;
+    assert_eq!(resp.hits[0].id, 7); // an indexed item is its own nearest neighbor
     println!(
         "\nindexed {} items in {} tables; top hit for item 7 is itself (cos {:.3})",
         index.len(),
         index.n_tables(),
-        hits[0].score
+        resp.hits[0].score
+    );
+    println!(
+        "the query examined {} candidates across {} tables and re-ranked {}",
+        resp.stats.candidates_examined, resp.stats.tables_hit, resp.stats.reranked
+    );
+
+    // The recall/latency knobs are per QUERY, not baked into the index:
+    // the same built index serves a recall-hungry multiprobe query and a
+    // latency-bound budgeted one.
+    let tuned = Query::new(items[7].clone(), 5)
+        .probes(4)
+        .rerank(RerankPolicy::Budgeted(64));
+    let tuned_resp = index.query(&tuned)?;
+    assert_eq!(tuned_resp.hits[0].id, 7);
+    println!(
+        "with 4 probes/table + a 64-candidate rerank budget: {} probes spent, \
+         {} candidates, {} re-ranked",
+        tuned_resp.stats.probes_used,
+        tuned_resp.stats.candidates_generated,
+        tuned_resp.stats.reranked
     );
 
     // The spec round-trips through JSON — store it next to the index and

@@ -3,23 +3,31 @@
 //! A1 — projection entry distribution: Rademacher (the paper's Defs. 6–7)
 //!      vs Gaussian (the CP_N/TT_N variants). Same collision law; compare
 //!      generation cost, hash cost, and law conformance.
-//! A2 — multiprobe vs more tables: at a matched candidate budget, L tables
-//!      with T probes each vs (T+1)·L tables. Multiprobe buys recall
-//!      without duplicating projection parameters.
+//! A2 — query-side knobs: multiprobe budget and rerank policy/candidate
+//!      budget, swept as *per-query* [`QueryOpts`] over ONE built index
+//!      (the unified query API makes the sweep index-rebuild-free: the
+//!      build-time `probes` spec value is only a default). Emits one
+//!      machine-readable `BENCH_ablations.json` series (recall, candidate
+//!      and re-rank counts, per-query latency for every setting, plus the
+//!      serialized `LshSpec` provenance stamp). Set `BENCH_SMOKE=1` for a
+//!      seconds-long smoke run.
 //!
 //! Run: `cargo bench --bench ablations`
+use std::collections::BTreeMap;
 use tensor_lsh::index::{recall_at_k, LshIndex};
 use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec, SrpHasher};
 use tensor_lsh::projection::{CpRademacher, Distribution};
+use tensor_lsh::query::{QueryOpts, RerankPolicy};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::stats::srp_collision_prob;
 use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::util::json::Json;
 use tensor_lsh::util::timer::{bench, time_once};
 use tensor_lsh::workload::{low_rank_corpus, pair_at_cosine, DatasetSpec, PairFormat};
 
 fn main() {
     ablation_distribution();
-    ablation_multiprobe();
+    ablation_probe_budget();
 }
 
 fn ablation_distribution() {
@@ -58,48 +66,128 @@ fn ablation_distribution() {
     }
 }
 
-fn ablation_multiprobe() {
-    println!("\n## A2: multiprobe vs more tables (dims 10³, n=1200, K=12, cp-srp)");
-    println!("| config | params (f32) | recall@10 | cand./query |");
-    println!("|---|---|---|---|");
+/// One swept (label, opts) cell measured over the shared query set.
+struct Cell {
+    label: String,
+    opts: QueryOpts,
+    recall_at_10: f64,
+    mean_candidates: f64,
+    mean_reranked: f64,
+    mean_query_ns: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("opts".into(), self.opts.to_json());
+        m.insert("recall_at_10".into(), Json::Num(self.recall_at_10));
+        m.insert("mean_candidates".into(), Json::Num(self.mean_candidates));
+        m.insert("mean_reranked".into(), Json::Num(self.mean_reranked));
+        m.insert("mean_query_ns".into(), Json::Num(self.mean_query_ns));
+        Json::Obj(m)
+    }
+}
+
+fn ablation_probe_budget() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_items, n_queries) = if smoke { (300, 12) } else { (1200, 30) };
+    println!(
+        "\n## A2: per-query probe/budget sweep on ONE built index \
+         (dims 10³, n={n_items}, K=12, L=4, cp-srp)"
+    );
+    println!("| query opts | recall@10 | cand./query | reranked/query | µs/query |");
+    println!("|---|---|---|---|---|");
     let dims = vec![10usize, 10, 10];
     let (items, _) = low_rank_corpus(&DatasetSpec {
         dims: dims.clone(),
-        n_items: 1200,
+        n_items,
         rank: 3,
         n_clusters: 20,
         noise: 0.35,
         seed: 11,
     });
+    // ONE index, built once with probes=0 as the default; every sweep cell
+    // below is a call-time override. (The pre-redesign bench rebuilt the
+    // whole index per setting.)
+    let lsh_spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 12, 4).with_seed(500, 1);
+    let index = LshIndex::build_from_spec(&lsh_spec, items.clone()).unwrap();
     let mut rng = Rng::new(12);
-    let qids: Vec<usize> = (0..30).map(|_| rng.below(items.len())).collect();
-    let mut results = Vec::new();
-    for (label, l, probes) in [("L=4, probes=0", 4usize, 0usize),
-                               ("L=4, probes=4", 4, 4),
-                               ("L=8, probes=0", 8, 0),
-                               ("L=16, probes=0", 16, 0)] {
-        let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 4, 12, l)
-            .with_probes(probes)
-            .with_seed(500, 1);
-        let index = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
-        let params: usize = index.families().iter().map(|f| f.param_count()).sum();
+    let qids: Vec<usize> = (0..n_queries).map(|_| rng.below(items.len())).collect();
+    let exact: Vec<_> = qids
+        .iter()
+        .map(|&qid| index.exact_search(index.item(qid), 10).unwrap())
+        .collect();
+
+    let sweep: Vec<(String, QueryOpts)> = vec![
+        ("probes=0".into(), QueryOpts::top_k(10)),
+        ("probes=2".into(), QueryOpts::top_k(10).with_probes(2)),
+        ("probes=4".into(), QueryOpts::top_k(10).with_probes(4)),
+        ("probes=8".into(), QueryOpts::top_k(10).with_probes(8)),
+        (
+            "probes=4, budget:64".into(),
+            QueryOpts::top_k(10).with_probes(4).with_rerank(RerankPolicy::Budgeted(64)),
+        ),
+        (
+            "probes=4, cap=64".into(),
+            QueryOpts::top_k(10).with_probes(4).with_max_candidates(64),
+        ),
+        (
+            "probes=4, signature-only".into(),
+            QueryOpts::top_k(10).with_probes(4).with_rerank(RerankPolicy::SignatureOnly),
+        ),
+    ];
+    let mut cells = Vec::new();
+    for (label, opts) in sweep {
         let mut recall = 0.0;
         let mut cands = 0usize;
-        for &qid in &qids {
-            let approx = index.search(index.item(qid), 10).unwrap();
-            let exact = index.exact_search(index.item(qid), 10).unwrap();
-            recall += recall_at_k(&approx, &exact);
-            cands += index.candidates(index.item(qid)).len();
+        let mut reranked = 0usize;
+        let (responses, total_ns) = time_once(|| {
+            qids.iter()
+                .map(|&qid| index.query_with(index.item(qid), &opts).unwrap())
+                .collect::<Vec<_>>()
+        });
+        for (resp, truth) in responses.iter().zip(&exact) {
+            recall += recall_at_k(&resp.hits, truth);
+            cands += resp.stats.candidates_generated;
+            reranked += resp.stats.reranked;
         }
-        recall /= qids.len() as f64;
+        let per = qids.len() as f64;
+        let cell = Cell {
+            label: label.clone(),
+            opts,
+            recall_at_10: recall / per,
+            mean_candidates: cands as f64 / per,
+            mean_reranked: reranked as f64 / per,
+            mean_query_ns: total_ns / per,
+        };
         println!(
-            "| {label} | {params} | {recall:.3} | {:.1} |",
-            cands as f64 / qids.len() as f64
+            "| {label} | {:.3} | {:.1} | {:.1} | {:.1} |",
+            cell.recall_at_10,
+            cell.mean_candidates,
+            cell.mean_reranked,
+            cell.mean_query_ns / 1e3
         );
-        results.push((label, l, probes, recall));
+        cells.push(cell);
     }
-    // Multiprobe at L=4 must beat plain L=4 and approach L=8.
-    let get = |lbl: &str| results.iter().find(|r| r.0 == lbl).unwrap().3;
-    assert!(get("L=4, probes=4") >= get("L=4, probes=0") - 0.01);
-    println!("\nA1/A2 OK");
+    // Exact rerank over a candidate superset cannot lose recall: probes=4
+    // must match or beat probes=0 on the same index.
+    let get = |lbl: &str| cells.iter().find(|c| c.label == lbl).unwrap().recall_at_10;
+    assert!(get("probes=4") >= get("probes=0") - 1e-9);
+    // Signature-only never pays an inner product.
+    let sig = cells.iter().find(|c| c.label.ends_with("signature-only")).unwrap();
+    assert_eq!(sig.mean_reranked, 0.0);
+
+    let mut config = BTreeMap::new();
+    config.insert("n_items".into(), Json::Num(n_items as f64));
+    config.insert("n_queries".into(), Json::Num(n_queries as f64));
+    config.insert("smoke".into(), Json::Bool(smoke));
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("ablations".into()));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("spec".into(), lsh_spec.to_json());
+    root.insert("runs".into(), Json::Arr(cells.iter().map(Cell::to_json).collect()));
+    let path = "BENCH_ablations.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write bench json");
+    println!("\nwrote {path}\nA1/A2 OK");
 }

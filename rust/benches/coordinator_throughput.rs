@@ -19,7 +19,9 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
-use tensor_lsh::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, HashBackend, QueryRequest,
+};
 use tensor_lsh::index::ShardedLshIndex;
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
 use tensor_lsh::rng::Rng;
@@ -75,8 +77,8 @@ fn run_family(
     let mut qps: BTreeMap<(usize, usize), f64> = BTreeMap::new();
     for &workers in worker_grid {
         for &max_batch in batch_grid {
-            let queries: Vec<Query> = (0..n_queries)
-                .map(|i| Query::new(i as u64, index.item(rng.below(index.len())), top_k))
+            let queries: Vec<QueryRequest> = (0..n_queries)
+                .map(|i| QueryRequest::new(i as u64, index.item(rng.below(index.len())), top_k))
                 .collect();
             let cfg = CoordinatorConfig {
                 n_workers: workers,

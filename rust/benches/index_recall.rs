@@ -3,7 +3,8 @@
 //! Run: `cargo bench --bench index_recall`
 use tensor_lsh::bench_harness::{fig_recall, index_config, RecallOptions};
 use tensor_lsh::config::Family;
-use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::index::{HashScratch, LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::query::QueryOpts;
 use tensor_lsh::tensor::AnyTensor;
 use tensor_lsh::util::timer::time_once;
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
@@ -36,16 +37,26 @@ fn main() {
     let sharded = ShardedLshIndex::build_parallel(&icfg, items.clone(), 8).unwrap();
     let queries: Vec<AnyTensor> =
         (0..256).map(|i| items[(i * 37) % items.len()].clone()).collect();
+    let opts = vec![QueryOpts::top_k(10); queries.len()];
+    let mut scratch = HashScratch::new();
     // Equivalence spot check: sharded+batched returns the single-shard
-    // result set (full test coverage in tests/sharding.rs).
-    let batched = sharded.search_batch(&queries, 10).unwrap();
+    // result set (full test coverage in tests/sharding.rs + query_api.rs).
+    let batched = sharded.query_batch_with(&queries, &opts, &mut scratch).unwrap();
     for (q, res) in queries.iter().zip(&batched).take(32) {
-        assert_eq!(&single.search(q, 10).unwrap(), res, "sharded/batched mismatch");
+        assert_eq!(
+            single.query_with(q, &opts[0]).unwrap().hits,
+            res.hits,
+            "sharded/batched mismatch"
+        );
     }
     let (_r1, t_single) = time_once(|| {
-        queries.iter().map(|q| single.search(q, 10).unwrap()).collect::<Vec<_>>()
+        queries
+            .iter()
+            .map(|q| single.query_with(q, &opts[0]).unwrap())
+            .collect::<Vec<_>>()
     });
-    let (_r2, t_batched) = time_once(|| sharded.search_batch(&queries, 10).unwrap());
+    let (_r2, t_batched) =
+        time_once(|| sharded.query_batch_with(&queries, &opts, &mut scratch).unwrap());
     println!(
         "\n## sharded/batched query path (n=1500, L=8, K=10, cp-srp, shards=8, 256 queries)"
     );

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use tensor_lsh::index::{signature, CodeMatrix, LshIndex};
 use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec};
+use tensor_lsh::query::QueryOpts;
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::AnyTensor;
 use tensor_lsh::util::json::Json;
@@ -89,7 +90,8 @@ fn main() {
     println!("rerank: {:.1} us", t_rerank.median_ns / 1e3);
     let t_clone = bench(|| q.clone(), samples, min_ms);
     println!("query clone: {:.2} us", t_clone.median_ns / 1e3);
-    let t_full = bench(|| index.search(&q, 10).unwrap(), samples, min_ms);
+    let opts10 = QueryOpts::top_k(10);
+    let t_full = bench(|| index.query_with(&q, &opts10).unwrap(), samples, min_ms);
     println!("full search: {:.1} us", t_full.median_ns / 1e3);
 
     // Flat batch vs per-item hashing, CP and TT (EXPERIMENTS.md §Layout):

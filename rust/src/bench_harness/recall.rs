@@ -148,18 +148,19 @@ pub fn fig_recall(opts: &RecallOptions) -> Vec<RecallRow> {
             );
             let (index, build_ns) = time_once(|| LshIndex::build(&cfg, items.clone()).unwrap());
             let mut recalls = Vec::new();
-            let mut cands = 0usize;
+            let opts10 = crate::query::QueryOpts::top_k(10);
             let (responses, query_ns) = time_once(|| {
                 query_ids
                     .iter()
-                    .map(|&qid| index.search(index.item(qid), 10).unwrap())
+                    .map(|&qid| index.query_with(index.item(qid), &opts10).unwrap())
                     .collect::<Vec<_>>()
             });
+            let mut cands = 0usize;
             for (resp, truth) in responses.iter().zip(&exact) {
-                recalls.push(recall_at_k(resp, truth));
-            }
-            for &qid in &query_ids {
-                cands += index.candidates(index.item(qid)).len();
+                recalls.push(recall_at_k(&resp.hits, truth));
+                // The response stats replace the second probing pass the
+                // old `index.candidates` accounting needed.
+                cands += resp.stats.candidates_generated;
             }
             let row = RecallRow {
                 family: family.name().to_string(),

@@ -1,5 +1,8 @@
-//! Serving metrics: latency histogram, counters, throughput.
+//! Serving metrics: latency histogram, counters, throughput, and the
+//! per-query [`SearchStats`] aggregates (probes spent, candidates
+//! re-ranked) the unified query API reports.
 
+use crate::query::SearchStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -62,7 +65,14 @@ impl Histogram {
 #[derive(Debug)]
 pub struct Metrics {
     pub queries: AtomicU64,
+    /// Candidates examined (post-cap) across all queries.
     pub candidates: AtomicU64,
+    /// Multiprobe signatures spent beyond the exact buckets.
+    pub probes: AtomicU64,
+    /// Candidates scored with a full inner product.
+    pub reranked: AtomicU64,
+    /// Queries answered by the exact-fallback linear scan.
+    pub fallbacks: AtomicU64,
     pub batches: AtomicU64,
     pub batch_items: AtomicU64,
     latency: Mutex<Histogram>,
@@ -80,6 +90,9 @@ impl Metrics {
         Metrics {
             queries: AtomicU64::new(0),
             candidates: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            reranked: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             latency: Mutex::new(Histogram::new()),
@@ -87,9 +100,16 @@ impl Metrics {
         }
     }
 
-    pub fn record_query(&self, latency_us: f64, n_candidates: usize) {
+    /// Record one answered query: latency plus its [`SearchStats`].
+    pub fn record_query(&self, latency_us: f64, stats: &SearchStats) {
         self.queries.fetch_add(1, Ordering::Relaxed);
-        self.candidates.fetch_add(n_candidates as u64, Ordering::Relaxed);
+        self.candidates
+            .fetch_add(stats.candidates_examined as u64, Ordering::Relaxed);
+        self.probes.fetch_add(stats.probes_used as u64, Ordering::Relaxed);
+        self.reranked.fetch_add(stats.reranked as u64, Ordering::Relaxed);
+        if stats.exact_fallback {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
         self.latency.lock().unwrap().record(latency_us);
     }
 
@@ -104,11 +124,14 @@ impl Metrics {
         let queries = self.queries.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed).max(1);
         let elapsed = self.started.elapsed().as_secs_f64();
+        let denom = queries.max(1) as f64;
         MetricsSnapshot {
             queries,
             qps: queries as f64 / elapsed.max(1e-9),
-            mean_candidates: self.candidates.load(Ordering::Relaxed) as f64
-                / queries.max(1) as f64,
+            mean_candidates: self.candidates.load(Ordering::Relaxed) as f64 / denom,
+            mean_probes: self.probes.load(Ordering::Relaxed) as f64 / denom,
+            mean_reranked: self.reranked.load(Ordering::Relaxed) as f64 / denom,
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
             mean_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
             p50_us: hist.quantile(0.50),
             p95_us: hist.quantile(0.95),
@@ -124,6 +147,12 @@ pub struct MetricsSnapshot {
     pub queries: u64,
     pub qps: f64,
     pub mean_candidates: f64,
+    /// Mean multiprobe signatures spent per query.
+    pub mean_probes: f64,
+    /// Mean exactly re-ranked candidates per query.
+    pub mean_reranked: f64,
+    /// Queries answered by the exact-fallback linear scan.
+    pub fallbacks: u64,
     pub mean_batch: f64,
     pub p50_us: f64,
     pub p95_us: f64,
@@ -135,16 +164,23 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "queries={} qps={:.0} batch≈{:.1} cand≈{:.1} latency(µs) p50={:.0} p95={:.0} p99={:.0} mean={:.0}",
+            "queries={} qps={:.0} batch≈{:.1} cand≈{:.1} probes≈{:.1} rerank≈{:.1} \
+             latency(µs) p50={:.0} p95={:.0} p99={:.0} mean={:.0}",
             self.queries,
             self.qps,
             self.mean_batch,
             self.mean_candidates,
+            self.mean_probes,
+            self.mean_reranked,
             self.p50_us,
             self.p95_us,
             self.p99_us,
             self.mean_us
-        )
+        )?;
+        if self.fallbacks > 0 {
+            write!(f, " fallbacks={}", self.fallbacks)?;
+        }
+        Ok(())
     }
 }
 
@@ -168,15 +204,32 @@ mod tests {
     fn metrics_snapshot_counts() {
         let m = Metrics::new();
         m.record_batch(4);
+        let stats = SearchStats {
+            candidates_generated: 12,
+            candidates_examined: 10,
+            probes_used: 3,
+            tables_hit: 5,
+            reranked: 8,
+            exact_fallback: false,
+        };
         for i in 0..4 {
-            m.record_query(100.0 + i as f64, 10);
+            m.record_query(100.0 + i as f64, &stats);
         }
         let s = m.snapshot();
         assert_eq!(s.queries, 4);
         assert!((s.mean_candidates - 10.0).abs() < 1e-9);
+        assert!((s.mean_probes - 3.0).abs() < 1e-9);
+        assert!((s.mean_reranked - 8.0).abs() < 1e-9);
+        assert_eq!(s.fallbacks, 0);
         assert!((s.mean_batch - 4.0).abs() < 1e-9);
         assert!(s.p50_us >= 100.0);
         let text = format!("{s}");
         assert!(text.contains("queries=4"));
+        assert!(text.contains("probes≈3.0"));
+        m.record_query(
+            50.0,
+            &SearchStats { exact_fallback: true, ..SearchStats::default() },
+        );
+        assert_eq!(m.snapshot().fallbacks, 1);
     }
 }

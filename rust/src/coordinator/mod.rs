@@ -34,6 +34,13 @@
 //! spec's serving knobs, and [`crate::lsh::spec::CoordinatorBuilder`] wraps
 //! index build + pipeline start behind a fluent surface.
 
+//! Requests are [`QueryRequest`]s around the unified
+//! [`crate::query::Query`] (per-query probe override, candidate cap, rerank
+//! policy — all threaded through the hash stage and workers); responses
+//! carry the hits plus [`crate::query::SearchStats`], which the metrics
+//! aggregate. The coordinator also implements
+//! [`crate::query::Searcher`] for synchronous single-client use.
+
 mod batcher;
 mod metrics;
 mod protocol;
@@ -41,5 +48,10 @@ mod server;
 
 pub use batcher::{drain_batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
-pub use protocol::{Query, QueryResponse};
+pub use protocol::{QueryRequest, QueryResponse};
 pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams};
+
+/// Deprecated name of [`QueryRequest`] (the per-query knobs now live in the
+/// unified [`crate::query::Query`] it wraps).
+#[deprecated(since = "0.3.0", note = "renamed to coordinator::QueryRequest")]
+pub type Query = QueryRequest;

@@ -1,46 +1,70 @@
 //! Query/response protocol types.
+//!
+//! A [`QueryRequest`] is a client-assigned id plus the unified
+//! [`crate::query::Query`]: the per-query knobs (`k`, probe override,
+//! candidate cap, rerank policy, …) are plain data and serialize through
+//! [`crate::query::QueryOpts::to_json`] — the tensor payload travels in its
+//! native format. A [`QueryResponse`] echoes the id and carries the hits
+//! plus the query's [`SearchStats`].
 
 use crate::index::SearchResult;
+use crate::query::{Query, SearchStats};
 use crate::tensor::AnyTensor;
 
-/// A k-NN query.
+/// A k-NN request submitted to the coordinator.
 #[derive(Clone, Debug)]
-pub struct Query {
+pub struct QueryRequest {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
-    /// Query tensor (any format the index's families accept).
-    pub tensor: AnyTensor,
-    /// Number of neighbors to return.
-    pub top_k: usize,
+    /// The unified query: tensor + serializable per-query knobs.
+    pub query: Query,
 }
 
-impl Query {
+impl QueryRequest {
+    /// A default-knob request — equivalent to the legacy
+    /// `Query::new(id, tensor, top_k)` protocol constructor.
     pub fn new(id: u64, tensor: AnyTensor, top_k: usize) -> Self {
-        Query { id, tensor, top_k }
+        QueryRequest { id, query: Query::new(tensor, top_k) }
+    }
+
+    /// Wrap a fully-specified [`Query`].
+    pub fn with_query(id: u64, query: Query) -> Self {
+        QueryRequest { id, query }
     }
 }
 
-/// Response to a [`Query`].
+/// Response to a [`QueryRequest`].
 #[derive(Clone, Debug)]
 pub struct QueryResponse {
     pub id: u64,
     pub results: Vec<SearchResult>,
     /// End-to-end latency observed inside the coordinator (µs).
     pub latency_us: f64,
-    /// Candidates examined before re-ranking (cost signal).
-    pub n_candidates: usize,
+    /// Full per-query accounting — candidates generated/examined, probes
+    /// spent, re-rank count (see [`SearchStats`]).
+    pub stats: SearchStats,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::query::{QueryOpts, RerankPolicy};
     use crate::tensor::DenseTensor;
 
     #[test]
-    fn query_construction() {
+    fn request_construction() {
         let t = AnyTensor::Dense(DenseTensor::zeros(&[2, 2]));
-        let q = Query::new(7, t, 5);
+        let q = QueryRequest::new(7, t.clone(), 5);
         assert_eq!(q.id, 7);
-        assert_eq!(q.top_k, 5);
+        assert_eq!(q.query.opts.k, 5);
+        assert_eq!(q.query.opts, QueryOpts::top_k(5));
+        let rich = QueryRequest::with_query(
+            8,
+            Query::new(t, 3).probes(2).rerank(RerankPolicy::Budgeted(10)),
+        );
+        assert_eq!(rich.query.opts.probes, Some(2));
+        // The knob payload is what the wire serializes.
+        let json = rich.query.opts.to_json();
+        assert_eq!(QueryOpts::from_json(&json).unwrap(), rich.query.opts);
     }
 }

@@ -3,18 +3,20 @@
 //!
 //! Scatter-gather over a [`ShardedLshIndex`]: the hash stage computes every
 //! query's per-table signatures for the whole batch at once (native batched
-//! hashing or one PJRT artifact execution), then scatters each query to all
-//! workers; worker `w` probes and exactly re-ranks only the shards it owns
-//! (`shard ≡ w mod W`), and the aggregator merges the per-shard top-k
-//! partials into the response.
+//! hashing — honoring each query's probe override — or one PJRT artifact
+//! execution), then scatters each query to all workers; worker `w` probes
+//! and re-ranks only the shards it owns (`shard ≡ w mod W`) per the query's
+//! [`crate::query::RerankPolicy`], and the aggregator merges the per-shard
+//! top-k partials and [`SearchStats`] into the response.
 
 use super::batcher::{drain_batch, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::protocol::{Query, QueryResponse};
+use super::protocol::{QueryRequest, QueryResponse};
 use crate::error::{Error, Result};
-use crate::index::{merge_partials, signature, HashScratch, SearchResult, ShardedLshIndex};
+use crate::index::{merge_hits, signature, HashScratch, SearchResult, ShardedLshIndex};
 use crate::lsh::spec::LshSpec;
 use crate::projection::CpRademacher;
+use crate::query::{Query, SearchResponse, SearchStats, Searcher};
 use crate::runtime::PjrtEngine;
 use crate::tensor::{AnyTensor, CpTensor};
 use std::collections::HashMap;
@@ -79,16 +81,20 @@ pub struct PjrtServingParams {
 /// How signatures are computed.
 pub enum HashBackend {
     /// The hash stage batch-hashes with the index's native families
-    /// ([`crate::lsh::HashFamily::project_batch`] under the hood).
+    /// ([`crate::lsh::HashFamily::project_batch`] under the hood),
+    /// honoring per-query probe overrides.
     Native,
     /// A dedicated stage executes the AOT artifacts via PJRT, falling back
-    /// to native batched hashing if the engine is unavailable.
+    /// to native batched hashing if the engine is unavailable. The
+    /// artifact emits exact-bucket codes only, so multiprobe budgets
+    /// (index default *and* per-query overrides) apply on the native path
+    /// alone.
     Pjrt(PjrtServingParams),
 }
 
 /// A hashed query: everything a worker needs to probe its shards.
 struct QueryJob {
-    query: Query,
+    request: QueryRequest,
     /// Per-table signature lists (exact signature [+ multiprobe extras]).
     sigs: Vec<Vec<u64>>,
     submitted: Instant,
@@ -105,7 +111,7 @@ struct Partial {
     ticket: u64,
     job: Arc<QueryJob>,
     result: Result<Vec<SearchResult>>,
-    n_candidates: usize,
+    stats: SearchStats,
 }
 
 /// Aggregation state for one in-flight query.
@@ -113,17 +119,30 @@ struct Pending {
     job: Arc<QueryJob>,
     remaining: usize,
     acc: Vec<SearchResult>,
-    n_candidates: usize,
+    stats: SearchStats,
     error: Option<Error>,
 }
 
 /// Running coordinator instance.
 pub struct Coordinator {
-    input: Option<Sender<(Query, Instant)>>,
-    output: Receiver<Result<QueryResponse>>,
+    input: Option<Sender<(QueryRequest, Instant)>>,
+    /// Responses tagged with the request id they answer — errors included,
+    /// so the synchronous wrappers can tell a stale failure from their own.
+    output: Receiver<(u64, Result<QueryResponse>)>,
     metrics: Arc<Metrics>,
     threads: Vec<JoinHandle<()>>,
+    /// Monotonic id source for the synchronous [`Coordinator::query`] /
+    /// [`Coordinator::query_batch`] wrappers: responses are matched by id,
+    /// so a response stranded by an earlier aborted batch is discarded
+    /// instead of being returned as the answer to a later query. Starts at
+    /// [`SYNC_ID_BASE`] so it cannot collide with conventional
+    /// caller-assigned ids (0, 1, 2, …) from interleaved `submit`s.
+    sync_ticket: std::cell::Cell<u64>,
 }
+
+/// First id the synchronous wrappers use — the top half of the id space,
+/// far away from the small sequential ids callers conventionally assign.
+const SYNC_ID_BASE: u64 = 1 << 63;
 
 impl Coordinator {
     /// Spin up the pipeline over a built sharded index.
@@ -139,13 +158,13 @@ impl Coordinator {
             // fallback path can add multiprobe signatures.
             eprintln!(
                 "coordinator: index configured with probes={} but the PJRT backend \
-                 hashes exact-bucket signatures only — multiprobe applies on the \
-                 native path alone",
+                 hashes exact-bucket signatures only — multiprobe (including \
+                 per-query overrides) applies on the native path alone",
                 index.probes()
             );
         }
-        let (in_tx, in_rx) = channel::<(Query, Instant)>();
-        let (out_tx, out_rx) = channel::<Result<QueryResponse>>();
+        let (in_tx, in_rx) = channel::<(QueryRequest, Instant)>();
+        let (out_tx, out_rx) = channel::<(u64, Result<QueryResponse>)>();
         let (part_tx, part_rx) = channel::<Partial>();
 
         // Worker pool: worker w owns shards {s : s ≡ w (mod W)} and re-ranks
@@ -163,14 +182,18 @@ impl Coordinator {
                 for task in wrx {
                     let job = task.job;
                     let mut acc: Vec<SearchResult> = Vec::new();
-                    let mut n_candidates = 0usize;
+                    let mut stats = SearchStats::default();
                     let mut error = None;
                     for &s in &shards {
-                        match index.shard_search(s, &job.query.tensor, &job.sigs, job.query.top_k)
-                        {
-                            Ok((partial, nc)) => {
+                        match index.shard_query(
+                            s,
+                            &job.request.query.tensor,
+                            &job.sigs,
+                            &job.request.query.opts,
+                        ) {
+                            Ok((partial, shard_stats)) => {
                                 acc.extend(partial);
-                                n_candidates += nc;
+                                stats.merge(&shard_stats);
                             }
                             Err(e) => {
                                 error = Some(e);
@@ -186,7 +209,7 @@ impl Coordinator {
                         ticket: task.ticket,
                         job,
                         result,
-                        n_candidates,
+                        stats,
                     });
                     if sent.is_err() {
                         break;
@@ -197,7 +220,8 @@ impl Coordinator {
         drop(part_tx);
 
         // Aggregator: gathers one partial per worker per query, merges the
-        // per-shard top-k lists, records metrics, responds.
+        // per-shard top-k lists and stats, applies the exact fallback if
+        // asked, records metrics, responds.
         {
             let index = Arc::clone(&index);
             let metrics = Arc::clone(&metrics);
@@ -209,11 +233,11 @@ impl Coordinator {
                         job: Arc::clone(&p.job),
                         remaining: expected,
                         acc: Vec::new(),
-                        n_candidates: 0,
+                        stats: SearchStats::default(),
                         error: None,
                     });
                     entry.remaining -= 1;
-                    entry.n_candidates += p.n_candidates;
+                    entry.stats.merge(&p.stats);
                     match p.result {
                         Ok(partial) => entry.acc.extend(partial),
                         Err(e) => {
@@ -226,26 +250,40 @@ impl Coordinator {
                         continue;
                     }
                     let done = pending.remove(&p.ticket).expect("pending entry");
-                    let resp = match done.error {
+                    let Pending { job, acc, mut stats, error, .. } = done;
+                    let resp = match error {
                         Some(e) => Err(e),
                         None => {
-                            let results = merge_partials(
-                                index.metric(),
-                                vec![done.acc],
-                                done.job.query.top_k,
-                            );
-                            let latency_us =
-                                done.job.submitted.elapsed().as_secs_f64() * 1e6;
-                            metrics.record_query(latency_us, done.n_candidates);
-                            Ok(QueryResponse {
-                                id: done.job.query.id,
-                                results,
-                                latency_us,
-                                n_candidates: done.n_candidates,
+                            let opts = &job.request.query.opts;
+                            let fallback = stats.candidates_examined == 0
+                                && opts.exact_fallback
+                                && !index.is_empty();
+                            let results = if fallback {
+                                stats.exact_fallback = true;
+                                stats.reranked += index.len();
+                                index.exact_search(&job.request.query.tensor, opts.k)
+                            } else {
+                                Ok(merge_hits(
+                                    index.metric(),
+                                    &opts.rerank,
+                                    vec![acc],
+                                    opts.k,
+                                ))
+                            };
+                            results.map(|results| {
+                                let latency_us =
+                                    job.submitted.elapsed().as_secs_f64() * 1e6;
+                                metrics.record_query(latency_us, &stats);
+                                QueryResponse {
+                                    id: job.request.id,
+                                    results,
+                                    latency_us,
+                                    stats,
+                                }
                             })
                         }
                     };
-                    if out_tx.send(resp).is_err() {
+                    if out_tx.send((job.request.id, resp)).is_err() {
                         break;
                     }
                 }
@@ -254,8 +292,9 @@ impl Coordinator {
 
         // Hash stage: forms batches and computes per-table signatures for
         // the whole batch at once — one PJRT artifact execution, or one
-        // native `project_batch` pass per table — then scatters each query
-        // to every worker under a fresh ticket.
+        // native `project_batch` pass per table (per-query probe budgets
+        // included) — then scatters each query to every worker under a
+        // fresh ticket.
         {
             let index = Arc::clone(&index);
             let metrics = Arc::clone(&metrics);
@@ -279,12 +318,35 @@ impl Coordinator {
                 // serves: buffers grow to the high-water batch once, then
                 // steady-state hashing allocates nothing (§Layout).
                 let mut scratch = HashScratch::new();
+                let mut warned_probe_override = false;
                 while let Some(batch) = drain_batch(&in_rx, &batcher) {
                     metrics.record_batch(batch.len());
                     let jobs = match (&backend, engine_state.as_mut()) {
                         (HashBackend::Pjrt(p), Some(engine)) => {
                             match hash_batch_pjrt(engine, p, &batch) {
-                                Ok(jobs) => jobs,
+                                Ok(jobs) => {
+                                    // Warn only when PJRT actually hashed
+                                    // the batch — the native fallback below
+                                    // honors the override. The start()
+                                    // warning only covers a nonzero index
+                                    // default; an explicit per-query
+                                    // override deserves its own signal
+                                    // (once).
+                                    if !warned_probe_override
+                                        && jobs.iter().any(|j| {
+                                            j.request.query.opts.probes.unwrap_or(0) > 0
+                                        })
+                                    {
+                                        warned_probe_override = true;
+                                        eprintln!(
+                                            "coordinator: per-query probe overrides are \
+                                             ignored on the PJRT hash path (exact-bucket \
+                                             signatures only); use the native backend \
+                                             for multiprobe"
+                                        );
+                                    }
+                                    jobs
+                                }
                                 Err(err) => {
                                     eprintln!(
                                         "coordinator: PJRT hash failed: {err}; \
@@ -307,11 +369,17 @@ impl Coordinator {
             }));
         }
 
-        Coordinator { input: Some(in_tx), output: out_rx, metrics, threads }
+        Coordinator {
+            input: Some(in_tx),
+            output: out_rx,
+            metrics,
+            threads,
+            sync_ticket: std::cell::Cell::new(SYNC_ID_BASE),
+        }
     }
 
     /// Enqueue a query.
-    pub fn submit(&self, q: Query) -> Result<()> {
+    pub fn submit(&self, q: QueryRequest) -> Result<()> {
         self.input
             .as_ref()
             .ok_or_else(|| Error::Coordinator("coordinator already closed".into()))?
@@ -321,7 +389,57 @@ impl Coordinator {
 
     /// Receive the next response (blocking; `None` after shutdown drains).
     pub fn recv(&self) -> Option<Result<QueryResponse>> {
-        self.output.recv().ok()
+        self.output.recv().ok().map(|(_, r)| r)
+    }
+
+    /// Serve one [`Query`] synchronously through the pipeline. Must not be
+    /// interleaved with outstanding [`Coordinator::submit`]s (responses to
+    /// caller-submitted ids may be discarded). Pipelined callers use
+    /// `submit`/`recv`.
+    pub fn query(&self, q: &Query) -> Result<SearchResponse> {
+        Ok(self.query_batch(std::slice::from_ref(q))?.remove(0))
+    }
+
+    /// Serve a batch of [`Query`]s synchronously; `out[b]` answers `qs[b]`.
+    /// Responses are matched by an internal id, and responses left over
+    /// from an earlier errored batch are discarded — same interleaving
+    /// caveat as [`Coordinator::query`].
+    pub fn query_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        let base = self.sync_ticket.get();
+        self.sync_ticket.set(base + qs.len() as u64);
+        for (i, q) in qs.iter().enumerate() {
+            self.submit(QueryRequest::with_query(base + i as u64, q.clone()))?;
+        }
+        let mut out: Vec<Option<SearchResponse>> = (0..qs.len()).map(|_| None).collect();
+        let mut filled = 0usize;
+        while filled < qs.len() {
+            match self.output.recv() {
+                Ok((id, result)) => {
+                    let i = id.wrapping_sub(base) as usize;
+                    if i >= out.len() {
+                        // Stale response (Ok or Err) from an earlier
+                        // aborted batch — drop it and keep draining.
+                        continue;
+                    }
+                    let resp = result?;
+                    if out[i].is_none() {
+                        out[i] = Some(SearchResponse {
+                            hits: resp.results,
+                            stats: resp.stats,
+                        });
+                        filled += 1;
+                    }
+                }
+                Err(_) => {
+                    return Err(Error::Coordinator(
+                        "pipeline closed before all responses arrived".into(),
+                    ))
+                }
+            }
+        }
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| Error::Coordinator("response missing from batch".into())))
+            .collect()
     }
 
     /// Metrics handle.
@@ -347,7 +465,7 @@ impl Coordinator {
         index: Arc<ShardedLshIndex>,
         cfg: CoordinatorConfig,
         backend: HashBackend,
-        queries: Vec<Query>,
+        queries: Vec<QueryRequest>,
     ) -> Result<(Vec<QueryResponse>, MetricsSnapshot)> {
         let n = queries.len();
         let coord = Coordinator::start(index, cfg, backend);
@@ -367,31 +485,45 @@ impl Coordinator {
     }
 }
 
+impl Searcher for Coordinator {
+    fn search(&self, q: &Query) -> Result<SearchResponse> {
+        self.query(q)
+    }
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        self.query_batch(qs)
+    }
+}
+
 /// Native batched hashing: one flat `project_batch_into` pass per table for
-/// the whole batch (see [`ShardedLshIndex::signatures_batch_with`]),
-/// including multiprobe signatures when the index is configured with
-/// probes. The query tensors are moved out and back rather than cloned, and
-/// the projection/code buffers live in the caller's reusable arena — this
-/// runs per batch on the serving hot path.
+/// the whole batch (see [`ShardedLshIndex::signatures_batch_probes`]),
+/// honoring every query's probe override. The query tensors are moved out
+/// and back rather than cloned, and the projection/code buffers live in the
+/// caller's reusable arena — this runs per batch on the serving hot path.
 fn hash_batch_native(
     index: &ShardedLshIndex,
-    batch: Vec<(Query, Instant)>,
+    batch: Vec<(QueryRequest, Instant)>,
     scratch: &mut HashScratch,
 ) -> Vec<QueryJob> {
     let mut metas = Vec::with_capacity(batch.len());
     let mut tensors = Vec::with_capacity(batch.len());
-    for (q, t0) in batch {
-        let Query { id, tensor, top_k } = q;
-        metas.push((id, top_k, t0));
+    for (req, t0) in batch {
+        let QueryRequest { id, query } = req;
+        let Query { tensor, opts } = query;
+        metas.push((id, opts, t0));
         tensors.push(tensor);
     }
-    let sigs_batch = index.signatures_batch_with(&tensors, scratch);
+    let probes: Vec<usize> = metas
+        .iter()
+        .map(|(_, opts, _)| opts.probes.unwrap_or(index.probes()))
+        .collect();
+    let sigs_batch = index.signatures_batch_probes(&tensors, &probes, scratch);
     metas
         .into_iter()
         .zip(tensors)
         .zip(sigs_batch)
-        .map(|(((id, top_k, submitted), tensor), sigs)| QueryJob {
-            query: Query { id, tensor, top_k },
+        .map(|(((id, opts, submitted), tensor), sigs)| QueryJob {
+            request: QueryRequest { id, query: Query { tensor, opts } },
             sigs,
             submitted,
         })
@@ -399,15 +531,17 @@ fn hash_batch_native(
 }
 
 /// PJRT hashing: execute the artifact over the batch (in manifest-batch
-/// chunks) and band the K codes into one exact signature per table.
+/// chunks) and band the K codes into one exact signature per table
+/// (per-query probe overrides do not apply on this path — see
+/// [`HashBackend::Pjrt`]).
 fn hash_batch_pjrt(
     engine: &mut PjrtEngine,
     params: &PjrtServingParams,
-    batch: &[(Query, Instant)],
+    batch: &[(QueryRequest, Instant)],
 ) -> Result<Vec<QueryJob>> {
     let cp_batch: Vec<CpTensor> = batch
         .iter()
-        .map(|(q, _)| match &q.tensor {
+        .map(|(q, _)| match &q.query.tensor {
             AnyTensor::Cp(t) => Ok(t.clone()),
             other => Err(Error::InvalidParameter(format!(
                 "PJRT cp backend needs CP queries, got {}",
@@ -444,7 +578,7 @@ fn hash_batch_pjrt(
     Ok(batch
         .iter()
         .zip(sigs_per_query)
-        .map(|((q, t0), sigs)| QueryJob { query: q.clone(), sigs, submitted: *t0 })
+        .map(|((q, t0), sigs)| QueryJob { request: q.clone(), sigs, submitted: *t0 })
         .collect())
 }
 
@@ -452,6 +586,7 @@ fn hash_batch_pjrt(
 mod tests {
     use super::*;
     use crate::lsh::{CoordinatorBuilder, FamilyKind};
+    use crate::query::QueryOpts;
     use crate::workload::{low_rank_corpus, DatasetSpec};
 
     fn build_index(dims: Vec<usize>, n_items: usize, n_shards: usize) -> Arc<ShardedLshIndex> {
@@ -473,8 +608,8 @@ mod tests {
     #[test]
     fn native_trace_roundtrip() {
         let index = build_index(vec![6, 6, 6], 150, 4);
-        let queries: Vec<Query> = (0..40)
-            .map(|i| Query::new(i, index.item((i as usize * 3) % 150), 5))
+        let queries: Vec<QueryRequest> = (0..40)
+            .map(|i| QueryRequest::new(i, index.item((i as usize * 3) % 150), 5))
             .collect();
         let (responses, snap) = Coordinator::serve_trace(
             Arc::clone(&index),
@@ -485,9 +620,12 @@ mod tests {
         .unwrap();
         assert_eq!(responses.len(), 40);
         assert_eq!(snap.queries, 40);
-        // Every response's top hit must be the query itself (items queried).
+        // Every response's top hit must be the query itself (items queried),
+        // and the stats must account for the re-ranked candidates.
         for r in &responses {
             assert_eq!(r.results[0].id, (r.id as usize * 3) % 150, "resp {}", r.id);
+            assert_eq!(r.stats.reranked, r.stats.candidates_examined);
+            assert!(!r.stats.exact_fallback);
         }
     }
 
@@ -509,23 +647,26 @@ mod tests {
         assert_eq!(serving.config().batcher.max_batch, 16);
         let index = serving.build_index(items.clone()).unwrap();
         assert_eq!(index.n_shards(), 4);
-        let queries: Vec<Query> =
-            (0..20).map(|i| Query::new(i, index.item(i as usize % 120), 5)).collect();
+        let queries: Vec<QueryRequest> = (0..20)
+            .map(|i| QueryRequest::new(i, index.item(i as usize % 120), 5))
+            .collect();
         let (responses, snap) = serving.serve_trace(Arc::clone(&index), queries).unwrap();
         assert_eq!(responses.len(), 20);
         assert_eq!(snap.queries, 20);
         // Coordinator responses equal offline sharded search.
+        let opts = QueryOpts::top_k(5);
         for r in &responses {
-            let offline = index.search(&index.item(r.id as usize % 120), 5).unwrap();
-            assert_eq!(r.results, offline, "resp {}", r.id);
+            let offline =
+                index.query_with(&index.item(r.id as usize % 120), &opts).unwrap();
+            assert_eq!(r.results, offline.hits, "resp {}", r.id);
         }
     }
 
     #[test]
-    fn coordinator_matches_offline_sharded_search() {
+    fn coordinator_matches_offline_sharded_query() {
         let index = build_index(vec![6, 6, 6], 200, 5);
-        let queries: Vec<Query> = (0..32)
-            .map(|i| Query::new(i, index.item((i as usize * 5) % 200), 7))
+        let queries: Vec<QueryRequest> = (0..32)
+            .map(|i| QueryRequest::new(i, index.item((i as usize * 5) % 200), 7))
             .collect();
         let (responses, _) = Coordinator::serve_trace(
             Arc::clone(&index),
@@ -535,9 +676,77 @@ mod tests {
         )
         .unwrap();
         for r in &responses {
-            let offline = index.search(&queries[r.id as usize].tensor, 7).unwrap();
-            assert_eq!(r.results, offline, "resp {}", r.id);
+            let offline = index.query(&queries[r.id as usize].query).unwrap();
+            assert_eq!(r.results, offline.hits, "resp {}", r.id);
+            assert_eq!(
+                r.stats.candidates_generated,
+                offline.stats.candidates_generated,
+                "resp {}",
+                r.id
+            );
         }
+    }
+
+    #[test]
+    fn per_query_opts_flow_through_the_pipeline() {
+        let index = build_index(vec![6, 6, 6], 150, 4);
+        // Probe override: more probes than the index default (0) must
+        // generate at least as many candidates as the exact-bucket query.
+        let tensor = index.item(9);
+        let exact_req = QueryRequest::with_query(0, Query::new(tensor.clone(), 5));
+        let probed_req = QueryRequest::with_query(1, Query::new(tensor.clone(), 5).probes(4));
+        // Signature-only: no inner products at all.
+        let sig_req = QueryRequest::with_query(
+            2,
+            Query::new(tensor.clone(), 5).rerank(crate::query::RerankPolicy::SignatureOnly),
+        );
+        let (responses, snap) = Coordinator::serve_trace(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+            vec![exact_req, probed_req, sig_req],
+        )
+        .unwrap();
+        let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+        assert!(by_id(1).stats.probes_used > 0);
+        assert_eq!(by_id(0).stats.probes_used, 0);
+        assert!(
+            by_id(1).stats.candidates_generated >= by_id(0).stats.candidates_generated
+        );
+        assert_eq!(by_id(2).stats.reranked, 0, "signature-only never reranks");
+        // The self-query collides in every table, so it sits in the
+        // signature-only top-k (ties with other full-collision items break
+        // by id).
+        assert!(by_id(2).results.iter().any(|h| h.id == 9));
+        // The per-query stats land in the serving metrics.
+        assert!(snap.mean_probes > 0.0);
+        // Offline sharded query agrees with the pipeline per id.
+        let offline = index
+            .query_with(&tensor, &crate::query::QueryOpts::top_k(5).with_probes(4))
+            .unwrap();
+        assert_eq!(by_id(1).results, offline.hits);
+    }
+
+    #[test]
+    fn coordinator_implements_searcher() {
+        let index = build_index(vec![5, 5, 5], 80, 4);
+        let coord = Coordinator::start(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+        );
+        fn top1<S: Searcher>(s: &S, q: &Query) -> usize {
+            s.search(q).unwrap().hits[0].id
+        }
+        let q = Query::new(index.item(11), 3);
+        assert_eq!(top1(&coord, &q), 11);
+        let qs: Vec<Query> = (0..6).map(|i| Query::new(index.item(i * 5), 3)).collect();
+        let batch = coord.query_batch(&qs).unwrap();
+        for (i, resp) in batch.iter().enumerate() {
+            assert_eq!(resp.hits[0].id, i * 5, "batch slot {i}");
+            assert_eq!(resp.hits, index.query(&qs[i]).unwrap().hits);
+        }
+        coord.shutdown();
     }
 
     #[test]
@@ -548,7 +757,7 @@ mod tests {
             CoordinatorConfig::default(),
             HashBackend::Native,
         );
-        coord.submit(Query::new(0, index.item(0), 1)).unwrap();
+        coord.submit(QueryRequest::new(0, index.item(0), 1)).unwrap();
         let _ = coord.recv().unwrap().unwrap();
         let snap = coord.shutdown();
         assert_eq!(snap.queries, 1);
@@ -557,8 +766,8 @@ mod tests {
     #[test]
     fn responses_preserve_ids_under_concurrency() {
         let index = build_index(vec![5, 5, 5], 100, 8);
-        let queries: Vec<Query> = (0..64)
-            .map(|i| Query::new(1000 + i, index.item(i as usize % 100), 3))
+        let queries: Vec<QueryRequest> = (0..64)
+            .map(|i| QueryRequest::new(1000 + i, index.item(i as usize % 100), 3))
             .collect();
         let (responses, _) = Coordinator::serve_trace(
             index,
@@ -575,8 +784,9 @@ mod tests {
     #[test]
     fn more_workers_than_shards_is_clamped() {
         let index = build_index(vec![5, 5], 60, 2);
-        let queries: Vec<Query> =
-            (0..20).map(|i| Query::new(i, index.item(i as usize % 60), 3)).collect();
+        let queries: Vec<QueryRequest> = (0..20)
+            .map(|i| QueryRequest::new(i, index.item(i as usize % 60), 3))
+            .collect();
         let (responses, snap) = Coordinator::serve_trace(
             index,
             CoordinatorConfig { n_workers: 16, ..Default::default() },

@@ -2,11 +2,14 @@
 //!
 //! Classic Indyk–Motwani construction: `L` tables, each keyed by a `K`-hash
 //! signature from an independently seeded family; a query probes its bucket
-//! in every table, the candidate union is exactly re-ranked. Multiprobe
-//! (query-directed for E2LSH, lowest-margin bit flips for SRP) trades extra
-//! probes for fewer tables — an extension feature ablated in the benches.
+//! in every table, the candidate union is re-ranked per the query's
+//! [`RerankPolicy`]. Multiprobe (query-directed for E2LSH, lowest-margin
+//! bit flips for SRP) trades extra probes for fewer tables; the probe
+//! budget is a *call-time* knob ([`QueryOpts::probes`]) with the spec's
+//! `probes` as the default.
 //!
-//! Two index structures share the table/re-rank machinery:
+//! Two index structures share the table/re-rank machinery and both
+//! implement [`crate::query::Searcher`]:
 //!
 //! * [`LshIndex`] — the single-shard reference structure (`&mut self`
 //!   inserts). Simple, deterministic, and the ground truth the sharded
@@ -16,6 +19,12 @@
 //!   run lock-free-in-practice across coordinator workers, and re-ranking
 //!   fans out shard-by-shard. Batched hashing enters through
 //!   [`crate::lsh::HashFamily::hash_batch`].
+//!
+//! The query entry points are `query`/`query_with`/`query_batch` (unified
+//! [`Query`] in, [`SearchResponse`] with [`crate::query::SearchStats`]
+//! out); the legacy `search`/`search_batch`/`shard_search` methods are thin
+//! deprecated wrappers over a default `Query`, bit-identical by
+//! construction (`tests/query_api.rs`).
 
 mod codes;
 mod multiprobe;
@@ -31,6 +40,7 @@ use crate::error::{Error, Result};
 use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::projection::ProjectionMatrix;
+use crate::query::{Query, QueryOpts, RerankPolicy, SearchResponse, SearchStats, Searcher};
 use crate::tensor::AnyTensor;
 use std::sync::Arc;
 
@@ -61,55 +71,62 @@ impl Metric {
     }
 }
 
+/// Where a config's per-table families come from.
+#[derive(Clone)]
+enum FamilySource {
+    /// Prebuilt families off a declarative spec (banded specs generate
+    /// their full-width bank exactly once).
+    Built(Vec<Arc<dyn HashFamily>>),
+    /// Legacy escape hatch: a hand-rolled closure building table `t`'s
+    /// family. Not serializable; kept only for families a spec cannot
+    /// express.
+    Closure(Arc<dyn Fn(usize) -> Arc<dyn HashFamily> + Send + Sync>),
+}
+
 /// Index configuration.
 ///
 /// Construct it with [`IndexConfig::from_spec`] (or skip it entirely via
-/// [`LshIndex::from_spec`] / [`ShardedLshIndex::from_spec`]); the closure
-/// field is the legacy escape hatch for families a spec cannot express.
+/// [`LshIndex::from_spec`] / [`ShardedLshIndex::from_spec`]); the
+/// deprecated [`IndexConfig::from_family_builder`] is the legacy escape
+/// hatch for families a spec cannot express.
 #[derive(Clone)]
 pub struct IndexConfig {
-    /// Builds the hash family for table `t` (independent seeds per table).
-    #[deprecated(
-        since = "0.2.0",
-        note = "hand-rolled closures are not serializable; build the config \
-                from an lsh::spec::LshSpec via IndexConfig::from_spec"
-    )]
-    pub family_builder: Arc<dyn Fn(usize) -> Arc<dyn HashFamily> + Send + Sync>,
+    source: FamilySource,
     /// Number of tables L.
     pub n_tables: usize,
     /// Re-ranking metric.
     pub metric: Metric,
-    /// Multiprobe extra probes per table (0 = exact-bucket only).
+    /// Default multiprobe extra probes per table (0 = exact-bucket only);
+    /// queries may override per call via [`QueryOpts::probes`].
     pub probes: usize,
 }
 
 impl IndexConfig {
-    /// The closure-based config, built *from* a declarative spec. The L
-    /// table families are instantiated once up front via
-    /// [`LshSpec::families`] (banded specs generate their full-width bank
-    /// exactly once) and the closure just hands out shared clones.
-    ///
-    /// The closure serves exactly tables `0..spec.l`; raising `n_tables`
-    /// by hand afterwards panics with a descriptive message (a spec-built
-    /// config has no family to offer beyond its spec).
+    /// Config built *from* a declarative spec. The L table families are
+    /// instantiated once up front via [`LshSpec::families`].
     pub fn from_spec(spec: &LshSpec) -> Result<IndexConfig> {
-        let families = spec.families()?;
-        #[allow(deprecated)]
-        let cfg = IndexConfig {
-            family_builder: Arc::new(move |t| {
-                families.get(t).cloned().unwrap_or_else(|| {
-                    panic!(
-                        "table {t} out of range: this config was built from a spec \
-                         with l = {} tables",
-                        families.len()
-                    )
-                })
-            }),
+        Ok(IndexConfig {
+            source: FamilySource::Built(spec.families()?),
             n_tables: spec.l,
             metric: spec.family.metric,
             probes: spec.probes,
-        };
-        Ok(cfg)
+        })
+    }
+
+    /// Legacy closure-based construction: `family_builder(t)` yields table
+    /// `t`'s family.
+    #[deprecated(
+        since = "0.3.0",
+        note = "hand-rolled closures are not serializable; build the config \
+                from an lsh::spec::LshSpec via IndexConfig::from_spec"
+    )]
+    pub fn from_family_builder(
+        family_builder: Arc<dyn Fn(usize) -> Arc<dyn HashFamily> + Send + Sync>,
+        n_tables: usize,
+        metric: Metric,
+        probes: usize,
+    ) -> IndexConfig {
+        IndexConfig { source: FamilySource::Closure(family_builder), n_tables, metric, probes }
     }
 }
 
@@ -117,7 +134,8 @@ impl IndexConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct SearchResult {
     pub id: usize,
-    /// Distance (Euclidean metric) or similarity (cosine metric).
+    /// Distance (Euclidean metric), similarity (cosine metric), or bucket
+    /// collision count ([`RerankPolicy::SignatureOnly`]).
     pub score: f64,
 }
 
@@ -140,9 +158,22 @@ pub(crate) fn build_families(cfg: &IndexConfig) -> Result<Vec<Arc<dyn HashFamily
     if cfg.n_tables == 0 {
         return Err(Error::InvalidParameter("n_tables must be ≥ 1".into()));
     }
-    #[allow(deprecated)]
-    let families: Vec<Arc<dyn HashFamily>> =
-        (0..cfg.n_tables).map(|t| (cfg.family_builder)(t)).collect();
+    let families: Vec<Arc<dyn HashFamily>> = match &cfg.source {
+        FamilySource::Built(families) => {
+            // Lowering n_tables after from_spec is a supported ablation
+            // (use the first n families); raising it is an error — a
+            // spec-built config has no family to offer beyond its spec.
+            if families.len() < cfg.n_tables {
+                return Err(Error::InvalidParameter(format!(
+                    "n_tables {} exceeds the {} families the spec built",
+                    cfg.n_tables,
+                    families.len()
+                )));
+            }
+            families[..cfg.n_tables].to_vec()
+        }
+        FamilySource::Closure(builder) => (0..cfg.n_tables).map(|t| builder(t)).collect(),
+    };
     let metric_ok = match cfg.metric {
         Metric::Euclidean => families.iter().all(|f| f.is_euclidean()),
         Metric::Cosine => families.iter().all(|f| !f.is_euclidean()),
@@ -178,13 +209,210 @@ pub(crate) fn score_candidate(
     }
 }
 
-/// Order results best-first for the metric (ascending distance, descending
-/// similarity).
-pub(crate) fn sort_results(metric: Metric, scored: &mut [SearchResult]) {
-    match metric {
-        Metric::Euclidean => scored.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap()),
-        Metric::Cosine => scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap()),
+/// Order results best-first for (metric, policy): ascending distance,
+/// descending similarity, descending collision count under
+/// [`RerankPolicy::SignatureOnly`]. Ties break by ascending id, so the
+/// ordering is total and deterministic even under duplicate scores.
+pub(crate) fn sort_hits(metric: Metric, rerank: &RerankPolicy, scored: &mut [SearchResult]) {
+    let descending =
+        matches!(rerank, RerankPolicy::SignatureOnly) || metric == Metric::Cosine;
+    if descending {
+        scored.sort_by(|a, b| {
+            b.score.partial_cmp(&a.score).unwrap().then_with(|| a.id.cmp(&b.id))
+        });
+    } else {
+        scored.sort_by(|a, b| {
+            a.score.partial_cmp(&b.score).unwrap().then_with(|| a.id.cmp(&b.id))
+        });
     }
+}
+
+/// [`sort_hits`] under the default exact policy.
+pub(crate) fn sort_results(metric: Metric, scored: &mut [SearchResult]) {
+    sort_hits(metric, &RerankPolicy::Exact, scored);
+}
+
+/// Merge per-unit top-k partials into the global top-k under the query's
+/// ordering (see [`merge_partials`] for the exact-policy convenience).
+/// Because units partition the corpus, the union of per-unit top-k lists
+/// contains every global top-k member; one sort + truncate finishes.
+pub fn merge_hits(
+    metric: Metric,
+    rerank: &RerankPolicy,
+    partials: Vec<Vec<SearchResult>>,
+    k: usize,
+) -> Vec<SearchResult> {
+    let mut merged: Vec<SearchResult> = partials.into_iter().flatten().collect();
+    sort_hits(metric, rerank, &mut merged);
+    merged.truncate(k);
+    merged
+}
+
+/// Per-table signature lists for one query: the exact bucket signature
+/// first, then up to `probes` multiprobe extras (family-specific).
+pub(crate) fn table_signatures(
+    families: &[Arc<dyn HashFamily>],
+    q: &AnyTensor,
+    probes: usize,
+) -> Vec<Vec<u64>> {
+    families
+        .iter()
+        .map(|fam| {
+            let z = fam.project(q);
+            let codes = fam.discretize(&z);
+            let mut sigs = vec![signature(&codes)];
+            if probes > 0 {
+                sigs.extend(fam.probe_signatures(&codes, &z, probes));
+            }
+            sigs
+        })
+        .collect()
+}
+
+/// Batched [`table_signatures`] with a per-query probe budget: one flat
+/// [`HashFamily::project_batch_into`] pass per table for the whole batch,
+/// projections landing in the caller's reusable [`HashScratch`] arena.
+/// `out[b][t]` lists table `t`'s signatures for query `b`.
+pub(crate) fn table_signatures_batch(
+    families: &[Arc<dyn HashFamily>],
+    qs: &[AnyTensor],
+    probes: &[usize],
+    scratch: &mut HashScratch,
+) -> Vec<Vec<Vec<u64>>> {
+    debug_assert_eq!(qs.len(), probes.len());
+    let mut out: Vec<Vec<Vec<u64>>> = (0..qs.len())
+        .map(|_| Vec::with_capacity(families.len()))
+        .collect();
+    for fam in families {
+        fam.project_batch_into(qs, &mut scratch.z);
+        scratch.codes.clear();
+        scratch.codes.resize(fam.k(), 0);
+        for (b, sigs_out) in out.iter_mut().enumerate() {
+            let z = scratch.z.row(b);
+            fam.discretize_into(z, &mut scratch.codes);
+            let mut sigs = vec![signature(&scratch.codes)];
+            if probes[b] > 0 {
+                sigs.extend(fam.probe_signatures(&scratch.codes, z, probes[b]));
+            }
+            sigs_out.push(sigs);
+        }
+    }
+    out
+}
+
+/// One signature list per table, or a typed error — the out-of-band query
+/// entry points check this instead of silently zip-truncating (a caller
+/// hashing against a different spec would otherwise probe fewer tables
+/// and report probe stats for work never done).
+pub(crate) fn check_table_signatures(sigs: usize, tables: usize) -> Result<()> {
+    if sigs != tables {
+        return Err(Error::InvalidParameter(format!(
+            "expected {tables} per-table signature lists (one per table), got {sigs}"
+        )));
+    }
+    Ok(())
+}
+
+/// Gather candidate slots for per-table signature lists over one probing
+/// unit (`n_slots` local slots): candidates in first-occurrence order (or
+/// with multiplicity when `dedup` is off), capped at `max_candidates`.
+/// Generation stats land in `stats`.
+///
+/// Collision counts are only consulted by the `SignatureOnly`/`Budgeted`
+/// policies, so the returned counts vec is **empty** under `Exact` — the
+/// default policy keeps the cheaper one-byte seen bitmap (4× less zeroed
+/// memory per query on large units).
+pub(crate) fn gather_candidates(
+    tables: &[HashTable],
+    n_slots: usize,
+    sigs: &[Vec<u64>],
+    opts: &QueryOpts,
+    stats: &mut SearchStats,
+) -> (Vec<u32>, Vec<u32>) {
+    let need_counts = !matches!(opts.rerank, RerankPolicy::Exact);
+    let mut counts: Vec<u32> = if need_counts { vec![0; n_slots] } else { Vec::new() };
+    let mut seen: Vec<bool> =
+        if !need_counts && opts.dedup { vec![false; n_slots] } else { Vec::new() };
+    let mut cand: Vec<u32> = Vec::new();
+    for (table, tsigs) in tables.iter().zip(sigs) {
+        let mut hit = false;
+        for &sig in tsigs {
+            for &slot in table.bucket(sig) {
+                hit = true;
+                let s = slot as usize;
+                if need_counts {
+                    if counts[s] == 0 || !opts.dedup {
+                        cand.push(slot);
+                    }
+                    counts[s] = counts[s].saturating_add(1);
+                } else if opts.dedup {
+                    if !seen[s] {
+                        seen[s] = true;
+                        cand.push(slot);
+                    }
+                } else {
+                    cand.push(slot);
+                }
+            }
+        }
+        if hit {
+            stats.tables_hit += 1;
+        }
+    }
+    stats.candidates_generated += cand.len();
+    if let Some(cap) = opts.max_candidates {
+        if cand.len() > cap {
+            cand.truncate(cap);
+        }
+    }
+    stats.candidates_examined += cand.len();
+    (cand, counts)
+}
+
+/// Score and rank one probing unit's candidates per the query's
+/// [`RerankPolicy`], returning its best-first top-k. `score` exactly
+/// scores a local slot; `id_of` maps a slot to its global id; `counts`
+/// comes from [`gather_candidates`] and is only consulted (and only
+/// populated) for the `SignatureOnly`/`Budgeted` policies. Both index
+/// structures re-rank through this, so their hits are identical.
+pub(crate) fn rerank_with_policy<S, I>(
+    metric: Metric,
+    opts: &QueryOpts,
+    mut cand: Vec<u32>,
+    counts: &[u32],
+    score: S,
+    id_of: I,
+    stats: &mut SearchStats,
+) -> Result<Vec<SearchResult>>
+where
+    S: Fn(u32) -> Result<f64>,
+    I: Fn(u32) -> usize,
+{
+    let mut scored: Vec<SearchResult> = match opts.rerank {
+        RerankPolicy::SignatureOnly => cand
+            .iter()
+            .map(|&s| SearchResult { id: id_of(s), score: counts[s as usize] as f64 })
+            .collect(),
+        RerankPolicy::Exact => {
+            stats.reranked += cand.len();
+            cand.iter()
+                .map(|&s| Ok(SearchResult { id: id_of(s), score: score(s)? }))
+                .collect::<Result<_>>()?
+        }
+        RerankPolicy::Budgeted(n) => {
+            // Most-collisions-first; the stable sort keeps candidate-
+            // generation order among equal counts.
+            cand.sort_by(|&a, &b| counts[b as usize].cmp(&counts[a as usize]));
+            cand.truncate(n);
+            stats.reranked += cand.len();
+            cand.iter()
+                .map(|&s| Ok(SearchResult { id: id_of(s), score: score(s)? }))
+                .collect::<Result<_>>()?
+        }
+    };
+    sort_hits(metric, &opts.rerank, &mut scored);
+    scored.truncate(opts.k);
+    Ok(scored)
 }
 
 /// Reusable scratch for the flat batched hash path: the projection arena
@@ -231,6 +459,17 @@ impl LshIndex {
     /// Number of tables L.
     pub fn n_tables(&self) -> usize {
         self.tables.len()
+    }
+
+    /// Re-ranking metric.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Default multiprobe extras per table (the build-time spec value;
+    /// queries override per call via [`QueryOpts::probes`]).
+    pub fn probes(&self) -> usize {
+        self.probes
     }
 
     /// Access an indexed item.
@@ -299,30 +538,19 @@ impl LshIndex {
         LshIndex::build(&IndexConfig::from_spec(spec)?, items)
     }
 
-    /// Candidate ids for a query (deduplicated, unranked).
+    /// Candidate ids for a query at the index's default probe budget
+    /// (deduplicated, unranked, generation order).
     pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
-        let mut seen = vec![false; self.items.len()];
-        let mut out = Vec::new();
-        for (fam, table) in self.families.iter().zip(&self.tables) {
-            let z = fam.project(q);
-            let codes = fam.discretize(&z);
-            let mut sigs = vec![signature(&codes)];
-            if self.probes > 0 {
-                // Family-specific multiprobe (exact boundary distances for
-                // E2LSH, sign margins for SRP).
-                sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
-            }
-            for sig in sigs {
-                for &id in table.bucket(sig) {
-                    let id = id as usize;
-                    if !seen[id] {
-                        seen[id] = true;
-                        out.push(id);
-                    }
-                }
-            }
-        }
-        out
+        let sigs = table_signatures(&self.families, q, self.probes);
+        let mut stats = SearchStats::default();
+        let (cand, _) = gather_candidates(
+            &self.tables,
+            self.items.len(),
+            &sigs,
+            &QueryOpts::top_k(0),
+            &mut stats,
+        );
+        cand.into_iter().map(|s| s as usize).collect()
     }
 
     /// The per-table hash families (the coordinator's hash stage computes
@@ -356,7 +584,105 @@ impl LshIndex {
         out
     }
 
+    // -- unified query API -------------------------------------------------
+
+    /// Answer a [`Query`]: probe (per-query budget), gather, re-rank per
+    /// policy, with full [`crate::query::SearchStats`] in the response.
+    pub fn query(&self, q: &Query) -> Result<SearchResponse> {
+        self.query_with(&q.tensor, &q.opts)
+    }
+
+    /// [`LshIndex::query`] over a borrowed tensor — the allocation-free
+    /// form hot loops and the deprecated wrappers use.
+    pub fn query_with(&self, tensor: &AnyTensor, opts: &QueryOpts) -> Result<SearchResponse> {
+        let probes = opts.probes.unwrap_or(self.probes);
+        let sigs = table_signatures(&self.families, tensor, probes);
+        self.query_with_table_signatures(tensor, &sigs, opts)
+    }
+
+    /// [`LshIndex::query_with`] from precomputed per-table signature lists
+    /// (exact signature first, then multiprobe extras) — the entry point
+    /// for out-of-band hashing. The list length must match the table
+    /// count (typed error, not silent truncation: out-of-band hashers can
+    /// legitimately disagree with the index about L).
+    pub fn query_with_table_signatures(
+        &self,
+        tensor: &AnyTensor,
+        sigs: &[Vec<u64>],
+        opts: &QueryOpts,
+    ) -> Result<SearchResponse> {
+        check_table_signatures(sigs.len(), self.tables.len())?;
+        let mut stats = SearchStats {
+            probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
+            ..SearchStats::default()
+        };
+        let (cand, counts) =
+            gather_candidates(&self.tables, self.items.len(), sigs, opts, &mut stats);
+        let qn = tensor.frob_norm();
+        let mut hits = rerank_with_policy(
+            self.metric,
+            opts,
+            cand,
+            &counts,
+            |s| {
+                score_candidate(
+                    self.metric,
+                    &self.items[s as usize],
+                    self.norms[s as usize],
+                    tensor,
+                    qn,
+                )
+            },
+            |s| s as usize,
+            &mut stats,
+        )?;
+        if stats.candidates_examined == 0 && opts.exact_fallback && !self.items.is_empty() {
+            stats.exact_fallback = true;
+            stats.reranked += self.items.len();
+            hits = self.exact_search(tensor, opts.k)?;
+        }
+        Ok(SearchResponse { hits, stats })
+    }
+
+    /// Batched [`LshIndex::query`]: one flat projection pass per table for
+    /// the whole batch (per-query probe budgets included). Gathers the
+    /// owned query tensors into one contiguous batch by cloning them; hot
+    /// paths that already hold contiguous tensors should call
+    /// [`LshIndex::query_batch_with`] instead.
+    pub fn query_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        let tensors: Vec<AnyTensor> = qs.iter().map(|q| q.tensor.clone()).collect();
+        let opts: Vec<QueryOpts> = qs.iter().map(|q| q.opts.clone()).collect();
+        self.query_batch_with(&tensors, &opts, &mut HashScratch::new())
+    }
+
+    /// [`LshIndex::query_batch`] over borrowed tensors and a caller-owned
+    /// [`HashScratch`] (steady-state batches allocate nothing in the hash
+    /// stage). `opts.len()` must equal `tensors.len()`.
+    pub fn query_batch_with(
+        &self,
+        tensors: &[AnyTensor],
+        opts: &[QueryOpts],
+        scratch: &mut HashScratch,
+    ) -> Result<Vec<SearchResponse>> {
+        assert_eq!(tensors.len(), opts.len(), "one QueryOpts per tensor");
+        let probes: Vec<usize> =
+            opts.iter().map(|o| o.probes.unwrap_or(self.probes)).collect();
+        let sigs_batch = table_signatures_batch(&self.families, tensors, &probes, scratch);
+        tensors
+            .iter()
+            .zip(opts)
+            .zip(&sigs_batch)
+            .map(|((t, o), sigs)| self.query_with_table_signatures(t, sigs, o))
+            .collect()
+    }
+
+    // -- legacy surface (deprecated wrappers over the query API) -----------
+
     /// k-NN search from precomputed per-table signatures (exact re-rank).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use LshIndex::query_with_table_signatures with a QueryOpts"
+    )]
     pub fn search_with_signatures(
         &self,
         q: &AnyTensor,
@@ -389,9 +715,13 @@ impl LshIndex {
     }
 
     /// k-NN search: probe, union candidates, exact re-rank.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a query::Query (its defaults match this call bit-for-bit) \
+                and use LshIndex::query / the Searcher trait"
+    )]
     pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
-        let cand = self.candidates(q);
-        self.rerank_candidates(q, cand, k)
+        Ok(self.query_with(q, &QueryOpts::top_k(k))?.hits)
     }
 
     /// Exact (linear-scan) k-NN — the ground truth for recall measurements.
@@ -406,7 +736,18 @@ impl LshIndex {
     }
 }
 
-/// Recall@k of approximate results vs exact ground truth.
+impl Searcher for LshIndex {
+    fn search(&self, q: &Query) -> Result<SearchResponse> {
+        self.query(q)
+    }
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        self.query_batch(qs)
+    }
+}
+
+/// Recall@k of approximate results vs exact ground truth. An empty exact
+/// baseline counts as perfect recall (there was nothing to find).
 pub fn recall_at_k(approx: &[SearchResult], exact: &[SearchResult]) -> f64 {
     if exact.is_empty() {
         return 1.0;
@@ -433,7 +774,7 @@ mod tests {
     }
 
     #[test]
-    fn insert_search_finds_self() {
+    fn insert_query_finds_self() {
         let spec = DatasetSpec {
             dims: vec![8, 8, 8],
             n_items: 200,
@@ -448,9 +789,15 @@ mod tests {
         assert_eq!(idx.len(), 200);
         // Querying with an indexed item must return it first (cos = 1).
         for probe_id in [0usize, 42, 199] {
-            let res = idx.search(&items[probe_id], 3).unwrap();
-            assert_eq!(res[0].id, probe_id);
-            assert!((res[0].score - 1.0).abs() < 1e-5);
+            let resp = idx.query_with(&items[probe_id], &QueryOpts::top_k(3)).unwrap();
+            assert_eq!(resp.hits[0].id, probe_id);
+            assert!((resp.hits[0].score - 1.0).abs() < 1e-5);
+            // The stats account for the work: every hit was a candidate
+            // and (under Exact) was re-ranked.
+            assert!(resp.stats.candidates_generated >= resp.hits.len());
+            assert_eq!(resp.stats.candidates_examined, resp.stats.reranked);
+            assert!(resp.stats.tables_hit >= 1);
+            assert_eq!(resp.stats.probes_used, 0);
         }
     }
 
@@ -468,13 +815,14 @@ mod tests {
         let cfg = cosine_config(spec.dims.clone(), 8, 12, 0);
         let idx = LshIndex::build(&cfg, items).unwrap();
         let mut rng = Rng::new(11);
+        let opts = QueryOpts::top_k(10);
         let mut recalls = Vec::new();
         for _ in 0..20 {
             let qid = rng.below(idx.len());
             let q = idx.item(qid).clone();
-            let approx = idx.search(&q, 10).unwrap();
+            let approx = idx.query_with(&q, &opts).unwrap();
             let exact = idx.exact_search(&q, 10).unwrap();
-            recalls.push(recall_at_k(&approx, &exact));
+            recalls.push(recall_at_k(&approx.hits, &exact));
         }
         let mean = recalls.iter().sum::<f64>() / recalls.len() as f64;
         assert!(mean > 0.5, "mean recall {mean}");
@@ -497,12 +845,12 @@ mod tests {
         };
         let (items, _) = low_rank_corpus(&spec);
         let idx = LshIndex::build(&cfg, items.clone()).unwrap();
-        let res = idx.search(&items[7], 1).unwrap();
-        assert_eq!(res[0].id, 7);
-        assert!(res[0].score < 1e-4);
+        let resp = idx.query_with(&items[7], &QueryOpts::top_k(1)).unwrap();
+        assert_eq!(resp.hits[0].id, 7);
+        assert!(resp.hits[0].score < 1e-4);
     }
 
-    /// The deprecated closure escape hatch: a hand-rolled `family_builder`
+    /// The deprecated closure escape hatch: a hand-rolled family builder
     /// can disagree with the declared metric (a spec cannot), and
     /// `build_families` must still catch it.
     #[test]
@@ -510,19 +858,19 @@ mod tests {
     fn metric_family_mismatch_rejected() {
         use crate::lsh::FamilySpec;
         let dims = vec![4usize, 4];
-        let cfg = IndexConfig {
-            family_builder: {
+        let cfg = IndexConfig::from_family_builder(
+            {
                 let dims = dims.clone();
-                Arc::new(move |t| {
+                Arc::new(move |t: usize| {
                     FamilySpec::srp(FamilyKind::Cp, dims.clone(), 2, 4)
                         .build(t as u64)
                         .unwrap()
                 })
             },
-            n_tables: 2,
-            metric: Metric::Euclidean, // SRP is a cosine family -> reject
-            probes: 0,
-        };
+            2,
+            Metric::Euclidean, // SRP is a cosine family -> reject
+            0,
+        );
         assert!(LshIndex::new(&cfg).is_err());
     }
 
@@ -531,6 +879,21 @@ mod tests {
         let bad = LshSpec::cosine(FamilyKind::Cp, vec![8, 8], 4, 0, 4);
         assert!(matches!(LshIndex::from_spec(&bad), Err(Error::InvalidSpec(_))));
         assert!(matches!(IndexConfig::from_spec(&bad), Err(Error::InvalidSpec(_))));
+    }
+
+    #[test]
+    fn spec_built_config_rejects_raised_but_allows_lowered_table_count() {
+        let mut cfg = cosine_config(vec![8, 8], 6, 4, 0);
+        cfg.n_tables = 7; // a spec-built config has no family beyond its spec
+        assert!(matches!(LshIndex::new(&cfg), Err(Error::InvalidParameter(_))));
+        // Lowering is a supported table-count ablation: first n families.
+        cfg.n_tables = 2;
+        let idx = LshIndex::new(&cfg).unwrap();
+        assert_eq!(idx.n_tables(), 2);
+        let full = LshIndex::new(&cosine_config(vec![8, 8], 6, 4, 0)).unwrap();
+        for (a, b) in idx.families().iter().zip(full.families().iter().take(2)) {
+            assert_eq!(a.name(), b.name());
+        }
     }
 
     #[test]
@@ -557,5 +920,79 @@ mod tests {
                 idx4.candidates(&q).into_iter().collect();
             assert!(c0.is_subset(&c4));
         }
+    }
+
+    #[test]
+    fn query_edge_cases_do_not_panic() {
+        // k far beyond the corpus size, k = 0, and the empty index all
+        // return cleanly.
+        let dims = vec![6usize, 6];
+        let cfg = cosine_config(dims.clone(), 6, 4, 0);
+        let empty = LshIndex::new(&cfg).unwrap();
+        let (items, _) = low_rank_corpus(&DatasetSpec {
+            dims,
+            n_items: 5,
+            rank: 2,
+            n_clusters: 2,
+            noise: 0.3,
+            seed: 15,
+        });
+        let q = items[0].clone();
+        let resp = empty.query_with(&q, &QueryOpts::top_k(3)).unwrap();
+        assert!(resp.hits.is_empty());
+        assert_eq!(resp.stats.candidates_generated, 0);
+        // Exact fallback on an empty index has nothing to scan.
+        let resp =
+            empty.query_with(&q, &QueryOpts::top_k(3).with_exact_fallback(true)).unwrap();
+        assert!(resp.hits.is_empty());
+        assert!(!resp.stats.exact_fallback);
+
+        let idx = LshIndex::build(&cfg, items).unwrap();
+        let resp = idx.query_with(&q, &QueryOpts::top_k(100)).unwrap();
+        assert!(resp.hits.len() <= 5, "k > len returns at most len hits");
+        assert!(idx.query_with(&q, &QueryOpts::top_k(0)).unwrap().hits.is_empty());
+        assert!(idx.exact_search(&q, 100).unwrap().len() == 5);
+    }
+
+    #[test]
+    fn duplicate_scores_tie_break_by_ascending_id() {
+        // Two bit-identical items: their scores against any query are
+        // exactly equal, and the documented tie-break (ascending id) makes
+        // the ordering deterministic.
+        let dims = vec![6usize, 6];
+        let cfg = cosine_config(dims.clone(), 6, 4, 0);
+        let (items, _) = low_rank_corpus(&DatasetSpec {
+            dims,
+            n_items: 4,
+            rank: 2,
+            n_clusters: 2,
+            noise: 0.3,
+            seed: 16,
+        });
+        let mut idx = LshIndex::new(&cfg).unwrap();
+        idx.insert(items[0].clone());
+        idx.insert(items[1].clone());
+        idx.insert(items[0].clone()); // duplicate of id 0 at id 2
+        let exact = idx.exact_search(&items[0], 3).unwrap();
+        assert_eq!(exact.len(), 3);
+        assert_eq!(exact[0].score, exact[1].score, "duplicates score equally");
+        assert_eq!((exact[0].id, exact[1].id), (0, 2), "ties order by ascending id");
+        let resp = idx.query_with(&items[0], &QueryOpts::top_k(3)).unwrap();
+        assert_eq!(resp.hits[0].id, 0);
+    }
+
+    #[test]
+    fn recall_at_k_edge_cases() {
+        let hit = |id: usize| SearchResult { id, score: 0.0 };
+        // Empty exact baseline ⇒ perfect recall by definition.
+        assert_eq!(recall_at_k(&[hit(1)], &[]), 1.0);
+        assert_eq!(recall_at_k(&[], &[]), 1.0);
+        // Empty approximate results ⇒ zero recall against a non-empty truth.
+        assert_eq!(recall_at_k(&[], &[hit(1)]), 0.0);
+        // Duplicate-id truth rows collapse into the hit set.
+        let r = recall_at_k(&[hit(1)], &[hit(1), hit(1)]);
+        assert!((r - 0.5).abs() < 1e-12, "duplicates count per truth row: {r}");
+        // Order does not matter.
+        assert_eq!(recall_at_k(&[hit(2), hit(1)], &[hit(1), hit(2)]), 1.0);
     }
 }

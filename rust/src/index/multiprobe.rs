@@ -8,6 +8,10 @@
 //! * E2LSH: step the coordinates whose projection sits closest to a bucket
 //!   boundary by ±1 — the query-directed probe set restricted to single-
 //!   coordinate perturbations (extends to pairs via ranked composition).
+//!
+//! The `probes` budget is a *call-time* argument throughout: the spec's
+//! `probes` value is only the index default, and every query may override
+//! it via [`crate::query::QueryOpts::probes`] without rebuilding anything.
 
 use super::table::signature;
 

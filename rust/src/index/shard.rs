@@ -5,31 +5,34 @@
 //! norm cache behind an `RwLock`, while the per-table hash families are
 //! shared across shards — so for the same [`IndexConfig`] a sharded index
 //! buckets exactly like the single-shard [`super::LshIndex`] and returns the
-//! same [`SearchResult`] set (verified by the equivalence tests below and in
-//! `tests/sharding.rs`).
+//! same [`SearchResult`] set (verified by the equivalence tests below, in
+//! `tests/sharding.rs`, and in `tests/query_api.rs`).
 //!
 //! What sharding buys at serving time:
 //!
 //! * **`&self` everywhere** — inserts write-lock one shard only, queries
 //!   read-lock shards independently, so coordinator workers run fully
 //!   concurrently and online inserts interleave with reads.
-//! * **Fan-out re-ranking** — [`ShardedLshIndex::shard_search`] is the
+//! * **Fan-out re-ranking** — [`ShardedLshIndex::shard_query`] is the
 //!   per-shard unit of work the coordinator scatters across its worker
-//!   pool; partial top-k lists merge with [`merge_partials`] (a global
-//!   top-k member is necessarily top-k within its shard, so per-shard
-//!   truncation loses nothing).
+//!   pool; partial top-k lists merge with [`merge_partials`] /
+//!   [`super::merge_hits`] (a global top-k member is necessarily top-k
+//!   within its shard, so per-shard truncation loses nothing). Per-query
+//!   candidate caps and rerank budgets apply per shard.
 //! * **Parallel builds** — [`ShardedLshIndex::build_parallel`] hashes and
 //!   inserts each shard's slice on its own thread via batched hashing.
 
 use super::codes::CodeMatrix;
 use super::table::{signature, HashTable};
 use super::{
-    build_families, score_candidate, sort_results, HashScratch, IndexConfig, Metric,
-    SearchResult,
+    build_families, check_table_signatures, gather_candidates, merge_hits,
+    rerank_with_policy, score_candidate, sort_results, table_signatures,
+    table_signatures_batch, HashScratch, IndexConfig, Metric, SearchResult,
 };
 use crate::error::Result;
 use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
+use crate::query::{Query, QueryOpts, SearchResponse, SearchStats, Searcher};
 use crate::tensor::AnyTensor;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
@@ -65,25 +68,6 @@ impl Shard {
         self.items.push(x);
     }
 
-    /// Deduplicated local candidate slots for per-table signature lists
-    /// (exact signature first, then any multiprobe extras).
-    fn candidate_slots(&self, sigs: &[Vec<u64>]) -> Vec<u32> {
-        let mut seen = vec![false; self.items.len()];
-        let mut out = Vec::new();
-        for (table, tsigs) in self.tables.iter().zip(sigs) {
-            for &sig in tsigs {
-                for &slot in table.bucket(sig) {
-                    let s = slot as usize;
-                    if !seen[s] {
-                        seen[s] = true;
-                        out.push(slot);
-                    }
-                }
-            }
-        }
-        out
-    }
-
     /// Exact re-rank of local slots; returns the shard's top-k with global
     /// ids.
     fn rerank(
@@ -106,18 +90,17 @@ impl Shard {
     }
 }
 
-/// Merge per-shard top-k partials into the global top-k. Because shards
-/// partition the corpus, the union of per-shard top-k lists contains every
-/// global top-k member; one sort + truncate finishes the job.
+/// Merge per-shard top-k partials into the global top-k under the default
+/// exact-policy ordering (policy-aware merging lives in
+/// [`super::merge_hits`]). Because shards partition the corpus, the union
+/// of per-shard top-k lists contains every global top-k member; one sort +
+/// truncate finishes the job.
 pub fn merge_partials(
     metric: Metric,
     partials: Vec<Vec<SearchResult>>,
     k: usize,
 ) -> Vec<SearchResult> {
-    let mut merged: Vec<SearchResult> = partials.into_iter().flatten().collect();
-    sort_results(metric, &mut merged);
-    merged.truncate(k);
-    merged
+    merge_hits(metric, &crate::query::RerankPolicy::Exact, partials, k)
 }
 
 /// Sharded multi-table LSH index (see the module docs).
@@ -177,7 +160,8 @@ impl ShardedLshIndex {
         self.metric
     }
 
-    /// Multiprobe extra probes per table.
+    /// Default multiprobe extras per table (the build-time spec value;
+    /// queries override per call via [`QueryOpts::probes`]).
     pub fn probes(&self) -> usize {
         self.probes
     }
@@ -299,21 +283,17 @@ impl ShardedLshIndex {
         Ok(idx)
     }
 
-    /// Per-table signature lists for a query: the exact bucket signature
-    /// first, then up to `probes` multiprobe extras (family-specific).
+    /// Per-table signature lists for a query at the index's default probe
+    /// budget: the exact bucket signature first, then up to `probes`
+    /// multiprobe extras (family-specific).
     pub fn signatures(&self, q: &AnyTensor) -> Vec<Vec<u64>> {
-        self.families
-            .iter()
-            .map(|fam| {
-                let z = fam.project(q);
-                let codes = fam.discretize(&z);
-                let mut sigs = vec![signature(&codes)];
-                if self.probes > 0 {
-                    sigs.extend(fam.probe_signatures(&codes, &z, self.probes));
-                }
-                sigs
-            })
-            .collect()
+        table_signatures(&self.families, q, self.probes)
+    }
+
+    /// [`ShardedLshIndex::signatures`] at an explicit per-query probe
+    /// budget.
+    pub fn signatures_with_probes(&self, q: &AnyTensor, probes: usize) -> Vec<Vec<u64>> {
+        table_signatures(&self.families, q, probes)
     }
 
     /// Batched [`ShardedLshIndex::signatures`]: one
@@ -333,29 +313,153 @@ impl ShardedLshIndex {
         qs: &[AnyTensor],
         scratch: &mut HashScratch,
     ) -> Vec<Vec<Vec<u64>>> {
-        let mut out: Vec<Vec<Vec<u64>>> = (0..qs.len())
-            .map(|_| Vec::with_capacity(self.families.len()))
-            .collect();
-        for fam in &self.families {
-            fam.project_batch_into(qs, &mut scratch.z);
-            scratch.codes.clear();
-            scratch.codes.resize(fam.k(), 0);
-            for (b, sigs_out) in out.iter_mut().enumerate() {
-                let z = scratch.z.row(b);
-                fam.discretize_into(z, &mut scratch.codes);
-                let mut sigs = vec![signature(&scratch.codes)];
-                if self.probes > 0 {
-                    sigs.extend(fam.probe_signatures(&scratch.codes, z, self.probes));
-                }
-                sigs_out.push(sigs);
-            }
-        }
-        out
+        let probes = vec![self.probes; qs.len()];
+        table_signatures_batch(&self.families, qs, &probes, scratch)
     }
 
-    /// Probe one shard and exactly re-rank its candidates: the coordinator's
-    /// fan-out unit. Returns the shard-local top-k (global ids) and the
-    /// number of candidates examined.
+    /// [`ShardedLshIndex::signatures_batch_with`] with one probe budget per
+    /// query — the coordinator's hash stage threads each query's
+    /// [`QueryOpts::probes`] override through here.
+    pub fn signatures_batch_probes(
+        &self,
+        qs: &[AnyTensor],
+        probes: &[usize],
+        scratch: &mut HashScratch,
+    ) -> Vec<Vec<Vec<u64>>> {
+        table_signatures_batch(&self.families, qs, probes, scratch)
+    }
+
+    // -- unified query API -------------------------------------------------
+
+    /// Answer a [`Query`]: hash (per-query probe budget), probe + re-rank
+    /// every shard per the query's policy, merge the partials. Under the
+    /// default options (exact re-rank, no caps) the hits equal
+    /// [`super::LshIndex::query`] for the same config and corpus;
+    /// [`crate::query::RerankPolicy::Budgeted`] budgets and
+    /// `max_candidates` caps apply *per shard* here (see [`QueryOpts`]),
+    /// so those policies examine a different candidate subset than a
+    /// single-shard index would.
+    pub fn query(&self, q: &Query) -> Result<SearchResponse> {
+        self.query_with(&q.tensor, &q.opts)
+    }
+
+    /// [`ShardedLshIndex::query`] over a borrowed tensor.
+    pub fn query_with(&self, tensor: &AnyTensor, opts: &QueryOpts) -> Result<SearchResponse> {
+        let probes = opts.probes.unwrap_or(self.probes);
+        let sigs = table_signatures(&self.families, tensor, probes);
+        self.query_with_table_signatures(tensor, &sigs, opts)
+    }
+
+    /// [`ShardedLshIndex::query_with`] from precomputed per-table signature
+    /// lists: probe + re-rank every shard, merge the partials and stats.
+    /// The list length must match the table count (typed error, not silent
+    /// truncation).
+    pub fn query_with_table_signatures(
+        &self,
+        tensor: &AnyTensor,
+        sigs: &[Vec<u64>],
+        opts: &QueryOpts,
+    ) -> Result<SearchResponse> {
+        check_table_signatures(sigs.len(), self.n_tables())?;
+        let mut stats = SearchStats::default();
+        let mut partials = Vec::with_capacity(self.shards.len());
+        for s in 0..self.shards.len() {
+            let (partial, shard_stats) = self.shard_query(s, tensor, sigs, opts)?;
+            stats.merge(&shard_stats);
+            partials.push(partial);
+        }
+        let mut hits = merge_hits(self.metric, &opts.rerank, partials, opts.k);
+        if stats.candidates_examined == 0 && opts.exact_fallback && !self.is_empty() {
+            stats.exact_fallback = true;
+            stats.reranked += self.len();
+            hits = self.exact_search(tensor, opts.k)?;
+        }
+        Ok(SearchResponse { hits, stats })
+    }
+
+    /// Probe one shard and re-rank its candidates per the query's policy:
+    /// the coordinator's fan-out unit. Returns the shard-local top-k
+    /// (global ids) and the shard's [`SearchStats`] (candidate caps and
+    /// rerank budgets apply per shard; fold units with
+    /// [`SearchStats::merge`]).
+    pub fn shard_query(
+        &self,
+        shard: usize,
+        tensor: &AnyTensor,
+        sigs: &[Vec<u64>],
+        opts: &QueryOpts,
+    ) -> Result<(Vec<SearchResult>, SearchStats)> {
+        check_table_signatures(sigs.len(), self.n_tables())?;
+        let qn = tensor.frob_norm();
+        let guard = self.shards[shard].read().unwrap();
+        let mut stats = SearchStats {
+            probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
+            ..SearchStats::default()
+        };
+        let (cand, counts) =
+            gather_candidates(&guard.tables, guard.items.len(), sigs, opts, &mut stats);
+        let hits = rerank_with_policy(
+            self.metric,
+            opts,
+            cand,
+            &counts,
+            |s| {
+                score_candidate(
+                    self.metric,
+                    &guard.items[s as usize],
+                    guard.norms[s as usize],
+                    tensor,
+                    qn,
+                )
+            },
+            |s| guard.ids[s as usize],
+            &mut stats,
+        )?;
+        Ok((hits, stats))
+    }
+
+    /// Batched [`ShardedLshIndex::query`]: batch-amortized hashing through
+    /// the flat SoA path, then per-query probe/re-rank. `out[b]` equals
+    /// `query(&qs[b])`. Gathers the owned query tensors into one
+    /// contiguous batch by cloning them; hot paths that already hold
+    /// contiguous tensors (the coordinator's hash stage does) should use
+    /// [`ShardedLshIndex::query_batch_with`] instead.
+    pub fn query_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        let tensors: Vec<AnyTensor> = qs.iter().map(|q| q.tensor.clone()).collect();
+        let opts: Vec<QueryOpts> = qs.iter().map(|q| q.opts.clone()).collect();
+        self.query_batch_with(&tensors, &opts, &mut HashScratch::new())
+    }
+
+    /// [`ShardedLshIndex::query_batch`] over borrowed tensors and a
+    /// caller-owned [`HashScratch`]. `opts.len()` must equal
+    /// `tensors.len()`.
+    pub fn query_batch_with(
+        &self,
+        tensors: &[AnyTensor],
+        opts: &[QueryOpts],
+        scratch: &mut HashScratch,
+    ) -> Result<Vec<SearchResponse>> {
+        assert_eq!(tensors.len(), opts.len(), "one QueryOpts per tensor");
+        let probes: Vec<usize> =
+            opts.iter().map(|o| o.probes.unwrap_or(self.probes)).collect();
+        let sigs_batch = table_signatures_batch(&self.families, tensors, &probes, scratch);
+        tensors
+            .iter()
+            .zip(opts)
+            .zip(&sigs_batch)
+            .map(|((t, o), sigs)| self.query_with_table_signatures(t, sigs, o))
+            .collect()
+    }
+
+    // -- legacy surface (deprecated wrappers over the query API) -----------
+
+    /// Probe one shard and exactly re-rank its candidates.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use ShardedLshIndex::shard_query with a QueryOpts (its defaults \
+                match this call bit-for-bit; n_candidates is \
+                stats.candidates_examined)"
+    )]
     pub fn shard_search(
         &self,
         shard: usize,
@@ -363,55 +467,65 @@ impl ShardedLshIndex {
         sigs: &[Vec<u64>],
         k: usize,
     ) -> Result<(Vec<SearchResult>, usize)> {
-        let qn = q.frob_norm();
-        let guard = self.shards[shard].read().unwrap();
-        let slots = guard.candidate_slots(sigs);
-        let n_candidates = slots.len();
-        let partial = guard.rerank(self.metric, q, qn, slots, k)?;
-        Ok((partial, n_candidates))
+        let (partial, stats) = self.shard_query(shard, q, sigs, &QueryOpts::top_k(k))?;
+        Ok((partial, stats.candidates_examined))
     }
 
     /// k-NN search from per-table signature lists: probe + re-rank every
     /// shard, merge the partials.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use ShardedLshIndex::query_with_table_signatures with a QueryOpts"
+    )]
     pub fn search_with_table_signatures(
         &self,
         q: &AnyTensor,
         sigs: &[Vec<u64>],
         k: usize,
     ) -> Result<Vec<SearchResult>> {
-        let mut partials = Vec::with_capacity(self.shards.len());
-        for s in 0..self.shards.len() {
-            let (partial, _) = self.shard_search(s, q, sigs, k)?;
-            partials.push(partial);
-        }
-        Ok(merge_partials(self.metric, partials, k))
+        Ok(self.query_with_table_signatures(q, sigs, &QueryOpts::top_k(k))?.hits)
     }
 
-    /// k-NN search: hash, probe all shards, exact re-rank, merge. Same
-    /// result set as [`super::LshIndex::search`] for the same config.
+    /// k-NN search: hash, probe all shards, exact re-rank, merge.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a query::Query (its defaults match this call bit-for-bit) \
+                and use ShardedLshIndex::query / the Searcher trait"
+    )]
     pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
-        let sigs = self.signatures(q);
-        self.search_with_table_signatures(q, &sigs, k)
+        Ok(self.query_with(q, &QueryOpts::top_k(k))?.hits)
     }
 
     /// Batched k-NN search: batch-amortized hashing, then per-query
-    /// probe/re-rank. `out[b]` equals `search(&qs[b], k)`.
+    /// probe/re-rank.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build query::Query values and use ShardedLshIndex::query_batch / \
+                query_batch_with"
+    )]
     pub fn search_batch(&self, qs: &[AnyTensor], k: usize) -> Result<Vec<Vec<SearchResult>>> {
-        let sigs_batch = self.signatures_batch(qs);
-        qs.iter()
-            .zip(&sigs_batch)
-            .map(|(q, sigs)| self.search_with_table_signatures(q, sigs, k))
-            .collect()
+        let opts = vec![QueryOpts::top_k(k); qs.len()];
+        Ok(self
+            .query_batch_with(qs, &opts, &mut HashScratch::new())?
+            .into_iter()
+            .map(|r| r.hits)
+            .collect())
     }
 
     /// Deduplicated global candidate ids for a query (unranked) — the
-    /// sharded analogue of [`super::LshIndex::candidates`].
+    /// sharded analogue of [`super::LshIndex::candidates`], through the
+    /// same shared `gather_candidates` path so dedup/ordering semantics
+    /// cannot diverge between the structures.
     pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
         let sigs = self.signatures(q);
+        let opts = QueryOpts::top_k(0);
         let mut out = Vec::new();
         for shard in &self.shards {
             let guard = shard.read().unwrap();
-            for slot in guard.candidate_slots(&sigs) {
+            let mut stats = SearchStats::default();
+            let (slots, _) =
+                gather_candidates(&guard.tables, guard.items.len(), &sigs, &opts, &mut stats);
+            for slot in slots {
                 out.push(guard.ids[slot as usize]);
             }
         }
@@ -459,6 +573,16 @@ impl ShardedLshIndex {
     }
 }
 
+impl Searcher for ShardedLshIndex {
+    fn search(&self, q: &Query) -> Result<SearchResponse> {
+        self.query(q)
+    }
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        self.query_batch(qs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::LshIndex;
@@ -494,6 +618,7 @@ mod tests {
         let items = corpus(dims.clone(), 300, 31);
         let cfg = cosine_config(dims, 10, 8, 0);
         let single = LshIndex::build(&cfg, items.clone()).unwrap();
+        let opts = QueryOpts::top_k(10);
         for n_shards in [1usize, 3, 8] {
             let sharded = ShardedLshIndex::build(&cfg, items.clone(), n_shards).unwrap();
             assert_eq!(sharded.len(), single.len());
@@ -501,9 +626,15 @@ mod tests {
             for _ in 0..15 {
                 let qid = rng.below(single.len());
                 let q = single.item(qid).clone();
-                let a = single.search(&q, 10).unwrap();
-                let b = sharded.search(&q, 10).unwrap();
-                assert_eq!(a, b, "n_shards={n_shards} qid={qid}");
+                let a = single.query_with(&q, &opts).unwrap();
+                let b = sharded.query_with(&q, &opts).unwrap();
+                assert_eq!(a.hits, b.hits, "n_shards={n_shards} qid={qid}");
+                // Candidate accounting agrees too (shards partition ids).
+                assert_eq!(
+                    a.stats.candidates_generated,
+                    b.stats.candidates_generated,
+                    "n_shards={n_shards} qid={qid}"
+                );
             }
         }
     }
@@ -521,9 +652,13 @@ mod tests {
         let single = LshIndex::build(&cfg, items.clone()).unwrap();
         let sharded = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
         let mut rng = Rng::new(34);
+        let opts = QueryOpts::top_k(5);
         for _ in 0..10 {
             let q = single.item(rng.below(single.len())).clone();
-            assert_eq!(single.search(&q, 5).unwrap(), sharded.search(&q, 5).unwrap());
+            let a = single.query_with(&q, &opts).unwrap();
+            let b = sharded.query_with(&q, &opts).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.stats.probes_used, b.stats.probes_used);
             // Candidate unions agree as sets.
             let mut ca = single.candidates(&q);
             let mut cb = sharded.candidates(&q);
@@ -542,9 +677,13 @@ mod tests {
         let par = ShardedLshIndex::build_parallel(&cfg, items.clone(), 5).unwrap();
         assert_eq!(par.len(), seq.len());
         let mut rng = Rng::new(36);
+        let opts = QueryOpts::top_k(8);
         for _ in 0..10 {
             let q = &items[rng.below(items.len())];
-            assert_eq!(seq.search(q, 8).unwrap(), par.search(q, 8).unwrap());
+            assert_eq!(
+                seq.query_with(q, &opts).unwrap().hits,
+                par.query_with(q, &opts).unwrap().hits
+            );
         }
     }
 
@@ -561,21 +700,29 @@ mod tests {
         .unwrap();
         let via_spec = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
         assert_eq!(via_spec.n_shards(), spec.serving.shards);
+        let opts = QueryOpts::top_k(5);
         for q in items.iter().take(8) {
-            assert_eq!(via_cfg.search(q, 5).unwrap(), via_spec.search(q, 5).unwrap());
+            assert_eq!(
+                via_cfg.query_with(q, &opts).unwrap().hits,
+                via_spec.query_with(q, &opts).unwrap().hits
+            );
         }
     }
 
     #[test]
-    fn search_batch_equals_per_query_search() {
+    fn query_batch_equals_per_query_path() {
         let dims = vec![8usize, 8, 8];
         let items = corpus(dims.clone(), 250, 37);
         let cfg = cosine_config(dims, 10, 6, 2);
         let idx = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
-        let queries: Vec<AnyTensor> = (0..24).map(|i| items[i * 7 % items.len()].clone()).collect();
-        let batched = idx.search_batch(&queries, 5).unwrap();
+        let queries: Vec<Query> = (0..24)
+            .map(|i| Query::new(items[i * 7 % items.len()].clone(), 5))
+            .collect();
+        let batched = idx.query_batch(&queries).unwrap();
         for (q, res) in queries.iter().zip(&batched) {
-            assert_eq!(&idx.search(q, 5).unwrap(), res);
+            let single = idx.query(q).unwrap();
+            assert_eq!(single.hits, res.hits);
+            assert_eq!(single.stats, res.stats);
         }
     }
 
@@ -609,8 +756,8 @@ mod tests {
         assert_eq!(all, (0..120).collect::<Vec<_>>());
         // And self-queries hit themselves.
         let q = idx.item(17);
-        let res = idx.search(&q, 1).unwrap();
-        assert_eq!(res[0].id, 17);
+        let resp = idx.query_with(&q, &QueryOpts::top_k(1)).unwrap();
+        assert_eq!(resp.hits[0].id, 17);
     }
 
     #[test]

@@ -32,13 +32,18 @@
 //!   [`lsh::HashFamily::hash_codes_into`] hashes whole serving batches into
 //!   flat strided code buffers ([`lsh::HashFamily::hash_batch`] is the
 //!   nested-Vec compatibility wrapper).
-//! * [`index`] — multi-table LSH index with multiprobe and exact re-ranking:
-//!   the single-shard reference [`index::LshIndex`] and the concurrently
-//!   readable, `&self`-insert [`index::ShardedLshIndex`] the serving stack
-//!   runs on. Bulk builds and the serving hash stage move codes as one
-//!   [`index::CodeMatrix`] per batch (codes + precomputed bucket
-//!   signatures), consumed by slice (`insert_codes`,
+//! * [`index`] — multi-table LSH index with multiprobe and policy-driven
+//!   re-ranking: the single-shard reference [`index::LshIndex`] and the
+//!   concurrently readable, `&self`-insert [`index::ShardedLshIndex`] the
+//!   serving stack runs on. Bulk builds and the serving hash stage move
+//!   codes as one [`index::CodeMatrix`] per batch (codes + precomputed
+//!   bucket signatures), consumed by slice (`insert_codes`,
 //!   `candidates_from_codes`) rather than per-item vectors.
+//! * [`query`] — the unified query API: plain-data [`query::Query`] /
+//!   [`query::SearchResponse`] (per-query multiprobe override, candidate
+//!   cap, [`query::RerankPolicy`], per-query [`query::SearchStats`]) and
+//!   the [`query::Searcher`] trait implemented by both index structures
+//!   and the coordinator.
 //! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle
 //!   (stubbed out unless the `pjrt` feature is enabled).
 //! * [`coordinator`] — request router, dynamic batcher, batched hash stage,
@@ -67,8 +72,8 @@
 //! ```
 //!
 //! Build a sharded index with the fluent [`lsh::spec::IndexBuilder`] and
-//! search it (queries and inserts both take `&self`, so this scales across
-//! coordinator workers):
+//! query it through the unified [`query::Query`] builder (queries and
+//! inserts both take `&self`, so this scales across coordinator workers):
 //!
 //! ```
 //! use tensor_lsh::prelude::*;
@@ -81,11 +86,21 @@
 //! // CP-SRP, rank 4, K=10 hashes per signature, L=8 tables.
 //! let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 8).with_seed(100, 1);
 //! let index = IndexBuilder::new(spec.clone()).shards(4).build_sharded_with(items.clone())?;
-//! let hits = index.search(&items[3], 5)?;
-//! assert_eq!(hits[0].id, 3); // an indexed item is its own nearest neighbor
+//! let resp = index.query(&Query::new(items[3].clone(), 5))?;
+//! assert_eq!(resp.hits[0].id, 3); // an indexed item is its own nearest neighbor
+//! assert!(resp.stats.candidates_examined >= 1); // and the response says what it cost
+//!
+//! // The recall/latency knobs are per *query*, not baked into the build:
+//! // probe 4 extra buckets per table and cap the exact re-rank at 64
+//! // candidates, on the same built index.
+//! let tuned = Query::new(items[3].clone(), 5)
+//!     .probes(4)
+//!     .rerank(RerankPolicy::Budgeted(64));
+//! assert_eq!(index.query(&tuned)?.hits[0].id, 3);
 //!
 //! // The spec round-trips through JSON, so the exact serving config can be
-//! // stored, diffed, and rebuilt bit-identically.
+//! // stored, diffed, and rebuilt bit-identically (query opts round-trip
+//! // the same way — that is what the coordinator protocol serializes).
 //! assert_eq!(LshSpec::from_json_str(&spec.to_json_string())?, spec);
 //! # Ok::<(), tensor_lsh::Error>(())
 //! ```
@@ -111,6 +126,7 @@ pub mod index;
 pub mod linalg;
 pub mod lsh;
 pub mod projection;
+pub mod query;
 pub mod rng;
 pub mod runtime;
 pub mod stats;
@@ -123,6 +139,7 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::coordinator::{QueryRequest, QueryResponse};
     pub use crate::error::{Error, Result};
     pub use crate::index::{
         CodeMatrix, HashScratch, IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex,
@@ -132,10 +149,11 @@ pub mod prelude {
         LshSpec, SeedPolicy, ServingSpec, SrpFamily,
     };
     pub use crate::lsh::{CpE2lsh, CpSrp, NaiveE2lsh, NaiveSrp, TtE2lsh, TtSrp};
-    #[allow(deprecated)]
-    pub use crate::lsh::{CpE2lshConfig, CpSrpConfig, TtE2lshConfig, TtSrpConfig};
     pub use crate::projection::{
         CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
+    };
+    pub use crate::query::{
+        Query, QueryOpts, RerankPolicy, SearchResponse, SearchStats, Searcher,
     };
     pub use crate::rng::Rng;
     pub use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};

@@ -11,8 +11,9 @@
 //! the K-vector of codes that the index packs into a bucket signature.
 //!
 //! Construction is declarative: one [`spec::FamilySpec`] describes any of
-//! the six families and [`spec::LshSpec`] the whole multi-table index (the
-//! per-family `*Config` structs survive only as deprecated shims over it).
+//! the six families and [`spec::LshSpec`] the whole multi-table index. (The
+//! deprecated per-family `*Config` shims were removed in 0.3 — every
+//! constructor routes through [`spec::FamilySpec::build`].)
 
 mod planner;
 pub mod spec;
@@ -313,141 +314,6 @@ pub type TtSrp = SrpHasher<TtRademacher>;
 /// Naive baseline: reshape + SRP [6].
 pub type NaiveSrp = SrpHasher<GaussianDense>;
 
-// ---------------------------------------------------------------------------
-// Deprecated per-family config shims
-//
-// One declarative [`FamilySpec`] replaced the six copy-pasted config
-// surfaces; these survive as thin `From<…Config> for FamilySpec` shims so
-// existing call sites keep compiling, and every constructor routes through
-// the single [`FamilySpec`] generation path (bit-identical by construction).
-// ---------------------------------------------------------------------------
-
-/// Configuration for [`CpE2lsh`].
-#[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec / LshSpec")]
-#[derive(Clone, Debug)]
-pub struct CpE2lshConfig {
-    pub dims: Vec<usize>,
-    /// Projection tensor CP rank R.
-    pub rank: usize,
-    /// Hashes per signature.
-    pub k: usize,
-    /// Bucket width w.
-    pub w: f64,
-    pub seed: u64,
-}
-
-#[allow(deprecated)]
-impl From<CpE2lshConfig> for FamilySpec {
-    fn from(c: CpE2lshConfig) -> FamilySpec {
-        FamilySpec::e2lsh(FamilyKind::Cp, c.dims, c.rank, c.k, c.w)
-    }
-}
-
-#[allow(deprecated)]
-impl CpE2lsh {
-    #[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec::build")]
-    pub fn new(cfg: CpE2lshConfig) -> Self {
-        let (seed, spec) = (cfg.seed, FamilySpec::from(cfg));
-        E2lshHasher::wrap(spec.cp_proj(seed, spec.k), spec.w, seed, "cp")
-    }
-}
-
-/// Configuration for [`TtE2lsh`].
-#[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec / LshSpec")]
-#[derive(Clone, Debug)]
-pub struct TtE2lshConfig {
-    pub dims: Vec<usize>,
-    /// Projection tensor TT rank R.
-    pub rank: usize,
-    pub k: usize,
-    pub w: f64,
-    pub seed: u64,
-}
-
-#[allow(deprecated)]
-impl From<TtE2lshConfig> for FamilySpec {
-    fn from(c: TtE2lshConfig) -> FamilySpec {
-        FamilySpec::e2lsh(FamilyKind::Tt, c.dims, c.rank, c.k, c.w)
-    }
-}
-
-#[allow(deprecated)]
-impl TtE2lsh {
-    #[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec::build")]
-    pub fn new(cfg: TtE2lshConfig) -> Self {
-        let (seed, spec) = (cfg.seed, FamilySpec::from(cfg));
-        E2lshHasher::wrap(spec.tt_proj(seed, spec.k), spec.w, seed, "tt")
-    }
-}
-
-/// Configuration for [`CpSrp`].
-#[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec / LshSpec")]
-#[derive(Clone, Debug)]
-pub struct CpSrpConfig {
-    pub dims: Vec<usize>,
-    pub rank: usize,
-    pub k: usize,
-    pub seed: u64,
-}
-
-#[allow(deprecated)]
-impl From<CpSrpConfig> for FamilySpec {
-    fn from(c: CpSrpConfig) -> FamilySpec {
-        FamilySpec::srp(FamilyKind::Cp, c.dims, c.rank, c.k)
-    }
-}
-
-#[allow(deprecated)]
-impl CpSrp {
-    #[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec::build")]
-    pub fn new(cfg: CpSrpConfig) -> Self {
-        let (seed, spec) = (cfg.seed, FamilySpec::from(cfg));
-        SrpHasher::wrap(spec.cp_proj(seed, spec.k), "cp")
-    }
-}
-
-/// Configuration for [`TtSrp`].
-#[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec / LshSpec")]
-#[derive(Clone, Debug)]
-pub struct TtSrpConfig {
-    pub dims: Vec<usize>,
-    pub rank: usize,
-    pub k: usize,
-    pub seed: u64,
-}
-
-#[allow(deprecated)]
-impl From<TtSrpConfig> for FamilySpec {
-    fn from(c: TtSrpConfig) -> FamilySpec {
-        FamilySpec::srp(FamilyKind::Tt, c.dims, c.rank, c.k)
-    }
-}
-
-#[allow(deprecated)]
-impl TtSrp {
-    #[deprecated(since = "0.2.0", note = "use lsh::spec::FamilySpec::build")]
-    pub fn new(cfg: TtSrpConfig) -> Self {
-        let (seed, spec) = (cfg.seed, FamilySpec::from(cfg));
-        SrpHasher::wrap(spec.tt_proj(seed, spec.k), "tt")
-    }
-}
-
-impl NaiveE2lsh {
-    /// Naive baseline constructor.
-    #[deprecated(since = "0.2.0", note = "use FamilySpec::e2lsh(FamilyKind::Naive, …)")]
-    pub fn naive(dims: &[usize], k: usize, w: f64, seed: u64) -> Self {
-        E2lshHasher::wrap(GaussianDense::generate(seed, dims, k), w, seed, "naive")
-    }
-}
-
-impl NaiveSrp {
-    /// Naive baseline constructor.
-    #[deprecated(since = "0.2.0", note = "use FamilySpec::srp(FamilyKind::Naive, …)")]
-    pub fn naive(dims: &[usize], k: usize, seed: u64) -> Self {
-        SrpHasher::wrap(GaussianDense::generate(seed, dims, k), "naive")
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,28 +401,6 @@ mod tests {
         }
         // Empty batches are fine.
         assert!(fams[0].hash_batch(&[]).is_empty());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_config_shims_match_spec_path() {
-        // The deprecated per-family configs must keep hashing bit-identically
-        // to the FamilySpec path they now delegate to.
-        let mut rng = Rng::new(106);
-        let x = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims(), 2));
-        let legacy: Vec<Arc<dyn HashFamily>> = vec![
-            Arc::new(CpE2lsh::new(CpE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 5 })),
-            Arc::new(TtE2lsh::new(TtE2lshConfig { dims: dims(), rank: 3, k: 8, w: 4.0, seed: 5 })),
-            Arc::new(CpSrp::new(CpSrpConfig { dims: dims(), rank: 3, k: 8, seed: 5 })),
-            Arc::new(TtSrp::new(TtSrpConfig { dims: dims(), rank: 3, k: 8, seed: 5 })),
-            Arc::new(NaiveE2lsh::naive(&dims(), 8, 4.0, 5)),
-            Arc::new(NaiveSrp::naive(&dims(), 8, 5)),
-        ];
-        for (old, new) in legacy.iter().zip(&six_families(3, 8, 4.0, 5)) {
-            assert_eq!(old.name(), new.name());
-            assert_eq!(old.hash(&x), new.hash(&x), "family {}", old.name());
-            assert_eq!(old.param_count(), new.param_count());
-        }
     }
 
     #[test]

@@ -40,7 +40,7 @@
 use super::planner::{plan_parameters, validity_report, LshPlan};
 use super::{E2lshHasher, HashFamily, SrpHasher};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, HashBackend, MetricsSnapshot, Query, QueryResponse,
+    Coordinator, CoordinatorConfig, HashBackend, MetricsSnapshot, QueryRequest, QueryResponse,
 };
 use crate::error::{Error, Result};
 use crate::index::{IndexConfig, LshIndex, Metric, ShardedLshIndex};
@@ -882,7 +882,7 @@ impl CoordinatorBuilder {
     pub fn serve_trace(
         &self,
         index: Arc<ShardedLshIndex>,
-        queries: Vec<Query>,
+        queries: Vec<QueryRequest>,
     ) -> Result<(Vec<QueryResponse>, MetricsSnapshot)> {
         Coordinator::serve_trace(index, self.config(), HashBackend::Native, queries)
     }
@@ -1084,8 +1084,12 @@ mod tests {
             .build_sharded_with(items.clone())
             .unwrap();
         assert_eq!(single.len(), sharded.len());
+        let opts = crate::query::QueryOpts::top_k(5);
         for q in items.iter().take(8) {
-            assert_eq!(single.search(q, 5).unwrap(), sharded.search(q, 5).unwrap());
+            assert_eq!(
+                single.query_with(q, &opts).unwrap().hits,
+                sharded.query_with(q, &opts).unwrap().hits
+            );
         }
         // Codes off the spec's family list equal the index's own families.
         let cm_spec = CodeMatrix::build(&spec.families().unwrap(), &items[..8]);

@@ -16,6 +16,9 @@
 //!            so `plan > spec.json` feeds straight back into `--config`
 //!   hash     hash one random tensor with the configured family
 //!   search   build a synthetic corpus + index, report recall
+//!   query    build an index once, then query it with per-call knobs:
+//!            --probes N, --budget N (candidate cap), --rerank
+//!            exact|signature|budget:N, --fallback, --no-dedup
 //!   serve    run the coordinator over a synthetic query trace
 //!   exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all
 //! ```
@@ -23,10 +26,11 @@
 use std::sync::Arc;
 use tensor_lsh::bench_harness as bh;
 use tensor_lsh::config::AppConfig;
-use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, Query};
+use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, QueryRequest};
 use tensor_lsh::error::{Error, Result};
 use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{validity_report, HashFamily, LshSpec};
+use tensor_lsh::query::{QueryOpts, RerankPolicy};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, Manifest};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
@@ -58,6 +62,9 @@ fn print_usage() {
          \x20          feed it back with --config spec.json)\n\
          \x20 hash     hash one random tensor with the configured family\n\
          \x20 search   build a synthetic corpus + index, report recall\n\
+         \x20 query    build an index once, query it with per-call knobs:\n\
+         \x20          --probes N --budget N --rerank exact|signature|budget:N\n\
+         \x20          --fallback --no-dedup\n\
          \x20 serve    run the coordinator over a synthetic query trace\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
@@ -96,6 +103,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "plan" => cmd_plan(&cfg),
         "hash" => cmd_hash(&cfg),
         "search" => cmd_search(&cfg),
+        "query" => cmd_query(&cfg, &positional),
         "serve" => cmd_serve(&cfg, positional.iter().any(|p| p == "pjrt")),
         "exp" => cmd_exp(&cfg, &positional),
         other => {
@@ -186,13 +194,14 @@ fn cmd_search(cfg: &AppConfig) -> Result<()> {
     let index = Arc::new(LshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
     let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x5EA]);
     let n_q = 30.min(cfg.n_items);
+    let opts = QueryOpts::top_k(cfg.top_k);
     let mut recall_sum = 0.0;
     for _ in 0..n_q {
         let qid = rng.below(index.len());
         let q = index.item(qid).clone();
-        let approx = index.search(&q, cfg.top_k)?;
+        let approx = index.query_with(&q, &opts)?;
         let exact = index.exact_search(&q, cfg.top_k)?;
-        recall_sum += recall_at_k(&approx, &exact);
+        recall_sum += recall_at_k(&approx.hits, &exact);
     }
     println!(
         "index: n={} L={} K={} family={} metric={:?}",
@@ -208,6 +217,111 @@ fn cmd_search(cfg: &AppConfig) -> Result<()> {
         }
     }
     println!("recall@{} over {} queries: {:.3}", cfg.top_k, n_q, recall_sum / n_q as f64);
+    Ok(())
+}
+
+/// Fetch the value following flag `positional[i]`.
+fn flag_value<'a>(positional: &'a [String], i: usize, flag: &str) -> Result<&'a str> {
+    positional
+        .get(i + 1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::Config(format!("{flag} needs a value")))
+}
+
+/// Parse the `query` command's per-call flags into a [`QueryOpts`].
+fn parse_query_opts(cfg: &AppConfig, positional: &[String]) -> Result<QueryOpts> {
+    let mut opts = QueryOpts::top_k(cfg.top_k);
+    let mut i = 0;
+    while i < positional.len() {
+        match positional[i].as_str() {
+            "--probes" => {
+                let v = flag_value(positional, i, "--probes")?;
+                opts.probes = Some(
+                    v.parse().map_err(|e| Error::Config(format!("--probes {v}: {e}")))?,
+                );
+                i += 2;
+            }
+            "--budget" => {
+                let v = flag_value(positional, i, "--budget")?;
+                opts.max_candidates = Some(
+                    v.parse().map_err(|e| Error::Config(format!("--budget {v}: {e}")))?,
+                );
+                i += 2;
+            }
+            "--rerank" => {
+                opts.rerank = RerankPolicy::parse(flag_value(positional, i, "--rerank")?)?;
+                i += 2;
+            }
+            "--fallback" => {
+                opts.exact_fallback = true;
+                i += 1;
+            }
+            "--no-dedup" => {
+                opts.dedup = false;
+                i += 1;
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown query flag '{other}' (expected --probes N, --budget N, \
+                     --rerank exact|signature|budget:N, --fallback, --no-dedup)"
+                )))
+            }
+        }
+    }
+    Ok(opts)
+}
+
+/// Build one index from the spec, then serve queries with *per-call* knobs
+/// — the same built index answers every setting, which is the point of the
+/// unified query API.
+fn cmd_query(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let opts = parse_query_opts(cfg, positional)?;
+    let index = ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?;
+    println!(
+        "index: n={} L={} K={} shards={} family={} metric={:?} (build-time probes={})",
+        index.len(),
+        index.n_tables(),
+        cfg.spec.family.k,
+        index.n_shards(),
+        cfg.spec.family.kind.name(),
+        cfg.spec.family.metric,
+        cfg.spec.probes
+    );
+    println!("query opts: {}", opts.to_json().to_string_pretty());
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x9E4]);
+    let n_q = 30.min(cfg.n_items);
+    let mut recall_sum = 0.0;
+    // Cross-query totals (SearchStats::merge folds units of ONE query —
+    // summing per query is what the per-query means below claim).
+    let (mut generated, mut examined, mut reranked) = (0usize, 0usize, 0usize);
+    let (mut probes_total, mut fallbacks) = (0usize, 0usize);
+    let mut latency_ns = 0.0f64;
+    for _ in 0..n_q {
+        let q = index.item(rng.below(index.len()));
+        let t0 = std::time::Instant::now();
+        let resp = index.query_with(&q, &opts)?;
+        latency_ns += t0.elapsed().as_secs_f64() * 1e9;
+        let exact = index.exact_search(&q, opts.k)?;
+        recall_sum += recall_at_k(&resp.hits, &exact);
+        generated += resp.stats.candidates_generated;
+        examined += resp.stats.candidates_examined;
+        reranked += resp.stats.reranked;
+        probes_total += resp.stats.probes_used;
+        fallbacks += resp.stats.exact_fallback as usize;
+    }
+    let per = n_q as f64;
+    println!(
+        "over {n_q} queries: recall@{} {:.3} | {:.1} µs/query | cand/query \
+         {:.1} generated, {:.1} examined, {:.1} reranked | probes/query {:.1} | \
+         fallbacks {fallbacks}/{n_q}",
+        opts.k,
+        recall_sum / per,
+        latency_ns / per / 1e3,
+        generated as f64 / per,
+        examined as f64 / per,
+        reranked as f64 / per,
+        probes_total as f64 / per,
+    );
     Ok(())
 }
 
@@ -267,10 +381,10 @@ fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
     };
     let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x5E71]);
     let trace = zipf_trace(&mut rng, index.len(), 4 * cfg.n_items.min(2000), 1.1);
-    let queries: Vec<Query> = trace
+    let queries: Vec<QueryRequest> = trace
         .iter()
         .enumerate()
-        .map(|(i, &id)| Query::new(i as u64, index.item(id), cfg.top_k))
+        .map(|(i, &id)| QueryRequest::new(i as u64, index.item(id), cfg.top_k))
         .collect();
     let (responses, snap) =
         Coordinator::serve_trace(index, cfg.coordinator(), backend, queries)?;

@@ -1,0 +1,433 @@
+//! The unified query API: plain-data request/response types plus the
+//! [`Searcher`] trait all three serving layers implement.
+//!
+//! The CP/TT hash families make signatures cheap, so at serving scale the
+//! recall/latency trade-off lives almost entirely on the *query side*:
+//! multiprobe budget, candidate caps, and rerank policy. Those knobs used
+//! to be frozen into the index at build time; here they are call-time
+//! arguments carried by one [`Query`] value, so a single built index serves
+//! many scenarios (cheap signature-only scans, budgeted exact re-ranks,
+//! aggressive multiprobe for recall-critical traffic) without rebuilding.
+//!
+//! * [`Query`] — the request: a tensor plus plain-data [`QueryOpts`]
+//!   (`k`, per-query `probes` override, candidate cap, [`RerankPolicy`],
+//!   exact-fallback and dedup toggles). The opts are JSON round-trippable,
+//!   which is what the coordinator protocol serializes.
+//! * [`SearchResponse`] — the hits plus per-query [`SearchStats`]
+//!   (candidates generated/examined, probes used, tables hit, re-rank
+//!   count) so callers can see what a query actually cost.
+//! * [`Searcher`] — `search(&Query)` / `search_batch(&[Query])`,
+//!   implemented by [`crate::index::LshIndex`],
+//!   [`crate::index::ShardedLshIndex`], and
+//!   [`crate::coordinator::Coordinator`]. Batches route through the flat
+//!   `ProjectionMatrix`/`CodeMatrix` SoA path with a reused
+//!   [`crate::index::HashScratch`].
+//!
+//! The legacy `search`/`search_batch`/`shard_search` methods survive as
+//! thin deprecated wrappers that build a default `Query`; a default query
+//! is bit-identical to them (`tests/query_api.rs`). Because those inherent
+//! methods still exist, calling the trait's `search` *on a concrete index
+//! type* resolves to the deprecated inherent method first — use the
+//! inherent `query`/`query_batch` entry points directly, or go through a
+//! `&dyn Searcher` / generic bound where the trait method applies.
+//!
+//! Tie-breaking: hits are ordered best-first (ascending distance,
+//! descending similarity or collision count) with ties broken by ascending
+//! item id, so results are fully deterministic even under duplicate scores.
+
+use crate::error::{Error, Result};
+use crate::index::SearchResult;
+use crate::tensor::AnyTensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// How candidates are scored before the top-k cut.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RerankPolicy {
+    /// Exactly score every examined candidate (one inner product each) —
+    /// the classical LSH re-rank and the default.
+    Exact,
+    /// No inner products at all: hits are ranked by their bucket collision
+    /// count (how many probed buckets contained the item), best-first
+    /// descending. `score` holds the collision count for both metrics.
+    SignatureOnly,
+    /// Exactly score at most `n` candidates, taken most-collisions-first
+    /// (ties keep candidate-generation order); the rest are dropped. On the
+    /// sharded fan-out the budget applies per probing unit (per shard).
+    Budgeted(usize),
+}
+
+impl RerankPolicy {
+    /// Parse a policy as it appears on the CLI / in JSON:
+    /// `exact`, `signature`, or `budget:N`.
+    pub fn parse(s: &str) -> Result<RerankPolicy> {
+        match s {
+            "exact" => Ok(RerankPolicy::Exact),
+            "signature" | "signature_only" | "sigs" => Ok(RerankPolicy::SignatureOnly),
+            other => {
+                if let Some(n) = other
+                    .strip_prefix("budget:")
+                    .or_else(|| other.strip_prefix("budgeted:"))
+                {
+                    let n: usize = n.parse().map_err(|e| {
+                        Error::InvalidParameter(format!("rerank budget '{n}': {e}"))
+                    })?;
+                    return Ok(RerankPolicy::Budgeted(n));
+                }
+                Err(Error::InvalidParameter(format!(
+                    "unknown rerank policy '{other}' (expected one of: exact, signature, \
+                     budget:N)"
+                )))
+            }
+        }
+    }
+
+    /// Canonical name; `parse(name())` is the identity.
+    pub fn name(&self) -> String {
+        match self {
+            RerankPolicy::Exact => "exact".into(),
+            RerankPolicy::SignatureOnly => "signature".into(),
+            RerankPolicy::Budgeted(n) => format!("budget:{n}"),
+        }
+    }
+}
+
+/// Plain-data per-query knobs — everything about a query except the tensor.
+/// JSON round-trippable (this is the part the coordinator protocol
+/// serializes; the tensor payload travels in its native format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryOpts {
+    /// Neighbors to return.
+    pub k: usize,
+    /// Per-query multiprobe override: `None` uses the index's build-time
+    /// default (`LshSpec::probes`), `Some(p)` probes `p` extra buckets per
+    /// table for this query only.
+    pub probes: Option<usize>,
+    /// Cap on candidates examined (applied after generation, before
+    /// re-ranking; generation order is kept). On the sharded fan-out the
+    /// cap applies per probing unit (per shard). `None` = unbounded.
+    pub max_candidates: Option<usize>,
+    /// How candidates are scored.
+    pub rerank: RerankPolicy,
+    /// When probing examines no candidate at all, fall back to an exact
+    /// linear scan instead of returning an empty response.
+    pub exact_fallback: bool,
+    /// Deduplicate candidates across tables/probes (the default). Turning
+    /// this off skips the dedup pass; duplicated candidates are then
+    /// scored once per occurrence and may repeat in the hits — a
+    /// diagnostics/throughput knob, not for production ranking.
+    pub dedup: bool,
+}
+
+impl QueryOpts {
+    /// Defaults that make a query bit-identical to the legacy `search`
+    /// surface: index-default probes, no cap, exact re-rank, no fallback,
+    /// dedup on.
+    pub fn top_k(k: usize) -> QueryOpts {
+        QueryOpts {
+            k,
+            probes: None,
+            max_candidates: None,
+            rerank: RerankPolicy::Exact,
+            exact_fallback: false,
+            dedup: true,
+        }
+    }
+
+    // -- fluent setters ----------------------------------------------------
+
+    pub fn with_probes(mut self, probes: usize) -> QueryOpts {
+        self.probes = Some(probes);
+        self
+    }
+
+    pub fn with_max_candidates(mut self, cap: usize) -> QueryOpts {
+        self.max_candidates = Some(cap);
+        self
+    }
+
+    pub fn with_rerank(mut self, rerank: RerankPolicy) -> QueryOpts {
+        self.rerank = rerank;
+        self
+    }
+
+    pub fn with_exact_fallback(mut self, on: bool) -> QueryOpts {
+        self.exact_fallback = on;
+        self
+    }
+
+    pub fn with_dedup(mut self, on: bool) -> QueryOpts {
+        self.dedup = on;
+        self
+    }
+
+    // -- JSON --------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<usize>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        let mut m = BTreeMap::new();
+        m.insert("k".to_string(), Json::Num(self.k as f64));
+        m.insert("probes".to_string(), opt(self.probes));
+        m.insert("max_candidates".to_string(), opt(self.max_candidates));
+        m.insert("rerank".to_string(), Json::Str(self.rerank.name()));
+        m.insert("exact_fallback".to_string(), Json::Bool(self.exact_fallback));
+        m.insert("dedup".to_string(), Json::Bool(self.dedup));
+        Json::Obj(m)
+    }
+
+    /// Parse opts; `probes`/`max_candidates` accept `null` or absence for
+    /// "unset", booleans and `rerank` may be omitted (defaults apply).
+    pub fn from_json(v: &Json) -> Result<QueryOpts> {
+        let obj = v.as_obj()?;
+        for key in obj.keys() {
+            if !["k", "probes", "max_candidates", "rerank", "exact_fallback", "dedup"]
+                .contains(&key.as_str())
+            {
+                return Err(Error::Json(format!("unknown query key '{key}'")));
+            }
+        }
+        let opt = |key: &str| -> Result<Option<usize>> {
+            match obj.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(other) => Ok(Some(other.as_usize()?)),
+            }
+        };
+        let flag = |key: &str, default: bool| -> Result<bool> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(Json::Bool(b)) => Ok(*b),
+                Some(other) => {
+                    Err(Error::Json(format!("expected bool for '{key}', got {other:?}")))
+                }
+            }
+        };
+        Ok(QueryOpts {
+            k: v.get("k")?.as_usize()?,
+            probes: opt("probes")?,
+            max_candidates: opt("max_candidates")?,
+            rerank: match obj.get("rerank") {
+                None => RerankPolicy::Exact,
+                Some(r) => RerankPolicy::parse(r.as_str()?)?,
+            },
+            exact_fallback: flag("exact_fallback", false)?,
+            dedup: flag("dedup", true)?,
+        })
+    }
+}
+
+/// A k-NN request: the query tensor plus its plain-data [`QueryOpts`].
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub tensor: AnyTensor,
+    pub opts: QueryOpts,
+}
+
+impl Query {
+    /// A default query — bit-identical to the legacy `search(tensor, k)`.
+    pub fn new(tensor: AnyTensor, k: usize) -> Query {
+        Query { tensor, opts: QueryOpts::top_k(k) }
+    }
+
+    pub fn with_opts(tensor: AnyTensor, opts: QueryOpts) -> Query {
+        Query { tensor, opts }
+    }
+
+    // -- fluent setters (delegating to the opts) ---------------------------
+
+    pub fn probes(mut self, probes: usize) -> Query {
+        self.opts.probes = Some(probes);
+        self
+    }
+
+    pub fn max_candidates(mut self, cap: usize) -> Query {
+        self.opts.max_candidates = Some(cap);
+        self
+    }
+
+    pub fn rerank(mut self, rerank: RerankPolicy) -> Query {
+        self.opts.rerank = rerank;
+        self
+    }
+
+    pub fn exact_fallback(mut self, on: bool) -> Query {
+        self.opts.exact_fallback = on;
+        self
+    }
+
+    pub fn dedup(mut self, on: bool) -> Query {
+        self.opts.dedup = on;
+        self
+    }
+}
+
+/// What one query actually cost. Stats from shard/worker partials merge
+/// with [`SearchStats::merge`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Candidates produced by probing, before any cap (deduplicated when
+    /// `QueryOpts::dedup`; with multiplicity otherwise).
+    pub candidates_generated: usize,
+    /// Candidates kept after `max_candidates` — the set handed to the
+    /// re-rank policy.
+    pub candidates_examined: usize,
+    /// Extra multiprobe signatures used beyond the exact bucket, summed
+    /// over tables (the per-query probe budget actually spent).
+    pub probes_used: usize,
+    /// Tables whose probed buckets yielded at least one candidate, within
+    /// one probing unit; merged across shards as the max over units (a
+    /// lower bound on the union).
+    pub tables_hit: usize,
+    /// Candidates scored with a full inner product (0 under
+    /// [`RerankPolicy::SignatureOnly`]; includes the exact-fallback scan).
+    pub reranked: usize,
+    /// True when the exact-fallback linear scan produced the hits.
+    pub exact_fallback: bool,
+}
+
+impl SearchStats {
+    /// Fold another probing unit's stats into this one: counts sum,
+    /// `probes_used`/`tables_hit` take the max (each unit reports the same
+    /// probe budget / overlapping tables), fallback ORs.
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.candidates_generated += other.candidates_generated;
+        self.candidates_examined += other.candidates_examined;
+        self.reranked += other.reranked;
+        self.probes_used = self.probes_used.max(other.probes_used);
+        self.tables_hit = self.tables_hit.max(other.tables_hit);
+        self.exact_fallback |= other.exact_fallback;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "candidates_generated".to_string(),
+            Json::Num(self.candidates_generated as f64),
+        );
+        m.insert(
+            "candidates_examined".to_string(),
+            Json::Num(self.candidates_examined as f64),
+        );
+        m.insert("probes_used".to_string(), Json::Num(self.probes_used as f64));
+        m.insert("tables_hit".to_string(), Json::Num(self.tables_hit as f64));
+        m.insert("reranked".to_string(), Json::Num(self.reranked as f64));
+        m.insert("exact_fallback".to_string(), Json::Bool(self.exact_fallback));
+        Json::Obj(m)
+    }
+}
+
+/// Response to a [`Query`]: ranked hits plus what they cost.
+#[derive(Clone, Debug)]
+pub struct SearchResponse {
+    /// Best-first hits (ties broken by ascending id — fully deterministic).
+    pub hits: Vec<SearchResult>,
+    pub stats: SearchStats,
+}
+
+/// One search surface across the serving stack: [`crate::index::LshIndex`]
+/// (single-shard reference), [`crate::index::ShardedLshIndex`] (serving
+/// structure), and [`crate::coordinator::Coordinator`] (scatter-gather
+/// pipeline) all answer the same [`Query`].
+///
+/// `search_batch` implementations route through the flat SoA hash path
+/// with a reused [`crate::index::HashScratch`] where the layer supports it;
+/// the default just loops.
+pub trait Searcher {
+    fn search(&self, q: &Query) -> Result<SearchResponse>;
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        qs.iter().map(|q| self.search(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+
+    #[test]
+    fn rerank_policy_parse_name_roundtrip() {
+        for p in [
+            RerankPolicy::Exact,
+            RerankPolicy::SignatureOnly,
+            RerankPolicy::Budgeted(0),
+            RerankPolicy::Budgeted(128),
+        ] {
+            assert_eq!(RerankPolicy::parse(&p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            RerankPolicy::parse("budgeted:7").unwrap(),
+            RerankPolicy::Budgeted(7)
+        );
+        assert!(RerankPolicy::parse("nope").is_err());
+        assert!(RerankPolicy::parse("budget:x").is_err());
+    }
+
+    #[test]
+    fn query_opts_json_roundtrip() {
+        let opts = QueryOpts::top_k(7)
+            .with_probes(3)
+            .with_max_candidates(100)
+            .with_rerank(RerankPolicy::Budgeted(40))
+            .with_exact_fallback(true)
+            .with_dedup(false);
+        let back = QueryOpts::from_json(&opts.to_json()).unwrap();
+        assert_eq!(back, opts);
+        // Defaults round-trip too (probes/max_candidates as null).
+        let dflt = QueryOpts::top_k(10);
+        assert_eq!(QueryOpts::from_json(&dflt.to_json()).unwrap(), dflt);
+        // Minimal document: only k, everything else defaulted.
+        let min = QueryOpts::from_json(&crate::util::json::parse(r#"{"k": 5}"#).unwrap())
+            .unwrap();
+        assert_eq!(min, QueryOpts::top_k(5));
+        // Unknown keys are rejected, not silently defaulted.
+        let typo = crate::util::json::parse(r#"{"k": 5, "probess": 2}"#).unwrap();
+        assert!(QueryOpts::from_json(&typo).is_err());
+    }
+
+    #[test]
+    fn query_builder_sets_opts() {
+        let t = AnyTensor::Dense(DenseTensor::zeros(&[2, 2]));
+        let q = Query::new(t, 5)
+            .probes(2)
+            .max_candidates(50)
+            .rerank(RerankPolicy::SignatureOnly)
+            .exact_fallback(true)
+            .dedup(false);
+        assert_eq!(q.opts.k, 5);
+        assert_eq!(q.opts.probes, Some(2));
+        assert_eq!(q.opts.max_candidates, Some(50));
+        assert_eq!(q.opts.rerank, RerankPolicy::SignatureOnly);
+        assert!(q.opts.exact_fallback);
+        assert!(!q.opts.dedup);
+    }
+
+    #[test]
+    fn stats_merge_sums_counts_and_maxes_shared_fields() {
+        let mut a = SearchStats {
+            candidates_generated: 10,
+            candidates_examined: 8,
+            probes_used: 4,
+            tables_hit: 3,
+            reranked: 8,
+            exact_fallback: false,
+        };
+        let b = SearchStats {
+            candidates_generated: 5,
+            candidates_examined: 5,
+            probes_used: 4,
+            tables_hit: 5,
+            reranked: 2,
+            exact_fallback: true,
+        };
+        a.merge(&b);
+        assert_eq!(a.candidates_generated, 15);
+        assert_eq!(a.candidates_examined, 13);
+        assert_eq!(a.reranked, 10);
+        assert_eq!(a.probes_used, 4);
+        assert_eq!(a.tables_hit, 5);
+        assert!(a.exact_fallback);
+    }
+}

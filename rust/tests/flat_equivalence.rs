@@ -147,10 +147,11 @@ fn code_matrix_insert_and_query_match_per_item_path() {
                 flat.candidates_from_signatures(&sigs),
                 "{family:?}/{metric:?} qid={qid}"
             );
-            // Full searches are therefore identical too.
+            // Full queries are therefore identical too.
+            let opts = tensor_lsh::query::QueryOpts::top_k(10);
             assert_eq!(
-                legacy.search(q, 10).unwrap(),
-                flat.search(q, 10).unwrap(),
+                legacy.query_with(q, &opts).unwrap().hits,
+                flat.query_with(q, &opts).unwrap().hits,
                 "{family:?}/{metric:?} qid={qid}"
             );
         }
@@ -172,7 +173,11 @@ fn sharded_code_matrix_build_matches_per_item_inserts() {
     let mut rng = Rng::new(66);
     for _ in 0..10 {
         let q = &items[rng.below(items.len())];
-        assert_eq!(built.search(q, 8).unwrap(), manual.search(q, 8).unwrap());
+        let opts = tensor_lsh::query::QueryOpts::top_k(8);
+        assert_eq!(
+            built.query_with(q, &opts).unwrap().hits,
+            manual.query_with(q, &opts).unwrap().hits
+        );
         let mut ca = built.candidates(q);
         let mut cb = manual.candidates(q);
         ca.sort_unstable();

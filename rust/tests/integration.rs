@@ -4,7 +4,8 @@
 use std::sync::Arc;
 use tensor_lsh::bench_harness::{index_config, index_config_family};
 use tensor_lsh::config::{AppConfig, Family};
-use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, QueryRequest};
+use tensor_lsh::query::QueryOpts;
 use tensor_lsh::decomp::{cp_als, tt_svd, CpAlsOptions, TtSvdOptions};
 use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::rng::Rng;
@@ -59,8 +60,8 @@ fn mixed_format_corpus_index() {
     let index = LshIndex::build(&cfg, items).expect("build");
     assert_eq!(index.len(), 100);
     for qid in [0usize, 30, 70, 99] {
-        let res = index.search(index.item(qid), 1).expect("search");
-        assert_eq!(res[0].id, qid, "self-retrieval failed for {qid}");
+        let res = index.query_with(index.item(qid), &QueryOpts::top_k(1)).expect("query");
+        assert_eq!(res.hits[0].id, qid, "self-retrieval failed for {qid}");
     }
 }
 
@@ -84,8 +85,8 @@ fn config_to_coordinator_pipeline() {
     let (items, _) = low_rank_corpus(&spec);
     // The parsed AppConfig's spec drives the index directly.
     let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, items).unwrap());
-    let queries: Vec<Query> = (0..50)
-        .map(|i| Query::new(i, index.item(i as usize % 300), 5))
+    let queries: Vec<QueryRequest> = (0..50)
+        .map(|i| QueryRequest::new(i, index.item(i as usize % 300), 5))
         .collect();
     let (responses, snap) = Coordinator::serve_trace(
         Arc::clone(&index),
@@ -125,8 +126,9 @@ fn recall_improves_with_tables_all_families() {
                     index_config(family, metric, dims.clone(), 4, 8, l, 4.0, 9);
                 let index = LshIndex::build(&cfg, items.clone()).unwrap();
                 let mut sum = 0.0;
+                let opts = QueryOpts::top_k(10);
                 for &qid in &qids {
-                    let approx = index.search(index.item(qid), 10).unwrap();
+                    let approx = index.query_with(index.item(qid), &opts).unwrap().hits;
                     let exact = index.exact_search(index.item(qid), 10).unwrap();
                     sum += recall_at_k(&approx, &exact);
                 }

@@ -1,0 +1,256 @@
+//! The unified query API's contract (ISSUE 4 acceptance):
+//!
+//! * all three serving layers implement `Searcher`;
+//! * a default `Query` is bit-identical to the legacy
+//!   `search`/`search_batch`/`shard_search` wrappers on both index
+//!   structures;
+//! * a per-query probes override on a built index matches an index built
+//!   with those probes baked in;
+//! * rerank policies, candidate caps, exact fallback, and the dedup toggle
+//!   behave as documented, with stats accounting for the work.
+
+use std::sync::Arc;
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend};
+use tensor_lsh::index::{LshIndex, ShardedLshIndex};
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::query::{Query, QueryOpts, RerankPolicy, Searcher};
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+
+fn corpus(dims: Vec<usize>, n: usize, seed: u64) -> Vec<AnyTensor> {
+    low_rank_corpus(&DatasetSpec {
+        dims,
+        n_items: n,
+        rank: 2,
+        n_clusters: 8,
+        noise: 0.3,
+        seed,
+    })
+    .0
+}
+
+fn spec(dims: Vec<usize>, probes: usize) -> LshSpec {
+    LshSpec::cosine(FamilyKind::Cp, dims, 4, 10, 6)
+        .with_probes(probes)
+        .with_seed(4242, 1)
+}
+
+/// The legacy wrappers are thin shims over a default `Query`: results must
+/// be bit-identical (hits, order, scores) on both index structures, and
+/// `shard_search`'s candidate count must equal the stats field.
+#[test]
+#[allow(deprecated)]
+fn default_query_bit_identical_to_legacy_wrappers() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 260, 71);
+    // probes=2 so the multiprobe path is exercised end to end.
+    let spec = spec(dims, 2);
+    let single = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let sharded = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let opts = QueryOpts::top_k(9);
+    let queries: Vec<AnyTensor> = (0..20).map(|i| items[i * 13 % items.len()].clone()).collect();
+
+    for q in &queries {
+        assert_eq!(single.search(q, 9).unwrap(), single.query_with(q, &opts).unwrap().hits);
+        assert_eq!(
+            sharded.search(q, 9).unwrap(),
+            sharded.query_with(q, &opts).unwrap().hits
+        );
+        let sigs = sharded.signatures(q);
+        assert_eq!(
+            sharded.search_with_table_signatures(q, &sigs, 9).unwrap(),
+            sharded.query_with_table_signatures(q, &sigs, &opts).unwrap().hits
+        );
+        for s in 0..sharded.n_shards() {
+            let (legacy_partial, legacy_n) = sharded.shard_search(s, q, &sigs, 9).unwrap();
+            let (partial, stats) = sharded.shard_query(s, q, &sigs, &opts).unwrap();
+            assert_eq!(legacy_partial, partial, "shard {s}");
+            assert_eq!(legacy_n, stats.candidates_examined, "shard {s}");
+        }
+    }
+    // Batched wrapper vs batched query path.
+    let legacy_batch = sharded.search_batch(&queries, 9).unwrap();
+    let new_batch = sharded.query_batch(
+        &queries.iter().map(|q| Query::new(q.clone(), 9)).collect::<Vec<_>>(),
+    );
+    for (legacy, new) in legacy_batch.iter().zip(new_batch.unwrap()) {
+        assert_eq!(legacy, &new.hits);
+    }
+}
+
+/// A per-query probes override on a probes=0 index returns exactly what an
+/// index *built* with those probes returns — the budget is call-time
+/// state, not construction state. Both directions, both structures.
+#[test]
+fn probes_override_matches_baked_in_probes() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 240, 72);
+    let spec0 = spec(dims.clone(), 0);
+    let spec4 = spec(dims, 4);
+    let single0 = LshIndex::build_from_spec(&spec0, items.clone()).unwrap();
+    let single4 = LshIndex::build_from_spec(&spec4, items.clone()).unwrap();
+    let sharded0 = ShardedLshIndex::build_from_spec(&spec0, items.clone()).unwrap();
+    let sharded4 = ShardedLshIndex::build_from_spec(&spec4, items.clone()).unwrap();
+    let dflt = QueryOpts::top_k(8);
+    let with4 = QueryOpts::top_k(8).with_probes(4);
+    let with0 = QueryOpts::top_k(8).with_probes(0);
+    for i in 0..15 {
+        let q = &items[i * 11 % items.len()];
+        // Override up: probes=4 at call time on the probes=0 index.
+        let a = single0.query_with(q, &with4).unwrap();
+        let b = single4.query_with(q, &dflt).unwrap();
+        assert_eq!(a.hits, b.hits);
+        assert_eq!(a.stats, b.stats);
+        // Override down: probes=0 at call time on the probes=4 index.
+        assert_eq!(
+            single4.query_with(q, &with0).unwrap().hits,
+            single0.query_with(q, &dflt).unwrap().hits
+        );
+        // Sharded structure, same contract.
+        let sa = sharded0.query_with(q, &with4).unwrap();
+        let sb = sharded4.query_with(q, &dflt).unwrap();
+        assert_eq!(sa.hits, sb.hits);
+        assert_eq!(sa.stats, sb.stats);
+        assert_eq!(sa.hits, a.hits, "sharded matches single-shard");
+        // Batched path honors per-query budgets within one batch.
+        let mixed = sharded0
+            .query_batch(&[
+                Query::new(q.clone(), 8),
+                Query::new(q.clone(), 8).probes(4),
+            ])
+            .unwrap();
+        assert_eq!(mixed[0].hits, sharded0.query_with(q, &dflt).unwrap().hits);
+        assert_eq!(mixed[1].hits, sa.hits);
+    }
+}
+
+/// One generic entry point serves every layer: `LshIndex`,
+/// `ShardedLshIndex`, and `Coordinator` all answer the same `Query`
+/// through the `Searcher` trait (also object-safe).
+#[test]
+fn searcher_trait_covers_all_three_layers() {
+    let dims = vec![6usize, 6, 6];
+    let items = corpus(dims.clone(), 120, 73);
+    let spec = spec(dims, 0);
+    let single = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let sharded = Arc::new(ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap());
+    let coord = Coordinator::start(
+        Arc::clone(&sharded),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+
+    fn run(s: &dyn Searcher, q: &Query) -> Vec<usize> {
+        s.search(q).unwrap().hits.iter().map(|h| h.id).collect()
+    }
+    for qid in [0usize, 17, 63] {
+        let q = Query::new(items[qid].clone(), 5);
+        let reference = run(&single, &q);
+        assert_eq!(reference[0], qid);
+        assert_eq!(run(sharded.as_ref(), &q), reference);
+        assert_eq!(run(&coord, &q), reference);
+    }
+    // Batched trait path agrees with the per-query trait path.
+    let qs: Vec<Query> = (0..8).map(|i| Query::new(items[i * 9].clone(), 4)).collect();
+    let batch = Searcher::search_batch(sharded.as_ref(), &qs).unwrap();
+    for (q, resp) in qs.iter().zip(&batch) {
+        assert_eq!(Searcher::search(sharded.as_ref(), q).unwrap().hits, resp.hits);
+    }
+    coord.shutdown();
+}
+
+/// Rerank policies and the candidate cap: Budgeted(∞) ≡ Exact,
+/// SignatureOnly never pays an inner product and ranks by collision count,
+/// caps bound the examined set, and stats account for each.
+#[test]
+fn rerank_policies_and_candidate_cap() {
+    let dims = vec![8usize, 8, 8];
+    let items = corpus(dims.clone(), 300, 74);
+    let spec = spec(dims, 2);
+    for use_sharded in [false, true] {
+        let single;
+        let sharded;
+        let index: &dyn Searcher = if use_sharded {
+            sharded = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+            &sharded
+        } else {
+            single = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+            &single
+        };
+        for i in 0..10 {
+            let tensor = items[i * 17 % items.len()].clone();
+            let exact = index.search(&Query::new(tensor.clone(), 10)).unwrap();
+            // A budget larger than any candidate set degenerates to Exact.
+            let big_budget = index
+                .search(&Query::new(tensor.clone(), 10).rerank(RerankPolicy::Budgeted(1 << 20)))
+                .unwrap();
+            assert_eq!(exact.hits, big_budget.hits, "sharded={use_sharded}");
+            // A tight budget re-ranks at most n per probing unit.
+            let tight = index
+                .search(&Query::new(tensor.clone(), 10).rerank(RerankPolicy::Budgeted(3)))
+                .unwrap();
+            let units = if use_sharded { 4 } else { 1 }; // spec default shards
+            assert!(tight.stats.reranked <= 3 * units, "sharded={use_sharded}");
+            // Signature-only: no inner products, hits ranked by collision
+            // count descending.
+            let sig = index
+                .search(&Query::new(tensor.clone(), 10).rerank(RerankPolicy::SignatureOnly))
+                .unwrap();
+            assert_eq!(sig.stats.reranked, 0);
+            assert!(sig.hits.windows(2).all(|w| w[0].score >= w[1].score));
+            assert!(sig.hits[0].score >= 1.0, "counts are ≥ 1");
+            // The self-query collides in every probed table.
+            // Candidate cap bounds the examined set.
+            let capped = index
+                .search(&Query::new(tensor.clone(), 10).max_candidates(5))
+                .unwrap();
+            assert!(capped.stats.candidates_examined <= 5 * units);
+            assert!(
+                capped.stats.candidates_examined <= capped.stats.candidates_generated
+            );
+            // Dedup off: counts with multiplicity, never fewer than deduped.
+            let nodedup = index
+                .search(&Query::new(tensor.clone(), 10).dedup(false))
+                .unwrap();
+            assert!(
+                nodedup.stats.candidates_generated >= exact.stats.candidates_generated,
+                "sharded={use_sharded}"
+            );
+        }
+    }
+}
+
+/// Exact fallback: when a query examines no candidate at all (here forced
+/// via a zero candidate cap), the response falls back to the exact linear
+/// scan instead of coming back empty — and says so in the stats.
+#[test]
+fn exact_fallback_kicks_in_when_nothing_is_examined() {
+    let dims = vec![6usize, 6, 6];
+    let items = corpus(dims.clone(), 90, 75);
+    let spec = spec(dims, 0);
+    let single = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let sharded = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let q = items[5].clone();
+    let starved = QueryOpts::top_k(4).with_max_candidates(0);
+    let rescued = QueryOpts::top_k(4).with_max_candidates(0).with_exact_fallback(true);
+    for index in [&single as &dyn Searcher, &sharded as &dyn Searcher] {
+        let empty = index.search(&Query::with_opts(q.clone(), starved.clone())).unwrap();
+        assert!(empty.hits.is_empty());
+        assert!(!empty.stats.exact_fallback);
+        let resp = index.search(&Query::with_opts(q.clone(), rescued.clone())).unwrap();
+        assert!(resp.stats.exact_fallback);
+        assert_eq!(resp.hits, single.exact_search(&q, 4).unwrap());
+        assert_eq!(resp.stats.reranked, items.len());
+    }
+    // The coordinator pipeline applies the same fallback in its aggregator.
+    let index = Arc::new(sharded);
+    let coord = Coordinator::start(
+        Arc::clone(&index),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    let resp = coord.query(&Query::with_opts(q.clone(), rescued)).unwrap();
+    assert!(resp.stats.exact_fallback);
+    assert_eq!(resp.hits, single.exact_search(&q, 4).unwrap());
+    coord.shutdown();
+}

@@ -5,7 +5,8 @@
 use std::sync::Arc;
 use tensor_lsh::bench_harness::index_config;
 use tensor_lsh::config::Family;
-use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, Query};
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, QueryRequest};
+use tensor_lsh::query::QueryOpts;
 use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::AnyTensor;
@@ -64,11 +65,12 @@ fn sharded_equals_single_shard_across_families() {
         for n_shards in [1usize, 4, 7] {
             let sharded =
                 ShardedLshIndex::build_parallel(&cfg, items.clone(), n_shards).unwrap();
+            let opts = QueryOpts::top_k(10);
             for _ in 0..8 {
                 let q = single.item(rng.below(single.len())).clone();
                 assert_eq!(
-                    single.search(&q, 10).unwrap(),
-                    sharded.search(&q, 10).unwrap(),
+                    single.query_with(&q, &opts).unwrap().hits,
+                    sharded.query_with(&q, &opts).unwrap().hits,
                     "{family:?}/{metric:?} shards={n_shards}"
                 );
             }
@@ -76,7 +78,7 @@ fn sharded_equals_single_shard_across_families() {
     }
 }
 
-/// `search_batch` equals per-query `search`, and the sharded exact scan
+/// The batched query path equals the per-query path, and the sharded exact scan
 /// equals the single-shard exact scan.
 #[test]
 fn batched_and_exact_paths_are_equivalent() {
@@ -86,10 +88,13 @@ fn batched_and_exact_paths_are_equivalent() {
     let single = LshIndex::build(&cfg, items.clone()).unwrap();
     let sharded = ShardedLshIndex::build(&cfg, items.clone(), 5).unwrap();
     let queries: Vec<AnyTensor> = (0..20).map(|i| items[i * 13 % items.len()].clone()).collect();
-    let batched = sharded.search_batch(&queries, 6).unwrap();
+    let opts = vec![QueryOpts::top_k(6); queries.len()];
+    let batched = sharded
+        .query_batch_with(&queries, &opts, &mut tensor_lsh::index::HashScratch::new())
+        .unwrap();
     for (q, res) in queries.iter().zip(&batched) {
-        assert_eq!(&sharded.search(q, 6).unwrap(), res);
-        assert_eq!(&single.search(q, 6).unwrap(), res);
+        assert_eq!(sharded.query_with(q, &opts[0]).unwrap().hits, res.hits);
+        assert_eq!(single.query_with(q, &opts[0]).unwrap().hits, res.hits);
         assert_eq!(
             single.exact_search(q, 6).unwrap(),
             sharded.exact_search(q, 6).unwrap()
@@ -105,8 +110,8 @@ fn coordinator_pipeline_equals_offline_search() {
     let items = corpus(dims.clone(), 240, 48);
     let cfg = index_config(Family::Cp, Metric::Cosine, dims, 4, 10, 6, 4.0, 49);
     let index = Arc::new(ShardedLshIndex::build_parallel(&cfg, items, 6).unwrap());
-    let queries: Vec<Query> = (0..48)
-        .map(|i| Query::new(i, index.item(i as usize * 5 % 240), 5))
+    let queries: Vec<QueryRequest> = (0..48)
+        .map(|i| QueryRequest::new(i, index.item(i as usize * 5 % 240), 5))
         .collect();
     let (responses, snap) = Coordinator::serve_trace(
         Arc::clone(&index),
@@ -117,9 +122,11 @@ fn coordinator_pipeline_equals_offline_search() {
     .unwrap();
     assert_eq!(responses.len(), 48);
     assert_eq!(snap.queries, 48);
+    let opts = QueryOpts::top_k(5);
     for r in &responses {
-        let offline = index.search(&queries[r.id as usize].tensor, 5).unwrap();
-        assert_eq!(r.results, offline, "resp {}", r.id);
+        let offline = index.query_with(&queries[r.id as usize].query.tensor, &opts).unwrap();
+        assert_eq!(r.results, offline.hits, "resp {}", r.id);
+        assert_eq!(r.stats.candidates_examined, offline.stats.candidates_examined);
     }
 }
 
@@ -133,8 +140,8 @@ fn online_inserts_visible_to_searches() {
     let extra = corpus(dims, 10, 52);
     for x in &extra {
         let id = index.insert(x.clone());
-        let hit = index.search(x, 1).unwrap();
-        assert_eq!(hit[0].id, id, "fresh insert must be its own nearest neighbor");
+        let hit = index.query_with(x, &QueryOpts::top_k(1)).unwrap();
+        assert_eq!(hit.hits[0].id, id, "fresh insert must be its own nearest neighbor");
     }
     assert_eq!(index.len(), 110);
 }

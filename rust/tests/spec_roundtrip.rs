@@ -84,11 +84,12 @@ fn builder_equals_legacy_closure_bit_for_bit() {
             serving: ServingSpec { shards: 3, ..Default::default() },
         };
         // The legacy path: a hand-rolled closure wrapping the projections
-        // directly, exactly as pre-spec call sites did.
-        let legacy_cfg = IndexConfig {
-            family_builder: {
+        // directly, exactly as pre-spec call sites did (the deprecated
+        // escape hatch this test deliberately exercises).
+        let legacy_cfg = IndexConfig::from_family_builder(
+            {
                 let dims = dims.clone();
-                Arc::new(move |t| {
+                Arc::new(move |t: usize| {
                     let seed = 900 + 1000 * t as u64;
                     let proj =
                         TtRademacher::generate(seed, &dims, 3, 8, Distribution::Rademacher);
@@ -101,10 +102,10 @@ fn builder_equals_legacy_closure_bit_for_bit() {
                     }
                 })
             },
-            n_tables: 5,
+            5,
             metric,
-            probes: 2,
-        };
+            2,
+        );
 
         // Single-shard structure.
         let new_single = IndexBuilder::new(spec.clone()).build_with(corpus.clone()).unwrap();
@@ -126,13 +127,17 @@ fn builder_equals_legacy_closure_bit_for_bit() {
         // Sharded structure.
         let new_sharded = ShardedLshIndex::build_from_spec(&spec, corpus.clone()).unwrap();
         let old_sharded = ShardedLshIndex::build(&legacy_cfg, corpus.clone(), 3).unwrap();
+        let opts = tensor_lsh::query::QueryOpts::top_k(7);
         for q in corpus.iter().take(12) {
             assert_eq!(new_sharded.signatures(q), old_sharded.signatures(q));
             assert_eq!(
-                new_sharded.search(q, 7).unwrap(),
-                old_sharded.search(q, 7).unwrap()
+                new_sharded.query_with(q, &opts).unwrap().hits,
+                old_sharded.query_with(q, &opts).unwrap().hits
             );
-            assert_eq!(new_single.search(q, 7).unwrap(), new_sharded.search(q, 7).unwrap());
+            assert_eq!(
+                new_single.query_with(q, &opts).unwrap().hits,
+                new_sharded.query_with(q, &opts).unwrap().hits
+            );
         }
     }
 }
@@ -160,10 +165,10 @@ fn planned_spec_roundtrips_and_matches_legacy_codes() {
 
     // Legacy construction at the planned (K, L): hand-rolled closure.
     let (k, l) = (spec.family.k, spec.l);
-    let legacy_cfg = IndexConfig {
-        family_builder: {
+    let legacy_cfg = IndexConfig::from_family_builder(
+        {
             let dims = dims.clone();
-            Arc::new(move |t| {
+            Arc::new(move |t: usize| {
                 let seed = 42 + 1000 * t as u64;
                 Arc::new(SrpHasher::wrap(
                     CpRademacher::generate(seed, &dims, 2, k, Distribution::Rademacher),
@@ -171,10 +176,10 @@ fn planned_spec_roundtrips_and_matches_legacy_codes() {
                 )) as Arc<dyn HashFamily>
             })
         },
-        n_tables: l,
-        metric: Metric::Cosine,
-        probes: 0,
-    };
+        l,
+        Metric::Cosine,
+        0,
+    );
     let legacy_index =
         ShardedLshIndex::build(&legacy_cfg, corpus.clone(), spec.serving.shards).unwrap();
 
@@ -190,10 +195,11 @@ fn planned_spec_roundtrips_and_matches_legacy_codes() {
         }
         assert_eq!(cm_planned.sigs_row(b), cm_legacy.sigs_row(b));
     }
+    let opts = tensor_lsh::query::QueryOpts::top_k(5);
     for q in corpus.iter().take(6) {
         assert_eq!(
-            planned_index.search(q, 5).unwrap(),
-            legacy_index.search(q, 5).unwrap()
+            planned_index.query_with(q, &opts).unwrap().hits,
+            legacy_index.query_with(q, &opts).unwrap().hits
         );
     }
 }
