@@ -78,6 +78,22 @@ fn main() -> Result<()> {
     assert_eq!(LshSpec::from_json_str(&spec.to_json_string())?, spec);
     println!("spec JSON round-trips ({} bytes)", spec.to_json_string().len());
 
+    // And the index itself is durable: one checksummed segment file holds
+    // the spec, buckets, items, and norms; loading it back yields a
+    // bit-identical searcher — same hits, same per-query stats.
+    let seg = std::env::temp_dir().join("tensorlsh_quickstart.seg");
+    index.save(&seg)?;
+    let reloaded = LshIndex::load(&seg)?;
+    let warm = reloaded.query(&Query::new(items[7].clone(), 5))?;
+    assert_eq!(warm.hits, resp.hits);
+    assert_eq!(warm.stats, resp.stats);
+    println!(
+        "index survives a save → load round trip ({} on disk, {} items)",
+        tensor_lsh::util::fmt_bytes(std::fs::metadata(&seg)?.len() as usize),
+        reloaded.len()
+    );
+    std::fs::remove_file(&seg).ok();
+
     // Collision probabilities follow the classical laws (Theorems 4 & 8):
     // nearby pairs collide often, far pairs rarely.
     let (near_x, near_y) = pair_at_distance(&mut rng, &dims, 1.0, PairFormat::Cp(2));

@@ -1,0 +1,186 @@
+//! Durable-store persistence benchmark (EXPERIMENTS.md §Store).
+//!
+//! Measures, and emits to machine-readable `BENCH_store.json`:
+//!
+//! * segment **write** and **load** throughput (MB/s over the snapshot
+//!   bytes, parallel per-shard segments included);
+//! * WAL **append** (durable inserts/sec, fsync included) and **replay**
+//!   (recovered inserts/sec on `Store::open`);
+//! * snapshot **size** vs the naive baseline that stores every item as its
+//!   reshaped dense vector (the same comparison the paper makes for the
+//!   projection parameters: low-rank formats are the whole point);
+//! * a save → load → WAL-replay round-trip smoke (top-1 self-queries must
+//!   survive recovery) so the bench doubles as an end-to-end check.
+//!
+//! Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI does).
+//!
+//! Run: `cargo bench --bench store_persistence`
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use tensor_lsh::index::ShardedLshIndex;
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::query::QueryOpts;
+use tensor_lsh::rng::Rng;
+use tensor_lsh::store::Store;
+use tensor_lsh::tensor::{numel, AnyTensor, CpTensor};
+use tensor_lsh::util::json::Json;
+use tensor_lsh::util::timer::time_once;
+use tensor_lsh::util::{fmt_bytes, fmt_duration};
+
+fn dir_bytes(dir: &Path) -> u64 {
+    let mut total = 0;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                total += dir_bytes(&path);
+            } else if let Ok(meta) = entry.metadata() {
+                total += meta.len();
+            }
+        }
+    }
+    total
+}
+
+fn entry(name: &str, value: f64, unit: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(name.into()));
+    m.insert("value".into(), Json::Num(value));
+    m.insert("unit".into(), Json::Str(unit.into()));
+    Json::Obj(m)
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (n_items, n_wal) = if smoke { (500, 60) } else { (20_000, 2_000) };
+    let dims = vec![12usize, 12, 12];
+    let rank_in = 3usize;
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 4, 12, 8).with_seed(5, 1000);
+
+    let mut rng = Rng::new(17);
+    let items: Vec<AnyTensor> = (0..n_items)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, rank_in)))
+        .collect();
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap());
+
+    let root: PathBuf = std::env::temp_dir()
+        .join(format!("tlsh_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let db = root.join("db");
+
+    // -- segment write (Store::create = snapshot generation 1) --------------
+    let (store, write_ns) =
+        time_once(|| Store::create(&db, Arc::clone(&index), 0).unwrap());
+    let snap_bytes = dir_bytes(&db);
+    let write_mb_s = snap_bytes as f64 / 1e6 / (write_ns / 1e9);
+    println!(
+        "segment write: {} in {} ({write_mb_s:.1} MB/s, {} shards in parallel)",
+        fmt_bytes(snap_bytes as usize),
+        fmt_duration(write_ns),
+        index.n_shards()
+    );
+
+    // -- WAL append (durable inserts, fsync per record) ----------------------
+    let extras: Vec<AnyTensor> = (0..n_wal)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, rank_in)))
+        .collect();
+    let (_, append_ns) = time_once(|| {
+        for x in &extras {
+            store.insert(x.clone()).unwrap();
+        }
+    });
+    let append_items_s = n_wal as f64 / (append_ns / 1e9);
+    println!(
+        "wal append: {n_wal} durable inserts in {} ({append_items_s:.0} items/s)",
+        fmt_duration(append_ns)
+    );
+    drop(store);
+
+    // -- open = segment load + WAL replay ------------------------------------
+    let (store, open_ns) = time_once(|| Store::open(&db, 0).unwrap());
+    assert_eq!(store.recovery().wal_replayed, n_wal);
+    assert_eq!(store.len(), n_items + n_wal);
+    // Split load vs replay: time a pure segment load (no WAL) separately.
+    let replayed = store.recovery().wal_replayed;
+    drop(store);
+    let snap1 = db.join("snap-000001");
+    let (loaded, load_ns) = time_once(|| ShardedLshIndex::load(&snap1).unwrap());
+    let load_mb_s = snap_bytes as f64 / 1e6 / (load_ns / 1e9);
+    let replay_ns = (open_ns - load_ns).max(1.0);
+    let replay_items_s = replayed as f64 / (replay_ns / 1e9);
+    println!(
+        "segment load: {} in {} ({load_mb_s:.1} MB/s); wal replay: {replayed} \
+         records in {} ({replay_items_s:.0} items/s)",
+        fmt_bytes(snap_bytes as usize),
+        fmt_duration(load_ns),
+        fmt_duration(replay_ns)
+    );
+
+    // -- round-trip smoke: recovery answers like the live index -------------
+    let store = Store::open(&db, 0).unwrap();
+    let opts = QueryOpts::top_k(1);
+    for qid in [0usize, n_items / 2, n_items + n_wal - 1] {
+        let q = store.index().item(qid);
+        let live = index.query_with(&q, &opts).unwrap();
+        let warm = store.index().query_with(&q, &opts).unwrap();
+        assert_eq!(warm.hits[0].id, qid, "self-query must survive recovery");
+        assert_eq!(live.hits, warm.hits, "warm hits must equal live hits");
+    }
+    println!("round-trip smoke: recovered index answers identically");
+    drop(store);
+    drop(loaded);
+
+    // -- snapshot size vs the naive reshaped-vector baseline ----------------
+    // The naive method stores each item as its materialized dense vector
+    // (f32 × ∏dims); the segment stores the low-rank factors. Index-side
+    // bytes (signatures, buckets, ids, norms) are common to both designs,
+    // so add them to the baseline too for a like-for-like total.
+    let d_total = numel(&dims);
+    let per_item_index_overhead = 8 * index.n_tables() // sig arena
+        + 4 * index.n_tables() // bucket slot entries (≈)
+        + 8 // id map
+        + 8; // norm
+    let naive_bytes =
+        (n_items + n_wal) as u64 * (4 * d_total + per_item_index_overhead) as u64;
+    let final_bytes = dir_bytes(&db);
+    let ratio = naive_bytes as f64 / final_bytes as f64;
+    println!(
+        "snapshot size: {} vs naive reshaped-vector baseline {} ({ratio:.1}x smaller)",
+        fmt_bytes(final_bytes as usize),
+        fmt_bytes(naive_bytes as usize)
+    );
+
+    // -- machine-readable report ---------------------------------------------
+    let mut config = BTreeMap::new();
+    config.insert(
+        "dims".into(),
+        Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    config.insert("n_items".into(), Json::Num(n_items as f64));
+    config.insert("n_wal".into(), Json::Num(n_wal as f64));
+    config.insert("rank_in".into(), Json::Num(rank_in as f64));
+    config.insert("smoke".into(), Json::Bool(smoke));
+
+    let entries = vec![
+        entry("segment_write_mb_per_sec", write_mb_s, "MB/s"),
+        entry("segment_load_mb_per_sec", load_mb_s, "MB/s"),
+        entry("wal_append_items_per_sec", append_items_s, "items/s"),
+        entry("wal_replay_items_per_sec", replay_items_s, "items/s"),
+        entry("snapshot_bytes", final_bytes as f64, "bytes"),
+        entry("naive_reshaped_bytes", naive_bytes as f64, "bytes"),
+        entry("size_ratio_naive_over_snapshot", ratio, "x"),
+    ];
+
+    let mut root_json = BTreeMap::new();
+    root_json.insert("bench".into(), Json::Str("store_persistence".into()));
+    root_json.insert("config".into(), Json::Obj(config));
+    root_json.insert("spec".into(), spec.to_json());
+    root_json.insert("entries".into(), Json::Arr(entries));
+    let path = "BENCH_store.json";
+    std::fs::write(path, Json::Obj(root_json).to_string_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

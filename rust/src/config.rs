@@ -152,6 +152,33 @@ impl AppConfig {
             "seed" => self.spec.seeds.base = parse_u64(value)?,
             "seed_stride" => self.spec.seeds.stride = parse_u64(value)?,
             "artifact_dir" => self.artifact_dir = Some(value.to_string()),
+            "store" => {
+                if value.is_empty() {
+                    return Err(Error::InvalidSpec("store dir must not be empty".into()));
+                }
+                match &mut self.spec.serving.store {
+                    Some(s) => s.dir = value.to_string(),
+                    None => {
+                        self.spec.serving.store =
+                            Some(crate::lsh::spec::StoreSpec::new(value))
+                    }
+                }
+            }
+            "checkpoint_every" => {
+                let n = parse_usize(value)?;
+                match &mut self.spec.serving.store {
+                    Some(s) => s.checkpoint_every = n,
+                    // Keys apply in alphabetical order from files, so this
+                    // may arrive before `store`; hold the threshold in a
+                    // placeholder — validate() rejects the empty dir if no
+                    // `store=<dir>` ever fills it in.
+                    None => {
+                        self.spec.serving.store = Some(
+                            crate::lsh::spec::StoreSpec::new("").with_checkpoint_every(n),
+                        )
+                    }
+                }
+            }
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -183,6 +210,13 @@ impl AppConfig {
         m.insert("max_wait_us".into(), Json::Num(s.serving.max_wait_us as f64));
         m.insert("seed".into(), Json::Num(s.seeds.base as f64));
         m.insert("seed_stride".into(), Json::Num(s.seeds.stride as f64));
+        if let Some(store) = &s.serving.store {
+            m.insert("store".into(), Json::Str(store.dir.clone()));
+            m.insert(
+                "checkpoint_every".into(),
+                Json::Num(store.checkpoint_every as f64),
+            );
+        }
         Json::Obj(m).to_string_pretty()
     }
 }
@@ -306,6 +340,27 @@ mod tests {
         let mut c = AppConfig::default();
         c.apply_override("seed=18446744073709551615").unwrap();
         assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))));
+    }
+
+    #[test]
+    fn store_keys_round_trip_and_validate() {
+        let mut c = AppConfig::default();
+        // checkpoint_every may arrive before store (alphabetical file order).
+        c.apply_override("checkpoint_every=500").unwrap();
+        assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))), "dir still empty");
+        c.apply_override("store=/tmp/tlsh-store").unwrap();
+        c.spec.validate().unwrap();
+        let store = c.spec.serving.store.as_ref().unwrap();
+        assert_eq!(store.dir, "/tmp/tlsh-store");
+        assert_eq!(store.checkpoint_every, 500);
+        // Flat file round trip keeps the store section.
+        let tmp = std::env::temp_dir().join("tensorlsh_store_cfg_test.json");
+        std::fs::write(&tmp, c.to_json()).unwrap();
+        let mut c2 = AppConfig::default();
+        c2.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c2.spec.serving.store, c.spec.serving.store);
+        let _ = std::fs::remove_file(&tmp);
+        assert!(AppConfig::default().apply_override("store=").is_err());
     }
 
     #[test]

@@ -118,21 +118,30 @@ impl Metrics {
         self.batch_items.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// Snapshot for reports.
+    /// Snapshot for reports. Every mean field is defined as 0.0 (not NaN)
+    /// when nothing has been recorded yet — a scrape of an idle server
+    /// must serialize to finite numbers.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // 0/0 is "no data" (0.0), never NaN.
+        fn mean(sum: u64, n: u64) -> f64 {
+            if n == 0 {
+                0.0
+            } else {
+                sum as f64 / n as f64
+            }
+        }
         let hist = self.latency.lock().unwrap();
         let queries = self.queries.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let batches = self.batches.load(Ordering::Relaxed);
         let elapsed = self.started.elapsed().as_secs_f64();
-        let denom = queries.max(1) as f64;
         MetricsSnapshot {
             queries,
             qps: queries as f64 / elapsed.max(1e-9),
-            mean_candidates: self.candidates.load(Ordering::Relaxed) as f64 / denom,
-            mean_probes: self.probes.load(Ordering::Relaxed) as f64 / denom,
-            mean_reranked: self.reranked.load(Ordering::Relaxed) as f64 / denom,
+            mean_candidates: mean(self.candidates.load(Ordering::Relaxed), queries),
+            mean_probes: mean(self.probes.load(Ordering::Relaxed), queries),
+            mean_reranked: mean(self.reranked.load(Ordering::Relaxed), queries),
             fallbacks: self.fallbacks.load(Ordering::Relaxed),
-            mean_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
+            mean_batch: mean(self.batch_items.load(Ordering::Relaxed), batches),
             p50_us: hist.quantile(0.50),
             p95_us: hist.quantile(0.95),
             p99_us: hist.quantile(0.99),
@@ -198,6 +207,30 @@ mod tests {
         assert!((h.quantile(0.5) - 50.0).abs() <= 1.0);
         assert!((h.quantile(0.99) - 99.0).abs() <= 1.0);
         assert!((h.mean() - 50.5).abs() < 0.5);
+    }
+
+    /// A snapshot of an idle server (no queries, no batches) is all finite
+    /// zeros — the mean fields must be 0.0, never NaN (ISSUE 5 satellite).
+    #[test]
+    fn empty_snapshot_has_zero_means_not_nan() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.queries, 0);
+        for (name, v) in [
+            ("mean_candidates", s.mean_candidates),
+            ("mean_probes", s.mean_probes),
+            ("mean_reranked", s.mean_reranked),
+            ("mean_batch", s.mean_batch),
+            ("qps", s.qps),
+            ("p50_us", s.p50_us),
+            ("p95_us", s.p95_us),
+            ("p99_us", s.p99_us),
+            ("mean_us", s.mean_us),
+        ] {
+            assert!(v.is_finite(), "{name} must be finite, got {v}");
+            assert_eq!(v, 0.0, "{name} must be 0.0 with nothing recorded");
+        }
+        // And the Display form contains no NaN either.
+        assert!(!format!("{s}").contains("NaN"));
     }
 
     #[test]

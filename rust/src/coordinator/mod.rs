@@ -41,6 +41,12 @@
 //! aggregate. The coordinator also implements
 //! [`crate::query::Searcher`] for synchronous single-client use.
 
+//! Durability: [`Coordinator::start_durable`] runs the same pipeline over a
+//! [`crate::store::Store`] — warm-started from the newest snapshot + WAL
+//! replay, with [`Coordinator::insert`] routing online inserts through the
+//! WAL (threshold checkpointing per `ServingSpec::store`) and shutdown
+//! checkpointing whatever is pending.
+
 mod batcher;
 mod metrics;
 mod protocol;
@@ -50,8 +56,3 @@ pub use batcher::{drain_batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use protocol::{QueryRequest, QueryResponse};
 pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams};
-
-/// Deprecated name of [`QueryRequest`] (the per-query knobs now live in the
-/// unified [`crate::query::Query`] it wraps).
-#[deprecated(since = "0.3.0", note = "renamed to coordinator::QueryRequest")]
-pub type Query = QueryRequest;

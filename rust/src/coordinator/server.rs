@@ -18,6 +18,7 @@ use crate::lsh::spec::LshSpec;
 use crate::projection::CpRademacher;
 use crate::query::{Query, SearchResponse, SearchStats, Searcher};
 use crate::runtime::PjrtEngine;
+use crate::store::Store;
 use crate::tensor::{AnyTensor, CpTensor};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -131,6 +132,9 @@ pub struct Coordinator {
     output: Receiver<(u64, Result<QueryResponse>)>,
     metrics: Arc<Metrics>,
     threads: Vec<JoinHandle<()>>,
+    /// Durable backing ([`Coordinator::start_durable`]): inserts route
+    /// through the WAL, shutdown checkpoints pending records.
+    store: Option<Arc<Store>>,
     /// Monotonic id source for the synchronous [`Coordinator::query`] /
     /// [`Coordinator::query_batch`] wrappers: responses are matched by id,
     /// so a response stranded by an earlier aborted batch is discarded
@@ -374,7 +378,38 @@ impl Coordinator {
             output: out_rx,
             metrics,
             threads,
+            store: None,
             sync_ticket: std::cell::Cell::new(SYNC_ID_BASE),
+        }
+    }
+
+    /// Spin up the pipeline over a durable [`Store`] (warm-started or
+    /// freshly created by the caller): queries serve from the store's
+    /// index, [`Coordinator::insert`] appends to its WAL, and
+    /// [`Coordinator::shutdown`] checkpoints any pending records so a
+    /// clean restart replays nothing.
+    pub fn start_durable(store: Arc<Store>, cfg: CoordinatorConfig, backend: HashBackend) -> Self {
+        let mut coord = Coordinator::start(Arc::clone(store.index()), cfg, backend);
+        coord.store = Some(store);
+        coord
+    }
+
+    /// The durable store backing this coordinator, if started via
+    /// [`Coordinator::start_durable`].
+    pub fn store(&self) -> Option<&Arc<Store>> {
+        self.store.as_ref()
+    }
+
+    /// Durable online insert: WAL append + index insert ([`Store::insert`],
+    /// which also runs the threshold checkpoint hook). Interleaves freely
+    /// with queries — shard inserts take `&self`. Typed error when the
+    /// coordinator was started without a store.
+    pub fn insert(&self, x: AnyTensor) -> Result<usize> {
+        match &self.store {
+            Some(store) => store.insert(x),
+            None => Err(Error::Coordinator(
+                "coordinator was started without a durable store (use start_durable)".into(),
+            )),
         }
     }
 
@@ -448,6 +483,8 @@ impl Coordinator {
     }
 
     /// Close intake, wait for the pipeline to drain, and join threads.
+    /// A durable coordinator checkpoints pending WAL records on the way
+    /// out (failures are reported on stderr, not swallowed into a panic).
     /// Returns the final metrics snapshot.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.input.take(); // closes the router channel
@@ -455,6 +492,11 @@ impl Coordinator {
         while self.output.recv().is_ok() {}
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        if let Some(store) = &self.store {
+            if let Err(e) = store.checkpoint_if_dirty() {
+                eprintln!("coordinator: shutdown checkpoint failed: {e}");
+            }
         }
         self.metrics.snapshot()
     }
@@ -747,6 +789,60 @@ mod tests {
             assert_eq!(resp.hits, index.query(&qs[i]).unwrap().hits);
         }
         coord.shutdown();
+    }
+
+    /// Warm start end to end: create a store, serve + insert through a
+    /// durable coordinator, shut down (checkpoints), reopen — the warm
+    /// coordinator answers bit-identically and replays nothing.
+    #[test]
+    fn durable_coordinator_inserts_checkpoint_and_warm_start() {
+        let dir = std::env::temp_dir()
+            .join(format!("tlsh_coord_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let index = build_index(vec![6, 6, 6], 80, 4);
+        let store = Arc::new(Store::create(&dir, Arc::clone(&index), 0).unwrap());
+        let coord = Coordinator::start_durable(
+            Arc::clone(&store),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+        );
+        // Online inserts interleave with queries and return fresh ids.
+        let extra = index.item(3);
+        let id = coord.insert(extra.clone()).unwrap();
+        assert_eq!(id, 80);
+        let resp = coord.query(&Query::new(extra.clone(), 2)).unwrap();
+        let top: Vec<usize> = resp.hits.iter().map(|h| h.id).collect();
+        assert_eq!(top, vec![3, 80], "original and its durable copy, tie-broken by id");
+        assert_eq!(store.wal_pending(), 1);
+        coord.shutdown(); // checkpoints the pending record
+        drop(store);
+
+        let store = Arc::new(Store::open(&dir, 0).unwrap());
+        assert_eq!(store.recovery().wal_replayed, 0, "shutdown checkpointed");
+        assert_eq!(store.len(), 81);
+        let warm = Coordinator::start_durable(
+            Arc::clone(&store),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+        );
+        for qid in [0usize, 3, 41, 80] {
+            let q = Query::new(store.index().item(qid), 5);
+            let a = warm.query(&q).unwrap();
+            let b = index.query(&q).unwrap();
+            assert_eq!(a.hits, b.hits, "warm-start answers identically (qid {qid})");
+            assert_eq!(a.stats, b.stats);
+        }
+        warm.shutdown();
+        // A memory-only coordinator rejects durable inserts with a typed
+        // error instead of silently dropping durability.
+        let plain = Coordinator::start(
+            Arc::clone(&index),
+            CoordinatorConfig::default(),
+            HashBackend::Native,
+        );
+        assert!(matches!(plain.insert(index.item(0)), Err(Error::Coordinator(_))));
+        plain.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub enum Error {
 
     /// Underlying I/O failure.
     Io(std::io::Error),
+
+    /// A durable-store artifact (snapshot segment or WAL record) failed
+    /// structural validation: bad magic, CRC mismatch, truncated section,
+    /// or internally inconsistent contents. The store never panics on — or
+    /// silently serves — damaged bytes; it returns this instead.
+    Corrupt(String),
 }
 
 impl fmt::Display for Error {
@@ -51,6 +57,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Corrupt(m) => write!(f, "corrupt store data: {m}"),
         }
     }
 }
@@ -90,6 +97,10 @@ mod tests {
         );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
+        assert_eq!(
+            Error::Corrupt("bad crc".into()).to_string(),
+            "corrupt store data: bad crc"
+        );
     }
 
     #[test]

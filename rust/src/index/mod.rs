@@ -22,9 +22,13 @@
 //!
 //! The query entry points are `query`/`query_with`/`query_batch` (unified
 //! [`Query`] in, [`SearchResponse`] with [`crate::query::SearchStats`]
-//! out); the legacy `search`/`search_batch`/`shard_search` methods are thin
-//! deprecated wrappers over a default `Query`, bit-identical by
-//! construction (`tests/query_api.rs`).
+//! out); a default `Query` is bit-identical to the pre-0.3 per-item
+//! `search` surface, whose deprecated wrappers have since been removed.
+//!
+//! Spec-built indexes are durable: [`LshIndex::save`] writes one
+//! checksummed snapshot segment ([`crate::store`]) and [`LshIndex::load`]
+//! reconstructs a bit-identical searcher from it; the sharded structure
+//! snapshots per shard in parallel ([`ShardedLshIndex::save`]).
 
 mod codes;
 mod multiprobe;
@@ -41,7 +45,11 @@ use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::projection::ProjectionMatrix;
 use crate::query::{Query, QueryOpts, RerankPolicy, SearchResponse, SearchStats, Searcher};
+use crate::store::segment::{
+    read_segment, sigs_arena_from_buckets, write_segment, SegmentHeader, SegmentView,
+};
 use crate::tensor::AnyTensor;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Which metric the index re-ranks by (must match the hash family).
@@ -92,6 +100,10 @@ enum FamilySource {
 #[derive(Clone)]
 pub struct IndexConfig {
     source: FamilySource,
+    /// The declarative spec a [`IndexConfig::from_spec`] config was built
+    /// from — what makes the resulting index saveable (closure-built
+    /// configs have none and cannot serialize).
+    spec: Option<LshSpec>,
     /// Number of tables L.
     pub n_tables: usize,
     /// Re-ranking metric.
@@ -107,6 +119,7 @@ impl IndexConfig {
     pub fn from_spec(spec: &LshSpec) -> Result<IndexConfig> {
         Ok(IndexConfig {
             source: FamilySource::Built(spec.families()?),
+            spec: Some(spec.clone()),
             n_tables: spec.l,
             metric: spec.family.metric,
             probes: spec.probes,
@@ -126,7 +139,13 @@ impl IndexConfig {
         metric: Metric,
         probes: usize,
     ) -> IndexConfig {
-        IndexConfig { source: FamilySource::Closure(family_builder), n_tables, metric, probes }
+        IndexConfig {
+            source: FamilySource::Closure(family_builder),
+            spec: None,
+            n_tables,
+            metric,
+            probes,
+        }
     }
 }
 
@@ -149,6 +168,9 @@ pub struct LshIndex {
     norms: Vec<f64>,
     metric: Metric,
     probes: usize,
+    /// The declarative spec this index was built from (None for the
+    /// deprecated closure escape hatch) — required by [`LshIndex::save`].
+    spec: Option<LshSpec>,
 }
 
 /// Instantiate and validate the per-table hash families of a config —
@@ -443,6 +465,7 @@ impl LshIndex {
             norms: Vec::new(),
             metric: cfg.metric,
             probes: cfg.probes,
+            spec: cfg.spec.clone(),
         })
     }
 
@@ -470,6 +493,13 @@ impl LshIndex {
     /// queries override per call via [`QueryOpts::probes`]).
     pub fn probes(&self) -> usize {
         self.probes
+    }
+
+    /// The declarative spec this index was built from, if it was built
+    /// through the spec path (`None` for the deprecated closure escape
+    /// hatch — such an index cannot be saved).
+    pub fn spec(&self) -> Option<&LshSpec> {
+        self.spec.as_ref()
     }
 
     /// Access an indexed item.
@@ -593,7 +623,7 @@ impl LshIndex {
     }
 
     /// [`LshIndex::query`] over a borrowed tensor — the allocation-free
-    /// form hot loops and the deprecated wrappers use.
+    /// form hot loops use.
     pub fn query_with(&self, tensor: &AnyTensor, opts: &QueryOpts) -> Result<SearchResponse> {
         let probes = opts.probes.unwrap_or(self.probes);
         let sigs = table_signatures(&self.families, tensor, probes);
@@ -676,21 +706,82 @@ impl LshIndex {
             .collect()
     }
 
-    // -- legacy surface (deprecated wrappers over the query API) -----------
+    // -- durability (snapshot segments — see `crate::store`) ---------------
 
-    /// k-NN search from precomputed per-table signatures (exact re-rank).
-    #[deprecated(
-        since = "0.3.0",
-        note = "use LshIndex::query_with_table_signatures with a QueryOpts"
-    )]
-    pub fn search_with_signatures(
-        &self,
-        q: &AnyTensor,
-        sigs: &[u64],
-        k: usize,
-    ) -> Result<Vec<SearchResult>> {
-        let cand = self.candidates_from_signatures(sigs);
-        self.rerank_candidates(q, cand, k)
+    /// Snapshot this index to one checksummed segment file. Requires a
+    /// spec-built index (the spec is the serializable description the
+    /// families rebuild from); the deprecated closure escape hatch has no
+    /// such description and returns a typed error.
+    ///
+    /// The saved segment reloads via [`LshIndex::load`] into a
+    /// **bit-identical** searcher: same family parameters (regenerated
+    /// from the spec's seeds), same bucket contents and in-bucket order,
+    /// same cached norms — so every [`SearchResponse`] (hits *and* stats)
+    /// is equal before and after the round trip (`tests/store_roundtrip.rs`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let spec = self.spec.as_ref().ok_or_else(|| {
+            Error::InvalidParameter(
+                "only spec-built indexes can be saved (this one came from the \
+                 deprecated closure escape hatch)"
+                    .into(),
+            )
+        })?;
+        let buckets: Vec<crate::store::segment::TableBuckets> =
+            self.tables.iter().map(|t| t.sorted_buckets()).collect();
+        let sigs = sigs_arena_from_buckets(&buckets, self.items.len())?;
+        let ids: Vec<usize> = (0..self.items.len()).collect();
+        let header = SegmentHeader {
+            spec: spec.clone(),
+            n_items: self.items.len(),
+            n_tables: self.tables.len(),
+            probes: self.probes,
+            metric: self.metric,
+            shard: None,
+        };
+        write_segment(
+            path,
+            SegmentView {
+                header: &header,
+                ids: &ids,
+                sigs: &sigs,
+                buckets: &buckets,
+                items: &self.items,
+                norms: &self.norms,
+            },
+        )
+    }
+
+    /// Load a snapshot segment written by [`LshIndex::save`]. Families are
+    /// regenerated from the stored spec (deterministic seeds ⇒ identical
+    /// parameters); buckets, items, and norms come off the file. Any
+    /// structural damage or internal inconsistency is a typed
+    /// [`Error::Corrupt`] — never a panic, never a silently wrong index.
+    pub fn load(path: &Path) -> Result<LshIndex> {
+        let c = read_segment(path)?;
+        if let Some((s, of)) = c.header.shard {
+            return Err(Error::Corrupt(format!(
+                "segment is shard {s}/{of} of a sharded index — load it via \
+                 ShardedLshIndex::load on the snapshot directory"
+            )));
+        }
+        if c.ids.iter().enumerate().any(|(slot, &id)| slot != id) {
+            return Err(Error::Corrupt(
+                "whole-index segment id map is not the identity".into(),
+            ));
+        }
+        let mut cfg = IndexConfig::from_spec(&c.header.spec)?;
+        cfg.n_tables = c.header.n_tables;
+        cfg.probes = c.header.probes;
+        let families = build_families(&cfg)?;
+        Ok(LshIndex {
+            families,
+            tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
+            items: c.items,
+            norms: c.norms,
+            metric: c.header.metric,
+            probes: c.header.probes,
+            spec: Some(c.header.spec),
+        })
     }
 
     /// Exact re-rank of a candidate set against a query. Uses the cached
@@ -712,16 +803,6 @@ impl LshIndex {
         sort_results(self.metric, &mut scored);
         scored.truncate(k);
         Ok(scored)
-    }
-
-    /// k-NN search: probe, union candidates, exact re-rank.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build a query::Query (its defaults match this call bit-for-bit) \
-                and use LshIndex::query / the Searcher trait"
-    )]
-    pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
-        Ok(self.query_with(q, &QueryOpts::top_k(k))?.hits)
     }
 
     /// Exact (linear-scan) k-NN — the ground truth for recall measurements.
@@ -872,6 +953,35 @@ mod tests {
             0,
         );
         assert!(LshIndex::new(&cfg).is_err());
+    }
+
+    /// Durability needs the serializable spec: the closure escape hatch has
+    /// none, so saving is a typed error instead of a lossy snapshot.
+    #[test]
+    #[allow(deprecated)]
+    fn save_requires_a_spec_built_index() {
+        use crate::lsh::FamilySpec;
+        let dims = vec![4usize, 4];
+        let cfg = IndexConfig::from_family_builder(
+            {
+                let dims = dims.clone();
+                Arc::new(move |t: usize| {
+                    FamilySpec::srp(FamilyKind::Cp, dims.clone(), 2, 4)
+                        .build(t as u64)
+                        .unwrap()
+                })
+            },
+            2,
+            Metric::Cosine,
+            0,
+        );
+        let idx = LshIndex::new(&cfg).unwrap();
+        assert!(idx.spec().is_none());
+        let path = std::env::temp_dir().join("tlsh_closure_save_test.seg");
+        assert!(matches!(idx.save(&path), Err(Error::InvalidParameter(_))));
+        // Spec-built indexes carry their spec.
+        let spec_idx = LshIndex::new(&cosine_config(vec![4, 4], 4, 2, 0)).unwrap();
+        assert!(spec_idx.spec().is_some());
     }
 
     #[test]

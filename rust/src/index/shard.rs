@@ -29,11 +29,17 @@ use super::{
     rerank_with_policy, score_candidate, sort_results, table_signatures,
     table_signatures_batch, HashScratch, IndexConfig, Metric, SearchResult,
 };
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::query::{Query, QueryOpts, SearchResponse, SearchStats, Searcher};
-use crate::tensor::AnyTensor;
+use crate::store::segment::{
+    read_segment, sigs_arena_from_buckets, write_segment, SegmentContents, SegmentHeader,
+    SegmentView,
+};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -111,6 +117,10 @@ pub struct ShardedLshIndex {
     probes: usize,
     /// Monotonic global id source; also the item count once inserts settle.
     next_id: AtomicUsize,
+    /// The declarative spec this index was built from (None for the
+    /// deprecated closure escape hatch) — required by
+    /// [`ShardedLshIndex::save`].
+    spec: Option<LshSpec>,
 }
 
 impl ShardedLshIndex {
@@ -132,6 +142,7 @@ impl ShardedLshIndex {
             metric: cfg.metric,
             probes: cfg.probes,
             next_id: AtomicUsize::new(0),
+            spec: cfg.spec.clone(),
         })
     }
 
@@ -171,6 +182,13 @@ impl ShardedLshIndex {
         &self.families
     }
 
+    /// The declarative spec this index was built from, if it was built
+    /// through the spec path (`None` for the deprecated closure escape
+    /// hatch — such an index cannot be saved).
+    pub fn spec(&self) -> Option<&LshSpec> {
+        self.spec.as_ref()
+    }
+
     fn shard_of(&self, id: usize) -> usize {
         id % self.shards.len()
     }
@@ -193,14 +211,18 @@ impl ShardedLshIndex {
         shard.items[slot].clone()
     }
 
+    /// Per-table bucket signatures for one item — the exact computation
+    /// [`ShardedLshIndex::insert`] uses. The durable [`crate::store::Store`]
+    /// logs these to its WAL through this same helper, so replayed inserts
+    /// are bit-identical to direct ones by construction.
+    pub fn insert_signatures(&self, x: &AnyTensor) -> Vec<u64> {
+        self.families.iter().map(|fam| signature(&fam.hash(x))).collect()
+    }
+
     /// Insert a tensor (hashes with the shared families); returns its id.
     /// Takes `&self`: only the target shard is write-locked.
     pub fn insert(&self, x: AnyTensor) -> usize {
-        let sigs: Vec<u64> = self
-            .families
-            .iter()
-            .map(|fam| signature(&fam.hash(&x)))
-            .collect();
+        let sigs = self.insert_signatures(&x);
         self.insert_with_signatures(x, &sigs)
     }
 
@@ -451,65 +473,217 @@ impl ShardedLshIndex {
             .collect()
     }
 
-    // -- legacy surface (deprecated wrappers over the query API) -----------
+    // -- durability (per-shard snapshot segments — see `crate::store`) -----
 
-    /// Probe one shard and exactly re-rank its candidates.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use ShardedLshIndex::shard_query with a QueryOpts (its defaults \
-                match this call bit-for-bit; n_candidates is \
-                stats.candidates_examined)"
-    )]
-    pub fn shard_search(
-        &self,
-        shard: usize,
-        q: &AnyTensor,
-        sigs: &[Vec<u64>],
-        k: usize,
-    ) -> Result<(Vec<SearchResult>, usize)> {
-        let (partial, stats) = self.shard_query(shard, q, sigs, &QueryOpts::top_k(k))?;
-        Ok((partial, stats.candidates_examined))
+    /// Snapshot the index to a directory: one checksummed segment file per
+    /// shard, **written in parallel** (one thread per shard), plus a
+    /// `manifest.json` naming them — the manifest is written last, so its
+    /// presence implies every shard file landed. Requires a spec-built
+    /// index; reloads via [`ShardedLshIndex::load`] into a bit-identical
+    /// searcher (`tests/store_roundtrip.rs`).
+    ///
+    /// Inserts that race a snapshot land in some shards' segments and not
+    /// others; callers that need a consistent cut must quiesce inserts
+    /// first (the durable [`crate::store::Store`] holds its WAL lock across
+    /// compaction for exactly this reason).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let spec = self.spec.as_ref().ok_or_else(|| {
+            Error::InvalidParameter(
+                "only spec-built indexes can be saved (this one came from the \
+                 deprecated closure escape hatch)"
+                    .into(),
+            )
+        })?;
+        std::fs::create_dir_all(dir)?;
+        let n_shards = self.shards.len();
+        let seg_names: Vec<String> =
+            (0..n_shards).map(|s| format!("shard-{s:03}.seg")).collect();
+        let saved: Vec<Result<usize>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_shards)
+                .map(|s| {
+                    let name = &seg_names[s];
+                    scope.spawn(move || -> Result<usize> {
+                        let guard = self.shards[s].read().unwrap();
+                        let buckets: Vec<crate::store::segment::TableBuckets> =
+                            guard.tables.iter().map(|t| t.sorted_buckets()).collect();
+                        let sigs = sigs_arena_from_buckets(&buckets, guard.items.len())?;
+                        let header = SegmentHeader {
+                            spec: spec.clone(),
+                            n_items: guard.items.len(),
+                            n_tables: self.families.len(),
+                            probes: self.probes,
+                            metric: self.metric,
+                            shard: Some((s, n_shards)),
+                        };
+                        write_segment(
+                            &dir.join(name),
+                            SegmentView {
+                                header: &header,
+                                ids: &guard.ids,
+                                sigs: &sigs,
+                                buckets: &buckets,
+                                items: &guard.items,
+                                norms: &guard.norms,
+                            },
+                        )?;
+                        Ok(guard.items.len())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("save thread")).collect()
+        });
+        let mut n_items = 0usize;
+        for r in saved {
+            n_items += r?;
+        }
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str("tensor-lsh-sharded-index".into()));
+        m.insert("n_shards".to_string(), Json::Num(n_shards as f64));
+        m.insert("n_items".to_string(), Json::Num(n_items as f64));
+        m.insert("n_tables".to_string(), Json::Num(self.families.len() as f64));
+        m.insert("probes".to_string(), Json::Num(self.probes as f64));
+        m.insert("metric".to_string(), Json::Str(self.metric.name().into()));
+        m.insert("spec".to_string(), spec.to_json());
+        m.insert(
+            "segments".to_string(),
+            Json::Arr(seg_names.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        // Like the segments: fsync before rename (a manifest that exists
+        // always points at flushed shard files), then fsync the directory
+        // so the rename itself survives power loss.
+        let tmp = dir.join("manifest.json.tmp");
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(Json::Obj(m).to_string_pretty().as_bytes())?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, dir.join("manifest.json"))?;
+        crate::store::segment::sync_dir(dir)?;
+        Ok(())
     }
 
-    /// k-NN search from per-table signature lists: probe + re-rank every
-    /// shard, merge the partials.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use ShardedLshIndex::query_with_table_signatures with a QueryOpts"
-    )]
-    pub fn search_with_table_signatures(
-        &self,
-        q: &AnyTensor,
-        sigs: &[Vec<u64>],
-        k: usize,
-    ) -> Result<Vec<SearchResult>> {
-        Ok(self.query_with_table_signatures(q, sigs, &QueryOpts::top_k(k))?.hits)
-    }
+    /// Load a snapshot directory written by [`ShardedLshIndex::save`]:
+    /// parse + cross-validate the manifest, read every shard segment (in
+    /// parallel), and verify the shards partition the id space exactly
+    /// (`id mod S` placement, every id present once). Any damage or
+    /// inconsistency is a typed [`Error::Corrupt`].
+    pub fn load(dir: &Path) -> Result<ShardedLshIndex> {
+        let corrupt = |m: String| Error::Corrupt(m);
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        // The manifest is plain JSON with no CRC of its own, so EVERY way
+        // its fields can be damaged — unparseable, missing keys, wrong
+        // types, bad enum names, invalid spec — must surface as the one
+        // typed Error::Corrupt callers (and Store::open) key off.
+        let parsed = (|| -> Result<_> {
+            let m = parse(&manifest_text)?;
+            let kind = m.get("kind")?.as_str()?;
+            if kind != "tensor-lsh-sharded-index" {
+                return Err(Error::Json(format!(
+                    "manifest kind '{kind}' is not 'tensor-lsh-sharded-index'"
+                )));
+            }
+            let names: Vec<String> = m
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?;
+            Ok((
+                m.get("n_shards")?.as_usize()?,
+                m.get("n_items")?.as_usize()?,
+                m.get("n_tables")?.as_usize()?,
+                m.get("probes")?.as_usize()?,
+                Metric::parse(m.get("metric")?.as_str()?)?,
+                LshSpec::from_json(m.get("spec")?)?,
+                names,
+            ))
+        })()
+        .map_err(|e| corrupt(format!("sharded manifest invalid: {e}")))?;
+        let (n_shards, n_items, n_tables, probes, metric, spec, names) = parsed;
+        if metric != spec.family.metric {
+            return Err(corrupt("manifest metric disagrees with the spec".into()));
+        }
+        if n_shards == 0 || names.len() != n_shards {
+            return Err(corrupt(format!(
+                "manifest names {} segments for {n_shards} shards",
+                names.len()
+            )));
+        }
 
-    /// k-NN search: hash, probe all shards, exact re-rank, merge.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build a query::Query (its defaults match this call bit-for-bit) \
-                and use ShardedLshIndex::query / the Searcher trait"
-    )]
-    pub fn search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
-        Ok(self.query_with(q, &QueryOpts::top_k(k))?.hits)
-    }
+        let mut cfg = IndexConfig::from_spec(&spec)?;
+        cfg.n_tables = n_tables;
+        cfg.probes = probes;
+        let families = build_families(&cfg)?;
 
-    /// Batched k-NN search: batch-amortized hashing, then per-query
-    /// probe/re-rank.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build query::Query values and use ShardedLshIndex::query_batch / \
-                query_batch_with"
-    )]
-    pub fn search_batch(&self, qs: &[AnyTensor], k: usize) -> Result<Vec<Vec<SearchResult>>> {
-        let opts = vec![QueryOpts::top_k(k); qs.len()];
-        Ok(self
-            .query_batch_with(qs, &opts, &mut HashScratch::new())?
-            .into_iter()
-            .map(|r| r.hits)
-            .collect())
+        let loaded: Vec<Result<SegmentContents>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = names
+                .iter()
+                .map(|name| scope.spawn(move || read_segment(&dir.join(name))))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("load thread")).collect()
+        });
+
+        // Validate headers and totals BEFORE any n_items-sized allocation:
+        // the manifest is plain JSON (no CRC, unlike the segments), so a
+        // damaged n_items must become a typed error, not a giant Vec.
+        let mut contents = Vec::with_capacity(n_shards);
+        for (s, c) in loaded.into_iter().enumerate() {
+            let c = c?;
+            if c.header.shard != Some((s, n_shards)) {
+                return Err(corrupt(format!(
+                    "segment '{}' labels itself {:?}, expected shard {s} of {n_shards}",
+                    names[s], c.header.shard
+                )));
+            }
+            if c.header.spec != spec
+                || c.header.n_tables != n_tables
+                || c.header.probes != probes
+                || c.header.metric != metric
+            {
+                return Err(corrupt(format!(
+                    "segment '{}' disagrees with the manifest (spec/tables/probes/metric)",
+                    names[s]
+                )));
+            }
+            contents.push(c);
+        }
+        let total: usize = contents.iter().map(|c| c.ids.len()).sum();
+        if total != n_items {
+            return Err(corrupt(format!(
+                "shard segments hold {total} items, manifest says {n_items}"
+            )));
+        }
+        let mut seen = vec![false; n_items];
+        let mut shards = Vec::with_capacity(n_shards);
+        for (s, c) in contents.into_iter().enumerate() {
+            for &id in &c.ids {
+                if id >= n_items || id % n_shards != s || seen[id] {
+                    return Err(corrupt(format!(
+                        "segment '{}': item id {id} out of range, misplaced, or duplicated",
+                        names[s]
+                    )));
+                }
+                seen[id] = true;
+            }
+            shards.push(RwLock::new(Shard {
+                tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
+                ids: c.ids,
+                items: c.items,
+                norms: c.norms,
+            }));
+        }
+        // total == n_items + all ids distinct and < n_items ⇒ every id is
+        // present (pigeonhole); no separate missing-id scan needed.
+        debug_assert!(seen.iter().all(|&v| v));
+        Ok(ShardedLshIndex {
+            families,
+            shards,
+            metric,
+            probes,
+            next_id: AtomicUsize::new(n_items),
+            spec: Some(spec),
+        })
     }
 
     /// Deduplicated global candidate ids for a query (unranked) — the

@@ -54,6 +54,27 @@ impl HashTable {
         self.buckets.len()
     }
 
+    /// All buckets as (signature, slots) pairs sorted by signature — the
+    /// deterministic order the store's segment writer needs (HashMap
+    /// iteration order would make snapshot bytes differ run to run). The
+    /// slot vectors keep their insertion order exactly.
+    pub fn sorted_buckets(&self) -> crate::store::segment::TableBuckets {
+        let mut out: crate::store::segment::TableBuckets = self
+            .buckets
+            .iter()
+            .map(|(&sig, slots)| (sig, slots.clone()))
+            .collect();
+        out.sort_unstable_by_key(|(sig, _)| *sig);
+        out
+    }
+
+    /// Rebuild a table from stored (signature, slots) buckets — the store's
+    /// load path. Bucket vectors are adopted verbatim, so candidate
+    /// generation order is bit-identical to the saved table's.
+    pub fn from_buckets(buckets: crate::store::segment::TableBuckets) -> HashTable {
+        HashTable { buckets: buckets.into_iter().collect() }
+    }
+
     /// (mean, max) bucket size.
     pub fn occupancy(&self) -> (f64, usize) {
         if self.buckets.is_empty() {
@@ -93,6 +114,20 @@ mod tests {
         }
         // Unit stride over the full slice IS `signature`.
         assert_eq!(signature_strided(&flat, flat.len(), 1), signature(&flat));
+    }
+
+    #[test]
+    fn sorted_buckets_roundtrip_preserves_in_bucket_order() {
+        let mut t = HashTable::new();
+        t.insert(9, 4);
+        t.insert(2, 1);
+        t.insert(9, 2); // out-of-order slot inside the sig-9 bucket
+        let b = t.sorted_buckets();
+        assert_eq!(b, vec![(2, vec![1]), (9, vec![4, 2])]);
+        let back = HashTable::from_buckets(b);
+        assert_eq!(back.bucket(9), &[4, 2]);
+        assert_eq!(back.bucket(2), &[1]);
+        assert_eq!(back.n_buckets(), 2);
     }
 
     #[test]

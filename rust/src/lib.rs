@@ -44,10 +44,17 @@
 //!   cap, [`query::RerankPolicy`], per-query [`query::SearchStats`]) and
 //!   the [`query::Searcher`] trait implemented by both index structures
 //!   and the coordinator.
+//! * [`store`] — the durable layer: versioned, CRC-checked snapshot
+//!   segments ([`index::LshIndex::save`] / [`index::ShardedLshIndex::save`],
+//!   one segment per shard written in parallel) plus an append-only insert
+//!   WAL behind [`store::Store`] — open = newest valid snapshot + WAL
+//!   replay, bit-identical to the index that was saved; damage is a typed
+//!   [`Error::Corrupt`], never a panic or a silently wrong index.
 //! * [`runtime`] — PJRT loader/executor for the `artifacts/*.hlo.txt` bundle
 //!   (stubbed out unless the `pjrt` feature is enabled).
 //! * [`coordinator`] — request router, dynamic batcher, batched hash stage,
-//!   shard-parallel scatter-gather worker pool, metrics.
+//!   shard-parallel scatter-gather worker pool, metrics; warm-starts from a
+//!   [`store::Store`] and checkpoints on shutdown.
 //! * [`bench_harness`] — regenerators for every table/figure of the paper.
 //!
 //! ## Quickstart
@@ -116,6 +123,34 @@
 //! assert!(spec.family.k > 1 && spec.l >= 1);
 //! # Ok::<(), tensor_lsh::Error>(())
 //! ```
+//!
+//! A built index is durable: [`index::LshIndex::save`] snapshots it to one
+//! checksummed segment file and [`index::LshIndex::load`] reconstructs a
+//! **bit-identical** searcher (same buckets, same hits, same stats). The
+//! serving stack's directory-level [`store::Store`] adds an insert WAL and
+//! snapshot generations on top (this doctest runs under `cargo test`):
+//!
+//! ```
+//! use tensor_lsh::prelude::*;
+//!
+//! let dims = vec![6usize, 6];
+//! let mut rng = Rng::new(11);
+//! let items: Vec<AnyTensor> = (0..50)
+//!     .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+//!     .collect();
+//! let spec = LshSpec::cosine(FamilyKind::Cp, dims, 3, 8, 4).with_seed(5, 1);
+//! let index = IndexBuilder::new(spec).build_with(items.clone())?;
+//!
+//! let path = std::env::temp_dir().join("tensor_lsh_doctest.seg");
+//! index.save(&path)?;
+//! let loaded = LshIndex::load(&path)?;
+//! let q = Query::new(items[9].clone(), 5);
+//! let (a, b) = (index.query(&q)?, loaded.query(&q)?);
+//! assert_eq!(a.hits, b.hits);   // identical hits…
+//! assert_eq!(a.stats, b.stats); // …and identical per-query accounting
+//! # std::fs::remove_file(&path).ok();
+//! # Ok::<(), tensor_lsh::Error>(())
+//! ```
 
 pub mod bench_harness;
 pub mod config;
@@ -130,6 +165,7 @@ pub mod query;
 pub mod rng;
 pub mod runtime;
 pub mod stats;
+pub mod store;
 pub mod tensor;
 pub mod testutil;
 pub mod util;
@@ -146,9 +182,10 @@ pub mod prelude {
     };
     pub use crate::lsh::{
         CoordinatorBuilder, E2lshFamily, FamilyKind, FamilySpec, HashFamily, IndexBuilder,
-        LshSpec, SeedPolicy, ServingSpec, SrpFamily,
+        LshSpec, SeedPolicy, ServingSpec, SrpFamily, StoreSpec,
     };
     pub use crate::lsh::{CpE2lsh, CpSrp, NaiveE2lsh, NaiveSrp, TtE2lsh, TtSrp};
+    pub use crate::store::Store;
     pub use crate::projection::{
         CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
     };

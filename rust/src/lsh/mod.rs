@@ -24,6 +24,7 @@ pub use planner::{
 };
 pub use spec::{
     CoordinatorBuilder, FamilyKind, FamilySpec, IndexBuilder, LshSpec, SeedPolicy, ServingSpec,
+    StoreSpec,
 };
 
 use crate::projection::{CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher};

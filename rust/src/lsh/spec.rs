@@ -46,6 +46,7 @@ use crate::error::{Error, Result};
 use crate::index::{IndexConfig, LshIndex, Metric, ShardedLshIndex};
 use crate::projection::{CpRademacher, Distribution, GaussianDense, TtRademacher};
 use crate::stats;
+use crate::store::Store;
 use crate::tensor::AnyTensor;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
@@ -245,8 +246,58 @@ impl SeedPolicy {
     }
 }
 
+/// Optional durable-store configuration: where the serving stack snapshots
+/// the index ([`crate::store::Store`]) and how often the WAL checkpoints.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreSpec {
+    /// Store directory (snapshot generations + `wal.log`).
+    pub dir: String,
+    /// Compact (fresh snapshot + WAL truncation) automatically after this
+    /// many logged inserts; 0 = manual compaction only.
+    pub checkpoint_every: usize,
+}
+
+impl StoreSpec {
+    pub fn new(dir: impl Into<String>) -> StoreSpec {
+        StoreSpec { dir: dir.into(), checkpoint_every: 0 }
+    }
+
+    pub fn with_checkpoint_every(mut self, n: usize) -> StoreSpec {
+        self.checkpoint_every = n;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dir.is_empty() {
+            return Err(Error::InvalidSpec("store dir must not be empty".into()));
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("dir".to_string(), Json::Str(self.dir.clone()));
+        m.insert(
+            "checkpoint_every".to_string(),
+            Json::Num(self.checkpoint_every as f64),
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<StoreSpec> {
+        reject_unknown(v, &["dir", "checkpoint_every"], "store")?;
+        Ok(StoreSpec {
+            dir: v.get("dir")?.as_str()?.to_string(),
+            checkpoint_every: match v.as_obj()?.get("checkpoint_every") {
+                Some(n) => n.as_usize()?,
+                None => 0,
+            },
+        })
+    }
+}
+
 /// Serving-side knobs the coordinator and sharded index read off the spec.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServingSpec {
     /// Index shards (re-rank fan-out width).
     pub shards: usize,
@@ -256,11 +307,13 @@ pub struct ServingSpec {
     pub max_batch: usize,
     /// Dynamic batcher: batch deadline in microseconds.
     pub max_wait_us: u64,
+    /// Optional durable store (`None` = memory-only serving, the default).
+    pub store: Option<StoreSpec>,
 }
 
 impl Default for ServingSpec {
     fn default() -> Self {
-        ServingSpec { shards: 4, n_workers: 4, max_batch: 64, max_wait_us: 500 }
+        ServingSpec { shards: 4, n_workers: 4, max_batch: 64, max_wait_us: 500, store: None }
     }
 }
 
@@ -275,25 +328,43 @@ impl ServingSpec {
         if self.max_batch == 0 {
             return Err(Error::InvalidSpec("max_batch must be ≥ 1".into()));
         }
+        if let Some(store) = &self.store {
+            store.validate()?;
+        }
         Ok(())
     }
 
-    fn to_json(self) -> Json {
+    fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("shards".to_string(), Json::Num(self.shards as f64));
         m.insert("n_workers".to_string(), Json::Num(self.n_workers as f64));
         m.insert("max_batch".to_string(), Json::Num(self.max_batch as f64));
         m.insert("max_wait_us".to_string(), Json::Num(self.max_wait_us as f64));
+        m.insert(
+            "store".to_string(),
+            match &self.store {
+                None => Json::Null,
+                Some(s) => s.to_json(),
+            },
+        );
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<ServingSpec> {
-        reject_unknown(v, &["shards", "n_workers", "max_batch", "max_wait_us"], "serving")?;
+        reject_unknown(
+            v,
+            &["shards", "n_workers", "max_batch", "max_wait_us", "store"],
+            "serving",
+        )?;
         Ok(ServingSpec {
             shards: v.get("shards")?.as_usize()?,
             n_workers: v.get("n_workers")?.as_usize()?,
             max_batch: v.get("max_batch")?.as_usize()?,
             max_wait_us: as_u64(v.get("max_wait_us")?)?,
+            store: match v.as_obj()?.get("store") {
+                None | Some(Json::Null) => None,
+                Some(s) => Some(StoreSpec::from_json(s)?),
+            },
         })
     }
 }
@@ -382,6 +453,12 @@ impl LshSpec {
 
     pub fn with_serving(mut self, serving: ServingSpec) -> LshSpec {
         self.serving = serving;
+        self
+    }
+
+    /// Attach a durable store to the serving config (see [`StoreSpec`]).
+    pub fn with_store(mut self, store: StoreSpec) -> LshSpec {
+        self.serving.store = Some(store);
         self
     }
 
@@ -867,6 +944,12 @@ impl CoordinatorBuilder {
         CoordinatorConfig::from_spec(&self.spec)
     }
 
+    /// Attach a durable store to the serving config (see [`StoreSpec`]).
+    pub fn store(mut self, store: StoreSpec) -> CoordinatorBuilder {
+        self.spec.serving.store = Some(store);
+        self
+    }
+
     /// Hash + insert a corpus into a fresh sharded index per the spec.
     pub fn build_index(&self, items: Vec<AnyTensor>) -> Result<Arc<ShardedLshIndex>> {
         Ok(Arc::new(ShardedLshIndex::build_from_spec(&self.spec, items)?))
@@ -875,6 +958,46 @@ impl CoordinatorBuilder {
     /// Spin up the pipeline over a built index (native hash backend).
     pub fn start(&self, index: Arc<ShardedLshIndex>) -> Coordinator {
         Coordinator::start(index, self.config(), HashBackend::Native)
+    }
+
+    /// Initialize the spec's durable store from a corpus: build the sharded
+    /// index, write snapshot generation 1, open the WAL. Requires
+    /// `spec.serving.store` (typed error otherwise).
+    pub fn create_store(&self, items: Vec<AnyTensor>) -> Result<Arc<Store>> {
+        let store_spec = self.store_spec()?;
+        let index = self.build_index(items)?;
+        Ok(Arc::new(Store::create(
+            store_spec.dir.as_ref(),
+            index,
+            store_spec.checkpoint_every,
+        )?))
+    }
+
+    /// Warm-start from the spec's durable store: newest valid snapshot +
+    /// WAL replay ([`Store::open`]).
+    pub fn open_store(&self) -> Result<Arc<Store>> {
+        let store_spec = self.store_spec()?;
+        Ok(Arc::new(Store::open(
+            store_spec.dir.as_ref(),
+            store_spec.checkpoint_every,
+        )?))
+    }
+
+    /// Spin up the pipeline over a durable store (native hash backend):
+    /// queries serve from [`Store::index`], [`Coordinator::insert`] routes
+    /// through the WAL, and shutdown checkpoints pending inserts.
+    pub fn start_durable(&self, store: Arc<Store>) -> Coordinator {
+        Coordinator::start_durable(store, self.config(), HashBackend::Native)
+    }
+
+    fn store_spec(&self) -> Result<&StoreSpec> {
+        self.spec.serving.store.as_ref().ok_or_else(|| {
+            Error::InvalidSpec(
+                "spec.serving.store is not configured (use CoordinatorBuilder::store \
+                 or LshSpec::with_store)"
+                    .into(),
+            )
+        })
     }
 
     /// Push a whole query trace through a fresh coordinator and collect the
@@ -912,12 +1035,25 @@ mod tests {
                 n_workers: 2,
                 max_batch: 16,
                 max_wait_us: 250,
+                store: None,
             });
         let text = spec.to_json_string();
         let back = LshSpec::from_json_str(&text).unwrap();
         assert_eq!(back, spec);
         // And a second trip is stable.
         assert_eq!(back.to_json_string(), text);
+        // The optional store section round-trips too.
+        let durable = spec
+            .clone()
+            .with_store(StoreSpec::new("/var/lib/tensorlsh").with_checkpoint_every(5000));
+        let back = LshSpec::from_json_str(&durable.to_json_string()).unwrap();
+        assert_eq!(back, durable);
+        assert_eq!(back.serving.store.as_ref().unwrap().checkpoint_every, 5000);
+        // An empty store dir is a typed validation error.
+        assert!(matches!(
+            spec.clone().with_store(StoreSpec::new("")).validate(),
+            Err(Error::InvalidSpec(_))
+        ));
     }
 
     #[test]

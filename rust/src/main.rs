@@ -10,7 +10,8 @@
 //!
 //! commands:
 //!   info     show effective config + canonical spec JSON, validity report,
-//!            artifact manifest
+//!            artifact manifest; `info <file.seg>` describes a snapshot
+//!            segment (header, sections, sizes)
 //!   plan     (K, L) parameter planning from collision probabilities;
 //!            prints the planned spec JSON on stdout (summary on stderr),
 //!            so `plan > spec.json` feeds straight back into `--config`
@@ -19,7 +20,13 @@
 //!   query    build an index once, then query it with per-call knobs:
 //!            --probes N, --budget N (candidate cap), --rerank
 //!            exact|signature|budget:N, --fallback, --no-dedup
-//!   serve    run the coordinator over a synthetic query trace
+//!   save     build an index and initialize a durable store: --store <dir>
+//!   load     warm-start from a durable store (snapshot + WAL replay) and
+//!            verify it with self-queries: --store <dir>
+//!   compact  checkpoint a store: fresh snapshot generation + WAL truncate
+//!   serve    run the coordinator over a synthetic query trace;
+//!            `serve --store <dir>` warm-starts from (or initializes) the
+//!            store and checkpoints on shutdown
 //!   exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all
 //! ```
 
@@ -29,10 +36,11 @@ use tensor_lsh::config::AppConfig;
 use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, QueryRequest};
 use tensor_lsh::error::{Error, Result};
 use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
-use tensor_lsh::lsh::{validity_report, HashFamily, LshSpec};
+use tensor_lsh::lsh::{validity_report, HashFamily, LshSpec, StoreSpec};
 use tensor_lsh::query::{QueryOpts, RerankPolicy};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, Manifest};
+use tensor_lsh::store::{self, Store};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
 use tensor_lsh::workload::{low_rank_corpus, zipf_trace, DatasetSpec, PairFormat};
 
@@ -65,11 +73,15 @@ fn print_usage() {
          \x20 query    build an index once, query it with per-call knobs:\n\
          \x20          --probes N --budget N --rerank exact|signature|budget:N\n\
          \x20          --fallback --no-dedup\n\
-         \x20 serve    run the coordinator over a synthetic query trace\n\
+         \x20 save     build an index + initialize a durable store (--store <dir>)\n\
+         \x20 load     warm-start from a store, verify with self-queries\n\
+         \x20 compact  checkpoint a store (fresh snapshot, truncate the WAL)\n\
+         \x20 serve    run the coordinator over a synthetic query trace;\n\
+         \x20          --store <dir> warm-starts and checkpoints on shutdown\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
          \x20            n_items top_k n_workers shards max_batch max_wait_us\n\
-         \x20            seed seed_stride artifact_dir"
+         \x20            seed seed_stride artifact_dir store checkpoint_every"
     );
 }
 
@@ -99,12 +111,15 @@ fn parse_config(rest: &[String]) -> Result<(AppConfig, Vec<String>)> {
 fn run(cmd: &str, rest: &[String]) -> Result<()> {
     let (cfg, positional) = parse_config(rest)?;
     match cmd {
-        "info" => cmd_info(&cfg),
+        "info" => cmd_info(&cfg, &positional),
         "plan" => cmd_plan(&cfg),
         "hash" => cmd_hash(&cfg),
         "search" => cmd_search(&cfg),
         "query" => cmd_query(&cfg, &positional),
-        "serve" => cmd_serve(&cfg, positional.iter().any(|p| p == "pjrt")),
+        "save" => cmd_save(&cfg, &positional),
+        "load" => cmd_load(&cfg, &positional),
+        "compact" => cmd_compact(&cfg, &positional),
+        "serve" => cmd_serve(&cfg, &positional),
         "exp" => cmd_exp(&cfg, &positional),
         other => {
             print_usage();
@@ -113,7 +128,12 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
     }
 }
 
-fn cmd_info(cfg: &AppConfig) -> Result<()> {
+fn cmd_info(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    // `info <file.seg>`: describe a snapshot segment instead of the config.
+    if let Some(path) = positional.first() {
+        print!("{}", store::describe(path.as_ref())?);
+        return Ok(());
+    }
     println!("# effective config\n{}", cfg.to_json());
     println!(
         "\n# canonical spec (this document feeds straight back into --config)\n{}",
@@ -325,7 +345,170 @@ fn cmd_query(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
+/// Pull `--store <dir>` out of the positional args; everything else passes
+/// through.
+fn split_store_flag(positional: &[String]) -> Result<(Option<String>, Vec<String>)> {
+    let mut rest = Vec::new();
+    let mut dir = None;
+    let mut i = 0;
+    while i < positional.len() {
+        if positional[i] == "--store" {
+            dir = Some(flag_value(positional, i, "--store")?.to_string());
+            i += 2;
+        } else {
+            rest.push(positional[i].clone());
+            i += 1;
+        }
+    }
+    Ok((dir, rest))
+}
+
+/// The store to operate on: the `--store` flag wins, otherwise the spec's
+/// `serving.store` section; having neither is a typed config error. The
+/// flag keeps the spec's checkpoint threshold when one is configured.
+fn resolve_store(cfg: &AppConfig, flag: Option<String>) -> Result<StoreSpec> {
+    let configured = cfg.spec.serving.store.clone();
+    match flag {
+        Some(dir) => Ok(StoreSpec {
+            dir,
+            checkpoint_every: configured.map_or(0, |s| s.checkpoint_every),
+        }),
+        None => configured.ok_or_else(|| {
+            Error::Config(
+                "no store configured (pass --store <dir> or set store=<dir>)".into(),
+            )
+        }),
+    }
+}
+
+/// Build the spec's index over a synthetic corpus and initialize a durable
+/// store at --store <dir>.
+fn cmd_save(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (flag, _) = split_store_flag(positional)?;
+    let store_spec = resolve_store(cfg, flag)?;
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+    let store = Store::create(store_spec.dir.as_ref(), index, store_spec.checkpoint_every)?;
+    println!(
+        "saved {} items ({} shards × {} tables) to '{}' (generation {})",
+        store.len(),
+        store.index().n_shards(),
+        store.index().n_tables(),
+        store.dir().display(),
+        store.generation()
+    );
+    Ok(())
+}
+
+/// Warm-start from a durable store and verify it answers.
+fn cmd_load(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (flag, _) = split_store_flag(positional)?;
+    let store_spec = resolve_store(cfg, flag)?;
+    let store = Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?;
+    let rec = store.recovery();
+    println!(
+        "opened '{}': {} items, generation {}, {} WAL records replayed{}{}",
+        store.dir().display(),
+        store.len(),
+        rec.generation,
+        rec.wal_replayed,
+        if rec.wal_torn_bytes > 0 {
+            format!(", {} torn WAL bytes dropped", rec.wal_torn_bytes)
+        } else {
+            String::new()
+        },
+        if rec.snapshots_skipped.is_empty() {
+            String::new()
+        } else {
+            format!(", skipped damaged generations {:?}", rec.snapshots_skipped)
+        },
+    );
+    let index = store.index();
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x10AD]);
+    let n_q = 10.min(index.len());
+    for _ in 0..n_q {
+        let qid = rng.below(index.len());
+        let resp = index.query_with(&index.item(qid), &QueryOpts::top_k(1))?;
+        if resp.hits.first().map(|h| h.id) != Some(qid) {
+            return Err(Error::Corrupt(format!(
+                "self-query for item {qid} did not return itself"
+            )));
+        }
+    }
+    println!("verified: {n_q}/{n_q} self-queries returned their own item");
+    Ok(())
+}
+
+/// Checkpoint a store: fresh snapshot generation, truncated WAL.
+fn cmd_compact(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (flag, _) = split_store_flag(positional)?;
+    let store_spec = resolve_store(cfg, flag)?;
+    let store = Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?;
+    let pending = store.wal_pending();
+    let generation = store.compact()?;
+    println!(
+        "compacted '{}': folded {pending} WAL records into generation {generation}",
+        store.dir().display()
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (store_flag, rest) = split_store_flag(positional)?;
+    let pjrt = rest.iter().any(|p| p == "pjrt");
+    // Durable serving: warm-start from (or initialize) the store, route the
+    // trace through a durable coordinator, checkpoint on shutdown.
+    if store_flag.is_some() || cfg.spec.serving.store.is_some() {
+        if pjrt {
+            return Err(Error::Config(
+                "serve --store and the pjrt backend cannot be combined yet".into(),
+            ));
+        }
+        return cmd_serve_durable(cfg, resolve_store(cfg, store_flag)?);
+    }
+    cmd_serve_memory(cfg, pjrt)
+}
+
+fn cmd_serve_durable(cfg: &AppConfig, store_spec: StoreSpec) -> Result<()> {
+    let dir: &std::path::Path = store_spec.dir.as_ref();
+    let store = if Store::exists(dir) {
+        let store = Arc::new(Store::open(dir, store_spec.checkpoint_every)?);
+        println!(
+            "warm-started '{}': {} items (generation {}, {} WAL records replayed)",
+            dir.display(),
+            store.len(),
+            store.recovery().generation,
+            store.recovery().wal_replayed
+        );
+        store
+    } else {
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+        let store = Arc::new(Store::create(dir, index, store_spec.checkpoint_every)?);
+        println!("initialized '{}' with {} items", dir.display(), store.len());
+        store
+    };
+    let index = Arc::clone(store.index());
+    let coord = Coordinator::start_durable(store, cfg.coordinator(), HashBackend::Native);
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x5E71]);
+    let trace = zipf_trace(&mut rng, index.len(), 4 * cfg.n_items.min(2000), 1.1);
+    let n = trace.len();
+    for (i, &id) in trace.iter().enumerate() {
+        coord.submit(QueryRequest::new(i as u64, index.item(id), cfg.top_k))?;
+    }
+    let mut served = 0usize;
+    for _ in 0..n {
+        match coord.recv() {
+            Some(Ok(_)) => served += 1,
+            Some(Err(e)) => return Err(e),
+            None => break,
+        }
+    }
+    let snap = coord.shutdown(); // checkpoints pending WAL records
+    println!("served {served} queries (durable)");
+    println!("{snap}");
+    Ok(())
+}
+
+fn cmd_serve_memory(cfg: &AppConfig, pjrt: bool) -> Result<()> {
     let (index, backend) = if pjrt {
         // PJRT serving uses the manifest shapes and LSH banding: the K-wide
         // artifact output is split into `l` sub-signatures per query. A
@@ -351,7 +534,7 @@ fn cmd_serve(cfg: &AppConfig, pjrt: bool) -> Result<()> {
         )
         .with_banded(true)
         .with_seed(cfg.spec.seeds.base, 0)
-        .with_serving(cfg.spec.serving);
+        .with_serving(cfg.spec.serving.clone());
         // The artifact emits exact-bucket codes only; a probed index would
         // silently diverge between the PJRT path and the native fallback,
         // so banded serving pins probes to 0.

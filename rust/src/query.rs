@@ -23,13 +23,11 @@
 //!   `ProjectionMatrix`/`CodeMatrix` SoA path with a reused
 //!   [`crate::index::HashScratch`].
 //!
-//! The legacy `search`/`search_batch`/`shard_search` methods survive as
-//! thin deprecated wrappers that build a default `Query`; a default query
-//! is bit-identical to them (`tests/query_api.rs`). Because those inherent
-//! methods still exist, calling the trait's `search` *on a concrete index
-//! type* resolves to the deprecated inherent method first — use the
-//! inherent `query`/`query_batch` entry points directly, or go through a
-//! `&dyn Searcher` / generic bound where the trait method applies.
+//! The pre-0.3 per-item `search`/`search_batch`/`shard_search` wrappers
+//! were removed once this API became the only caller: a default `Query`
+//! is bit-identical to what they did (`tests/query_api.rs`), and the
+//! `Searcher` trait methods now resolve directly on the concrete index
+//! types as well as through `&dyn Searcher`.
 //!
 //! Tie-breaking: hits are ordered best-first (ascending distance,
 //! descending similarity or collision count) with ties broken by ascending

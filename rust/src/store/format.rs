@@ -1,0 +1,390 @@
+//! Byte-level framing shared by segment files and the WAL: little-endian
+//! primitives, section frames, and a bounds-checked reader whose every
+//! failure is a typed [`Error::Corrupt`] (never a panic, never a silent
+//! short read).
+//!
+//! Segment file layout (all integers little-endian):
+//!
+//! ```text
+//! [magic: 8 bytes "TLSHSEG\0"]
+//! [u32 format version]
+//! [u32 section count]
+//! section × count:
+//!   [u32 tag] [u64 payload len] [payload] [u32 crc32(tag ‖ len ‖ payload)]
+//! ```
+//!
+//! The CRC covers the tag and length words too, so a flipped tag or length
+//! cannot masquerade as a different (valid-looking) section. Unknown tags
+//! whose CRC verifies are *skipped* — a newer writer may append sections an
+//! older reader does not know, which is the format's forward-versioning
+//! story; bumping [`FORMAT_VERSION`] is reserved for changes an old reader
+//! cannot safely ignore.
+
+use super::crc::{crc32, Crc32};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Magic prefix of every segment file.
+pub const SEGMENT_MAGIC: [u8; 8] = *b"TLSHSEG\0";
+
+/// Magic prefix of every WAL file.
+pub const WAL_MAGIC: [u8; 8] = *b"TLSHWAL\0";
+
+/// Current on-disk format version (segments and WAL share it).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section tags of the segment format.
+pub mod tag {
+    /// JSON header: spec, counts, metric, shard placement.
+    pub const HEADER: u32 = 1;
+    /// Slot → global-id map (`u64` per slot).
+    pub const IDMAP: u32 = 2;
+    /// Flat bucket-signature arena, slot-major (`u64` per (slot, table)).
+    pub const SIGS: u32 = 3;
+    /// Per-table bucket lists (signature → slot vector, in-bucket order
+    /// preserved exactly).
+    pub const BUCKETS: u32 = 4;
+    /// The indexed tensors.
+    pub const ITEMS: u32 = 5;
+    /// Cached Frobenius norms (`f64` per slot).
+    pub const NORMS: u32 = 6;
+}
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+/// Little-endian append helpers over a byte buffer.
+pub trait WriteLe {
+    fn put_u8(&mut self, v: u8);
+    fn put_u32(&mut self, v: u32);
+    fn put_u64(&mut self, v: u64);
+    fn put_f32(&mut self, v: f32);
+    fn put_f64(&mut self, v: f64);
+    fn put_bytes(&mut self, v: &[u8]);
+}
+
+impl WriteLe for Vec<u8> {
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f32(&mut self, v: f32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_bytes(&mut self, v: &[u8]) {
+        self.extend_from_slice(v);
+    }
+}
+
+/// Assembles a segment file in memory: sections are framed and checksummed
+/// as they are added, [`SegmentFileWriter::into_bytes`] yields the final
+/// file image.
+pub struct SegmentFileWriter {
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl Default for SegmentFileWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SegmentFileWriter {
+    pub fn new() -> Self {
+        SegmentFileWriter { sections: Vec::new() }
+    }
+
+    /// Add one section (tag must be unique within the file).
+    pub fn section(&mut self, tag: u32, payload: Vec<u8>) {
+        debug_assert!(
+            self.sections.iter().all(|(t, _)| *t != tag),
+            "duplicate section tag {tag}"
+        );
+        self.sections.push((tag, payload));
+    }
+
+    /// The complete file image: magic, version, count, framed sections.
+    pub fn into_bytes(self) -> Vec<u8> {
+        let total: usize =
+            self.sections.iter().map(|(_, p)| p.len() + 16).sum::<usize>() + 16;
+        let mut out = Vec::with_capacity(total);
+        out.put_bytes(&SEGMENT_MAGIC);
+        out.put_u32(FORMAT_VERSION);
+        out.put_u32(self.sections.len() as u32);
+        for (tag, payload) in self.sections {
+            let mut crc = Crc32::new();
+            crc.update(&tag.to_le_bytes());
+            crc.update(&(payload.len() as u64).to_le_bytes());
+            crc.update(&payload);
+            out.put_u32(tag);
+            out.put_u64(payload.len() as u64);
+            out.put_bytes(&payload);
+            out.put_u32(crc.finish());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor; every short read is a typed
+/// [`Error::Corrupt`].
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Context string for error messages ("segment header", "WAL record").
+    what: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8], what: &'a str) -> Self {
+        Reader { bytes, pos: 0, what }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(corrupt(format!(
+                "{}: truncated ({} bytes needed, {} remain)",
+                self.what,
+                n,
+                self.remaining()
+            )));
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit `usize` and stay under `cap` — guards length
+    /// prefixes so damaged bytes cannot drive absurd allocations.
+    pub fn len_u64(&mut self, cap: u64, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        if v > cap {
+            return Err(corrupt(format!(
+                "{}: {what} {v} exceeds bound {cap}",
+                self.what
+            )));
+        }
+        Ok(v as usize)
+    }
+
+    /// `n` elements of `width` bytes — overflow-checked, so an absurd
+    /// count from damaged bytes is a typed error, not a wrapped multiply.
+    fn take_n(&mut self, n: usize, width: usize) -> Result<&'a [u8]> {
+        let total = n.checked_mul(width).ok_or_else(|| {
+            corrupt(format!("{}: element count {n} overflows", self.what))
+        })?;
+        self.take(total)
+    }
+
+    /// Bulk-read `n` little-endian u64s (a straight byte copy + per-word
+    /// conversion — the "flat arena" load path).
+    pub fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take_n(n, 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Bulk-read `n` little-endian u32s.
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take_n(n, 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Bulk-read `n` little-endian f32s (bit-exact, NaN payloads included).
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take_n(n, 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Bulk-read `n` little-endian f64s (bit-exact).
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take_n(n, 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Parse a segment file image into its checksum-verified sections
+/// (tag → payload). Duplicate tags, bad magic, unsupported versions, CRC
+/// mismatches, and truncation are all typed [`Error::Corrupt`]s; unknown
+/// tags that verify are kept in the map (callers ignore what they do not
+/// know — forward compatibility).
+pub fn read_sections(bytes: &[u8]) -> Result<BTreeMap<u32, &[u8]>> {
+    let mut r = Reader::new(bytes, "segment");
+    let magic = r.take(8)?;
+    if magic != SEGMENT_MAGIC {
+        return Err(corrupt("segment: bad magic (not a tensor-lsh segment file)"));
+    }
+    let version = r.u32()?;
+    if version == 0 || version > FORMAT_VERSION {
+        return Err(corrupt(format!(
+            "segment: format version {version} not supported (this build reads ≤ {FORMAT_VERSION})"
+        )));
+    }
+    let count = r.u32()?;
+    let mut sections = BTreeMap::new();
+    for i in 0..count {
+        let frame_start = r.pos;
+        let tag = r.u32()?;
+        let len = r.len_u64(r.bytes.len() as u64, "section length")?;
+        let payload = r.take(len)?;
+        let stored_crc = r.u32()?;
+        // CRC covers tag ‖ len ‖ payload (the whole frame minus the CRC).
+        let computed = crc32(&bytes[frame_start..frame_start + 12 + len]);
+        if computed != stored_crc {
+            return Err(corrupt(format!(
+                "segment: section {i} (tag {tag}) CRC mismatch \
+                 (stored {stored_crc:#010x}, computed {computed:#010x})"
+            )));
+        }
+        if sections.insert(tag, payload).is_some() {
+            return Err(corrupt(format!("segment: duplicate section tag {tag}")));
+        }
+    }
+    if !r.is_empty() {
+        return Err(corrupt(format!(
+            "segment: {} trailing bytes after the last section",
+            r.remaining()
+        )));
+    }
+    Ok(sections)
+}
+
+/// Fetch a required section from a parsed map.
+pub fn require<'a>(sections: &BTreeMap<u32, &'a [u8]>, tag: u32, name: &str) -> Result<&'a [u8]> {
+    sections
+        .get(&tag)
+        .copied()
+        .ok_or_else(|| corrupt(format!("segment: missing required section '{name}' (tag {tag})")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_section_file() -> Vec<u8> {
+        let mut w = SegmentFileWriter::new();
+        w.section(tag::HEADER, b"{\"hello\": 1}".to_vec());
+        w.section(tag::SIGS, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        w.into_bytes()
+    }
+
+    #[test]
+    fn roundtrip_sections() {
+        let bytes = two_section_file();
+        let sections = read_sections(&bytes).unwrap();
+        assert_eq!(sections[&tag::HEADER], b"{\"hello\": 1}");
+        assert_eq!(sections[&tag::SIGS], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(require(&sections, tag::ITEMS, "items").is_err());
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_a_typed_corrupt_error() {
+        let bytes = two_section_file();
+        for i in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0x40;
+            match read_sections(&b) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("flip at byte {i}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_a_typed_corrupt_error() {
+        let bytes = two_section_file();
+        for cut in 0..bytes.len() {
+            match read_sections(&bytes[..cut]) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("cut at {cut}: expected Corrupt, got {other:?}"),
+            }
+        }
+        // Trailing garbage is rejected too.
+        let mut b = bytes.clone();
+        b.push(0);
+        assert!(matches!(read_sections(&b), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn future_versions_are_rejected_not_misparsed() {
+        let mut bytes = two_section_file();
+        bytes[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        match read_sections(&bytes) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("version"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_primitives_roundtrip() {
+        let mut buf = Vec::new();
+        buf.put_u8(7);
+        buf.put_u32(0xDEADBEEF);
+        buf.put_u64(u64::MAX - 1);
+        buf.put_f32(-1.5);
+        buf.put_f64(f64::MIN_POSITIVE);
+        let mut r = Reader::new(&buf, "test");
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), f64::MIN_POSITIVE);
+        assert!(r.is_empty());
+        assert!(matches!(r.u8(), Err(Error::Corrupt(_))));
+    }
+}

@@ -1,0 +1,570 @@
+//! Durable index store: versioned snapshot segments + an insert WAL.
+//!
+//! Everything above this module is memory-only; this is the layer that
+//! makes a built index survive a restart. The paper's point — tensorized
+//! LSH parameters are polynomial, not exponential, in tensor order — means
+//! a snapshot is dominated by the flat signature arenas and the (low-rank)
+//! tensors themselves, both of which serialize as straight byte copies
+//! (EXPERIMENTS.md §Store).
+//!
+//! Pieces, bottom-up:
+//!
+//! * [`crc`] — hand-rolled CRC-32 (IEEE); every section and record is
+//!   checksummed, and every mismatch is a typed [`Error::Corrupt`].
+//! * [`format`] — the little-endian framing: magic, format version,
+//!   `[tag ‖ len ‖ payload ‖ crc]` sections. Unknown sections are skipped
+//!   (forward compatibility); unknown *versions* are refused.
+//! * [`tensors`] — bit-exact [`AnyTensor`] (de)serialization.
+//! * [`segment`] — one snapshot file: spec JSON header, id map, flat
+//!   signature arena, per-table buckets, items, norms — cross-validated
+//!   on load so a segment either reconstructs the exact index or refuses.
+//! * [`wal`] — the append-only insert log: torn tails are dropped (crash
+//!   mid-append), damaged history is [`Error::Corrupt`].
+//! * [`Store`] — the directory-level database: numbered snapshot
+//!   generations (`snap-000001/`, `snap-000002/`, …) each written by
+//!   [`crate::index::ShardedLshIndex::save`] (one segment per shard, in
+//!   parallel, plus a manifest), and one `wal.log`. [`Store::open`] loads
+//!   the newest generation that validates and replays the log;
+//!   [`Store::compact`] writes a fresh generation and truncates the log.
+//!
+//! The single-file entry points [`crate::index::LshIndex::save`] /
+//! [`crate::index::LshIndex::load`] use the same segment format without
+//! the directory/WAL machinery.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tensor_lsh::prelude::*;
+//! use tensor_lsh::store::Store;
+//!
+//! # fn items() -> Vec<AnyTensor> { Vec::new() }
+//! let spec = LshSpec::cosine(FamilyKind::Cp, vec![8, 8, 8], 4, 10, 6);
+//! let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items())?);
+//! let store = Store::create("my-index".as_ref(), index, 1000)?;
+//! store.insert(AnyTensor::Cp(CpTensor::random_gaussian(&mut Rng::new(1), &[8, 8, 8], 2)))?;
+//! drop(store);
+//! // Later / elsewhere: warm-start bit-identically (snapshot + WAL replay).
+//! let store = Store::open("my-index".as_ref(), 1000)?;
+//! # Ok::<(), tensor_lsh::Error>(())
+//! ```
+
+pub mod crc;
+pub mod format;
+pub mod segment;
+pub mod tensors;
+pub mod wal;
+
+pub use segment::{
+    describe, read_segment, write_segment, SegmentContents, SegmentHeader, SegmentView,
+};
+pub use tensors::tensors_bit_equal;
+pub use wal::{read_wal, WalRecord, WalReplay, WalWriter};
+
+use crate::error::{Error, Result};
+use crate::index::ShardedLshIndex;
+use crate::tensor::AnyTensor;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+/// What [`Store::open`] had to do to recover.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryInfo {
+    /// Generation of the snapshot that loaded.
+    pub generation: u64,
+    /// Newer generations that failed validation and were skipped.
+    pub snapshots_skipped: Vec<u64>,
+    /// WAL records replayed over the snapshot.
+    pub wal_replayed: usize,
+    /// WAL records the loaded snapshot had already folded in (a compaction
+    /// crashed between its snapshot rename and its WAL truncation).
+    pub wal_already_applied: usize,
+    /// Torn-tail bytes dropped from the WAL (crash mid-append).
+    pub wal_torn_bytes: u64,
+}
+
+struct WalState {
+    writer: wal::WalWriter,
+    /// Inserts logged since the current generation's snapshot.
+    pending: usize,
+    generation: u64,
+}
+
+/// Directory-level durable store over a [`ShardedLshIndex`]: numbered
+/// snapshot generations plus an insert WAL. `&self` throughout — inserts
+/// serialize on the WAL lock, queries go straight to [`Store::index`].
+pub struct Store {
+    dir: PathBuf,
+    index: Arc<ShardedLshIndex>,
+    /// Compact automatically after this many WAL inserts (0 = manual only)
+    /// — the threshold checkpoint hook `ServingSpec::store` configures.
+    checkpoint_every: usize,
+    wal: Mutex<WalState>,
+    recovery: RecoveryInfo,
+}
+
+const WAL_FILE: &str = "wal.log";
+
+fn snap_dir(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snap-{generation:06}"))
+}
+
+/// Numbered snapshot generations present under `dir`, descending.
+fn list_generations(dir: &Path) -> Result<Vec<u64>> {
+    let mut gens = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(gens),
+        Err(e) => return Err(e.into()),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some(num) = name.strip_prefix("snap-") {
+                if let Ok(g) = num.parse::<u64>() {
+                    gens.push(g);
+                }
+            }
+        }
+    }
+    gens.sort_unstable_by(|a, b| b.cmp(a));
+    Ok(gens)
+}
+
+impl Store {
+    /// True when `dir` holds at least one snapshot generation — the "warm
+    /// start or initialize?" probe CLI/serving paths use. Deliberately does
+    /// not validate the generations (that is [`Store::open`]'s job, and its
+    /// failures must stay loud).
+    pub fn exists(dir: &Path) -> bool {
+        list_generations(dir).map(|g| !g.is_empty()).unwrap_or(false)
+    }
+
+    /// Initialize a fresh store: write generation 1 from the given index
+    /// (which must be spec-built) and start an empty WAL. Fails if `dir`
+    /// already holds a store.
+    pub fn create(
+        dir: &Path,
+        index: Arc<ShardedLshIndex>,
+        checkpoint_every: usize,
+    ) -> Result<Store> {
+        std::fs::create_dir_all(dir)?;
+        if !list_generations(dir)?.is_empty() {
+            return Err(Error::InvalidParameter(format!(
+                "'{}' already holds a store (use Store::open)",
+                dir.display()
+            )));
+        }
+        if let Err(e) = index.save(&snap_dir(dir, 1)) {
+            // Don't leave a half-written generation behind: it would make
+            // create() refuse ("already holds a store") while open() also
+            // fails — an unusable directory with no way out but rm -rf.
+            let _ = std::fs::remove_dir_all(snap_dir(dir, 1));
+            return Err(e);
+        }
+        segment::sync_dir(dir)?; // the snap-000001 entry itself
+        // A stale wal.log (e.g. snapshots deleted by hand) must not replay
+        // against the fresh generation: start the log empty.
+        let wal_path = dir.join(WAL_FILE);
+        if wal_path.exists() {
+            wal::truncate_wal(&wal_path, 0)?;
+        }
+        let writer = wal::WalWriter::open_append(&wal_path)?;
+        Ok(Store {
+            dir: dir.to_path_buf(),
+            index,
+            checkpoint_every,
+            wal: Mutex::new(WalState { writer, pending: 0, generation: 1 }),
+            recovery: RecoveryInfo { generation: 1, ..RecoveryInfo::default() },
+        })
+    }
+
+    /// Open an existing store: load the newest snapshot generation that
+    /// validates, replay the WAL over it, drop any torn tail, and resume
+    /// appending. WAL records that cannot extend the recovered snapshot
+    /// (id discontinuity, table-count mismatch, CRC-valid but undecodable)
+    /// fail with [`Error::Corrupt`] rather than silently losing inserts.
+    pub fn open(dir: &Path, checkpoint_every: usize) -> Result<Store> {
+        let gens = list_generations(dir)?;
+        if gens.is_empty() {
+            return Err(corrupt(format!(
+                "'{}' holds no snapshot generation",
+                dir.display()
+            )));
+        }
+        let mut skipped = Vec::new();
+        let mut loaded: Option<(u64, ShardedLshIndex)> = None;
+        let mut first_err: Option<Error> = None;
+        for &g in &gens {
+            match ShardedLshIndex::load(&snap_dir(dir, g)) {
+                Ok(idx) => {
+                    loaded = Some((g, idx));
+                    break;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    skipped.push(g);
+                }
+            }
+        }
+        let (generation, index) = loaded.ok_or_else(|| match first_err {
+            Some(Error::Corrupt(m)) => corrupt(format!(
+                "no snapshot generation in '{}' validates (newest failure: {m})",
+                dir.display()
+            )),
+            Some(e) => e,
+            None => corrupt("no snapshot generation found"),
+        })?;
+        if !skipped.is_empty() {
+            // Falling back is better than refusing to boot, but it can
+            // drop inserts that were checkpointed only into the damaged
+            // newer generation — say so loudly (and in RecoveryInfo).
+            eprintln!(
+                "store: skipped damaged snapshot generation(s) {skipped:?} in '{}'; \
+                 recovered from generation {generation} — inserts folded only into \
+                 the skipped generation(s) are lost",
+                dir.display()
+            );
+        }
+        let index = Arc::new(index);
+
+        // Replay the log. Its records were written against the *newest*
+        // snapshot; if that snapshot was skipped as corrupt, the id chain
+        // will not line up with the older generation we fell back to — that
+        // is data loss, and it must be loud, not silent.
+        let wal_path = dir.join(WAL_FILE);
+        let replay = wal::read_wal(&wal_path)?;
+        let mut n_replayed = 0usize;
+        let mut n_already_applied = 0usize;
+        for rec in replay.records {
+            if rec.id < index.len() as u64 {
+                // A compaction that crashed between renaming the new
+                // snapshot and truncating the log leaves records the
+                // loaded snapshot already folded in — skip them (a later
+                // checkpoint truncates the log for good).
+                n_already_applied += 1;
+                continue;
+            }
+            if rec.sigs.len() != index.n_tables() {
+                return Err(corrupt(format!(
+                    "WAL record {} carries {} signatures, index has {} tables",
+                    rec.id,
+                    rec.sigs.len(),
+                    index.n_tables()
+                )));
+            }
+            if rec.id != index.len() as u64 {
+                return Err(corrupt(format!(
+                    "WAL id discontinuity: record {} cannot extend an index of {} items \
+                     (a newer snapshot may have been lost)",
+                    rec.id,
+                    index.len()
+                )));
+            }
+            index.insert_with_signatures(rec.item, &rec.sigs);
+            n_replayed += 1;
+        }
+        if replay.torn_bytes > 0 {
+            wal::truncate_wal(&wal_path, replay.valid_len)?;
+        }
+        let writer = wal::WalWriter::open_append(&wal_path)?;
+        Ok(Store {
+            dir: dir.to_path_buf(),
+            index,
+            checkpoint_every,
+            wal: Mutex::new(WalState {
+                // Already-applied records count as pending too: they sit in
+                // the log until the next checkpoint rewrites it.
+                pending: n_replayed + n_already_applied,
+                writer,
+                generation,
+            }),
+            recovery: RecoveryInfo {
+                generation,
+                snapshots_skipped: skipped,
+                wal_replayed: n_replayed,
+                wal_already_applied: n_already_applied,
+                wal_torn_bytes: replay.torn_bytes,
+            },
+        })
+    }
+
+    /// The served index. Queries go straight here ([`ShardedLshIndex`] is
+    /// `&self` for reads); inserts must go through [`Store::insert`] so
+    /// they hit the WAL.
+    pub fn index(&self) -> &Arc<ShardedLshIndex> {
+        &self.index
+    }
+
+    /// Store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of indexed items.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when the index holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Current snapshot generation.
+    pub fn generation(&self) -> u64 {
+        self.wal.lock().unwrap().generation
+    }
+
+    /// Inserts logged since the current snapshot (replayed ones included).
+    pub fn wal_pending(&self) -> usize {
+        self.wal.lock().unwrap().pending
+    }
+
+    /// What [`Store::open`] had to do (generation loaded, WAL records
+    /// replayed, torn bytes dropped).
+    pub fn recovery(&self) -> &RecoveryInfo {
+        &self.recovery
+    }
+
+    /// Durable insert: hash, append to the WAL (flushed before returning),
+    /// then insert into the served index. Returns the assigned id. When
+    /// `checkpoint_every > 0` and the log reaches that many records, a
+    /// compaction runs inline — the threshold checkpoint hook.
+    pub fn insert(&self, x: AnyTensor) -> Result<usize> {
+        // The exact signatures a direct index insert would compute — one
+        // shared helper, so WAL replay cannot diverge from live inserts.
+        let sigs = self.index.insert_signatures(&x);
+        let mut wal = self.wal.lock().unwrap();
+        let expected = self.index.len() as u64;
+        wal.writer.append_parts(expected, &sigs, &x)?;
+        let id = self.index.insert_with_signatures(x, &sigs);
+        if id as u64 != expected {
+            return Err(Error::InvalidParameter(format!(
+                "insert raced an out-of-band ShardedLshIndex::insert (expected id \
+                 {expected}, got {id}); route all inserts through Store::insert"
+            )));
+        }
+        wal.pending += 1;
+        if self.checkpoint_every > 0 && wal.pending >= self.checkpoint_every {
+            // The insert itself is already durable and live; a failed
+            // checkpoint must not surface as a failed insert (a caller
+            // retry would duplicate the item). Report it and leave the
+            // records pending — the next insert retries the compaction.
+            if let Err(e) = self.compact_locked(&mut wal) {
+                eprintln!("store: threshold checkpoint failed (will retry): {e}");
+            }
+        }
+        Ok(id)
+    }
+
+    /// Checkpoint: write a fresh snapshot generation from the current index
+    /// state, truncate the WAL, and prune all but the previous generation
+    /// (kept as the fallback [`Store::open`] can still boot from). Returns
+    /// the new generation number.
+    pub fn compact(&self) -> Result<u64> {
+        let mut wal = self.wal.lock().unwrap();
+        self.compact_locked(&mut wal)
+    }
+
+    /// [`Store::compact`] only if any WAL records are pending — the cheap
+    /// call shutdown paths make unconditionally.
+    pub fn checkpoint_if_dirty(&self) -> Result<Option<u64>> {
+        let mut wal = self.wal.lock().unwrap();
+        if wal.pending == 0 {
+            return Ok(None);
+        }
+        Ok(Some(self.compact_locked(&mut wal)?))
+    }
+
+    fn compact_locked(&self, wal: &mut WalState) -> Result<u64> {
+        // The WAL lock is held for the whole snapshot: inserts block, so
+        // the segment is a consistent cut and truncating the log afterwards
+        // cannot discard a record the snapshot missed.
+        let generation = wal.generation + 1;
+        self.index.save(&snap_dir(&self.dir, generation))?;
+        // The new generation's directory entry must be durable BEFORE the
+        // log that covers the same inserts is truncated.
+        segment::sync_dir(&self.dir)?;
+        let wal_path = self.dir.join(WAL_FILE);
+        wal::truncate_wal(&wal_path, 0)?;
+        wal.writer = wal::WalWriter::open_append(&wal_path)?;
+        wal.pending = 0;
+        let old = wal.generation;
+        wal.generation = generation;
+        // Keep `old` as the fallback generation; prune everything older.
+        if let Ok(gens) = list_generations(&self.dir) {
+            for g in gens {
+                if g < old {
+                    let _ = std::fs::remove_dir_all(snap_dir(&self.dir, g));
+                }
+            }
+        }
+        Ok(generation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::spec::{FamilyKind, LshSpec};
+    use crate::query::QueryOpts;
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tlsh_store_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spec() -> LshSpec {
+        LshSpec::cosine(FamilyKind::Cp, vec![6, 6], 3, 6, 4).with_seed(77, 1)
+    }
+
+    fn tensors(n: usize, seed: u64) -> Vec<AnyTensor> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[6, 6], 2)))
+            .collect()
+    }
+
+    #[test]
+    fn create_insert_reopen_replays_the_wal() {
+        let dir = temp_dir("reopen");
+        let base = tensors(40, 1);
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        let extra = tensors(7, 2);
+        for x in &extra {
+            store.insert(x.clone()).unwrap();
+        }
+        assert_eq!(store.len(), 47);
+        assert_eq!(store.wal_pending(), 7);
+        drop(store);
+
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 47);
+        assert_eq!(store.recovery().wal_replayed, 7);
+        assert_eq!(store.recovery().generation, 1);
+        // The replayed index answers like a freshly built one over the same
+        // 47 items in the same order.
+        let mut all = base;
+        all.extend(extra);
+        let fresh = ShardedLshIndex::build_from_spec(&spec(), all.clone()).unwrap();
+        let opts = QueryOpts::top_k(5);
+        for q in all.iter().step_by(9) {
+            let a = store.index().query_with(q, &opts).unwrap();
+            let b = fresh.query_with(q, &opts).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.stats, b.stats);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn threshold_checkpoint_compacts_and_truncates() {
+        let dir = temp_dir("threshold");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(10, 3)).unwrap());
+        let store = Store::create(&dir, index, 4).unwrap();
+        for x in tensors(4, 4) {
+            store.insert(x).unwrap();
+        }
+        // The 4th insert crossed the threshold: new generation, empty WAL.
+        assert_eq!(store.generation(), 2);
+        assert_eq!(store.wal_pending(), 0);
+        for x in tensors(3, 5) {
+            store.insert(x).unwrap();
+        }
+        assert_eq!(store.generation(), 2);
+        assert_eq!(store.wal_pending(), 3);
+        assert_eq!(store.compact().unwrap(), 3);
+        assert_eq!(store.wal_pending(), 0);
+        // Only the fallback generation (2) and the fresh one (3) survive.
+        let gens = list_generations(&dir).unwrap();
+        assert_eq!(gens, vec![3, 2]);
+        drop(store);
+        let store = Store::open(&dir, 4).unwrap();
+        assert_eq!(store.len(), 17);
+        assert_eq!(store.recovery().wal_replayed, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Crash window between a compaction's snapshot rename and its WAL
+    /// truncation: the log still holds records the snapshot already folded
+    /// in. Reopen must skip them (not refuse, not double-apply) and clean
+    /// the log at the next checkpoint.
+    #[test]
+    fn reopen_after_compact_crash_window_skips_applied_records() {
+        let dir = temp_dir("crash_window");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(10, 10)).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        for x in tensors(3, 11) {
+            store.insert(x).unwrap();
+        }
+        let wal_bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+        store.compact().unwrap(); // generation 2 folds the 3 records in
+        drop(store);
+        // Simulate the crash: the pre-compaction log reappears.
+        std::fs::write(dir.join(WAL_FILE), &wal_bytes).unwrap();
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 13, "records must not double-apply");
+        assert_eq!(store.recovery().wal_already_applied, 3);
+        assert_eq!(store.recovery().wal_replayed, 0);
+        // The stale log counts as pending, so a checkpoint rewrites it.
+        assert_eq!(store.wal_pending(), 3);
+        store.checkpoint_if_dirty().unwrap();
+        drop(store);
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 13);
+        assert_eq!(store.recovery().wal_already_applied, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_falls_back_to_previous_generation_when_newest_is_damaged() {
+        let dir = temp_dir("fallback");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(12, 6)).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        store.compact().unwrap(); // generation 2 (WAL empty afterwards)
+        drop(store);
+        // Damage generation 2's manifest: open falls back to generation 1.
+        let manifest = snap_dir(&dir, 2).join("manifest.json");
+        std::fs::write(&manifest, b"{ not json").unwrap();
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.recovery().generation, 1);
+        assert_eq!(store.recovery().snapshots_skipped, vec![2]);
+        assert_eq!(store.len(), 12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_if_dirty_is_a_no_op_on_a_clean_log() {
+        let dir = temp_dir("dirty");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(5, 7)).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        assert_eq!(store.checkpoint_if_dirty().unwrap(), None);
+        store.insert(tensors(1, 8).pop().unwrap()).unwrap();
+        assert_eq!(store.checkpoint_if_dirty().unwrap(), Some(2));
+        assert_eq!(store.checkpoint_if_dirty().unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_refuses_an_existing_store_and_open_refuses_an_empty_dir() {
+        let dir = temp_dir("refuse");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(5, 9)).unwrap());
+        let store = Store::create(&dir, Arc::clone(&index), 0).unwrap();
+        drop(store);
+        assert!(Store::create(&dir, index, 0).is_err());
+        let empty = temp_dir("refuse_empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(matches!(Store::open(&empty, 0), Err(Error::Corrupt(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&empty);
+    }
+}

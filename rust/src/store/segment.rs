@@ -1,0 +1,526 @@
+//! Snapshot segments: one checksummed binary file holding everything needed
+//! to reconstruct an index (or one shard of one) bit-identically.
+//!
+//! A segment carries six sections (see [`super::format`] for the framing):
+//! the canonical [`LshSpec`] JSON header plus actual table/probe counts,
+//! the slot → global-id map, the flat bucket-signature arena (slot-major,
+//! one `u64` per (slot, table) — the [`crate::index::CodeMatrix`] signature
+//! layout, loaded as a straight byte copy), the per-table bucket lists
+//! (in-bucket order preserved exactly, so candidate generation order —
+//! and therefore every `SearchResponse` — survives the round trip), the
+//! tensors, and the cached Frobenius norms.
+//!
+//! The arena and the bucket lists describe the same assignment twice;
+//! [`read_segment_bytes`] cross-checks them (every slot exactly once per
+//! table, bucket signature == arena signature) and rejects any
+//! disagreement as [`Error::Corrupt`] — a segment either reconstructs the
+//! exact index or refuses to load.
+
+use super::format::{self, tag, Reader, SegmentFileWriter, WriteLe};
+use super::tensors::{decode_tensor, encode_tensor};
+use crate::error::{Error, Result};
+use crate::index::Metric;
+use crate::lsh::spec::LshSpec;
+use crate::tensor::AnyTensor;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+/// One table's bucket lists: (signature, slots) pairs, in-bucket slot order
+/// preserved exactly.
+pub type TableBuckets = Vec<(u64, Vec<u32>)>;
+
+/// The JSON header section: the spec the families rebuild from, plus the
+/// *actual* table/probe counts of the saved structure (a spec-built config
+/// may lower `n_tables` as an ablation, so they are stored independently).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentHeader {
+    pub spec: LshSpec,
+    pub n_items: usize,
+    pub n_tables: usize,
+    pub probes: usize,
+    pub metric: Metric,
+    /// `Some((shard index, shard count))` for one shard of a
+    /// [`crate::index::ShardedLshIndex`]; `None` for a whole
+    /// [`crate::index::LshIndex`].
+    pub shard: Option<(usize, usize)>,
+}
+
+impl SegmentHeader {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str("tensor-lsh-segment".into()));
+        m.insert("spec".to_string(), self.spec.to_json());
+        m.insert("n_items".to_string(), Json::Num(self.n_items as f64));
+        m.insert("n_tables".to_string(), Json::Num(self.n_tables as f64));
+        m.insert("probes".to_string(), Json::Num(self.probes as f64));
+        m.insert("metric".to_string(), Json::Str(self.metric.name().into()));
+        m.insert(
+            "shard".to_string(),
+            match self.shard {
+                None => Json::Null,
+                Some((s, of)) => {
+                    let mut sh = BTreeMap::new();
+                    sh.insert("index".to_string(), Json::Num(s as f64));
+                    sh.insert("of".to_string(), Json::Num(of as f64));
+                    Json::Obj(sh)
+                }
+            },
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<SegmentHeader> {
+        let kind = v.get("kind")?.as_str()?;
+        if kind != "tensor-lsh-segment" {
+            return Err(corrupt(format!("header kind '{kind}' is not a segment header")));
+        }
+        Ok(SegmentHeader {
+            spec: LshSpec::from_json(v.get("spec")?)?,
+            n_items: v.get("n_items")?.as_usize()?,
+            n_tables: v.get("n_tables")?.as_usize()?,
+            probes: v.get("probes")?.as_usize()?,
+            metric: Metric::parse(v.get("metric")?.as_str()?)?,
+            shard: match v.get("shard")? {
+                Json::Null => None,
+                sh => Some((sh.get("index")?.as_usize()?, sh.get("of")?.as_usize()?)),
+            },
+        })
+    }
+}
+
+/// Everything a segment stores, structure-agnostic: both index types
+/// assemble a borrowed [`SegmentView`] to save and consume one of these
+/// (owned) on load.
+#[derive(Clone, Debug)]
+pub struct SegmentContents {
+    pub header: SegmentHeader,
+    /// Slot → global id (identity for a whole `LshIndex`; the shard's
+    /// insertion-ordered id list for a shard segment).
+    pub ids: Vec<usize>,
+    /// Flat signature arena, slot-major: `sigs[slot · L + t]` is slot
+    /// `slot`'s bucket signature in table `t`.
+    pub sigs: Vec<u64>,
+    /// Per-table bucket lists, sorted by signature for deterministic file
+    /// bytes; in-bucket slot order is the original insertion order.
+    pub buckets: Vec<TableBuckets>,
+    pub items: Vec<AnyTensor>,
+    pub norms: Vec<f64>,
+}
+
+/// Borrowed write-side view of a segment — saving never clones the corpus.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentView<'a> {
+    pub header: &'a SegmentHeader,
+    pub ids: &'a [usize],
+    pub sigs: &'a [u64],
+    pub buckets: &'a [TableBuckets],
+    pub items: &'a [AnyTensor],
+    pub norms: &'a [f64],
+}
+
+impl SegmentContents {
+    /// Borrow this contents as a write-side view (round-trip tests use it).
+    pub fn view(&self) -> SegmentView<'_> {
+        SegmentView {
+            header: &self.header,
+            ids: &self.ids,
+            sigs: &self.sigs,
+            buckets: &self.buckets,
+            items: &self.items,
+            norms: &self.norms,
+        }
+    }
+}
+
+/// Derive the flat signature arena from per-table bucket lists (used at
+/// save time: the in-memory tables key signature → slots, the arena is the
+/// inverse). Errors if any slot is missing or duplicated in some table.
+pub fn sigs_arena_from_buckets(
+    buckets: &[TableBuckets],
+    n_items: usize,
+) -> Result<Vec<u64>> {
+    let n_tables = buckets.len();
+    let mut sigs = vec![0u64; n_items * n_tables];
+    for (t, table) in buckets.iter().enumerate() {
+        let mut seen = vec![false; n_items];
+        for (sig, slots) in table {
+            for &slot in slots {
+                let s = slot as usize;
+                if s >= n_items || seen[s] {
+                    return Err(Error::InvalidParameter(format!(
+                        "table {t}: slot {s} out of range or duplicated \
+                         (index has {n_items} items)"
+                    )));
+                }
+                seen[s] = true;
+                sigs[s * n_tables + t] = *sig;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&v| !v) {
+            return Err(Error::InvalidParameter(format!(
+                "table {t}: slot {missing} appears in no bucket"
+            )));
+        }
+    }
+    Ok(sigs)
+}
+
+/// Serialize a segment to its file image.
+pub fn segment_bytes(c: SegmentView<'_>) -> Vec<u8> {
+    let mut w = SegmentFileWriter::new();
+    w.section(tag::HEADER, c.header.to_json().to_string_pretty().into_bytes());
+
+    let mut ids = Vec::with_capacity(c.ids.len() * 8);
+    for &id in c.ids {
+        ids.put_u64(id as u64);
+    }
+    w.section(tag::IDMAP, ids);
+
+    let mut sigs = Vec::with_capacity(c.sigs.len() * 8);
+    for &s in c.sigs {
+        sigs.put_u64(s);
+    }
+    w.section(tag::SIGS, sigs);
+
+    let mut buckets = Vec::new();
+    for table in c.buckets {
+        buckets.put_u64(table.len() as u64);
+        for (sig, slots) in table {
+            buckets.put_u64(*sig);
+            buckets.put_u32(slots.len() as u32);
+            for &slot in slots {
+                buckets.put_u32(slot);
+            }
+        }
+    }
+    w.section(tag::BUCKETS, buckets);
+
+    let mut items = Vec::new();
+    items.put_u64(c.items.len() as u64);
+    for x in c.items {
+        encode_tensor(&mut items, x);
+    }
+    w.section(tag::ITEMS, items);
+
+    let mut norms = Vec::with_capacity(c.norms.len() * 8);
+    for &v in c.norms {
+        norms.put_f64(v);
+    }
+    w.section(tag::NORMS, norms);
+
+    w.into_bytes()
+}
+
+/// Make a directory's entries durable: after a rename, POSIX requires
+/// fsyncing the parent directory for the new name itself to survive power
+/// loss (file fsync alone persists only the contents). No-op off Unix
+/// (directories cannot be opened there; those platforms are not the
+/// serving target).
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    std::fs::File::open(dir)?.sync_all()?;
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Write a segment file atomically and durably: temp file + fsync + rename
+/// + parent-directory fsync, so a crash mid-write never leaves a
+/// half-segment under the final name and a rename that happened survives
+/// power loss (the store truncates its fsynced WAL right after
+/// snapshotting — the snapshot must not be less durable than the log it
+/// replaces).
+pub fn write_segment(path: &Path, c: SegmentView<'_>) -> Result<()> {
+    use std::io::Write as _;
+    let tmp = path.with_extension("seg.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&segment_bytes(c))?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        sync_dir(parent)?;
+    }
+    Ok(())
+}
+
+/// Parse and fully cross-validate a segment file image.
+pub fn read_segment_bytes(bytes: &[u8]) -> Result<SegmentContents> {
+    let sections = format::read_sections(bytes)?;
+    contents_from_sections(&sections)
+}
+
+/// [`read_segment_bytes`] over already-parsed (CRC-verified) sections —
+/// lets [`describe`] validate and report sizes off one parse.
+fn contents_from_sections(sections: &BTreeMap<u32, &[u8]>) -> Result<SegmentContents> {
+    let header_raw = format::require(sections, tag::HEADER, "header")?;
+    let header_text = std::str::from_utf8(header_raw)
+        .map_err(|_| corrupt("header section is not UTF-8"))?;
+    // The frame CRC already verified these bytes; a parse or spec failure
+    // here means the file was rewritten inconsistently — still Corrupt.
+    let header_json = parse(header_text)
+        .map_err(|e| corrupt(format!("header JSON unparseable: {e}")))?;
+    let header = SegmentHeader::from_json(&header_json)
+        .map_err(|e| corrupt(format!("header invalid: {e}")))?;
+    let (n, l) = (header.n_items, header.n_tables);
+    if l == 0 || l > header.spec.l {
+        return Err(corrupt(format!(
+            "header n_tables {l} outside 1..={} (the spec's table count)",
+            header.spec.l
+        )));
+    }
+    if header.metric != header.spec.family.metric {
+        return Err(corrupt("header metric disagrees with the spec's family metric"));
+    }
+    // Header-supplied counts feed size math below; overflow-check them so a
+    // crafted header is a typed error, not a debug-build multiply panic.
+    let byte_size = |count: usize, what: &str| -> Result<usize> {
+        count
+            .checked_mul(8)
+            .ok_or_else(|| corrupt(format!("{what} size overflows for count {count}")))
+    };
+    let n_times_l = n
+        .checked_mul(l)
+        .ok_or_else(|| corrupt(format!("{n} items × {l} tables overflows")))?;
+
+    let ids_raw = format::require(sections, tag::IDMAP, "id map")?;
+    let mut r = Reader::new(ids_raw, "id map");
+    let expected = byte_size(n, "id map")?;
+    if r.remaining() != expected {
+        return Err(corrupt(format!(
+            "id map holds {} bytes, expected {expected} for {n} items",
+            r.remaining()
+        )));
+    }
+    let ids: Vec<usize> = r.u64_vec(n)?.into_iter().map(|v| v as usize).collect();
+
+    let sigs_raw = format::require(sections, tag::SIGS, "signature arena")?;
+    let mut r = Reader::new(sigs_raw, "signature arena");
+    let expected = byte_size(n_times_l, "signature arena")?;
+    if r.remaining() != expected {
+        return Err(corrupt(format!(
+            "signature arena holds {} bytes, expected {expected} for {n} items × {l} tables",
+            r.remaining()
+        )));
+    }
+    let sigs = r.u64_vec(n_times_l)?;
+
+    let buckets_raw = format::require(sections, tag::BUCKETS, "buckets")?;
+    let mut r = Reader::new(buckets_raw, "buckets");
+    let mut buckets: Vec<TableBuckets> = Vec::with_capacity(l);
+    for t in 0..l {
+        let n_buckets = r.len_u64(n as u64, "bucket count")?;
+        let mut table = Vec::with_capacity(n_buckets);
+        let mut seen = vec![false; n];
+        for _ in 0..n_buckets {
+            let sig = r.u64()?;
+            let len = r.u32()? as usize;
+            let slots = r.u32_vec(len)?;
+            for &slot in &slots {
+                let s = slot as usize;
+                if s >= n || seen[s] {
+                    return Err(corrupt(format!(
+                        "table {t}: slot {slot} out of range or duplicated"
+                    )));
+                }
+                seen[s] = true;
+                if sigs[s * l + t] != sig {
+                    return Err(corrupt(format!(
+                        "table {t}: bucket signature {sig:#x} disagrees with the \
+                         arena for slot {slot}"
+                    )));
+                }
+            }
+            table.push((sig, slots));
+        }
+        if let Some(missing) = seen.iter().position(|&v| !v) {
+            return Err(corrupt(format!("table {t}: slot {missing} appears in no bucket")));
+        }
+        buckets.push(table);
+    }
+    if !r.is_empty() {
+        return Err(corrupt("buckets section has trailing bytes"));
+    }
+
+    let items_raw = format::require(sections, tag::ITEMS, "items")?;
+    let mut r = Reader::new(items_raw, "items");
+    let count = r.len_u64(u32::MAX as u64, "item count")?;
+    if count != n {
+        return Err(corrupt(format!("items section holds {count} tensors, header says {n}")));
+    }
+    let mut items = Vec::with_capacity(count);
+    for _ in 0..count {
+        items.push(decode_tensor(&mut r)?);
+    }
+    if !r.is_empty() {
+        return Err(corrupt("items section has trailing bytes"));
+    }
+
+    let norms_raw = format::require(sections, tag::NORMS, "norms")?;
+    let mut r = Reader::new(norms_raw, "norms");
+    let expected = byte_size(n, "norms")?;
+    if r.remaining() != expected {
+        return Err(corrupt(format!(
+            "norms section holds {} bytes, expected {expected}",
+            r.remaining()
+        )));
+    }
+    let norms = r.f64_vec(n)?;
+
+    Ok(SegmentContents { header, ids, sigs, buckets, items, norms })
+}
+
+/// Read and validate a segment file.
+pub fn read_segment(path: &Path) -> Result<SegmentContents> {
+    read_segment_bytes(&std::fs::read(path)?)
+}
+
+/// Human-readable summary of a segment file (the `tensorlsh info <file.seg>`
+/// view): header fields plus per-section byte counts.
+pub fn describe(path: &Path) -> Result<String> {
+    use std::fmt::Write as _;
+    let bytes = std::fs::read(path)?;
+    // One parse + CRC pass: the sizes come off the section map, the
+    // validation off the same map.
+    let sections = format::read_sections(&bytes)?;
+    let c = contents_from_sections(&sections)?;
+    let mut out = String::new();
+    let h = &c.header;
+    let _ = writeln!(out, "segment: {} ({} bytes)", path.display(), bytes.len());
+    let _ = writeln!(
+        out,
+        "items: {}  tables: {}  probes: {}  metric: {}  shard: {}",
+        h.n_items,
+        h.n_tables,
+        h.probes,
+        h.metric.name(),
+        match h.shard {
+            None => "whole index".to_string(),
+            Some((s, of)) => format!("{s}/{of}"),
+        }
+    );
+    let names = [
+        (tag::HEADER, "header"),
+        (tag::IDMAP, "id map"),
+        (tag::SIGS, "signature arena"),
+        (tag::BUCKETS, "buckets"),
+        (tag::ITEMS, "items"),
+        (tag::NORMS, "norms"),
+    ];
+    for (t, name) in names {
+        if let Some(payload) = sections.get(&t) {
+            let _ = writeln!(
+                out,
+                "  section {name:<16} {}",
+                crate::util::fmt_bytes(payload.len())
+            );
+        }
+    }
+    let _ = writeln!(out, "spec:\n{}", h.spec.to_json_string());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::spec::FamilyKind;
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+
+    fn sample_contents() -> SegmentContents {
+        let spec = LshSpec::cosine(FamilyKind::Cp, vec![4, 4], 2, 3, 2).with_seed(9, 1);
+        let mut rng = Rng::new(8);
+        let items: Vec<AnyTensor> = (0..3)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[4, 4], 2)))
+            .collect();
+        let norms: Vec<f64> = items.iter().map(|x| x.frob_norm()).collect();
+        // Two tables over three slots; arena derived from the buckets.
+        let buckets = vec![
+            vec![(11u64, vec![0u32, 2]), (22, vec![1])],
+            vec![(33u64, vec![0, 1, 2])],
+        ];
+        let sigs = sigs_arena_from_buckets(&buckets, 3).unwrap();
+        SegmentContents {
+            header: SegmentHeader {
+                spec,
+                n_items: 3,
+                n_tables: 2,
+                probes: 0,
+                metric: Metric::Cosine,
+                shard: Some((1, 4)),
+            },
+            ids: vec![1, 5, 9],
+            sigs,
+            buckets,
+            items,
+            norms,
+        }
+    }
+
+    #[test]
+    fn segment_roundtrip_preserves_everything() {
+        let c = sample_contents();
+        let bytes = segment_bytes(c.view());
+        let back = read_segment_bytes(&bytes).unwrap();
+        assert_eq!(back.header, c.header);
+        assert_eq!(back.ids, c.ids);
+        assert_eq!(back.sigs, c.sigs);
+        assert_eq!(back.buckets, c.buckets);
+        assert_eq!(back.norms, c.norms);
+        assert_eq!(back.items.len(), c.items.len());
+        for (a, b) in c.items.iter().zip(&back.items) {
+            assert!(super::super::tensors::tensors_bit_equal(a, b));
+        }
+        // Re-serialization is byte-identical (deterministic format).
+        assert_eq!(segment_bytes(back.view()), bytes);
+    }
+
+    #[test]
+    fn arena_bucket_disagreement_is_corrupt() {
+        let mut c = sample_contents();
+        c.sigs[0] ^= 1; // arena now disagrees with the buckets
+        let bytes = segment_bytes(c.view());
+        match read_segment_bytes(&bytes) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("disagrees"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_slot_and_bad_counts_are_corrupt() {
+        let mut c = sample_contents();
+        c.buckets[1][0].1.pop(); // slot 2 now missing from table 1
+        assert!(matches!(
+            read_segment_bytes(&segment_bytes(c.view())),
+            Err(Error::Corrupt(_))
+        ));
+        let mut c = sample_contents();
+        c.norms.pop();
+        assert!(matches!(
+            read_segment_bytes(&segment_bytes(c.view())),
+            Err(Error::Corrupt(_))
+        ));
+        let mut c = sample_contents();
+        c.items.pop();
+        assert!(matches!(
+            read_segment_bytes(&segment_bytes(c.view())),
+            Err(Error::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn sigs_arena_inversion_rejects_inconsistent_buckets() {
+        let buckets = vec![vec![(1u64, vec![0u32, 0])]]; // duplicate slot
+        assert!(sigs_arena_from_buckets(&buckets, 2).is_err());
+        let buckets = vec![vec![(1u64, vec![0u32])]]; // slot 1 missing
+        assert!(sigs_arena_from_buckets(&buckets, 2).is_err());
+        let buckets = vec![vec![(1u64, vec![0u32, 1])]];
+        assert_eq!(sigs_arena_from_buckets(&buckets, 2).unwrap(), vec![1, 1]);
+    }
+}

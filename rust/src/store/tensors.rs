@@ -1,0 +1,266 @@
+//! Binary (de)serialization of [`AnyTensor`] for segment ITEMS sections and
+//! WAL records. Bit-exact: `f32` payloads round-trip via `to_le_bytes`, so
+//! a decoded tensor hashes, scores, and norms identically to the original.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! dense: 0u8 ‖ u32 order ‖ u32 dim × order ‖ f32 × ∏dims
+//! cp:    1u8 ‖ u32 modes ‖ u32 rank ‖ f32 scale ‖ (u32 d ‖ f32 × d·rank) × modes
+//! tt:    2u8 ‖ u32 cores ‖ f32 scale ‖ (u32 r0 ‖ u32 d ‖ u32 r1 ‖ f32 × r0·d·r1) × cores
+//! ```
+
+use super::format::{Reader, WriteLe};
+use crate::error::{Error, Result};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, Factor, TtCore, TtTensor};
+
+const FMT_DENSE: u8 = 0;
+const FMT_CP: u8 = 1;
+const FMT_TT: u8 = 2;
+
+/// Sanity bound on any single length word in a tensor record: damaged bytes
+/// must not drive multi-gigabyte allocations before the CRC-verified data
+/// runs out. Below `u32::MAX` so the check is meaningful for `u32`-encoded
+/// words. (Decoding is only reached after the enclosing frame's CRC
+/// verified, so this is belt-and-braces, not the primary defense.)
+const MAX_LEN: u64 = 1 << 31;
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+/// Append one tensor's encoding to `out`.
+pub fn encode_tensor(out: &mut Vec<u8>, x: &AnyTensor) {
+    match x {
+        AnyTensor::Dense(t) => {
+            out.put_u8(FMT_DENSE);
+            out.put_u32(t.shape.len() as u32);
+            for &d in &t.shape {
+                out.put_u32(d as u32);
+            }
+            for &v in &t.data {
+                out.put_f32(v);
+            }
+        }
+        AnyTensor::Cp(t) => {
+            out.put_u8(FMT_CP);
+            out.put_u32(t.factors.len() as u32);
+            out.put_u32(t.factors.first().map_or(0, |f| f.r) as u32);
+            out.put_f32(t.scale);
+            for f in &t.factors {
+                out.put_u32(f.d as u32);
+                for &v in &f.data {
+                    out.put_f32(v);
+                }
+            }
+        }
+        AnyTensor::Tt(t) => {
+            out.put_u8(FMT_TT);
+            out.put_u32(t.cores.len() as u32);
+            out.put_f32(t.scale);
+            for c in &t.cores {
+                out.put_u32(c.r0 as u32);
+                out.put_u32(c.d as u32);
+                out.put_u32(c.r1 as u32);
+                for &v in &c.data {
+                    out.put_f32(v);
+                }
+            }
+        }
+    }
+}
+
+/// Decode one tensor from the reader's current position.
+pub fn decode_tensor(r: &mut Reader<'_>) -> Result<AnyTensor> {
+    // A dimension/rank value: bounded only by the global sanity cap (the
+    // per-buffer reads below are overflow- and bounds-checked themselves).
+    let len = |r: &mut Reader<'_>, what: &str| -> Result<usize> {
+        let v = r.u32()? as u64;
+        if v > MAX_LEN {
+            return Err(corrupt(format!("tensor {what} {v} exceeds bound {MAX_LEN}")));
+        }
+        Ok(v as usize)
+    };
+    // An element *count* (modes, cores, order): every counted element
+    // occupies at least one byte after it, so the remaining payload bounds
+    // any honest value — reject before the count-sized allocation happens.
+    let count = |r: &mut Reader<'_>, what: &str| -> Result<usize> {
+        let v = r.u32()? as u64;
+        if v > MAX_LEN || v > r.remaining() as u64 {
+            return Err(corrupt(format!(
+                "tensor {what} {v} exceeds the record's remaining bytes"
+            )));
+        }
+        Ok(v as usize)
+    };
+    match r.u8()? {
+        FMT_DENSE => {
+            let order = count(r, "order")?;
+            let mut shape = Vec::with_capacity(order);
+            let mut n: u64 = 1;
+            for _ in 0..order {
+                let d = len(r, "dim")?;
+                n = n.saturating_mul(d as u64);
+                shape.push(d);
+            }
+            if n > MAX_LEN {
+                return Err(corrupt(format!("dense tensor of {n} elements exceeds bound")));
+            }
+            let data = r.f32_vec(n as usize)?;
+            Ok(AnyTensor::Dense(DenseTensor { shape, data }))
+        }
+        FMT_CP => {
+            let modes = count(r, "mode count")?;
+            let rank = len(r, "rank")?;
+            let scale = r.f32()?;
+            if modes == 0 {
+                return Err(corrupt("cp tensor with zero modes"));
+            }
+            let mut factors = Vec::with_capacity(modes);
+            for _ in 0..modes {
+                let d = len(r, "mode dim")?;
+                let data = r.f32_vec(d.saturating_mul(rank))?;
+                factors.push(Factor { d, r: rank, data });
+            }
+            Ok(AnyTensor::Cp(CpTensor { factors, scale }))
+        }
+        FMT_TT => {
+            let n_cores = count(r, "core count")?;
+            let scale = r.f32()?;
+            if n_cores == 0 {
+                return Err(corrupt("tt tensor with zero cores"));
+            }
+            let mut cores = Vec::with_capacity(n_cores);
+            let mut prev_r1 = 1usize;
+            for i in 0..n_cores {
+                let r0 = len(r, "bond r0")?;
+                let d = len(r, "core dim")?;
+                let r1 = len(r, "bond r1")?;
+                if r0 != prev_r1 {
+                    return Err(corrupt(format!(
+                        "tt bond chain broken at core {i}: r0={r0}, previous r1={prev_r1}"
+                    )));
+                }
+                let count = r0.saturating_mul(d).saturating_mul(r1);
+                if count as u64 > MAX_LEN {
+                    return Err(corrupt("tt core size exceeds bound".to_string()));
+                }
+                let data = r.f32_vec(count)?;
+                cores.push(TtCore { r0, d, r1, data });
+                prev_r1 = r1;
+            }
+            if prev_r1 != 1 || cores[0].r0 != 1 {
+                return Err(corrupt("tt boundary ranks must be 1"));
+            }
+            Ok(AnyTensor::Tt(TtTensor { cores, scale }))
+        }
+        other => Err(corrupt(format!("unknown tensor format byte {other}"))),
+    }
+}
+
+/// Structural equality at the representation level (formats, shapes, and
+/// exact f32 bit patterns) — the round-trip tests' notion of "bit-identical
+/// item". `AnyTensor` deliberately has no `PartialEq` (numeric equality is
+/// usually the wrong question); the store's question is representational.
+pub fn tensors_bit_equal(a: &AnyTensor, b: &AnyTensor) -> bool {
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+    match (a, b) {
+        (AnyTensor::Dense(x), AnyTensor::Dense(y)) => {
+            x.shape == y.shape && bits(&x.data) == bits(&y.data)
+        }
+        (AnyTensor::Cp(x), AnyTensor::Cp(y)) => {
+            x.scale.to_bits() == y.scale.to_bits()
+                && x.factors.len() == y.factors.len()
+                && x.factors.iter().zip(&y.factors).all(|(f, g)| {
+                    f.d == g.d && f.r == g.r && bits(&f.data) == bits(&g.data)
+                })
+        }
+        (AnyTensor::Tt(x), AnyTensor::Tt(y)) => {
+            x.scale.to_bits() == y.scale.to_bits()
+                && x.cores.len() == y.cores.len()
+                && x.cores.iter().zip(&y.cores).all(|(c, d)| {
+                    c.r0 == d.r0 && c.d == d.d && c.r1 == d.r1 && bits(&c.data) == bits(&d.data)
+                })
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::{proptest, random_any_tensor, random_dims};
+
+    fn roundtrip(x: &AnyTensor) -> AnyTensor {
+        let mut buf = Vec::new();
+        encode_tensor(&mut buf, x);
+        let mut r = Reader::new(&buf, "tensor");
+        let back = decode_tensor(&mut r).unwrap();
+        assert!(r.is_empty(), "decoder must consume the exact encoding");
+        back
+    }
+
+    #[test]
+    fn prop_all_formats_roundtrip_bit_exact() {
+        proptest("tensor store roundtrip", 64, |rng| {
+            let dims = random_dims(rng, (1, 4), (2, 6));
+            let x = random_any_tensor(rng, &dims, 3);
+            let back = roundtrip(&x);
+            assert!(tensors_bit_equal(&x, &back));
+            assert_eq!(x.format(), back.format());
+            assert_eq!(x.dims(), back.dims());
+        });
+    }
+
+    #[test]
+    fn special_float_values_survive() {
+        let mut x = DenseTensor::zeros(&[2, 2]);
+        x.data = vec![f32::NAN, f32::INFINITY, -0.0, f32::MIN_POSITIVE];
+        let back = roundtrip(&AnyTensor::Dense(x.clone()));
+        match back {
+            AnyTensor::Dense(y) => {
+                let a: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "NaN payloads and signed zeros are preserved");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn scaled_cp_and_tt_keep_their_scale() {
+        let mut rng = Rng::new(3);
+        let mut cp = CpTensor::random_gaussian(&mut rng, &[3, 4], 2);
+        cp.scale = 0.125;
+        let back = roundtrip(&AnyTensor::Cp(cp.clone()));
+        assert!(tensors_bit_equal(&AnyTensor::Cp(cp), &back));
+        let mut tt = TtTensor::random_gaussian(&mut rng, &[3, 4, 2], 2);
+        tt.scale = -2.5;
+        let back = roundtrip(&AnyTensor::Tt(tt.clone()));
+        assert!(tensors_bit_equal(&AnyTensor::Tt(tt), &back));
+    }
+
+    #[test]
+    fn damaged_encodings_are_typed_errors() {
+        let mut rng = Rng::new(4);
+        let x = AnyTensor::Tt(TtTensor::random_gaussian(&mut rng, &[3, 3], 2));
+        let mut buf = Vec::new();
+        encode_tensor(&mut buf, &x);
+        // Unknown format byte.
+        let mut bad = buf.clone();
+        bad[0] = 9;
+        assert!(matches!(
+            decode_tensor(&mut Reader::new(&bad, "t")),
+            Err(Error::Corrupt(_))
+        ));
+        // Truncations anywhere are Corrupt, never panics.
+        for cut in 0..buf.len() {
+            match decode_tensor(&mut Reader::new(&buf[..cut], "t")) {
+                Err(Error::Corrupt(_)) => {}
+                Ok(_) => panic!("cut at {cut} decoded"),
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! Append-only write-ahead log: every post-snapshot insert is one
+//! checksummed record (global id, per-table bucket signatures, tensor), so
+//! a crash between checkpoints loses nothing — [`super::Store::open`]
+//! replays the log over the newest snapshot.
+//!
+//! File layout (little-endian):
+//!
+//! ```text
+//! [magic: 8 bytes "TLSHWAL\0"] [u32 format version]
+//! record × N: [u32 payload len] [payload] [u32 crc32(len ‖ payload)]
+//! payload:    [u64 id] [u32 n_tables] [u64 sig × n_tables] [tensor]
+//! ```
+//!
+//! Recovery semantics ([`read_wal`]): records are consumed until the file
+//! ends. A record whose bytes physically run past EOF is a **torn tail**
+//! (the normal shape of a crash mid-append): replay stops, the tail is
+//! dropped, and the caller truncates the file back to the last whole
+//! record. A record whose bytes are all present but whose CRC disagrees —
+//! or whose length word exceeds the record bound the writer enforces — is
+//! **corruption** and fails the whole open with [`Error::Corrupt`] —
+//! damaged history must never silently shrink the index.
+
+use super::crc::Crc32;
+use super::format::{Reader, WriteLe, FORMAT_VERSION, WAL_MAGIC};
+use super::tensors::{decode_tensor, encode_tensor};
+use crate::error::{Error, Result};
+use crate::tensor::AnyTensor;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Upper bound on one record's payload — a length word damaged into the
+/// gigabytes reads as a torn tail, not an allocation attempt.
+const MAX_RECORD_LEN: u32 = 1 << 30;
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+/// One logged insert.
+#[derive(Clone, Debug)]
+pub struct WalRecord {
+    /// Global item id the insert was assigned.
+    pub id: u64,
+    /// Per-table bucket signatures (length = index table count).
+    pub sigs: Vec<u64>,
+    pub item: AnyTensor,
+}
+
+fn encode_payload_parts(id: u64, sigs: &[u64], item: &AnyTensor) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.put_u64(id);
+    p.put_u32(sigs.len() as u32);
+    for &s in sigs {
+        p.put_u64(s);
+    }
+    encode_tensor(&mut p, item);
+    p
+}
+
+impl WalRecord {
+    fn decode_payload(bytes: &[u8]) -> Result<WalRecord> {
+        let mut r = Reader::new(bytes, "WAL record");
+        let id = r.u64()?;
+        let n_tables = r.u32()? as usize;
+        let sigs = r.u64_vec(n_tables)?;
+        let item = decode_tensor(&mut r)?;
+        if !r.is_empty() {
+            return Err(corrupt("WAL record has trailing bytes"));
+        }
+        Ok(WalRecord { id, sigs, item })
+    }
+}
+
+/// Appends records to a WAL file, flushing each one before returning (an
+/// insert acknowledged by [`super::Store::insert`] is on disk).
+pub struct WalWriter {
+    file: File,
+}
+
+impl WalWriter {
+    /// Open for appending, creating the file (with its header) if absent or
+    /// empty. The caller is responsible for having truncated any torn tail
+    /// first ([`read_wal`] reports the valid length).
+    pub fn open_append(path: &Path) -> Result<WalWriter> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        if file.metadata()?.len() == 0 {
+            let mut header = Vec::with_capacity(12);
+            header.put_bytes(&WAL_MAGIC);
+            header.put_u32(FORMAT_VERSION);
+            file.write_all(&header)?;
+            file.sync_data()?;
+        }
+        Ok(WalWriter { file })
+    }
+
+    /// Append one record and flush it to disk.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        self.append_parts(rec.id, &rec.sigs, &rec.item)
+    }
+
+    /// [`WalWriter::append`] from borrowed parts — the hot durable-insert
+    /// path logs without cloning the tensor. Records above the 1 GiB
+    /// record bound are refused with a typed error *before* touching the
+    /// file (and the reader refuses over-bound lengths as corruption, so
+    /// an acknowledged record can always be read back).
+    pub fn append_parts(&mut self, id: u64, sigs: &[u64], item: &AnyTensor) -> Result<()> {
+        let payload = encode_payload_parts(id, sigs, item);
+        if payload.len() as u64 > MAX_RECORD_LEN as u64 {
+            return Err(Error::InvalidParameter(format!(
+                "WAL record of {} bytes exceeds the {MAX_RECORD_LEN}-byte record bound \
+                 (snapshot such items instead of logging them)",
+                payload.len()
+            )));
+        }
+        let len = payload.len() as u32;
+        let mut crc = Crc32::new();
+        crc.update(&len.to_le_bytes());
+        crc.update(&payload);
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        frame.put_u32(len);
+        frame.put_bytes(&payload);
+        frame.put_u32(crc.finish());
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Result of scanning a WAL file.
+#[derive(Debug)]
+pub struct WalReplay {
+    /// Whole, checksum-verified records in append order.
+    pub records: Vec<WalRecord>,
+    /// Byte offset where valid data ends (truncate the file here before
+    /// appending again).
+    pub valid_len: u64,
+    /// Bytes of torn tail dropped (0 for a cleanly closed log).
+    pub torn_bytes: u64,
+}
+
+/// Scan a WAL file. A missing or empty file is an empty log; a physically
+/// truncated final record is dropped (torn tail); a CRC mismatch on a
+/// complete record, an over-bound length word, or undecodable verified
+/// bytes are [`Error::Corrupt`].
+pub fn read_wal(path: &Path) -> Result<WalReplay> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e.into()),
+    };
+    if bytes.is_empty() {
+        return Ok(WalReplay { records: Vec::new(), valid_len: 0, torn_bytes: 0 });
+    }
+    if bytes.len() < 12 {
+        // A crash while writing the 12-byte header: nothing was logged yet.
+        return Ok(WalReplay {
+            records: Vec::new(),
+            valid_len: 0,
+            torn_bytes: bytes.len() as u64,
+        });
+    }
+    if bytes[..8] != WAL_MAGIC {
+        return Err(corrupt("WAL: bad magic (not a tensor-lsh WAL file)"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version == 0 || version > FORMAT_VERSION {
+        return Err(corrupt(format!(
+            "WAL: format version {version} not supported (this build reads ≤ {FORMAT_VERSION})"
+        )));
+    }
+    let mut records = Vec::new();
+    let mut pos = 12usize;
+    loop {
+        let remaining = bytes.len() - pos;
+        if remaining == 0 {
+            return Ok(WalReplay { records, valid_len: pos as u64, torn_bytes: 0 });
+        }
+        if remaining < 4 {
+            return Ok(WalReplay {
+                records,
+                valid_len: pos as u64,
+                torn_bytes: remaining as u64,
+            });
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        if len > MAX_RECORD_LEN {
+            // The writer refuses records above the bound, so an over-bound
+            // length word can only be damage — fail loudly rather than
+            // classifying it as a torn tail and silently truncating away
+            // whatever valid records might follow it.
+            return Err(corrupt(format!(
+                "WAL: record {} (offset {pos}) declares {len} bytes, above the \
+                 {MAX_RECORD_LEN}-byte record bound",
+                records.len()
+            )));
+        }
+        let frame_len = 8usize + len as usize;
+        if remaining < frame_len {
+            // The record's bytes do not physically exist: torn tail.
+            return Ok(WalReplay {
+                records,
+                valid_len: pos as u64,
+                torn_bytes: remaining as u64,
+            });
+        }
+        let payload = &bytes[pos + 4..pos + 4 + len as usize];
+        let stored_crc =
+            u32::from_le_bytes(bytes[pos + 4 + len as usize..pos + frame_len].try_into().unwrap());
+        let mut crc = Crc32::new();
+        crc.update(&len.to_le_bytes());
+        crc.update(payload);
+        if crc.finish() != stored_crc {
+            return Err(corrupt(format!(
+                "WAL: record {} (offset {pos}) CRC mismatch",
+                records.len()
+            )));
+        }
+        records.push(WalRecord::decode_payload(payload)?);
+        pos += frame_len;
+    }
+}
+
+/// Truncate a WAL file to `valid_len` bytes (drop a torn tail in place).
+/// Uses `sync_all`: a size change is metadata, and the truncation must be
+/// durable before the caller relies on it (compaction truncates only after
+/// the replacing snapshot is fully synced).
+pub fn truncate_wal(path: &Path, valid_len: u64) -> Result<()> {
+    let file = OpenOptions::new().write(true).open(path)?;
+    file.set_len(valid_len)?;
+    file.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::store::tensors::tensors_bit_equal;
+    use crate::tensor::CpTensor;
+
+    fn record(id: u64, seed: u64) -> WalRecord {
+        let mut rng = Rng::new(seed);
+        WalRecord {
+            id,
+            sigs: vec![id * 3, id * 5 + 1, id ^ 0xFFFF],
+            item: AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[4, 3], 2)),
+        }
+    }
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tlsh_wal_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("wal.log")
+    }
+
+    #[test]
+    fn append_and_replay_roundtrip() {
+        let path = temp("roundtrip");
+        let mut w = WalWriter::open_append(&path).unwrap();
+        for i in 0..5 {
+            w.append(&record(i, 100 + i)).unwrap();
+        }
+        drop(w);
+        let replay = read_wal(&path).unwrap();
+        assert_eq!(replay.records.len(), 5);
+        assert_eq!(replay.torn_bytes, 0);
+        for (i, rec) in replay.records.iter().enumerate() {
+            let want = record(i as u64, 100 + i as u64);
+            assert_eq!(rec.id, want.id);
+            assert_eq!(rec.sigs, want.sigs);
+            assert!(tensors_bit_equal(&rec.item, &want.item));
+        }
+        // Reopening appends after the existing records.
+        let mut w = WalWriter::open_append(&path).unwrap();
+        w.append(&record(5, 105)).unwrap();
+        drop(w);
+        assert_eq!(read_wal(&path).unwrap().records.len(), 6);
+    }
+
+    #[test]
+    fn missing_and_empty_files_are_empty_logs() {
+        let path = temp("empty");
+        let replay = read_wal(&path).unwrap();
+        assert!(replay.records.is_empty());
+        std::fs::write(&path, b"").unwrap();
+        assert!(read_wal(&path).unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_truncatable() {
+        let path = temp("torn");
+        let mut w = WalWriter::open_append(&path).unwrap();
+        for i in 0..3 {
+            w.append(&record(i, 200 + i)).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        // Chop the last record mid-way: replay keeps the first two.
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let replay = read_wal(&path).unwrap();
+        assert_eq!(replay.records.len(), 2);
+        assert!(replay.torn_bytes > 0);
+        truncate_wal(&path, replay.valid_len).unwrap();
+        // After truncation the log is clean and appendable again.
+        let clean = read_wal(&path).unwrap();
+        assert_eq!(clean.records.len(), 2);
+        assert_eq!(clean.torn_bytes, 0);
+        let mut w = WalWriter::open_append(&path).unwrap();
+        w.append(&record(2, 202)).unwrap();
+        drop(w);
+        assert_eq!(read_wal(&path).unwrap().records.len(), 3);
+    }
+
+    #[test]
+    fn mid_file_corruption_is_a_typed_error() {
+        let path = temp("corrupt");
+        let mut w = WalWriter::open_append(&path).unwrap();
+        for i in 0..3 {
+            w.append(&record(i, 300 + i)).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        // Flip one byte inside the *first* record's payload: its CRC check
+        // fails and the whole open refuses.
+        let mut bad = full.clone();
+        bad[20] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(read_wal(&path), Err(Error::Corrupt(_))));
+        // Bad magic is a typed error too.
+        let mut bad = full;
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(read_wal(&path), Err(Error::Corrupt(_))));
+    }
+}

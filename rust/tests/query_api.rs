@@ -1,9 +1,9 @@
-//! The unified query API's contract (ISSUE 4 acceptance):
+//! The unified query API's contract (ISSUE 4 acceptance, trimmed of the
+//! legacy-wrapper comparisons when those wrappers were deleted in ISSUE 5):
 //!
-//! * all three serving layers implement `Searcher`;
-//! * a default `Query` is bit-identical to the legacy
-//!   `search`/`search_batch`/`shard_search` wrappers on both index
-//!   structures;
+//! * all three serving layers implement `Searcher`, and the trait's
+//!   `search` now resolves directly on the concrete index types (the
+//!   deprecated inherent `search` methods that used to shadow it are gone);
 //! * a per-query probes override on a built index matches an index built
 //!   with those probes baked in;
 //! * rerank policies, candidate caps, exact fallback, and the dedup toggle
@@ -35,12 +35,12 @@ fn spec(dims: Vec<usize>, probes: usize) -> LshSpec {
         .with_seed(4242, 1)
 }
 
-/// The legacy wrappers are thin shims over a default `Query`: results must
-/// be bit-identical (hits, order, scores) on both index structures, and
-/// `shard_search`'s candidate count must equal the stats field.
+/// With the deprecated inherent wrappers deleted, `Searcher::search` binds
+/// directly on the concrete index types — and stays bit-identical (hits,
+/// order, scores, stats) to the inherent `query`/`query_with` entry points
+/// and the out-of-band signature path on both structures.
 #[test]
-#[allow(deprecated)]
-fn default_query_bit_identical_to_legacy_wrappers() {
+fn trait_search_on_concrete_types_matches_query_paths() {
     let dims = vec![8usize, 8, 8];
     let items = corpus(dims.clone(), 260, 71);
     // probes=2 so the multiprobe path is exercised end to end.
@@ -51,30 +51,35 @@ fn default_query_bit_identical_to_legacy_wrappers() {
     let queries: Vec<AnyTensor> = (0..20).map(|i| items[i * 13 % items.len()].clone()).collect();
 
     for q in &queries {
-        assert_eq!(single.search(q, 9).unwrap(), single.query_with(q, &opts).unwrap().hits);
-        assert_eq!(
-            sharded.search(q, 9).unwrap(),
-            sharded.query_with(q, &opts).unwrap().hits
-        );
+        // Method-call syntax now resolves to the trait impl on the concrete
+        // type (no deprecated inherent method shadows it anymore).
+        let via_trait = single.search(&Query::new(q.clone(), 9)).unwrap();
+        let via_query = single.query_with(q, &opts).unwrap();
+        assert_eq!(via_trait.hits, via_query.hits);
+        assert_eq!(via_trait.stats, via_query.stats);
+        let via_trait = sharded.search(&Query::new(q.clone(), 9)).unwrap();
+        let via_query = sharded.query_with(q, &opts).unwrap();
+        assert_eq!(via_trait.hits, via_query.hits);
+        assert_eq!(via_trait.stats, via_query.stats);
+        // Out-of-band hashing agrees with in-band hashing.
         let sigs = sharded.signatures(q);
         assert_eq!(
-            sharded.search_with_table_signatures(q, &sigs, 9).unwrap(),
-            sharded.query_with_table_signatures(q, &sigs, &opts).unwrap().hits
+            sharded.query_with_table_signatures(q, &sigs, &opts).unwrap().hits,
+            via_query.hits
         );
+        // Per-shard partials fold to the global stats totals.
+        let mut folded = tensor_lsh::query::SearchStats::default();
         for s in 0..sharded.n_shards() {
-            let (legacy_partial, legacy_n) = sharded.shard_search(s, q, &sigs, 9).unwrap();
-            let (partial, stats) = sharded.shard_query(s, q, &sigs, &opts).unwrap();
-            assert_eq!(legacy_partial, partial, "shard {s}");
-            assert_eq!(legacy_n, stats.candidates_examined, "shard {s}");
+            let (_, stats) = sharded.shard_query(s, q, &sigs, &opts).unwrap();
+            folded.merge(&stats);
         }
+        assert_eq!(folded.candidates_examined, via_query.stats.candidates_examined);
     }
-    // Batched wrapper vs batched query path.
-    let legacy_batch = sharded.search_batch(&queries, 9).unwrap();
-    let new_batch = sharded.query_batch(
-        &queries.iter().map(|q| Query::new(q.clone(), 9)).collect::<Vec<_>>(),
-    );
-    for (legacy, new) in legacy_batch.iter().zip(new_batch.unwrap()) {
-        assert_eq!(legacy, &new.hits);
+    // Batched trait path vs per-query path.
+    let qs: Vec<Query> = queries.iter().map(|q| Query::new(q.clone(), 9)).collect();
+    let batch = sharded.search_batch(&qs).unwrap();
+    for (q, resp) in qs.iter().zip(&batch) {
+        assert_eq!(sharded.query(q).unwrap().hits, resp.hits);
     }
 }
 

@@ -48,6 +48,7 @@ fn prop_spec_json_roundtrip_identity() {
                 n_workers: 1 + rng.below(8),
                 max_batch: 1 + rng.below(128),
                 max_wait_us: rng.below(2000) as u64,
+                ..Default::default()
             },
         };
         spec.validate().unwrap();

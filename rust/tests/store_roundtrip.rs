@@ -1,0 +1,311 @@
+//! The durable store's contract (ISSUE 5 acceptance): save → load →
+//! WAL-replay is **bit-identical** on both index structures.
+//!
+//! * `CodeMatrix` built from the reloaded families equals the original's —
+//!   codes and bucket signatures byte-for-byte (families regenerate from
+//!   the stored spec's seeds);
+//! * re-saving a loaded index reproduces the exact segment bytes (buckets,
+//!   id maps, items, norms all survive, and the format is deterministic);
+//! * `Searcher` responses (hits *and* stats) are equal before/after the
+//!   round trip for every `RerankPolicy` and the full `QueryOpts` grid —
+//!   probes overrides, candidate caps, dedup off, exact fallback;
+//! * `Store::open` = newest snapshot + WAL replay reproduces exactly the
+//!   index that was live before the "crash".
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use tensor_lsh::index::{CodeMatrix, LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::lsh::{FamilyKind, FamilySpec, LshSpec, SeedPolicy, ServingSpec};
+use tensor_lsh::query::{QueryOpts, RerankPolicy};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::store::wal::{WalRecord, WalWriter};
+use tensor_lsh::store::{read_wal, Store};
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::testutil::{proptest, random_any_tensor};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tlsh_rt_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A randomized but valid spec: family kind, metric, K, L, probes, banding,
+/// seeds, and shard count all vary.
+fn random_spec(rng: &mut Rng) -> LshSpec {
+    let kinds = [FamilyKind::Cp, FamilyKind::Tt, FamilyKind::Naive];
+    let kind = kinds[rng.below(3)];
+    let metric = if rng.below(2) == 0 { Metric::Cosine } else { Metric::Euclidean };
+    let n_modes = 2 + rng.below(2);
+    let dims: Vec<usize> = (0..n_modes).map(|_| 3 + rng.below(4)).collect();
+    let spec = LshSpec {
+        family: FamilySpec {
+            kind,
+            dims,
+            rank: 1 + rng.below(3),
+            k: 2 + rng.below(6),
+            metric,
+            w: 2.0 + rng.uniform(0.0, 4.0),
+        },
+        l: 2 + rng.below(4),
+        probes: rng.below(3),
+        banded: kind != FamilyKind::Naive && rng.below(3) == 0,
+        seeds: SeedPolicy::new(rng.next_u64() >> 12, 1 + (rng.next_u64() >> 40)),
+        serving: ServingSpec { shards: 1 + rng.below(4), ..Default::default() },
+    };
+    spec.validate().unwrap();
+    spec
+}
+
+fn corpus(rng: &mut Rng, dims: &[usize], n: usize) -> Vec<AnyTensor> {
+    (0..n).map(|_| random_any_tensor(rng, dims, 3)).collect()
+}
+
+/// The full per-query knob grid the acceptance criteria call for.
+fn opts_grid() -> Vec<QueryOpts> {
+    let mut grid = Vec::new();
+    for rerank in [RerankPolicy::Exact, RerankPolicy::SignatureOnly, RerankPolicy::Budgeted(3)] {
+        for probes in [None, Some(2)] {
+            for cap in [None, Some(4)] {
+                let mut o = QueryOpts::top_k(6).with_rerank(rerank);
+                o.probes = probes;
+                o.max_candidates = cap;
+                grid.push(o);
+            }
+        }
+    }
+    grid.push(QueryOpts::top_k(6).with_dedup(false));
+    // Starved + rescued: a zero cap exercises the exact-fallback path.
+    grid.push(QueryOpts::top_k(6).with_max_candidates(0).with_exact_fallback(true));
+    grid
+}
+
+/// Assert two searchers answer the whole opts grid identically (hits AND
+/// stats) over the given queries.
+#[track_caller]
+fn assert_same_responses<A, B>(a: &A, b: &B, queries: &[AnyTensor], label: &str)
+where
+    A: tensor_lsh::query::Searcher,
+    B: tensor_lsh::query::Searcher,
+{
+    for (qi, q) in queries.iter().enumerate() {
+        for (oi, opts) in opts_grid().iter().enumerate() {
+            let query = tensor_lsh::query::Query::with_opts(q.clone(), opts.clone());
+            let ra = a.search(&query).unwrap();
+            let rb = b.search(&query).unwrap();
+            assert_eq!(ra.hits, rb.hits, "{label}: hits differ (query {qi}, opts {oi})");
+            assert_eq!(ra.stats, rb.stats, "{label}: stats differ (query {qi}, opts {oi})");
+        }
+    }
+}
+
+/// LshIndex: save → load is bit-identical — CodeMatrix bytes, segment
+/// bytes on re-save, and the full response grid.
+#[test]
+fn prop_lsh_index_roundtrip_bit_identical() {
+    let dir = temp_dir("single");
+    proptest("lsh index segment roundtrip", 10, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let items = corpus(rng, &dims, 40 + rng.below(40));
+        let index = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+
+        let path = dir.join(format!("case-{}.seg", rng.below(1 << 30)));
+        index.save(&path).unwrap();
+        let loaded = LshIndex::load(&path).unwrap();
+
+        assert_eq!(loaded.len(), index.len());
+        assert_eq!(loaded.n_tables(), index.n_tables());
+        assert_eq!(loaded.probes(), index.probes());
+        assert_eq!(loaded.spec(), index.spec());
+
+        // CodeMatrix bytes: the reloaded families hash identically.
+        let queries: Vec<AnyTensor> = (0..6).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        let cm_a = CodeMatrix::build(index.families(), &queries);
+        let cm_b = CodeMatrix::build(loaded.families(), &queries);
+        for b in 0..queries.len() {
+            assert_eq!(cm_a.sigs_row(b), cm_b.sigs_row(b), "signature arena row {b}");
+            for t in 0..index.n_tables() {
+                assert_eq!(cm_a.codes_row(b, t), cm_b.codes_row(b, t), "codes ({b},{t})");
+            }
+        }
+
+        // Re-saving the loaded index reproduces the exact file bytes.
+        let path2 = path.with_extension("seg2");
+        loaded.save(&path2).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&path2).unwrap(),
+            "save → load → save must be byte-identical"
+        );
+
+        // Every policy/knob combination answers identically, on indexed
+        // items and on fresh queries.
+        let mut probe_queries = queries;
+        probe_queries.extend(items.iter().take(4).cloned());
+        assert_same_responses(&index, &loaded, &probe_queries, "LshIndex");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ShardedLshIndex: parallel per-shard snapshot + manifest round-trips
+/// bit-identically, including per-shard byte identity on re-save.
+#[test]
+fn prop_sharded_index_roundtrip_bit_identical() {
+    let dir = temp_dir("sharded");
+    proptest("sharded segment roundtrip", 8, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let items = corpus(rng, &dims, 40 + rng.below(40));
+        let index = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+
+        let snap = dir.join(format!("case-{}", rng.below(1 << 30)));
+        index.save(&snap).unwrap();
+        let loaded = ShardedLshIndex::load(&snap).unwrap();
+
+        assert_eq!(loaded.len(), index.len());
+        assert_eq!(loaded.n_shards(), index.n_shards());
+        assert_eq!(loaded.n_tables(), index.n_tables());
+        assert_eq!(loaded.spec(), index.spec());
+
+        let snap2 = dir.join(format!("case2-{}", rng.below(1 << 30)));
+        loaded.save(&snap2).unwrap();
+        for s in 0..index.n_shards() {
+            let name = format!("shard-{s:03}.seg");
+            assert_eq!(
+                std::fs::read(snap.join(&name)).unwrap(),
+                std::fs::read(snap2.join(&name)).unwrap(),
+                "shard {s} bytes"
+            );
+        }
+        assert_eq!(
+            std::fs::read_to_string(snap.join("manifest.json")).unwrap(),
+            std::fs::read_to_string(snap2.join("manifest.json")).unwrap()
+        );
+
+        let mut queries: Vec<AnyTensor> =
+            (0..5).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        queries.extend(items.iter().take(4).cloned());
+        assert_same_responses(&index, &loaded, &queries, "ShardedLshIndex");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// WAL replay on the single-shard structure: segment + replayed records
+/// equal an index that took those inserts directly.
+#[test]
+fn lsh_index_wal_replay_matches_direct_inserts() {
+    let dir = temp_dir("single_wal");
+    let mut rng = Rng::new(41);
+    let spec = LshSpec::cosine(FamilyKind::Cp, vec![5, 4], 2, 6, 4).with_seed(13, 7);
+    let dims = spec.family.dims.clone();
+    let base = corpus(&mut rng, &dims, 30);
+    let mut index = LshIndex::build_from_spec(&spec, base).unwrap();
+    let seg = dir.join("index.seg");
+    index.save(&seg).unwrap();
+
+    // Log five more inserts the way the store does, then "crash".
+    let wal_path = dir.join("wal.log");
+    let mut wal = WalWriter::open_append(&wal_path).unwrap();
+    let extras = corpus(&mut rng, &dims, 5);
+    for x in &extras {
+        let sigs: Vec<u64> = index
+            .families()
+            .iter()
+            .map(|f| tensor_lsh::index::signature(&f.hash(x)))
+            .collect();
+        let id = index.insert_with_signatures(x.clone(), &sigs);
+        wal.append(&WalRecord { id: id as u64, sigs, item: x.clone() }).unwrap();
+    }
+    drop(wal);
+
+    // Recover: load the segment, replay the log.
+    let mut recovered = LshIndex::load(&seg).unwrap();
+    let replay = read_wal(&wal_path).unwrap();
+    assert_eq!(replay.records.len(), 5);
+    assert_eq!(replay.torn_bytes, 0);
+    for rec in &replay.records {
+        assert_eq!(rec.id as usize, recovered.len(), "records extend in id order");
+        recovered.insert_with_signatures(rec.item.clone(), &rec.sigs);
+    }
+    assert_eq!(recovered.len(), index.len());
+    let queries: Vec<AnyTensor> = extras
+        .iter()
+        .cloned()
+        .chain((0..4).map(|_| random_any_tensor(&mut rng, &dims, 3)))
+        .collect();
+    assert_same_responses(&index, &recovered, &queries, "LshIndex+WAL");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The full durable path on the serving structure: Store::create →
+/// inserts → reopen replays the WAL → compact → reopen again, always
+/// answering exactly like the live index did.
+#[test]
+fn store_reopen_and_compact_preserve_responses() {
+    let dir = temp_dir("store_full");
+    let mut rng = Rng::new(42);
+    let spec = LshSpec::euclidean(FamilyKind::Tt, vec![5, 4, 3], 2, 5, 3, 4.0)
+        .with_probes(1)
+        .with_seed(99, 3);
+    let dims = spec.family.dims.clone();
+    let base = corpus(&mut rng, &dims, 36);
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, base).unwrap());
+    let store = Store::create(&dir.join("db"), Arc::clone(&index), 0).unwrap();
+    for x in corpus(&mut rng, &dims, 9) {
+        store.insert(x).unwrap();
+    }
+    let queries: Vec<AnyTensor> = (0..6)
+        .map(|_| random_any_tensor(&mut rng, &dims, 3))
+        .chain((0..4).map(|i| index.item(i * 11)))
+        .collect();
+    drop(store);
+
+    // Crash-reopen: snapshot + 9 replayed records.
+    let store = Store::open(&dir.join("db"), 0).unwrap();
+    assert_eq!(store.recovery().wal_replayed, 9);
+    assert_same_responses(
+        index.as_ref(),
+        store.index().as_ref(),
+        &queries,
+        "Store reopen",
+    );
+
+    // Compact and reopen once more: generation 2, nothing to replay,
+    // still identical.
+    store.compact().unwrap();
+    drop(store);
+    let store = Store::open(&dir.join("db"), 0).unwrap();
+    assert_eq!(store.recovery().generation, 2);
+    assert_eq!(store.recovery().wal_replayed, 0);
+    assert_same_responses(
+        index.as_ref(),
+        store.index().as_ref(),
+        &queries,
+        "Store after compact",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cross-structure guard rails: a shard segment refuses to load as a whole
+/// index, and a missing manifest is an I/O error, not a panic.
+#[test]
+fn mismatched_artifacts_are_typed_errors() {
+    let dir = temp_dir("mismatch");
+    let mut rng = Rng::new(43);
+    let spec = LshSpec::cosine(FamilyKind::Cp, vec![4, 4], 2, 4, 3).with_seed(7, 5);
+    let items = corpus(&mut rng, &[4, 4], 20);
+    let sharded = ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap();
+    let snap = dir.join("snap");
+    sharded.save(&snap).unwrap();
+    // A shard segment is not a whole-index segment.
+    let err = LshIndex::load(&snap.join("shard-000.seg")).unwrap_err();
+    assert!(matches!(err, tensor_lsh::Error::Corrupt(_)), "{err}");
+    // A whole-index segment is not a sharded snapshot directory.
+    let single = LshIndex::build_from_spec(&spec, items).unwrap();
+    let seg = dir.join("single.seg");
+    single.save(&seg).unwrap();
+    assert!(ShardedLshIndex::load(&seg).is_err());
+    assert!(ShardedLshIndex::load(&dir.join("nope")).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
