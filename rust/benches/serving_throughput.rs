@@ -1,0 +1,196 @@
+//! Wire-serving benchmark (EXPERIMENTS.md §Wire).
+//!
+//! Measures the framed TCP front end end to end — client encode → socket →
+//! server decode → dispatcher → coordinator pipeline → response — and
+//! emits machine-readable `BENCH_serving.json`:
+//!
+//! * sustained **items/sec** over concurrent clients issuing `SearchBatch`
+//!   requests (the serving workload the protocol was built for);
+//! * **p50/p99 per-request wire latency** (whole round trip, batch of B);
+//! * **shed behavior** under deliberate overload: a second server with an
+//!   in-flight cap of 1 is hammered and must refuse with typed `Busy`
+//!   (counted) rather than queueing unboundedly — the admission-control
+//!   contract, measured, not assumed.
+//!
+//! Every response is checked against in-process search, so the bench
+//! doubles as a load-bearing correctness run.
+//!
+//! Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI does).
+//!
+//! Run: `cargo bench --bench serving_throughput`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend};
+use tensor_lsh::index::ShardedLshIndex;
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::net::{Client, NetConfig, Server};
+use tensor_lsh::query::{Query, Searcher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::util::json::Json;
+use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
+use tensor_lsh::Error;
+
+fn entry(name: &str, value: f64, unit: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(name.into()));
+    m.insert("value".into(), Json::Num(value));
+    m.insert("unit".into(), Json::Str(unit.into()));
+    Json::Obj(m)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // clients × batches-per-client × queries-per-batch
+    let (n_items, n_clients, n_batches, batch) =
+        if smoke { (400, 2, 4, 8) } else { (5_000, 8, 40, 16) };
+    let dims = vec![8usize, 8];
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.clone(), 3, 10, 6).with_seed(17, 3);
+    let data = DatasetSpec {
+        dims,
+        n_items,
+        rank: 2,
+        n_clusters: (n_items / 50).max(2),
+        noise: 0.3,
+        seed: 17,
+    };
+    let (items, _) = low_rank_corpus(&data);
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items).unwrap());
+    println!(
+        "serving bench: n={n_items}, {n_clients} clients × {n_batches} batches × {batch} queries"
+    );
+
+    // -- phase 1: throughput + latency over concurrent clients --------------
+    let coord = Coordinator::start(
+        Arc::clone(&index),
+        CoordinatorConfig::from_spec(&spec),
+        HashBackend::Native,
+    );
+    let server = Server::start(coord, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let (lat_tx, lat_rx) = std::sync::mpsc::channel::<f64>();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let index = Arc::clone(&index);
+        let lat_tx = lat_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(1000 + c as u64);
+            for round in 0..n_batches {
+                let qs: Vec<Query> = (0..batch)
+                    .map(|_| Query::new(index.item(rng.below(n_items)), 10))
+                    .collect();
+                let req0 = Instant::now();
+                let got = client.search_batch(&qs).unwrap();
+                lat_tx.send(req0.elapsed().as_secs_f64() * 1e6).unwrap();
+                // Spot-check correctness on the first round of each client:
+                // the wire answer must equal in-process search, bit for bit.
+                if round == 0 {
+                    for (q, resp) in qs.iter().zip(&got) {
+                        let want = index.search(q).unwrap();
+                        assert_eq!(resp.hits, want.hits, "wire hits diverged");
+                        assert_eq!(resp.stats, want.stats, "wire stats diverged");
+                    }
+                }
+            }
+        }));
+    }
+    drop(lat_tx);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut latencies_us: Vec<f64> = lat_rx.iter().collect();
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_queries = (n_clients * n_batches * batch) as f64;
+    let items_per_sec = total_queries / wall;
+    let p50 = percentile(&latencies_us, 0.50);
+    let p99 = percentile(&latencies_us, 0.99);
+    let snap = server.shutdown();
+    assert_eq!(snap.queries as usize, n_clients * n_batches * batch);
+    println!(
+        "throughput: {items_per_sec:.0} queries/s | request p50 {p50:.0} µs, p99 {p99:.0} µs \
+         (batch of {batch})"
+    );
+
+    // -- phase 2: overload sheds with typed Busy -----------------------------
+    let coord = Coordinator::start(
+        Arc::clone(&index),
+        CoordinatorConfig::from_spec(&spec),
+        HashBackend::Native,
+    );
+    let overload_cfg = NetConfig { max_inflight: 1, ..NetConfig::default() };
+    let server = Server::start(coord, "127.0.0.1:0", overload_cfg).unwrap();
+    let addr = server.local_addr();
+    let hammer_rounds = if smoke { 10 } else { 100 };
+    let mut busy = 0u64;
+    let mut served = 0u64;
+    let mut handles = Vec::new();
+    for c in 0..2 {
+        let index = Arc::clone(&index);
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(2000 + c as u64);
+            let (mut busy, mut served) = (0u64, 0u64);
+            for _ in 0..hammer_rounds {
+                let qs: Vec<Query> = (0..4)
+                    .map(|_| Query::new(index.item(rng.below(n_items)), 5))
+                    .collect();
+                match client.search_batch(&qs) {
+                    Ok(_) => served += 1,
+                    Err(Error::Busy(_)) => busy += 1,
+                    Err(e) => panic!("overload must shed typed, got {e}"),
+                }
+            }
+            (busy, served)
+        }));
+    }
+    for h in handles {
+        let (b, s) = h.join().unwrap();
+        busy += b;
+        served += s;
+    }
+    let shed = server.shed_count();
+    server.shutdown();
+    println!(
+        "overload (in-flight cap 1): {busy} Busy refusals, {served} served, \
+         server counted {shed} shed"
+    );
+    // A batch of 4 can never fit a cap of 1: every request was refused,
+    // typed, and counted.
+    assert_eq!(busy, 2 * hammer_rounds as u64);
+    assert!(shed >= busy);
+
+    // -- machine-readable report ---------------------------------------------
+    let mut config = BTreeMap::new();
+    config.insert("n_items".into(), Json::Num(n_items as f64));
+    config.insert("n_clients".into(), Json::Num(n_clients as f64));
+    config.insert("n_batches".into(), Json::Num(n_batches as f64));
+    config.insert("batch".into(), Json::Num(batch as f64));
+    config.insert("smoke".into(), Json::Bool(smoke));
+
+    let entries = vec![
+        entry("items_per_sec", items_per_sec, "queries/s"),
+        entry("p50_us", p50, "µs"),
+        entry("p99_us", p99, "µs"),
+        entry("shed_requests", shed as f64, "requests"),
+    ];
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("serving_throughput".into()));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("spec".into(), spec.to_json());
+    root.insert("entries".into(), Json::Arr(entries));
+    let path = "BENCH_serving.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
+}

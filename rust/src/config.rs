@@ -179,6 +179,34 @@ impl AppConfig {
                     }
                 }
             }
+            "listen" => {
+                if value.is_empty() {
+                    return Err(Error::InvalidSpec("listen addr must not be empty".into()));
+                }
+                match &mut self.spec.serving.listen {
+                    Some(l) => l.addr = value.to_string(),
+                    None => {
+                        self.spec.serving.listen =
+                            Some(crate::lsh::spec::NetSpec::new(value))
+                    }
+                }
+            }
+            // Listener limits share the store keys' placeholder trick: an
+            // empty addr placeholder holds them until `listen=<addr>`
+            // arrives, and validate() rejects the placeholder otherwise.
+            "max_conns" | "read_timeout_ms" | "write_timeout_ms" | "max_inflight" => {
+                let listen = self
+                    .spec
+                    .serving
+                    .listen
+                    .get_or_insert_with(|| crate::lsh::spec::NetSpec::new(""));
+                match key {
+                    "max_conns" => listen.max_conns = parse_pos(value)?,
+                    "read_timeout_ms" => listen.read_timeout_ms = parse_u64(value)?,
+                    "write_timeout_ms" => listen.write_timeout_ms = parse_u64(value)?,
+                    _ => listen.max_inflight = parse_pos(value)?,
+                }
+            }
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -216,6 +244,19 @@ impl AppConfig {
                 "checkpoint_every".into(),
                 Json::Num(store.checkpoint_every as f64),
             );
+        }
+        if let Some(listen) = &s.serving.listen {
+            m.insert("listen".into(), Json::Str(listen.addr.clone()));
+            m.insert("max_conns".into(), Json::Num(listen.max_conns as f64));
+            m.insert(
+                "read_timeout_ms".into(),
+                Json::Num(listen.read_timeout_ms as f64),
+            );
+            m.insert(
+                "write_timeout_ms".into(),
+                Json::Num(listen.write_timeout_ms as f64),
+            );
+            m.insert("max_inflight".into(), Json::Num(listen.max_inflight as f64));
         }
         Json::Obj(m).to_string_pretty()
     }
@@ -361,6 +402,31 @@ mod tests {
         assert_eq!(c2.spec.serving.store, c.spec.serving.store);
         let _ = std::fs::remove_file(&tmp);
         assert!(AppConfig::default().apply_override("store=").is_err());
+    }
+
+    #[test]
+    fn listen_keys_round_trip_and_validate() {
+        let mut c = AppConfig::default();
+        // Limits may arrive before the address (alphabetical file order).
+        c.apply_override("max_conns=8").unwrap();
+        assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))), "addr still empty");
+        c.apply_override("listen=127.0.0.1:7979").unwrap();
+        c.apply_override("max_inflight=256").unwrap();
+        c.apply_override("read_timeout_ms=5000").unwrap();
+        c.spec.validate().unwrap();
+        let listen = c.spec.serving.listen.as_ref().unwrap();
+        assert_eq!(listen.addr, "127.0.0.1:7979");
+        assert_eq!((listen.max_conns, listen.max_inflight), (8, 256));
+        assert_eq!(listen.read_timeout_ms, 5000);
+        // Flat file round trip keeps the listener section.
+        let tmp = std::env::temp_dir().join("tensorlsh_listen_cfg_test.json");
+        std::fs::write(&tmp, c.to_json()).unwrap();
+        let mut c2 = AppConfig::default();
+        c2.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c2.spec.serving.listen, c.spec.serving.listen);
+        let _ = std::fs::remove_file(&tmp);
+        assert!(AppConfig::default().apply_override("listen=").is_err());
+        assert!(AppConfig::default().apply_override("max_conns=0").is_err());
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Concurrent façade over the pipeline: many threads, one [`Coordinator`].
+//!
+//! The coordinator itself is deliberately single-caller (`!Sync`: its
+//! synchronous wrappers own the output receiver and a `Cell` ticket), which
+//! is wrong for a thread-per-connection network server — concurrent
+//! `query_batch` callers would steal each other's responses off the shared
+//! output channel. The [`Dispatcher`] fixes the topology instead of the
+//! types: a single *router* thread owns the coordinator and is the only
+//! reader of its output, while any number of caller threads submit through
+//! the (clone-free, `Sync` since Rust 1.72) input sender and park on a
+//! per-call channel. The router matches responses to callers by request id.
+//!
+//! The pending-map size doubles as the admission-control signal: the wire
+//! server sheds load with a typed `Busy` once
+//! [`Dispatcher::inflight`] crosses its configured cap, so a deep batcher
+//! queue turns into fast refusals instead of unbounded latency.
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::protocol::{QueryRequest, QueryResponse};
+use super::server::Coordinator;
+use crate::error::{Error, Result};
+use crate::query::{Query, SearchResponse, Searcher};
+use crate::store::Store;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Where a routed response goes: the caller's reply channel plus the slot
+/// the query occupies in its batch.
+struct Caller {
+    slot: usize,
+    tx: Sender<(usize, Result<QueryResponse>)>,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, Caller>>>;
+
+/// Thread-safe front end to a running [`Coordinator`] (see the module
+/// docs). Submissions are matched back to their callers by id; dropping the
+/// dispatcher's input on [`Dispatcher::shutdown`] drains the pipeline.
+pub struct Dispatcher {
+    submit: Sender<(QueryRequest, Instant)>,
+    pending: PendingMap,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    store: Option<Arc<Store>>,
+    /// The router thread; owns the coordinator and returns it once the
+    /// pipeline's output closes.
+    router: JoinHandle<Coordinator>,
+}
+
+impl Dispatcher {
+    /// Wrap a freshly started coordinator. Fails if the coordinator's
+    /// intake was already closed.
+    pub fn start(mut coord: Coordinator) -> Result<Dispatcher> {
+        let submit = coord
+            .take_input()
+            .ok_or_else(|| Error::Coordinator("coordinator already shut down".into()))?;
+        let metrics = coord.metrics_arc();
+        let store = coord.store().cloned();
+        let pending: PendingMap = Arc::default();
+        let router = {
+            let pending = Arc::clone(&pending);
+            std::thread::spawn(move || {
+                while let Some((id, resp)) = coord.recv_tagged() {
+                    // A missing entry means the caller timed out and
+                    // deregistered — the late response is dropped, never
+                    // delivered to a different caller.
+                    let caller = pending.lock().unwrap().remove(&id);
+                    if let Some(c) = caller {
+                        let _ = c.tx.send((c.slot, resp));
+                    }
+                }
+                // Pipeline drained: fail any stragglers by dropping their
+                // reply senders (their recv sees a closed channel).
+                pending.lock().unwrap().clear();
+                coord
+            })
+        };
+        Ok(Dispatcher {
+            submit,
+            pending,
+            next_id: AtomicU64::new(0),
+            metrics,
+            store,
+            router,
+        })
+    }
+
+    /// Queries currently in flight (submitted, not yet answered or timed
+    /// out) — the admission-control depth signal.
+    pub fn inflight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Metrics snapshot (same counters the coordinator records).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The durable store backing the pipeline, if any.
+    pub fn store(&self) -> Option<&Arc<Store>> {
+        self.store.as_ref()
+    }
+
+    /// Serve one query; `None` timeout waits indefinitely.
+    pub fn query_timeout(
+        &self,
+        q: &Query,
+        timeout: Option<Duration>,
+    ) -> Result<SearchResponse> {
+        Ok(self
+            .query_batch_timeout(std::slice::from_ref(q), timeout)?
+            .remove(0))
+    }
+
+    /// Serve a batch; `out[b]` answers `qs[b]`. Safe to call from any
+    /// number of threads concurrently — responses are routed by id, so
+    /// interleaved batches cannot steal each other's answers. On timeout
+    /// the batch's unanswered ids are deregistered (late responses are
+    /// discarded by the router) and a typed error is returned.
+    pub fn query_batch_timeout(
+        &self,
+        qs: &[Query],
+        timeout: Option<Duration>,
+    ) -> Result<Vec<SearchResponse>> {
+        if qs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = qs.len();
+        let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
+        let (tx, rx) = channel::<(usize, Result<QueryResponse>)>();
+        {
+            let mut p = self.pending.lock().unwrap();
+            for slot in 0..n {
+                p.insert(base + slot as u64, Caller { slot, tx: tx.clone() });
+            }
+        }
+        drop(tx); // the router's clones are the only senders left
+        let unregister = || {
+            let mut p = self.pending.lock().unwrap();
+            for slot in 0..n {
+                p.remove(&(base + slot as u64));
+            }
+        };
+        for (slot, q) in qs.iter().enumerate() {
+            let req = QueryRequest::with_query(base + slot as u64, q.clone());
+            if self.submit.send((req, Instant::now())).is_err() {
+                unregister();
+                return Err(Error::Coordinator("pipeline is shutting down".into()));
+            }
+        }
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut out: Vec<Option<SearchResponse>> = (0..n).map(|_| None).collect();
+        let mut filled = 0usize;
+        while filled < n {
+            let received = match deadline {
+                None => rx.recv().map_err(|_| closed()),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        unregister();
+                        return Err(timed_out(timeout));
+                    }
+                    rx.recv_timeout(d - now).map_err(|e| match e {
+                        RecvTimeoutError::Timeout => {
+                            unregister();
+                            timed_out(timeout)
+                        }
+                        RecvTimeoutError::Disconnected => closed(),
+                    })
+                }
+            };
+            let (slot, result) = received?;
+            // A failed query fails the batch; responses for its siblings
+            // are still routed (and discarded) as they arrive.
+            let resp = result?;
+            if out[slot].is_none() {
+                out[slot] = Some(SearchResponse { hits: resp.results, stats: resp.stats });
+                filled += 1;
+            }
+        }
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| Error::Coordinator("response missing from batch".into())))
+            .collect()
+    }
+
+    /// Drain and shut down, bounded by `limit`: dropping the input sender
+    /// closes the pipeline, the router routes the remaining in-flight
+    /// responses and hands the coordinator back, and the coordinator's own
+    /// (idempotent) shutdown joins threads and checkpoints the store. If
+    /// the pipeline is wedged past the deadline, the router is detached and
+    /// the store checkpointed directly — `serve` never hangs here.
+    pub fn shutdown(self, limit: Duration) -> MetricsSnapshot {
+        let Dispatcher { submit, pending: _pending, next_id: _, metrics, store, router } =
+            self;
+        drop(submit); // last sender: the pipeline starts draining
+        let deadline = Instant::now() + limit;
+        // `JoinHandle` has no timed join; poll under the deadline.
+        while !router.is_finished() {
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "dispatcher: pipeline did not drain within {limit:?}; detaching it"
+                );
+                checkpoint(&store);
+                return metrics.snapshot();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        match router.join() {
+            Ok(coord) => {
+                // The output already disconnected, so this join-and-checkpoint
+                // is quick; the floor keeps a near-expired deadline from
+                // spuriously detaching already-finished threads.
+                let left = deadline.saturating_duration_since(Instant::now());
+                coord.shutdown_deadline(left.max(Duration::from_millis(100)))
+            }
+            Err(_) => {
+                eprintln!("dispatcher: router thread panicked");
+                checkpoint(&store);
+                metrics.snapshot()
+            }
+        }
+    }
+}
+
+impl Searcher for Dispatcher {
+    fn search(&self, q: &Query) -> Result<SearchResponse> {
+        self.query_timeout(q, None)
+    }
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        self.query_batch_timeout(qs, None)
+    }
+}
+
+fn closed() -> Error {
+    Error::Coordinator("pipeline closed before all responses arrived".into())
+}
+
+fn timed_out(timeout: Option<Duration>) -> Error {
+    Error::Coordinator(format!(
+        "query timed out after {:?}",
+        timeout.unwrap_or_default()
+    ))
+}
+
+fn checkpoint(store: &Option<Arc<Store>>) {
+    if let Some(store) = store {
+        if let Err(e) = store.checkpoint_if_dirty() {
+            eprintln!("dispatcher: shutdown checkpoint failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, HashBackend};
+    use crate::index::ShardedLshIndex;
+    use crate::lsh::{FamilyKind, LshSpec};
+    use crate::workload::{low_rank_corpus, DatasetSpec};
+
+    fn build_index(n_items: usize) -> Arc<ShardedLshIndex> {
+        let dims = vec![6usize, 6];
+        let data = DatasetSpec {
+            dims: dims.clone(),
+            n_items,
+            rank: 2,
+            n_clusters: 6,
+            noise: 0.25,
+            seed: 31,
+        };
+        let (items, _) = low_rank_corpus(&data);
+        let spec = LshSpec::cosine(FamilyKind::Cp, dims, 4, 8, 5).with_seed(401, 1);
+        Arc::new(ShardedLshIndex::build(&spec.index_config().unwrap(), items, 4).unwrap())
+    }
+
+    fn start(index: &Arc<ShardedLshIndex>) -> Dispatcher {
+        let coord = Coordinator::start(
+            Arc::clone(index),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+        );
+        Dispatcher::start(coord).unwrap()
+    }
+
+    #[test]
+    fn concurrent_batches_route_to_their_own_callers() {
+        let index = build_index(120);
+        let disp = Arc::new(start(&index));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let disp = Arc::clone(&disp);
+            let index = Arc::clone(&index);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..5 {
+                    let qs: Vec<Query> = (0..6)
+                        .map(|i| {
+                            let id = ((t as usize * 31 + round * 7 + i) * 3) % 120;
+                            Query::new(index.item(id), 3)
+                        })
+                        .collect();
+                    let got = disp.query_batch_timeout(&qs, None).unwrap();
+                    for (q, resp) in qs.iter().zip(&got) {
+                        let want = index.query(q).unwrap();
+                        assert_eq!(resp.hits, want.hits);
+                        assert_eq!(resp.stats, want.stats);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(disp.inflight(), 0);
+        let disp = Arc::into_inner(disp).unwrap();
+        let snap = disp.shutdown(Duration::from_secs(10));
+        assert_eq!(snap.queries, 4 * 5 * 6);
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_and_shutdown_is_fast() {
+        let index = build_index(40);
+        let disp = start(&index);
+        let q = Query::new(index.item(1), 2);
+        assert_eq!(disp.query_timeout(&q, None).unwrap().hits[0].id, 1);
+        let t0 = Instant::now();
+        let snap = disp.shutdown(Duration::from_secs(10));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(snap.queries, 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let index = build_index(40);
+        let disp = start(&index);
+        assert!(disp.query_batch_timeout(&[], None).unwrap().is_empty());
+        assert_eq!(disp.inflight(), 0);
+        disp.shutdown(Duration::from_secs(10));
+    }
+}

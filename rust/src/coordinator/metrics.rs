@@ -151,7 +151,7 @@ impl Metrics {
 }
 
 /// Point-in-time metrics view.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub queries: u64,
     pub qps: f64,
@@ -167,6 +167,68 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    /// JSON form for the wire protocol's `Stats` response. `f64` fields
+    /// round-trip exactly: the printer emits the shortest representation
+    /// that parses back to the same bits (Rust's float `Display`), and the
+    /// snapshot never contains NaN/∞ (idle means are defined as 0.0).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("queries".to_string(), Json::Num(self.queries as f64));
+        m.insert("qps".to_string(), Json::Num(self.qps));
+        m.insert("mean_candidates".to_string(), Json::Num(self.mean_candidates));
+        m.insert("mean_probes".to_string(), Json::Num(self.mean_probes));
+        m.insert("mean_reranked".to_string(), Json::Num(self.mean_reranked));
+        m.insert("fallbacks".to_string(), Json::Num(self.fallbacks as f64));
+        m.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
+        m.insert("p50_us".to_string(), Json::Num(self.p50_us));
+        m.insert("p95_us".to_string(), Json::Num(self.p95_us));
+        m.insert("p99_us".to_string(), Json::Num(self.p99_us));
+        m.insert("mean_us".to_string(), Json::Num(self.mean_us));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`MetricsSnapshot::to_json`]. Unknown keys are rejected.
+    pub fn from_json(v: &crate::util::json::Json) -> crate::error::Result<MetricsSnapshot> {
+        let obj = v.as_obj()?;
+        for key in obj.keys() {
+            if ![
+                "queries",
+                "qps",
+                "mean_candidates",
+                "mean_probes",
+                "mean_reranked",
+                "fallbacks",
+                "mean_batch",
+                "p50_us",
+                "p95_us",
+                "p99_us",
+                "mean_us",
+            ]
+            .contains(&key.as_str())
+            {
+                return Err(crate::error::Error::Json(format!(
+                    "unknown metrics key '{key}'"
+                )));
+            }
+        }
+        Ok(MetricsSnapshot {
+            queries: v.get("queries")?.as_usize()? as u64,
+            qps: v.get("qps")?.as_f64()?,
+            mean_candidates: v.get("mean_candidates")?.as_f64()?,
+            mean_probes: v.get("mean_probes")?.as_f64()?,
+            mean_reranked: v.get("mean_reranked")?.as_f64()?,
+            fallbacks: v.get("fallbacks")?.as_usize()? as u64,
+            mean_batch: v.get("mean_batch")?.as_f64()?,
+            p50_us: v.get("p50_us")?.as_f64()?,
+            p95_us: v.get("p95_us")?.as_f64()?,
+            p99_us: v.get("p99_us")?.as_f64()?,
+            mean_us: v.get("mean_us")?.as_f64()?,
+        })
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -264,5 +326,33 @@ mod tests {
             &SearchStats { exact_fallback: true, ..SearchStats::default() },
         );
         assert_eq!(m.snapshot().fallbacks, 1);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_is_exact() {
+        let m = Metrics::new();
+        m.record_batch(3);
+        for i in 0..7 {
+            m.record_query(
+                37.5 + i as f64,
+                &SearchStats {
+                    candidates_generated: 9,
+                    candidates_examined: 7,
+                    probes_used: 2,
+                    tables_hit: 4,
+                    reranked: 7,
+                    exact_fallback: i == 0,
+                },
+            );
+        }
+        let s = m.snapshot();
+        let text = s.to_json().to_string_pretty();
+        let back =
+            MetricsSnapshot::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s, "snapshot must survive JSON bit-exactly");
+        // Idle snapshots round-trip too (all-zero means).
+        let idle = Metrics::new().snapshot();
+        let back = MetricsSnapshot::from_json(&idle.to_json()).unwrap();
+        assert_eq!(back, idle);
     }
 }

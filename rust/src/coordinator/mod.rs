@@ -47,12 +47,20 @@
 //! WAL (threshold checkpointing per `ServingSpec::store`) and shutdown
 //! checkpointing whatever is pending.
 
+//! Concurrency: the coordinator itself is single-caller; the
+//! [`Dispatcher`] wraps it behind a router thread so many caller threads
+//! (e.g. the [`crate::net`] server's per-connection handlers) can share one
+//! pipeline, with responses matched back by request id and in-flight depth
+//! exposed for admission control.
+
 mod batcher;
+mod dispatch;
 mod metrics;
 mod protocol;
 mod server;
 
 pub use batcher::{drain_batch, BatcherConfig};
+pub use dispatch::Dispatcher;
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use protocol::{QueryRequest, QueryResponse};
-pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams};
+pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, DRAIN_DEADLINE};

@@ -22,10 +22,10 @@ use crate::store::Store;
 use crate::tensor::{AnyTensor, CpTensor};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Coordinator policy knobs.
 #[derive(Clone, Debug)]
@@ -142,11 +142,20 @@ pub struct Coordinator {
     /// [`SYNC_ID_BASE`] so it cannot collide with conventional
     /// caller-assigned ids (0, 1, 2, …) from interleaved `submit`s.
     sync_ticket: std::cell::Cell<u64>,
+    /// Guard that makes [`Coordinator::shutdown`]'s drain idempotent: the
+    /// wire server drains through the dispatcher first and then shuts the
+    /// coordinator down, and the second pass must be a no-op.
+    drained: bool,
 }
 
 /// First id the synchronous wrappers use — the top half of the id space,
 /// far away from the small sequential ids callers conventionally assign.
 const SYNC_ID_BASE: u64 = 1 << 63;
+
+/// Default bound on [`Coordinator::shutdown`]'s drain: long enough for any
+/// healthy pipeline to finish its in-flight batches, short enough that a
+/// wedged worker cannot hang a `serve` process forever.
+pub const DRAIN_DEADLINE: Duration = Duration::from_secs(30);
 
 impl Coordinator {
     /// Spin up the pipeline over a built sharded index.
@@ -380,6 +389,7 @@ impl Coordinator {
             threads,
             store: None,
             sync_ticket: std::cell::Cell::new(SYNC_ID_BASE),
+            drained: false,
         }
     }
 
@@ -486,19 +496,80 @@ impl Coordinator {
     /// A durable coordinator checkpoints pending WAL records on the way
     /// out (failures are reported on stderr, not swallowed into a panic).
     /// Returns the final metrics snapshot.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
+    ///
+    /// The drain is bounded by [`DRAIN_DEADLINE`]: a wedged pipeline (e.g.
+    /// a hash stage stuck inside a pathological query) is detached with a
+    /// warning instead of hanging the caller forever. Use
+    /// [`Coordinator::shutdown_deadline`] to pick the bound.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.shutdown_deadline(DRAIN_DEADLINE)
+    }
+
+    /// [`Coordinator::shutdown`] with an explicit drain bound.
+    pub fn shutdown_deadline(mut self, limit: Duration) -> MetricsSnapshot {
+        self.drain(limit);
+        self.metrics.snapshot()
+    }
+
+    /// The actual drain: idempotent (a second call is a no-op) and bounded
+    /// by `limit`. On a clean drain the pipeline threads are joined; past
+    /// the deadline they are detached with a warning — they exit on their
+    /// own once the stuck stage returns, because every channel they send
+    /// into is closed by then.
+    fn drain(&mut self, limit: Duration) {
+        if self.drained {
+            return;
+        }
+        self.drained = true;
         self.input.take(); // closes the router channel
+        let deadline = Instant::now() + limit;
         // Drain remaining responses so workers can finish sending.
-        while self.output.recv().is_ok() {}
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        let timed_out = loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break true;
+            }
+            match self.output.recv_timeout(deadline - now) {
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => break true,
+                Err(RecvTimeoutError::Disconnected) => break false,
+            }
+        };
+        if timed_out {
+            eprintln!(
+                "coordinator: drain did not finish within {limit:?}; detaching {} \
+                 pipeline threads",
+                self.threads.len()
+            );
+            self.threads.clear();
+        } else {
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
         }
         if let Some(store) = &self.store {
             if let Err(e) = store.checkpoint_if_dirty() {
                 eprintln!("coordinator: shutdown checkpoint failed: {e}");
             }
         }
-        self.metrics.snapshot()
+    }
+
+    /// Move the pipeline's input sender out (dispatcher internals): the
+    /// holder becomes the only submitter, and dropping it closes the
+    /// pipeline. `submit`/`query`/`query_batch` error afterwards.
+    pub(crate) fn take_input(&mut self) -> Option<Sender<(QueryRequest, Instant)>> {
+        self.input.take()
+    }
+
+    /// Receive the next response with its request id (dispatcher
+    /// internals); `None` once the pipeline has fully drained.
+    pub(crate) fn recv_tagged(&self) -> Option<(u64, Result<QueryResponse>)> {
+        self.output.recv().ok()
+    }
+
+    /// Shared metrics handle (dispatcher internals).
+    pub(crate) fn metrics_arc(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
     }
 
     /// Convenience: push a whole trace through and collect all responses
@@ -843,6 +914,105 @@ mod tests {
         assert!(matches!(plain.insert(index.item(0)), Err(Error::Coordinator(_))));
         plain.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression (ISSUE 6 satellite): a stuck pipeline must not hang
+    /// shutdown. A family that sleeps on a sentinel query wedges the hash
+    /// stage for seconds; the deadline-bounded drain detaches it and
+    /// returns well before the sleep ends (the unbounded drain used to
+    /// block until the stage finished).
+    #[test]
+    fn shutdown_deadline_bounds_a_stuck_pipeline() {
+        use crate::lsh::HashFamily;
+
+        const SENTINEL_SCALE: f32 = 9999.0;
+        /// Delegates to a real family, but sleeps when fed the sentinel
+        /// (scale-tagged) query — never during the index build.
+        struct SlowFamily {
+            inner: Arc<dyn HashFamily>,
+            delay: Duration,
+        }
+        impl SlowFamily {
+            fn stall_on_sentinel(&self, x: &AnyTensor) {
+                if matches!(x, AnyTensor::Cp(t) if t.scale == SENTINEL_SCALE) {
+                    std::thread::sleep(self.delay);
+                }
+            }
+        }
+        impl HashFamily for SlowFamily {
+            fn k(&self) -> usize {
+                self.inner.k()
+            }
+            fn project(&self, x: &AnyTensor) -> Vec<f64> {
+                self.stall_on_sentinel(x);
+                self.inner.project(x)
+            }
+            fn discretize_into(&self, z: &[f64], out: &mut [i32]) {
+                self.inner.discretize_into(z, out)
+            }
+            fn param_count(&self) -> usize {
+                self.inner.param_count()
+            }
+            fn name(&self) -> String {
+                format!("slow({})", self.inner.name())
+            }
+            fn analytic_collision(&self, proxy: f64) -> f64 {
+                self.inner.analytic_collision(proxy)
+            }
+            fn is_euclidean(&self) -> bool {
+                self.inner.is_euclidean()
+            }
+        }
+
+        let spec = LshSpec::cosine(FamilyKind::Cp, vec![5, 5], 2, 6, 4).with_seed(77, 1);
+        let families = spec.families().unwrap();
+        let delay = Duration::from_secs(3);
+        #[allow(deprecated)]
+        let cfg = crate::index::IndexConfig::from_family_builder(
+            Arc::new(move |t: usize| {
+                Arc::new(SlowFamily { inner: Arc::clone(&families[t]), delay })
+                    as Arc<dyn HashFamily>
+            }),
+            spec.l,
+            spec.family.metric,
+            0,
+        );
+        let items: Vec<AnyTensor> = {
+            let mut rng = crate::rng::Rng::new(7);
+            (0..40)
+                .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[5, 5], 2)))
+                .collect()
+        };
+        let index = Arc::new(ShardedLshIndex::build(&cfg, items, 2).unwrap());
+
+        let coord = Coordinator::start(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 2, ..Default::default() },
+            HashBackend::Native,
+        );
+        // A normal query flows through the slow family un-stalled.
+        let ok = coord.query(&Query::new(index.item(5), 3)).unwrap();
+        assert_eq!(ok.hits[0].id, 5);
+        // The sentinel query wedges the hash stage for `delay`.
+        let sentinel = match index.item(5) {
+            AnyTensor::Cp(mut t) => {
+                t.scale = SENTINEL_SCALE;
+                AnyTensor::Cp(t)
+            }
+            other => panic!("cp corpus expected, got {other:?}"),
+        };
+        coord
+            .submit(QueryRequest::with_query(0, Query::new(sentinel, 3)))
+            .unwrap();
+        // Let the hash stage pick the query up and start sleeping.
+        std::thread::sleep(Duration::from_millis(100));
+        let t0 = Instant::now();
+        coord.shutdown_deadline(Duration::from_millis(200));
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "bounded drain must not wait out the {delay:?} stall (took {elapsed:?})"
+        );
     }
 
     #[test]

@@ -38,11 +38,17 @@ pub enum Error {
     /// Underlying I/O failure.
     Io(std::io::Error),
 
-    /// A durable-store artifact (snapshot segment or WAL record) failed
-    /// structural validation: bad magic, CRC mismatch, truncated section,
-    /// or internally inconsistent contents. The store never panics on — or
-    /// silently serves — damaged bytes; it returns this instead.
+    /// A durable-store artifact (snapshot segment or WAL record) or a wire
+    /// frame failed structural validation: bad magic, CRC mismatch,
+    /// truncated section, or internally inconsistent contents. The store
+    /// and the network layer never panic on — or silently serve — damaged
+    /// bytes; they return this instead.
     Corrupt(String),
+
+    /// The serving stack shed this request under load (admission control
+    /// or connection cap). Retryable: the request was refused before any
+    /// work happened, not half-done.
+    Busy(String),
 }
 
 impl fmt::Display for Error {
@@ -58,6 +64,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Corrupt(m) => write!(f, "corrupt store data: {m}"),
+            Error::Busy(m) => write!(f, "server busy: {m}"),
         }
     }
 }
@@ -100,6 +107,10 @@ mod tests {
         assert_eq!(
             Error::Corrupt("bad crc".into()).to_string(),
             "corrupt store data: bad crc"
+        );
+        assert_eq!(
+            Error::Busy("queue full".into()).to_string(),
+            "server busy: queue full"
         );
     }
 

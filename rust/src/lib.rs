@@ -54,7 +54,13 @@
 //!   (stubbed out unless the `pjrt` feature is enabled).
 //! * [`coordinator`] — request router, dynamic batcher, batched hash stage,
 //!   shard-parallel scatter-gather worker pool, metrics; warm-starts from a
-//!   [`store::Store`] and checkpoints on shutdown.
+//!   [`store::Store`] and checkpoints on shutdown; the
+//!   [`coordinator::Dispatcher`] lets any number of threads share one
+//!   pipeline.
+//! * [`net`] — std-only framed TCP front end: CRC-checked wire protocol,
+//!   thread-per-connection [`net::Server`] with admission control and
+//!   graceful drain, blocking [`net::Client`] whose answers are
+//!   bit-identical to in-process search.
 //! * [`bench_harness`] — regenerators for every table/figure of the paper.
 //!
 //! ## Quickstart
@@ -160,6 +166,7 @@ pub mod error;
 pub mod index;
 pub mod linalg;
 pub mod lsh;
+pub mod net;
 pub mod projection;
 pub mod query;
 pub mod rng;
@@ -175,14 +182,15 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::coordinator::{QueryRequest, QueryResponse};
+    pub use crate::coordinator::{Dispatcher, QueryRequest, QueryResponse};
     pub use crate::error::{Error, Result};
+    pub use crate::net::{Client, NetConfig, Server};
     pub use crate::index::{
         CodeMatrix, HashScratch, IndexConfig, LshIndex, Metric, SearchResult, ShardedLshIndex,
     };
     pub use crate::lsh::{
         CoordinatorBuilder, E2lshFamily, FamilyKind, FamilySpec, HashFamily, IndexBuilder,
-        LshSpec, SeedPolicy, ServingSpec, SrpFamily, StoreSpec,
+        LshSpec, NetSpec, SeedPolicy, ServingSpec, SrpFamily, StoreSpec,
     };
     pub use crate::lsh::{CpE2lsh, CpSrp, NaiveE2lsh, NaiveSrp, TtE2lsh, TtSrp};
     pub use crate::store::Store;

@@ -23,8 +23,8 @@ pub use planner::{
     validity_report, LshPlan, ValidityReport,
 };
 pub use spec::{
-    CoordinatorBuilder, FamilyKind, FamilySpec, IndexBuilder, LshSpec, SeedPolicy, ServingSpec,
-    StoreSpec,
+    CoordinatorBuilder, FamilyKind, FamilySpec, IndexBuilder, LshSpec, NetSpec, SeedPolicy,
+    ServingSpec, StoreSpec,
 };
 
 use crate::projection::{CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher};

@@ -296,6 +296,100 @@ impl StoreSpec {
     }
 }
 
+/// Optional wire-listener configuration: where `tensorlsh serve` binds its
+/// framed TCP front end ([`crate::net::Server`]) and the connection-level
+/// limits it enforces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetSpec {
+    /// Listen address, e.g. `"127.0.0.1:7878"` (`:0` picks a free port).
+    pub addr: String,
+    /// Concurrent connections before new sockets are shed with `Busy`.
+    pub max_conns: usize,
+    /// Per-connection idle/read budget in milliseconds.
+    pub read_timeout_ms: u64,
+    /// Per-connection write budget in milliseconds.
+    pub write_timeout_ms: u64,
+    /// Admission-control cap on pipeline in-flight depth; searches past it
+    /// are refused with `Busy`.
+    pub max_inflight: usize,
+}
+
+impl Default for NetSpec {
+    fn default() -> Self {
+        NetSpec {
+            addr: "127.0.0.1:7878".to_string(),
+            max_conns: 64,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 10_000,
+            max_inflight: 1024,
+        }
+    }
+}
+
+impl NetSpec {
+    pub fn new(addr: impl Into<String>) -> NetSpec {
+        NetSpec { addr: addr.into(), ..NetSpec::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            return Err(Error::InvalidSpec("listen addr must not be empty".into()));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::InvalidSpec("listen max_conns must be ≥ 1".into()));
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::InvalidSpec("listen max_inflight must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("addr".to_string(), Json::Str(self.addr.clone()));
+        m.insert("max_conns".to_string(), Json::Num(self.max_conns as f64));
+        m.insert(
+            "read_timeout_ms".to_string(),
+            Json::Num(self.read_timeout_ms as f64),
+        );
+        m.insert(
+            "write_timeout_ms".to_string(),
+            Json::Num(self.write_timeout_ms as f64),
+        );
+        m.insert("max_inflight".to_string(), Json::Num(self.max_inflight as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<NetSpec> {
+        reject_unknown(
+            v,
+            &["addr", "max_conns", "read_timeout_ms", "write_timeout_ms", "max_inflight"],
+            "listen",
+        )?;
+        let defaults = NetSpec::default();
+        let obj = v.as_obj()?;
+        Ok(NetSpec {
+            addr: v.get("addr")?.as_str()?.to_string(),
+            max_conns: match obj.get("max_conns") {
+                Some(n) => n.as_usize()?,
+                None => defaults.max_conns,
+            },
+            read_timeout_ms: match obj.get("read_timeout_ms") {
+                Some(n) => as_u64(n)?,
+                None => defaults.read_timeout_ms,
+            },
+            write_timeout_ms: match obj.get("write_timeout_ms") {
+                Some(n) => as_u64(n)?,
+                None => defaults.write_timeout_ms,
+            },
+            max_inflight: match obj.get("max_inflight") {
+                Some(n) => n.as_usize()?,
+                None => defaults.max_inflight,
+            },
+        })
+    }
+}
+
 /// Serving-side knobs the coordinator and sharded index read off the spec.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServingSpec {
@@ -309,11 +403,20 @@ pub struct ServingSpec {
     pub max_wait_us: u64,
     /// Optional durable store (`None` = memory-only serving, the default).
     pub store: Option<StoreSpec>,
+    /// Optional wire listener (`None` = in-process serving only).
+    pub listen: Option<NetSpec>,
 }
 
 impl Default for ServingSpec {
     fn default() -> Self {
-        ServingSpec { shards: 4, n_workers: 4, max_batch: 64, max_wait_us: 500, store: None }
+        ServingSpec {
+            shards: 4,
+            n_workers: 4,
+            max_batch: 64,
+            max_wait_us: 500,
+            store: None,
+            listen: None,
+        }
     }
 }
 
@@ -331,6 +434,9 @@ impl ServingSpec {
         if let Some(store) = &self.store {
             store.validate()?;
         }
+        if let Some(listen) = &self.listen {
+            listen.validate()?;
+        }
         Ok(())
     }
 
@@ -347,13 +453,20 @@ impl ServingSpec {
                 Some(s) => s.to_json(),
             },
         );
+        m.insert(
+            "listen".to_string(),
+            match &self.listen {
+                None => Json::Null,
+                Some(l) => l.to_json(),
+            },
+        );
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<ServingSpec> {
         reject_unknown(
             v,
-            &["shards", "n_workers", "max_batch", "max_wait_us", "store"],
+            &["shards", "n_workers", "max_batch", "max_wait_us", "store", "listen"],
             "serving",
         )?;
         Ok(ServingSpec {
@@ -364,6 +477,10 @@ impl ServingSpec {
             store: match v.as_obj()?.get("store") {
                 None | Some(Json::Null) => None,
                 Some(s) => Some(StoreSpec::from_json(s)?),
+            },
+            listen: match v.as_obj()?.get("listen") {
+                None | Some(Json::Null) => None,
+                Some(l) => Some(NetSpec::from_json(l)?),
             },
         })
     }
@@ -459,6 +576,12 @@ impl LshSpec {
     /// Attach a durable store to the serving config (see [`StoreSpec`]).
     pub fn with_store(mut self, store: StoreSpec) -> LshSpec {
         self.serving.store = Some(store);
+        self
+    }
+
+    /// Attach a wire listener to the serving config (see [`NetSpec`]).
+    pub fn with_listen(mut self, listen: NetSpec) -> LshSpec {
+        self.serving.listen = Some(listen);
         self
     }
 
@@ -1035,7 +1158,7 @@ mod tests {
                 n_workers: 2,
                 max_batch: 16,
                 max_wait_us: 250,
-                store: None,
+                ..Default::default()
             });
         let text = spec.to_json_string();
         let back = LshSpec::from_json_str(&text).unwrap();
@@ -1052,6 +1175,32 @@ mod tests {
         // An empty store dir is a typed validation error.
         assert!(matches!(
             spec.clone().with_store(StoreSpec::new("")).validate(),
+            Err(Error::InvalidSpec(_))
+        ));
+        // The optional listener section round-trips too.
+        let listening = spec.clone().with_listen(NetSpec {
+            addr: "0.0.0.0:7878".to_string(),
+            max_conns: 16,
+            read_timeout_ms: 2500,
+            write_timeout_ms: 1500,
+            max_inflight: 77,
+        });
+        let back = LshSpec::from_json_str(&listening.to_json_string()).unwrap();
+        assert_eq!(back, listening);
+        // A listen object carrying only the address fills the rest from
+        // defaults.
+        let minimal = NetSpec::from_json(
+            &crate::util::json::parse(r#"{"addr": "127.0.0.1:0"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(minimal, NetSpec { addr: "127.0.0.1:0".to_string(), ..NetSpec::default() });
+        // Empty addr and zero caps are typed validation errors.
+        assert!(matches!(
+            spec.clone().with_listen(NetSpec::new("")).validate(),
+            Err(Error::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            NetSpec { max_conns: 0, ..NetSpec::default() }.validate(),
             Err(Error::InvalidSpec(_))
         ));
     }

@@ -26,18 +26,26 @@
 //!   compact  checkpoint a store: fresh snapshot generation + WAL truncate
 //!   serve    run the coordinator over a synthetic query trace;
 //!            `serve --store <dir>` warm-starts from (or initializes) the
-//!            store and checkpoints on shutdown
+//!            store and checkpoints on shutdown;
+//!            `serve --listen <addr>` serves the framed TCP wire protocol
+//!            instead of a local trace (composes with --store)
+//!   ping     round-trip a Ping frame to a listening server
+//!   remote-query  query a listening server over the wire (same per-call
+//!            flags as `query`)
+//!   stop     ask a listening server to drain and exit
 //!   exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 use tensor_lsh::bench_harness as bh;
 use tensor_lsh::config::AppConfig;
 use tensor_lsh::coordinator::{Coordinator, HashBackend, PjrtServingParams, QueryRequest};
 use tensor_lsh::error::{Error, Result};
 use tensor_lsh::index::{recall_at_k, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{validity_report, HashFamily, LshSpec, StoreSpec};
-use tensor_lsh::query::{QueryOpts, RerankPolicy};
+use tensor_lsh::net::{Client, NetConfig, Server};
+use tensor_lsh::query::{Query, QueryOpts, RerankPolicy};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, Manifest};
 use tensor_lsh::store::{self, Store};
@@ -77,11 +85,20 @@ fn print_usage() {
          \x20 load     warm-start from a store, verify with self-queries\n\
          \x20 compact  checkpoint a store (fresh snapshot, truncate the WAL)\n\
          \x20 serve    run the coordinator over a synthetic query trace;\n\
-         \x20          --store <dir> warm-starts and checkpoints on shutdown\n\
+         \x20          --store <dir> warm-starts and checkpoints on shutdown;\n\
+         \x20          --listen <addr> serves the framed TCP wire protocol\n\
+         \x20          instead of a local trace (composes with --store)\n\
+         \x20 ping     round-trip a Ping frame: ping <addr>\n\
+         \x20 remote-query  query a listening server over the wire:\n\
+         \x20          remote-query <addr> [--probes N --budget N --rerank ...\n\
+         \x20          --fallback --no-dedup]\n\
+         \x20 stop     ask a listening server to drain and exit: stop <addr>\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
          \x20            n_items top_k n_workers shards max_batch max_wait_us\n\
-         \x20            seed seed_stride artifact_dir store checkpoint_every"
+         \x20            seed seed_stride artifact_dir store checkpoint_every\n\
+         \x20            listen max_conns read_timeout_ms write_timeout_ms\n\
+         \x20            max_inflight"
     );
 }
 
@@ -120,6 +137,9 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "load" => cmd_load(&cfg, &positional),
         "compact" => cmd_compact(&cfg, &positional),
         "serve" => cmd_serve(&cfg, &positional),
+        "ping" => cmd_ping(&positional),
+        "remote-query" => cmd_remote_query(&cfg, &positional),
+        "stop" => cmd_stop(&positional),
         "exp" => cmd_exp(&cfg, &positional),
         other => {
             print_usage();
@@ -345,22 +365,26 @@ fn cmd_query(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Pull `--store <dir>` out of the positional args; everything else passes
-/// through.
-fn split_store_flag(positional: &[String]) -> Result<(Option<String>, Vec<String>)> {
+/// Pull one `--flag <value>` pair out of the positional args; everything
+/// else passes through.
+fn split_value_flag(positional: &[String], flag: &str) -> Result<(Option<String>, Vec<String>)> {
     let mut rest = Vec::new();
-    let mut dir = None;
+    let mut value = None;
     let mut i = 0;
     while i < positional.len() {
-        if positional[i] == "--store" {
-            dir = Some(flag_value(positional, i, "--store")?.to_string());
+        if positional[i] == flag {
+            value = Some(flag_value(positional, i, flag)?.to_string());
             i += 2;
         } else {
             rest.push(positional[i].clone());
             i += 1;
         }
     }
-    Ok((dir, rest))
+    Ok((value, rest))
+}
+
+fn split_store_flag(positional: &[String]) -> Result<(Option<String>, Vec<String>)> {
+    split_value_flag(positional, "--store")
 }
 
 /// The store to operate on: the `--store` flag wins, otherwise the spec's
@@ -454,7 +478,18 @@ fn cmd_compact(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 
 fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (store_flag, rest) = split_store_flag(positional)?;
+    let (listen_flag, rest) = split_value_flag(&rest, "--listen")?;
     let pjrt = rest.iter().any(|p| p == "pjrt");
+    // Wire serving: expose the coordinator over the framed TCP protocol
+    // instead of running a local synthetic trace.
+    if listen_flag.is_some() || cfg.spec.serving.listen.is_some() {
+        if pjrt {
+            return Err(Error::Config(
+                "serve --listen and the pjrt backend cannot be combined yet".into(),
+            ));
+        }
+        return cmd_serve_listen(cfg, listen_flag, store_flag);
+    }
     // Durable serving: warm-start from (or initialize) the store, route the
     // trace through a durable coordinator, checkpoint on shutdown.
     if store_flag.is_some() || cfg.spec.serving.store.is_some() {
@@ -466,6 +501,102 @@ fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
         return cmd_serve_durable(cfg, resolve_store(cfg, store_flag)?);
     }
     cmd_serve_memory(cfg, pjrt)
+}
+
+/// Start (or warm-start) the pipeline and serve the wire protocol until a
+/// Shutdown frame arrives; composes with `--store`.
+fn cmd_serve_listen(
+    cfg: &AppConfig,
+    listen_flag: Option<String>,
+    store_flag: Option<String>,
+) -> Result<()> {
+    let mut net = cfg.spec.serving.listen.clone().unwrap_or_default();
+    if let Some(addr) = listen_flag {
+        net.addr = addr;
+    }
+    net.validate()?;
+    let coord = if store_flag.is_some() || cfg.spec.serving.store.is_some() {
+        let store_spec = resolve_store(cfg, store_flag)?;
+        let dir: &std::path::Path = store_spec.dir.as_ref();
+        let store = if Store::exists(dir) {
+            let store = Arc::new(Store::open(dir, store_spec.checkpoint_every)?);
+            println!(
+                "warm-started '{}': {} items (generation {}, {} WAL records replayed)",
+                dir.display(),
+                store.len(),
+                store.recovery().generation,
+                store.recovery().wal_replayed
+            );
+            store
+        } else {
+            let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+            let store = Arc::new(Store::create(dir, index, store_spec.checkpoint_every)?);
+            println!("initialized '{}' with {} items", dir.display(), store.len());
+            store
+        };
+        Coordinator::start_durable(store, cfg.coordinator(), HashBackend::Native)
+    } else {
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
+        println!("serving {} items from memory (no --store: inserts refused)", index.len());
+        Coordinator::start(index, cfg.coordinator(), HashBackend::Native)
+    };
+    let server = Server::start(coord, &net.addr, NetConfig::from_spec(&net))?;
+    let bound = server.local_addr();
+    println!("listening on {bound} (stop with `tensorlsh stop {bound}`)");
+    let snap = server.wait(); // drains in-flight work, checkpoints the store
+    println!("{snap}");
+    Ok(())
+}
+
+fn addr_arg<'a>(positional: &'a [String], cmd: &str) -> Result<&'a str> {
+    positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::Config(format!("{cmd} needs a server address")))
+}
+
+fn cmd_ping(positional: &[String]) -> Result<()> {
+    let addr = addr_arg(positional, "ping")?;
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
+    let rtt = client.ping()?;
+    println!("{addr}: pong in {:.1} µs", rtt.as_secs_f64() * 1e6);
+    Ok(())
+}
+
+/// Query a listening server with one random tensor drawn from the local
+/// config's shape — a live demonstration that remote answers carry the same
+/// hits + stats surface as in-process search.
+fn cmd_remote_query(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let addr = addr_arg(positional, "remote-query")?;
+    let opts = parse_query_opts(cfg, &positional[1..])?;
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x4E7]);
+    let x = AnyTensor::Cp(CpTensor::random_gaussian(
+        &mut rng,
+        &cfg.spec.family.dims,
+        cfg.rank_in,
+    ));
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
+    let t0 = std::time::Instant::now();
+    let resp = client.search(&Query::with_opts(x, opts))?;
+    let dt = t0.elapsed();
+    println!(
+        "{addr}: {} hits in {:.1} µs (wire round trip)",
+        resp.hits.len(),
+        dt.as_secs_f64() * 1e6
+    );
+    for h in resp.hits.iter().take(10) {
+        println!("  id {:>6}  score {:+.6}", h.id, h.score);
+    }
+    println!("stats: {}", resp.stats.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_stop(positional: &[String]) -> Result<()> {
+    let addr = addr_arg(positional, "stop")?;
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
+    client.shutdown_server()?;
+    println!("{addr}: server acknowledged shutdown and is draining");
+    Ok(())
 }
 
 fn cmd_serve_durable(cfg: &AppConfig, store_spec: StoreSpec) -> Result<()> {

@@ -1,0 +1,155 @@
+//! Blocking client for the wire protocol.
+//!
+//! One [`Client`] wraps one TCP connection and speaks strict
+//! request/response: every call writes one frame and reads one frame.
+//! `Busy` responses surface as the retryable [`Error::Busy`]; server-side
+//! failures as [`Error::Coordinator`]; a malformed or unexpected frame as
+//! [`Error::Corrupt`] (the connection should be abandoned after one).
+
+use super::frame::{read_response, write_request, Request, Response};
+use crate::coordinator::MetricsSnapshot;
+use crate::error::{Error, Result};
+use crate::query::{Query, SearchResponse, Searcher};
+use crate::tensor::AnyTensor;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// A connected wire-protocol client.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect with the default 30 s read / 10 s write timeouts.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(&addr)?;
+        Client::wrap(stream)
+    }
+
+    /// Connect with a bound on the TCP handshake itself.
+    pub fn connect_timeout(addr: impl ToSocketAddrs, timeout: Duration) -> Result<Client> {
+        let mut last = None;
+        for sock in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sock, timeout) {
+                Ok(stream) => return Client::wrap(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => Error::Io(e),
+            None => Error::InvalidParameter("address resolved to nothing".into()),
+        })
+    }
+
+    fn wrap(stream: TcpStream) -> Result<Client> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Client { stream })
+    }
+
+    /// Override the per-call socket timeouts (`None` blocks indefinitely).
+    pub fn set_timeouts(
+        &mut self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()> {
+        self.stream.set_read_timeout(read)?;
+        self.stream.set_write_timeout(write)?;
+        Ok(())
+    }
+
+    /// One round trip: write the request frame, read the response frame.
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        write_request(&mut self.stream, req)?;
+        match read_response(&mut self.stream)? {
+            Some(Response::Busy(m)) => Err(Error::Busy(m)),
+            Some(resp) => Ok(resp),
+            None => Err(Error::Coordinator("server closed the connection".into())),
+        }
+    }
+
+    fn unexpected(resp: Response, wanted: &str) -> Error {
+        Error::Corrupt(format!(
+            "protocol confusion: expected a {wanted} frame, got {}",
+            resp.name()
+        ))
+    }
+
+    /// Round-trip liveness probe; returns the measured latency.
+    pub fn ping(&mut self) -> Result<Duration> {
+        let t0 = Instant::now();
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(t0.elapsed()),
+            other => Err(Client::unexpected(other, "Pong")),
+        }
+    }
+
+    /// Remote [`Searcher::search`]: hits and stats are bit-identical to the
+    /// server's in-process answer.
+    pub fn search(&mut self, q: &Query) -> Result<SearchResponse> {
+        match self.call(&Request::Search(q.clone()))? {
+            Response::Results(resp) => Ok(resp),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "Results")),
+        }
+    }
+
+    /// Remote batched search; `out[b]` answers `qs[b]`.
+    pub fn search_batch(&mut self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        match self.call(&Request::SearchBatch(qs.to_vec()))? {
+            Response::BatchResults(resps) => {
+                if resps.len() != qs.len() {
+                    return Err(Error::Corrupt(format!(
+                        "batch answered {} of {} queries",
+                        resps.len(),
+                        qs.len()
+                    )));
+                }
+                Ok(resps)
+            }
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "BatchResults")),
+        }
+    }
+
+    /// Durable remote insert; returns the id the store assigned.
+    pub fn insert(&mut self, x: &AnyTensor) -> Result<u64> {
+        match self.call(&Request::Insert(x.clone()))? {
+            Response::Inserted(id) => Ok(id),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "Inserted")),
+        }
+    }
+
+    /// The server's live metrics snapshot.
+    pub fn stats(&mut self) -> Result<MetricsSnapshot> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(snap) => Ok(snap),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "Stats")),
+        }
+    }
+
+    /// Ask the server to drain and exit; `Ok` once it acknowledges.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::Bye => Ok(()),
+            other => Err(Client::unexpected(other, "Bye")),
+        }
+    }
+}
+
+/// A `&mut`-free searcher view is deliberately **not** provided: one client
+/// is one ordered connection. Share work across threads by opening one
+/// client per thread (connections are cheap; the server multiplexes them
+/// onto a single pipeline).
+impl Searcher for std::sync::Mutex<Client> {
+    fn search(&self, q: &Query) -> Result<SearchResponse> {
+        self.lock().unwrap().search(q)
+    }
+
+    fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
+        self.lock().unwrap().search_batch(qs)
+    }
+}

@@ -1,0 +1,726 @@
+//! The wire frame: length-prefixed, CRC-framed binary messages.
+//!
+//! Every message on a connection — either direction — is one frame:
+//!
+//! ```text
+//! ┌──────────┬─────────┬──────┬─────────┬───────────────┬─────────┐
+//! │ magic    │ version │ type │ len     │ payload       │ crc     │
+//! │ 8 bytes  │ u32     │ u8   │ u32     │ `len` bytes   │ u32     │
+//! │ TLSHNET\0│   = 1   │      │ ≤ 2^28  │               │ IEEE    │
+//! └──────────┴─────────┴──────┴─────────┴───────────────┴─────────┘
+//! ```
+//!
+//! all little-endian; the CRC-32 covers everything before it (header *and*
+//! payload), the same discipline as `store/format.rs` sections. The reader
+//! enforces, in order: magic, version (unknown versions are refused, they
+//! are not "probably compatible"), then the length word **before any
+//! allocation** — a damaged or hostile length cannot drive a huge `Vec`.
+//! Every damage mode is a typed [`Error::Corrupt`]; a clean close at a
+//! frame boundary is `Ok(None)`; a disconnect mid-frame is `Corrupt` too
+//! (the peer vanished holding half a message).
+//!
+//! The frame *type* byte is deliberately not validated at this layer: a
+//! CRC-valid frame with an unknown type is a well-formed message from a
+//! newer peer, and the server answers it with a typed `Error` response
+//! instead of killing the connection (forward compatibility); only
+//! structural damage is fatal to the stream.
+//!
+//! Payloads reuse the crate's existing serialization: tensors travel in the
+//! store's bit-exact binary encoding ([`crate::store::tensors`]), while
+//! [`QueryOpts`], [`SearchStats`], and [`MetricsSnapshot`] travel as their
+//! canonical JSON — so a query round-trips the wire unchanged and a remote
+//! `SearchResponse` (ids, f64 score bits, stats) is bit-identical to the
+//! in-process answer.
+
+use crate::coordinator::MetricsSnapshot;
+use crate::error::{Error, Result};
+use crate::index::SearchResult;
+use crate::query::{Query, QueryOpts, SearchResponse, SearchStats};
+use crate::store::crc::Crc32;
+use crate::store::format::{Reader, WriteLe};
+use crate::store::tensors::{decode_tensor, encode_tensor};
+use crate::tensor::AnyTensor;
+use crate::util::json::{parse as parse_json, Json};
+use std::io::{Read, Write};
+
+/// Frame preamble; distinct from the store's segment/WAL magics so a file
+/// fed to a socket (or vice versa) fails loudly on the first 8 bytes.
+pub const NET_MAGIC: [u8; 8] = *b"TLSHNET\0";
+
+/// Protocol version. Bumped on any incompatible frame or payload change;
+/// readers refuse every version they do not know.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on a frame payload (256 MiB) — checked against the length word
+/// before the payload buffer is allocated.
+pub const MAX_FRAME_LEN: u32 = 1 << 28;
+
+/// Bytes before the payload: magic ‖ version ‖ type ‖ len.
+pub const HEADER_LEN: usize = 8 + 4 + 1 + 4;
+
+/// Frame type bytes. Requests have the high bit clear, responses set.
+pub mod ftype {
+    pub const PING: u8 = 1;
+    pub const SEARCH: u8 = 2;
+    pub const SEARCH_BATCH: u8 = 3;
+    pub const INSERT: u8 = 4;
+    pub const STATS: u8 = 5;
+    pub const SHUTDOWN: u8 = 6;
+
+    pub const PONG: u8 = 0x81;
+    pub const RESULTS: u8 = 0x82;
+    pub const BATCH_RESULTS: u8 = 0x83;
+    pub const INSERTED: u8 = 0x84;
+    pub const STATS_RESULT: u8 = 0x85;
+    pub const BUSY: u8 = 0x86;
+    pub const ERROR: u8 = 0x87;
+    pub const BYE: u8 = 0x88;
+}
+
+/// A client→server message.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Ping,
+    Search(Query),
+    SearchBatch(Vec<Query>),
+    Insert(AnyTensor),
+    Stats,
+    Shutdown,
+}
+
+/// A server→client message.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Pong,
+    Results(SearchResponse),
+    BatchResults(Vec<SearchResponse>),
+    /// Id assigned to a durable insert.
+    Inserted(u64),
+    Stats(MetricsSnapshot),
+    /// The request was shed by admission control — retryable, nothing ran.
+    Busy(String),
+    /// The request was understood but failed (or its type is unknown to
+    /// this server); the connection stays usable.
+    Error(String),
+    /// Acknowledges `Shutdown`; the server is draining.
+    Bye,
+}
+
+impl Response {
+    /// Frame-type name for diagnostics (payload-free, unlike `Debug`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Response::Pong => "Pong",
+            Response::Results(_) => "Results",
+            Response::BatchResults(_) => "BatchResults",
+            Response::Inserted(_) => "Inserted",
+            Response::Stats(_) => "Stats",
+            Response::Busy(_) => "Busy",
+            Response::Error(_) => "Error",
+            Response::Bye => "Bye",
+        }
+    }
+}
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// payload pieces
+
+fn put_json(out: &mut Vec<u8>, v: &Json) {
+    let text = v.to_string_pretty();
+    out.put_u32(text.len() as u32);
+    out.put_bytes(text.as_bytes());
+}
+
+fn read_json(r: &mut Reader<'_>, what: &str) -> Result<Json> {
+    let len = r.u32()? as usize;
+    let bytes = r.take(len)?;
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| corrupt(format!("{what}: JSON is not UTF-8")))?;
+    parse_json(text).map_err(|e| corrupt(format!("{what}: {e}")))
+}
+
+/// `[opts JSON][tensor]` — opts via the canonical [`QueryOpts`] JSON,
+/// tensor via the store's bit-exact encoding.
+pub fn encode_query(out: &mut Vec<u8>, q: &Query) {
+    put_json(out, &q.opts.to_json());
+    encode_tensor(out, &q.tensor);
+}
+
+pub fn decode_query(r: &mut Reader<'_>) -> Result<Query> {
+    let opts = QueryOpts::from_json(&read_json(r, "query opts")?)
+        .map_err(|e| corrupt(format!("query opts: {e}")))?;
+    let tensor = decode_tensor(r)?;
+    Ok(Query { tensor, opts })
+}
+
+/// `[u32 n_hits][(u64 id ‖ f64 score) × n][stats JSON]` — scores travel as
+/// raw f64 bits, so remote hits compare bit-identical to local ones.
+pub fn encode_search_response(out: &mut Vec<u8>, resp: &SearchResponse) {
+    out.put_u32(resp.hits.len() as u32);
+    for h in &resp.hits {
+        out.put_u64(h.id as u64);
+        out.put_f64(h.score);
+    }
+    put_json(out, &resp.stats.to_json());
+}
+
+pub fn decode_search_response(r: &mut Reader<'_>) -> Result<SearchResponse> {
+    let n = r.u32()? as usize;
+    // 16 bytes per hit: an honest count is bounded by what remains.
+    if n.saturating_mul(16) > r.remaining() {
+        return Err(corrupt(format!("hit count {n} exceeds the frame's remaining bytes")));
+    }
+    let mut hits = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u64()? as usize;
+        let score = r.f64()?;
+        hits.push(SearchResult { id, score });
+    }
+    let stats = SearchStats::from_json(&read_json(r, "search stats")?)
+        .map_err(|e| corrupt(format!("search stats: {e}")))?;
+    Ok(SearchResponse { hits, stats })
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.put_u32(s.len() as u32);
+    out.put_bytes(s.as_bytes());
+}
+
+fn read_str(r: &mut Reader<'_>, what: &str) -> Result<String> {
+    let len = r.u32()? as usize;
+    let bytes = r.take(len)?;
+    std::str::from_utf8(bytes)
+        .map(|s| s.to_string())
+        .map_err(|_| corrupt(format!("{what}: message is not UTF-8")))
+}
+
+// ---------------------------------------------------------------------------
+// message ⇄ (type byte, payload)
+
+impl Request {
+    pub fn frame_type(&self) -> u8 {
+        match self {
+            Request::Ping => ftype::PING,
+            Request::Search(_) => ftype::SEARCH,
+            Request::SearchBatch(_) => ftype::SEARCH_BATCH,
+            Request::Insert(_) => ftype::INSERT,
+            Request::Stats => ftype::STATS,
+            Request::Shutdown => ftype::SHUTDOWN,
+        }
+    }
+
+    pub fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Request::Ping | Request::Stats | Request::Shutdown => {}
+            Request::Search(q) => encode_query(out, q),
+            Request::SearchBatch(qs) => {
+                out.put_u32(qs.len() as u32);
+                for q in qs {
+                    encode_query(out, q);
+                }
+            }
+            Request::Insert(x) => encode_tensor(out, x),
+        }
+    }
+
+    /// Decode a CRC-verified frame into a request. An unknown type byte is
+    /// an error here, but the caller (the server) answers it with a typed
+    /// `Error` *response* rather than closing the stream.
+    pub fn decode(frame_type: u8, payload: &[u8]) -> Result<Request> {
+        let mut r = Reader::new(payload, "net request");
+        let req = match frame_type {
+            ftype::PING => Request::Ping,
+            ftype::STATS => Request::Stats,
+            ftype::SHUTDOWN => Request::Shutdown,
+            ftype::SEARCH => Request::Search(decode_query(&mut r)?),
+            ftype::SEARCH_BATCH => {
+                let n = r.u32()? as usize;
+                if n > r.remaining() {
+                    return Err(corrupt(format!(
+                        "batch count {n} exceeds the frame's remaining bytes"
+                    )));
+                }
+                let mut qs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    qs.push(decode_query(&mut r)?);
+                }
+                Request::SearchBatch(qs)
+            }
+            ftype::INSERT => Request::Insert(decode_tensor(&mut r)?),
+            other => return Err(corrupt(format!("unknown request frame type {other:#04x}"))),
+        };
+        if !r.is_empty() {
+            return Err(corrupt(format!("request frame has {} trailing bytes", r.remaining())));
+        }
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn frame_type(&self) -> u8 {
+        match self {
+            Response::Pong => ftype::PONG,
+            Response::Results(_) => ftype::RESULTS,
+            Response::BatchResults(_) => ftype::BATCH_RESULTS,
+            Response::Inserted(_) => ftype::INSERTED,
+            Response::Stats(_) => ftype::STATS_RESULT,
+            Response::Busy(_) => ftype::BUSY,
+            Response::Error(_) => ftype::ERROR,
+            Response::Bye => ftype::BYE,
+        }
+    }
+
+    pub fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Response::Pong | Response::Bye => {}
+            Response::Results(resp) => encode_search_response(out, resp),
+            Response::BatchResults(resps) => {
+                out.put_u32(resps.len() as u32);
+                for resp in resps {
+                    encode_search_response(out, resp);
+                }
+            }
+            Response::Inserted(id) => out.put_u64(*id),
+            Response::Stats(snap) => put_json(out, &snap.to_json()),
+            Response::Busy(m) | Response::Error(m) => put_str(out, m),
+        }
+    }
+
+    pub fn decode(frame_type: u8, payload: &[u8]) -> Result<Response> {
+        let mut r = Reader::new(payload, "net response");
+        let resp = match frame_type {
+            ftype::PONG => Response::Pong,
+            ftype::BYE => Response::Bye,
+            ftype::RESULTS => Response::Results(decode_search_response(&mut r)?),
+            ftype::BATCH_RESULTS => {
+                let n = r.u32()? as usize;
+                if n > r.remaining() {
+                    return Err(corrupt(format!(
+                        "batch count {n} exceeds the frame's remaining bytes"
+                    )));
+                }
+                let mut resps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    resps.push(decode_search_response(&mut r)?);
+                }
+                Response::BatchResults(resps)
+            }
+            ftype::INSERTED => Response::Inserted(r.u64()?),
+            ftype::STATS_RESULT => Response::Stats(
+                MetricsSnapshot::from_json(&read_json(&mut r, "stats")?)
+                    .map_err(|e| corrupt(format!("stats: {e}")))?,
+            ),
+            ftype::BUSY => Response::Busy(read_str(&mut r, "busy")?),
+            ftype::ERROR => Response::Error(read_str(&mut r, "error")?),
+            other => return Err(corrupt(format!("unknown response frame type {other:#04x}"))),
+        };
+        if !r.is_empty() {
+            return Err(corrupt(format!("response frame has {} trailing bytes", r.remaining())));
+        }
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame I/O
+
+/// Write one frame (header ‖ payload ‖ crc) and flush.
+pub fn write_frame(w: &mut impl Write, frame_type: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME_LEN as u64 {
+        return Err(Error::InvalidParameter(format!(
+            "frame payload of {} bytes exceeds the {MAX_FRAME_LEN}-byte cap",
+            payload.len()
+        )));
+    }
+    let mut head = Vec::with_capacity(HEADER_LEN);
+    head.put_bytes(&NET_MAGIC);
+    head.put_u32(PROTOCOL_VERSION);
+    head.put_u8(frame_type);
+    head.put_u32(payload.len() as u32);
+    let mut crc = Crc32::new();
+    crc.update(&head);
+    crc.update(payload);
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.write_all(&crc.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean close (EOF at a frame boundary);
+/// EOF anywhere inside a frame is [`Error::Corrupt`]. I/O errors (including
+/// read timeouts) pass through as [`Error::Io`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut first = [0u8; 1];
+    // The first byte splits "peer closed between frames" from "peer died
+    // mid-message".
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    read_frame_rest(first[0], r).map(Some)
+}
+
+/// Read the remainder of a frame whose first byte is already in hand —
+/// servers read the first byte separately under a short idle timeout, then
+/// switch to the full read timeout for the body.
+pub fn read_frame_rest(first: u8, r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; HEADER_LEN];
+    head[0] = first;
+    read_exact_or_corrupt(r, &mut head[1..], "frame header")?;
+    if head[..8] != NET_MAGIC {
+        return Err(corrupt(format!(
+            "bad frame magic {:02x?} (expected {:02x?})",
+            &head[..8],
+            NET_MAGIC
+        )));
+    }
+    let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    if version == 0 || version > PROTOCOL_VERSION {
+        return Err(corrupt(format!(
+            "unsupported protocol version {version} (this peer speaks {PROTOCOL_VERSION})"
+        )));
+    }
+    let frame_type = head[12];
+    let len = u32::from_le_bytes(head[13..17].try_into().unwrap());
+    // Length sanity BEFORE the payload allocation.
+    if len > MAX_FRAME_LEN {
+        return Err(corrupt(format!("frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or_corrupt(r, &mut payload, "frame payload")?;
+    let mut crc_bytes = [0u8; 4];
+    read_exact_or_corrupt(r, &mut crc_bytes, "frame checksum")?;
+    let stored = u32::from_le_bytes(crc_bytes);
+    let mut crc = Crc32::new();
+    crc.update(&head);
+    crc.update(&payload);
+    let computed = crc.finish();
+    if stored != computed {
+        return Err(corrupt(format!(
+            "frame CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    Ok((frame_type, payload))
+}
+
+fn read_exact_or_corrupt(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(corrupt(format!("{what}: connection closed mid-frame")))
+        }
+        Err(e) => Err(Error::Io(e)),
+    }
+}
+
+/// Encode and write one request frame.
+pub fn write_request(w: &mut impl Write, req: &Request) -> Result<()> {
+    let mut payload = Vec::new();
+    req.encode_payload(&mut payload);
+    write_frame(w, req.frame_type(), &payload)
+}
+
+/// Encode and write one response frame.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<()> {
+    let mut payload = Vec::new();
+    resp.encode_payload(&mut payload);
+    write_frame(w, resp.frame_type(), &payload)
+}
+
+/// Read and decode one response frame (`Ok(None)` on clean close).
+pub fn read_response(r: &mut impl Read) -> Result<Option<Response>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some((frame_type, payload)) => Response::decode(frame_type, &payload).map(Some),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::query::RerankPolicy;
+    use crate::rng::Rng;
+    use crate::tensor::CpTensor;
+    use crate::testutil::proptest;
+    use std::io::Cursor;
+
+    fn sample_query(seed: u64) -> Query {
+        let mut rng = Rng::new(seed);
+        let tensor = AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[4, 3], 2));
+        Query::with_opts(
+            tensor,
+            QueryOpts::top_k(7)
+                .with_probes(3)
+                .with_max_candidates(50)
+                .with_rerank(RerankPolicy::Budgeted(12))
+                .with_exact_fallback(true)
+                .with_dedup(false),
+        )
+    }
+
+    fn sample_response(seed: u64) -> SearchResponse {
+        let mut rng = Rng::new(seed);
+        SearchResponse {
+            hits: (0..5)
+                .map(|i| SearchResult {
+                    id: i * 17,
+                    score: rng.normal() * 0.5 - 0.25,
+                })
+                .collect(),
+            stats: SearchStats {
+                candidates_generated: 31,
+                candidates_examined: 20,
+                probes_used: 3,
+                tables_hit: 4,
+                reranked: 12,
+                exact_fallback: false,
+            },
+        }
+    }
+
+    fn frame_bytes_request(req: &Request) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_request(&mut buf, req).unwrap();
+        buf
+    }
+
+    fn frame_bytes_response(resp: &Response) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_response(&mut buf, resp).unwrap();
+        buf
+    }
+
+    fn decode_request_bytes(bytes: &[u8]) -> Result<Request> {
+        let (t, payload) = read_frame(&mut Cursor::new(bytes))?.expect("one frame");
+        Request::decode(t, &payload)
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        let snapshots = [
+            Request::Ping,
+            Request::Stats,
+            Request::Shutdown,
+            Request::Search(sample_query(1)),
+            Request::SearchBatch(vec![sample_query(2), sample_query(3)]),
+            Request::Insert(sample_query(4).tensor),
+        ];
+        for req in &snapshots {
+            let bytes = frame_bytes_request(req);
+            let back = decode_request_bytes(&bytes).unwrap();
+            match (req, &back) {
+                (Request::Ping, Request::Ping)
+                | (Request::Stats, Request::Stats)
+                | (Request::Shutdown, Request::Shutdown) => {}
+                (Request::Search(a), Request::Search(b)) => {
+                    assert_eq!(a.opts, b.opts);
+                    assert!(crate::store::tensors_bit_equal(&a.tensor, &b.tensor));
+                }
+                (Request::SearchBatch(a), Request::SearchBatch(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.opts, y.opts);
+                        assert!(crate::store::tensors_bit_equal(&x.tensor, &y.tensor));
+                    }
+                }
+                (Request::Insert(a), Request::Insert(b)) => {
+                    assert!(crate::store::tensors_bit_equal(a, b));
+                }
+                other => panic!("variant changed in transit: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips() {
+        let metrics = Metrics::new();
+        metrics.record_query(120.0, &sample_response(5).stats);
+        let snapshots = [
+            Response::Pong,
+            Response::Bye,
+            Response::Results(sample_response(6)),
+            Response::BatchResults(vec![sample_response(7), sample_response(8)]),
+            Response::Inserted(81),
+            Response::Stats(metrics.snapshot()),
+            Response::Busy("queue depth 4096".into()),
+            Response::Error("no durable store attached".into()),
+        ];
+        for resp in &snapshots {
+            let bytes = frame_bytes_response(resp);
+            let back = read_response(&mut Cursor::new(&bytes)).unwrap().unwrap();
+            match (resp, &back) {
+                (Response::Pong, Response::Pong) | (Response::Bye, Response::Bye) => {}
+                (Response::Results(a), Response::Results(b)) => assert_eq!(a, b),
+                (Response::BatchResults(a), Response::BatchResults(b)) => assert_eq!(a, b),
+                (Response::Inserted(a), Response::Inserted(b)) => assert_eq!(a, b),
+                (Response::Stats(a), Response::Stats(b)) => assert_eq!(a, b),
+                (Response::Busy(a), Response::Busy(b)) => assert_eq!(a, b),
+                (Response::Error(a), Response::Error(b)) => assert_eq!(a, b),
+                other => panic!("variant changed in transit: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scores_roundtrip_bit_exact() {
+        let orig = SearchResponse {
+            hits: vec![
+                SearchResult { id: 0, score: -0.0 },
+                SearchResult { id: 1, score: f64::MIN_POSITIVE },
+                SearchResult { id: 2, score: 1.0 / 3.0 },
+            ],
+            stats: SearchStats::default(),
+        };
+        let bytes = frame_bytes_response(&Response::Results(orig.clone()));
+        match read_response(&mut Cursor::new(&bytes)).unwrap().unwrap() {
+            Response::Results(back) => {
+                for (a, b) in orig.hits.iter().zip(&back.hits) {
+                    assert_eq!(a.score.to_bits(), b.score.to_bits());
+                }
+            }
+            other => panic!("{}", other.name()),
+        }
+    }
+
+    /// Any single-bit flip anywhere in a frame is a typed `Corrupt` (CRC,
+    /// magic, version, or length check — whichever fires first), and any
+    /// truncation is a mid-frame disconnect. Never a panic, never a frame
+    /// that decodes to something else.
+    #[test]
+    fn prop_frame_damage_is_always_typed() {
+        let pristine = frame_bytes_request(&Request::Search(sample_query(9)));
+        assert!(decode_request_bytes(&pristine).is_ok());
+        proptest("net frame damage", 256, |rng| {
+            let mut bytes = pristine.clone();
+            if rng.below(2) == 0 {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            } else {
+                bytes.truncate(rng.below(bytes.len()));
+            }
+            match read_frame(&mut Cursor::new(&bytes)) {
+                // Empty truncation = clean close; fine.
+                Ok(None) => assert!(bytes.is_empty()),
+                Ok(Some((t, payload))) => {
+                    // CRC collisions are out of scope for single-bit flips;
+                    // reaching here means the flip hit the *type byte space
+                    // the CRC does cover*, so this cannot happen.
+                    panic!("damaged frame decoded: type {t:#04x}, {} bytes", payload.len());
+                }
+                Err(Error::Corrupt(_)) => {}
+                Err(other) => panic!("expected Corrupt, got {other}"),
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_version_is_refused_even_with_a_valid_crc() {
+        // Hand-build a frame that is valid except for version = 2: the
+        // version check must fire on its own, not lean on the CRC.
+        let mut head = Vec::new();
+        head.put_bytes(&NET_MAGIC);
+        head.put_u32(PROTOCOL_VERSION + 1);
+        head.put_u8(ftype::PING);
+        head.put_u32(0);
+        let mut crc = Crc32::new();
+        crc.update(&head);
+        let mut bytes = head;
+        bytes.extend_from_slice(&crc.finish().to_le_bytes());
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("version"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        // Version 0 is refused too.
+        let mut head = Vec::new();
+        head.put_bytes(&NET_MAGIC);
+        head.put_u32(0);
+        head.put_u8(ftype::PING);
+        head.put_u32(0);
+        let mut crc = Crc32::new();
+        crc.update(&head);
+        let mut bytes = head;
+        bytes.extend_from_slice(&crc.finish().to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bytes)),
+            Err(Error::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_length_word_is_rejected_before_allocation() {
+        // A hostile header claiming a 3 GiB payload must fail on the length
+        // check alone — no attempt to read (or allocate) the payload. The
+        // empty cursor after the header proves no payload bytes exist; if
+        // the length check did not fire first, this would be a mid-frame
+        // EOF with a 3 GiB buffer already allocated.
+        let mut head = Vec::new();
+        head.put_bytes(&NET_MAGIC);
+        head.put_u32(PROTOCOL_VERSION);
+        head.put_u8(ftype::SEARCH);
+        head.put_u32(u32::MAX - 1);
+        match read_frame(&mut Cursor::new(&head)) {
+            Err(Error::Corrupt(m)) => {
+                assert!(m.contains("exceeds"), "length check must fire: {m}")
+            }
+            other => panic!("{other:?}"),
+        }
+        // Right at the cap is still within protocol (the payload then
+        // legitimately fails as a mid-frame EOF, not an oversize).
+        let mut head = Vec::new();
+        head.put_bytes(&NET_MAGIC);
+        head.put_u32(PROTOCOL_VERSION);
+        head.put_u8(ftype::SEARCH);
+        head.put_u32(MAX_FRAME_LEN);
+        match read_frame(&mut Cursor::new(&head)) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("mid-frame"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_frame_types_are_decode_errors_not_stream_errors() {
+        // A CRC-valid frame with type 0x7f reads fine at the frame layer…
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0x7f, b"").unwrap();
+        let (t, payload) = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(t, 0x7f);
+        // …and fails only at message decode, so a server can answer with a
+        // typed Error response and keep the connection.
+        assert!(matches!(Request::decode(t, &payload), Err(Error::Corrupt(_))));
+        assert!(matches!(Response::decode(t, &payload), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_in_a_payload_are_rejected() {
+        let mut payload = Vec::new();
+        Request::Ping.encode_payload(&mut payload);
+        payload.put_u8(0);
+        assert!(matches!(
+            Request::decode(ftype::PING, &payload),
+            Err(Error::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        assert!(read_frame(&mut Cursor::new(&[] as &[u8])).unwrap().is_none());
+        // Two frames back to back read sequentially.
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::Ping).unwrap();
+        write_request(&mut buf, &Request::Stats).unwrap();
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().0, ftype::PING);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().0, ftype::STATS);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+}

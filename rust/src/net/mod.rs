@@ -1,0 +1,28 @@
+//! Layer-4 wire serving: a framed TCP front end for the coordinator.
+//!
+//! Zero-dependency (std-only) networking in three pieces:
+//!
+//! * [`frame`] — the length-prefixed, CRC-32-framed binary protocol
+//!   (`TLSHNET\0` magic, explicit version, bounded lengths); payloads reuse
+//!   the store's bit-exact tensor encoding and the spec/query JSON, so a
+//!   [`crate::query::Query`] round-trips the wire unchanged.
+//! * [`Server`] — thread-per-connection acceptor over a
+//!   [`crate::coordinator::Dispatcher`], with a connection cap,
+//!   admission-control shedding (typed `Busy`), per-connection timeouts,
+//!   and graceful drain (in-flight answered, store checkpointed).
+//! * [`Client`] — a blocking request/response client whose
+//!   [`Client::search`] answers are bit-identical to in-process
+//!   [`crate::query::Searcher::search`].
+//!
+//! Wired into serving via `ServingSpec::listen` ([`crate::lsh::NetSpec`])
+//! and the `tensorlsh serve --listen` / `ping` / `remote-query` / `stop`
+//! commands.
+
+pub mod frame;
+
+mod client;
+mod server;
+
+pub use client::Client;
+pub use frame::{Request, Response, MAX_FRAME_LEN, NET_MAGIC, PROTOCOL_VERSION};
+pub use server::{NetConfig, Server};

@@ -1,0 +1,360 @@
+//! Thread-per-connection TCP server over a [`Dispatcher`].
+//!
+//! The accept loop runs on its own thread with a non-blocking listener so
+//! it can poll the stop flag; each accepted connection gets a handler
+//! thread that reads frames under a read timeout, decodes requests, and
+//! answers through the shared dispatcher. Three pressure valves keep a
+//! misbehaving world from taking the pipeline down:
+//!
+//! * **Connection cap** — past `max_conns`, new sockets get one `Busy`
+//!   frame and a close (counted as shed).
+//! * **Admission control** — a search whose batch would push the
+//!   dispatcher's in-flight depth past `max_inflight` is refused with
+//!   `Busy` before it touches the pipeline; the client retries, the
+//!   batcher queue stays shallow.
+//! * **Request timeout** — an accepted search that outlives
+//!   `request_timeout` is deregistered and answered with a typed `Error`.
+//!
+//! Shutdown (`Shutdown` frame or [`Server::request_shutdown`]) is a
+//! graceful drain: the listener stops accepting, handlers finish the
+//! request in hand and close, the dispatcher drains the pipeline under
+//! [`crate::coordinator::DRAIN_DEADLINE`]-style bounds, and an attached
+//! durable [`crate::store::Store`] is checkpointed — a kill between frames
+//! never loses an acknowledged insert.
+
+use super::frame::{read_frame_rest, write_response, Request, Response};
+use crate::coordinator::{Coordinator, Dispatcher, MetricsSnapshot};
+use crate::error::{Error, Result};
+use crate::lsh::NetSpec;
+use std::io::{BufWriter, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tunables for one listening server.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Concurrent connections before new sockets are shed with `Busy`.
+    pub max_conns: usize,
+    /// Per-connection idle/read budget; a peer silent this long is closed.
+    pub read_timeout: Duration,
+    /// Per-connection write budget (a peer that stops reading is closed).
+    pub write_timeout: Duration,
+    /// Admission-control depth: searches that would push the dispatcher's
+    /// in-flight count past this are refused with `Busy`.
+    pub max_inflight: usize,
+    /// Budget for one accepted search/batch inside the pipeline.
+    pub request_timeout: Duration,
+    /// Bound on the shutdown drain (pipeline + store checkpoint).
+    pub drain_deadline: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 64,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_inflight: 1024,
+            request_timeout: Duration::from_secs(30),
+            drain_deadline: crate::coordinator::DRAIN_DEADLINE,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Adopt the serving spec's listener knobs (the spec's `addr` is the
+    /// caller's concern — it names *where*, this names *how*).
+    pub fn from_spec(spec: &NetSpec) -> NetConfig {
+        NetConfig {
+            max_conns: spec.max_conns,
+            read_timeout: Duration::from_millis(spec.read_timeout_ms),
+            write_timeout: Duration::from_millis(spec.write_timeout_ms),
+            max_inflight: spec.max_inflight,
+            ..NetConfig::default()
+        }
+    }
+}
+
+/// How long a handler blocks per first-byte read before re-checking the
+/// stop flag; bounds shutdown latency for idle connections.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// State shared by the accept loop and every connection handler.
+struct Shared {
+    dispatcher: Dispatcher,
+    cfg: NetConfig,
+    stop: AtomicBool,
+    conns: AtomicUsize,
+    shed: AtomicU64,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running wire server. Dropping it without [`Server::shutdown`] /
+/// [`Server::wait`] detaches the threads — always consume it.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept_thread: JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving the coordinator's pipeline.
+    pub fn start(coord: Coordinator, addr: &str, cfg: NetConfig) -> Result<Server> {
+        let dispatcher = Dispatcher::start(coord)?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Coordinator(format!("cannot bind '{addr}': {e}")))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            dispatcher,
+            cfg,
+            stop: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            conn_threads: Mutex::new(Vec::new()),
+        });
+        let accept_thread = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(Server { shared, addr: local, accept_thread })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Searches currently inside the pipeline.
+    pub fn inflight(&self) -> usize {
+        self.shared.dispatcher.inflight()
+    }
+
+    /// Requests and connections shed with `Busy` since start.
+    pub fn shed_count(&self) -> u64 {
+        self.shared.shed.load(Ordering::Relaxed)
+    }
+
+    /// Ask the server to drain (same effect as a `Shutdown` frame). Pair
+    /// with [`Server::wait`].
+    pub fn request_shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until a shutdown is requested, then drain and return the
+    /// final metrics snapshot.
+    pub fn wait(self) -> MetricsSnapshot {
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.finish()
+    }
+
+    /// Request shutdown and drain.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.request_shutdown();
+        self.finish()
+    }
+
+    /// Drain: stop accepting, let handlers finish the request in hand,
+    /// drain the pipeline, checkpoint the store.
+    fn finish(self) -> MetricsSnapshot {
+        let Server { shared, addr: _, accept_thread } = self;
+        // The accept loop sees the flag, drops the listener (new
+        // connections are refused by the OS from here on), and exits.
+        let _ = accept_thread.join();
+        let handles = std::mem::take(&mut *shared.conn_threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let deadline = shared.cfg.drain_deadline;
+        match Arc::try_unwrap(shared) {
+            Ok(shared) => shared.dispatcher.shutdown(deadline),
+            // Unreachable in practice (every clone lives in a joined
+            // thread), but never hang shutdown on a leaked Arc: checkpoint
+            // directly and report what we have.
+            Err(arc) => {
+                eprintln!("net server: shared state still referenced at shutdown");
+                if let Some(store) = arc.dispatcher.store() {
+                    if let Err(e) = store.checkpoint_if_dirty() {
+                        eprintln!("net server: shutdown checkpoint failed: {e}");
+                    }
+                }
+                arc.dispatcher.metrics()
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // drops the listener: stop accepting
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let n = shared.conns.load(Ordering::SeqCst);
+                if n >= shared.cfg.max_conns {
+                    shed_connection(stream, &shared);
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let handler = {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || {
+                        handle_connection(stream, &shared);
+                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                    })
+                };
+                let mut threads = shared.conn_threads.lock().unwrap();
+                threads.retain(|h| !h.is_finished());
+                threads.push(handler);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("net server: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Over the connection cap: one `Busy` frame, then close.
+fn shed_connection(stream: TcpStream, shared: &Shared) {
+    shared.shed.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let mut w = BufWriter::new(stream);
+    let _ = write_response(
+        &mut w,
+        &Response::Busy(format!("connection limit of {} reached", shared.cfg.max_conns)),
+    );
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_write_timeout(Some(shared.cfg.write_timeout)).is_err() {
+        return;
+    }
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = BufWriter::new(stream);
+    let mut idle = Duration::ZERO;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // graceful drain: nothing in hand, just close
+        }
+        // Short-timeout first byte: wake often enough to notice the stop
+        // flag, without spinning.
+        if reader.set_read_timeout(Some(IDLE_TICK)).is_err() {
+            return;
+        }
+        let mut first = [0u8; 1];
+        let got = match reader.read(&mut first) {
+            Ok(0) => return, // clean close at a frame boundary
+            Ok(_) => first[0],
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                idle += IDLE_TICK;
+                if idle >= shared.cfg.read_timeout {
+                    return; // idle peer: reclaim the slot
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        };
+        idle = Duration::ZERO;
+        // Mid-frame: the peer owes us a whole message within read_timeout.
+        if reader.set_read_timeout(Some(shared.cfg.read_timeout)).is_err() {
+            return;
+        }
+        let (frame_type, payload) = match read_frame_rest(got, &mut reader) {
+            Ok(frame) => frame,
+            Err(Error::Corrupt(m)) => {
+                // Structural damage: the stream can no longer be trusted
+                // (we may be mid-garbage). Best-effort typed answer, then
+                // close.
+                let _ = write_response(&mut writer, &Response::Error(m));
+                return;
+            }
+            Err(_) => return, // I/O error or body timeout
+        };
+        // The frame itself was intact; everything from here is a typed
+        // *response*, and the connection survives.
+        let resp = match Request::decode(frame_type, &payload) {
+            Ok(req) => match req {
+                Request::Shutdown => {
+                    let _ = write_response(&mut writer, &Response::Bye);
+                    shared.stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+                other => answer(other, shared),
+            },
+            Err(e) => Response::Error(e.to_string()),
+        };
+        if write_response(&mut writer, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve one decoded request (everything but `Shutdown`).
+fn answer(req: Request, shared: &Shared) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Stats => Response::Stats(shared.dispatcher.metrics()),
+        Request::Insert(x) => match shared.dispatcher.store() {
+            Some(store) => match store.insert(x) {
+                Ok(id) => Response::Inserted(id as u64),
+                Err(e) => Response::Error(format!("insert failed: {e}")),
+            },
+            None => Response::Error(
+                "this server has no durable store attached (start with --store)".into(),
+            ),
+        },
+        Request::Search(q) => match admit(shared, 1) {
+            Err(m) => Response::Busy(m),
+            Ok(()) => match shared.dispatcher.query_timeout(&q, Some(shared.cfg.request_timeout)) {
+                Ok(resp) => Response::Results(resp),
+                Err(e) => Response::Error(e.to_string()),
+            },
+        },
+        Request::SearchBatch(qs) => match admit(shared, qs.len()) {
+            Err(m) => Response::Busy(m),
+            Ok(()) => match shared
+                .dispatcher
+                .query_batch_timeout(&qs, Some(shared.cfg.request_timeout))
+            {
+                Ok(resps) => Response::BatchResults(resps),
+                Err(e) => Response::Error(e.to_string()),
+            },
+        },
+        Request::Shutdown => unreachable!("handled by the connection loop"),
+    }
+}
+
+/// Admission control: refuse work that would push the pipeline's in-flight
+/// depth past the cap. Advisory (two racing admits can both pass), which is
+/// fine — the cap bounds queue growth, it is not a hard invariant.
+fn admit(shared: &Shared, n: usize) -> std::result::Result<(), String> {
+    let depth = shared.dispatcher.inflight();
+    if depth + n > shared.cfg.max_inflight {
+        shared.shed.fetch_add(1, Ordering::Relaxed);
+        Err(format!(
+            "pipeline depth {depth} + {n} would exceed the {} in-flight cap",
+            shared.cfg.max_inflight
+        ))
+    } else {
+        Ok(())
+    }
+}

@@ -314,10 +314,45 @@ impl SearchStats {
         m.insert("exact_fallback".to_string(), Json::Bool(self.exact_fallback));
         Json::Obj(m)
     }
+
+    /// Inverse of [`SearchStats::to_json`] — the wire protocol ships stats
+    /// as JSON and must reproduce them exactly. Unknown keys are rejected.
+    pub fn from_json(v: &Json) -> Result<SearchStats> {
+        let obj = v.as_obj()?;
+        for key in obj.keys() {
+            if ![
+                "candidates_generated",
+                "candidates_examined",
+                "probes_used",
+                "tables_hit",
+                "reranked",
+                "exact_fallback",
+            ]
+            .contains(&key.as_str())
+            {
+                return Err(Error::Json(format!("unknown stats key '{key}'")));
+            }
+        }
+        Ok(SearchStats {
+            candidates_generated: v.get("candidates_generated")?.as_usize()?,
+            candidates_examined: v.get("candidates_examined")?.as_usize()?,
+            probes_used: v.get("probes_used")?.as_usize()?,
+            tables_hit: v.get("tables_hit")?.as_usize()?,
+            reranked: v.get("reranked")?.as_usize()?,
+            exact_fallback: match v.get("exact_fallback")? {
+                Json::Bool(b) => *b,
+                other => {
+                    return Err(Error::Json(format!(
+                        "expected bool for 'exact_fallback', got {other:?}"
+                    )))
+                }
+            },
+        })
+    }
 }
 
 /// Response to a [`Query`]: ranked hits plus what they cost.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SearchResponse {
     /// Best-first hits (ties broken by ascending id — fully deterministic).
     pub hits: Vec<SearchResult>,
@@ -427,5 +462,29 @@ mod tests {
         assert_eq!(a.probes_used, 4);
         assert_eq!(a.tables_hit, 5);
         assert!(a.exact_fallback);
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let stats = SearchStats {
+            candidates_generated: 123,
+            candidates_examined: 45,
+            probes_used: 6,
+            tables_hit: 7,
+            reranked: 45,
+            exact_fallback: true,
+        };
+        assert_eq!(SearchStats::from_json(&stats.to_json()).unwrap(), stats);
+        assert_eq!(
+            SearchStats::from_json(&SearchStats::default().to_json()).unwrap(),
+            SearchStats::default()
+        );
+        // Unknown keys are rejected, not silently ignored.
+        let typo = crate::util::json::parse(
+            r#"{"candidates_generated": 1, "candidates_examined": 1, "probes_used": 0,
+                "tables_hit": 1, "reranked": 1, "exact_fallback": false, "extra": 0}"#,
+        )
+        .unwrap();
+        assert!(SearchStats::from_json(&typo).is_err());
     }
 }

@@ -1,0 +1,261 @@
+//! Protocol-abuse suite (ISSUE 6): hostile bytes on the wire must never
+//! panic, hang, or produce a wrong answer. Every damage mode — flipped
+//! bits, truncations, garbage preambles, alien versions, hostile length
+//! words, mid-frame disconnects — must resolve to a typed `Error` frame or
+//! a clean close within the server's read timeout, and the server must
+//! still answer a fresh, well-formed client afterward (the live-server
+//! check after every case is the point of the suite).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend};
+use tensor_lsh::index::ShardedLshIndex;
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::net::frame::{self, ftype, read_response, Request, Response};
+use tensor_lsh::net::{Client, NetConfig, Server, MAX_FRAME_LEN, NET_MAGIC, PROTOCOL_VERSION};
+use tensor_lsh::query::{Query, Searcher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::store::crc::Crc32;
+use tensor_lsh::tensor::{AnyTensor, CpTensor};
+use tensor_lsh::testutil::proptest;
+use tensor_lsh::Error;
+
+const DIMS: [usize; 2] = [5, 5];
+
+fn build_index(n: usize) -> Arc<ShardedLshIndex> {
+    let spec = LshSpec::cosine(FamilyKind::Cp, DIMS.to_vec(), 2, 6, 3).with_seed(83, 5);
+    let mut rng = Rng::new(11);
+    let items: Vec<AnyTensor> = (0..n)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &DIMS, 2)))
+        .collect();
+    Arc::new(ShardedLshIndex::build_from_spec(&spec, items).unwrap())
+}
+
+/// A server tuned for abuse: short read timeout so every stalling case
+/// resolves fast, roomy connection cap so the proptest can burn sockets.
+fn start_server(index: &Arc<ShardedLshIndex>) -> Server {
+    let coord = Coordinator::start(
+        Arc::clone(index),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    let cfg = NetConfig {
+        read_timeout: Duration::from_millis(200),
+        max_conns: 256,
+        ..NetConfig::default()
+    };
+    Server::start(coord, "127.0.0.1:0", cfg).unwrap()
+}
+
+/// A raw socket with a 2 s read timeout: far beyond the server's 200 ms
+/// budget, so a blocked read here means the server hung — which is exactly
+/// what `outcome_is_safe` treats as failure.
+fn raw_conn(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+}
+
+/// One valid Search frame, as bytes.
+fn valid_frame(index: &ShardedLshIndex) -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame::write_request(&mut buf, &Request::Search(Query::new(index.item(3), 3))).unwrap();
+    buf
+}
+
+/// Send bytes, half-close (the server sees EOF instead of stalling on
+/// frames the damage made longer), and classify the reaction.
+fn send_and_classify(addr: SocketAddr, bytes: &[u8]) -> String {
+    let mut stream = raw_conn(addr);
+    // The peer may already have rejected us mid-write; that is a safe
+    // outcome, not a test failure.
+    if stream.write_all(bytes).and_then(|_| stream.flush()).is_err() {
+        return "write refused".into();
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    classify(read_response(&mut stream))
+}
+
+/// Map the server's reaction to a label, panicking on the two unsafe ones:
+/// answering damage with a non-Error frame, or hanging past its timeout.
+fn classify(outcome: tensor_lsh::Result<Option<Response>>) -> String {
+    match outcome {
+        Ok(Some(Response::Error(m))) => format!("typed error: {m}"),
+        Ok(None) => "clean close".into(),
+        Ok(Some(other)) => panic!("server answered damage with {}", other.name()),
+        Err(Error::Io(e))
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ) =>
+        {
+            panic!("server hung on damaged input (no reply within 2 s)")
+        }
+        // Reset / closed-mid-frame on our side of a dying socket.
+        Err(_) => "connection error".into(),
+    }
+}
+
+/// The liveness check run after every abuse case: a fresh client must get
+/// an answer bit-identical to in-process search.
+fn assert_server_answers(addr: SocketAddr, index: &ShardedLshIndex) {
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(2)).unwrap();
+    let q = Query::new(index.item(5), 3);
+    let remote = client.search(&q).unwrap();
+    let local = index.search(&q).unwrap();
+    assert_eq!(remote.hits, local.hits);
+    assert_eq!(remote.stats, local.stats);
+}
+
+/// Any single-byte flip or truncation of a valid frame gets a typed error
+/// or a clean close — never a panic, a hang, or a non-error answer — and
+/// the server survives all of it.
+#[test]
+fn prop_frame_damage_never_kills_or_confuses_the_server() {
+    let index = build_index(60);
+    let server = start_server(&index);
+    let addr = server.local_addr();
+    let pristine = valid_frame(&index);
+    proptest("wire frame damage", 64, |rng| {
+        let mut bytes = pristine.clone();
+        if rng.below(2) == 0 {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        } else {
+            bytes.truncate(rng.below(bytes.len()));
+        }
+        send_and_classify(addr, &bytes);
+        assert_server_answers(addr, &index);
+    });
+    server.shutdown();
+}
+
+/// A peer speaking a different protocol entirely (an HTTP request) is
+/// refused on the first 8 bytes.
+#[test]
+fn garbage_preamble_is_refused() {
+    let index = build_index(40);
+    let server = start_server(&index);
+    let addr = server.local_addr();
+    let outcome = send_and_classify(addr, b"GET / HTTP/1.1\r\nHost: localhost\r\n\r\n");
+    assert!(
+        outcome.contains("magic") || outcome == "clean close" || outcome == "connection error",
+        "{outcome}"
+    );
+    assert_server_answers(addr, &index);
+    server.shutdown();
+}
+
+/// A frame from the future — alien version, everything else (CRC included)
+/// valid — is refused by the version check itself.
+#[test]
+fn unknown_version_is_refused_with_a_typed_error() {
+    let index = build_index(40);
+    let server = start_server(&index);
+    let addr = server.local_addr();
+    let mut head = Vec::new();
+    head.extend_from_slice(&NET_MAGIC);
+    head.extend_from_slice(&(PROTOCOL_VERSION + 41).to_le_bytes());
+    head.push(ftype::PING);
+    head.extend_from_slice(&0u32.to_le_bytes());
+    let mut crc = Crc32::new();
+    crc.update(&head);
+    let mut bytes = head;
+    bytes.extend_from_slice(&crc.finish().to_le_bytes());
+    let outcome = send_and_classify(addr, &bytes);
+    assert!(outcome.contains("version"), "{outcome}");
+    assert_server_answers(addr, &index);
+    server.shutdown();
+}
+
+/// A hostile length word (3 GiB payload claim) is rejected by the bounds
+/// check before any allocation — the typed error arrives immediately, not
+/// after an OOM or a timeout waiting for 3 GiB that never comes.
+#[test]
+fn oversized_length_word_is_rejected_before_allocation() {
+    let index = build_index(40);
+    let server = start_server(&index);
+    let addr = server.local_addr();
+    let mut head = Vec::new();
+    head.extend_from_slice(&NET_MAGIC);
+    head.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    head.push(ftype::SEARCH);
+    head.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+    // No shutdown here: if the server tried to *read* the claimed payload
+    // instead of rejecting the length, it would stall and `classify` would
+    // flag the hang.
+    let mut stream = raw_conn(addr);
+    stream.write_all(&head).unwrap();
+    stream.flush().unwrap();
+    let outcome = classify(read_response(&mut stream));
+    assert!(outcome.contains("exceeds"), "{outcome}");
+    assert_server_answers(addr, &index);
+    server.shutdown();
+}
+
+/// A peer that dies mid-frame (valid prefix, then gone) is cleaned up
+/// without taking anything else down.
+#[test]
+fn mid_frame_disconnect_is_survived() {
+    let index = build_index(40);
+    let server = start_server(&index);
+    let addr = server.local_addr();
+    let pristine = valid_frame(&index);
+    for cut in [1, 8, 12, 17, pristine.len() - 5] {
+        let mut stream = raw_conn(addr);
+        stream.write_all(&pristine[..cut]).unwrap();
+        stream.flush().unwrap();
+        drop(stream); // vanish mid-message
+        assert_server_answers(addr, &index);
+    }
+    server.shutdown();
+}
+
+/// An unknown frame type with a valid CRC is a *request*-level error: the
+/// server answers with a typed Error frame and the connection stays
+/// usable — forward compatibility for newer clients.
+#[test]
+fn unknown_frame_type_keeps_the_connection_alive() {
+    let index = build_index(40);
+    let server = start_server(&index);
+    let mut stream = raw_conn(server.local_addr());
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, 0x42, b"").unwrap();
+    stream.write_all(&buf).unwrap();
+    match read_response(&mut stream) {
+        Ok(Some(Response::Error(m))) => assert!(m.contains("unknown request"), "{m}"),
+        other => panic!("expected a typed Error frame, got {other:?}"),
+    }
+    // Same socket, valid request: still served.
+    let mut buf = Vec::new();
+    frame::write_request(&mut buf, &Request::Ping).unwrap();
+    stream.write_all(&buf).unwrap();
+    match read_response(&mut stream) {
+        Ok(Some(Response::Pong)) => {}
+        other => panic!("connection should survive an unknown type, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// A silent peer is closed at the read timeout; its slot comes back.
+#[test]
+fn idle_connections_are_reaped() {
+    let index = build_index(40);
+    let server = start_server(&index); // 200 ms read timeout
+    let addr = server.local_addr();
+    let stream = raw_conn(addr);
+    std::thread::sleep(Duration::from_millis(600));
+    // The server hung up on the idler…
+    let mut idle = stream;
+    idle.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    match read_response(&mut idle) {
+        Ok(None) | Err(_) => {}
+        Ok(Some(resp)) => panic!("idle socket got a {} frame", resp.name()),
+    }
+    // …and still serves everyone else.
+    assert_server_answers(addr, &index);
+    server.shutdown();
+}

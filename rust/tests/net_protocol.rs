@@ -1,0 +1,281 @@
+//! Wire-serving loopback suite (ISSUE 6): a [`tensor_lsh::net::Server`] on
+//! an ephemeral port must answer exactly like in-process search — same
+//! hits, same stats, bit for bit — across the per-query knob grid, under
+//! concurrent clients, and through a graceful drain that checkpoints the
+//! durable store.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend};
+use tensor_lsh::index::ShardedLshIndex;
+use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::net::{Client, NetConfig, Server};
+use tensor_lsh::query::{Query, QueryOpts, RerankPolicy, Searcher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::store::Store;
+use tensor_lsh::tensor::{AnyTensor, CpTensor};
+use tensor_lsh::Error;
+
+const DIMS: [usize; 2] = [6, 5];
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tlsh_net_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec() -> LshSpec {
+    LshSpec::cosine(FamilyKind::Cp, DIMS.to_vec(), 3, 7, 4).with_seed(61, 3)
+}
+
+fn tensors(n: usize, seed: u64) -> Vec<AnyTensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &DIMS, 2)))
+        .collect()
+}
+
+fn build_index(n: usize) -> Arc<ShardedLshIndex> {
+    Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(n, 7)).unwrap())
+}
+
+/// Memory-backed server over `index` with `cfg`; the caller shuts it down.
+fn start_server(index: &Arc<ShardedLshIndex>, cfg: NetConfig) -> Server {
+    let coord = Coordinator::start(
+        Arc::clone(index),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    Server::start(coord, "127.0.0.1:0", cfg).unwrap()
+}
+
+/// The per-query knob grid both sides answer: every option that changes
+/// probing, re-ranking, or accounting.
+fn opts_grid() -> Vec<QueryOpts> {
+    vec![
+        QueryOpts::top_k(5),
+        QueryOpts::top_k(3).with_probes(4),
+        QueryOpts::top_k(5).with_max_candidates(10),
+        QueryOpts::top_k(4).with_rerank(RerankPolicy::SignatureOnly),
+        QueryOpts::top_k(4).with_rerank(RerankPolicy::Budgeted(6)),
+        QueryOpts::top_k(5).with_exact_fallback(true),
+        QueryOpts::top_k(5).with_dedup(false),
+        QueryOpts::top_k(2)
+            .with_probes(2)
+            .with_max_candidates(20)
+            .with_rerank(RerankPolicy::Budgeted(8))
+            .with_exact_fallback(true),
+    ]
+}
+
+/// Single-query round trips: remote hits AND stats are bit-identical to
+/// in-process `Searcher::search` across the whole knob grid.
+#[test]
+fn wire_answers_match_in_process_search_across_the_opts_grid() {
+    let index = build_index(150);
+    let server = start_server(&index, NetConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for (i, opts) in opts_grid().into_iter().enumerate() {
+        for qid in [0usize, 17, 63, 149] {
+            let q = Query::with_opts(index.item((qid + i) % 150), opts.clone());
+            let remote = client.search(&q).unwrap();
+            let local = index.search(&q).unwrap();
+            assert_eq!(remote.hits, local.hits, "hits diverged for {opts:?}");
+            assert_eq!(remote.stats, local.stats, "stats diverged for {opts:?}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn batched_wire_answers_match_and_preserve_order() {
+    let index = build_index(90);
+    let server = start_server(&index, NetConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let qs: Vec<Query> = (0..12)
+        .map(|i| Query::new(index.item((i * 13) % 90), 4))
+        .collect();
+    let remote = client.search_batch(&qs).unwrap();
+    assert_eq!(remote.len(), qs.len());
+    for (q, got) in qs.iter().zip(&remote) {
+        let want = index.search(q).unwrap();
+        assert_eq!(got.hits, want.hits);
+        assert_eq!(got.stats, want.stats);
+    }
+    // The metrics surface travels too, and has seen this work.
+    let snap = client.stats().unwrap();
+    assert!(snap.queries >= qs.len() as u64);
+    server.shutdown();
+}
+
+/// Several clients hammer the same server concurrently; every response must
+/// belong to its own request (the dispatcher's id routing over the wire).
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let index = build_index(120);
+    let server = start_server(&index, NetConfig::default());
+    let addr = server.local_addr();
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let index = Arc::clone(&index);
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for round in 0..6 {
+                let qs: Vec<Query> = (0..5)
+                    .map(|i| Query::new(index.item((t * 29 + round * 11 + i * 3) % 120), 3))
+                    .collect();
+                let got = client.search_batch(&qs).unwrap();
+                for (q, resp) in qs.iter().zip(&got) {
+                    let want = index.search(q).unwrap();
+                    assert_eq!(resp.hits, want.hits);
+                    assert_eq!(resp.stats, want.stats);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.queries, 4 * 6 * 5);
+}
+
+/// Graceful drain: a shutdown while a batch is in flight answers that
+/// batch, refuses new connections afterward, and checkpoints the store's
+/// WAL.
+#[test]
+fn graceful_drain_answers_inflight_work_and_checkpoints_the_store() {
+    let dir = temp_dir("drain");
+    let index = build_index(100);
+    let store = Arc::new(Store::create(&dir, Arc::clone(&index), 0).unwrap());
+    let coord = Coordinator::start_durable(
+        Arc::clone(&store),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    let server = Server::start(coord, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    // A durable insert over the wire: the WAL now has pending records the
+    // drain must fold into a snapshot.
+    let mut client = Client::connect(addr).unwrap();
+    let new_item = tensors(1, 999).pop().unwrap();
+    let id = client.insert(&new_item).unwrap();
+    assert_eq!(id as usize, 100);
+    assert!(store.wal_pending() >= 1);
+
+    // Put a large batch in flight, then shut down while it (likely) runs.
+    let worker = {
+        let index = Arc::clone(&index);
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let qs: Vec<Query> = (0..64)
+                .map(|i| Query::new(index.item((i * 7) % 100), 5))
+                .collect();
+            let got = client.search_batch(&qs).unwrap();
+            for (q, resp) in qs.iter().zip(&got) {
+                assert_eq!(resp.hits, index.search(q).unwrap().hits);
+            }
+        })
+    };
+    // Best effort: wait until the batch is actually inside the pipeline
+    // (if it already finished, the drain is trivially correct too).
+    let t0 = Instant::now();
+    while server.inflight() == 0 && t0.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let snap = server.shutdown();
+    // In-flight work was answered, not dropped.
+    worker.join().unwrap();
+    assert!(snap.queries >= 64, "drain lost queries: {}", snap.queries);
+    // New connections are refused (first call on a fresh socket fails).
+    match Client::connect_timeout(addr, Duration::from_millis(500)) {
+        Err(_) => {}
+        Ok(mut c) => {
+            let _ = c.set_timeouts(Some(Duration::from_millis(500)), None);
+            assert!(c.ping().is_err(), "server still answering after shutdown");
+        }
+    }
+    // The drain checkpointed: no pending WAL records, and a reopened store
+    // carries the inserted item.
+    assert_eq!(store.wal_pending(), 0);
+    drop(store);
+    let reopened = Store::open(&dir, 0).unwrap();
+    assert_eq!(reopened.len(), 101);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Admission control is typed and deterministic: with an in-flight cap of
+/// 1, a batch of 2 is refused with `Error::Busy` before touching the
+/// pipeline, while a single query passes.
+#[test]
+fn overload_sheds_with_typed_busy() {
+    let index = build_index(60);
+    let server = start_server(&index, NetConfig { max_inflight: 1, ..NetConfig::default() });
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let q = Query::new(index.item(3), 3);
+    assert!(client.search(&q).is_ok(), "a single query fits the cap");
+    match client.search_batch(&[q.clone(), q.clone()]) {
+        Err(Error::Busy(m)) => assert!(m.contains("in-flight"), "{m}"),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    // Shed work is counted, and the connection survives the refusal.
+    assert!(server.shed_count() >= 1);
+    assert!(client.search(&q).is_ok());
+    server.shutdown();
+}
+
+/// Past the connection cap, a new socket gets one `Busy` frame and a close
+/// — the earlier connection keeps working.
+#[test]
+fn connection_cap_sheds_new_sockets() {
+    let index = build_index(60);
+    let server = start_server(&index, NetConfig { max_conns: 1, ..NetConfig::default() });
+    let addr = server.local_addr();
+    let mut first = Client::connect(addr).unwrap();
+    first.ping().unwrap(); // the slot is definitely taken
+    // Read the shed frame directly off a raw socket (no request needed —
+    // the server volunteers the Busy before closing).
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    match tensor_lsh::net::frame::read_response(&mut raw) {
+        Ok(Some(tensor_lsh::net::Response::Busy(m))) => {
+            assert!(m.contains("connection limit"), "{m}")
+        }
+        other => panic!("expected a Busy frame, got {other:?}"),
+    }
+    assert!(server.shed_count() >= 1);
+    first.ping().unwrap();
+    server.shutdown();
+}
+
+/// A memory-only server refuses durable inserts with a typed error and
+/// keeps serving.
+#[test]
+fn insert_without_a_store_is_a_typed_error() {
+    let index = build_index(40);
+    let server = start_server(&index, NetConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    match client.insert(&index.item(0)) {
+        Err(Error::Coordinator(m)) => assert!(m.contains("store"), "{m}"),
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    assert!(client.ping().is_ok());
+    server.shutdown();
+}
+
+/// `Shutdown` over the wire is acknowledged with `Bye` and drains the
+/// server (the `tensorlsh stop` path).
+#[test]
+fn shutdown_frame_drains_the_server() {
+    let index = build_index(40);
+    let server = start_server(&index, NetConfig::default());
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+    client.search(&Query::new(index.item(1), 2)).unwrap();
+    client.shutdown_server().unwrap();
+    let snap = server.wait();
+    assert_eq!(snap.queries, 1);
+}
