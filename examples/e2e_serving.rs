@@ -15,6 +15,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
 
+// Not the precision-audited hash path: example scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tensor_lsh::coordinator::{

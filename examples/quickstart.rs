@@ -4,6 +4,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+// Not the precision-audited hash path: example scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use tensor_lsh::prelude::*;
 use tensor_lsh::workload::{pair_at_cosine, pair_at_distance, PairFormat};
 

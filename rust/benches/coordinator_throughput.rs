@@ -1,12 +1,16 @@
 //! Bench: coordinator throughput/latency vs worker count and batch policy on
 //! the sharded index + flat batched hash path (EXPERIMENTS.md §Serving).
 //!
-//! Runs the full pipeline for **CP-E2LSH and TT-E2LSH**. The headline number
-//! is the per-family summary block: batched (`max_batch ≥ 32`) vs
-//! single-item (`max_batch = 1`) throughput at the same worker count —
-//! `max_batch = 1` degenerates to the pre-refactor per-item hash loop, so
-//! the ratio isolates the stacked batch kernels' win (CP stacked factors,
-//! TT stacked block-diagonal cores) plus amortized batching overhead.
+//! Runs the full pipeline for **CP-E2LSH and TT-E2LSH**, plus a CP cell at
+//! f32 precision (EXPERIMENTS.md §Precision). The headline number is the
+//! per-family summary block: batched (`max_batch ≥ 32`) vs single-item
+//! (`max_batch = 1`) throughput at the same worker count — `max_batch = 1`
+//! degenerates to the pre-refactor per-item hash loop, so the ratio
+//! isolates the stacked batch kernels' win (CP stacked factors, TT stacked
+//! block-diagonal cores) plus amortized batching overhead. The f32 cell's
+//! `cp_f32_vs_f64_qps` ratio shows how much of the kernel-level f32 win
+//! survives the full serving pipeline (re-rank and transport are
+//! precision-independent, so it is diluted vs the micro bench).
 //!
 //! Emits machine-readable `BENCH_coordinator.json` (items/sec and
 //! mean/p50/p99 ns per item for every cell, plus the speedup summary, plus
@@ -16,6 +20,9 @@
 //! parses the JSON it writes).
 //!
 //! Run: `cargo bench --bench coordinator_throughput`
+
+// Not the precision-audited hash path: bench scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -24,6 +31,7 @@ use tensor_lsh::coordinator::{
 };
 use tensor_lsh::index::ShardedLshIndex;
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
+use tensor_lsh::projection::Precision;
 use tensor_lsh::rng::Rng;
 use tensor_lsh::util::json::Json;
 use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
@@ -147,10 +155,16 @@ fn main() {
     let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
     let mut specs: BTreeMap<String, Json> = BTreeMap::new();
     let mut tt_best = 0.0f64;
-    for (family, label) in [(FamilyKind::Cp, "cp-e2lsh"), (FamilyKind::Tt, "tt-e2lsh")] {
+    let grid = [
+        (FamilyKind::Cp, "cp-e2lsh", Precision::F64),
+        (FamilyKind::Tt, "tt-e2lsh", Precision::F64),
+        (FamilyKind::Cp, "cp-e2lsh-f32", Precision::F32),
+    ];
+    for (family, label, precision) in grid {
         // One declarative spec builds the index and is stamped verbatim
         // into the report, so a future run can rebuild the exact setup.
         let lsh_spec = LshSpec::euclidean(family, dims.clone(), 4, 12, 8, 4.0)
+            .with_precision(precision)
             .with_seed(5, 1000)
             .with_serving(tensor_lsh::lsh::ServingSpec {
                 shards,
@@ -170,6 +184,19 @@ fn main() {
     }
     speedups.insert("target".into(), Json::Num(SPEEDUP_TARGET));
     speedups.insert("tt_target_met".into(), Json::Bool(tt_best >= SPEEDUP_TARGET));
+    // End-to-end precision ratio: best batched QPS, f32 CP vs f64 CP.
+    let best_qps = |fam: &str| {
+        cells
+            .iter()
+            .filter(|c| c.family == fam && c.max_batch > 1)
+            .map(|c| c.items_per_sec)
+            .fold(0.0f64, f64::max)
+    };
+    let f32_ratio = best_qps("cp-e2lsh-f32") / best_qps("cp-e2lsh");
+    speedups.insert(
+        "cp_f32_vs_f64_qps".into(),
+        Json::Num((f32_ratio * 100.0).round() / 100.0),
+    );
 
     let mut config = BTreeMap::new();
     config.insert(

@@ -5,14 +5,19 @@
 //! Emits machine-readable `BENCH_batch.json` (mean/p50/p99 ns per item and
 //! items/sec for the per-item loop and the flat [`CodeMatrix`] path, CP and
 //! TT, plus the serialized `LshSpec` provenance stamp for each measured
-//! family) so the perf trajectory is tracked like-for-like across PRs. Set
-//! `BENCH_SMOKE=1` for a seconds-long smoke run.
+//! family) so the perf trajectory is tracked like-for-like across PRs. Two
+//! PR-7 sections ride along: the f32-vs-f64 precision sweep over the same
+//! flat batch path (EXPERIMENTS.md §Precision; `speedup_f32_vs_f64` is the
+//! conservative min across families) and the sparse-vs-dense SRP per-hash
+//! comparison (§Families). Set `BENCH_SMOKE=1` for a seconds-long smoke
+//! run.
 //!
 //! Run: `cargo bench --bench micro_components`
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use tensor_lsh::index::{signature, CodeMatrix, LshIndex};
 use tensor_lsh::lsh::{FamilyKind, HashFamily, LshSpec};
+use tensor_lsh::projection::Precision;
 use tensor_lsh::query::QueryOpts;
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::AnyTensor;
@@ -24,6 +29,7 @@ use tensor_lsh::workload::{low_rank_corpus, DatasetSpec};
 struct Entry {
     family: &'static str,
     path: &'static str,
+    precision: &'static str,
     mean_ns_per_item: f64,
     p50_ns_per_item: f64,
     p99_ns_per_item: f64,
@@ -32,10 +38,21 @@ struct Entry {
 
 impl Entry {
     fn from_timing(family: &'static str, path: &'static str, t: &Timing, batch: usize) -> Self {
+        Entry::at_precision(family, path, "f64", t, batch)
+    }
+
+    fn at_precision(
+        family: &'static str,
+        path: &'static str,
+        precision: &'static str,
+        t: &Timing,
+        batch: usize,
+    ) -> Self {
         let b = batch as f64;
         Entry {
             family,
             path,
+            precision,
             mean_ns_per_item: t.mean_ns / b,
             p50_ns_per_item: t.median_ns / b,
             p99_ns_per_item: t.p99_ns / b,
@@ -47,6 +64,7 @@ impl Entry {
         let mut m = BTreeMap::new();
         m.insert("family".into(), Json::Str(self.family.into()));
         m.insert("path".into(), Json::Str(self.path.into()));
+        m.insert("precision".into(), Json::Str(self.precision.into()));
         m.insert("mean_ns_per_item".into(), Json::Num(self.mean_ns_per_item));
         m.insert("p50_ns_per_item".into(), Json::Num(self.p50_ns_per_item));
         m.insert("p99_ns_per_item".into(), Json::Num(self.p99_ns_per_item));
@@ -94,20 +112,25 @@ fn main() {
     let t_full = bench(|| index.query_with(&q, &opts10).unwrap(), samples, min_ms);
     println!("full search: {:.1} us", t_full.median_ns / 1e3);
 
-    // Flat batch vs per-item hashing, CP and TT (EXPERIMENTS.md §Layout):
-    // the same L-table signature computation, once through the legacy
-    // per-(item, table) loop and once through one CodeMatrix per batch.
+    // Flat batch vs per-item hashing, CP and TT (EXPERIMENTS.md §Layout),
+    // plus the PR-7 precision sweep (§Precision): the same L-table signature
+    // computation through the legacy per-(item, table) loop, the flat f64
+    // CodeMatrix path, and the flat f32 path. Both precisions hash the same
+    // batch with the same seeds; only the kernel element type differs.
     let qbatch: Vec<AnyTensor> =
         (0..batch).map(|i| index.item((i * 7) % index.len()).clone()).collect();
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
     let mut specs: BTreeMap<String, Json> = BTreeMap::new();
-    println!("\n## flat CodeMatrix vs per-item hashing (batch={batch}, L=8, K=12)");
+    let mut f32_speedups: Vec<f64> = Vec::new();
+    println!("\n## flat CodeMatrix (f64/f32) vs per-item hashing (batch={batch}, L=8, K=12)");
     for (family, label) in [(FamilyKind::Cp, "cp-e2lsh"), (FamilyKind::Tt, "tt-e2lsh")] {
         let lsh_spec =
             LshSpec::euclidean(family, dims.clone(), 4, 12, 8, 4.0).with_seed(5, 1000);
         specs.insert(label.to_string(), lsh_spec.to_json());
         let families: Vec<Arc<dyn HashFamily>> = lsh_spec.families().unwrap();
+        let families32: Vec<Arc<dyn HashFamily>> =
+            lsh_spec.clone().with_precision(Precision::F32).families().unwrap();
         let t_item = bench(
             || {
                 qbatch
@@ -119,19 +142,64 @@ fn main() {
             min_ms,
         );
         let t_flat = bench(|| CodeMatrix::build(&families, &qbatch), samples, min_ms);
+        let t_flat32 = bench(|| CodeMatrix::build(&families32, &qbatch), samples, min_ms);
         let speedup = t_item.median_ns / t_flat.median_ns;
+        let speedup32 = t_flat.median_ns / t_flat32.median_ns;
         println!(
-            "{label}: per-item {:.2} us/item vs flat batch {:.2} us/item → {speedup:.2}x",
+            "{label}: per-item {:.2} vs flat f64 {:.2} vs flat f32 {:.2} us/item \
+             → flat {speedup:.2}x, f32 {speedup32:.2}x",
             t_item.median_ns / 1e3 / batch as f64,
             t_flat.median_ns / 1e3 / batch as f64,
+            t_flat32.median_ns / 1e3 / batch as f64,
         );
         entries.push(Entry::from_timing(label, "per_item", &t_item, batch));
         entries.push(Entry::from_timing(label, "flat_batch", &t_flat, batch));
+        entries.push(Entry::at_precision(label, "flat_batch", "f32", &t_flat32, batch));
         speedups.insert(
             format!("{label}_flat_vs_per_item"),
             Json::Num((speedup * 100.0).round() / 100.0),
         );
+        speedups.insert(
+            format!("{label}_f32_vs_f64"),
+            Json::Num((speedup32 * 100.0).round() / 100.0),
+        );
+        f32_speedups.push(speedup32);
     }
+    // Conservative headline: the min across families (the CI sanity gate
+    // asserts ≥ 1.0 on this key; the full-run acceptance bar is 1.5×).
+    let headline = f32_speedups.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    speedups.insert(
+        "speedup_f32_vs_f64".to_string(),
+        Json::Num((headline * 100.0).round() / 100.0),
+    );
+
+    // PR 7 — sparse vs dense SRP throughput (§Families): both specs hash the
+    // same batch with K=12 hyperplanes per item, but the FastLSH-style
+    // sampled-coordinate family reads m = D/4 coordinates per hash where the
+    // dense baseline reads all D = 1728, so items/sec compares per-hash cost
+    // directly.
+    println!("\n## sparse vs dense SRP hashing (batch={batch}, K=12)");
+    let sparse_spec =
+        LshSpec::cosine(FamilyKind::Sparse, dims.clone(), 1, 12, 1).with_seed(5, 1000);
+    let dense_spec =
+        LshSpec::cosine(FamilyKind::Naive, dims.clone(), 1, 12, 1).with_seed(5, 1000);
+    specs.insert("sparse-srp".to_string(), sparse_spec.to_json());
+    let sparse_fams = sparse_spec.families().unwrap();
+    let dense_fams = dense_spec.families().unwrap();
+    let t_sparse = bench(|| CodeMatrix::build(&sparse_fams, &qbatch), samples, min_ms);
+    let t_dense = bench(|| CodeMatrix::build(&dense_fams, &qbatch), samples, min_ms);
+    let sparse_speedup = t_dense.median_ns / t_sparse.median_ns;
+    println!(
+        "sparse-srp: {:.2} us/item vs naive-srp {:.2} us/item → {sparse_speedup:.2}x per hash",
+        t_sparse.median_ns / 1e3 / batch as f64,
+        t_dense.median_ns / 1e3 / batch as f64,
+    );
+    entries.push(Entry::from_timing("sparse-srp", "flat_batch", &t_sparse, batch));
+    entries.push(Entry::from_timing("naive-srp", "flat_batch", &t_dense, batch));
+    speedups.insert(
+        "sparse_vs_dense_srp".to_string(),
+        Json::Num((sparse_speedup * 100.0).round() / 100.0),
+    );
 
     let mut config = BTreeMap::new();
     config.insert(

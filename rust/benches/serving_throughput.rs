@@ -19,6 +19,9 @@
 //!
 //! Run: `cargo bench --bench serving_throughput`
 
+// Not the precision-audited hash path: bench scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};

@@ -16,6 +16,9 @@
 //!
 //! Run: `cargo bench --bench store_persistence`
 
+// Not the precision-audited hash path: bench scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;

@@ -1,5 +1,8 @@
 //! F1–F4: theory-validation figures.
 
+// Not the precision-audited hash path: harness counters are small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::print_header;
 use crate::lsh::{
     cp_condition_ratio, tt_condition_ratio, FamilyKind, FamilySpec, HashFamily,

@@ -4,6 +4,7 @@ use super::print_header;
 use crate::config::Family;
 use crate::index::{recall_at_k, IndexConfig, LshIndex, Metric};
 use crate::lsh::{FamilySpec, HashFamily, LshSpec};
+use crate::projection::Precision;
 use crate::rng::Rng;
 use crate::util::fmt_duration;
 use crate::util::timer::time_once;
@@ -68,9 +69,18 @@ pub fn index_config_family(
     w: f64,
     seed: u64,
 ) -> Arc<dyn HashFamily> {
-    FamilySpec { kind: family, dims: dims.to_vec(), rank, k, metric, w }
-        .build(seed)
-        .expect("valid bench family parameters")
+    FamilySpec {
+        kind: family,
+        dims: dims.to_vec(),
+        rank,
+        k,
+        metric,
+        w,
+        precision: Precision::F64,
+        sample: 0,
+    }
+    .build(seed)
+    .expect("valid bench family parameters")
 }
 
 /// Build an [`IndexConfig`] for a family at (K, L): the historical bench
@@ -86,10 +96,22 @@ pub fn index_config(
     w: f64,
     seed: u64,
 ) -> IndexConfig {
-    LshSpec::new(FamilySpec { kind: family, dims, rank, k, metric, w }, l)
-        .with_seed(seed, 1000)
-        .index_config()
-        .expect("valid bench spec")
+    LshSpec::new(
+        FamilySpec {
+            kind: family,
+            dims,
+            rank,
+            k,
+            metric,
+            w,
+            precision: Precision::F64,
+            sample: 0,
+        },
+        l,
+    )
+    .with_seed(seed, 1000)
+    .index_config()
+    .expect("valid bench spec")
 }
 
 /// F5 — run the recall/cost sweep and print rows.

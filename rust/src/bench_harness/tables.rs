@@ -5,6 +5,9 @@
 //! with CP-format inputs — and fit scaling exponents so the claimed shapes
 //! (`O(d^N)` vs `O(NdR·max²)`) are checkable numbers, not prose.
 
+// Not the precision-audited hash path: harness counters are small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::print_header;
 use crate::lsh::{FamilyKind, FamilySpec, HashFamily};
 use crate::rng::Rng;

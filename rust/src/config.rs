@@ -8,10 +8,14 @@
 //! Only the workload knobs that describe *data* rather than the index
 //! (corpus size, input rank, top-k, artifact dir) live beside it.
 
+// Not the precision-audited hash path: JSON integer round-trip is fract()-guarded.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::coordinator::CoordinatorConfig;
 use crate::error::{Error, Result};
 use crate::index::Metric;
 use crate::lsh::spec::{FamilyKind, LshSpec};
+use crate::projection::Precision;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
 
@@ -132,6 +136,8 @@ impl AppConfig {
                 self.spec.family.w = w;
             }
             "family" => self.spec.family.kind = Family::parse(value)?,
+            "precision" => self.spec.family.precision = Precision::parse(value)?,
+            "sample" => self.spec.family.sample = parse_usize(value)?,
             "metric" => self.spec.family.metric = Metric::parse(value)?,
             "probes" => self.spec.probes = parse_usize(value)?,
             "banded" => {
@@ -227,6 +233,8 @@ impl AppConfig {
         m.insert("l".into(), Json::Num(s.l as f64));
         m.insert("w".into(), Json::Num(s.family.w));
         m.insert("family".into(), Json::Str(s.family.kind.name().into()));
+        m.insert("precision".into(), Json::Str(s.family.precision.name().into()));
+        m.insert("sample".into(), Json::Num(s.family.sample as f64));
         m.insert("metric".into(), Json::Str(s.family.metric.name().into()));
         m.insert("probes".into(), Json::Num(s.probes as f64));
         m.insert("banded".into(), Json::Bool(s.banded));
@@ -296,6 +304,10 @@ mod tests {
         c.apply_override("w=2.5").unwrap();
         c.apply_override("seed=7").unwrap();
         c.apply_override("seed_stride=11").unwrap();
+        c.apply_override("precision=f32").unwrap();
+        c.apply_override("sample=48").unwrap();
+        assert_eq!(c.spec.family.precision, Precision::F32);
+        assert_eq!(c.spec.family.sample, 48);
         assert_eq!(c.spec.family.dims, vec![8, 8, 8]);
         assert_eq!(c.spec.family.kind, Family::Tt);
         assert_eq!(c.spec.family.metric, Metric::Euclidean);
@@ -312,6 +324,7 @@ mod tests {
         assert!(c.apply_override("w=-1").is_err());
         assert!(c.apply_override("shards=0").is_err());
         assert!(c.apply_override("family=foo").is_err());
+        assert!(c.apply_override("precision=f16").is_err());
         assert!(c.apply_override("no_equals").is_err());
         // Spec numerics rejected at parse time with typed errors.
         for bad in ["k=0", "l=0", "rank_proj=0", "dims=", "dims=4,0", "w=0", "max_batch=0"] {

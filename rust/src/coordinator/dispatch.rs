@@ -15,6 +15,9 @@
 //! [`Dispatcher::inflight`] crosses its configured cap, so a deep batcher
 //! queue turns into fast refusals instead of unbounded latency.
 
+// Not the precision-audited hash path: queue ids and shard counts are bounded by construction.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{QueryRequest, QueryResponse};
 use super::server::Coordinator;

@@ -2,6 +2,9 @@
 //! per-query [`SearchStats`] aggregates (probes spent, candidates
 //! re-ranked) the unified query API reports.
 
+// Not the precision-audited hash path: latency buckets saturate well below the cast bounds.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::query::SearchStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

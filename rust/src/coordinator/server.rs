@@ -9,6 +9,9 @@
 //! [`crate::query::RerankPolicy`], and the aggregator merges the per-shard
 //! top-k partials and [`SearchStats`] into the response.
 
+// Not the precision-audited hash path: batch and shard counts are bounded by construction.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::batcher::{drain_batch, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{QueryRequest, QueryResponse};

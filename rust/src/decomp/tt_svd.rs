@@ -1,5 +1,8 @@
 //! TT decomposition via sequential truncated SVD (Oseledets' TT-SVD).
 
+// Not the precision-audited hash path: mode sizes are checked against the shape at entry.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::error::Result;
 use crate::linalg::{svd_thin, Matrix};
 use crate::tensor::{DenseTensor, TtCore, TtTensor};

@@ -11,8 +11,9 @@
 //! first allocation-free.
 
 use super::table::signature_strided;
+use super::HashScratch;
 use crate::lsh::HashFamily;
-use crate::projection::ProjectionMatrix;
+use crate::projection::Precision;
 use crate::tensor::AnyTensor;
 use std::sync::Arc;
 
@@ -38,24 +39,26 @@ impl CodeMatrix {
     /// Hash a batch through one family per table into a fresh matrix.
     pub fn build(families: &[Arc<dyn HashFamily>], xs: &[AnyTensor]) -> Self {
         let mut m = CodeMatrix::empty();
-        let mut scratch = ProjectionMatrix::empty();
+        let mut scratch = HashScratch::new();
         m.rebuild(families, xs, &mut scratch);
         m
     }
 
     /// Hash a batch through one family per table, reusing this matrix's
-    /// allocations and the caller's projection arena (the arena contract:
-    /// after the high-water batch, no allocation per batch).
+    /// allocations and the caller's [`HashScratch`] arenas (the arena
+    /// contract: after the high-water batch, no allocation per batch).
     ///
-    /// One [`HashFamily::hash_codes_into`] pass per table writes the strided
-    /// code columns; signatures then hash each `(item, table)` row in place.
-    /// This is the same code path [`HashFamily::hash_batch`] wraps, so
-    /// matrix codes are bit-identical to per-item `hash` codes.
+    /// One [`HashFamily::hash_codes_into`] (or, for [`Precision::F32`]
+    /// families, [`HashFamily::hash_codes_f32_into`]) pass per table writes
+    /// the strided code columns; signatures then hash each `(item, table)`
+    /// row in place. These are the same code paths
+    /// [`HashFamily::hash_batch`] wraps, so matrix codes are bit-identical
+    /// to per-item `hash` codes at either precision.
     pub fn rebuild(
         &mut self,
         families: &[Arc<dyn HashFamily>],
         xs: &[AnyTensor],
-        scratch: &mut ProjectionMatrix,
+        scratch: &mut HashScratch,
     ) {
         let n_tables = families.len();
         let k = families.first().map_or(0, |f| f.k());
@@ -74,7 +77,14 @@ impl CodeMatrix {
         self.sigs.resize(xs.len() * n_tables, 0);
         let stride = n_tables * k;
         for (t, fam) in families.iter().enumerate() {
-            fam.hash_codes_into(xs, scratch, &mut self.codes, t * k, stride);
+            match fam.precision() {
+                Precision::F64 => {
+                    fam.hash_codes_into(xs, &mut scratch.z, &mut self.codes, t * k, stride);
+                }
+                Precision::F32 => {
+                    fam.hash_codes_f32_into(xs, &mut scratch.z32, &mut self.codes, t * k, stride);
+                }
+            }
         }
         for b in 0..self.batch {
             for t in 0..n_tables {
@@ -181,7 +191,7 @@ mod tests {
             .collect();
         let small = big[..2].to_vec();
         let mut cm = CodeMatrix::empty();
-        let mut scratch = ProjectionMatrix::empty();
+        let mut scratch = HashScratch::new();
         cm.rebuild(&fams, &big, &mut scratch);
         assert_eq!(cm.batch(), 6);
         cm.rebuild(&fams, &small, &mut scratch);

@@ -30,6 +30,9 @@
 //! reconstructs a bit-identical searcher from it; the sharded structure
 //! snapshots per shard in parallel ([`ShardedLshIndex::save`]).
 
+// Not the precision-audited hash path: slot ids are u32 by design (insert caps the item count).
+#![allow(clippy::cast_possible_truncation)]
+
 mod codes;
 mod multiprobe;
 mod shard;
@@ -43,7 +46,7 @@ pub use table::{signature, signature_strided, HashTable};
 use crate::error::{Error, Result};
 use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
-use crate::projection::ProjectionMatrix;
+use crate::projection::{Precision, ProjectionMatrix};
 use crate::query::{Query, QueryOpts, RerankPolicy, SearchResponse, SearchStats, Searcher};
 use crate::store::segment::{
     read_segment, sigs_arena_from_buckets, write_segment, SegmentHeader, SegmentView,
@@ -280,7 +283,15 @@ pub(crate) fn table_signatures(
     families
         .iter()
         .map(|fam| {
-            let z = fam.project(q);
+            // f32 families project on the fast kernels and discretize on the
+            // shared f64 grid; the multiprobe ranking widens the projections
+            // (probe order is drift-tolerant — it only ranks boundaries).
+            let z = match fam.precision() {
+                Precision::F64 => fam.project(q),
+                Precision::F32 => {
+                    fam.project_f32(q).into_iter().map(f64::from).collect()
+                }
+            };
             let codes = fam.discretize(&z);
             let mut sigs = vec![signature(&codes)];
             if probes > 0 {
@@ -306,17 +317,43 @@ pub(crate) fn table_signatures_batch(
         .map(|_| Vec::with_capacity(families.len()))
         .collect();
     for fam in families {
-        fam.project_batch_into(qs, &mut scratch.z);
         scratch.codes.clear();
         scratch.codes.resize(fam.k(), 0);
-        for (b, sigs_out) in out.iter_mut().enumerate() {
-            let z = scratch.z.row(b);
-            fam.discretize_into(z, &mut scratch.codes);
-            let mut sigs = vec![signature(&scratch.codes)];
-            if probes[b] > 0 {
-                sigs.extend(fam.probe_signatures(&scratch.codes, z, probes[b]));
+        match fam.precision() {
+            Precision::F64 => {
+                fam.project_batch_into(qs, &mut scratch.z);
+                for (b, sigs_out) in out.iter_mut().enumerate() {
+                    let z = scratch.z.row(b);
+                    fam.discretize_into(z, &mut scratch.codes);
+                    let mut sigs = vec![signature(&scratch.codes)];
+                    if probes[b] > 0 {
+                        sigs.extend(fam.probe_signatures(&scratch.codes, z, probes[b]));
+                    }
+                    sigs_out.push(sigs);
+                }
             }
-            sigs_out.push(sigs);
+            Precision::F32 => {
+                // Projections land in the f32 arena; codes come off the f32
+                // discretizer (same f64 grid). Probing widens one row at a
+                // time into the reusable `zwide` buffer — still nothing
+                // allocated at steady state.
+                fam.project_batch_f32_into(qs, &mut scratch.z32);
+                for (b, sigs_out) in out.iter_mut().enumerate() {
+                    let z = scratch.z32.row(b);
+                    fam.discretize_f32_into(z, &mut scratch.codes);
+                    let mut sigs = vec![signature(&scratch.codes)];
+                    if probes[b] > 0 {
+                        scratch.zwide.clear();
+                        scratch.zwide.extend(z.iter().copied().map(f64::from));
+                        sigs.extend(fam.probe_signatures(
+                            &scratch.codes,
+                            &scratch.zwide,
+                            probes[b],
+                        ));
+                    }
+                    sigs_out.push(sigs);
+                }
+            }
         }
     }
     out
@@ -444,7 +481,11 @@ where
 #[derive(Debug, Default)]
 pub struct HashScratch {
     pub(crate) z: ProjectionMatrix,
+    /// f32 twin of `z` — used by families hashing at [`Precision::F32`].
+    pub(crate) z32: ProjectionMatrix<f32>,
     pub(crate) codes: Vec<i32>,
+    /// One widened projection row, reused by the f32 multiprobe path.
+    pub(crate) zwide: Vec<f64>,
 }
 
 impl HashScratch {

@@ -22,6 +22,9 @@
 //! * **Parallel builds** — [`ShardedLshIndex::build_parallel`] hashes and
 //!   inserts each shard's slice on its own thread via batched hashing.
 
+// Not the precision-audited hash path: slot ids are u32 by design (insert caps the item count).
+#![allow(clippy::cast_possible_truncation)]
+
 use super::codes::CodeMatrix;
 use super::table::{signature, HashTable};
 use super::{

@@ -1,5 +1,8 @@
 //! A single hash table: signature → bucket of item ids.
 
+// Not the precision-audited hash path: slot ids are u32 by design (insert caps the item count).
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::HashMap;
 
 /// Pack a K-vector of hash codes into a u64 signature (FNV-1a over the

@@ -19,13 +19,16 @@
 //! * [`workload`] — synthetic corpora and controlled-distance pair generators.
 //!
 //! Core library:
-//! * [`projection`] — CP/TT Rademacher and dense Gaussian projection families.
+//! * [`projection`] — CP/TT Rademacher, dense Gaussian, and sparse
+//!   sampled-coordinate ([`projection::SparseGaussian`]) projection families.
 //!   Batches project through the flat SoA path
 //!   ([`projection::Projection::project_batch_into`] into a
 //!   [`projection::ProjectionMatrix`] arena); both CP and TT banks keep
 //!   stacked per-mode parameter layouts so one fattened pass per mode serves
-//!   the whole batch.
-//! * [`lsh`] — the six hash families behind common traits + parameter
+//!   the whole batch. Every batch kernel is generic over
+//!   [`projection::Scalar`]: f64 is the bit-exact reference, f32 the
+//!   SIMD-friendly fast path selected by `FamilySpec::precision`.
+//! * [`lsh`] — the eight hash families behind common traits + parameter
 //!   planning, all constructed from the declarative [`lsh::spec::LshSpec`]
 //!   (JSON round-trippable; fluent [`lsh::spec::IndexBuilder`] /
 //!   [`lsh::spec::CoordinatorBuilder`] on top);
@@ -193,9 +196,11 @@ pub mod prelude {
         LshSpec, NetSpec, SeedPolicy, ServingSpec, SrpFamily, StoreSpec,
     };
     pub use crate::lsh::{CpE2lsh, CpSrp, NaiveE2lsh, NaiveSrp, TtE2lsh, TtSrp};
+    pub use crate::lsh::{SparseE2lsh, SparseSrp};
     pub use crate::store::Store;
     pub use crate::projection::{
-        CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher,
+        CpRademacher, GaussianDense, Precision, Projection, ProjectionMatrix, SparseGaussian,
+        TtRademacher,
     };
     pub use crate::query::{
         Query, QueryOpts, RerankPolicy, SearchResponse, SearchStats, Searcher,

@@ -5,6 +5,9 @@
 //! offline); accuracy is verified against algebraic identities in the unit
 //! tests and, indirectly, by the decomposition reconstruction-error tests.
 
+// Not the precision-audited hash path: matrix dims are checked against slice lengths at entry.
+#![allow(clippy::cast_possible_truncation)]
+
 mod qr;
 mod svd;
 

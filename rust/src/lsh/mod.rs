@@ -11,9 +11,17 @@
 //! the K-vector of codes that the index packs into a bucket signature.
 //!
 //! Construction is declarative: one [`spec::FamilySpec`] describes any of
-//! the six families and [`spec::LshSpec`] the whole multi-table index. (The
+//! the families and [`spec::LshSpec`] the whole multi-table index. (The
 //! deprecated per-family `*Config` shims were removed in 0.3 — every
 //! constructor routes through [`spec::FamilySpec::build`].)
+//!
+//! Two orthogonal extensions ride on the same machinery (PR 7):
+//! [`FamilyKind::Sparse`] — the FastLSH-style sampled family ([`SparseE2lsh`]
+//! / [`SparseSrp`], arXiv 2309.15479) — and `FamilySpec::precision`, which
+//! switches a family's batch path onto the f32 SIMD-friendly kernels
+//! (EXPERIMENTS.md §Precision). Every hasher carries its [`Precision`]; the
+//! per-item [`HashFamily::hash`] and every batch entry point dispatch on it,
+//! so insert-time and query-time codes always come from the same kernel.
 
 mod planner;
 pub mod spec;
@@ -27,7 +35,10 @@ pub use spec::{
     ServingSpec, StoreSpec,
 };
 
-use crate::projection::{CpRademacher, GaussianDense, Projection, ProjectionMatrix, TtRademacher};
+use crate::projection::{
+    CpRademacher, GaussianDense, Precision, Projection, ProjectionMatrix, Scalar, SparseGaussian,
+    TtRademacher,
+};
 use crate::rng::Rng;
 use crate::stats;
 use crate::tensor::AnyTensor;
@@ -37,9 +48,20 @@ pub trait HashFamily: Send + Sync {
     /// Hashes per signature (K).
     fn k(&self) -> usize;
 
-    /// Hash a tensor to K integer codes.
+    /// Hash a tensor to K integer codes, on the kernel selected by
+    /// [`HashFamily::precision`] (per-item f32 hashing routes through the
+    /// batch-of-one f32 kernel, so it is bit-identical to batched f32
+    /// hashing — the same contract the f64 path keeps).
     fn hash(&self, x: &AnyTensor) -> Vec<i32> {
-        self.discretize(&self.project(x))
+        match self.precision() {
+            Precision::F64 => self.discretize(&self.project(x)),
+            Precision::F32 => {
+                let z = self.project_f32(x);
+                let mut out = vec![0i32; z.len()];
+                self.discretize_f32_into(&z, &mut out);
+                out
+            }
+        }
     }
 
     /// Hash a batch of tensors: `out[b]` equals `hash(&xs[b])` bit-for-bit.
@@ -48,9 +70,19 @@ pub trait HashFamily: Send + Sync {
     /// path; hot paths use [`HashFamily::hash_codes_into`] /
     /// [`crate::index::CodeMatrix`] instead.
     fn hash_batch(&self, xs: &[AnyTensor]) -> Vec<Vec<i32>> {
-        let mut scratch = ProjectionMatrix::empty();
-        self.project_batch_into(xs, &mut scratch);
-        (0..xs.len()).map(|b| self.discretize(scratch.row(b))).collect()
+        match self.precision() {
+            Precision::F64 => {
+                let mut scratch = ProjectionMatrix::empty();
+                self.project_batch_into(xs, &mut scratch);
+                (0..xs.len()).map(|b| self.discretize(scratch.row(b))).collect()
+            }
+            Precision::F32 => {
+                let mut scratch = ProjectionMatrix::<f32>::empty();
+                let mut out = vec![0i32; xs.len() * self.k()];
+                self.hash_codes_f32_into(xs, &mut scratch, &mut out, 0, self.k());
+                out.chunks(self.k().max(1)).map(<[i32]>::to_vec).collect()
+            }
+        }
     }
 
     /// Hash a batch straight into a strided flat code buffer: item `b`'s K
@@ -73,6 +105,33 @@ pub trait HashFamily: Send + Sync {
             let dst = &mut out[b * stride + offset..b * stride + offset + k];
             self.discretize_into(scratch.row(b), dst);
         }
+    }
+
+    /// The f32 twin of [`HashFamily::hash_codes_into`]: projects the batch on
+    /// the single-precision fast kernels into the caller's f32 arena and
+    /// discretizes into the same strided code layout. The index and
+    /// coordinator batch paths call this whenever
+    /// [`HashFamily::precision`] is [`Precision::F32`].
+    fn hash_codes_f32_into(
+        &self,
+        xs: &[AnyTensor],
+        scratch: &mut ProjectionMatrix<f32>,
+        out: &mut [i32],
+        offset: usize,
+        stride: usize,
+    ) {
+        self.project_batch_f32_into(xs, scratch);
+        let k = self.k();
+        for b in 0..xs.len() {
+            let dst = &mut out[b * stride + offset..b * stride + offset + k];
+            self.discretize_f32_into(scratch.row(b), dst);
+        }
+    }
+
+    /// Which kernel precision this family hashes at. [`Precision::F64`]
+    /// (the default) is the bit-exact reference path.
+    fn precision(&self) -> Precision {
+        Precision::F64
     }
 
     /// The K raw projections (pre-discretization) — multiprobe needs these.
@@ -102,9 +161,40 @@ pub trait HashFamily: Send + Sync {
         out.into_rows()
     }
 
+    /// Single-precision per-item projections (the f32 fast path). The
+    /// default narrows the f64 reference once per element; hashers over a
+    /// projection bank delegate to
+    /// [`crate::projection::Projection::project_f32`], which routes through
+    /// the batch-of-one f32 kernel for batch/per-item bit-consistency.
+    fn project_f32(&self, x: &AnyTensor) -> Vec<f32> {
+        self.project(x).iter().map(|&v| <f32 as Scalar>::from_f64(v)).collect()
+    }
+
+    /// Single-precision batch projections into a flat f32 arena;
+    /// `out.row(b)` equals `project_f32(&xs[b])` bit-for-bit. Default narrows
+    /// the f64 reference; bank-backed hashers delegate to the fused f32
+    /// kernels.
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        out.reset(xs.len(), self.k());
+        for (b, x) in xs.iter().enumerate() {
+            let z = self.project_f32(x);
+            out.row_mut(b).copy_from_slice(&z);
+        }
+    }
+
     /// Discretize raw projections into a caller-provided code row
     /// (`out.len() == z.len()`), allocation-free.
     fn discretize_into(&self, z: &[f64], out: &mut [i32]);
+
+    /// Discretize single-precision projections. The default widens each
+    /// element and reuses the f64 discretizer, so both precisions share one
+    /// bucket grid — f32 codes can differ from f64 codes only where the
+    /// projection drift crosses a bucket boundary (tests/precision.rs pins
+    /// that disagreement rate).
+    fn discretize_f32_into(&self, z: &[f32], out: &mut [i32]) {
+        let widened: Vec<f64> = z.iter().map(|&v| f64::from(v)).collect();
+        self.discretize_into(&widened, out);
+    }
 
     /// Discretize raw projections into codes.
     fn discretize(&self, z: &[f64]) -> Vec<i32> {
@@ -153,6 +243,7 @@ pub struct E2lshHasher<P: Projection> {
     pub b: Vec<f64>,
     pub w: f64,
     label: &'static str,
+    precision: Precision,
 }
 
 impl<P: Projection> E2lshHasher<P> {
@@ -161,7 +252,7 @@ impl<P: Projection> E2lshHasher<P> {
         assert!(w > 0.0, "bucket width must be positive");
         let mut rng = Rng::derive(seed, &[0xB0FF5E7]);
         let b = (0..proj.k()).map(|_| rng.uniform(0.0, w)).collect();
-        E2lshHasher { proj, b, w, label }
+        E2lshHasher { proj, b, w, label, precision: Precision::F64 }
     }
 
     /// Wrap with explicit offsets (banding: a band family must carry the
@@ -169,7 +260,15 @@ impl<P: Projection> E2lshHasher<P> {
     pub fn with_offsets(proj: P, b: Vec<f64>, w: f64, label: &'static str) -> Self {
         assert!(w > 0.0, "bucket width must be positive");
         assert_eq!(b.len(), proj.k(), "offsets must match bank width");
-        E2lshHasher { proj, b, w, label }
+        E2lshHasher { proj, b, w, label, precision: Precision::F64 }
+    }
+
+    /// Select the kernel precision (builder style; the default is the
+    /// bit-exact f64 reference).
+    #[must_use]
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 }
 
@@ -186,10 +285,37 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
         self.proj.project_batch_into(xs, out);
     }
 
+    fn project_f32(&self, x: &AnyTensor) -> Vec<f32> {
+        self.proj.project_f32(x)
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        self.proj.project_batch_f32_into(xs, out);
+    }
+
+    // floor(·) of a bucket position; the LSH code domain is i32 by
+    // construction (w sized to the data scale), so the narrowing is the
+    // discretizer's contract, not an accident.
+    #[allow(clippy::cast_possible_truncation)]
     fn discretize_into(&self, z: &[f64], out: &mut [i32]) {
         for ((o, &v), &b) in out.iter_mut().zip(z).zip(&self.b) {
             *o = ((v + b) / self.w).floor() as i32;
         }
+    }
+
+    /// Widen each f32 projection and discretize on the *same* f64 grid
+    /// `(b_k, w)` as the reference path — allocation-free. Sharing the grid
+    /// means f32 and f64 codes can differ only where the projection drift
+    /// crosses a bucket boundary.
+    #[allow(clippy::cast_possible_truncation)] // same contract as discretize_into
+    fn discretize_f32_into(&self, z: &[f32], out: &mut [i32]) {
+        for ((o, &v), &b) in out.iter_mut().zip(z).zip(&self.b) {
+            *o = ((f64::from(v) + b) / self.w).floor() as i32;
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
     }
 
     fn param_count(&self) -> usize {
@@ -241,11 +367,20 @@ impl<P: Projection> HashFamily for E2lshHasher<P> {
 pub struct SrpHasher<P: Projection> {
     pub proj: P,
     label: &'static str,
+    precision: Precision,
 }
 
 impl<P: Projection> SrpHasher<P> {
     pub fn wrap(proj: P, label: &'static str) -> Self {
-        SrpHasher { proj, label }
+        SrpHasher { proj, label, precision: Precision::F64 }
+    }
+
+    /// Select the kernel precision (builder style; the default is the
+    /// bit-exact f64 reference).
+    #[must_use]
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 }
 
@@ -262,10 +397,30 @@ impl<P: Projection> HashFamily for SrpHasher<P> {
         self.proj.project_batch_into(xs, out);
     }
 
+    fn project_f32(&self, x: &AnyTensor) -> Vec<f32> {
+        self.proj.project_f32(x)
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        self.proj.project_batch_f32_into(xs, out);
+    }
+
     fn discretize_into(&self, z: &[f64], out: &mut [i32]) {
         for (o, &v) in out.iter_mut().zip(z) {
             *o = i32::from(v > 0.0);
         }
+    }
+
+    /// Sign test straight on the f32 projections (`0.0f32 > 0.0` agrees with
+    /// the widened comparison, so the f32 grid is exactly the f64 grid).
+    fn discretize_f32_into(&self, z: &[f32], out: &mut [i32]) {
+        for (o, &v) in out.iter_mut().zip(z) {
+            *o = i32::from(v > 0.0);
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
     }
 
     fn param_count(&self) -> usize {
@@ -314,6 +469,11 @@ pub type CpSrp = SrpHasher<CpRademacher>;
 pub type TtSrp = SrpHasher<TtRademacher>;
 /// Naive baseline: reshape + SRP [6].
 pub type NaiveSrp = SrpHasher<GaussianDense>;
+/// Fast-E2LSH: sparse sampled-coordinate projections + E2LSH discretizer
+/// (FastLSH-style, arXiv 2309.15479).
+pub type SparseE2lsh = E2lshHasher<SparseGaussian>;
+/// Fast-SRP: sparse sampled-coordinate projections + sign discretizer.
+pub type SparseSrp = SrpHasher<SparseGaussian>;
 
 #[cfg(test)]
 mod tests {
@@ -328,9 +488,9 @@ mod tests {
         vec![6, 6, 6]
     }
 
-    /// All six families at one (dims, rank, K, w, seed) point, via the
+    /// All eight families at one (dims, rank, K, w, seed) point, via the
     /// single declarative constructor path.
-    fn six_families(rank: usize, k: usize, w: f64, seed: u64) -> Vec<Arc<dyn HashFamily>> {
+    fn all_families(rank: usize, k: usize, w: f64, seed: u64) -> Vec<Arc<dyn HashFamily>> {
         [
             FamilySpec::e2lsh(FamilyKind::Cp, dims(), rank, k, w),
             FamilySpec::e2lsh(FamilyKind::Tt, dims(), rank, k, w),
@@ -338,6 +498,8 @@ mod tests {
             FamilySpec::srp(FamilyKind::Tt, dims(), rank, k),
             FamilySpec::e2lsh(FamilyKind::Naive, dims(), rank, k, w),
             FamilySpec::srp(FamilyKind::Naive, dims(), rank, k),
+            FamilySpec::e2lsh(FamilyKind::Sparse, dims(), rank, k, w),
+            FamilySpec::srp(FamilyKind::Sparse, dims(), rank, k),
         ]
         .iter()
         .map(|s| s.build(seed).unwrap())
@@ -374,7 +536,7 @@ mod tests {
             AnyTensor::Tt(xc.to_tt()),
             AnyTensor::Dense(xc.materialize()),
         ];
-        for fam in &six_families(3, 8, 4.0, 5) {
+        for fam in &all_families(3, 8, 4.0, 5) {
             let h0 = fam.hash(&variants[0]);
             for v in &variants[1..] {
                 // Identical tensor in a different format must hash identically
@@ -387,12 +549,12 @@ mod tests {
     #[test]
     fn hash_batch_equals_per_item_hash_for_all_families() {
         // Satellite acceptance: for a fixed seed, `hash_batch` must equal
-        // per-item `hash` exactly, across all six families and mixed ranks.
+        // per-item `hash` exactly, across all eight families and mixed ranks.
         let mut rng = Rng::new(105);
         let batch: Vec<AnyTensor> = (0..9)
             .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims(), 1 + i % 4)))
             .collect();
-        let fams = six_families(3, 8, 4.0, 55);
+        let fams = all_families(3, 8, 4.0, 55);
         for fam in &fams {
             let hb = fam.hash_batch(&batch);
             assert_eq!(hb.len(), batch.len(), "family {}", fam.name());

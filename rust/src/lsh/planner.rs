@@ -10,6 +10,9 @@
 //!   The *ratio* (LHS/RHS) is the practitioners' diagnostic: ≪ 1 means the
 //!   CLT is trustworthy at this shape; F4 sweeps it.
 
+// Not the precision-audited hash path: planner rounds small positive ceil() results.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::stats;
 
 /// Outcome of (K, L) planning.

@@ -44,7 +44,9 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::index::{IndexConfig, LshIndex, Metric, ShardedLshIndex};
-use crate::projection::{CpRademacher, Distribution, GaussianDense, TtRademacher};
+use crate::projection::{
+    CpRademacher, Distribution, GaussianDense, Precision, SparseGaussian, TtRademacher,
+};
 use crate::stats;
 use crate::store::Store;
 use crate::tensor::AnyTensor;
@@ -61,6 +63,10 @@ pub enum FamilyKind {
     Tt,
     /// Dense Gaussian baseline (reshape + E2LSH [11] / SRP [6]).
     Naive,
+    /// Sparse sampled-coordinate projections (fast-E2LSH / fast-SRP in the
+    /// spirit of FastLSH, arXiv 2309.15479): `O(m)` instead of `O(D)` flops
+    /// per hash. `FamilySpec::sample` sets m.
+    Sparse,
 }
 
 impl FamilyKind {
@@ -70,8 +76,9 @@ impl FamilyKind {
             "cp" => Ok(FamilyKind::Cp),
             "tt" => Ok(FamilyKind::Tt),
             "naive" => Ok(FamilyKind::Naive),
+            "sparse" | "fast" => Ok(FamilyKind::Sparse),
             other => Err(Error::InvalidSpec(format!(
-                "unknown family '{other}' (expected one of: cp, tt, naive)"
+                "unknown family '{other}' (expected one of: cp, tt, naive, sparse)"
             ))),
         }
     }
@@ -81,6 +88,7 @@ impl FamilyKind {
             FamilyKind::Cp => "cp",
             FamilyKind::Tt => "tt",
             FamilyKind::Naive => "naive",
+            FamilyKind::Sparse => "sparse",
         }
     }
 }
@@ -101,17 +109,69 @@ pub struct FamilySpec {
     pub metric: Metric,
     /// E2LSH bucket width (used only under the Euclidean metric).
     pub w: f64,
+    /// Kernel precision for the hash path: [`Precision::F64`] (default) is
+    /// the bit-exact reference, [`Precision::F32`] the SIMD-friendly fast
+    /// path (EXPERIMENTS.md §Precision).
+    pub precision: Precision,
+    /// Coordinates sampled per hash (`m`) by [`FamilyKind::Sparse`];
+    /// `0` = auto (`D/4`, at least 1). Ignored by the other kinds, like
+    /// `rank` is by [`FamilyKind::Naive`].
+    pub sample: usize,
 }
 
 impl FamilySpec {
     /// SRP family over the cosine metric.
     pub fn srp(kind: FamilyKind, dims: Vec<usize>, rank: usize, k: usize) -> FamilySpec {
-        FamilySpec { kind, dims, rank, k, metric: Metric::Cosine, w: 4.0 }
+        FamilySpec {
+            kind,
+            dims,
+            rank,
+            k,
+            metric: Metric::Cosine,
+            w: 4.0,
+            precision: Precision::F64,
+            sample: 0,
+        }
     }
 
     /// E2LSH family over the Euclidean metric with bucket width `w`.
     pub fn e2lsh(kind: FamilyKind, dims: Vec<usize>, rank: usize, k: usize, w: f64) -> FamilySpec {
-        FamilySpec { kind, dims, rank, k, metric: Metric::Euclidean, w }
+        FamilySpec {
+            kind,
+            dims,
+            rank,
+            k,
+            metric: Metric::Euclidean,
+            w,
+            precision: Precision::F64,
+            sample: 0,
+        }
+    }
+
+    /// Select the kernel precision (builder style).
+    #[must_use]
+    pub fn with_precision(mut self, precision: Precision) -> FamilySpec {
+        self.precision = precision;
+        self
+    }
+
+    /// Set the sparse family's samples-per-hash `m` (builder style).
+    #[must_use]
+    pub fn with_sample(mut self, sample: usize) -> FamilySpec {
+        self.sample = sample;
+        self
+    }
+
+    /// The sparse family's effective samples per hash: `sample`, or the
+    /// `D/4` auto default (≥ 1) when unset. The auto choice keeps a 4×
+    /// per-hash FLOP cut while sampling enough coordinates for the
+    /// collision laws to hold at the shapes the tests pin.
+    pub fn sparse_m(&self) -> usize {
+        if self.sample > 0 {
+            self.sample
+        } else {
+            (self.dims.iter().product::<usize>() / 4).max(1)
+        }
     }
 
     /// Numeric validation (typed errors instead of downstream panics).
@@ -142,35 +202,52 @@ impl FamilySpec {
         TtRademacher::generate(seed, &self.dims, self.rank, k, Distribution::Rademacher)
     }
 
+    pub(crate) fn sparse_proj(&self, seed: u64, k: usize) -> SparseGaussian {
+        SparseGaussian::generate(seed, &self.dims, self.sparse_m(), k)
+    }
+
     /// Instantiate the family with every projection drawn from `seed`. This
-    /// is the single constructor path all six families share — the
+    /// is the single constructor path all eight families share — the
     /// deprecated per-family `*Config::new` shims and the
     /// [`LshSpec::family`] tables both route through it.
     pub fn build(&self, seed: u64) -> Result<Arc<dyn HashFamily>> {
         self.validate()?;
+        let p = self.precision;
         Ok(match (self.kind, self.metric) {
             (FamilyKind::Cp, Metric::Cosine) => {
-                Arc::new(SrpHasher::wrap(self.cp_proj(seed, self.k), "cp"))
+                Arc::new(SrpHasher::wrap(self.cp_proj(seed, self.k), "cp").with_precision(p))
             }
             (FamilyKind::Tt, Metric::Cosine) => {
-                Arc::new(SrpHasher::wrap(self.tt_proj(seed, self.k), "tt"))
+                Arc::new(SrpHasher::wrap(self.tt_proj(seed, self.k), "tt").with_precision(p))
             }
-            (FamilyKind::Naive, Metric::Cosine) => Arc::new(SrpHasher::wrap(
-                GaussianDense::generate(seed, &self.dims, self.k),
-                "naive",
-            )),
-            (FamilyKind::Cp, Metric::Euclidean) => {
-                Arc::new(E2lshHasher::wrap(self.cp_proj(seed, self.k), self.w, seed, "cp"))
-            }
-            (FamilyKind::Tt, Metric::Euclidean) => {
-                Arc::new(E2lshHasher::wrap(self.tt_proj(seed, self.k), self.w, seed, "tt"))
-            }
-            (FamilyKind::Naive, Metric::Euclidean) => Arc::new(E2lshHasher::wrap(
-                GaussianDense::generate(seed, &self.dims, self.k),
-                self.w,
-                seed,
-                "naive",
-            )),
+            (FamilyKind::Naive, Metric::Cosine) => Arc::new(
+                SrpHasher::wrap(GaussianDense::generate(seed, &self.dims, self.k), "naive")
+                    .with_precision(p),
+            ),
+            (FamilyKind::Sparse, Metric::Cosine) => Arc::new(
+                SrpHasher::wrap(self.sparse_proj(seed, self.k), "sparse").with_precision(p),
+            ),
+            (FamilyKind::Cp, Metric::Euclidean) => Arc::new(
+                E2lshHasher::wrap(self.cp_proj(seed, self.k), self.w, seed, "cp")
+                    .with_precision(p),
+            ),
+            (FamilyKind::Tt, Metric::Euclidean) => Arc::new(
+                E2lshHasher::wrap(self.tt_proj(seed, self.k), self.w, seed, "tt")
+                    .with_precision(p),
+            ),
+            (FamilyKind::Naive, Metric::Euclidean) => Arc::new(
+                E2lshHasher::wrap(
+                    GaussianDense::generate(seed, &self.dims, self.k),
+                    self.w,
+                    seed,
+                    "naive",
+                )
+                .with_precision(p),
+            ),
+            (FamilyKind::Sparse, Metric::Euclidean) => Arc::new(
+                E2lshHasher::wrap(self.sparse_proj(seed, self.k), self.w, seed, "sparse")
+                    .with_precision(p),
+            ),
         })
     }
 
@@ -185,17 +262,24 @@ impl FamilySpec {
         m.insert("k".to_string(), Json::Num(self.k as f64));
         m.insert("metric".to_string(), Json::Str(self.metric.name().into()));
         m.insert("w".to_string(), Json::Num(self.w));
+        m.insert("precision".to_string(), Json::Str(self.precision.name().into()));
+        m.insert("sample".to_string(), Json::Num(self.sample as f64));
         Json::Obj(m)
     }
 
     pub fn from_json(v: &Json) -> Result<FamilySpec> {
-        reject_unknown(v, &["kind", "dims", "rank", "k", "metric", "w"], "family")?;
+        reject_unknown(
+            v,
+            &["kind", "dims", "rank", "k", "metric", "w", "precision", "sample"],
+            "family",
+        )?;
         let dims = v
             .get("dims")?
             .as_arr()?
             .iter()
             .map(Json::as_usize)
             .collect::<Result<Vec<usize>>>()?;
+        let obj = v.as_obj()?;
         Ok(FamilySpec {
             kind: FamilyKind::parse(v.get("kind")?.as_str()?)?,
             dims,
@@ -203,6 +287,16 @@ impl FamilySpec {
             k: v.get("k")?.as_usize()?,
             metric: Metric::parse(v.get("metric")?.as_str()?)?,
             w: v.get("w")?.as_f64()?,
+            // Hand-written specs may omit the PR-7 fields: f64 reference
+            // precision and auto sampling are the historical behavior.
+            precision: match obj.get("precision") {
+                Some(p) => Precision::parse(p.as_str()?)?,
+                None => Precision::F64,
+            },
+            sample: match obj.get("sample") {
+                Some(n) => n.as_usize()?,
+                None => 0,
+            },
         })
     }
 }
@@ -558,6 +652,21 @@ impl LshSpec {
         self
     }
 
+    /// Select the kernel precision for every table's family
+    /// (EXPERIMENTS.md §Precision).
+    #[must_use]
+    pub fn with_precision(mut self, precision: Precision) -> LshSpec {
+        self.family.precision = precision;
+        self
+    }
+
+    /// Set the sparse family's samples-per-hash `m` (0 = auto `D/4`).
+    #[must_use]
+    pub fn with_sample(mut self, sample: usize) -> LshSpec {
+        self.family.sample = sample;
+        self
+    }
+
     pub fn with_seed(mut self, base: u64, stride: u64) -> LshSpec {
         self.seeds = SeedPolicy::new(base, stride);
         self
@@ -742,12 +851,14 @@ impl LshSpec {
             return (0..self.l).map(|t| self.try_family(t)).collect();
         }
         let (k, w, base) = (self.family.k, self.family.w, self.seeds.base);
+        let p = self.family.precision;
         Ok(match (self.family.kind, self.family.metric) {
             (FamilyKind::Cp, Metric::Cosine) => {
                 let bank = self.cp_bank()?;
                 (0..self.l)
                     .map(|t| {
-                        Arc::new(SrpHasher::wrap(bank.band(t, k), "cp")) as Arc<dyn HashFamily>
+                        Arc::new(SrpHasher::wrap(bank.band(t, k), "cp").with_precision(p))
+                            as Arc<dyn HashFamily>
                     })
                     .collect()
             }
@@ -755,7 +866,17 @@ impl LshSpec {
                 let bank = self.tt_bank()?;
                 (0..self.l)
                     .map(|t| {
-                        Arc::new(SrpHasher::wrap(bank.band(t, k), "tt")) as Arc<dyn HashFamily>
+                        Arc::new(SrpHasher::wrap(bank.band(t, k), "tt").with_precision(p))
+                            as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Sparse, Metric::Cosine) => {
+                let bank = self.sparse_bank()?;
+                (0..self.l)
+                    .map(|t| {
+                        Arc::new(SrpHasher::wrap(bank.band(t, k), "sparse").with_precision(p))
+                            as Arc<dyn HashFamily>
                     })
                     .collect()
             }
@@ -764,8 +885,10 @@ impl LshSpec {
                 (0..self.l)
                     .map(|t| {
                         let b = full.b[t * k..(t + 1) * k].to_vec();
-                        Arc::new(E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "cp"))
-                            as Arc<dyn HashFamily>
+                        Arc::new(
+                            E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "cp")
+                                .with_precision(p),
+                        ) as Arc<dyn HashFamily>
                     })
                     .collect()
             }
@@ -774,8 +897,22 @@ impl LshSpec {
                 (0..self.l)
                     .map(|t| {
                         let b = full.b[t * k..(t + 1) * k].to_vec();
-                        Arc::new(E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "tt"))
-                            as Arc<dyn HashFamily>
+                        Arc::new(
+                            E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "tt")
+                                .with_precision(p),
+                        ) as Arc<dyn HashFamily>
+                    })
+                    .collect()
+            }
+            (FamilyKind::Sparse, Metric::Euclidean) => {
+                let full = E2lshHasher::wrap(self.sparse_bank()?, w, base, "sparse");
+                (0..self.l)
+                    .map(|t| {
+                        let b = full.b[t * k..(t + 1) * k].to_vec();
+                        Arc::new(
+                            E2lshHasher::with_offsets(full.proj.band(t, k), b, w, "sparse")
+                                .with_precision(p),
+                        ) as Arc<dyn HashFamily>
                     })
                     .collect()
             }
@@ -808,32 +945,56 @@ impl LshSpec {
         Ok(self.family.tt_proj(self.seeds.base, self.family.k * self.l))
     }
 
+    /// Sparse analogue of [`LshSpec::cp_bank`]: `K·L` sampled-coordinate
+    /// hashes drawn at the base seed, band-sliced per table.
+    pub fn sparse_bank(&self) -> Result<SparseGaussian> {
+        if self.family.kind != FamilyKind::Sparse {
+            return Err(Error::InvalidSpec(format!(
+                "sparse_bank on a {} spec",
+                self.family.kind.name()
+            )));
+        }
+        self.family.validate()?;
+        Ok(self.family.sparse_proj(self.seeds.base, self.family.k * self.l))
+    }
+
     /// Band `t` of the full bank, wrapped in the metric's discretizer. The
     /// E2LSH offsets are the matching slice of the full-width hasher's, so
     /// banded tables discretize exactly like code slices of the full bank.
     fn banded_family(&self, table: usize) -> Result<Arc<dyn HashFamily>> {
         let k = self.family.k;
         let w = self.family.w;
+        let p = self.family.precision;
         Ok(match (self.family.kind, self.family.metric) {
-            (FamilyKind::Cp, Metric::Cosine) => {
-                Arc::new(SrpHasher::wrap(self.cp_bank()?.band(table, k), "cp"))
-            }
-            (FamilyKind::Tt, Metric::Cosine) => {
-                Arc::new(SrpHasher::wrap(self.tt_bank()?.band(table, k), "tt"))
-            }
+            (FamilyKind::Cp, Metric::Cosine) => Arc::new(
+                SrpHasher::wrap(self.cp_bank()?.band(table, k), "cp").with_precision(p),
+            ),
+            (FamilyKind::Tt, Metric::Cosine) => Arc::new(
+                SrpHasher::wrap(self.tt_bank()?.band(table, k), "tt").with_precision(p),
+            ),
+            (FamilyKind::Sparse, Metric::Cosine) => Arc::new(
+                SrpHasher::wrap(self.sparse_bank()?.band(table, k), "sparse").with_precision(p),
+            ),
             (FamilyKind::Cp, Metric::Euclidean) => {
                 let bank = self.cp_bank()?;
                 let band = bank.band(table, k);
                 let full = E2lshHasher::wrap(bank, w, self.seeds.base, "cp");
                 let b = full.b[table * k..(table + 1) * k].to_vec();
-                Arc::new(E2lshHasher::with_offsets(band, b, w, "cp"))
+                Arc::new(E2lshHasher::with_offsets(band, b, w, "cp").with_precision(p))
             }
             (FamilyKind::Tt, Metric::Euclidean) => {
                 let bank = self.tt_bank()?;
                 let band = bank.band(table, k);
                 let full = E2lshHasher::wrap(bank, w, self.seeds.base, "tt");
                 let b = full.b[table * k..(table + 1) * k].to_vec();
-                Arc::new(E2lshHasher::with_offsets(band, b, w, "tt"))
+                Arc::new(E2lshHasher::with_offsets(band, b, w, "tt").with_precision(p))
+            }
+            (FamilyKind::Sparse, Metric::Euclidean) => {
+                let bank = self.sparse_bank()?;
+                let band = bank.band(table, k);
+                let full = E2lshHasher::wrap(bank, w, self.seeds.base, "sparse");
+                let b = full.b[table * k..(table + 1) * k].to_vec();
+                Arc::new(E2lshHasher::with_offsets(band, b, w, "sparse").with_precision(p))
             }
             (FamilyKind::Naive, _) => unreachable!("validate() rejects banded naive"),
         })
@@ -925,6 +1086,9 @@ fn as_u64(v: &Json) -> Result<u64> {
     if f < 0.0 || f.fract() != 0.0 || f >= MAX_JSON_INT as f64 {
         return Err(Error::Json(format!("expected non-negative integer (< 2^53), got {f}")));
     }
+    // Checked conversion: the guard above proves f is a non-negative
+    // integer below 2^53, so the cast is exact.
+    #[allow(clippy::cast_possible_truncation)]
     Ok(f as u64)
 }
 
@@ -1260,7 +1424,11 @@ mod tests {
             Err(Error::InvalidSpec(m)) => m,
             other => panic!("{other:?}"),
         };
-        assert!(msg.contains("cp") && msg.contains("tt") && msg.contains("naive"), "{msg}");
+        assert!(
+            msg.contains("cp") && msg.contains("tt") && msg.contains("naive")
+                && msg.contains("sparse"),
+            "{msg}"
+        );
     }
 
     #[test]
@@ -1302,6 +1470,8 @@ mod tests {
                     k: 4,
                     metric,
                     w: 4.0,
+                    precision: Precision::F64,
+                    sample: 0,
                 },
                 l: 3,
                 probes: 0,
@@ -1331,6 +1501,141 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sparse_and_precision_round_trip_json() {
+        let spec = LshSpec::euclidean(FamilyKind::Sparse, vec![6, 6, 6], 1, 8, 4, 3.0)
+            .with_sample(32)
+            .with_precision(Precision::F32)
+            .with_seed(7, 100);
+        let text = spec.to_json_string();
+        let back = LshSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.family.kind, FamilyKind::Sparse);
+        assert_eq!(back.family.precision, Precision::F32);
+        assert_eq!(back.family.sample, 32);
+        assert_eq!(back.to_json_string(), text);
+        // Documents predating PR 7 omit precision/sample: they parse to the
+        // historical behavior (f64 reference, auto sampling).
+        let old = LshSpec::from_json_str(
+            r#"{
+                "family": {"kind": "cp", "dims": [8, 8], "rank": 4, "k": 6,
+                           "metric": "cosine", "w": 4.0},
+                "l": 3
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(old.family.precision, Precision::F64);
+        assert_eq!(old.family.sample, 0);
+        // A bad precision value is a typed error, not a silent default.
+        let bad = LshSpec::from_json_str(
+            r#"{
+                "family": {"kind": "cp", "dims": [8, 8], "rank": 4, "k": 6,
+                           "metric": "cosine", "w": 4.0, "precision": "f16"},
+                "l": 3
+            }"#,
+        );
+        assert!(bad.is_err());
+        // "fast" is an accepted alias for the sparse kind.
+        assert_eq!(FamilyKind::parse("fast").unwrap(), FamilyKind::Sparse);
+    }
+
+    #[test]
+    fn sparse_spec_builds_all_layers() {
+        let dims = vec![6usize, 6, 6];
+        let xs = batch(&dims, 4, 9);
+        // Per-table families hash deterministically under both metrics.
+        let srp = LshSpec::cosine(FamilyKind::Sparse, dims.clone(), 1, 6, 3).with_sample(40);
+        let e2 = LshSpec::euclidean(FamilyKind::Sparse, dims.clone(), 1, 6, 3, 4.0)
+            .with_sample(40);
+        for spec in [&srp, &e2] {
+            let fams = spec.families().unwrap();
+            assert_eq!(fams.len(), 3);
+            for t in 0..3 {
+                let again = spec.family(t);
+                for x in &xs {
+                    assert_eq!(fams[t].hash(x), again.hash(x), "table {t}");
+                }
+            }
+        }
+        assert_eq!(srp.family(0).name(), "sparse-srp");
+        assert_eq!(e2.family(0).name(), "sparse-e2lsh");
+        // The auto sample default is D/4.
+        assert_eq!(srp.family.clone().with_sample(0).sparse_m(), 54);
+        // Planner accepts the sparse kind (collision laws depend only on the
+        // metric and w; the validity gate is CP/TT-specific).
+        let planned = LshSpec::cosine(FamilyKind::Sparse, vec![16, 16], 1, 1, 1)
+            .planned(10_000, 0.9, 0.3, 0.5)
+            .unwrap();
+        assert!(planned.family.k >= 1 && planned.l >= 1);
+        // End-to-end: a sparse spec drives the index builder.
+        let items = batch(&dims, 30, 11);
+        let index = IndexBuilder::new(srp.clone()).build_with(items.clone()).unwrap();
+        assert_eq!(index.len(), 30);
+    }
+
+    #[test]
+    fn banded_sparse_slices_the_full_bank() {
+        // Banded sparse table t must hash exactly like codes [t·K, (t+1)·K)
+        // of the one full-width sparse hasher — mirroring the CP/TT banding
+        // contract.
+        let dims = vec![6usize, 6, 6];
+        let xs = batch(&dims, 4, 3);
+        for metric in [Metric::Cosine, Metric::Euclidean] {
+            let mut spec = LshSpec::cosine(FamilyKind::Sparse, dims.clone(), 1, 4, 3)
+                .with_sample(30)
+                .with_banded(true)
+                .with_seed(99, 0);
+            spec.family.metric = metric;
+            let bank = spec.sparse_bank().unwrap();
+            assert_eq!(crate::projection::Projection::k(&bank), 12);
+            let full: Arc<dyn HashFamily> = match metric {
+                Metric::Cosine => Arc::new(SrpHasher::wrap(bank, "sparse")),
+                Metric::Euclidean => Arc::new(E2lshHasher::wrap(bank, 4.0, 99, "sparse")),
+            };
+            let fams = spec.families().unwrap();
+            for x in &xs {
+                let full_codes = full.hash(x);
+                for t in 0..3 {
+                    let band_codes = full_codes[t * 4..(t + 1) * 4].to_vec();
+                    assert_eq!(spec.family(t).hash(x), band_codes, "{metric:?} band {t}");
+                    assert_eq!(fams[t].hash(x), band_codes, "families() band {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn precision_propagates_from_spec_to_families() {
+        let dims = vec![6usize, 6, 6];
+        let f64_spec = LshSpec::euclidean(FamilyKind::Cp, dims.clone(), 3, 6, 2, 4.0);
+        let f32_spec = f64_spec.clone().with_precision(Precision::F32);
+        assert_eq!(f64_spec.family(0).precision(), Precision::F64);
+        assert_eq!(f32_spec.family(0).precision(), Precision::F32);
+        for f in f32_spec.families().unwrap() {
+            assert_eq!(f.precision(), Precision::F32);
+        }
+        // Banded families carry the precision too.
+        let banded = f32_spec.clone().with_banded(true).with_seed(5, 0);
+        for f in banded.families().unwrap() {
+            assert_eq!(f.precision(), Precision::F32);
+        }
+        // f32 codes may drift only at bucket boundaries: spot-check that the
+        // two precisions agree on the vast majority of codes.
+        let xs = batch(&dims, 16, 21);
+        let (mut same, mut total) = (0usize, 0usize);
+        let (a, b) = (f64_spec.family(0), f32_spec.family(0));
+        for x in &xs {
+            for (ca, cb) in a.hash(x).iter().zip(b.hash(x)) {
+                same += usize::from(*ca == cb);
+                total += 1;
+            }
+        }
+        assert!(
+            same * 100 >= total * 95,
+            "f32/f64 agreement {same}/{total} below 95%"
+        );
     }
 
     #[test]

@@ -36,6 +36,9 @@
 //!   exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all
 //! ```
 
+// Not the precision-audited hash path: CLI argument values are range-checked before narrowing.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use std::time::Duration;
 use tensor_lsh::bench_harness as bh;
@@ -95,10 +98,10 @@ fn print_usage() {
          \x20 stop     ask a listening server to drain and exit: stop <addr>\n\
          \x20 exp      regenerate paper tables/figures: t1 t2 f1 f2 f3 f4 f5 all\n\n\
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
-         \x20            n_items top_k n_workers shards max_batch max_wait_us\n\
-         \x20            seed seed_stride artifact_dir store checkpoint_every\n\
-         \x20            listen max_conns read_timeout_ms write_timeout_ms\n\
-         \x20            max_inflight"
+         \x20            precision sample n_items top_k n_workers shards max_batch\n\
+         \x20            max_wait_us seed seed_stride artifact_dir store\n\
+         \x20            checkpoint_every listen max_conns read_timeout_ms\n\
+         \x20            write_timeout_ms max_inflight"
     );
 }
 

@@ -32,6 +32,9 @@
 //! `SearchResponse` (ids, f64 score bits, stats) is bit-identical to the
 //! in-process answer.
 
+// Not the precision-audited hash path: wire length fields are validated against caps before narrowing.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::coordinator::MetricsSnapshot;
 use crate::error::{Error, Result};
 use crate::index::SearchResult;

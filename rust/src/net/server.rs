@@ -22,6 +22,9 @@
 //! durable [`crate::store::Store`] is checkpointed — a kill between frames
 //! never loses an acknowledged insert.
 
+// Not the precision-audited hash path: wire length fields are validated against caps before narrowing.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::frame::{read_frame_rest, write_response, Request, Response};
 use crate::coordinator::{Coordinator, Dispatcher, MetricsSnapshot};
 use crate::error::{Error, Result};

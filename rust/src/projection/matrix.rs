@@ -1,23 +1,30 @@
 //! Flat, arena-backed projection buffer: the SoA layout the batched hash
 //! path runs on (EXPERIMENTS.md §Layout).
 //!
-//! A [`ProjectionMatrix`] is one row-major `(batch, K)` f64 allocation that
+//! A [`ProjectionMatrix`] is one row-major `(batch, K)` allocation that
 //! replaces the `Vec<Vec<f64>>` the nested batch APIs used to return — one
 //! heap block per batch instead of one per item. The buffer is an *arena*:
 //! [`ProjectionMatrix::reset`] re-shapes it in place, so a long-lived holder
 //! (the coordinator's hash stage, an index bulk build) allocates at the
 //! high-water mark once and then hashes every subsequent batch
 //! allocation-free.
+//!
+//! The element type is generic over [`Scalar`] (EXPERIMENTS.md §Precision):
+//! `ProjectionMatrix` (= `ProjectionMatrix<f64>`) is the bit-exact reference
+//! buffer every historical API uses; `ProjectionMatrix<f32>` backs the
+//! SIMD-friendly fast path.
+
+use super::scalar::Scalar;
 
 /// Row-major `(batch, K)` matrix of raw projections: `row(b)[k] = ⟨P_k, X_b⟩`.
 #[derive(Clone, Debug, Default, PartialEq)]
-pub struct ProjectionMatrix {
+pub struct ProjectionMatrix<T: Scalar = f64> {
     k: usize,
     batch: usize,
-    data: Vec<f64>,
+    data: Vec<T>,
 }
 
-impl ProjectionMatrix {
+impl<T: Scalar> ProjectionMatrix<T> {
     /// An empty matrix (no allocation); shape it with
     /// [`ProjectionMatrix::reset`].
     pub fn empty() -> Self {
@@ -26,7 +33,7 @@ impl ProjectionMatrix {
 
     /// A zero-filled `(batch, K)` matrix.
     pub fn zeros(batch: usize, k: usize) -> Self {
-        ProjectionMatrix { k, batch, data: vec![0.0; batch * k] }
+        ProjectionMatrix { k, batch, data: vec![T::ZERO; batch * k] }
     }
 
     /// Re-shape in place to `(batch, K)`, zero-filled. Keeps the existing
@@ -35,7 +42,7 @@ impl ProjectionMatrix {
         self.k = k;
         self.batch = batch;
         self.data.clear();
-        self.data.resize(batch * k, 0.0);
+        self.data.resize(batch * k, T::ZERO);
     }
 
     /// Number of rows (items) in the batch.
@@ -55,24 +62,24 @@ impl ProjectionMatrix {
 
     /// Row `b`: the K projections of item `b`.
     #[inline]
-    pub fn row(&self, b: usize) -> &[f64] {
+    pub fn row(&self, b: usize) -> &[T] {
         &self.data[b * self.k..(b + 1) * self.k]
     }
 
     /// Mutable row `b`.
     #[inline]
-    pub fn row_mut(&mut self, b: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, b: usize) -> &mut [T] {
         &mut self.data[b * self.k..(b + 1) * self.k]
     }
 
     /// The whole flat buffer (row-major).
-    pub fn as_slice(&self) -> &[f64] {
+    pub fn as_slice(&self) -> &[T] {
         &self.data
     }
 
     /// Split into per-item rows (compatibility shim for the nested-Vec
     /// batch APIs; allocates one Vec per item — not for hot paths).
-    pub fn into_rows(self) -> Vec<Vec<f64>> {
+    pub fn into_rows(self) -> Vec<Vec<T>> {
         (0..self.batch).map(|b| self.row(b).to_vec()).collect()
     }
 }
@@ -83,7 +90,7 @@ mod tests {
 
     #[test]
     fn rows_are_contiguous_and_indexed() {
-        let mut m = ProjectionMatrix::zeros(3, 2);
+        let mut m = ProjectionMatrix::<f64>::zeros(3, 2);
         m.row_mut(1).copy_from_slice(&[5.0, 6.0]);
         assert_eq!(m.row(0), &[0.0, 0.0]);
         assert_eq!(m.row(1), &[5.0, 6.0]);
@@ -94,7 +101,7 @@ mod tests {
 
     #[test]
     fn reset_reshapes_and_zeroes() {
-        let mut m = ProjectionMatrix::zeros(2, 4);
+        let mut m = ProjectionMatrix::<f64>::zeros(2, 4);
         m.row_mut(0)[0] = 9.0;
         let cap_before = m.data.capacity();
         m.reset(1, 3);
@@ -110,9 +117,19 @@ mod tests {
 
     #[test]
     fn into_rows_matches_layout() {
-        let mut m = ProjectionMatrix::zeros(2, 2);
+        let mut m = ProjectionMatrix::<f64>::zeros(2, 2);
         m.row_mut(0).copy_from_slice(&[1.0, 2.0]);
         m.row_mut(1).copy_from_slice(&[3.0, 4.0]);
         assert_eq!(m.into_rows(), vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn f32_arena_holds_single_precision_rows() {
+        let mut m = ProjectionMatrix::<f32>::zeros(2, 3);
+        m.row_mut(0).copy_from_slice(&[1.5f32, -2.0, 0.25]);
+        assert_eq!(m.row(0), &[1.5f32, -2.0, 0.25]);
+        assert_eq!(m.row(1), &[0.0f32; 3]);
+        m.reset(1, 2);
+        assert_eq!(m.row(0), &[0.0f32, 0.0]);
     }
 }

@@ -6,14 +6,26 @@
 //!   (Definition 7 / 9): `O(KNdR²)` space.
 //! * [`GaussianDense`] — the naive baseline: K dense `N(0,1)` tensors of
 //!   `d^N` entries each.
+//! * [`SparseGaussian`] — the FastLSH-style sampled family (arXiv
+//!   2309.15479): each hash reads only `m` sampled coordinates of the
+//!   flattened input, `O(K·m)` space and per-item time.
 //!
 //! All are generated deterministically from `(seed, k-index)` via
 //! [`Rng::derive`], so the native and PJRT hash paths regenerate identical
 //! parameters.
+//!
+//! The batch kernels are generic over [`Scalar`] (f32/f64): the f64
+//! instantiation is the bit-exact reference, the f32 instantiation is the
+//! SIMD-friendly fast path selected by `FamilySpec::precision`
+//! (EXPERIMENTS.md §Precision).
 
 mod matrix;
+mod scalar;
+mod sparse;
 
 pub use matrix::ProjectionMatrix;
+pub use scalar::{Precision, Scalar};
+pub use sparse::SparseGaussian;
 
 use crate::rng::{GaussianSampler, RademacherSampler, Rng, Sampler};
 use crate::tensor::{AnyTensor, CpTensor, TtTensor};
@@ -72,6 +84,29 @@ pub trait Projection: Send + Sync {
         out
     }
 
+    /// Single-precision batch projection into a flat `(batch, K)` f32 arena —
+    /// the SIMD-friendly fast path (EXPERIMENTS.md §Precision).
+    ///
+    /// The default narrows the f64 reference result once per element, so
+    /// every family is f32-callable. Families with restructured f32 kernels
+    /// ([`CpRademacher`], [`TtRademacher`], [`GaussianDense`],
+    /// [`SparseGaussian`]) override it. Implementations must be batch-size
+    /// invariant — item `b`'s row depends only on item `b` — so per-item and
+    /// batched f32 hashing land in the same buckets.
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        per_item_project_f32_into(self, xs, out);
+    }
+
+    /// Single-precision per-item projection, routed through the batch-of-one
+    /// f32 kernel so it is bit-identical to batched f32 hashing (the same
+    /// contract the f64 path keeps between `project` and the fused batch
+    /// kernels).
+    fn project_f32(&self, x: &AnyTensor) -> Vec<f32> {
+        let mut out = ProjectionMatrix::<f32>::empty();
+        self.project_batch_f32_into(std::slice::from_ref(x), &mut out);
+        out.row(0).to_vec()
+    }
+
     /// Project a batch of tensors: `out[b][k] = ⟨P_k, X_b⟩`.
     ///
     /// Nested-Vec compatibility wrapper over the flat path (one Vec per
@@ -112,6 +147,54 @@ fn per_item_project_into<P: Projection + ?Sized>(
         let z = proj.project(x);
         out.row_mut(b).copy_from_slice(&z);
     }
+}
+
+/// Per-item f32 fallback: narrows the f64 reference projection once per
+/// element. Mixed-format or foreign-shape batches take this path (the f32
+/// fast kernels need the uniform stacked layouts), keeping every input
+/// f32-hashable at reference accuracy.
+fn per_item_project_f32_into<P: Projection + ?Sized>(
+    proj: &P,
+    xs: &[AnyTensor],
+    out: &mut ProjectionMatrix<f32>,
+) {
+    out.reset(xs.len(), proj.k());
+    for (b, x) in xs.iter().enumerate() {
+        let z = proj.project(x);
+        for (o, &v) in out.row_mut(b).iter_mut().zip(&z) {
+            *o = <f32 as Scalar>::from_f64(v);
+        }
+    }
+}
+
+/// Branch-free f32 dot product with eight fixed-stride partial accumulators.
+/// Splitting the single accumulator into lanes breaks the loop-carried
+/// dependency chain, so the compiler can keep a full SIMD register of
+/// partial sums in flight instead of serializing on one add per element
+/// (EXPERIMENTS.md §Precision). The lane structure fixes the summation
+/// order, so results are deterministic and batch-size invariant; they differ
+/// from the strict left-to-right f64 reference only by the drift bound
+/// pinned in `tests/precision.rs`.
+pub(crate) fn dot_f32_chunked(a: &[f32], b: &[f32]) -> f32 {
+    const LANES: usize = 8;
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ar = &a[c * LANES..(c + 1) * LANES];
+        let br = &b[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += ar[l] * br[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..n {
+        tail += a[i] * b[i];
+    }
+    // Fixed pairwise lane combine (a balanced reduction tree).
+    let s01 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let s23 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    (s01 + s23) + tail
 }
 
 /// K CP-distributed projection tensors (Definitions 6 and 8).
@@ -215,12 +298,12 @@ impl CpRademacher {
                 for &v in &row[ki * r..(ki + 1) * r] {
                     sum += v;
                 }
-                z[ki] += sum as f64;
+                z[ki] += f64::from(sum);
             }
         }
-        let xs = x.scale as f64;
+        let xs = f64::from(x.scale);
         for (zi, t) in z.iter_mut().zip(&self.tensors) {
-            *zi *= t.scale as f64 * xs;
+            *zi *= f64::from(t.scale) * xs;
         }
         z
     }
@@ -236,7 +319,20 @@ impl CpRademacher {
     /// `i`-outer/`item`-inner loop swap keeps every per-item accumulation
     /// sequence intact), so batched codes are bit-identical to per-item
     /// codes.
-    fn project_cp_fused_batch_into(&self, xs: &[&CpTensor], out: &mut ProjectionMatrix) {
+    ///
+    /// Generic over the output [`Scalar`] `T`: the internal Gram/Hadamard
+    /// accumulation is f32 in *both* instantiations (the stacked parameters
+    /// are f32); only the reduce-and-scale epilogue runs at `T`. At `T = f64`
+    /// that epilogue is the historical bit-exact reference. `SKIP_ZEROS`
+    /// keeps the sparse-row skip branch of the reference path; the f32 fast
+    /// path instantiates it `false` so the inner axpy is branch-free and
+    /// fully vectorizable (skipping a zero row only ever adds exact `±0.0`
+    /// products, so both instantiations produce identical values).
+    fn project_cp_fused_batch_into<T: Scalar, const SKIP_ZEROS: bool>(
+        &self,
+        xs: &[&CpTensor],
+        out: &mut ProjectionMatrix<T>,
+    ) {
         let k = self.tensors.len();
         out.reset(xs.len(), k);
         let r = self.rank;
@@ -263,7 +359,7 @@ impl CpRademacher {
                     // gram[s, :] += x[i, s] * srow[:] — same contiguous axpy
                     // as the single-item kernel.
                     for (s, &xv) in xrow.iter().enumerate() {
-                        if xv == 0.0 {
+                        if SKIP_ZEROS && xv == 0.0 {
                             continue;
                         }
                         let gs = &mut g[s * kr..(s + 1) * kr];
@@ -290,12 +386,12 @@ impl CpRademacher {
                     for &v in &row[ki * r..(ki + 1) * r] {
                         sum += v;
                     }
-                    *zi += sum as f64;
+                    *zi += T::from_f32(sum);
                 }
             }
-            let xs_scale = x.scale as f64;
+            let xs_scale = f64::from(x.scale);
             for (zi, t) in z.iter_mut().zip(&self.tensors) {
-                *zi *= t.scale as f64 * xs_scale;
+                *zi *= T::from_f64(f64::from(t.scale) * xs_scale);
             }
         }
     }
@@ -359,9 +455,27 @@ impl Projection for CpRademacher {
                     _ => unreachable!("dims_match_cp admits only CP tensors"),
                 })
                 .collect();
-            self.project_cp_fused_batch_into(&cps, out);
+            self.project_cp_fused_batch_into::<f64, true>(&cps, out);
         } else {
             per_item_project_into(self, xs, out);
+        }
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        // The f32 fast path fuses every uniform CP batch — including
+        // batch-of-one, so per-item f32 hashing (`project_f32`) is
+        // bit-identical to batched f32 hashing by construction.
+        if !xs.is_empty() && xs.iter().all(|x| self.dims_match_cp(x)) {
+            let cps: Vec<&CpTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Cp(xc) => xc,
+                    _ => unreachable!("dims_match_cp admits only CP tensors"),
+                })
+                .collect();
+            self.project_cp_fused_batch_into::<f32, false>(&cps, out);
+        } else {
+            per_item_project_f32_into(self, xs, out);
         }
     }
 
@@ -513,10 +627,10 @@ impl TtRademacher {
             rb = nb;
         }
         debug_assert_eq!(ra * rb, 1);
-        let xs = x.scale as f64;
+        let xs = f64::from(x.scale);
         m.iter()
             .zip(&self.tensors)
-            .map(|(&v, t)| v as f64 * t.scale as f64 * xs)
+            .map(|(&v, t)| f64::from(v) * f64::from(t.scale) * xs)
             .collect()
     }
 
@@ -531,7 +645,18 @@ impl TtRademacher {
     /// per-item transfer state `m_b` is private to its item; the stacked
     /// buffer holds the same f32 values as the per-tensor cores), so batched
     /// codes are bit-identical to per-item codes.
-    fn project_tt_fused_batch_into(&self, xs: &[&TtTensor], out: &mut ProjectionMatrix) {
+    ///
+    /// Generic over the output [`Scalar`] `T`: the whole transfer sweep
+    /// accumulates in f32 in both instantiations (the innermost loops — the
+    /// contiguous bond-row axpys — are already branch-free); only the final
+    /// scale-and-write epilogue runs at `T`. The f64 instantiation is the
+    /// historical bit-exact reference; the f32 instantiation computes the
+    /// epilogue product in f64 and narrows exactly once per output.
+    fn project_tt_fused_batch_into<T: Scalar>(
+        &self,
+        xs: &[&TtTensor],
+        out: &mut ProjectionMatrix<T>,
+    ) {
         let k = self.tensors.len();
         out.reset(xs.len(), k);
         if xs.is_empty() || k == 0 {
@@ -612,10 +737,10 @@ impl TtRademacher {
         // Boundary ranks close to 1×1: ms[bi] holds the K scalars.
         for (bi, x) in xs.iter().enumerate() {
             debug_assert_eq!(ms[bi].len(), k);
-            let xs_scale = x.scale as f64;
+            let xs_scale = f64::from(x.scale);
             let zrow = out.row_mut(bi);
             for ((zi, &v), t) in zrow.iter_mut().zip(&ms[bi]).zip(&self.tensors) {
-                *zi = v as f64 * t.scale as f64 * xs_scale;
+                *zi = T::from_f64(f64::from(v) * f64::from(t.scale) * xs_scale);
             }
         }
     }
@@ -687,7 +812,7 @@ impl Projection for TtRademacher {
                     _ => unreachable!("dims_match_tt admits only TT tensors"),
                 })
                 .collect();
-            self.project_tt_fused_batch_into(&tts, out);
+            self.project_tt_fused_batch_into::<f64>(&tts, out);
         } else if xs.len() > 1 && xs.iter().all(|x| self.dims_match_cp(x)) {
             let tts: Vec<TtTensor> = xs
                 .iter()
@@ -697,9 +822,37 @@ impl Projection for TtRademacher {
                 })
                 .collect();
             let refs: Vec<&TtTensor> = tts.iter().collect();
-            self.project_tt_fused_batch_into(&refs, out);
+            self.project_tt_fused_batch_into::<f64>(&refs, out);
         } else {
             per_item_project_into(self, xs, out);
+        }
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        // Same dispatch as the f64 path, but every uniform batch — including
+        // batch-of-one — takes the fused sweep, so per-item f32 hashing is
+        // bit-identical to batched f32 hashing by construction.
+        if !xs.is_empty() && xs.iter().all(|x| self.dims_match_tt(x)) {
+            let tts: Vec<&TtTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Tt(xt) => xt,
+                    _ => unreachable!("dims_match_tt admits only TT tensors"),
+                })
+                .collect();
+            self.project_tt_fused_batch_into::<f32>(&tts, out);
+        } else if !xs.is_empty() && xs.iter().all(|x| self.dims_match_cp(x)) {
+            let tts: Vec<TtTensor> = xs
+                .iter()
+                .map(|x| match x {
+                    AnyTensor::Cp(xc) => xc.to_tt(),
+                    _ => unreachable!("dims_match_cp admits only CP tensors"),
+                })
+                .collect();
+            let refs: Vec<&TtTensor> = tts.iter().collect();
+            self.project_tt_fused_batch_into::<f32>(&refs, out);
+        } else {
+            per_item_project_f32_into(self, xs, out);
         }
     }
 
@@ -751,7 +904,7 @@ impl Projection for GaussianDense {
             .map(|row| {
                 let mut acc = 0.0f64;
                 for (a, b) in row.iter().zip(&dense.data) {
-                    acc += *a as f64 * *b as f64;
+                    acc += f64::from(*a) * f64::from(*b);
                 }
                 acc
             })
@@ -767,9 +920,23 @@ impl Projection for GaussianDense {
             for (zi, row) in out.row_mut(b).iter_mut().zip(&self.rows) {
                 let mut acc = 0.0f64;
                 for (a, v) in row.iter().zip(&dense.data) {
-                    acc += *a as f64 * *v as f64;
+                    acc += f64::from(*a) * f64::from(*v);
                 }
                 *zi = acc;
+            }
+        }
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        // The f32 fast path: the reference loop widens every element to f64
+        // and serializes on one accumulator; this one runs the chunked
+        // branch-free f32 dot over the flattened input. Per-item independent,
+        // so batch-of-one equals batched hashing bit for bit.
+        out.reset(xs.len(), self.rows.len());
+        for (b, x) in xs.iter().enumerate() {
+            let dense = x.materialize();
+            for (zi, row) in out.row_mut(b).iter_mut().zip(&self.rows) {
+                *zi = dot_f32_chunked(row, &dense.data);
             }
         }
     }
@@ -807,7 +974,7 @@ mod tests {
         let tt = TtRademacher::generate(1, &dims, r, k, Distribution::Rademacher);
         assert_eq!(tt.param_count(), k * (d * r + r * d * r + r * d)); // O(KNdR²)
         let nv = GaussianDense::generate(1, &dims, k);
-        assert_eq!(nv.param_count(), k * d.pow(n as u32)); // O(K d^N)
+        assert_eq!(nv.param_count(), k * d.pow(u32::try_from(n).unwrap())); // O(K d^N)
         assert!(cp.param_count() < nv.param_count());
         assert!(tt.param_count() < nv.param_count());
     }
@@ -937,6 +1104,78 @@ mod tests {
         let z = proj.project(&AnyTensor::Cp(x));
         let var = stats::variance(&z);
         assert_close(var, norm2, 0.1, 0.0); // 10% statistical tolerance
+    }
+
+    #[test]
+    fn f32_fast_path_is_batch_invariant_and_tracks_f64() {
+        let mut rng = Rng::new(97);
+        let dims = [6usize, 5, 4];
+        let batch: Vec<AnyTensor> = (0..7)
+            .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+            .collect();
+        for proj in [
+            Box::new(CpRademacher::generate(3, &dims, 3, 8, Distribution::Rademacher))
+                as Box<dyn Projection>,
+            Box::new(TtRademacher::generate(3, &dims, 3, 8, Distribution::Rademacher)),
+            Box::new(GaussianDense::generate(3, &dims, 8)),
+            Box::new(SparseGaussian::generate(3, &dims, 20, 8)),
+        ] {
+            let mut z32 = ProjectionMatrix::<f32>::empty();
+            proj.project_batch_f32_into(&batch, &mut z32);
+            assert_eq!(z32.batch(), batch.len());
+            for (b, x) in batch.iter().enumerate() {
+                // Batch-of-one f32 hashing is bit-identical to batched f32.
+                assert_eq!(
+                    proj.project_f32(x).as_slice(),
+                    z32.row(b),
+                    "{} f32 batch invariance",
+                    proj.name()
+                );
+                // And the f32 row tracks the f64 reference within drift.
+                for (&v32, &v64) in z32.row(b).iter().zip(&proj.project(x)) {
+                    let scale = v64.abs().max(1.0);
+                    assert!(
+                        (f64::from(v32) - v64).abs() <= 1e-3 * scale,
+                        "{}: f32 {v32} vs f64 {v64}",
+                        proj.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_default_fallback_narrows_the_reference_on_mixed_batches() {
+        let mut rng = Rng::new(98);
+        let dims = [5usize, 4, 3];
+        let xc = CpTensor::random_gaussian(&mut rng, &dims, 2);
+        let mixed = vec![AnyTensor::Cp(xc.clone()), AnyTensor::Dense(xc.materialize())];
+        let proj = CpRademacher::generate(5, &dims, 3, 6, Distribution::Rademacher);
+        let mut z32 = ProjectionMatrix::<f32>::empty();
+        proj.project_batch_f32_into(&mixed, &mut z32);
+        for (b, x) in mixed.iter().enumerate() {
+            for (&v32, &v64) in z32.row(b).iter().zip(&proj.project(x)) {
+                assert_eq!(v32, <f32 as Scalar>::from_f64(v64), "narrowed reference");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_dot_matches_reference_within_drift() {
+        let mut rng = Rng::new(99);
+        for n in [0usize, 1, 7, 8, 9, 64, 1000] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal_f32(&mut a);
+            rng.fill_normal_f32(&mut b);
+            let reference: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| f64::from(x) * f64::from(y)).sum();
+            let fast = f64::from(dot_f32_chunked(&a, &b));
+            assert!(
+                (fast - reference).abs() <= 1e-4 * reference.abs().max(1.0),
+                "n={n}: {fast} vs {reference}"
+            );
+        }
     }
 
     #[test]

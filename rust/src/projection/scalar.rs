@@ -1,0 +1,178 @@
+//! Precision-generic scalar abstraction for the flat hash path
+//! (EXPERIMENTS.md §Precision).
+//!
+//! The batched projection kernels are generic over [`Scalar`] so the same
+//! stacked CP/TT code drives both an f64 *reference* path (bit-exact with the
+//! historical scalar kernels) and an f32 *fast* path whose inner loops the
+//! compiler can autovectorize twice as wide. The trait is deliberately tiny:
+//! arithmetic the kernels need, plus explicit, named conversions so every
+//! narrowing point in the crate's hot path is this one `from_f64` — there are
+//! no ad-hoc `as f32` casts sprinkled through the kernels.
+//!
+//! The companion [`Precision`] enum is the spec-level selector
+//! (`FamilySpec::precision`); `F64` is the default and keeps every historical
+//! byte identical, `F32` opts a family into the fast path.
+
+use core::fmt::Debug;
+use core::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub};
+
+use crate::error::{Error, Result};
+
+/// Element type of the flat hash path: `f64` (reference) or `f32` (fast).
+///
+/// Conversions are explicit and documented rather than `as` casts:
+/// `from_f32`/`to_f64` are exact widenings for both impls; `from_f64` is the
+/// single sanctioned narrowing point (round-to-nearest for `f32`).
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialOrd
+    + Debug
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + AddAssign
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + MulAssign
+    + Neg<Output = Self>
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Exact widening (or identity) from an f32 parameter value. Projection
+    /// parameters are stored f32, so this is lossless for both precisions.
+    fn from_f32(v: f32) -> Self;
+    /// Conversion from f64. Identity for `f64`; round-to-nearest for `f32`.
+    /// This is the one sanctioned narrowing in the hash path — callers that
+    /// reach it accept the f32 drift bound pinned in `tests/precision.rs`.
+    fn from_f64(v: f64) -> Self;
+    /// Exact widening (or identity) to f64.
+    fn to_f64(self) -> f64;
+    /// `"f32"` or `"f64"` — for labels and diagnostics.
+    fn name() -> &'static str;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        f64::from(v)
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn name() -> &'static str {
+        "f64"
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+    // The single sanctioned f64 -> f32 narrowing of the hash path: inputs and
+    // per-hash offsets are rounded to nearest once on entry, never inside a
+    // kernel loop. Drift is bounded by tests/precision.rs.
+    #[allow(clippy::cast_possible_truncation)]
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        f64::from(self)
+    }
+    fn name() -> &'static str {
+        "f32"
+    }
+}
+
+/// Spec-level precision selector for a hash family's flat batch path.
+///
+/// `F64` (the default) is the bit-exact reference: every signature it emits
+/// is byte-identical to the historical scalar kernels. `F32` runs the same
+/// generic kernels at single precision — roughly twice the SIMD lanes per
+/// instruction — and is validated against the reference within the drift
+/// bounds pinned in `tests/precision.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Double precision: the bit-exact reference path.
+    #[default]
+    F64,
+    /// Single precision: the SIMD-friendly fast path.
+    F32,
+}
+
+impl Precision {
+    /// Canonical lowercase name (`"f64"` / `"f32"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse a precision name as it appears in specs and CLI flags.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" | "double" => Ok(Precision::F64),
+            "f32" | "single" => Ok(Precision::F32),
+            other => Err(Error::InvalidParameter(format!(
+                "unknown precision '{other}' (expected f64 or f32)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip_exactly_for_f32_values() {
+        let vals = [0.0f32, 1.0, -2.5, 1e-20, 3.4e38];
+        for v in vals {
+            assert_eq!(<f64 as Scalar>::from_f32(v), f64::from(v));
+            assert_eq!(<f32 as Scalar>::from_f32(v), v);
+            assert_eq!(<f32 as Scalar>::from_f64(f64::from(v)), v);
+        }
+    }
+
+    #[test]
+    fn from_f64_rounds_to_nearest_for_f32() {
+        let v = 0.1f64; // not representable in f32
+        assert_eq!(<f32 as Scalar>::from_f64(v), 0.1f32);
+        assert_ne!(f64::from(<f32 as Scalar>::from_f64(v)), v);
+        assert_eq!(<f64 as Scalar>::from_f64(v), v);
+    }
+
+    #[test]
+    fn precision_parse_and_name() {
+        assert_eq!(Precision::parse("f64").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("F32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("double").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("single").unwrap(), Precision::F32);
+        assert!(Precision::parse("f16").is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::F64.name(), "f64");
+    }
+
+    #[test]
+    fn scalar_names() {
+        assert_eq!(<f64 as Scalar>::name(), "f64");
+        assert_eq!(<f32 as Scalar>::name(), "f32");
+    }
+}

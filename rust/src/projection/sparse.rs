@@ -1,0 +1,297 @@
+//! Sparse structured projection family (FastLSH-style, arXiv 2309.15479).
+//!
+//! Each of the K hashes reads only `m` sampled coordinates of the flattened
+//! `D = ∏dims` input instead of all D: hash `k` owns a sorted set of `m`
+//! distinct coordinate indices and `m` iid `N(0,1)` weights, and computes
+//!
+//! ```text
+//! z_k = √(D/m) · Σ_j  w_{k,j} · x[idx_{k,j}]
+//! ```
+//!
+//! The `√(D/m)` scale keeps `E[z_k²] ≈ ‖x‖²_F` (the coordinate sample hits
+//! an `m/D` fraction of the squared mass in expectation), so the standard
+//! E2LSH/SRP collision laws hold approximately and the family slots into the
+//! existing hasher machinery unchanged — at `O(m)` instead of `O(D)` flops
+//! per hash. See EXPERIMENTS.md §Families for the collision-law validation
+//! and FLOP accounting.
+//!
+//! Storage is one flat SoA pair — `(K, m)` indices and `(K, m)` weights — so
+//! the per-hash gather streams two contiguous rows; indices are sorted
+//! ascending for cache-friendly access into the flattened input.
+
+use super::{per_item_project_f32_into, per_item_project_into, Projection, ProjectionMatrix};
+use crate::rng::Rng;
+use crate::tensor::AnyTensor;
+
+/// K sparse sampled-coordinate Gaussian projections over `dims`
+/// (the `FamilyKind::Sparse` fast path).
+#[derive(Clone, Debug)]
+pub struct SparseGaussian {
+    pub dims: Vec<usize>,
+    pub seed: u64,
+    /// Samples per hash (`m`), clamped to `D = ∏dims` at generation.
+    pub m: usize,
+    /// Flat `(K, m)` sampled coordinate indices, each row sorted ascending.
+    idx: Vec<u32>,
+    /// Flat `(K, m)` `N(0,1)` weights, paired with `idx`.
+    wts: Vec<f32>,
+    /// `√(D/m)` — restores `E[z²] ≈ ‖x‖²` after subsampling.
+    scale: f64,
+}
+
+impl SparseGaussian {
+    /// Generate K sparse projections of `m` samples each over `dims` from
+    /// `seed`. Each hash's coordinate set and weights depend only on
+    /// `(seed, k-index)`, like the dense families.
+    pub fn generate(seed: u64, dims: &[usize], m: usize, k: usize) -> Self {
+        let d: usize = dims.iter().product();
+        let d32 = u32::try_from(d).expect("flattened dimension D must fit in u32");
+        let m = m.clamp(1, d.max(1));
+        let mut idx = Vec::with_capacity(k * m);
+        let mut wts = vec![0.0f32; k * m];
+        let mut pool: Vec<u32> = Vec::with_capacity(d);
+        for ki in 0..k {
+            let mut rng = Rng::derive(seed, &[0xFA, ki as u64]);
+            // Partial Fisher–Yates over a fresh 0..D pool: the first m slots
+            // end up a uniform m-subset without replacement.
+            pool.clear();
+            pool.extend(0..d32);
+            for j in 0..m {
+                let swap_with = j + rng.below(d - j);
+                pool.swap(j, swap_with);
+            }
+            let row_start = idx.len();
+            idx.extend_from_slice(&pool[..m]);
+            idx[row_start..].sort_unstable();
+            rng.fill_normal_f32(&mut wts[ki * m..(ki + 1) * m]);
+        }
+        let scale = (d as f64 / m as f64).sqrt();
+        SparseGaussian { dims: dims.to_vec(), seed, m, idx, wts, scale }
+    }
+
+    /// The sorted coordinate row of hash `ki`.
+    pub fn indices(&self, ki: usize) -> &[u32] {
+        &self.idx[ki * self.m..(ki + 1) * self.m]
+    }
+
+    /// The weight row of hash `ki`.
+    pub fn weights(&self, ki: usize) -> &[f32] {
+        &self.wts[ki * self.m..(ki + 1) * self.m]
+    }
+
+    /// The `√(D/m)` variance-restoring scale.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Banding slice (see [`super::CpRademacher::band`]): the `band`-th
+    /// contiguous run of `band_k` hashes, hashing identically to codes
+    /// `[band·band_k, (band+1)·band_k)` of the full bank.
+    pub fn band(&self, band: usize, band_k: usize) -> SparseGaussian {
+        let k = self.k();
+        let lo = (band * band_k).min(k);
+        let hi = (lo + band_k).min(k);
+        SparseGaussian {
+            dims: self.dims.clone(),
+            seed: self.seed,
+            m: self.m,
+            idx: self.idx[lo * self.m..hi * self.m].to_vec(),
+            wts: self.wts[lo * self.m..hi * self.m].to_vec(),
+            scale: self.scale,
+        }
+    }
+
+    /// f64 reference gather dot: strict left-to-right accumulation, every
+    /// element widened — the bit-exact analogue of [`super::GaussianDense`]'s
+    /// reference loop.
+    fn gather_dot_f64(&self, ki: usize, data: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for (&i, &w) in self.indices(ki).iter().zip(self.weights(ki)) {
+            acc += f64::from(w) * f64::from(data[i as usize]);
+        }
+        acc * self.scale
+    }
+
+    /// f32 fast gather dot: four fixed-stride partial accumulators so the
+    /// loads and FMAs pipeline instead of serializing on one accumulator
+    /// (the gather twin of [`super::dot_f32_chunked`]). Deterministic
+    /// summation order; drift vs. the f64 reference is bounded by
+    /// `tests/precision.rs`.
+    fn gather_dot_f32(&self, ki: usize, data: &[f32]) -> f32 {
+        const LANES: usize = 4;
+        let idx = self.indices(ki);
+        let wts = self.weights(ki);
+        let chunks = idx.len() / LANES;
+        let mut acc = [0.0f32; LANES];
+        for c in 0..chunks {
+            for l in 0..LANES {
+                let j = c * LANES + l;
+                acc[l] += wts[j] * data[idx[j] as usize];
+            }
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..idx.len() {
+            tail += wts[j] * data[idx[j] as usize];
+        }
+        let lanes = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        (lanes + tail) * <f32 as super::Scalar>::from_f64(self.scale)
+    }
+}
+
+impl Projection for SparseGaussian {
+    fn k(&self) -> usize {
+        if self.m == 0 {
+            0
+        } else {
+            self.idx.len() / self.m
+        }
+    }
+
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        // Same contract as the naive family: reshape to the flat d^N vector,
+        // then gather the m sampled coordinates per hash.
+        let dense = x.materialize();
+        (0..self.k()).map(|ki| self.gather_dot_f64(ki, &dense.data)).collect()
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix) {
+        // Per-item independent gathers: identical arithmetic to `project`,
+        // written straight into the flat rows.
+        if xs.iter().all(|x| x.dims() == self.dims) {
+            out.reset(xs.len(), self.k());
+            for (b, x) in xs.iter().enumerate() {
+                let dense = x.materialize();
+                for (ki, zi) in out.row_mut(b).iter_mut().enumerate() {
+                    *zi = self.gather_dot_f64(ki, &dense.data);
+                }
+            }
+        } else {
+            per_item_project_into(self, xs, out);
+        }
+    }
+
+    fn project_batch_f32_into(&self, xs: &[AnyTensor], out: &mut ProjectionMatrix<f32>) {
+        if xs.iter().all(|x| x.dims() == self.dims) {
+            out.reset(xs.len(), self.k());
+            for (b, x) in xs.iter().enumerate() {
+                let dense = x.materialize();
+                for (ki, zi) in out.row_mut(b).iter_mut().enumerate() {
+                    *zi = self.gather_dot_f32(ki, &dense.data);
+                }
+            }
+        } else {
+            per_item_project_f32_into(self, xs, out);
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        // Stored parameters: the (K, m) weights. The (K, m) u32 coordinate
+        // indices are structural and counted alongside in §Families' space
+        // accounting.
+        self.wts.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+    use crate::tensor::CpTensor;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn generation_is_deterministic_and_rows_are_distinct_sorted_subsets() {
+        let dims = [6usize, 5, 4];
+        let a = SparseGaussian::generate(7, &dims, 16, 8);
+        let b = SparseGaussian::generate(7, &dims, 16, 8);
+        assert_eq!(a.indices(3), b.indices(3));
+        assert_eq!(a.weights(5), b.weights(5));
+        let c = SparseGaussian::generate(8, &dims, 16, 8);
+        assert_ne!(a.indices(0), c.indices(0));
+        let d: usize = dims.iter().product();
+        for ki in 0..8 {
+            let row = a.indices(ki);
+            assert_eq!(row.len(), 16);
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "indices sorted and distinct");
+            }
+            assert!((row[row.len() - 1] as usize) < d);
+        }
+        // Different hashes sample different subsets (overwhelmingly likely).
+        assert_ne!(a.indices(0), a.indices(1));
+    }
+
+    #[test]
+    fn m_clamps_to_full_dimension_and_param_count_is_km() {
+        let dims = [3usize, 3];
+        let p = SparseGaussian::generate(1, &dims, 500, 4);
+        assert_eq!(p.m, 9);
+        assert_eq!(p.k(), 4);
+        assert_eq!(p.param_count(), 4 * 9);
+        assert_close(p.scale(), 1.0, 1e-12, 1e-12);
+        // Full sampling visits every coordinate exactly once.
+        let row: Vec<u32> = p.indices(0).to_vec();
+        assert_eq!(row, (0..9).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn projection_variance_is_approximately_norm_squared() {
+        // The FastLSH analogue of Theorem 3: E[z²] ≈ ‖X‖²_F under coordinate
+        // sampling with the √(D/m) scale.
+        let mut rng = Rng::new(41);
+        let dims = [6usize, 6, 6];
+        let x = CpTensor::random_gaussian(&mut rng, &dims, 3);
+        let norm2 = x.frob_norm().powi(2);
+        let proj = SparseGaussian::generate(17, &dims, 54, 4000);
+        let z = proj.project(&AnyTensor::Cp(x));
+        assert_close(stats::variance(&z), norm2, 0.2, 0.0); // statistical tol
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_per_item_and_band_slices_the_bank() {
+        let mut rng = Rng::new(42);
+        let dims = [5usize, 4, 3];
+        let proj = SparseGaussian::generate(9, &dims, 12, 12);
+        let batch: Vec<AnyTensor> = (0..5)
+            .map(|i| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 1 + i % 3)))
+            .collect();
+        let zb = proj.project_batch(&batch);
+        for (x, zrow) in batch.iter().zip(&zb) {
+            assert_eq!(&proj.project(x), zrow);
+        }
+        let band = proj.band(1, 4);
+        assert_eq!(band.k(), 4);
+        for x in &batch {
+            let full = proj.project(x);
+            assert_eq!(band.project(x).as_slice(), &full[4..8]);
+        }
+    }
+
+    #[test]
+    fn f32_path_tracks_the_f64_reference() {
+        let mut rng = Rng::new(43);
+        let dims = [6usize, 5, 4];
+        let proj = SparseGaussian::generate(11, &dims, 24, 10);
+        let batch: Vec<AnyTensor> = (0..4)
+            .map(|_| AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &dims, 2)))
+            .collect();
+        let mut z32 = ProjectionMatrix::<f32>::empty();
+        proj.project_batch_f32_into(&batch, &mut z32);
+        for (b, x) in batch.iter().enumerate() {
+            let z64 = proj.project(x);
+            // Per-item f32 equals batched f32 bit for bit.
+            assert_eq!(proj.project_f32(x).as_slice(), z32.row(b));
+            for (&v32, &v64) in z32.row(b).iter().zip(&z64) {
+                let scale = v64.abs().max(1.0);
+                assert!(
+                    (f64::from(v32) - v64).abs() <= 1e-4 * scale,
+                    "f32 drift too large: {v32} vs {v64}"
+                );
+            }
+        }
+    }
+}

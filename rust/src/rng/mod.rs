@@ -8,6 +8,9 @@
 //! regenerate the same projection tensor on every node, and in both the
 //! native and the AOT/PJRT hash paths).
 
+// Not the precision-audited hash path: bit-twiddling narrows intentionally (xoshiro mixing).
+#![allow(clippy::cast_possible_truncation)]
+
 mod sampler;
 
 pub use sampler::{GaussianSampler, RademacherSampler, Sampler};

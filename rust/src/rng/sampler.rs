@@ -5,6 +5,9 @@
 //! and notes the Gaussian variants; both yield the same asymptotic law, and
 //! the benches ablate them.
 
+// Not the precision-audited hash path: bit-twiddling narrows intentionally (sampler mixing).
+#![allow(clippy::cast_possible_truncation)]
+
 use super::Rng;
 
 /// A scalar distribution sampler that fills f32 buffers.

@@ -1,5 +1,8 @@
 //! PJRT execution engine: compile-once, execute-per-batch.
 
+// Not the precision-audited hash path: PJRT buffer sizes are checked against the manifest.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::manifest::Manifest;
 use crate::error::{Error, Result};
 use crate::projection::{CpRademacher, TtRademacher};

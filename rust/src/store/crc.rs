@@ -2,6 +2,9 @@
 //! crate stays zero-dependency. Every segment section and WAL record is
 //! checksummed with this; a mismatch surfaces as [`crate::Error::Corrupt`].
 
+// Not the precision-audited hash path: CRC folding narrows intentionally.
+#![allow(clippy::cast_possible_truncation)]
+
 /// 256-entry lookup table, generated at compile time.
 const TABLE: [u32; 256] = build_table();
 

@@ -20,6 +20,9 @@
 //! story; bumping [`FORMAT_VERSION`] is reserved for changes an old reader
 //! cannot safely ignore.
 
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::crc::{crc32, Crc32};
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;

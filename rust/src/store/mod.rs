@@ -47,6 +47,9 @@
 //! # Ok::<(), tensor_lsh::Error>(())
 //! ```
 
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
 pub mod crc;
 pub mod format;
 pub mod segment;

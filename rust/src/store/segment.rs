@@ -16,6 +16,9 @@
 //! disagreement as [`Error::Corrupt`] — a segment either reconstructs the
 //! exact index or refuses to load.
 
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::format::{self, tag, Reader, SegmentFileWriter, WriteLe};
 use super::tensors::{decode_tensor, encode_tensor};
 use crate::error::{Error, Result};

@@ -10,6 +10,9 @@
 //! tt:    2u8 ‖ u32 cores ‖ f32 scale ‖ (u32 r0 ‖ u32 d ‖ u32 r1 ‖ f32 × r0·d·r1) × cores
 //! ```
 
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::format::{Reader, WriteLe};
 use crate::error::{Error, Result};
 use crate::tensor::{AnyTensor, CpTensor, DenseTensor, Factor, TtCore, TtTensor};

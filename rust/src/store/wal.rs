@@ -20,6 +20,9 @@
 //! **corruption** and fails the whole open with [`Error::Corrupt`] —
 //! damaged history must never silently shrink the index.
 
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::crc::Crc32;
 use super::format::{Reader, WriteLe, FORMAT_VERSION, WAL_MAGIC};
 use super::tensors::{decode_tensor, encode_tensor};

@@ -1,6 +1,9 @@
 //! CP/PARAFAC format tensor (Definition 4) and CP-Rademacher generation
 //! (Definition 6).
 
+// Not the precision-audited hash path: tensor values are stored f32 by design (see README §Layout).
+#![allow(clippy::cast_possible_truncation)]
+
 use super::dense::DenseTensor;
 use super::tt::{TtCore, TtTensor};
 use crate::error::{Error, Result};

@@ -1,5 +1,8 @@
 //! Dense row-major N-dimensional tensor.
 
+// Not the precision-audited hash path: tensor values are stored f32 by design (see README §Layout).
+#![allow(clippy::cast_possible_truncation)]
+
 use super::{numel, strides};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;

@@ -1,6 +1,9 @@
 //! Tensor-train format tensor (Definition 5) and TT-Rademacher generation
 //! (Definition 7).
 
+// Not the precision-audited hash path: tensor values are stored f32 by design (see README §Layout).
+#![allow(clippy::cast_possible_truncation)]
+
 use super::dense::DenseTensor;
 use crate::error::{Error, Result};
 use crate::rng::{Rng, Sampler};

@@ -3,6 +3,9 @@
 //! Supports the full JSON grammar minus exotic number forms; used to read
 //! `artifacts/manifest.json` and to emit experiment reports.
 
+// Not the precision-audited hash path: JSON integer parsing is fract()-guarded.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

@@ -2,6 +2,9 @@
 //! bench binaries use this instead: warmup + adaptive iteration count +
 //! robust statistics).
 
+// Not the precision-audited hash path: nanosecond counters fit the cast range for any real run.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::time::Instant;
 
 /// Result of a timed measurement.

@@ -1,5 +1,8 @@
 //! Synthetic corpora shaped like the paper's §1 motivating applications.
 
+// Not the precision-audited hash path: synthetic workload values are small and bounded.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::rng::Rng;
 use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
 

@@ -7,6 +7,9 @@
 //! is exact because both constructions are linear combinations of CP tensors
 //! (`CpTensor::add_scaled` concatenates rank terms).
 
+// Not the precision-audited hash path: synthetic workload values are small and bounded.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::rng::Rng;
 use crate::tensor::{AnyTensor, CpTensor, DenseTensor};
 

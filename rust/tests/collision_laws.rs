@@ -7,8 +7,10 @@ use tensor_lsh::bench_harness::{
 use tensor_lsh::lsh::{validity_report, FamilyKind, FamilySpec};
 use tensor_lsh::lsh::HashFamily;
 use tensor_lsh::rng::Rng;
-use tensor_lsh::stats::{ks_statistic_normal, srp_collision_prob, wilson_interval};
-use tensor_lsh::workload::{pair_at_cosine, PairFormat};
+use tensor_lsh::stats::{
+    e2lsh_collision_prob, ks_statistic_normal, srp_collision_prob, wilson_interval,
+};
+use tensor_lsh::workload::{pair_at_cosine, pair_at_distance, PairFormat};
 
 /// Theorem 4 / 6: measured collision curves track the analytic E2LSH law.
 #[test]
@@ -98,6 +100,56 @@ fn bank_collisions_binomial() {
         (lo - 0.02..=hi + 0.02).contains(&expect),
         "analytic {expect:.4} outside CI [{lo:.4}, {hi:.4}]"
     );
+}
+
+/// The sparse sampled-coordinate family (FastLSH-style, arXiv 2309.15479)
+/// satisfies the same collision laws as its dense counterparts,
+/// approximately: the √(D/m) scale restores E[z²] = ‖x‖², so each hash
+/// behaves like a dense Gaussian projection up to per-hash sampling noise
+/// that averages out across K independent hashes.
+#[test]
+fn sparse_family_collision_laws_hold() {
+    let dims = vec![10usize, 10, 10];
+    let k = 4000;
+    let m = 250; // D/4 of the flattened D = 1000
+
+    // SRP: collision rate tracks 1 − θ/π at cosine 0.7.
+    let srp = FamilySpec::srp(FamilyKind::Sparse, dims.clone(), 1, k)
+        .with_sample(m)
+        .build(60)
+        .unwrap();
+    let mut rng = Rng::new(61);
+    let cos = 0.7;
+    let (x, y) = pair_at_cosine(&mut rng, &dims, cos, PairFormat::Cp(2));
+    let (hx, hy) = (srp.hash(&x), srp.hash(&y));
+    let hits = hx.iter().zip(&hy).filter(|(a, b)| a == b).count();
+    let (lo, hi) = wilson_interval(hits, k, 2.58); // 99% CI
+    let expect = srp_collision_prob(cos);
+    assert!(
+        (lo - 0.05..=hi + 0.05).contains(&expect),
+        "sparse-SRP: analytic {expect:.4} outside CI [{lo:.4}, {hi:.4}]"
+    );
+
+    // E2LSH: collision rate tracks the analytic law at distance 1, w = 4
+    // (the sparse projection is linear, so z(x) − z(y) = z(x − y)).
+    let e2 = FamilySpec::e2lsh(FamilyKind::Sparse, dims.clone(), 1, k, 4.0)
+        .with_sample(m)
+        .build(62)
+        .unwrap();
+    let (x, y) = pair_at_distance(&mut rng, &dims, 1.0, PairFormat::Cp(2));
+    let (hx, hy) = (e2.hash(&x), e2.hash(&y));
+    let hits = hx.iter().zip(&hy).filter(|(a, b)| a == b).count();
+    let (lo, hi) = wilson_interval(hits, k, 2.58);
+    let expect = e2lsh_collision_prob(1.0, 4.0);
+    assert!(
+        (lo - 0.05..=hi + 0.05).contains(&expect),
+        "sparse-E2LSH: analytic {expect:.4} outside CI [{lo:.4}, {hi:.4}]"
+    );
+
+    // FLOP accounting: m of D coordinates per hash means a 4× smaller
+    // parameter (and per-hash work) footprint than the dense baseline.
+    let dense = FamilySpec::srp(FamilyKind::Naive, dims, 1, k).build(63).unwrap();
+    assert_eq!(srp.param_count() * 4, dense.param_count());
 }
 
 /// Gaussian-entry variants (CP_N / TT_N) also satisfy the normality law —

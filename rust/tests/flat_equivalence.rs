@@ -5,6 +5,9 @@
 //! * `CodeMatrix`-based insert/query returns exactly the same candidates as
 //!   the legacy per-item path on a seeded corpus.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use tensor_lsh::bench_harness::index_config;
 use tensor_lsh::config::Family;

@@ -1,6 +1,9 @@
 //! Cross-module integration tests: corpus → decomposition → hash families →
 //! index → coordinator, all through the public API.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use tensor_lsh::bench_harness::{index_config, index_config_family};
 use tensor_lsh::config::{AppConfig, Family};

@@ -4,6 +4,9 @@
 //! concurrent clients, and through a graceful drain that checkpoints the
 //! durable store.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};

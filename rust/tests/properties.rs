@@ -1,6 +1,9 @@
 //! Property-based tests over the library's core invariants (seeded random
 //! inputs via `testutil::proptest`; failing seeds are reported for replay).
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use tensor_lsh::bench_harness::index_config_family;
 use tensor_lsh::config::Family;
 use tensor_lsh::index::{signature, Metric};

@@ -2,6 +2,9 @@
 //! exactly what the single-shard per-item reference path returns, across
 //! families, metrics, shard counts, and the coordinator pipeline.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use tensor_lsh::bench_harness::index_config;
 use tensor_lsh::config::Family;

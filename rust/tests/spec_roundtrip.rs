@@ -2,6 +2,9 @@
 //! declarative builder path constructs bit-identical indexes to the legacy
 //! hand-rolled `family_builder` closures it replaced.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::Arc;
 use tensor_lsh::index::{CodeMatrix, IndexConfig, LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{

@@ -12,6 +12,9 @@
 //!   exactly that prefix. Truncation always recovers the longest whole
 //!   prefix.
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 use tensor_lsh::index::{LshIndex, ShardedLshIndex};

@@ -12,6 +12,9 @@
 //! * `Store::open` = newest snapshot + WAL replay reproduces exactly the
 //!   index that was live before the "crash".
 
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 use tensor_lsh::index::{CodeMatrix, LshIndex, Metric, ShardedLshIndex};
