@@ -10,7 +10,10 @@
 //!   reshaped dense vector (the same comparison the paper makes for the
 //!   projection parameters: low-rank formats are the whole point);
 //! * a save → load → WAL-replay round-trip smoke (top-1 self-queries must
-//!   survive recovery) so the bench doubles as an end-to-end check.
+//!   survive recovery) so the bench doubles as an end-to-end check;
+//! * a **churn** phase (delete half the corpus durably, compact, query):
+//!   durable deletes/sec, the dead fraction at compaction time, and the
+//!   compaction pass's reclaim throughput in MB/s.
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI does).
 //!
@@ -155,6 +158,55 @@ fn main() {
         fmt_bytes(naive_bytes as usize)
     );
 
+    // -- churn: delete half, compact, query ----------------------------------
+    // The mutability subsystem's steady-state cost: tombstone half the
+    // corpus through the durable path (WAL delete records, fsync each),
+    // then run an explicit compaction that reclaims the signature arena
+    // and writes the compacted snapshot generation. Reclaim MB/s is the
+    // compaction pass's rewrite throughput over the bytes it produced.
+    let store = Store::open(&db, 0).unwrap();
+    let n_total = n_items + n_wal;
+    let (_, delete_ns) = time_once(|| {
+        for id in (0..n_total).step_by(2) {
+            store.remove(id).unwrap();
+        }
+    });
+    let n_removed = n_total.div_ceil(2);
+    let delete_items_s = n_removed as f64 / (delete_ns / 1e9);
+    let dead_fraction = store.index().dead_fraction();
+    assert!(
+        (dead_fraction - 0.5).abs() < 0.01,
+        "half the corpus is tombstoned before compaction"
+    );
+    let reclaimable = store.index().dead_len() as u64;
+    let gen_before = store.generation();
+    let (generation, compact_ns) = time_once(|| store.compact().unwrap());
+    assert_eq!(generation, gen_before + 1);
+    assert_eq!(store.index().dead_len(), 0, "compaction reclaims every slot");
+    assert_eq!(store.index().live_len(), n_total - n_removed);
+    let compact_snap_bytes = dir_bytes(&db.join(format!("snap-{generation:06}")));
+    let reclaim_mb_s = compact_snap_bytes as f64 / 1e6 / (compact_ns / 1e9);
+    println!(
+        "churn: {n_removed} durable deletes in {} ({delete_items_s:.0} items/s); \
+         compaction reclaimed {reclaimable} slots, wrote {} in {} ({reclaim_mb_s:.1} MB/s)",
+        fmt_duration(delete_ns),
+        fmt_bytes(compact_snap_bytes as usize),
+        fmt_duration(compact_ns)
+    );
+    // Post-compaction smoke: global ids are stable, so every hit id must be
+    // a survivor (odd), and surviving self-queries must still land.
+    for qid in [1usize, n_items / 2 + 1, n_total - 1] {
+        let q = store.index().item(qid);
+        let res = store.index().query_with(&q, &opts).unwrap();
+        assert_eq!(res.hits[0].id, qid, "survivor self-query must land post-compaction");
+        assert!(
+            res.hits.iter().all(|h| h.id % 2 == 1),
+            "tombstoned ids must never surface after compaction"
+        );
+    }
+    println!("churn smoke: compacted store answers from survivors only");
+    drop(store);
+
     // -- machine-readable report ---------------------------------------------
     let mut config = BTreeMap::new();
     config.insert(
@@ -174,6 +226,10 @@ fn main() {
         entry("snapshot_bytes", final_bytes as f64, "bytes"),
         entry("naive_reshaped_bytes", naive_bytes as f64, "bytes"),
         entry("size_ratio_naive_over_snapshot", ratio, "x"),
+        entry("wal_delete_items_per_sec", delete_items_s, "items/s"),
+        entry("churn_dead_fraction", dead_fraction, "fraction"),
+        entry("compaction_reclaimed_slots", reclaimable as f64, "slots"),
+        entry("compaction_reclaim_mb_per_sec", reclaim_mb_s, "MB/s"),
     ];
 
     let mut root_json = BTreeMap::new();

@@ -185,6 +185,26 @@ impl AppConfig {
                     }
                 }
             }
+            "compact_dead_fraction" => {
+                let f: f64 = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("{key}={value}: {e}")))?;
+                if !f.is_finite() || !(0.0..1.0).contains(&f) {
+                    return Err(Error::InvalidSpec(format!(
+                        "compact_dead_fraction must be in [0, 1), got {f}"
+                    )));
+                }
+                // Same placeholder trick as checkpoint_every above.
+                match &mut self.spec.serving.store {
+                    Some(s) => s.compact_dead_fraction = f,
+                    None => {
+                        self.spec.serving.store = Some(
+                            crate::lsh::spec::StoreSpec::new("")
+                                .with_compact_dead_fraction(f),
+                        )
+                    }
+                }
+            }
             "listen" => {
                 if value.is_empty() {
                     return Err(Error::InvalidSpec("listen addr must not be empty".into()));
@@ -252,6 +272,14 @@ impl AppConfig {
                 "checkpoint_every".into(),
                 Json::Num(store.checkpoint_every as f64),
             );
+            // Emitted only when armed, so pre-knob config files round-trip
+            // byte-identically.
+            if store.compact_dead_fraction != 0.0 {
+                m.insert(
+                    "compact_dead_fraction".into(),
+                    Json::Num(store.compact_dead_fraction),
+                );
+            }
         }
         if let Some(listen) = &s.serving.listen {
             m.insert("listen".into(), Json::Str(listen.addr.clone()));
@@ -403,10 +431,12 @@ mod tests {
         c.apply_override("checkpoint_every=500").unwrap();
         assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))), "dir still empty");
         c.apply_override("store=/tmp/tlsh-store").unwrap();
+        c.apply_override("compact_dead_fraction=0.25").unwrap();
         c.spec.validate().unwrap();
         let store = c.spec.serving.store.as_ref().unwrap();
         assert_eq!(store.dir, "/tmp/tlsh-store");
         assert_eq!(store.checkpoint_every, 500);
+        assert!((store.compact_dead_fraction - 0.25).abs() < 1e-12);
         // Flat file round trip keeps the store section.
         let tmp = std::env::temp_dir().join("tensorlsh_store_cfg_test.json");
         std::fs::write(&tmp, c.to_json()).unwrap();
@@ -415,6 +445,17 @@ mod tests {
         assert_eq!(c2.spec.serving.store, c.spec.serving.store);
         let _ = std::fs::remove_file(&tmp);
         assert!(AppConfig::default().apply_override("store=").is_err());
+        // The compaction knob may arrive before store (placeholder trick),
+        // and out-of-range values are typed InvalidSpec errors.
+        let mut c3 = AppConfig::default();
+        c3.apply_override("compact_dead_fraction=0.5").unwrap();
+        assert!(matches!(c3.spec.validate(), Err(Error::InvalidSpec(_))), "dir still empty");
+        for bad in ["compact_dead_fraction=1.0", "compact_dead_fraction=-0.1"] {
+            assert!(matches!(
+                AppConfig::default().apply_override(bad),
+                Err(Error::InvalidSpec(_))
+            ));
+        }
     }
 
     #[test]

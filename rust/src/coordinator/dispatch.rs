@@ -20,10 +20,12 @@
 
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{QueryRequest, QueryResponse};
-use super::server::Coordinator;
+use super::server::{overlay_churn, Coordinator};
 use crate::error::{Error, Result};
+use crate::index::ShardedLshIndex;
 use crate::query::{Query, SearchResponse, Searcher};
 use crate::store::Store;
+use crate::tensor::AnyTensor;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
@@ -48,6 +50,8 @@ pub struct Dispatcher {
     pending: PendingMap,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
+    /// The served index — churn counters for metrics snapshots.
+    index: Arc<ShardedLshIndex>,
     store: Option<Arc<Store>>,
     /// The router thread; owns the coordinator and returns it once the
     /// pipeline's output closes.
@@ -62,6 +66,7 @@ impl Dispatcher {
             .take_input()
             .ok_or_else(|| Error::Coordinator("coordinator already shut down".into()))?;
         let metrics = coord.metrics_arc();
+        let index = coord.index_arc();
         let store = coord.store().cloned();
         let pending: PendingMap = Arc::default();
         let router = {
@@ -87,6 +92,7 @@ impl Dispatcher {
             pending,
             next_id: AtomicU64::new(0),
             metrics,
+            index,
             store,
             router,
         })
@@ -98,14 +104,37 @@ impl Dispatcher {
         self.pending.lock().unwrap().len()
     }
 
-    /// Metrics snapshot (same counters the coordinator records).
+    /// Metrics snapshot (same counters the coordinator records), with the
+    /// index's churn counters overlaid.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        overlay_churn(self.metrics.snapshot(), &self.index)
     }
 
     /// The durable store backing the pipeline, if any.
     pub fn store(&self) -> Option<&Arc<Store>> {
         self.store.as_ref()
+    }
+
+    /// Durable online delete routed through the store's WAL
+    /// ([`Store::remove`]). Typed error when the pipeline has no store.
+    pub fn remove(&self, id: usize) -> Result<()> {
+        match &self.store {
+            Some(store) => store.remove(id),
+            None => Err(Error::Coordinator(
+                "coordinator was started without a durable store (use start_durable)".into(),
+            )),
+        }
+    }
+
+    /// Durable online in-place replace routed through the store's WAL
+    /// ([`Store::upsert`]). Typed error when the pipeline has no store.
+    pub fn upsert(&self, id: usize, x: AnyTensor) -> Result<()> {
+        match &self.store {
+            Some(store) => store.upsert(id, x),
+            None => Err(Error::Coordinator(
+                "coordinator was started without a durable store (use start_durable)".into(),
+            )),
+        }
     }
 
     /// Serve one query; `None` timeout waits indefinitely.
@@ -197,8 +226,15 @@ impl Dispatcher {
     /// the pipeline is wedged past the deadline, the router is detached and
     /// the store checkpointed directly — `serve` never hangs here.
     pub fn shutdown(self, limit: Duration) -> MetricsSnapshot {
-        let Dispatcher { submit, pending: _pending, next_id: _, metrics, store, router } =
-            self;
+        let Dispatcher {
+            submit,
+            pending: _pending,
+            next_id: _,
+            metrics,
+            index,
+            store,
+            router,
+        } = self;
         drop(submit); // last sender: the pipeline starts draining
         let deadline = Instant::now() + limit;
         // `JoinHandle` has no timed join; poll under the deadline.
@@ -208,7 +244,7 @@ impl Dispatcher {
                     "dispatcher: pipeline did not drain within {limit:?}; detaching it"
                 );
                 checkpoint(&store);
-                return metrics.snapshot();
+                return overlay_churn(metrics.snapshot(), &index);
             }
             std::thread::sleep(Duration::from_millis(2));
         }
@@ -223,7 +259,7 @@ impl Dispatcher {
             Err(_) => {
                 eprintln!("dispatcher: router thread panicked");
                 checkpoint(&store);
-                metrics.snapshot()
+                overlay_churn(metrics.snapshot(), &index)
             }
         }
     }

@@ -149,6 +149,12 @@ impl Metrics {
             p95_us: hist.quantile(0.95),
             p99_us: hist.quantile(0.99),
             mean_us: hist.mean(),
+            // Churn counters live on the served index, not here: the
+            // coordinator overlays them (Metrics has no index handle).
+            live_items: 0,
+            tombstoned: 0,
+            compactions_run: 0,
+            reclaimed_slots: 0,
         }
     }
 }
@@ -170,6 +176,15 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
+    /// Items currently answering queries (slots minus tombstones).
+    pub live_items: u64,
+    /// Slots tombstoned by deletes, awaiting compaction.
+    pub tombstoned: u64,
+    /// Arena-reclaiming compaction passes run since the index was built
+    /// or loaded.
+    pub compactions_run: u64,
+    /// Dead slots physically reclaimed by those passes.
+    pub reclaimed_slots: u64,
 }
 
 impl MetricsSnapshot {
@@ -191,6 +206,16 @@ impl MetricsSnapshot {
         m.insert("p95_us".to_string(), Json::Num(self.p95_us));
         m.insert("p99_us".to_string(), Json::Num(self.p99_us));
         m.insert("mean_us".to_string(), Json::Num(self.mean_us));
+        m.insert("live_items".to_string(), Json::Num(self.live_items as f64));
+        m.insert("tombstoned".to_string(), Json::Num(self.tombstoned as f64));
+        m.insert(
+            "compactions_run".to_string(),
+            Json::Num(self.compactions_run as f64),
+        );
+        m.insert(
+            "reclaimed_slots".to_string(),
+            Json::Num(self.reclaimed_slots as f64),
+        );
         Json::Obj(m)
     }
 
@@ -210,6 +235,10 @@ impl MetricsSnapshot {
                 "p95_us",
                 "p99_us",
                 "mean_us",
+                "live_items",
+                "tombstoned",
+                "compactions_run",
+                "reclaimed_slots",
             ]
             .contains(&key.as_str())
             {
@@ -230,6 +259,10 @@ impl MetricsSnapshot {
             p95_us: v.get("p95_us")?.as_f64()?,
             p99_us: v.get("p99_us")?.as_f64()?,
             mean_us: v.get("mean_us")?.as_f64()?,
+            live_items: v.get("live_items")?.as_usize()? as u64,
+            tombstoned: v.get("tombstoned")?.as_usize()? as u64,
+            compactions_run: v.get("compactions_run")?.as_usize()? as u64,
+            reclaimed_slots: v.get("reclaimed_slots")?.as_usize()? as u64,
         })
     }
 }
@@ -253,6 +286,17 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         if self.fallbacks > 0 {
             write!(f, " fallbacks={}", self.fallbacks)?;
+        }
+        write!(f, " live={}", self.live_items)?;
+        if self.tombstoned > 0 {
+            write!(f, " tombstoned={}", self.tombstoned)?;
+        }
+        if self.compactions_run > 0 {
+            write!(
+                f,
+                " compactions={} reclaimed={}",
+                self.compactions_run, self.reclaimed_slots
+            )?;
         }
         Ok(())
     }
@@ -348,11 +392,21 @@ mod tests {
                 },
             );
         }
-        let s = m.snapshot();
+        let mut s = m.snapshot();
+        // Churn counters are overlaid by the coordinator from the served
+        // index — give them non-zero values so the round-trip covers them.
+        s.live_items = 120;
+        s.tombstoned = 13;
+        s.compactions_run = 2;
+        s.reclaimed_slots = 31;
         let text = s.to_json().to_string_pretty();
         let back =
             MetricsSnapshot::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, s, "snapshot must survive JSON bit-exactly");
+        let shown = format!("{s}");
+        assert!(shown.contains("live=120"));
+        assert!(shown.contains("tombstoned=13"));
+        assert!(shown.contains("compactions=2 reclaimed=31"));
         // Idle snapshots round-trip too (all-zero means).
         let idle = Metrics::new().snapshot();
         let back = MetricsSnapshot::from_json(&idle.to_json()).unwrap();

@@ -134,6 +134,10 @@ pub struct Coordinator {
     /// so the synchronous wrappers can tell a stale failure from their own.
     output: Receiver<(u64, Result<QueryResponse>)>,
     metrics: Arc<Metrics>,
+    /// The served index — kept so metrics snapshots can overlay the churn
+    /// counters (live/tombstoned/compactions) that live on the index, and
+    /// so the dispatcher can reuse the handle.
+    index: Arc<ShardedLshIndex>,
     threads: Vec<JoinHandle<()>>,
     /// Durable backing ([`Coordinator::start_durable`]): inserts route
     /// through the WAL, shutdown checkpoints pending records.
@@ -273,10 +277,10 @@ impl Coordinator {
                             let opts = &job.request.query.opts;
                             let fallback = stats.candidates_examined == 0
                                 && opts.exact_fallback
-                                && !index.is_empty();
+                                && index.live_len() > 0;
                             let results = if fallback {
                                 stats.exact_fallback = true;
-                                stats.reranked += index.len();
+                                stats.reranked += index.live_len();
                                 index.exact_search(&job.request.query.tensor, opts.k)
                             } else {
                                 Ok(merge_hits(
@@ -389,6 +393,7 @@ impl Coordinator {
             input: Some(in_tx),
             output: out_rx,
             metrics,
+            index,
             threads,
             store: None,
             sync_ticket: std::cell::Cell::new(SYNC_ID_BASE),
@@ -420,6 +425,31 @@ impl Coordinator {
     pub fn insert(&self, x: AnyTensor) -> Result<usize> {
         match &self.store {
             Some(store) => store.insert(x),
+            None => Err(Error::Coordinator(
+                "coordinator was started without a durable store (use start_durable)".into(),
+            )),
+        }
+    }
+
+    /// Durable online delete ([`Store::remove`]): WAL tombstone record +
+    /// index tombstone; the slot is skipped at query time and reclaimed by
+    /// a later compaction. Typed error when the coordinator was started
+    /// without a store.
+    pub fn remove(&self, id: usize) -> Result<()> {
+        match &self.store {
+            Some(store) => store.remove(id),
+            None => Err(Error::Coordinator(
+                "coordinator was started without a durable store (use start_durable)".into(),
+            )),
+        }
+    }
+
+    /// Durable online in-place replace ([`Store::upsert`]); revives a
+    /// tombstoned id. Typed error when the coordinator was started without
+    /// a store.
+    pub fn upsert(&self, id: usize, x: AnyTensor) -> Result<()> {
+        match &self.store {
+            Some(store) => store.upsert(id, x),
             None => Err(Error::Coordinator(
                 "coordinator was started without a durable store (use start_durable)".into(),
             )),
@@ -490,9 +520,9 @@ impl Coordinator {
             .collect()
     }
 
-    /// Metrics handle.
+    /// Metrics snapshot with the index's churn counters overlaid.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        overlay_churn(self.metrics.snapshot(), &self.index)
     }
 
     /// Close intake, wait for the pipeline to drain, and join threads.
@@ -511,7 +541,7 @@ impl Coordinator {
     /// [`Coordinator::shutdown`] with an explicit drain bound.
     pub fn shutdown_deadline(mut self, limit: Duration) -> MetricsSnapshot {
         self.drain(limit);
-        self.metrics.snapshot()
+        overlay_churn(self.metrics.snapshot(), &self.index)
     }
 
     /// The actual drain: idempotent (a second call is a no-op) and bounded
@@ -575,6 +605,11 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
+    /// Served index handle (dispatcher internals — churn metrics overlay).
+    pub(crate) fn index_arc(&self) -> Arc<ShardedLshIndex> {
+        Arc::clone(&self.index)
+    }
+
     /// Convenience: push a whole trace through and collect all responses
     /// (in completion order) plus final metrics.
     pub fn serve_trace(
@@ -609,6 +644,20 @@ impl Searcher for Coordinator {
     fn search_batch(&self, qs: &[Query]) -> Result<Vec<SearchResponse>> {
         self.query_batch(qs)
     }
+}
+
+/// Fill a snapshot's churn counters from the served index (they live on
+/// the index, not in [`Metrics`] — the index is the source of truth for
+/// live/tombstoned slot counts).
+pub(crate) fn overlay_churn(
+    mut snap: MetricsSnapshot,
+    index: &ShardedLshIndex,
+) -> MetricsSnapshot {
+    snap.live_items = index.live_len() as u64;
+    snap.tombstoned = index.dead_len() as u64;
+    snap.compactions_run = index.compactions_run();
+    snap.reclaimed_slots = index.reclaimed_slots();
+    snap
 }
 
 /// Native batched hashing: one flat `project_batch_into` pass per table for
@@ -906,6 +955,17 @@ mod tests {
             assert_eq!(a.hits, b.hits, "warm-start answers identically (qid {qid})");
             assert_eq!(a.stats, b.stats);
         }
+        // Online churn routes through the store and shows in the metrics.
+        warm.remove(0).unwrap();
+        warm.upsert(41, store.index().item(3)).unwrap();
+        let snap = warm.metrics();
+        assert_eq!(snap.live_items, 80);
+        assert_eq!(snap.tombstoned, 1);
+        let resp = warm.query(&Query::new(store.index().item(3), 3)).unwrap();
+        assert!(
+            resp.hits.iter().all(|h| h.id != 0),
+            "tombstoned items must not be served"
+        );
         warm.shutdown();
         // A memory-only coordinator rejects durable inserts with a typed
         // error instead of silently dropping durability.
@@ -915,6 +975,8 @@ mod tests {
             HashBackend::Native,
         );
         assert!(matches!(plain.insert(index.item(0)), Err(Error::Coordinator(_))));
+        assert!(matches!(plain.remove(0), Err(Error::Coordinator(_))));
+        assert!(matches!(plain.upsert(0, index.item(0)), Err(Error::Coordinator(_))));
         plain.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -169,6 +169,12 @@ pub struct LshIndex {
     /// Cached Frobenius norms (re-ranking needs ‖item‖ for every candidate;
     /// recomputing it per candidate dominated the query path — §Perf).
     norms: Vec<f64>,
+    /// Tombstone bitmap over slots, same length as `items`: a dead slot
+    /// stays physically present in the tables and arena but is skipped by
+    /// every query path until [`LshIndex::compact_dead`] reclaims it.
+    dead: Vec<bool>,
+    /// Number of set tombstones (kept in lockstep with `dead`).
+    n_dead: usize,
     metric: Metric,
     probes: usize,
     /// The declarative spec this index was built from (None for the
@@ -377,6 +383,12 @@ pub(crate) fn check_table_signatures(sigs: usize, tables: usize) -> Result<()> {
 /// with multiplicity when `dedup` is off), capped at `max_candidates`.
 /// Generation stats land in `stats`.
 ///
+/// `dead` is the unit's tombstone bitmap (pass `&[]` when no slot is
+/// tombstoned — the hot all-live path skips the lookup entirely). Dead
+/// slots are skipped *before* any counting or stats accounting, and a
+/// table counts as hit only when it yields a live slot, so a mutated
+/// index's candidates AND stats equal a rebuild from the live set.
+///
 /// Collision counts are only consulted by the `SignatureOnly`/`Budgeted`
 /// policies, so the returned counts vec is **empty** under `Exact` — the
 /// default policy keeps the cheaper one-byte seen bitmap (4× less zeroed
@@ -384,6 +396,7 @@ pub(crate) fn check_table_signatures(sigs: usize, tables: usize) -> Result<()> {
 pub(crate) fn gather_candidates(
     tables: &[HashTable],
     n_slots: usize,
+    dead: &[bool],
     sigs: &[Vec<u64>],
     opts: &QueryOpts,
     stats: &mut SearchStats,
@@ -397,6 +410,9 @@ pub(crate) fn gather_candidates(
         let mut hit = false;
         for &sig in tsigs {
             for &slot in table.bucket(sig) {
+                if !dead.is_empty() && dead[slot as usize] {
+                    continue;
+                }
                 hit = true;
                 let s = slot as usize;
                 if need_counts {
@@ -504,13 +520,16 @@ impl LshIndex {
             tables,
             items: Vec::new(),
             norms: Vec::new(),
+            dead: Vec::new(),
+            n_dead: 0,
             metric: cfg.metric,
             probes: cfg.probes,
             spec: cfg.spec.clone(),
         })
     }
 
-    /// Number of indexed items.
+    /// Number of physical slots (live + tombstoned) — a whole-index id IS
+    /// its slot, so this is also the next insert's id.
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -518,6 +537,21 @@ impl LshIndex {
     /// True if no items were inserted.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
+    }
+
+    /// Number of live (non-tombstoned) items.
+    pub fn live_len(&self) -> usize {
+        self.items.len() - self.n_dead
+    }
+
+    /// Number of tombstoned slots awaiting compaction.
+    pub fn dead_len(&self) -> usize {
+        self.n_dead
+    }
+
+    /// True when `id` names a tombstoned slot.
+    pub fn is_deleted(&self, id: usize) -> bool {
+        self.dead.get(id).copied().unwrap_or(false)
     }
 
     /// Number of tables L.
@@ -569,7 +603,119 @@ impl LshIndex {
         }
         self.norms.push(x.frob_norm());
         self.items.push(x);
+        self.dead.push(false);
         id
+    }
+
+    /// Tombstone an item: it stops appearing in every query path
+    /// (candidates, re-rank, exact fallback, linear scans) immediately; its
+    /// slot is physically reclaimed by the next [`LshIndex::compact_dead`].
+    /// Unknown and already-removed ids are typed errors.
+    pub fn remove(&mut self, id: usize) -> Result<()> {
+        if id >= self.items.len() {
+            return Err(Error::InvalidParameter(format!(
+                "remove: id {id} out of range (index has {} slots)",
+                self.items.len()
+            )));
+        }
+        if self.dead[id] {
+            return Err(Error::InvalidParameter(format!(
+                "remove: id {id} is already removed"
+            )));
+        }
+        self.dead[id] = true;
+        self.n_dead += 1;
+        Ok(())
+    }
+
+    /// Replace an item's tensor in place, keeping its id. The old bucket
+    /// entries come out (signatures recomputed from the stored tensor —
+    /// hashing is deterministic) and the new ones go in at the slot-sorted
+    /// position, so the mutated index buckets exactly like a rebuild from
+    /// the live set. Upserting a tombstoned id revives it.
+    pub fn upsert(&mut self, id: usize, x: AnyTensor) -> Result<()> {
+        let sigs: Vec<u64> = self
+            .families
+            .iter()
+            .map(|fam| signature(&fam.hash(&x)))
+            .collect();
+        self.upsert_with_signatures(id, x, &sigs)
+    }
+
+    /// [`LshIndex::upsert`] with precomputed per-table signatures for the
+    /// *new* tensor (the WAL replay path).
+    pub fn upsert_with_signatures(
+        &mut self,
+        id: usize,
+        x: AnyTensor,
+        sigs: &[u64],
+    ) -> Result<()> {
+        debug_assert_eq!(sigs.len(), self.tables.len());
+        if id >= self.items.len() {
+            return Err(Error::InvalidParameter(format!(
+                "upsert: id {id} out of range (index has {} slots)",
+                self.items.len()
+            )));
+        }
+        let old_sigs: Vec<u64> = self
+            .families
+            .iter()
+            .map(|fam| signature(&fam.hash(&self.items[id])))
+            .collect();
+        for ((table, &old), &new) in self.tables.iter_mut().zip(&old_sigs).zip(sigs) {
+            if old != new {
+                let removed = table.remove_slot(old, id as u32);
+                debug_assert!(removed, "table out of sync with stored tensor");
+                table.insert_sorted(new, id as u32);
+            }
+        }
+        self.norms[id] = x.frob_norm();
+        self.items[id] = x;
+        if self.dead[id] {
+            self.dead[id] = false;
+            self.n_dead -= 1;
+        }
+        Ok(())
+    }
+
+    /// Reclaim tombstoned slots: rewrite the tables, items, and norms with
+    /// dead slots dropped and the survivors renumbered to `0..live_len()`
+    /// (a whole-index id is positional, so compaction renumbers ids).
+    /// Returns the surviving old ids in new-id order (`returned[new] ==
+    /// old`) so callers can translate. In-bucket relative order is
+    /// preserved, which keeps candidate generation — and therefore every
+    /// [`SearchResponse`] — identical to a rebuild from the live set.
+    pub fn compact_dead(&mut self) -> Vec<usize> {
+        if self.n_dead == 0 {
+            return (0..self.items.len()).collect();
+        }
+        let mut remap = vec![u32::MAX; self.items.len()];
+        let mut live = Vec::with_capacity(self.live_len());
+        for (old, &d) in self.dead.iter().enumerate() {
+            if !d {
+                remap[old] = live.len() as u32;
+                live.push(old);
+            }
+        }
+        for table in &mut self.tables {
+            table.compact(&remap);
+        }
+        let dead = std::mem::take(&mut self.dead);
+        let mut i = 0;
+        self.items.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        let mut i = 0;
+        self.norms.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        self.dead = vec![false; self.items.len()];
+        self.n_dead = 0;
+        live
     }
 
     /// Insert row `b` of a precomputed [`CodeMatrix`] — the flat bulk-build
@@ -617,6 +763,7 @@ impl LshIndex {
         let (cand, _) = gather_candidates(
             &self.tables,
             self.items.len(),
+            self.dead_slice(),
             &sigs,
             &QueryOpts::top_k(0),
             &mut stats,
@@ -638,7 +785,8 @@ impl LshIndex {
         self.candidates_from_signatures(codes.sigs_row(b))
     }
 
-    /// Candidate ids given one precomputed signature per table.
+    /// Candidate ids given one precomputed signature per table
+    /// (tombstoned slots are skipped, like every query path).
     pub fn candidates_from_signatures(&self, sigs: &[u64]) -> Vec<usize> {
         debug_assert_eq!(sigs.len(), self.tables.len());
         let mut seen = vec![false; self.items.len()];
@@ -646,13 +794,23 @@ impl LshIndex {
         for (table, &sig) in self.tables.iter().zip(sigs) {
             for &id in table.bucket(sig) {
                 let id = id as usize;
-                if !seen[id] {
+                if !seen[id] && !self.dead[id] {
                     seen[id] = true;
                     out.push(id);
                 }
             }
         }
         out
+    }
+
+    /// The tombstone bitmap as [`gather_candidates`] wants it: `&[]` when
+    /// every slot is live (skips the per-slot lookup on the hot path).
+    fn dead_slice(&self) -> &[bool] {
+        if self.n_dead == 0 {
+            &[]
+        } else {
+            &self.dead
+        }
     }
 
     // -- unified query API -------------------------------------------------
@@ -687,8 +845,14 @@ impl LshIndex {
             probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
             ..SearchStats::default()
         };
-        let (cand, counts) =
-            gather_candidates(&self.tables, self.items.len(), sigs, opts, &mut stats);
+        let (cand, counts) = gather_candidates(
+            &self.tables,
+            self.items.len(),
+            self.dead_slice(),
+            sigs,
+            opts,
+            &mut stats,
+        );
         let qn = tensor.frob_norm();
         let mut hits = rerank_with_policy(
             self.metric,
@@ -707,9 +871,9 @@ impl LshIndex {
             |s| s as usize,
             &mut stats,
         )?;
-        if stats.candidates_examined == 0 && opts.exact_fallback && !self.items.is_empty() {
+        if stats.candidates_examined == 0 && opts.exact_fallback && self.live_len() > 0 {
             stats.exact_fallback = true;
-            stats.reranked += self.items.len();
+            stats.reranked += self.live_len();
             hits = self.exact_search(tensor, opts.k)?;
         }
         Ok(SearchResponse { hits, stats })
@@ -771,6 +935,18 @@ impl LshIndex {
             self.tables.iter().map(|t| t.sorted_buckets()).collect();
         let sigs = sigs_arena_from_buckets(&buckets, self.items.len())?;
         let ids: Vec<usize> = (0..self.items.len()).collect();
+        // Tombstoned slots stay in every section (the cross-validation
+        // wants each slot exactly once per table); the tombstone list —
+        // written only when non-empty, so an all-live snapshot stays
+        // byte-identical to the pre-mutability format and old readers
+        // (which skip unknown sections) load it insert-only — marks which
+        // slots are dead.
+        let tombstones: Vec<u32> = self
+            .dead
+            .iter()
+            .enumerate()
+            .filter_map(|(s, &d)| if d { Some(s as u32) } else { None })
+            .collect();
         let header = SegmentHeader {
             spec: spec.clone(),
             n_items: self.items.len(),
@@ -788,6 +964,7 @@ impl LshIndex {
                 buckets: &buckets,
                 items: &self.items,
                 norms: &self.norms,
+                tombstones: &tombstones,
             },
         )
     }
@@ -814,11 +991,20 @@ impl LshIndex {
         cfg.n_tables = c.header.n_tables;
         cfg.probes = c.header.probes;
         let families = build_families(&cfg)?;
+        // The segment reader validated the tombstone list (ascending,
+        // unique, in range); adopt it as the bitmap.
+        let mut dead = vec![false; c.items.len()];
+        for &slot in &c.tombstones {
+            dead[slot as usize] = true;
+        }
+        let n_dead = c.tombstones.len();
         Ok(LshIndex {
             families,
             tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
             items: c.items,
             norms: c.norms,
+            dead,
+            n_dead,
             metric: c.header.metric,
             probes: c.header.probes,
             spec: Some(c.header.spec),
@@ -846,9 +1032,11 @@ impl LshIndex {
         Ok(scored)
     }
 
-    /// Exact (linear-scan) k-NN — the ground truth for recall measurements.
+    /// Exact (linear-scan) k-NN over the live set — the ground truth for
+    /// recall measurements. Tombstoned slots are skipped.
     pub fn exact_search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
-        self.rerank_candidates(q, (0..self.items.len()).collect(), k)
+        let live: Vec<usize> = (0..self.items.len()).filter(|&i| !self.dead[i]).collect();
+        self.rerank_candidates(q, live, k)
     }
 
     /// Bucket-occupancy statistics (mean/max bucket size per table) — used
@@ -1130,6 +1318,110 @@ mod tests {
         assert_eq!((exact[0].id, exact[1].id), (0, 2), "ties order by ascending id");
         let resp = idx.query_with(&items[0], &QueryOpts::top_k(3)).unwrap();
         assert_eq!(resp.hits[0].id, 0);
+    }
+
+    #[test]
+    fn remove_and_upsert_match_rebuild_from_live_set() {
+        let dims = vec![8usize, 8];
+        let cfg = cosine_config(dims.clone(), 6, 5, 1);
+        let (items, _) = low_rank_corpus(&DatasetSpec {
+            dims,
+            n_items: 24,
+            rank: 2,
+            n_clusters: 4,
+            noise: 0.3,
+            seed: 77,
+        });
+        let mut idx = LshIndex::build(&cfg, items[..20].to_vec()).unwrap();
+        idx.remove(3).unwrap();
+        idx.remove(7).unwrap();
+        idx.upsert(5, items[21].clone()).unwrap();
+        idx.upsert(7, items[22].clone()).unwrap(); // revives the tombstone
+        idx.remove(11).unwrap();
+        assert_eq!(idx.len(), 20);
+        assert_eq!(idx.live_len(), 18);
+        assert_eq!(idx.dead_len(), 2);
+        assert!(idx.is_deleted(3) && idx.is_deleted(11) && !idx.is_deleted(7));
+
+        // Reference: the live set rebuilt from scratch, ids contiguous.
+        let live_ids: Vec<usize> =
+            (0..20).filter(|&i| i != 3 && i != 11).collect();
+        let live_items: Vec<AnyTensor> = live_ids
+            .iter()
+            .map(|&i| match i {
+                5 => items[21].clone(),
+                7 => items[22].clone(),
+                _ => items[i].clone(),
+            })
+            .collect();
+        let fresh = LshIndex::build(&cfg, live_items).unwrap();
+
+        let opts_grid = [
+            QueryOpts::top_k(5),
+            QueryOpts::top_k(5).with_probes(0),
+            QueryOpts::top_k(3).with_max_candidates(4),
+            QueryOpts::top_k(20).with_exact_fallback(true),
+        ];
+        for q in items.iter().take(24) {
+            for opts in &opts_grid {
+                let a = idx.query_with(q, opts).unwrap();
+                let b = fresh.query_with(q, opts).unwrap();
+                assert_eq!(a.stats, b.stats, "stats equal the rebuilt live set");
+                assert_eq!(a.hits.len(), b.hits.len());
+                for (ha, hb) in a.hits.iter().zip(&b.hits) {
+                    assert_eq!(ha.id, live_ids[hb.id], "ids map through the live list");
+                    assert_eq!(ha.score, hb.score);
+                }
+            }
+        }
+
+        // Compaction renumbers to the contiguous live ids: responses become
+        // exactly the rebuilt index's (hits AND stats).
+        let old_ids = idx.compact_dead();
+        assert_eq!(old_ids, live_ids);
+        assert_eq!(idx.len(), 18);
+        assert_eq!(idx.dead_len(), 0);
+        for q in items.iter().take(24) {
+            for opts in &opts_grid {
+                let a = idx.query_with(q, opts).unwrap();
+                let b = fresh.query_with(q, opts).unwrap();
+                assert_eq!(a.hits, b.hits);
+                assert_eq!(a.stats, b.stats);
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_errors_are_typed_and_fallback_uses_live_len() {
+        let dims = vec![6usize, 6];
+        let cfg = cosine_config(dims.clone(), 6, 4, 0);
+        let (items, _) = low_rank_corpus(&DatasetSpec {
+            dims,
+            n_items: 3,
+            rank: 2,
+            n_clusters: 2,
+            noise: 0.3,
+            seed: 78,
+        });
+        let mut idx = LshIndex::build(&cfg, items.clone()).unwrap();
+        assert!(matches!(idx.remove(99), Err(Error::InvalidParameter(_))));
+        assert!(matches!(
+            idx.upsert(99, items[0].clone()),
+            Err(Error::InvalidParameter(_))
+        ));
+        idx.remove(1).unwrap();
+        assert!(matches!(idx.remove(1), Err(Error::InvalidParameter(_))));
+        // Fully-tombstoned index: the exact fallback has no live item to
+        // scan, so it must not fire (and must not resurrect dead slots).
+        idx.remove(0).unwrap();
+        idx.remove(2).unwrap();
+        assert_eq!(idx.live_len(), 0);
+        let resp = idx
+            .query_with(&items[0], &QueryOpts::top_k(3).with_exact_fallback(true))
+            .unwrap();
+        assert!(resp.hits.is_empty());
+        assert!(!resp.stats.exact_fallback);
+        assert_eq!(resp.stats.candidates_generated, 0);
     }
 
     #[test]

@@ -40,10 +40,11 @@ use crate::store::segment::{
     read_segment, sigs_arena_from_buckets, write_segment, SegmentContents, SegmentHeader,
     SegmentView,
 };
+use crate::tensor::AnyTensor;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// One shard: bucket tables over shard-local slots plus the backing items.
@@ -54,6 +55,24 @@ struct Shard {
     items: Vec<AnyTensor>,
     /// Cached Frobenius norms (same re-rank shortcut as [`super::LshIndex`]).
     norms: Vec<f64>,
+    /// Tombstone bitmap over local slots (same length as `items`): dead
+    /// slots stay physically present but are skipped by every query path
+    /// until a compaction reclaims them.
+    dead: Vec<bool>,
+    /// Number of set tombstones in this shard.
+    n_dead: usize,
+}
+
+/// Local slot of a global id within one shard (`None` when the id was
+/// compacted away). Sequential builds place id at slot `id / S`;
+/// concurrent inserts and compactions may shift it, so fall back to a
+/// scan.
+fn slot_of(shard: &Shard, id: usize, n_shards: usize) -> Option<usize> {
+    let guess = id / n_shards;
+    if shard.ids.get(guess) == Some(&id) {
+        return Some(guess);
+    }
+    shard.ids.iter().position(|&g| g == id)
 }
 
 impl Shard {
@@ -63,6 +82,8 @@ impl Shard {
             ids: Vec::new(),
             items: Vec::new(),
             norms: Vec::new(),
+            dead: Vec::new(),
+            n_dead: 0,
         }
     }
 
@@ -75,6 +96,61 @@ impl Shard {
         self.ids.push(id);
         self.norms.push(x.frob_norm());
         self.items.push(x);
+        self.dead.push(false);
+    }
+
+    /// The tombstone bitmap as `gather_candidates` wants it: `&[]` when
+    /// every slot is live (skips the per-slot lookup on the hot path).
+    fn dead_slice(&self) -> &[bool] {
+        if self.n_dead == 0 {
+            &[]
+        } else {
+            &self.dead
+        }
+    }
+
+    /// Drop tombstoned slots and renumber the survivors (relative order
+    /// preserved, so candidate generation order matches a rebuild from
+    /// the live set). Global ids are untouched — only local slots move.
+    /// Returns the number of slots reclaimed.
+    fn compact(&mut self) -> usize {
+        if self.n_dead == 0 {
+            return 0;
+        }
+        let mut remap = vec![u32::MAX; self.items.len()];
+        let mut new = 0u32;
+        for (slot, &d) in self.dead.iter().enumerate() {
+            if !d {
+                remap[slot] = new;
+                new += 1;
+            }
+        }
+        for table in &mut self.tables {
+            table.compact(&remap);
+        }
+        let dead = std::mem::take(&mut self.dead);
+        let mut i = 0;
+        self.ids.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        let mut i = 0;
+        self.items.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        let mut i = 0;
+        self.norms.retain(|_| {
+            let keep = !dead[i];
+            i += 1;
+            keep
+        });
+        self.dead = vec![false; self.items.len()];
+        let reclaimed = self.n_dead;
+        self.n_dead = 0;
+        reclaimed
     }
 
     /// Exact re-rank of local slots; returns the shard's top-k with global
@@ -118,8 +194,20 @@ pub struct ShardedLshIndex {
     shards: Vec<RwLock<Shard>>,
     metric: Metric,
     probes: usize,
-    /// Monotonic global id source; also the item count once inserts settle.
+    /// Monotonic global id source. Ids are never reused — compaction
+    /// reclaims *slots*, not ids — so this is the watermark the durable
+    /// store's WAL id chain keys off, not the live item count (that's
+    /// [`ShardedLshIndex::live_len`]).
     next_id: AtomicUsize,
+    /// Physical slots across all shards (live + tombstoned). Tracked
+    /// outside the shard locks so churn accounting never takes one.
+    n_slots: AtomicUsize,
+    /// Tombstoned slots across all shards.
+    n_dead: AtomicUsize,
+    /// Completed [`ShardedLshIndex::compact_dead`] passes.
+    compactions: AtomicU64,
+    /// Total slots reclaimed by compaction over this index's lifetime.
+    reclaimed: AtomicU64,
     /// The declarative spec this index was built from (None for the
     /// deprecated closure escape hatch) — required by
     /// [`ShardedLshIndex::save`].
@@ -145,18 +233,92 @@ impl ShardedLshIndex {
             metric: cfg.metric,
             probes: cfg.probes,
             next_id: AtomicUsize::new(0),
+            n_slots: AtomicUsize::new(0),
+            n_dead: AtomicUsize::new(0),
+            compactions: AtomicU64::new(0),
+            reclaimed: AtomicU64::new(0),
             spec: cfg.spec.clone(),
         })
     }
 
-    /// Number of indexed items.
+    /// The id watermark: every id ever issued is `< len()`, and the next
+    /// insert gets exactly `len()`. Not the live item count once items
+    /// have been removed — see [`ShardedLshIndex::live_len`].
     pub fn len(&self) -> usize {
         self.next_id.load(Ordering::SeqCst)
     }
 
-    /// True if no items were inserted.
+    /// True if no items were ever inserted.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of live (searchable) items.
+    pub fn live_len(&self) -> usize {
+        self.n_slots.load(Ordering::SeqCst) - self.n_dead.load(Ordering::SeqCst)
+    }
+
+    /// Number of tombstoned slots awaiting compaction.
+    pub fn dead_len(&self) -> usize {
+        self.n_dead.load(Ordering::SeqCst)
+    }
+
+    /// Fraction of physical slots that are tombstoned (0.0 when empty) —
+    /// the quantity [`crate::store::Store`] compares against its
+    /// `compact_dead_fraction` trigger.
+    pub fn dead_fraction(&self) -> f64 {
+        let slots = self.n_slots.load(Ordering::SeqCst);
+        if slots == 0 {
+            0.0
+        } else {
+            self.n_dead.load(Ordering::SeqCst) as f64 / slots as f64
+        }
+    }
+
+    /// Completed compaction passes over this index's lifetime.
+    pub fn compactions_run(&self) -> u64 {
+        self.compactions.load(Ordering::SeqCst)
+    }
+
+    /// Total slots reclaimed by compaction over this index's lifetime.
+    pub fn reclaimed_slots(&self) -> u64 {
+        self.reclaimed.load(Ordering::SeqCst)
+    }
+
+    /// (live, tombstoned) slot counts per shard — the `info --store`
+    /// report.
+    pub fn churn_by_shard(&self) -> Vec<(usize, usize)> {
+        self.shards
+            .iter()
+            .map(|shard| {
+                let guard = shard.read().unwrap();
+                (guard.items.len() - guard.n_dead, guard.n_dead)
+            })
+            .collect()
+    }
+
+    /// True when `id` currently resolves to a live (searchable) slot.
+    pub fn is_live(&self, id: usize) -> bool {
+        if id >= self.len() {
+            return false;
+        }
+        let guard = self.shards[self.shard_of(id)].read().unwrap();
+        match slot_of(&guard, id, self.shards.len()) {
+            Some(slot) => !guard.dead[slot],
+            None => false,
+        }
+    }
+
+    /// True when `id` still occupies a physical slot — live or
+    /// tombstoned, but not compacted away. Upsert requires this (it
+    /// rewrites the slot in place); the store's WAL replay uses it to
+    /// decide whether a logged upsert still applies.
+    pub fn has_slot(&self, id: usize) -> bool {
+        if id >= self.len() {
+            return false;
+        }
+        let guard = self.shards[self.shard_of(id)].read().unwrap();
+        slot_of(&guard, id, self.shards.len()).is_some()
     }
 
     /// Number of shards S.
@@ -196,21 +358,12 @@ impl ShardedLshIndex {
         id % self.shards.len()
     }
 
-    /// Clone out an indexed item by global id.
+    /// Clone out an indexed item by global id (tombstoned items remain
+    /// readable until a compaction reclaims their slot).
     pub fn item(&self, id: usize) -> AnyTensor {
         let shard = self.shards[self.shard_of(id)].read().unwrap();
-        // Sequential builds place id at slot id/S; concurrent inserts may
-        // permute within the shard, so fall back to a scan.
-        let guess = id / self.shards.len();
-        let slot = if shard.ids.get(guess) == Some(&id) {
-            guess
-        } else {
-            shard
-                .ids
-                .iter()
-                .position(|&g| g == id)
-                .unwrap_or_else(|| panic!("item id {id} not present"))
-        };
+        let slot = slot_of(&shard, id, self.shards.len())
+            .unwrap_or_else(|| panic!("item id {id} not present"));
         shard.items[slot].clone()
     }
 
@@ -237,7 +390,114 @@ impl ShardedLshIndex {
             .write()
             .unwrap()
             .insert(id, x, sigs);
+        self.n_slots.fetch_add(1, Ordering::SeqCst);
         id
+    }
+
+    /// Tombstone an item: its slot stays physically present (in memory
+    /// and in snapshots) but every query path skips it, exactly as if the
+    /// index had been rebuilt without it. The id is never reused. Errors
+    /// are typed: unknown ids, already-removed ids, and
+    /// compacted-then-removed ids each say what happened.
+    pub fn remove(&self, id: usize) -> Result<()> {
+        if id >= self.len() {
+            return Err(Error::InvalidParameter(format!(
+                "remove: id {id} out of range (next id is {})",
+                self.len()
+            )));
+        }
+        let mut guard = self.shards[self.shard_of(id)].write().unwrap();
+        let Some(slot) = slot_of(&guard, id, self.shards.len()) else {
+            return Err(Error::InvalidParameter(format!(
+                "remove: id {id} was already removed and compacted"
+            )));
+        };
+        if guard.dead[slot] {
+            return Err(Error::InvalidParameter(format!(
+                "remove: id {id} is already removed"
+            )));
+        }
+        guard.dead[slot] = true;
+        guard.n_dead += 1;
+        drop(guard);
+        self.n_dead.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Replace the item stored under `id` in place (hashes with the
+    /// shared families). Upserting a tombstoned id revives it. The id
+    /// must still occupy a slot — once compaction reclaims it, the tensor
+    /// must come back through [`ShardedLshIndex::insert`] under a fresh
+    /// id.
+    pub fn upsert(&self, id: usize, x: AnyTensor) -> Result<()> {
+        let sigs = self.insert_signatures(&x);
+        self.upsert_with_signatures(id, x, &sigs)
+    }
+
+    /// [`ShardedLshIndex::upsert`] with precomputed per-table signatures
+    /// — the durable store's WAL replay path (replayed upserts are
+    /// bit-identical to direct ones by construction).
+    ///
+    /// The slot's old bucket entries are relocated by *recomputing* the
+    /// stored tensor's signatures — the arena is the source of truth, so
+    /// no per-slot signature sidecar is needed — and the new entries are
+    /// inserted at their ascending-slot positions, keeping candidate
+    /// order identical to a rebuild from the live set.
+    pub fn upsert_with_signatures(&self, id: usize, x: AnyTensor, sigs: &[u64]) -> Result<()> {
+        debug_assert_eq!(sigs.len(), self.families.len());
+        if id >= self.len() {
+            return Err(Error::InvalidParameter(format!(
+                "upsert: id {id} out of range (next id is {}); insert new items instead",
+                self.len()
+            )));
+        }
+        let mut guard = self.shards[self.shard_of(id)].write().unwrap();
+        let Some(slot) = slot_of(&guard, id, self.shards.len()) else {
+            return Err(Error::InvalidParameter(format!(
+                "upsert: id {id} was removed and compacted; insert it as a new item"
+            )));
+        };
+        // Recompute the stored tensor's signatures under the same write
+        // lock that applies the swap, so a racing upsert on this id
+        // cannot leave the buckets pointing at stale signatures.
+        let old_sigs = self.insert_signatures(&guard.items[slot]);
+        for ((table, &old), &new) in guard.tables.iter_mut().zip(&old_sigs).zip(sigs) {
+            if old != new {
+                let removed = table.remove_slot(old, slot as u32);
+                debug_assert!(removed, "bucket tables out of sync with stored tensor");
+                table.insert_sorted(new, slot as u32);
+            }
+        }
+        guard.norms[slot] = x.frob_norm();
+        guard.items[slot] = x;
+        if guard.dead[slot] {
+            guard.dead[slot] = false;
+            guard.n_dead -= 1;
+            drop(guard);
+            self.n_dead.fetch_sub(1, Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Reclaim every tombstoned slot: rewrite each shard's arena and
+    /// bucket tables with dead slots dropped and survivors renumbered
+    /// (global ids untouched). Post-compaction queries are bit-identical
+    /// to pre-compaction ones — live slots keep their relative order, so
+    /// candidate generation order is unchanged. Returns the number of
+    /// slots reclaimed. Shards are compacted one at a time under their
+    /// write locks; callers needing a consistent cut with respect to
+    /// concurrent mutations must quiesce them first (the durable store
+    /// holds its WAL lock across compaction for exactly this reason).
+    pub fn compact_dead(&self) -> usize {
+        let mut reclaimed = 0usize;
+        for shard in &self.shards {
+            reclaimed += shard.write().unwrap().compact();
+        }
+        self.n_slots.fetch_sub(reclaimed, Ordering::SeqCst);
+        self.n_dead.fetch_sub(reclaimed, Ordering::SeqCst);
+        self.reclaimed.fetch_add(reclaimed as u64, Ordering::SeqCst);
+        self.compactions.fetch_add(1, Ordering::SeqCst);
+        reclaimed
     }
 
     /// Insert row `b` of a precomputed [`CodeMatrix`] — the flat bulk-build
@@ -305,6 +565,7 @@ impl ShardedLshIndex {
             }
         });
         idx.next_id.store(n, Ordering::SeqCst);
+        idx.n_slots.store(n, Ordering::SeqCst);
         Ok(idx)
     }
 
@@ -394,9 +655,9 @@ impl ShardedLshIndex {
             partials.push(partial);
         }
         let mut hits = merge_hits(self.metric, &opts.rerank, partials, opts.k);
-        if stats.candidates_examined == 0 && opts.exact_fallback && !self.is_empty() {
+        if stats.candidates_examined == 0 && opts.exact_fallback && self.live_len() > 0 {
             stats.exact_fallback = true;
-            stats.reranked += self.len();
+            stats.reranked += self.live_len();
             hits = self.exact_search(tensor, opts.k)?;
         }
         Ok(SearchResponse { hits, stats })
@@ -421,8 +682,14 @@ impl ShardedLshIndex {
             probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
             ..SearchStats::default()
         };
-        let (cand, counts) =
-            gather_candidates(&guard.tables, guard.items.len(), sigs, opts, &mut stats);
+        let (cand, counts) = gather_candidates(
+            &guard.tables,
+            guard.items.len(),
+            guard.dead_slice(),
+            sigs,
+            opts,
+            &mut stats,
+        );
         let hits = rerank_with_policy(
             self.metric,
             opts,
@@ -510,6 +777,19 @@ impl ShardedLshIndex {
                         let buckets: Vec<crate::store::segment::TableBuckets> =
                             guard.tables.iter().map(|t| t.sorted_buckets()).collect();
                         let sigs = sigs_arena_from_buckets(&buckets, guard.items.len())?;
+                        // Tombstoned slots stay in every section above (the
+                        // segment cross-validation wants each slot exactly
+                        // once per table); this ascending list marks which
+                        // of them are dead. Empty ⇒ the section is omitted,
+                        // so tombstone-free snapshots are byte-identical to
+                        // pre-mutability ones and old readers load new
+                        // segments as insert-only.
+                        let tombstones: Vec<u32> = guard
+                            .dead
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(sl, &d)| if d { Some(sl as u32) } else { None })
+                            .collect();
                         let header = SegmentHeader {
                             spec: spec.clone(),
                             n_items: guard.items.len(),
@@ -527,6 +807,7 @@ impl ShardedLshIndex {
                                 buckets: &buckets,
                                 items: &guard.items,
                                 norms: &guard.norms,
+                                tombstones: &tombstones,
                             },
                         )?;
                         Ok(guard.items.len())
@@ -546,6 +827,14 @@ impl ShardedLshIndex {
         m.insert("n_tables".to_string(), Json::Num(self.families.len() as f64));
         m.insert("probes".to_string(), Json::Num(self.probes as f64));
         m.insert("metric".to_string(), Json::Str(self.metric.name().into()));
+        // After a compaction has reclaimed slots, the id watermark exceeds
+        // the physical item count; record it so reopened stores keep
+        // issuing fresh ids. Omitted when they agree — keeping clean
+        // (never-compacted) manifests byte-identical to pre-mutability
+        // ones, which old readers parse unchanged.
+        if self.len() != n_items {
+            m.insert("next_id".to_string(), Json::Num(self.len() as f64));
+        }
         m.insert("spec".to_string(), spec.to_json());
         m.insert(
             "segments".to_string(),
@@ -592,6 +881,12 @@ impl ShardedLshIndex {
                 .iter()
                 .map(|s| Ok(s.as_str()?.to_string()))
                 .collect::<Result<_>>()?;
+            // Optional: only written once compaction has put the id
+            // watermark ahead of the physical item count (see `save`).
+            let next_id = match m.as_obj()?.get("next_id") {
+                Some(v) => Some(v.as_usize()?),
+                None => None,
+            };
             Ok((
                 m.get("n_shards")?.as_usize()?,
                 m.get("n_items")?.as_usize()?,
@@ -600,10 +895,17 @@ impl ShardedLshIndex {
                 Metric::parse(m.get("metric")?.as_str()?)?,
                 LshSpec::from_json(m.get("spec")?)?,
                 names,
+                next_id,
             ))
         })()
         .map_err(|e| corrupt(format!("sharded manifest invalid: {e}")))?;
-        let (n_shards, n_items, n_tables, probes, metric, spec, names) = parsed;
+        let (n_shards, n_items, n_tables, probes, metric, spec, names, next_id) = parsed;
+        let next_id = next_id.unwrap_or(n_items);
+        if next_id < n_items {
+            return Err(corrupt(format!(
+                "manifest next_id {next_id} is below its item count {n_items}"
+            )));
+        }
         if metric != spec.family.metric {
             return Err(corrupt("manifest metric disagrees with the spec".into()));
         }
@@ -657,11 +959,12 @@ impl ShardedLshIndex {
                 "shard segments hold {total} items, manifest says {n_items}"
             )));
         }
-        let mut seen = vec![false; n_items];
+        let mut seen = vec![false; next_id];
         let mut shards = Vec::with_capacity(n_shards);
+        let mut total_dead = 0usize;
         for (s, c) in contents.into_iter().enumerate() {
             for &id in &c.ids {
-                if id >= n_items || id % n_shards != s || seen[id] {
+                if id >= next_id || id % n_shards != s || seen[id] {
                     return Err(corrupt(format!(
                         "segment '{}': item id {id} out of range, misplaced, or duplicated",
                         names[s]
@@ -669,22 +972,37 @@ impl ShardedLshIndex {
                 }
                 seen[id] = true;
             }
+            // The segment reader already validated the tombstone list
+            // (strictly ascending, in range); adopt it as a bitmap.
+            let mut dead = vec![false; c.items.len()];
+            for &slot in &c.tombstones {
+                dead[slot as usize] = true;
+            }
+            total_dead += c.tombstones.len();
             shards.push(RwLock::new(Shard {
                 tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
                 ids: c.ids,
                 items: c.items,
                 norms: c.norms,
+                n_dead: c.tombstones.len(),
+                dead,
             }));
         }
-        // total == n_items + all ids distinct and < n_items ⇒ every id is
-        // present (pigeonhole); no separate missing-id scan needed.
-        debug_assert!(seen.iter().all(|&v| v));
+        // Without compaction holes (next_id == n_items): total == n_items
+        // + all ids distinct and < n_items ⇒ every id is present
+        // (pigeonhole). With holes the ids are a proper subset by
+        // construction.
+        debug_assert!(next_id != n_items || seen.iter().all(|&v| v));
         Ok(ShardedLshIndex {
             families,
             shards,
             metric,
             probes,
-            next_id: AtomicUsize::new(n_items),
+            next_id: AtomicUsize::new(next_id),
+            n_slots: AtomicUsize::new(n_items),
+            n_dead: AtomicUsize::new(total_dead),
+            compactions: AtomicU64::new(0),
+            reclaimed: AtomicU64::new(0),
             spec: Some(spec),
         })
     }
@@ -700,8 +1018,14 @@ impl ShardedLshIndex {
         for shard in &self.shards {
             let guard = shard.read().unwrap();
             let mut stats = SearchStats::default();
-            let (slots, _) =
-                gather_candidates(&guard.tables, guard.items.len(), &sigs, &opts, &mut stats);
+            let (slots, _) = gather_candidates(
+                &guard.tables,
+                guard.items.len(),
+                guard.dead_slice(),
+                &sigs,
+                &opts,
+                &mut stats,
+            );
             for slot in slots {
                 out.push(guard.ids[slot as usize]);
             }
@@ -709,13 +1033,17 @@ impl ShardedLshIndex {
         out
     }
 
-    /// Exact (linear-scan) k-NN — ground truth for recall measurements.
+    /// Exact (linear-scan) k-NN over the live set — ground truth for
+    /// recall measurements. Tombstoned items are excluded, same as every
+    /// hashed query path.
     pub fn exact_search(&self, q: &AnyTensor, k: usize) -> Result<Vec<SearchResult>> {
         let qn = q.frob_norm();
         let mut partials = Vec::with_capacity(self.shards.len());
         for shard in &self.shards {
             let guard = shard.read().unwrap();
-            let slots: Vec<u32> = (0..guard.items.len() as u32).collect();
+            let slots: Vec<u32> = (0..guard.items.len() as u32)
+                .filter(|&s| !guard.dead[s as usize])
+                .collect();
             partials.push(guard.rerank(self.metric, q, qn, slots, k)?);
         }
         Ok(merge_partials(self.metric, partials, k))
@@ -935,6 +1263,117 @@ mod tests {
         let q = idx.item(17);
         let resp = idx.query_with(&q, &QueryOpts::top_k(1)).unwrap();
         assert_eq!(resp.hits[0].id, 17);
+    }
+
+    #[test]
+    fn sharded_mutations_match_single_index_and_survive_compaction() {
+        let dims = vec![8usize, 8, 8];
+        let all = corpus(dims.clone(), 26, 41);
+        let items: Vec<AnyTensor> = all[..20].to_vec();
+        let cfg = cosine_config(dims, 8, 6, 1);
+        let mut single = LshIndex::build(&cfg, items.clone()).unwrap();
+        let sharded = ShardedLshIndex::build(&cfg, items.clone(), 3).unwrap();
+
+        // Same mutation script on both structures: ids stay identical
+        // while slots are merely tombstoned, so results must agree
+        // exactly (same equivalence the insert-only tests establish).
+        single.remove(3).unwrap();
+        sharded.remove(3).unwrap();
+        single.remove(7).unwrap();
+        sharded.remove(7).unwrap();
+        single.upsert(5, all[20].clone()).unwrap();
+        sharded.upsert(5, all[20].clone()).unwrap();
+        single.upsert(7, all[21].clone()).unwrap(); // revive
+        sharded.upsert(7, all[21].clone()).unwrap();
+        single.remove(11).unwrap();
+        sharded.remove(11).unwrap();
+
+        assert_eq!(sharded.len(), 20);
+        assert_eq!(sharded.live_len(), 18);
+        assert_eq!(sharded.dead_len(), 2);
+        assert!((sharded.dead_fraction() - 0.1).abs() < 1e-12);
+        assert!(sharded.is_live(5) && sharded.is_live(7) && !sharded.is_live(3));
+        assert!(sharded.has_slot(3), "tombstoned ids keep their slot until compaction");
+        let churn = sharded.churn_by_shard();
+        assert_eq!(churn.iter().map(|(l, _)| l).sum::<usize>(), 18);
+        assert_eq!(churn.iter().map(|(_, d)| d).sum::<usize>(), 2);
+
+        let opts = QueryOpts::top_k(6);
+        let queries: Vec<AnyTensor> = (0..8).map(|i| all[i * 3 % 22].clone()).collect();
+        let before: Vec<_> = queries
+            .iter()
+            .map(|q| {
+                let a = single.query_with(q, &opts).unwrap();
+                let b = sharded.query_with(q, &opts).unwrap();
+                assert_eq!(a.hits, b.hits, "tombstoned sharded ≡ tombstoned single");
+                assert_eq!(a.stats.candidates_generated, b.stats.candidates_generated);
+                b
+            })
+            .collect();
+
+        // Compaction reclaims the two dead slots; global ids and every
+        // query answer are unchanged bit for bit.
+        assert_eq!(sharded.compact_dead(), 2);
+        assert_eq!(sharded.len(), 20, "the id watermark never shrinks");
+        assert_eq!(sharded.live_len(), 18);
+        assert_eq!(sharded.dead_len(), 0);
+        assert_eq!(sharded.compactions_run(), 1);
+        assert_eq!(sharded.reclaimed_slots(), 2);
+        assert!(!sharded.has_slot(3) && !sharded.is_live(3));
+        assert!(sharded.is_live(5));
+        for (q, b) in queries.iter().zip(&before) {
+            let after = sharded.query_with(q, &opts).unwrap();
+            assert_eq!(after.hits, b.hits, "post-compaction answers are bit-identical");
+            assert_eq!(after.stats, b.stats);
+        }
+
+        // Compacted-away ids reject mutation with a distinct message...
+        let err = sharded.remove(3).unwrap_err().to_string();
+        assert!(err.contains("already removed and compacted"), "{err}");
+        let err = sharded.upsert(3, all[22].clone()).unwrap_err().to_string();
+        assert!(err.contains("insert it as a new item"), "{err}");
+        let err = sharded.remove(99).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // ...and new inserts keep drawing fresh ids past the holes.
+        let id = sharded.insert(all[22].clone());
+        assert_eq!(id, 20);
+        assert!(sharded.is_live(20));
+        assert!(sharded.item(20).same_dims(&all[22]));
+    }
+
+    #[test]
+    fn concurrent_removes_keep_counters_consistent() {
+        let dims = vec![6usize, 6];
+        let items = corpus(dims.clone(), 120, 42);
+        let cfg = cosine_config(dims, 6, 4, 0);
+        let idx = ShardedLshIndex::build(&cfg, items.clone(), 4).unwrap();
+        std::thread::scope(|scope| {
+            for chunk in (0..60).collect::<Vec<usize>>().chunks(15) {
+                let idx = &idx;
+                scope.spawn(move || {
+                    for &id in chunk {
+                        idx.remove(id).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(idx.live_len(), 60);
+        assert_eq!(idx.dead_len(), 60);
+        assert!((idx.dead_fraction() - 0.5).abs() < 1e-12);
+        // Every surviving hit is a live id, before and after compaction.
+        let opts = QueryOpts::top_k(10);
+        for q in items.iter().take(6) {
+            for hit in idx.query_with(q, &opts).unwrap().hits {
+                assert!(hit.id >= 60, "dead id {} surfaced", hit.id);
+            }
+        }
+        assert_eq!(idx.compact_dead(), 60);
+        assert_eq!(idx.live_len(), 60);
+        for q in items.iter().take(6) {
+            for hit in idx.query_with(q, &opts).unwrap().hits {
+                assert!(hit.id >= 60, "dead id {} surfaced post-compaction", hit.id);
+            }
+        }
     }
 
     #[test]

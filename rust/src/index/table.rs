@@ -47,6 +47,49 @@ impl HashTable {
         self.buckets.entry(sig).or_default().push(id);
     }
 
+    /// Insert an id at the position that keeps its bucket ascending by
+    /// slot — the order append-only inserts establish naturally and the
+    /// mutation paths (upsert re-insertion) must preserve, so candidate
+    /// generation order — and therefore every `SearchResponse`, including
+    /// under `max_candidates` truncation — stays identical to a rebuild
+    /// from the live set.
+    pub fn insert_sorted(&mut self, sig: u64, id: u32) {
+        let bucket = self.buckets.entry(sig).or_default();
+        let pos = bucket.partition_point(|&s| s < id);
+        bucket.insert(pos, id);
+    }
+
+    /// Remove one id from a bucket, dropping the bucket when it empties.
+    /// Returns whether the id was present.
+    pub fn remove_slot(&mut self, sig: u64, id: u32) -> bool {
+        let Some(bucket) = self.buckets.get_mut(&sig) else {
+            return false;
+        };
+        let Some(pos) = bucket.iter().position(|&s| s == id) else {
+            return false;
+        };
+        bucket.remove(pos);
+        if bucket.is_empty() {
+            self.buckets.remove(&sig);
+        }
+        true
+    }
+
+    /// Rewrite every bucket through a slot remap (`remap[old] = new`, with
+    /// `u32::MAX` marking a dropped slot) — the compaction pass. Surviving
+    /// slots keep their relative order (the remap is monotonic on live
+    /// slots), emptied buckets are removed, and nothing is rehashed.
+    pub fn compact(&mut self, remap: &[u32]) {
+        self.buckets.retain(|_, bucket| {
+            bucket.retain_mut(|slot| {
+                let new = remap[*slot as usize];
+                *slot = new;
+                new != u32::MAX
+            });
+            !bucket.is_empty()
+        });
+    }
+
     /// The bucket for a signature (empty slice if none).
     pub fn bucket(&self, sig: u64) -> &[u32] {
         self.buckets.get(&sig).map(|v| v.as_slice()).unwrap_or(&[])
@@ -131,6 +174,50 @@ mod tests {
         assert_eq!(back.bucket(9), &[4, 2]);
         assert_eq!(back.bucket(2), &[1]);
         assert_eq!(back.n_buckets(), 2);
+    }
+
+    #[test]
+    fn insert_sorted_keeps_ascending_slot_order() {
+        let mut t = HashTable::new();
+        for id in [1u32, 3, 7] {
+            t.insert(5, id);
+        }
+        t.insert_sorted(5, 4); // middle
+        t.insert_sorted(5, 0); // front
+        t.insert_sorted(5, 9); // back
+        assert_eq!(t.bucket(5), &[0, 1, 3, 4, 7, 9]);
+        t.insert_sorted(6, 2); // fresh bucket
+        assert_eq!(t.bucket(6), &[2]);
+    }
+
+    #[test]
+    fn remove_slot_drops_emptied_buckets() {
+        let mut t = HashTable::new();
+        t.insert(5, 1);
+        t.insert(5, 2);
+        t.insert(8, 3);
+        assert!(t.remove_slot(5, 1));
+        assert_eq!(t.bucket(5), &[2]);
+        assert!(!t.remove_slot(5, 1), "absent id");
+        assert!(!t.remove_slot(99, 1), "absent bucket");
+        assert!(t.remove_slot(8, 3));
+        assert_eq!(t.bucket(8), &[] as &[u32]);
+        assert_eq!(t.n_buckets(), 1, "emptied bucket is gone");
+    }
+
+    #[test]
+    fn compact_remaps_and_preserves_relative_order() {
+        let mut t = HashTable::new();
+        t.insert(5, 0);
+        t.insert(5, 2);
+        t.insert(5, 4);
+        t.insert(8, 1);
+        t.insert(9, 3);
+        // Drop slots 1 and 3; survivors 0,2,4 renumber to 0,1,2.
+        let remap = [0, u32::MAX, 1, u32::MAX, 2];
+        t.compact(&remap);
+        assert_eq!(t.bucket(5), &[0, 1, 2]);
+        assert_eq!(t.n_buckets(), 1, "fully-dead buckets are gone");
     }
 
     #[test]

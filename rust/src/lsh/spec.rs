@@ -341,19 +341,25 @@ impl SeedPolicy {
 }
 
 /// Optional durable-store configuration: where the serving stack snapshots
-/// the index ([`crate::store::Store`]) and how often the WAL checkpoints.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// the index ([`crate::store::Store`]), how often the WAL checkpoints, and
+/// when churn triggers an arena-reclaiming compaction.
+#[derive(Clone, Debug, PartialEq)]
 pub struct StoreSpec {
     /// Store directory (snapshot generations + `wal.log`).
     pub dir: String,
     /// Compact (fresh snapshot + WAL truncation) automatically after this
-    /// many logged inserts; 0 = manual compaction only.
+    /// many logged mutations; 0 = manual compaction only.
     pub checkpoint_every: usize,
+    /// Dead-fraction compaction trigger: once this fraction of slots is
+    /// tombstoned by deletes, the next checkpoint reclaims them (arena +
+    /// bucket rewrite). 0 disables the trigger (manual compaction still
+    /// reclaims). Must be in `[0, 1)`.
+    pub compact_dead_fraction: f64,
 }
 
 impl StoreSpec {
     pub fn new(dir: impl Into<String>) -> StoreSpec {
-        StoreSpec { dir: dir.into(), checkpoint_every: 0 }
+        StoreSpec { dir: dir.into(), checkpoint_every: 0, compact_dead_fraction: 0.0 }
     }
 
     pub fn with_checkpoint_every(mut self, n: usize) -> StoreSpec {
@@ -361,9 +367,23 @@ impl StoreSpec {
         self
     }
 
+    pub fn with_compact_dead_fraction(mut self, f: f64) -> StoreSpec {
+        self.compact_dead_fraction = f;
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.dir.is_empty() {
             return Err(Error::InvalidSpec("store dir must not be empty".into()));
+        }
+        if !self.compact_dead_fraction.is_finite()
+            || self.compact_dead_fraction < 0.0
+            || self.compact_dead_fraction >= 1.0
+        {
+            return Err(Error::InvalidSpec(format!(
+                "store compact_dead_fraction must be in [0, 1), got {}",
+                self.compact_dead_fraction
+            )));
         }
         Ok(())
     }
@@ -375,16 +395,32 @@ impl StoreSpec {
             "checkpoint_every".to_string(),
             Json::Num(self.checkpoint_every as f64),
         );
+        // Emitted only when armed: specs written before the knob existed
+        // stay byte-identical through a round-trip.
+        if self.compact_dead_fraction != 0.0 {
+            m.insert(
+                "compact_dead_fraction".to_string(),
+                Json::Num(self.compact_dead_fraction),
+            );
+        }
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<StoreSpec> {
-        reject_unknown(v, &["dir", "checkpoint_every"], "store")?;
+        reject_unknown(
+            v,
+            &["dir", "checkpoint_every", "compact_dead_fraction"],
+            "store",
+        )?;
         Ok(StoreSpec {
             dir: v.get("dir")?.as_str()?.to_string(),
             checkpoint_every: match v.as_obj()?.get("checkpoint_every") {
                 Some(n) => n.as_usize()?,
                 None => 0,
+            },
+            compact_dead_fraction: match v.as_obj()?.get("compact_dead_fraction") {
+                Some(n) => n.as_f64()?,
+                None => 0.0,
             },
         })
     }
@@ -485,7 +521,7 @@ impl NetSpec {
 }
 
 /// Serving-side knobs the coordinator and sharded index read off the spec.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServingSpec {
     /// Index shards (re-rank fan-out width).
     pub shards: usize,
@@ -1253,21 +1289,20 @@ impl CoordinatorBuilder {
     pub fn create_store(&self, items: Vec<AnyTensor>) -> Result<Arc<Store>> {
         let store_spec = self.store_spec()?;
         let index = self.build_index(items)?;
-        Ok(Arc::new(Store::create(
-            store_spec.dir.as_ref(),
-            index,
-            store_spec.checkpoint_every,
-        )?))
+        Ok(Arc::new(
+            Store::create(store_spec.dir.as_ref(), index, store_spec.checkpoint_every)?
+                .with_compact_dead_fraction(store_spec.compact_dead_fraction),
+        ))
     }
 
     /// Warm-start from the spec's durable store: newest valid snapshot +
     /// WAL replay ([`Store::open`]).
     pub fn open_store(&self) -> Result<Arc<Store>> {
         let store_spec = self.store_spec()?;
-        Ok(Arc::new(Store::open(
-            store_spec.dir.as_ref(),
-            store_spec.checkpoint_every,
-        )?))
+        Ok(Arc::new(
+            Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?
+                .with_compact_dead_fraction(store_spec.compact_dead_fraction),
+        ))
     }
 
     /// Spin up the pipeline over a durable store (native hash backend):
@@ -1336,11 +1371,36 @@ mod tests {
         let back = LshSpec::from_json_str(&durable.to_json_string()).unwrap();
         assert_eq!(back, durable);
         assert_eq!(back.serving.store.as_ref().unwrap().checkpoint_every, 5000);
+        // With the trigger disarmed (0.0) the key is omitted entirely, so
+        // the JSON is identical to what pre-knob builds emitted…
+        assert!(!durable.to_json_string().contains("compact_dead_fraction"));
+        // …and when armed it round-trips bit-exactly.
+        let churny = spec.clone().with_store(
+            StoreSpec::new("/var/lib/tensorlsh").with_compact_dead_fraction(0.25),
+        );
+        let back = LshSpec::from_json_str(&churny.to_json_string()).unwrap();
+        assert_eq!(back, churny);
+        assert_eq!(
+            back.serving.store.as_ref().unwrap().compact_dead_fraction,
+            0.25
+        );
         // An empty store dir is a typed validation error.
         assert!(matches!(
             spec.clone().with_store(StoreSpec::new("")).validate(),
             Err(Error::InvalidSpec(_))
         ));
+        // Out-of-range dead fractions are typed validation errors.
+        for bad in [-0.1, 1.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                matches!(
+                    spec.clone()
+                        .with_store(StoreSpec::new("d").with_compact_dead_fraction(bad))
+                        .validate(),
+                    Err(Error::InvalidSpec(_))
+                ),
+                "compact_dead_fraction {bad} must be rejected"
+            );
+        }
         // The optional listener section round-trips too.
         let listening = spec.clone().with_listen(NetSpec {
             addr: "0.0.0.0:7878".to_string(),

@@ -11,7 +11,8 @@
 //! commands:
 //!   info     show effective config + canonical spec JSON, validity report,
 //!            artifact manifest; `info <file.seg>` describes a snapshot
-//!            segment (header, sections, sizes)
+//!            segment (header, sections, sizes); `info --store <dir>`
+//!            reports per-shard live/tombstone counts and the dead fraction
 //!   plan     (K, L) parameter planning from collision probabilities;
 //!            prints the planned spec JSON on stdout (summary on stderr),
 //!            so `plan > spec.json` feeds straight back into `--config`
@@ -24,6 +25,12 @@
 //!   load     warm-start from a durable store (snapshot + WAL replay) and
 //!            verify it with self-queries: --store <dir>
 //!   compact  checkpoint a store: fresh snapshot generation + WAL truncate
+//!            (reclaims tombstoned slots from the signature arena)
+//!   remove   tombstone one id: `remove <id> --store <dir>` mutates the
+//!            store directly; `remove <addr> <id>` deletes on a server
+//!   upsert   replace one id's tensor in place: `upsert <id> --store <dir>`
+//!            or `upsert <addr> <id>` (replacement tensor is drawn from the
+//!            config's shape/seed)
 //!   serve    run the coordinator over a synthetic query trace;
 //!            `serve --store <dir>` warm-starts from (or initializes) the
 //!            store and checkpoints on shutdown;
@@ -75,7 +82,8 @@ fn print_usage() {
         "tensorlsh — tensorized random-projection LSH (CP/TT-E2LSH, CP/TT-SRP)\n\n\
          usage: tensorlsh <command> [--config file.json] [key=value ...]\n\n\
          commands:\n\
-         \x20 info     show effective config + spec JSON, validity report, artifacts\n\
+         \x20 info     show effective config + spec JSON, validity report, artifacts;\n\
+         \x20          info --store <dir> reports live/tombstone counts per shard\n\
          \x20 plan     (K, L) planning from collision probabilities; prints the\n\
          \x20          planned spec JSON on stdout (plan > spec.json, then\n\
          \x20          feed it back with --config spec.json)\n\
@@ -86,7 +94,12 @@ fn print_usage() {
          \x20          --fallback --no-dedup\n\
          \x20 save     build an index + initialize a durable store (--store <dir>)\n\
          \x20 load     warm-start from a store, verify with self-queries\n\
-         \x20 compact  checkpoint a store (fresh snapshot, truncate the WAL)\n\
+         \x20 compact  checkpoint a store (fresh snapshot, truncate the WAL,\n\
+         \x20          reclaim tombstoned slots)\n\
+         \x20 remove   tombstone one id: remove <id> --store <dir>,\n\
+         \x20          or remove <addr> <id> against a listening server\n\
+         \x20 upsert   replace one id's tensor in place: upsert <id> --store <dir>,\n\
+         \x20          or upsert <addr> <id> (tensor drawn from the config)\n\
          \x20 serve    run the coordinator over a synthetic query trace;\n\
          \x20          --store <dir> warm-starts and checkpoints on shutdown;\n\
          \x20          --listen <addr> serves the framed TCP wire protocol\n\
@@ -100,8 +113,8 @@ fn print_usage() {
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
          \x20            precision sample n_items top_k n_workers shards max_batch\n\
          \x20            max_wait_us seed seed_stride artifact_dir store\n\
-         \x20            checkpoint_every listen max_conns read_timeout_ms\n\
-         \x20            write_timeout_ms max_inflight"
+         \x20            checkpoint_every compact_dead_fraction listen max_conns\n\
+         \x20            read_timeout_ms write_timeout_ms max_inflight"
     );
 }
 
@@ -139,6 +152,8 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "save" => cmd_save(&cfg, &positional),
         "load" => cmd_load(&cfg, &positional),
         "compact" => cmd_compact(&cfg, &positional),
+        "remove" => cmd_remove(&cfg, &positional),
+        "upsert" => cmd_upsert(&cfg, &positional),
         "serve" => cmd_serve(&cfg, &positional),
         "ping" => cmd_ping(&positional),
         "remote-query" => cmd_remote_query(&cfg, &positional),
@@ -152,6 +167,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
 }
 
 fn cmd_info(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    // `info --store <dir>`: churn report instead of the config.
+    let (store_flag, positional) = split_store_flag(positional)?;
+    if let Some(dir) = store_flag {
+        return cmd_info_store(dir.as_ref());
+    }
     // `info <file.seg>`: describe a snapshot segment instead of the config.
     if let Some(path) = positional.first() {
         print!("{}", store::describe(path.as_ref())?);
@@ -178,6 +198,38 @@ fn cmd_info(cfg: &AppConfig, positional: &[String]) -> Result<()> {
         }
         None => println!("\n# artifacts: none found (run `make artifacts`)"),
     }
+    Ok(())
+}
+
+/// `info --store <dir>`: open the store and report per-shard live/tombstone
+/// slot counts plus the dead fraction the compaction trigger watches.
+fn cmd_info_store(dir: &std::path::Path) -> Result<()> {
+    let store = Store::open(dir, 0)?;
+    let index = store.index();
+    let slots = index.live_len() + index.dead_len();
+    println!(
+        "store '{}': generation {}, id watermark {}",
+        store.dir().display(),
+        store.generation(),
+        index.len()
+    );
+    println!(
+        "slots: {} live, {} tombstoned of {} (dead fraction {:.3})",
+        index.live_len(),
+        index.dead_len(),
+        slots,
+        index.dead_fraction()
+    );
+    for (s, (live, dead)) in index.churn_by_shard().iter().enumerate() {
+        let total = live + dead;
+        let frac = if total == 0 { 0.0 } else { *dead as f64 / total as f64 };
+        println!("  shard {s}: {live} live, {dead} tombstoned (dead fraction {frac:.3})");
+    }
+    println!(
+        "compactions run: {}, slots reclaimed: {}",
+        index.compactions_run(),
+        index.reclaimed_slots()
+    );
     Ok(())
 }
 
@@ -392,14 +444,16 @@ fn split_store_flag(positional: &[String]) -> Result<(Option<String>, Vec<String
 
 /// The store to operate on: the `--store` flag wins, otherwise the spec's
 /// `serving.store` section; having neither is a typed config error. The
-/// flag keeps the spec's checkpoint threshold when one is configured.
+/// flag keeps the spec's checkpoint threshold and compaction trigger when
+/// they are configured.
 fn resolve_store(cfg: &AppConfig, flag: Option<String>) -> Result<StoreSpec> {
     let configured = cfg.spec.serving.store.clone();
     match flag {
-        Some(dir) => Ok(StoreSpec {
-            dir,
-            checkpoint_every: configured.map_or(0, |s| s.checkpoint_every),
-        }),
+        Some(dir) => {
+            let (checkpoint_every, compact_dead_fraction) = configured
+                .map_or((0, 0.0), |s| (s.checkpoint_every, s.compact_dead_fraction));
+            Ok(StoreSpec { dir, checkpoint_every, compact_dead_fraction })
+        }
         None => configured.ok_or_else(|| {
             Error::Config(
                 "no store configured (pass --store <dir> or set store=<dir>)".into(),
@@ -408,13 +462,21 @@ fn resolve_store(cfg: &AppConfig, flag: Option<String>) -> Result<StoreSpec> {
     }
 }
 
+/// Open an existing store with the spec's checkpoint and compaction knobs
+/// armed.
+fn open_store(store_spec: &StoreSpec) -> Result<Store> {
+    Ok(Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?
+        .with_compact_dead_fraction(store_spec.compact_dead_fraction))
+}
+
 /// Build the spec's index over a synthetic corpus and initialize a durable
 /// store at --store <dir>.
 fn cmd_save(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (flag, _) = split_store_flag(positional)?;
     let store_spec = resolve_store(cfg, flag)?;
     let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
-    let store = Store::create(store_spec.dir.as_ref(), index, store_spec.checkpoint_every)?;
+    let store = Store::create(store_spec.dir.as_ref(), index, store_spec.checkpoint_every)?
+        .with_compact_dead_fraction(store_spec.compact_dead_fraction);
     println!(
         "saved {} items ({} shards × {} tables) to '{}' (generation {})",
         store.len(),
@@ -430,7 +492,7 @@ fn cmd_save(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 fn cmd_load(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (flag, _) = split_store_flag(positional)?;
     let store_spec = resolve_store(cfg, flag)?;
-    let store = Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?;
+    let store = open_store(&store_spec)?;
     let rec = store.recovery();
     println!(
         "opened '{}': {} items, generation {}, {} WAL records replayed{}{}",
@@ -469,13 +531,85 @@ fn cmd_load(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 fn cmd_compact(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (flag, _) = split_store_flag(positional)?;
     let store_spec = resolve_store(cfg, flag)?;
-    let store = Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?;
+    let store = open_store(&store_spec)?;
     let pending = store.wal_pending();
+    let dead_before = store.index().dead_len();
     let generation = store.compact()?;
     println!(
-        "compacted '{}': folded {pending} WAL records into generation {generation}",
+        "compacted '{}': folded {pending} WAL records into generation {generation}, \
+         reclaimed {dead_before} tombstoned slots",
         store.dir().display()
     );
+    Ok(())
+}
+
+/// Parse the id argument for `remove`/`upsert` in their remote
+/// (`<addr> <id>`) form.
+fn remote_id(rest: &[String], cmd: &str) -> Result<u64> {
+    let v = rest
+        .get(1)
+        .ok_or_else(|| Error::Config(format!("{cmd} <addr> needs an id")))?;
+    v.parse().map_err(|e| Error::Config(format!("{cmd} id '{v}': {e}")))
+}
+
+/// Tombstone one id. `remove <id> --store <dir>` mutates the durable store
+/// directly (WAL-logged, so a crash mid-way replays it); `remove <addr> <id>`
+/// sends a Remove frame to a listening server.
+fn cmd_remove(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (flag, rest) = split_store_flag(positional)?;
+    let first = rest.first().map(|s| s.as_str()).ok_or_else(|| {
+        Error::Config("remove needs an id (remove <id> --store <dir> | remove <addr> <id>)".into())
+    })?;
+    if let Ok(id) = first.parse::<usize>() {
+        let store_spec = resolve_store(cfg, flag)?;
+        let store = open_store(&store_spec)?;
+        store.remove(id)?;
+        println!(
+            "removed id {id} from '{}': {} live, {} tombstoned (dead fraction {:.3})",
+            store.dir().display(),
+            store.index().live_len(),
+            store.index().dead_len(),
+            store.index().dead_fraction()
+        );
+        return Ok(());
+    }
+    let id = remote_id(&rest, "remove")?;
+    let mut client = Client::connect_timeout(first, Duration::from_secs(5))?;
+    client.remove(id)?;
+    println!("{first}: removed id {id}");
+    Ok(())
+}
+
+/// Replace one id's tensor in place. The replacement tensor is drawn from
+/// the config's shape/seed (the CLI has no tensor file format); library
+/// users pass their own via `Store::upsert` / `Client::upsert`.
+fn cmd_upsert(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (flag, rest) = split_store_flag(positional)?;
+    let first = rest.first().map(|s| s.as_str()).ok_or_else(|| {
+        Error::Config("upsert needs an id (upsert <id> --store <dir> | upsert <addr> <id>)".into())
+    })?;
+    let mut rng = Rng::derive(cfg.spec.seeds.base, &[0x0B5E]);
+    let x = AnyTensor::Cp(CpTensor::random_gaussian(
+        &mut rng,
+        &cfg.spec.family.dims,
+        cfg.rank_in,
+    ));
+    if let Ok(id) = first.parse::<usize>() {
+        let store_spec = resolve_store(cfg, flag)?;
+        let store = open_store(&store_spec)?;
+        store.upsert(id, x)?;
+        println!(
+            "upserted id {id} in '{}': {} live, {} tombstoned",
+            store.dir().display(),
+            store.index().live_len(),
+            store.index().dead_len()
+        );
+        return Ok(());
+    }
+    let id = remote_id(&rest, "upsert")?;
+    let mut client = Client::connect_timeout(first, Duration::from_secs(5))?;
+    client.upsert(id, &x)?;
+    println!("{first}: upserted id {id}");
     Ok(())
 }
 
@@ -522,7 +656,7 @@ fn cmd_serve_listen(
         let store_spec = resolve_store(cfg, store_flag)?;
         let dir: &std::path::Path = store_spec.dir.as_ref();
         let store = if Store::exists(dir) {
-            let store = Arc::new(Store::open(dir, store_spec.checkpoint_every)?);
+            let store = Arc::new(open_store(&store_spec)?);
             println!(
                 "warm-started '{}': {} items (generation {}, {} WAL records replayed)",
                 dir.display(),
@@ -533,7 +667,10 @@ fn cmd_serve_listen(
             store
         } else {
             let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
-            let store = Arc::new(Store::create(dir, index, store_spec.checkpoint_every)?);
+            let store = Arc::new(
+                Store::create(dir, index, store_spec.checkpoint_every)?
+                    .with_compact_dead_fraction(store_spec.compact_dead_fraction),
+            );
             println!("initialized '{}' with {} items", dir.display(), store.len());
             store
         };
@@ -605,7 +742,7 @@ fn cmd_stop(positional: &[String]) -> Result<()> {
 fn cmd_serve_durable(cfg: &AppConfig, store_spec: StoreSpec) -> Result<()> {
     let dir: &std::path::Path = store_spec.dir.as_ref();
     let store = if Store::exists(dir) {
-        let store = Arc::new(Store::open(dir, store_spec.checkpoint_every)?);
+        let store = Arc::new(open_store(&store_spec)?);
         println!(
             "warm-started '{}': {} items (generation {}, {} WAL records replayed)",
             dir.display(),
@@ -616,7 +753,10 @@ fn cmd_serve_durable(cfg: &AppConfig, store_spec: StoreSpec) -> Result<()> {
         store
     } else {
         let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
-        let store = Arc::new(Store::create(dir, index, store_spec.checkpoint_every)?);
+        let store = Arc::new(
+            Store::create(dir, index, store_spec.checkpoint_every)?
+                .with_compact_dead_fraction(store_spec.compact_dead_fraction),
+        );
         println!("initialized '{}' with {} items", dir.display(), store.len());
         store
     };

@@ -122,6 +122,25 @@ impl Client {
         }
     }
 
+    /// Durable remote delete by id (tombstoned server-side, reclaimed by a
+    /// later compaction).
+    pub fn remove(&mut self, id: u64) -> Result<()> {
+        match self.call(&Request::Remove(id))? {
+            Response::Removed => Ok(()),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "Removed")),
+        }
+    }
+
+    /// Durable remote in-place replace of an existing id's tensor.
+    pub fn upsert(&mut self, id: u64, x: &AnyTensor) -> Result<()> {
+        match self.call(&Request::Upsert(id, x.clone()))? {
+            Response::Upserted => Ok(()),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "Upserted")),
+        }
+    }
+
     /// The server's live metrics snapshot.
     pub fn stats(&mut self) -> Result<MetricsSnapshot> {
         match self.call(&Request::Stats)? {

@@ -69,6 +69,8 @@ pub mod ftype {
     pub const INSERT: u8 = 4;
     pub const STATS: u8 = 5;
     pub const SHUTDOWN: u8 = 6;
+    pub const REMOVE: u8 = 7;
+    pub const UPSERT: u8 = 8;
 
     pub const PONG: u8 = 0x81;
     pub const RESULTS: u8 = 0x82;
@@ -78,6 +80,8 @@ pub mod ftype {
     pub const BUSY: u8 = 0x86;
     pub const ERROR: u8 = 0x87;
     pub const BYE: u8 = 0x88;
+    pub const REMOVED: u8 = 0x89;
+    pub const UPSERTED: u8 = 0x8A;
 }
 
 /// A client→server message.
@@ -89,6 +93,10 @@ pub enum Request {
     Insert(AnyTensor),
     Stats,
     Shutdown,
+    /// Durable delete by id (tombstoned, reclaimed by compaction).
+    Remove(u64),
+    /// Durable in-place replace of an existing id's tensor.
+    Upsert(u64, AnyTensor),
 }
 
 /// A server→client message.
@@ -107,6 +115,10 @@ pub enum Response {
     Error(String),
     /// Acknowledges `Shutdown`; the server is draining.
     Bye,
+    /// Acknowledges a durable `Remove`.
+    Removed,
+    /// Acknowledges a durable `Upsert`.
+    Upserted,
 }
 
 impl Response {
@@ -121,6 +133,8 @@ impl Response {
             Response::Busy(_) => "Busy",
             Response::Error(_) => "Error",
             Response::Bye => "Bye",
+            Response::Removed => "Removed",
+            Response::Upserted => "Upserted",
         }
     }
 }
@@ -213,6 +227,8 @@ impl Request {
             Request::Insert(_) => ftype::INSERT,
             Request::Stats => ftype::STATS,
             Request::Shutdown => ftype::SHUTDOWN,
+            Request::Remove(_) => ftype::REMOVE,
+            Request::Upsert(_, _) => ftype::UPSERT,
         }
     }
 
@@ -227,6 +243,11 @@ impl Request {
                 }
             }
             Request::Insert(x) => encode_tensor(out, x),
+            Request::Remove(id) => out.put_u64(*id),
+            Request::Upsert(id, x) => {
+                out.put_u64(*id);
+                encode_tensor(out, x);
+            }
         }
     }
 
@@ -254,6 +275,11 @@ impl Request {
                 Request::SearchBatch(qs)
             }
             ftype::INSERT => Request::Insert(decode_tensor(&mut r)?),
+            ftype::REMOVE => Request::Remove(r.u64()?),
+            ftype::UPSERT => {
+                let id = r.u64()?;
+                Request::Upsert(id, decode_tensor(&mut r)?)
+            }
             other => return Err(corrupt(format!("unknown request frame type {other:#04x}"))),
         };
         if !r.is_empty() {
@@ -274,12 +300,14 @@ impl Response {
             Response::Busy(_) => ftype::BUSY,
             Response::Error(_) => ftype::ERROR,
             Response::Bye => ftype::BYE,
+            Response::Removed => ftype::REMOVED,
+            Response::Upserted => ftype::UPSERTED,
         }
     }
 
     pub fn encode_payload(&self, out: &mut Vec<u8>) {
         match self {
-            Response::Pong | Response::Bye => {}
+            Response::Pong | Response::Bye | Response::Removed | Response::Upserted => {}
             Response::Results(resp) => encode_search_response(out, resp),
             Response::BatchResults(resps) => {
                 out.put_u32(resps.len() as u32);
@@ -298,6 +326,8 @@ impl Response {
         let resp = match frame_type {
             ftype::PONG => Response::Pong,
             ftype::BYE => Response::Bye,
+            ftype::REMOVED => Response::Removed,
+            ftype::UPSERTED => Response::Upserted,
             ftype::RESULTS => Response::Results(decode_search_response(&mut r)?),
             ftype::BATCH_RESULTS => {
                 let n = r.u32()? as usize;
@@ -517,6 +547,8 @@ mod tests {
             Request::Search(sample_query(1)),
             Request::SearchBatch(vec![sample_query(2), sample_query(3)]),
             Request::Insert(sample_query(4).tensor),
+            Request::Remove(42),
+            Request::Upsert(17, sample_query(10).tensor),
         ];
         for req in &snapshots {
             let bytes = frame_bytes_request(req);
@@ -539,6 +571,11 @@ mod tests {
                 (Request::Insert(a), Request::Insert(b)) => {
                     assert!(crate::store::tensors_bit_equal(a, b));
                 }
+                (Request::Remove(a), Request::Remove(b)) => assert_eq!(a, b),
+                (Request::Upsert(a, x), Request::Upsert(b, y)) => {
+                    assert_eq!(a, b);
+                    assert!(crate::store::tensors_bit_equal(x, y));
+                }
                 other => panic!("variant changed in transit: {other:?}"),
             }
         }
@@ -557,6 +594,8 @@ mod tests {
             Response::Stats(metrics.snapshot()),
             Response::Busy("queue depth 4096".into()),
             Response::Error("no durable store attached".into()),
+            Response::Removed,
+            Response::Upserted,
         ];
         for resp in &snapshots {
             let bytes = frame_bytes_response(resp);
@@ -569,6 +608,8 @@ mod tests {
                 (Response::Stats(a), Response::Stats(b)) => assert_eq!(a, b),
                 (Response::Busy(a), Response::Busy(b)) => assert_eq!(a, b),
                 (Response::Error(a), Response::Error(b)) => assert_eq!(a, b),
+                (Response::Removed, Response::Removed)
+                | (Response::Upserted, Response::Upserted) => {}
                 other => panic!("variant changed in transit: {other:?}"),
             }
         }

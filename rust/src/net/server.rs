@@ -325,6 +325,24 @@ fn answer(req: Request, shared: &Shared) -> Response {
                 "this server has no durable store attached (start with --store)".into(),
             ),
         },
+        Request::Remove(id) => match shared.dispatcher.store() {
+            Some(store) => match store.remove(id as usize) {
+                Ok(()) => Response::Removed,
+                Err(e) => Response::Error(format!("remove failed: {e}")),
+            },
+            None => Response::Error(
+                "this server has no durable store attached (start with --store)".into(),
+            ),
+        },
+        Request::Upsert(id, x) => match shared.dispatcher.store() {
+            Some(store) => match store.upsert(id as usize, x) {
+                Ok(()) => Response::Upserted,
+                Err(e) => Response::Error(format!("upsert failed: {e}")),
+            },
+            None => Response::Error(
+                "this server has no durable store attached (start with --store)".into(),
+            ),
+        },
         Request::Search(q) => match admit(shared, 1) {
             Err(m) => Response::Busy(m),
             Ok(()) => match shared.dispatcher.query_timeout(&q, Some(shared.cfg.request_timeout)) {

@@ -51,6 +51,12 @@ pub mod tag {
     pub const ITEMS: u32 = 5;
     /// Cached Frobenius norms (`f64` per slot).
     pub const NORMS: u32 = 6;
+    /// Strictly-ascending list of tombstoned slots (`u64` count, then a
+    /// `u32` per dead slot). Written only when at least one slot is dead,
+    /// so tombstone-free segments stay byte-identical to pre-mutability
+    /// ones — and because unknown tags are skipped (see the module docs),
+    /// pre-mutability readers load tombstoned segments as insert-only.
+    pub const TOMBSTONES: u32 = 7;
 }
 
 fn corrupt(msg: impl Into<String>) -> Error {

@@ -1,4 +1,5 @@
-//! Durable index store: versioned snapshot segments + an insert WAL.
+//! Durable index store: versioned snapshot segments + a mutation WAL
+//! (inserts, deletes, upserts), with tombstone-aware compaction.
 //!
 //! Everything above this module is memory-only; this is the layer that
 //! makes a built index survive a restart. The paper's point — tensorized
@@ -18,14 +19,20 @@
 //! * [`segment`] — one snapshot file: spec JSON header, id map, flat
 //!   signature arena, per-table buckets, items, norms — cross-validated
 //!   on load so a segment either reconstructs the exact index or refuses.
-//! * [`wal`] — the append-only insert log: torn tails are dropped (crash
-//!   mid-append), damaged history is [`Error::Corrupt`].
+//! * [`wal`] — the append-only mutation log (insert / delete / upsert
+//!   records): torn tails are dropped (crash mid-append), damaged history
+//!   is [`Error::Corrupt`].
 //! * [`Store`] — the directory-level database: numbered snapshot
 //!   generations (`snap-000001/`, `snap-000002/`, …) each written by
 //!   [`crate::index::ShardedLshIndex::save`] (one segment per shard, in
 //!   parallel, plus a manifest), and one `wal.log`. [`Store::open`] loads
 //!   the newest generation that validates and replays the log;
 //!   [`Store::compact`] writes a fresh generation and truncates the log.
+//!   [`Store::remove`] / [`Store::upsert`] log churn durably; when the
+//!   tombstoned fraction crosses
+//!   [`Store::with_compact_dead_fraction`]'s threshold, the next
+//!   checkpoint also rewrites the signature arena with dead slots
+//!   reclaimed.
 //!
 //! The single-file entry points [`crate::index::LshIndex::save`] /
 //! [`crate::index::LshIndex::load`] use the same segment format without
@@ -90,20 +97,29 @@ pub struct RecoveryInfo {
 
 struct WalState {
     writer: wal::WalWriter,
-    /// Inserts logged since the current generation's snapshot.
+    /// Durable mutations (inserts, deletes, upserts) logged since the
+    /// current generation's snapshot.
     pending: usize,
     generation: u64,
 }
 
 /// Directory-level durable store over a [`ShardedLshIndex`]: numbered
-/// snapshot generations plus an insert WAL. `&self` throughout — inserts
-/// serialize on the WAL lock, queries go straight to [`Store::index`].
+/// snapshot generations plus a mutation WAL. `&self` throughout —
+/// mutations serialize on the WAL lock, queries go straight to
+/// [`Store::index`].
 pub struct Store {
     dir: PathBuf,
     index: Arc<ShardedLshIndex>,
-    /// Compact automatically after this many WAL inserts (0 = manual only)
-    /// — the threshold checkpoint hook `ServingSpec::store` configures.
+    /// Compact automatically after this many WAL records (0 = manual
+    /// only) — the threshold checkpoint hook `ServingSpec::store`
+    /// configures. Counts every durable mutation, not just inserts, so a
+    /// delete-heavy workload still checkpoints.
     checkpoint_every: usize,
+    /// When > 0: once the index's tombstoned fraction reaches this value,
+    /// the next checkpoint reclaims dead slots (arena + bucket rewrite)
+    /// before snapshotting. 0 disables the trigger (manual
+    /// [`Store::compact`] still reclaims).
+    compact_dead_fraction: f64,
     wal: Mutex<WalState>,
     recovery: RecoveryInfo,
 }
@@ -179,9 +195,19 @@ impl Store {
             dir: dir.to_path_buf(),
             index,
             checkpoint_every,
+            compact_dead_fraction: 0.0,
             wal: Mutex::new(WalState { writer, pending: 0, generation: 1 }),
             recovery: RecoveryInfo { generation: 1, ..RecoveryInfo::default() },
         })
+    }
+
+    /// Arm the dead-fraction compaction trigger: once the tombstoned
+    /// fraction of the served index reaches `f`, the next checkpoint
+    /// reclaims dead slots before snapshotting. `f` ≤ 0 disables the
+    /// trigger. Builder-style so the `create`/`open` signatures stay put.
+    pub fn with_compact_dead_fraction(mut self, f: f64) -> Store {
+        self.compact_dead_fraction = f;
+        self
     }
 
     /// Open an existing store: load the newest snapshot generation that
@@ -243,33 +269,82 @@ impl Store {
         let replay = wal::read_wal(&wal_path)?;
         let mut n_replayed = 0usize;
         let mut n_already_applied = 0usize;
-        for rec in replay.records {
-            if rec.id < index.len() as u64 {
-                // A compaction that crashed between renaming the new
-                // snapshot and truncating the log leaves records the
-                // loaded snapshot already folded in — skip them (a later
-                // checkpoint truncates the log for good).
-                n_already_applied += 1;
-                continue;
-            }
-            if rec.sigs.len() != index.n_tables() {
+        let check_sigs = |id: u64, n_sigs: usize| -> Result<()> {
+            if n_sigs != index.n_tables() {
                 return Err(corrupt(format!(
-                    "WAL record {} carries {} signatures, index has {} tables",
-                    rec.id,
-                    rec.sigs.len(),
+                    "WAL record {id} carries {n_sigs} signatures, index has {} tables",
                     index.n_tables()
                 )));
             }
-            if rec.id != index.len() as u64 {
-                return Err(corrupt(format!(
-                    "WAL id discontinuity: record {} cannot extend an index of {} items \
-                     (a newer snapshot may have been lost)",
-                    rec.id,
-                    index.len()
-                )));
+            Ok(())
+        };
+        for rec in replay.records {
+            match rec {
+                WalRecord::Insert { id, sigs, item } => {
+                    if id < index.len() as u64 {
+                        // A compaction that crashed between renaming the
+                        // new snapshot and truncating the log leaves
+                        // records the loaded snapshot already folded in —
+                        // skip them (a later checkpoint truncates the log
+                        // for good).
+                        n_already_applied += 1;
+                        continue;
+                    }
+                    check_sigs(id, sigs.len())?;
+                    if id != index.len() as u64 {
+                        return Err(corrupt(format!(
+                            "WAL id discontinuity: record {id} cannot extend an index of \
+                             {} items (a newer snapshot may have been lost)",
+                            index.len()
+                        )));
+                    }
+                    index.insert_with_signatures(item, &sigs);
+                    n_replayed += 1;
+                }
+                WalRecord::Delete { id } => {
+                    if id >= index.len() as u64 {
+                        return Err(corrupt(format!(
+                            "WAL delete of id {id} beyond the snapshot's id watermark {} \
+                             (a newer snapshot may have been lost)",
+                            index.len()
+                        )));
+                    }
+                    // Only live ids need the tombstone re-applied; a dead
+                    // or compacted-away target means the snapshot already
+                    // folded this delete in.
+                    if index.is_live(id as usize) {
+                        index.remove(id as usize).map_err(|e| {
+                            corrupt(format!("WAL delete of id {id} failed to replay: {e}"))
+                        })?;
+                        n_replayed += 1;
+                    } else {
+                        n_already_applied += 1;
+                    }
+                }
+                WalRecord::Upsert { id, sigs, item } => {
+                    if id >= index.len() as u64 {
+                        return Err(corrupt(format!(
+                            "WAL upsert of id {id} beyond the snapshot's id watermark {} \
+                             (a newer snapshot may have been lost)",
+                            index.len()
+                        )));
+                    }
+                    check_sigs(id, sigs.len())?;
+                    // Re-apply whenever the id still has a slot: if the
+                    // snapshot already folded this upsert in, re-applying
+                    // is bit-identical (same tensor ⇒ same signatures ⇒
+                    // no bucket movement). Slotless ⇒ a later delete was
+                    // folded in along with a compaction — nothing to do.
+                    if index.has_slot(id as usize) {
+                        index.upsert_with_signatures(id as usize, item, &sigs).map_err(
+                            |e| corrupt(format!("WAL upsert of id {id} failed to replay: {e}")),
+                        )?;
+                        n_replayed += 1;
+                    } else {
+                        n_already_applied += 1;
+                    }
+                }
             }
-            index.insert_with_signatures(rec.item, &rec.sigs);
-            n_replayed += 1;
         }
         if replay.torn_bytes > 0 {
             wal::truncate_wal(&wal_path, replay.valid_len)?;
@@ -279,6 +354,7 @@ impl Store {
             dir: dir.to_path_buf(),
             index,
             checkpoint_every,
+            compact_dead_fraction: 0.0,
             wal: Mutex::new(WalState {
                 // Already-applied records count as pending too: they sit in
                 // the log until the next checkpoint rewrites it.
@@ -323,7 +399,8 @@ impl Store {
         self.wal.lock().unwrap().generation
     }
 
-    /// Inserts logged since the current snapshot (replayed ones included).
+    /// Durable mutations logged since the current snapshot (replayed ones
+    /// included).
     pub fn wal_pending(&self) -> usize {
         self.wal.lock().unwrap().pending
     }
@@ -344,7 +421,7 @@ impl Store {
         let sigs = self.index.insert_signatures(&x);
         let mut wal = self.wal.lock().unwrap();
         let expected = self.index.len() as u64;
-        wal.writer.append_parts(expected, &sigs, &x)?;
+        wal.writer.append_insert(expected, &sigs, &x)?;
         let id = self.index.insert_with_signatures(x, &sigs);
         if id as u64 != expected {
             return Err(Error::InvalidParameter(format!(
@@ -352,42 +429,113 @@ impl Store {
                  {expected}, got {id}); route all inserts through Store::insert"
             )));
         }
-        wal.pending += 1;
-        if self.checkpoint_every > 0 && wal.pending >= self.checkpoint_every {
-            // The insert itself is already durable and live; a failed
-            // checkpoint must not surface as a failed insert (a caller
-            // retry would duplicate the item). Report it and leave the
-            // records pending — the next insert retries the compaction.
-            if let Err(e) = self.compact_locked(&mut wal) {
-                eprintln!("store: threshold checkpoint failed (will retry): {e}");
-            }
-        }
+        self.after_mutation(&mut wal);
         Ok(id)
     }
 
-    /// Checkpoint: write a fresh snapshot generation from the current index
-    /// state, truncate the WAL, and prune all but the previous generation
-    /// (kept as the fallback [`Store::open`] can still boot from). Returns
-    /// the new generation number.
+    /// Durable delete: append a tombstone record to the WAL (flushed before
+    /// returning), then mark the item dead in the served index. The slot is
+    /// physically reclaimed by the next compaction; until then the item is
+    /// skipped at query time. Errors with [`Error::InvalidParameter`] when
+    /// `id` never existed, was already removed, or was compacted away.
+    pub fn remove(&self, id: usize) -> Result<()> {
+        let mut wal = self.wal.lock().unwrap();
+        if !self.index.is_live(id) {
+            // Not removable — let the index produce its typed, id-specific
+            // error without an unvalidated record reaching the log.
+            return Err(match self.index.remove(id) {
+                Err(e) => e,
+                Ok(()) => Error::InvalidParameter(format!(
+                    "remove: id {id} raced an out-of-band index mutation; route all \
+                     mutations through the Store"
+                )),
+            });
+        }
+        wal.writer.append_delete(id as u64)?;
+        self.index.remove(id)?;
+        self.after_mutation(&mut wal);
+        Ok(())
+    }
+
+    /// Durable in-place replace: append an upsert record to the WAL
+    /// (flushed before returning), then swap the stored tensor — reviving
+    /// the id if it was tombstoned. The id keeps its slot, so answers stay
+    /// bit-identical to a rebuild with the new tensor in the old position.
+    /// Errors with [`Error::InvalidParameter`] when `id` was never assigned
+    /// or was compacted away (insert it as a new item instead).
+    pub fn upsert(&self, id: usize, x: AnyTensor) -> Result<()> {
+        // Same shared hashing helper as insert: replay cannot diverge.
+        let sigs = self.index.insert_signatures(&x);
+        let mut wal = self.wal.lock().unwrap();
+        if !self.index.has_slot(id) {
+            return Err(match self.index.upsert_with_signatures(id, x, &sigs) {
+                Err(e) => e,
+                Ok(()) => Error::InvalidParameter(format!(
+                    "upsert: id {id} raced an out-of-band index mutation; route all \
+                     mutations through the Store"
+                )),
+            });
+        }
+        wal.writer.append_upsert(id as u64, &sigs, &x)?;
+        self.index.upsert_with_signatures(id, x, &sigs)?;
+        self.after_mutation(&mut wal);
+        Ok(())
+    }
+
+    /// Shared tail of every durable mutation: bump the pending count and
+    /// run the threshold / dead-fraction checkpoint hooks. The mutation
+    /// itself is already durable and live; a failed checkpoint must not
+    /// surface as a failed mutation (a caller retry would double-apply).
+    /// Report it and leave the records pending — the next mutation retries.
+    fn after_mutation(&self, wal: &mut WalState) {
+        wal.pending += 1;
+        let threshold = self.checkpoint_every > 0 && wal.pending >= self.checkpoint_every;
+        let dead = self.dead_trigger();
+        if threshold || dead {
+            if let Err(e) = self.compact_locked(wal, dead) {
+                eprintln!("store: threshold checkpoint failed (will retry): {e}");
+            }
+        }
+    }
+
+    /// True when the dead-fraction trigger is armed and met.
+    fn dead_trigger(&self) -> bool {
+        self.compact_dead_fraction > 0.0
+            && self.index.dead_fraction() >= self.compact_dead_fraction
+    }
+
+    /// Checkpoint: reclaim any tombstoned slots (arena + bucket rewrite),
+    /// write a fresh snapshot generation from the current index state,
+    /// truncate the WAL, and prune all but the previous generation (kept as
+    /// the fallback [`Store::open`] can still boot from). Returns the new
+    /// generation number. An explicit compact always reclaims dead slots —
+    /// no dead-fraction knob needed; the knob only arms the *automatic*
+    /// trigger.
     pub fn compact(&self) -> Result<u64> {
         let mut wal = self.wal.lock().unwrap();
-        self.compact_locked(&mut wal)
+        self.compact_locked(&mut wal, true)
     }
 
     /// [`Store::compact`] only if any WAL records are pending — the cheap
-    /// call shutdown paths make unconditionally.
+    /// call shutdown paths make unconditionally. Reclaims dead slots only
+    /// when the dead-fraction trigger is armed and met, so routine
+    /// shutdowns stay byte-stable.
     pub fn checkpoint_if_dirty(&self) -> Result<Option<u64>> {
         let mut wal = self.wal.lock().unwrap();
         if wal.pending == 0 {
             return Ok(None);
         }
-        Ok(Some(self.compact_locked(&mut wal)?))
+        let reclaim = self.dead_trigger();
+        Ok(Some(self.compact_locked(&mut wal, reclaim)?))
     }
 
-    fn compact_locked(&self, wal: &mut WalState) -> Result<u64> {
-        // The WAL lock is held for the whole snapshot: inserts block, so
-        // the segment is a consistent cut and truncating the log afterwards
+    fn compact_locked(&self, wal: &mut WalState, reclaim_dead: bool) -> Result<u64> {
+        // The WAL lock is held for the whole pass: mutations block, so the
+        // segment is a consistent cut and truncating the log afterwards
         // cannot discard a record the snapshot missed.
+        if reclaim_dead && self.index.dead_len() > 0 {
+            self.index.compact_dead();
+        }
         let generation = wal.generation + 1;
         self.index.save(&snap_dir(&self.dir, generation))?;
         // The new generation's directory entry must be durable BEFORE the
@@ -554,6 +702,146 @@ mod tests {
         store.insert(tensors(1, 8).pop().unwrap()).unwrap();
         assert_eq!(store.checkpoint_if_dirty().unwrap(), Some(2));
         assert_eq!(store.checkpoint_if_dirty().unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_mutations_replay_to_the_same_index() {
+        let dir = temp_dir("mutations");
+        let base = tensors(30, 20);
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        let repl = tensors(2, 21);
+        store.remove(4).unwrap();
+        store.remove(17).unwrap();
+        store.upsert(9, repl[0].clone()).unwrap();
+        store.upsert(17, repl[1].clone()).unwrap(); // revives id 17
+        assert!(store.remove(4).is_err(), "double remove is a typed error");
+        assert!(store.upsert(99, repl[0].clone()).is_err(), "unknown id is a typed error");
+        assert_eq!(store.index().live_len(), 29);
+        assert_eq!(store.wal_pending(), 4, "failed mutations must not reach the log");
+        drop(store);
+
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.recovery().wal_replayed, 4);
+        assert_eq!(store.index().live_len(), 29);
+        assert_eq!(store.index().dead_len(), 1);
+        // Replay ≡ direct mutation: a fresh index given the same script
+        // answers bit-identically.
+        let mirror = ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap();
+        mirror.remove(4).unwrap();
+        mirror.remove(17).unwrap();
+        mirror.upsert(9, repl[0].clone()).unwrap();
+        mirror.upsert(17, repl[1].clone()).unwrap();
+        let opts = QueryOpts::top_k(6);
+        for q in base.iter().step_by(5).chain(repl.iter()) {
+            let a = store.index().query_with(q, &opts).unwrap();
+            let b = mirror.query_with(q, &opts).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.stats, b.stats);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `checkpoint_every` counts every durable mutation, not just inserts:
+    /// a delete-heavy workload must still hit the threshold checkpoint.
+    #[test]
+    fn checkpoint_threshold_counts_every_mutation_kind() {
+        let dir = temp_dir("mutation_threshold");
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), tensors(10, 30)).unwrap());
+        let store = Store::create(&dir, index, 4).unwrap();
+        store.insert(tensors(1, 31).pop().unwrap()).unwrap();
+        store.remove(0).unwrap();
+        store.remove(1).unwrap();
+        assert_eq!(store.generation(), 1);
+        store.remove(2).unwrap(); // 4th durable mutation — a delete
+        assert_eq!(store.generation(), 2);
+        assert_eq!(store.wal_pending(), 0);
+        drop(store);
+        // The trigger was the record count, not the dead fraction, so the
+        // snapshot carries the tombstones rather than reclaiming them.
+        let store = Store::open(&dir, 4).unwrap();
+        assert_eq!(store.index().dead_len(), 3);
+        assert_eq!(store.index().live_len(), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dead_fraction_trigger_reclaims_slots_at_checkpoint() {
+        let dir = temp_dir("dead_fraction");
+        let base = tensors(20, 40);
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+        let store = Store::create(&dir, index, 0)
+            .unwrap()
+            .with_compact_dead_fraction(0.25);
+        for id in [3, 8, 13, 18] {
+            store.remove(id).unwrap();
+        }
+        assert_eq!(store.generation(), 1, "4/20 dead is below the 0.25 trigger");
+        let mirror = ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap();
+        for id in [3, 8, 13, 18, 6] {
+            mirror.remove(id).unwrap();
+        }
+        store.remove(6).unwrap(); // 5/20 = 0.25 — the trigger fires inline
+        assert_eq!(store.generation(), 2);
+        assert_eq!(store.index().dead_len(), 0);
+        assert_eq!(store.index().live_len(), 15);
+        assert_eq!(store.index().reclaimed_slots(), 5);
+        assert_eq!(store.index().compactions_run(), 1);
+        let opts = QueryOpts::top_k(5);
+        for q in base.iter().step_by(3) {
+            let a = store.index().query_with(q, &opts).unwrap();
+            let b = mirror.query_with(q, &opts).unwrap();
+            assert_eq!(a.hits, b.hits, "reclaiming must not change answers");
+            assert_eq!(a.stats, b.stats);
+        }
+        drop(store);
+        // The compacted snapshot holds 15 items but a watermark of 20: the
+        // manifest's next_id key must carry the gap across a reopen.
+        let store = Store::open(&dir, 0).unwrap();
+        assert_eq!(store.index().len(), 20, "id watermark survives compaction");
+        assert_eq!(store.index().live_len(), 15);
+        let id = store.insert(tensors(1, 41).pop().unwrap()).unwrap();
+        assert_eq!(id, 20, "fresh ids continue from the watermark, never reuse");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Crash window between a compaction and its WAL truncation, now with
+    /// mutation records in the resurrected log: inserts and deletes the
+    /// snapshot folded in are skipped; upserts re-apply (bit-identically,
+    /// since the same tensor yields the same signatures).
+    #[test]
+    fn crash_window_replays_mutations_without_double_apply() {
+        let dir = temp_dir("mutation_crash");
+        let base = tensors(10, 50);
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        let repl = tensors(1, 51).pop().unwrap();
+        store.insert(tensors(1, 52).pop().unwrap()).unwrap(); // id 10
+        store.remove(3).unwrap();
+        store.upsert(5, repl.clone()).unwrap();
+        let wal_bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+        store.compact().unwrap(); // reclaims slot 3, folds everything in
+        let opts = QueryOpts::top_k(5);
+        let before: Vec<_> = base
+            .iter()
+            .map(|q| store.index().query_with(q, &opts).unwrap())
+            .collect();
+        drop(store);
+        std::fs::write(dir.join(WAL_FILE), &wal_bytes).unwrap();
+        let store = Store::open(&dir, 0).unwrap();
+        // Insert of 10 (below the watermark) and delete of 3 (compacted
+        // away) are already applied; the upsert of 5 re-applies.
+        assert_eq!(store.recovery().wal_already_applied, 2);
+        assert_eq!(store.recovery().wal_replayed, 1);
+        assert_eq!(store.len(), 11);
+        assert_eq!(store.index().live_len(), 10);
+        assert!(!store.index().is_live(3));
+        for (q, want) in base.iter().zip(&before) {
+            let got = store.index().query_with(q, &opts).unwrap();
+            assert_eq!(got.hits, want.hits, "re-applied upsert must be bit-identical");
+            assert_eq!(got.stats, want.stats);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

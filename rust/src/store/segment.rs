@@ -113,6 +113,13 @@ pub struct SegmentContents {
     pub buckets: Vec<TableBuckets>,
     pub items: Vec<AnyTensor>,
     pub norms: Vec<f64>,
+    /// Strictly-ascending tombstoned slots. Dead slots stay present in
+    /// every other section (each slot appears exactly once per table —
+    /// the cross-validation depends on it); this list marks which are
+    /// skipped at query time. Empty for insert-only segments — and for
+    /// any segment written before the mutability subsystem existed, since
+    /// the section is omitted when empty (see [`tag::TOMBSTONES`]).
+    pub tombstones: Vec<u32>,
 }
 
 /// Borrowed write-side view of a segment — saving never clones the corpus.
@@ -124,6 +131,7 @@ pub struct SegmentView<'a> {
     pub buckets: &'a [TableBuckets],
     pub items: &'a [AnyTensor],
     pub norms: &'a [f64],
+    pub tombstones: &'a [u32],
 }
 
 impl SegmentContents {
@@ -136,6 +144,7 @@ impl SegmentContents {
             buckets: &self.buckets,
             items: &self.items,
             norms: &self.norms,
+            tombstones: &self.tombstones,
         }
     }
 }
@@ -215,6 +224,18 @@ pub fn segment_bytes(c: SegmentView<'_>) -> Vec<u8> {
         norms.put_f64(v);
     }
     w.section(tag::NORMS, norms);
+
+    // Only when something is actually dead: tombstone-free segments stay
+    // byte-identical to pre-mutability ones, and old readers (which skip
+    // unknown tags) load tombstoned segments as insert-only.
+    if !c.tombstones.is_empty() {
+        let mut tomb = Vec::with_capacity(8 + c.tombstones.len() * 4);
+        tomb.put_u64(c.tombstones.len() as u64);
+        for &slot in c.tombstones {
+            tomb.put_u32(slot);
+        }
+        w.section(tag::TOMBSTONES, tomb);
+    }
 
     w.into_bytes()
 }
@@ -376,7 +397,38 @@ fn contents_from_sections(sections: &BTreeMap<u32, &[u8]>) -> Result<SegmentCont
     }
     let norms = r.f64_vec(n)?;
 
-    Ok(SegmentContents { header, ids, sigs, buckets, items, norms })
+    // Optional section (absent ⇒ insert-only, including every segment
+    // written before tombstones existed). The list must be strictly
+    // ascending and in range — a bitmap in disguise, validated like one.
+    let tombstones = match sections.get(&tag::TOMBSTONES) {
+        None => Vec::new(),
+        Some(raw) => {
+            let mut r = Reader::new(raw, "tombstones");
+            let count = r.len_u64(n as u64, "tombstone count")?;
+            let list = r.u32_vec(count)?;
+            if !r.is_empty() {
+                return Err(corrupt("tombstones section has trailing bytes"));
+            }
+            for w in list.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(corrupt(format!(
+                        "tombstone slots not strictly ascending ({} then {})",
+                        w[0], w[1]
+                    )));
+                }
+            }
+            if let Some(&last) = list.last() {
+                if last as usize >= n {
+                    return Err(corrupt(format!(
+                        "tombstone slot {last} out of range ({n} items)"
+                    )));
+                }
+            }
+            list
+        }
+    };
+
+    Ok(SegmentContents { header, ids, sigs, buckets, items, norms, tombstones })
 }
 
 /// Read and validate a segment file.
@@ -408,6 +460,17 @@ pub fn describe(path: &Path) -> Result<String> {
             Some((s, of)) => format!("{s}/{of}"),
         }
     );
+    let _ = writeln!(
+        out,
+        "live: {}  tombstoned: {}  dead fraction: {:.4}",
+        h.n_items - c.tombstones.len(),
+        c.tombstones.len(),
+        if h.n_items == 0 {
+            0.0
+        } else {
+            c.tombstones.len() as f64 / h.n_items as f64
+        }
+    );
     let names = [
         (tag::HEADER, "header"),
         (tag::IDMAP, "id map"),
@@ -415,6 +478,7 @@ pub fn describe(path: &Path) -> Result<String> {
         (tag::BUCKETS, "buckets"),
         (tag::ITEMS, "items"),
         (tag::NORMS, "norms"),
+        (tag::TOMBSTONES, "tombstones"),
     ];
     for (t, name) in names {
         if let Some(payload) = sections.get(&t) {
@@ -463,6 +527,7 @@ mod tests {
             buckets,
             items,
             norms,
+            tombstones: vec![],
         }
     }
 
@@ -515,6 +580,48 @@ mod tests {
             read_segment_bytes(&segment_bytes(c.view())),
             Err(Error::Corrupt(_))
         ));
+    }
+
+    #[test]
+    fn tombstones_roundtrip_and_clean_segments_omit_the_section() {
+        // A tombstone-free segment must not grow a section: its bytes are
+        // exactly what a pre-mutability writer produced, so old snapshots
+        // and new insert-only snapshots stay interchangeable.
+        let clean = sample_contents();
+        let clean_bytes = segment_bytes(clean.view());
+        let sections = format::read_sections(&clean_bytes).unwrap();
+        assert!(!sections.contains_key(&tag::TOMBSTONES));
+
+        let mut c = sample_contents();
+        c.tombstones = vec![0, 2];
+        let bytes = segment_bytes(c.view());
+        assert_ne!(bytes, clean_bytes);
+        let back = read_segment_bytes(&bytes).unwrap();
+        assert_eq!(back.tombstones, vec![0, 2]);
+        assert_eq!(back.ids, c.ids, "dead slots keep their id-map entries");
+        assert_eq!(segment_bytes(back.view()), bytes, "re-serialization is byte-identical");
+    }
+
+    #[test]
+    fn invalid_tombstone_lists_are_corrupt() {
+        let mut c = sample_contents();
+        c.tombstones = vec![2, 1]; // not ascending
+        match read_segment_bytes(&segment_bytes(c.view())) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("ascending"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        let mut c = sample_contents();
+        c.tombstones = vec![1, 1]; // duplicate
+        assert!(matches!(
+            read_segment_bytes(&segment_bytes(c.view())),
+            Err(Error::Corrupt(_))
+        ));
+        let mut c = sample_contents();
+        c.tombstones = vec![3]; // out of range (3 items → slots 0..=2)
+        match read_segment_bytes(&segment_bytes(c.view())) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("out of range"), "{m}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

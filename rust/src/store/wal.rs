@@ -1,15 +1,25 @@
-//! Append-only write-ahead log: every post-snapshot insert is one
-//! checksummed record (global id, per-table bucket signatures, tensor), so
-//! a crash between checkpoints loses nothing — [`super::Store::open`]
-//! replays the log over the newest snapshot.
+//! Append-only write-ahead log: every post-snapshot durable mutation —
+//! insert, delete, upsert — is one checksummed record, so a crash between
+//! checkpoints loses nothing — [`super::Store::open`] replays the log over
+//! the newest snapshot.
 //!
 //! File layout (little-endian):
 //!
 //! ```text
 //! [magic: 8 bytes "TLSHWAL\0"] [u32 format version]
 //! record × N: [u32 payload len] [payload] [u32 crc32(len ‖ payload)]
-//! payload:    [u64 id] [u32 n_tables] [u64 sig × n_tables] [tensor]
+//! insert payload:   [u64 id] [u32 n_tables] [u64 sig × n_tables] [tensor]
+//! mutation payload: [u64 0xFFFF…FFFF] [u8 kind] [u64 id] [kind-specific…]
+//!   kind 1 (delete): nothing more
+//!   kind 2 (upsert): [u32 n_tables] [u64 sig × n_tables] [tensor]
 //! ```
+//!
+//! Insert payloads are byte-identical to the insert-only format that
+//! predates mutations, so logs written by old builds replay unchanged.
+//! Mutation payloads open with a sentinel id no insert can carry
+//! (`u64::MAX` — inserts are id-chained from the snapshot watermark, which
+//! can never reach it), so old *readers* fail their id-continuity check on
+//! a mutation record rather than misapplying it as an insert.
 //!
 //! Recovery semantics ([`read_wal`]): records are consumed until the file
 //! ends. A record whose bytes physically run past EOF is a **torn tail**
@@ -40,43 +50,111 @@ fn corrupt(msg: impl Into<String>) -> Error {
     Error::Corrupt(msg.into())
 }
 
-/// One logged insert.
+/// First payload word of every non-insert record: an id no insert can
+/// carry (see the module docs).
+const MUTATION_SENTINEL: u64 = u64::MAX;
+/// Mutation kind byte: tombstone the id.
+const KIND_DELETE: u8 = 1;
+/// Mutation kind byte: replace the id's tensor in place.
+const KIND_UPSERT: u8 = 2;
+
+/// One logged durable mutation.
 #[derive(Clone, Debug)]
-pub struct WalRecord {
-    /// Global item id the insert was assigned.
-    pub id: u64,
-    /// Per-table bucket signatures (length = index table count).
-    pub sigs: Vec<u64>,
-    pub item: AnyTensor,
+pub enum WalRecord {
+    /// A new item under a freshly-issued id.
+    Insert {
+        /// Global item id the insert was assigned.
+        id: u64,
+        /// Per-table bucket signatures (length = index table count).
+        sigs: Vec<u64>,
+        item: AnyTensor,
+    },
+    /// Tombstone an existing id.
+    Delete { id: u64 },
+    /// Replace the tensor stored under an existing id.
+    Upsert { id: u64, sigs: Vec<u64>, item: AnyTensor },
 }
 
-fn encode_payload_parts(id: u64, sigs: &[u64], item: &AnyTensor) -> Vec<u8> {
-    let mut p = Vec::new();
-    p.put_u64(id);
+impl WalRecord {
+    /// The id this record mutates.
+    pub fn id(&self) -> u64 {
+        match self {
+            WalRecord::Insert { id, .. }
+            | WalRecord::Delete { id }
+            | WalRecord::Upsert { id, .. } => *id,
+        }
+    }
+}
+
+fn put_sigs_and_tensor(p: &mut Vec<u8>, sigs: &[u64], item: &AnyTensor) {
     p.put_u32(sigs.len() as u32);
     for &s in sigs {
         p.put_u64(s);
     }
-    encode_tensor(&mut p, item);
+    encode_tensor(p, item);
+}
+
+fn encode_insert_payload(id: u64, sigs: &[u64], item: &AnyTensor) -> Vec<u8> {
+    debug_assert_ne!(id, MUTATION_SENTINEL);
+    let mut p = Vec::new();
+    p.put_u64(id);
+    put_sigs_and_tensor(&mut p, sigs, item);
+    p
+}
+
+fn encode_delete_payload(id: u64) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.put_u64(MUTATION_SENTINEL);
+    p.put_u8(KIND_DELETE);
+    p.put_u64(id);
+    p
+}
+
+fn encode_upsert_payload(id: u64, sigs: &[u64], item: &AnyTensor) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.put_u64(MUTATION_SENTINEL);
+    p.put_u8(KIND_UPSERT);
+    p.put_u64(id);
+    put_sigs_and_tensor(&mut p, sigs, item);
     p
 }
 
 impl WalRecord {
     fn decode_payload(bytes: &[u8]) -> Result<WalRecord> {
         let mut r = Reader::new(bytes, "WAL record");
-        let id = r.u64()?;
-        let n_tables = r.u32()? as usize;
-        let sigs = r.u64_vec(n_tables)?;
-        let item = decode_tensor(&mut r)?;
+        let first = r.u64()?;
+        let rec = if first == MUTATION_SENTINEL {
+            let kind = r.u8()?;
+            let id = r.u64()?;
+            match kind {
+                KIND_DELETE => WalRecord::Delete { id },
+                KIND_UPSERT => {
+                    let n_tables = r.u32()? as usize;
+                    let sigs = r.u64_vec(n_tables)?;
+                    let item = decode_tensor(&mut r)?;
+                    WalRecord::Upsert { id, sigs, item }
+                }
+                other => {
+                    return Err(corrupt(format!(
+                        "WAL record has unknown mutation kind {other}"
+                    )));
+                }
+            }
+        } else {
+            let n_tables = r.u32()? as usize;
+            let sigs = r.u64_vec(n_tables)?;
+            let item = decode_tensor(&mut r)?;
+            WalRecord::Insert { id: first, sigs, item }
+        };
         if !r.is_empty() {
             return Err(corrupt("WAL record has trailing bytes"));
         }
-        Ok(WalRecord { id, sigs, item })
+        Ok(rec)
     }
 }
 
-/// Appends records to a WAL file, flushing each one before returning (an
-/// insert acknowledged by [`super::Store::insert`] is on disk).
+/// Appends records to a WAL file, flushing each one before returning (a
+/// mutation acknowledged by the durable [`super::Store`] is on disk).
 pub struct WalWriter {
     file: File,
 }
@@ -102,16 +180,34 @@ impl WalWriter {
 
     /// Append one record and flush it to disk.
     pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        self.append_parts(rec.id, &rec.sigs, &rec.item)
+        match rec {
+            WalRecord::Insert { id, sigs, item } => self.append_insert(*id, sigs, item),
+            WalRecord::Delete { id } => self.append_delete(*id),
+            WalRecord::Upsert { id, sigs, item } => self.append_upsert(*id, sigs, item),
+        }
     }
 
-    /// [`WalWriter::append`] from borrowed parts — the hot durable-insert
-    /// path logs without cloning the tensor. Records above the 1 GiB
-    /// record bound are refused with a typed error *before* touching the
-    /// file (and the reader refuses over-bound lengths as corruption, so
-    /// an acknowledged record can always be read back).
-    pub fn append_parts(&mut self, id: u64, sigs: &[u64], item: &AnyTensor) -> Result<()> {
-        let payload = encode_payload_parts(id, sigs, item);
+    /// Log an insert from borrowed parts — the hot durable-insert path
+    /// logs without cloning the tensor.
+    pub fn append_insert(&mut self, id: u64, sigs: &[u64], item: &AnyTensor) -> Result<()> {
+        self.append_payload(encode_insert_payload(id, sigs, item))
+    }
+
+    /// Log a delete.
+    pub fn append_delete(&mut self, id: u64) -> Result<()> {
+        self.append_payload(encode_delete_payload(id))
+    }
+
+    /// Log an upsert from borrowed parts.
+    pub fn append_upsert(&mut self, id: u64, sigs: &[u64], item: &AnyTensor) -> Result<()> {
+        self.append_payload(encode_upsert_payload(id, sigs, item))
+    }
+
+    /// Frame, checksum, append, and flush one payload. Payloads above the
+    /// 1 GiB record bound are refused with a typed error *before* touching
+    /// the file (and the reader refuses over-bound lengths as corruption,
+    /// so an acknowledged record can always be read back).
+    fn append_payload(&mut self, payload: Vec<u8>) -> Result<()> {
         if payload.len() as u64 > MAX_RECORD_LEN as u64 {
             return Err(Error::InvalidParameter(format!(
                 "WAL record of {} bytes exceeds the {MAX_RECORD_LEN}-byte record bound \
@@ -245,12 +341,16 @@ mod tests {
     use crate::store::tensors::tensors_bit_equal;
     use crate::tensor::CpTensor;
 
-    fn record(id: u64, seed: u64) -> WalRecord {
+    fn tensor(seed: u64) -> AnyTensor {
         let mut rng = Rng::new(seed);
-        WalRecord {
+        AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[4, 3], 2))
+    }
+
+    fn record(id: u64, seed: u64) -> WalRecord {
+        WalRecord::Insert {
             id,
             sigs: vec![id * 3, id * 5 + 1, id ^ 0xFFFF],
-            item: AnyTensor::Cp(CpTensor::random_gaussian(&mut rng, &[4, 3], 2)),
+            item: tensor(seed),
         }
     }
 
@@ -273,10 +373,17 @@ mod tests {
         assert_eq!(replay.records.len(), 5);
         assert_eq!(replay.torn_bytes, 0);
         for (i, rec) in replay.records.iter().enumerate() {
-            let want = record(i as u64, 100 + i as u64);
-            assert_eq!(rec.id, want.id);
-            assert_eq!(rec.sigs, want.sigs);
-            assert!(tensors_bit_equal(&rec.item, &want.item));
+            let WalRecord::Insert { id, sigs, item } = rec else {
+                panic!("expected an insert record, got {rec:?}");
+            };
+            let WalRecord::Insert { id: wid, sigs: wsigs, item: witem } =
+                record(i as u64, 100 + i as u64)
+            else {
+                unreachable!()
+            };
+            assert_eq!(*id, wid);
+            assert_eq!(*sigs, wsigs);
+            assert!(tensors_bit_equal(item, &witem));
         }
         // Reopening appends after the existing records.
         let mut w = WalWriter::open_append(&path).unwrap();
@@ -317,6 +424,62 @@ mod tests {
         w.append(&record(2, 202)).unwrap();
         drop(w);
         assert_eq!(read_wal(&path).unwrap().records.len(), 3);
+    }
+
+    #[test]
+    fn mutation_records_roundtrip_interleaved_with_inserts() {
+        let path = temp("mutations");
+        let mut w = WalWriter::open_append(&path).unwrap();
+        w.append_insert(0, &[7, 8, 9], &tensor(400)).unwrap();
+        w.append_delete(0).unwrap();
+        w.append_upsert(0, &[10, 11, 12], &tensor(401)).unwrap();
+        w.append(&WalRecord::Delete { id: 0 }).unwrap();
+        drop(w);
+        let replay = read_wal(&path).unwrap();
+        assert_eq!(replay.torn_bytes, 0);
+        assert_eq!(replay.records.len(), 4);
+        assert!(matches!(replay.records[0], WalRecord::Insert { id: 0, .. }));
+        assert!(matches!(replay.records[1], WalRecord::Delete { id: 0 }));
+        match &replay.records[2] {
+            WalRecord::Upsert { id, sigs, item } => {
+                assert_eq!(*id, 0);
+                assert_eq!(sigs, &[10, 11, 12]);
+                assert!(tensors_bit_equal(item, &tensor(401)));
+            }
+            other => panic!("expected an upsert, got {other:?}"),
+        }
+        assert!(matches!(replay.records[3], WalRecord::Delete { id: 0 }));
+        // Record ids are uniform across variants.
+        assert!(replay.records.iter().all(|r| r.id() == 0));
+    }
+
+    #[test]
+    fn unknown_mutation_kind_is_a_typed_corrupt_error() {
+        let path = temp("unknown_kind");
+        drop(WalWriter::open_append(&path).unwrap());
+        // Hand-frame a record with a valid CRC but a mutation kind this
+        // build does not know: decode must refuse it as corruption (a
+        // newer writer's log is not safely replayable here).
+        let mut payload = Vec::new();
+        payload.put_u64(MUTATION_SENTINEL);
+        payload.put_u8(99);
+        payload.put_u64(3);
+        let len = payload.len() as u32;
+        let mut crc = Crc32::new();
+        crc.update(&len.to_le_bytes());
+        crc.update(&payload);
+        let mut frame = Vec::new();
+        frame.put_u32(len);
+        frame.put_bytes(&payload);
+        frame.put_u32(crc.finish());
+        use std::io::Write as _;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&frame).unwrap();
+        drop(f);
+        match read_wal(&path) {
+            Err(Error::Corrupt(m)) => assert!(m.contains("unknown mutation kind"), "{m}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

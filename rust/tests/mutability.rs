@@ -1,0 +1,357 @@
+//! Online mutability contract (ISSUE 8 acceptance): **any** interleaving
+//! of insert / delete / upsert with save/load, WAL replay, and compaction
+//! is search-identical — hits AND stats, over the full `QueryOpts` grid —
+//! to applying the same logical mutations directly, and (where the id
+//! space permits) to rebuilding the index from the live set.
+//!
+//! Three layers, one equivalence each:
+//!
+//! * `LshIndex` — whole-index ids are positional, so after a final
+//!   `compact_dead` the mutated index must answer exactly like a fresh
+//!   `build_from_spec` over the surviving items in slot order;
+//! * `ShardedLshIndex` — global ids are stable across compaction, so a
+//!   subject that compacts and save/loads mid-stream must stay identical
+//!   to a mirror that only ever applies the raw mutations;
+//! * `Store` — the durable path (WAL append + crash-reopen replay +
+//!   threshold/dead-fraction checkpoints) must track the same mirror.
+
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
+use tensor_lsh::lsh::{FamilyKind, FamilySpec, LshSpec, SeedPolicy, ServingSpec};
+use tensor_lsh::query::{Query, QueryOpts, RerankPolicy, Searcher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::store::Store;
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::testutil::{proptest, random_any_tensor};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tlsh_mut_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A randomized but valid spec (kind, metric, K, L, probes, seeds, shards).
+fn random_spec(rng: &mut Rng) -> LshSpec {
+    let kinds = [FamilyKind::Cp, FamilyKind::Tt, FamilyKind::Naive];
+    let kind = kinds[rng.below(3)];
+    let metric = if rng.below(2) == 0 { Metric::Cosine } else { Metric::Euclidean };
+    let n_modes = 2 + rng.below(2);
+    let dims: Vec<usize> = (0..n_modes).map(|_| 3 + rng.below(4)).collect();
+    let spec = LshSpec {
+        family: FamilySpec {
+            kind,
+            dims,
+            rank: 1 + rng.below(3),
+            k: 2 + rng.below(6),
+            metric,
+            w: 2.0 + rng.uniform(0.0, 4.0),
+        },
+        l: 2 + rng.below(4),
+        probes: rng.below(3),
+        banded: false,
+        seeds: SeedPolicy::new(rng.next_u64() >> 12, 1 + (rng.next_u64() >> 40)),
+        serving: ServingSpec { shards: 1 + rng.below(4), ..Default::default() },
+    };
+    spec.validate().unwrap();
+    spec
+}
+
+fn corpus(rng: &mut Rng, dims: &[usize], n: usize) -> Vec<AnyTensor> {
+    (0..n).map(|_| random_any_tensor(rng, dims, 3)).collect()
+}
+
+/// The full per-query knob grid the acceptance criteria call for.
+fn opts_grid() -> Vec<QueryOpts> {
+    let mut grid = Vec::new();
+    for rerank in [RerankPolicy::Exact, RerankPolicy::SignatureOnly, RerankPolicy::Budgeted(3)] {
+        for probes in [None, Some(2)] {
+            for cap in [None, Some(4)] {
+                let mut o = QueryOpts::top_k(6).with_rerank(rerank);
+                o.probes = probes;
+                o.max_candidates = cap;
+                grid.push(o);
+            }
+        }
+    }
+    grid.push(QueryOpts::top_k(6).with_dedup(false));
+    // Starved + rescued: a zero cap exercises the exact-fallback path,
+    // which must scan (and count) only the live set.
+    grid.push(QueryOpts::top_k(6).with_max_candidates(0).with_exact_fallback(true));
+    grid
+}
+
+/// Assert two searchers answer the whole opts grid identically (hits AND
+/// stats) over the given queries.
+#[track_caller]
+fn assert_same_responses<A, B>(a: &A, b: &B, queries: &[AnyTensor], label: &str)
+where
+    A: Searcher,
+    B: Searcher,
+{
+    for (qi, q) in queries.iter().enumerate() {
+        for (oi, opts) in opts_grid().iter().enumerate() {
+            let query = Query::with_opts(q.clone(), opts.clone());
+            let ra = a.search(&query).unwrap();
+            let rb = b.search(&query).unwrap();
+            assert_eq!(ra.hits, rb.hits, "{label}: hits differ (query {qi}, opts {oi})");
+            assert_eq!(ra.stats, rb.stats, "{label}: stats differ (query {qi}, opts {oi})");
+        }
+    }
+}
+
+/// Ids of live model entries (`model[id] = (tensor, dead)`).
+fn live_ids(model: &[(AnyTensor, bool)]) -> Vec<usize> {
+    model
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, dead))| !dead)
+        .map(|(id, _)| id)
+        .collect()
+}
+
+/// `LshIndex`: a random interleaving of insert/remove/upsert with
+/// save/load swaps tracks a direct-mutation mirror, and after one final
+/// `compact_dead` the index answers exactly like a rebuild from the live
+/// set (compaction renumbers whole-index ids to `0..live_len()`).
+#[test]
+fn prop_lsh_index_interleaving_matches_rebuild_from_live_set() {
+    let dir = temp_dir("single");
+    proptest("lsh index mutation interleaving", 6, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let base = corpus(rng, &dims, 20 + rng.below(20));
+        let mut model: Vec<(AnyTensor, bool)> =
+            base.iter().map(|x| (x.clone(), false)).collect();
+        let mut subject = LshIndex::build_from_spec(&spec, base.clone()).unwrap();
+        let mut mirror = LshIndex::build_from_spec(&spec, base).unwrap();
+
+        for step in 0..40 {
+            match rng.below(100) {
+                0..=39 => {
+                    let x = random_any_tensor(rng, &dims, 3);
+                    let sid = subject.insert(x.clone());
+                    let mid = mirror.insert(x.clone());
+                    assert_eq!(sid, mid, "id streams diverged");
+                    model.push((x, false));
+                }
+                40..=64 => {
+                    let live = live_ids(&model);
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let id = live[rng.below(live.len())];
+                    subject.remove(id).unwrap();
+                    mirror.remove(id).unwrap();
+                    model[id].1 = true;
+                    // Double-remove is a typed error, not silent.
+                    assert!(subject.remove(id).is_err());
+                }
+                65..=89 => {
+                    // Any slot may be upserted — upserting a tombstoned id
+                    // revives it.
+                    let id = rng.below(model.len());
+                    let x = random_any_tensor(rng, &dims, 3);
+                    subject.upsert(id, x.clone()).unwrap();
+                    mirror.upsert(id, x.clone()).unwrap();
+                    model[id] = (x, false);
+                }
+                _ => {
+                    // Save/load swap mid-stream: tombstones must survive
+                    // the segment round trip.
+                    let path = dir.join(format!("swap-{step}.seg"));
+                    subject.save(&path).unwrap();
+                    subject = LshIndex::load(&path).unwrap();
+                    assert_eq!(subject.dead_len(), mirror.dead_len());
+                }
+            }
+        }
+        // Out-of-range mutations are typed errors.
+        assert!(subject.remove(model.len() + 7).is_err());
+        assert!(subject.upsert(model.len() + 7, random_any_tensor(rng, &dims, 3)).is_err());
+
+        let mut queries: Vec<AnyTensor> =
+            (0..4).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        let live = live_ids(&model);
+        queries.extend(live.iter().take(3).map(|&id| model[id].0.clone()));
+        assert_same_responses(&subject, &mirror, &queries, "LshIndex vs mirror");
+
+        // Final compaction: ids renumber to 0..live_len() in slot order, so
+        // a fresh build over the live set must be indistinguishable.
+        subject.compact_dead();
+        assert_eq!(subject.len(), live.len());
+        assert_eq!(subject.dead_len(), 0);
+        let live_items: Vec<AnyTensor> =
+            live.iter().map(|&id| model[id].0.clone()).collect();
+        let rebuilt = LshIndex::build_from_spec(&spec, live_items).unwrap();
+        assert_same_responses(&subject, &rebuilt, &queries, "LshIndex vs rebuild");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `ShardedLshIndex`: the subject compacts and save/loads at random points
+/// mid-stream; a mirror only ever applies the raw mutations. Global ids
+/// are stable, so the two must stay response-identical throughout — and
+/// mutations on ids whose slots were reclaimed are typed errors.
+#[test]
+fn prop_sharded_index_interleaving_matches_direct_mirror() {
+    let dir = temp_dir("sharded");
+    proptest("sharded mutation interleaving", 5, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let base = corpus(rng, &dims, 20 + rng.below(20));
+        let mut model: Vec<(AnyTensor, bool)> =
+            base.iter().map(|x| (x.clone(), false)).collect();
+        let mut subject = ShardedLshIndex::build_from_spec(&spec, base.clone()).unwrap();
+        let mirror = ShardedLshIndex::build_from_spec(&spec, base).unwrap();
+
+        for step in 0..40 {
+            match rng.below(100) {
+                0..=34 => {
+                    let x = random_any_tensor(rng, &dims, 3);
+                    let sid = subject.insert(x.clone());
+                    let mid = mirror.insert(x.clone());
+                    assert_eq!(sid, mid, "id streams diverged");
+                    model.push((x, false));
+                }
+                35..=54 => {
+                    let live = live_ids(&model);
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let id = live[rng.below(live.len())];
+                    subject.remove(id).unwrap();
+                    mirror.remove(id).unwrap();
+                    model[id].1 = true;
+                    // A second remove fails on both — whether or not the
+                    // subject has compacted the slot away in the meantime.
+                    assert!(subject.remove(id).is_err());
+                    assert!(mirror.remove(id).is_err());
+                }
+                55..=74 => {
+                    let id = rng.below(model.len());
+                    let x = random_any_tensor(rng, &dims, 3);
+                    if subject.has_slot(id) {
+                        subject.upsert(id, x.clone()).unwrap();
+                        mirror.upsert(id, x.clone()).unwrap();
+                        model[id] = (x, false);
+                    } else {
+                        // Removed and compacted: the id is gone for good.
+                        assert!(subject.upsert(id, x).is_err());
+                        assert!(model[id].1, "only dead ids can lose their slot");
+                    }
+                }
+                75..=89 => {
+                    subject.compact_dead();
+                    assert_eq!(subject.dead_len(), 0);
+                }
+                _ => {
+                    let snap = dir.join(format!("swap-{step}"));
+                    subject.save(&snap).unwrap();
+                    subject = ShardedLshIndex::load(&snap).unwrap();
+                }
+            }
+            assert_eq!(subject.len(), mirror.len(), "id watermark diverged");
+            assert_eq!(subject.live_len(), mirror.live_len());
+        }
+
+        let mut queries: Vec<AnyTensor> =
+            (0..4).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        let live = live_ids(&model);
+        queries.extend(live.iter().take(3).map(|&id| model[id].0.clone()));
+        assert_same_responses(&subject, &mirror, &queries, "Sharded vs mirror");
+        assert_eq!(subject.live_len(), live.len());
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The durable path: the same interleaving routed through `Store` (WAL
+/// append, crash-reopen replay, threshold + dead-fraction checkpoints)
+/// tracks a direct-mutation mirror exactly.
+#[test]
+fn prop_store_churn_with_reopens_matches_direct_mirror() {
+    let dir = temp_dir("store");
+    proptest("durable mutation interleaving", 4, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let base = corpus(rng, &dims, 16 + rng.below(16));
+        let mut model: Vec<(AnyTensor, bool)> =
+            base.iter().map(|x| (x.clone(), false)).collect();
+        let checkpoint_every = [0, 5][rng.below(2)];
+        let dead_fraction = [0.0, 0.3][rng.below(2)];
+        let db = dir.join(format!("db-{}", rng.below(1 << 30)));
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, base.clone()).unwrap());
+        let mut store = Store::create(&db, index, checkpoint_every)
+            .unwrap()
+            .with_compact_dead_fraction(dead_fraction);
+        let mirror = ShardedLshIndex::build_from_spec(&spec, base).unwrap();
+
+        for _ in 0..30 {
+            match rng.below(100) {
+                0..=34 => {
+                    let x = random_any_tensor(rng, &dims, 3);
+                    let sid = store.insert(x.clone()).unwrap();
+                    let mid = mirror.insert(x.clone());
+                    assert_eq!(sid, mid, "id streams diverged");
+                    model.push((x, false));
+                }
+                35..=59 => {
+                    let live = live_ids(&model);
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let id = live[rng.below(live.len())];
+                    store.remove(id).unwrap();
+                    mirror.remove(id).unwrap();
+                    model[id].1 = true;
+                    assert!(store.remove(id).is_err());
+                }
+                60..=84 => {
+                    let id = rng.below(model.len());
+                    let x = random_any_tensor(rng, &dims, 3);
+                    // Inline checkpoints may have reclaimed a tombstoned
+                    // slot; the store then refuses the upsert.
+                    if store.index().has_slot(id) {
+                        store.upsert(id, x.clone()).unwrap();
+                        mirror.upsert(id, x.clone()).unwrap();
+                        model[id] = (x, false);
+                    } else {
+                        assert!(store.upsert(id, x).is_err());
+                        assert!(model[id].1, "only dead ids can lose their slot");
+                    }
+                }
+                _ => {
+                    // Crash-reopen: the snapshot + WAL replay must restore
+                    // the exact mutation state (no double-applies).
+                    drop(store);
+                    store = Store::open(&db, checkpoint_every)
+                        .unwrap()
+                        .with_compact_dead_fraction(dead_fraction);
+                }
+            }
+            assert_eq!(store.len(), mirror.len(), "id watermark diverged");
+            assert_eq!(store.index().live_len(), mirror.live_len());
+        }
+
+        // One final crash-reopen, then the full grid.
+        drop(store);
+        let store = Store::open(&db, checkpoint_every).unwrap();
+        let mut queries: Vec<AnyTensor> =
+            (0..3).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        let live = live_ids(&model);
+        queries.extend(live.iter().take(3).map(|&id| model[id].0.clone()));
+        assert_same_responses(
+            store.index().as_ref(),
+            &mirror,
+            &queries,
+            "Store vs mirror",
+        );
+        assert_eq!(store.index().live_len(), live.len());
+        let _ = std::fs::remove_dir_all(&db);
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

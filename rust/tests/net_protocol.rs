@@ -269,6 +269,85 @@ fn insert_without_a_store_is_a_typed_error() {
     server.shutdown();
 }
 
+/// Remove and Upsert frames against a durable server: the mutations land
+/// in the store (WAL-logged, visible to queries and to `stats`), invalid
+/// ids come back as typed errors, and the connection survives them.
+#[test]
+fn remove_and_upsert_over_the_wire_mutate_the_store() {
+    let dir = temp_dir("wire_mut");
+    let index = build_index(60);
+    let store = Arc::new(Store::create(&dir, Arc::clone(&index), 0).unwrap());
+    let coord = Coordinator::start_durable(
+        Arc::clone(&store),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    let server = Server::start(coord, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // Delete one id, replace another, over the wire.
+    client.remove(11).unwrap();
+    let replacement = tensors(1, 888).pop().unwrap();
+    client.upsert(23, &replacement).unwrap();
+    assert!(!index.is_live(11));
+    assert!(store.wal_pending() >= 2);
+
+    // The removed id never appears in an answer; the upserted tensor finds
+    // itself.
+    let resp = client.search(&Query::new(index.item(11), 60)).unwrap();
+    assert!(resp.hits.iter().all(|h| h.id != 11), "tombstoned id served");
+    let resp = client.search(&Query::new(replacement.clone(), 1)).unwrap();
+    assert_eq!(resp.hits.first().map(|h| h.id), Some(23));
+
+    // The churn counters travel with the metrics snapshot.
+    let snap = client.stats().unwrap();
+    assert_eq!(snap.live_items, 59);
+    assert_eq!(snap.tombstoned, 1);
+
+    // Invalid ids are typed refusals, and the connection keeps working.
+    match client.remove(11) {
+        Err(Error::Coordinator(m)) => assert!(m.contains("already removed"), "{m}"),
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    match client.upsert(9_999, &replacement) {
+        Err(Error::Coordinator(m)) => assert!(m.contains("out of range"), "{m}"),
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    assert!(client.ping().is_ok());
+
+    // The drain checkpoints; a reopened store replays to the mutated state.
+    server.shutdown();
+    drop(store);
+    let reopened = Store::open(&dir, 0).unwrap();
+    assert!(!reopened.index().is_live(11));
+    assert_eq!(reopened.index().live_len(), 59);
+    let resp = reopened
+        .index()
+        .query_with(&replacement, &QueryOpts::top_k(1))
+        .unwrap();
+    assert_eq!(resp.hits.first().map(|h| h.id), Some(23));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A memory-only server refuses Remove/Upsert frames with typed errors —
+/// same contract as Insert — and keeps serving afterward.
+#[test]
+fn mutations_without_a_store_are_typed_errors() {
+    let index = build_index(40);
+    let server = start_server(&index, NetConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    match client.remove(0) {
+        Err(Error::Coordinator(m)) => assert!(m.contains("store"), "{m}"),
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    match client.upsert(0, &index.item(0)) {
+        Err(Error::Coordinator(m)) => assert!(m.contains("store"), "{m}"),
+        other => panic!("expected a typed refusal, got {other:?}"),
+    }
+    assert!(client.ping().is_ok());
+    server.shutdown();
+}
+
 /// `Shutdown` over the wire is acknowledged with `Bye` and drains the
 /// server (the `tensorlsh stop` path).
 #[test]

@@ -227,3 +227,206 @@ fn prop_wal_truncation_recovers_the_longest_whole_prefix() {
     assert_eq!(store.len(), all.len());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Tombstone sections sit under the same CRC framing as every other
+/// section: any single-byte flip or truncation of a tombstone-bearing
+/// segment is a typed `Error::Corrupt`, and the pristine bytes round-trip
+/// the dead set exactly.
+#[test]
+fn prop_tombstone_section_damage_always_fails_typed() {
+    let dir = temp_dir("tombstone");
+    let mut index = LshIndex::build_from_spec(&spec(), tensors(30, 7)).unwrap();
+    for id in [2, 9, 17, 25] {
+        index.remove(id).unwrap();
+    }
+    let path = dir.join("tombstoned.seg");
+    index.save(&path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    // A clean save of the same corpus has no tombstone section, so the
+    // tombstoned file is strictly longer — the extra bytes ARE the section.
+    let clean = LshIndex::build_from_spec(&spec(), tensors(30, 7)).unwrap();
+    let clean_path = dir.join("clean.seg");
+    clean.save(&clean_path).unwrap();
+    assert!(
+        pristine.len() > std::fs::read(&clean_path).unwrap().len(),
+        "tombstones must add a section to the segment"
+    );
+
+    // Pristine bytes restore the dead set bit-exactly.
+    let loaded = LshIndex::load(&path).unwrap();
+    assert_eq!(loaded.dead_len(), 4);
+    assert_eq!(loaded.live_len(), 26);
+
+    let damaged_path = dir.join("damaged.seg");
+    proptest("tombstone section damage is typed", 192, |rng| {
+        let mut bytes = pristine.clone();
+        if rng.below(4) == 0 {
+            bytes.truncate(rng.below(bytes.len()));
+        } else {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        std::fs::write(&damaged_path, &bytes).unwrap();
+        match LshIndex::load(&damaged_path) {
+            Err(Error::Corrupt(_)) => {}
+            Ok(_) => panic!("damaged tombstoned segment loaded"),
+            Err(other) => panic!("expected Corrupt, got {other}"),
+        }
+    });
+
+    // Sharded snapshots carry the section per shard under the same CRCs.
+    let sharded = ShardedLshIndex::build_from_spec(&spec(), tensors(30, 8)).unwrap();
+    for id in [1, 6, 13] {
+        sharded.remove(id).unwrap();
+    }
+    let snap = dir.join("snap");
+    sharded.save(&snap).unwrap();
+    assert_eq!(ShardedLshIndex::load(&snap).unwrap().dead_len(), 3);
+    let shard_file = snap.join("shard-000.seg");
+    let shard_pristine = std::fs::read(&shard_file).unwrap();
+    let mut rng = Rng::new(9);
+    for _ in 0..48 {
+        let mut bytes = shard_pristine.clone();
+        let i = rng.below(bytes.len());
+        bytes[i] ^= 1 << rng.below(8);
+        std::fs::write(&shard_file, &bytes).unwrap();
+        match ShardedLshIndex::load(&snap) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One logical mutation applied both through the store (for the fixture)
+/// and directly (for reference states).
+enum MutOp {
+    Insert(AnyTensor),
+    Delete(usize),
+    Upsert(usize, AnyTensor),
+}
+
+/// Build a store whose WAL holds a mix of insert/delete/upsert records;
+/// returns the base corpus and the logged op sequence.
+fn mutation_wal_fixture(db: &std::path::Path) -> (Vec<AnyTensor>, Vec<MutOp>) {
+    let base = tensors(20, 6);
+    let fresh = tensors(6, 16);
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+    let store = Store::create(db, index, 0).unwrap();
+    let ops = vec![
+        MutOp::Insert(fresh[0].clone()),
+        MutOp::Delete(3),
+        MutOp::Upsert(7, fresh[1].clone()),
+        MutOp::Delete(11),
+        MutOp::Insert(fresh[2].clone()),
+        MutOp::Upsert(3, fresh[3].clone()), // revives the tombstoned id
+        MutOp::Delete(0),
+        MutOp::Insert(fresh[4].clone()),
+    ];
+    for op in &ops {
+        match op {
+            MutOp::Insert(x) => {
+                store.insert(x.clone()).unwrap();
+            }
+            MutOp::Delete(id) => store.remove(*id).unwrap(),
+            MutOp::Upsert(id, x) => store.upsert(*id, x.clone()).unwrap(),
+        }
+    }
+    (base, ops)
+}
+
+/// Reference index: the base corpus with the first `r` ops applied
+/// directly (no WAL, no store).
+fn reference_after(base: &[AnyTensor], ops: &[MutOp]) -> ShardedLshIndex {
+    let index = ShardedLshIndex::build_from_spec(&spec(), base.to_vec()).unwrap();
+    for op in ops {
+        match op {
+            MutOp::Insert(x) => {
+                index.insert(x.clone());
+            }
+            MutOp::Delete(id) => index.remove(*id).unwrap(),
+            MutOp::Upsert(id, x) => index.upsert(*id, x.clone()).unwrap(),
+        }
+    }
+    index
+}
+
+/// The recovered index must equal SOME prefix of the mutation log applied
+/// to the base — a prefix, never a scramble (e.g. a delete applied to the
+/// wrong id, or an upsert surviving while the delete before it was lost).
+#[track_caller]
+fn assert_is_mutation_prefix(recovered: &ShardedLshIndex, base: &[AnyTensor], ops: &[MutOp]) {
+    let queries = tensors(8, 31);
+    let opts = QueryOpts::top_k(5);
+    'prefix: for r in 0..=ops.len() {
+        let reference = reference_after(base, &ops[..r]);
+        if reference.len() != recovered.len() || reference.live_len() != recovered.live_len()
+        {
+            continue;
+        }
+        for q in &queries {
+            let a = recovered.query_with(q, &opts).unwrap();
+            let b = reference.query_with(q, &opts).unwrap();
+            if a.hits != b.hits || a.stats != b.stats {
+                continue 'prefix;
+            }
+        }
+        return;
+    }
+    panic!("recovered state matches no prefix of the mutation log");
+}
+
+/// Random single-byte flips in a WAL holding delete/upsert records: open
+/// either refuses with `Error::Corrupt` or recovers a verified prefix of
+/// the mutation history. The per-record CRC is what stops a flipped id
+/// from silently retargeting a delete.
+#[test]
+fn prop_mutation_wal_flips_fail_typed_or_recover_a_clean_prefix() {
+    let dir = temp_dir("mut_wal_flip");
+    let db = dir.join("db");
+    let (base, ops) = mutation_wal_fixture(&db);
+    let wal_path = db.join("wal.log");
+    let pristine = std::fs::read(&wal_path).unwrap();
+
+    proptest("mutation wal flip damage", 96, |rng| {
+        let mut bytes = pristine.clone();
+        let i = rng.below(bytes.len());
+        bytes[i] ^= 1 << rng.below(8);
+        std::fs::write(&wal_path, &bytes).unwrap();
+        match Store::open(&db, 0) {
+            Err(Error::Corrupt(_)) => {}
+            Ok(store) => assert_is_mutation_prefix(store.index(), &base, &ops),
+            Err(other) => panic!("expected Corrupt or prefix recovery, got {other}"),
+        }
+        std::fs::write(&wal_path, &pristine).unwrap();
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Truncating a mutation WAL at any point recovers the longest whole
+/// prefix of the logged mutations, bit-identically.
+#[test]
+fn prop_mutation_wal_truncation_recovers_the_longest_prefix() {
+    let dir = temp_dir("mut_wal_trunc");
+    let db = dir.join("db");
+    let (base, ops) = mutation_wal_fixture(&db);
+    let wal_path = db.join("wal.log");
+    let pristine = std::fs::read(&wal_path).unwrap();
+
+    proptest("mutation wal truncation recovery", 48, |rng| {
+        let cut = rng.below(pristine.len() + 1);
+        std::fs::write(&wal_path, &pristine[..cut]).unwrap();
+        let store = Store::open(&db, 0).expect("truncation is always recoverable");
+        assert_is_mutation_prefix(store.index(), &base, &ops);
+        drop(store);
+        std::fs::write(&wal_path, &pristine).unwrap();
+    });
+    // The full file recovers the whole mutation history.
+    let store = Store::open(&db, 0).unwrap();
+    assert_is_mutation_prefix(store.index(), &base, &ops);
+    // Id 3 was revived by the upsert; 11 and 0 stay tombstoned.
+    assert_eq!(store.index().dead_len(), 2);
+    assert_eq!(store.index().live_len(), 21);
+    let _ = std::fs::remove_dir_all(&dir);
+}

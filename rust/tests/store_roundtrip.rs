@@ -218,7 +218,7 @@ fn lsh_index_wal_replay_matches_direct_inserts() {
             .map(|f| tensor_lsh::index::signature(&f.hash(x)))
             .collect();
         let id = index.insert_with_signatures(x.clone(), &sigs);
-        wal.append(&WalRecord { id: id as u64, sigs, item: x.clone() }).unwrap();
+        wal.append(&WalRecord::Insert { id: id as u64, sigs, item: x.clone() }).unwrap();
     }
     drop(wal);
 
@@ -228,8 +228,11 @@ fn lsh_index_wal_replay_matches_direct_inserts() {
     assert_eq!(replay.records.len(), 5);
     assert_eq!(replay.torn_bytes, 0);
     for rec in &replay.records {
-        assert_eq!(rec.id as usize, recovered.len(), "records extend in id order");
-        recovered.insert_with_signatures(rec.item.clone(), &rec.sigs);
+        let WalRecord::Insert { id, sigs, item } = rec else {
+            panic!("this log holds insert records only");
+        };
+        assert_eq!(*id as usize, recovered.len(), "records extend in id order");
+        recovered.insert_with_signatures(item.clone(), sigs);
     }
     assert_eq!(recovered.len(), index.len());
     let queries: Vec<AnyTensor> = extras
@@ -286,6 +289,84 @@ fn store_reopen_and_compact_preserve_responses() {
         store.index().as_ref(),
         &queries,
         "Store after compact",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Raw section tags of a segment file, in on-disk order. Layout: 16-byte
+/// header (magic, version, section count), then framed sections of
+/// `[u32 tag][u64 len][payload][u32 crc]`.
+fn section_tags(bytes: &[u8]) -> Vec<u32> {
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let mut tags = Vec::with_capacity(count);
+    let mut at = 16;
+    for _ in 0..count {
+        tags.push(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+        let len = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().unwrap()) as usize;
+        at += 16 + len;
+    }
+    assert_eq!(at, bytes.len(), "segment has trailing bytes");
+    tags
+}
+
+/// Forward compatibility with pre-mutability segments: the tombstone
+/// section is emitted only when a slot is actually dead, so a fully-live
+/// save has exactly the pre-PR-8 section layout — and that file (the
+/// bytes an older writer produced) still loads. Reviving every tombstone
+/// restores byte-identity with the clean save, proving the section is the
+/// only delta the mutability subsystem introduced.
+#[test]
+fn clean_segments_keep_the_pre_mutability_layout() {
+    use tensor_lsh::store::format::tag;
+
+    let dir = temp_dir("fwd_compat");
+    let mut rng = Rng::new(44);
+    let spec = LshSpec::cosine(FamilyKind::Cp, vec![5, 4], 2, 6, 4).with_seed(21, 9);
+    let dims = spec.family.dims.clone();
+    let items = corpus(&mut rng, &dims, 24);
+    let mut index = LshIndex::build_from_spec(&spec, items.clone()).unwrap();
+
+    // A fully-live save carries no tombstone section: these are exactly
+    // the bytes the pre-mutability writer produced, and they load fine.
+    let clean_path = dir.join("clean.seg");
+    index.save(&clean_path).unwrap();
+    let clean = std::fs::read(&clean_path).unwrap();
+    assert!(
+        !section_tags(&clean).contains(&tag::TOMBSTONES),
+        "clean saves must not grow a tombstone section"
+    );
+    let loaded = LshIndex::load(&clean_path).unwrap();
+    assert_eq!(loaded.dead_len(), 0);
+    assert_eq!(loaded.live_len(), items.len());
+
+    // Tombstoned saves append the section; the load round-trips the dead
+    // set and answers like the in-memory subject.
+    let removed = [3usize, 11, 19];
+    for &id in &removed {
+        index.remove(id).unwrap();
+    }
+    let dirty_path = dir.join("dirty.seg");
+    index.save(&dirty_path).unwrap();
+    let dirty = std::fs::read(&dirty_path).unwrap();
+    assert!(section_tags(&dirty).contains(&tag::TOMBSTONES));
+    assert!(dirty.len() > clean.len(), "the section is extra bytes, not a rewrite");
+    let loaded = LshIndex::load(&dirty_path).unwrap();
+    assert_eq!(loaded.dead_len(), removed.len());
+    let queries: Vec<AnyTensor> = (0..5).map(|_| random_any_tensor(&mut rng, &dims, 3)).collect();
+    assert_same_responses(&index, &loaded, &queries, "tombstoned segment");
+
+    // Reviving every dead slot with its original tensor restores exact
+    // byte-identity with the clean save: the tombstone section is the
+    // only on-disk delta the mutability subsystem introduced.
+    for &id in &removed {
+        index.upsert(id, items[id].clone()).unwrap();
+    }
+    let revived_path = dir.join("revived.seg");
+    index.save(&revived_path).unwrap();
+    assert_eq!(
+        std::fs::read(&revived_path).unwrap(),
+        clean,
+        "fully-revived index must save byte-identically to the clean file"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
