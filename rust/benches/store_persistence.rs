@@ -13,7 +13,10 @@
 //!   survive recovery) so the bench doubles as an end-to-end check;
 //! * a **churn** phase (delete half the corpus durably, compact, query):
 //!   durable deletes/sec, the dead fraction at compaction time, and the
-//!   compaction pass's reclaim throughput in MB/s.
+//!   compaction pass's reclaim throughput in MB/s;
+//! * an **out-of-core** phase (reopen paged behind the hot-bucket LRU):
+//!   cold vs warm paged-query p99 latency and the pager hit rate, with
+//!   every paged answer checked bit-identical to the resident store.
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI does).
 //!
@@ -29,7 +32,7 @@ use tensor_lsh::index::ShardedLshIndex;
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
 use tensor_lsh::query::QueryOpts;
 use tensor_lsh::rng::Rng;
-use tensor_lsh::store::Store;
+use tensor_lsh::store::{Residency, Store};
 use tensor_lsh::tensor::{numel, AnyTensor, CpTensor};
 use tensor_lsh::util::json::Json;
 use tensor_lsh::util::timer::time_once;
@@ -207,6 +210,57 @@ fn main() {
     println!("churn smoke: compacted store answers from survivors only");
     drop(store);
 
+    // -- out-of-core: cold vs warm queries through the pager -----------------
+    // Reopen the compacted store twice: fully resident (the reference) and
+    // with every shard paged behind a small hot-bucket LRU. The first paged
+    // pass faults buckets in via pread (cold); repeating the same queries
+    // hits the LRU (warm). The paged store must answer bit-identically to
+    // the resident one, so this phase doubles as an equivalence smoke.
+    let resident = Store::open(&db, 0).unwrap();
+    let paged = Store::open_with(&db, 0, Residency::Paged { lru_cap: 4096 }).unwrap();
+    let n_paged_q = if smoke { 60 } else { 400 };
+    // Survivors are the odd ids (the churn phase deleted the even half).
+    let qids: Vec<usize> = (0..n_paged_q).map(|i| (2 * i + 1) % n_total).collect();
+    let mut run_pass = |label: &str| -> Vec<f64> {
+        let mut lat_us = Vec::with_capacity(qids.len());
+        for &qid in &qids {
+            let q = resident.index().item(qid);
+            let t0 = std::time::Instant::now();
+            let got = paged.index().query_with(&q, &opts).unwrap();
+            lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            let want = resident.index().query_with(&q, &opts).unwrap();
+            assert_eq!(got.hits, want.hits, "{label}: paged hits must equal resident");
+            assert_eq!(got.stats, want.stats, "{label}: paged stats must equal resident");
+        }
+        lat_us
+    };
+    let p99 = |lat: &mut Vec<f64>| -> f64 {
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat[((lat.len() - 1) as f64 * 0.99).round() as usize]
+    };
+    let mut cold_us = run_pass("cold");
+    let mut warm_us = run_pass("warm");
+    let paged_cold_p99_us = p99(&mut cold_us);
+    let paged_warm_p99_us = p99(&mut warm_us);
+    let pstats = paged.index().pager_stats();
+    let pager_hit_rate = if pstats.hits + pstats.misses == 0 {
+        0.0
+    } else {
+        pstats.hits as f64 / (pstats.hits + pstats.misses) as f64
+    };
+    println!(
+        "paged queries ({} queries/pass): cold p99 {paged_cold_p99_us:.1} µs, \
+         warm p99 {paged_warm_p99_us:.1} µs | pager {} hits, {} misses, \
+         {} evictions (hit rate {pager_hit_rate:.3}), {} resident",
+        qids.len(),
+        pstats.hits,
+        pstats.misses,
+        pstats.evictions,
+        fmt_bytes(pstats.resident_bytes as usize)
+    );
+    drop(paged);
+    drop(resident);
+
     // -- machine-readable report ---------------------------------------------
     let mut config = BTreeMap::new();
     config.insert(
@@ -230,6 +284,9 @@ fn main() {
         entry("churn_dead_fraction", dead_fraction, "fraction"),
         entry("compaction_reclaimed_slots", reclaimable as f64, "slots"),
         entry("compaction_reclaim_mb_per_sec", reclaim_mb_s, "MB/s"),
+        entry("paged_cold_p99_us", paged_cold_p99_us, "us"),
+        entry("paged_warm_p99_us", paged_warm_p99_us, "us"),
+        entry("pager_hit_rate", pager_hit_rate, "fraction"),
     ];
 
     let mut root_json = BTreeMap::new();

@@ -205,6 +205,18 @@ impl AppConfig {
                     }
                 }
             }
+            "residency" => {
+                let residency = crate::store::Residency::parse(value)?;
+                // Same placeholder trick as checkpoint_every above.
+                match &mut self.spec.serving.store {
+                    Some(s) => s.residency = residency,
+                    None => {
+                        self.spec.serving.store = Some(
+                            crate::lsh::spec::StoreSpec::new("").with_residency(residency),
+                        )
+                    }
+                }
+            }
             "listen" => {
                 if value.is_empty() {
                     return Err(Error::InvalidSpec("listen addr must not be empty".into()));
@@ -279,6 +291,10 @@ impl AppConfig {
                     "compact_dead_fraction".into(),
                     Json::Num(store.compact_dead_fraction),
                 );
+            }
+            // Residency follows the same omit-when-default rule.
+            if store.residency != crate::store::Residency::Resident {
+                m.insert("residency".into(), Json::Str(store.residency.name()));
             }
         }
         if let Some(listen) = &s.serving.listen {
@@ -432,11 +448,16 @@ mod tests {
         assert!(matches!(c.spec.validate(), Err(Error::InvalidSpec(_))), "dir still empty");
         c.apply_override("store=/tmp/tlsh-store").unwrap();
         c.apply_override("compact_dead_fraction=0.25").unwrap();
+        c.apply_override("residency=paged:128").unwrap();
         c.spec.validate().unwrap();
         let store = c.spec.serving.store.as_ref().unwrap();
         assert_eq!(store.dir, "/tmp/tlsh-store");
         assert_eq!(store.checkpoint_every, 500);
         assert!((store.compact_dead_fraction - 0.25).abs() < 1e-12);
+        assert_eq!(
+            store.residency,
+            crate::store::Residency::Paged { lru_cap: 128 }
+        );
         // Flat file round trip keeps the store section.
         let tmp = std::env::temp_dir().join("tensorlsh_store_cfg_test.json");
         std::fs::write(&tmp, c.to_json()).unwrap();
@@ -455,6 +476,20 @@ mod tests {
                 AppConfig::default().apply_override(bad),
                 Err(Error::InvalidSpec(_))
             ));
+        }
+        // Residency may also arrive before store (placeholder trick), and
+        // unknown/zero-cap values are typed errors.
+        let mut c4 = AppConfig::default();
+        c4.apply_override("residency=auto").unwrap();
+        assert!(matches!(c4.spec.validate(), Err(Error::InvalidSpec(_))), "dir still empty");
+        c4.apply_override("store=/tmp/tlsh-store").unwrap();
+        c4.spec.validate().unwrap();
+        assert_eq!(
+            c4.spec.serving.store.as_ref().unwrap().residency,
+            crate::store::Residency::Auto
+        );
+        for bad in ["residency=sometimes", "residency=paged:0"] {
+            assert!(AppConfig::default().apply_override(bad).is_err());
         }
     }
 

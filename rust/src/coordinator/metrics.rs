@@ -149,12 +149,16 @@ impl Metrics {
             p95_us: hist.quantile(0.95),
             p99_us: hist.quantile(0.99),
             mean_us: hist.mean(),
-            // Churn counters live on the served index, not here: the
-            // coordinator overlays them (Metrics has no index handle).
+            // Churn and pager counters live on the served index, not here:
+            // the coordinator overlays them (Metrics has no index handle).
             live_items: 0,
             tombstoned: 0,
             compactions_run: 0,
             reclaimed_slots: 0,
+            pager_hits: 0,
+            pager_misses: 0,
+            pager_evictions: 0,
+            pager_resident_bytes: 0,
         }
     }
 }
@@ -185,6 +189,16 @@ pub struct MetricsSnapshot {
     pub compactions_run: u64,
     /// Dead slots physically reclaimed by those passes.
     pub reclaimed_slots: u64,
+    /// Pager bucket reads answered from the hot-bucket LRU (summed over
+    /// every paged shard; all four pager fields stay 0 on a fully resident
+    /// index).
+    pub pager_hits: u64,
+    /// Pager bucket reads that went to disk.
+    pub pager_misses: u64,
+    /// Buckets evicted from the LRU to stay under its capacity.
+    pub pager_evictions: u64,
+    /// Bytes paged shards currently hold in RAM (overlays + hot buckets).
+    pub pager_resident_bytes: u64,
 }
 
 impl MetricsSnapshot {
@@ -216,6 +230,19 @@ impl MetricsSnapshot {
             "reclaimed_slots".to_string(),
             Json::Num(self.reclaimed_slots as f64),
         );
+        m.insert("pager_hits".to_string(), Json::Num(self.pager_hits as f64));
+        m.insert(
+            "pager_misses".to_string(),
+            Json::Num(self.pager_misses as f64),
+        );
+        m.insert(
+            "pager_evictions".to_string(),
+            Json::Num(self.pager_evictions as f64),
+        );
+        m.insert(
+            "pager_resident_bytes".to_string(),
+            Json::Num(self.pager_resident_bytes as f64),
+        );
         Json::Obj(m)
     }
 
@@ -239,6 +266,10 @@ impl MetricsSnapshot {
                 "tombstoned",
                 "compactions_run",
                 "reclaimed_slots",
+                "pager_hits",
+                "pager_misses",
+                "pager_evictions",
+                "pager_resident_bytes",
             ]
             .contains(&key.as_str())
             {
@@ -263,7 +294,22 @@ impl MetricsSnapshot {
             tombstoned: v.get("tombstoned")?.as_usize()? as u64,
             compactions_run: v.get("compactions_run")?.as_usize()? as u64,
             reclaimed_slots: v.get("reclaimed_slots")?.as_usize()? as u64,
+            // Absent on frames from servers that predate paging: default 0,
+            // so old scrapes still parse.
+            pager_hits: opt_u64(v, "pager_hits")?,
+            pager_misses: opt_u64(v, "pager_misses")?,
+            pager_evictions: opt_u64(v, "pager_evictions")?,
+            pager_resident_bytes: opt_u64(v, "pager_resident_bytes")?,
         })
+    }
+}
+
+/// Optional u64 field: absent means 0 (forward compatibility for counters
+/// added after the wire format shipped).
+fn opt_u64(v: &crate::util::json::Json, key: &str) -> crate::error::Result<u64> {
+    match v.as_obj()?.get(key) {
+        Some(n) => Ok(n.as_usize()? as u64),
+        None => Ok(0),
     }
 }
 
@@ -296,6 +342,20 @@ impl std::fmt::Display for MetricsSnapshot {
                 f,
                 " compactions={} reclaimed={}",
                 self.compactions_run, self.reclaimed_slots
+            )?;
+        }
+        // Pager counters only appear once a paged shard has served reads —
+        // fully resident serving keeps the line unchanged.
+        if self.pager_hits + self.pager_misses > 0 {
+            let total = (self.pager_hits + self.pager_misses) as f64;
+            write!(
+                f,
+                " pager hits={} misses={} evictions={} hit_rate={:.3} resident_bytes={}",
+                self.pager_hits,
+                self.pager_misses,
+                self.pager_evictions,
+                self.pager_hits as f64 / total,
+                self.pager_resident_bytes
             )?;
         }
         Ok(())
@@ -399,6 +459,12 @@ mod tests {
         s.tombstoned = 13;
         s.compactions_run = 2;
         s.reclaimed_slots = 31;
+        // Pager counters are overlaid the same way (ISSUE 9 satellite):
+        // non-zero values must survive the trip bit-exactly.
+        s.pager_hits = 900;
+        s.pager_misses = 100;
+        s.pager_evictions = 40;
+        s.pager_resident_bytes = 65536;
         let text = s.to_json().to_string_pretty();
         let back =
             MetricsSnapshot::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -407,9 +473,28 @@ mod tests {
         assert!(shown.contains("live=120"));
         assert!(shown.contains("tombstoned=13"));
         assert!(shown.contains("compactions=2 reclaimed=31"));
-        // Idle snapshots round-trip too (all-zero means).
+        assert!(shown.contains("pager hits=900 misses=100 evictions=40 hit_rate=0.900"));
+        // Idle snapshots round-trip too (all-zero means), and their Display
+        // form has no pager segment.
         let idle = Metrics::new().snapshot();
         let back = MetricsSnapshot::from_json(&idle.to_json()).unwrap();
+        assert_eq!(back, idle);
+        assert!(!format!("{idle}").contains("pager"));
+        // Frames from servers that predate the pager fields still parse
+        // (absent keys default to 0).
+        let mut obj = match idle.to_json() {
+            crate::util::json::Json::Obj(m) => m,
+            other => panic!("{other:?}"),
+        };
+        for key in [
+            "pager_hits",
+            "pager_misses",
+            "pager_evictions",
+            "pager_resident_bytes",
+        ] {
+            obj.remove(key);
+        }
+        let back = MetricsSnapshot::from_json(&crate::util::json::Json::Obj(obj)).unwrap();
         assert_eq!(back, idle);
     }
 }

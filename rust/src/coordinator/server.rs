@@ -646,9 +646,9 @@ impl Searcher for Coordinator {
     }
 }
 
-/// Fill a snapshot's churn counters from the served index (they live on
-/// the index, not in [`Metrics`] — the index is the source of truth for
-/// live/tombstoned slot counts).
+/// Fill a snapshot's churn and pager counters from the served index (they
+/// live on the index, not in [`Metrics`] — the index is the source of truth
+/// for live/tombstoned slot counts and hot-bucket LRU activity).
 pub(crate) fn overlay_churn(
     mut snap: MetricsSnapshot,
     index: &ShardedLshIndex,
@@ -657,6 +657,11 @@ pub(crate) fn overlay_churn(
     snap.tombstoned = index.dead_len() as u64;
     snap.compactions_run = index.compactions_run();
     snap.reclaimed_slots = index.reclaimed_slots();
+    let pager = index.pager_stats();
+    snap.pager_hits = pager.hits;
+    snap.pager_misses = pager.misses;
+    snap.pager_evictions = pager.evictions;
+    snap.pager_resident_bytes = pager.resident_bytes;
     snap
 }
 

@@ -401,34 +401,65 @@ pub(crate) fn gather_candidates(
     opts: &QueryOpts,
     stats: &mut SearchStats,
 ) -> (Vec<u32>, Vec<u32>) {
+    gather_candidates_with(
+        &mut |t, sig, emit| {
+            emit(tables[t].bucket(sig));
+            Ok(())
+        },
+        n_slots,
+        dead,
+        sigs,
+        opts,
+        stats,
+    )
+    .expect("resident bucket source is infallible")
+}
+
+/// The generation kernel behind [`gather_candidates`], parameterized over
+/// the bucket source: `bucket(table, sig, emit)` must call `emit` with the
+/// bucket's slot list (possibly empty). The resident path feeds table
+/// slices; the paged path ([`crate::store::pager::PagedShard`]) feeds
+/// demand-loaded lists, which is why the source is fallible. One shared
+/// implementation is what makes paged answers — candidates AND stats —
+/// bit-identical to resident ones by construction.
+pub(crate) fn gather_candidates_with(
+    bucket: &mut dyn FnMut(usize, u64, &mut dyn FnMut(&[u32])) -> Result<()>,
+    n_slots: usize,
+    dead: &[bool],
+    sigs: &[Vec<u64>],
+    opts: &QueryOpts,
+    stats: &mut SearchStats,
+) -> Result<(Vec<u32>, Vec<u32>)> {
     let need_counts = !matches!(opts.rerank, RerankPolicy::Exact);
     let mut counts: Vec<u32> = if need_counts { vec![0; n_slots] } else { Vec::new() };
     let mut seen: Vec<bool> =
         if !need_counts && opts.dedup { vec![false; n_slots] } else { Vec::new() };
     let mut cand: Vec<u32> = Vec::new();
-    for (table, tsigs) in tables.iter().zip(sigs) {
+    for (t, tsigs) in sigs.iter().enumerate() {
         let mut hit = false;
         for &sig in tsigs {
-            for &slot in table.bucket(sig) {
-                if !dead.is_empty() && dead[slot as usize] {
-                    continue;
-                }
-                hit = true;
-                let s = slot as usize;
-                if need_counts {
-                    if counts[s] == 0 || !opts.dedup {
+            bucket(t, sig, &mut |slots| {
+                for &slot in slots {
+                    if !dead.is_empty() && dead[slot as usize] {
+                        continue;
+                    }
+                    hit = true;
+                    let s = slot as usize;
+                    if need_counts {
+                        if counts[s] == 0 || !opts.dedup {
+                            cand.push(slot);
+                        }
+                        counts[s] = counts[s].saturating_add(1);
+                    } else if opts.dedup {
+                        if !seen[s] {
+                            seen[s] = true;
+                            cand.push(slot);
+                        }
+                    } else {
                         cand.push(slot);
                     }
-                    counts[s] = counts[s].saturating_add(1);
-                } else if opts.dedup {
-                    if !seen[s] {
-                        seen[s] = true;
-                        cand.push(slot);
-                    }
-                } else {
-                    cand.push(slot);
                 }
-            }
+            })?;
         }
         if hit {
             stats.tables_hit += 1;
@@ -441,7 +472,7 @@ pub(crate) fn gather_candidates(
         }
     }
     stats.candidates_examined += cand.len();
-    (cand, counts)
+    Ok((cand, counts))
 }
 
 /// Score and rank one probing unit's candidates per the query's

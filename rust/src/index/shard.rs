@@ -28,20 +28,22 @@
 use super::codes::CodeMatrix;
 use super::table::{signature, HashTable};
 use super::{
-    build_families, check_table_signatures, gather_candidates, merge_hits,
-    rerank_with_policy, score_candidate, sort_results, table_signatures,
+    build_families, check_table_signatures, gather_candidates, gather_candidates_with,
+    merge_hits, rerank_with_policy, score_candidate, sort_results, table_signatures,
     table_signatures_batch, HashScratch, IndexConfig, Metric, SearchResult,
 };
 use crate::error::{Error, Result};
 use crate::lsh::spec::LshSpec;
 use crate::lsh::HashFamily;
 use crate::query::{Query, QueryOpts, SearchResponse, SearchStats, Searcher};
+use crate::store::pager::{tensor_bytes, PagedShard, PagerStats, Residency, ShardPaging};
 use crate::store::segment::{
     read_segment, sigs_arena_from_buckets, write_segment, SegmentContents, SegmentHeader,
-    SegmentView,
+    SegmentView, TableBuckets,
 };
 use crate::tensor::AnyTensor;
 use crate::util::json::{parse, Json};
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -67,12 +69,12 @@ struct Shard {
 /// compacted away). Sequential builds place id at slot `id / S`;
 /// concurrent inserts and compactions may shift it, so fall back to a
 /// scan.
-fn slot_of(shard: &Shard, id: usize, n_shards: usize) -> Option<usize> {
+fn slot_of(ids: &[usize], id: usize, n_shards: usize) -> Option<usize> {
     let guess = id / n_shards;
-    if shard.ids.get(guess) == Some(&id) {
+    if ids.get(guess) == Some(&id) {
         return Some(guess);
     }
-    shard.ids.iter().position(|&g| g == id)
+    ids.iter().position(|&g| g == id)
 }
 
 impl Shard {
@@ -153,6 +155,127 @@ impl Shard {
         reclaimed
     }
 
+}
+
+/// How one shard is held at serve time: fully materialized ([`Shard`], the
+/// historical path — unchanged, bit-identical) or served in place from its
+/// segment file ([`PagedShard`]). Every query/mutation path below goes
+/// through this enum's accessors, so the two representations cannot drift:
+/// candidate generation shares one kernel
+/// ([`super::gather_candidates_with`]) and re-ranking shares one policy
+/// implementation — only the bucket/item *sources* differ.
+enum ShardState {
+    Resident(Shard),
+    Paged(Box<PagedShard>),
+}
+
+impl ShardState {
+    /// Physical slots (live + tombstoned), including overlay inserts.
+    fn len(&self) -> usize {
+        match self {
+            ShardState::Resident(s) => s.items.len(),
+            ShardState::Paged(p) => p.len(),
+        }
+    }
+
+    fn ids(&self) -> &[usize] {
+        match self {
+            ShardState::Resident(s) => &s.ids,
+            ShardState::Paged(p) => p.ids(),
+        }
+    }
+
+    fn norms(&self) -> &[f64] {
+        match self {
+            ShardState::Resident(s) => &s.norms,
+            ShardState::Paged(p) => p.norms(),
+        }
+    }
+
+    fn dead(&self) -> &[bool] {
+        match self {
+            ShardState::Resident(s) => &s.dead,
+            ShardState::Paged(p) => p.dead(),
+        }
+    }
+
+    fn n_dead(&self) -> usize {
+        match self {
+            ShardState::Resident(s) => s.n_dead,
+            ShardState::Paged(p) => p.n_dead(),
+        }
+    }
+
+    /// The tombstone bitmap as the gather kernel wants it: `&[]` when
+    /// every slot is live.
+    fn dead_slice(&self) -> &[bool] {
+        if self.n_dead() == 0 {
+            &[]
+        } else {
+            self.dead()
+        }
+    }
+
+    fn set_dead(&mut self, slot: usize, dead: bool) {
+        match self {
+            ShardState::Resident(s) => {
+                if s.dead[slot] != dead {
+                    s.dead[slot] = dead;
+                    if dead {
+                        s.n_dead += 1;
+                    } else {
+                        s.n_dead -= 1;
+                    }
+                }
+            }
+            ShardState::Paged(p) => p.set_dead(slot, dead),
+        }
+    }
+
+    fn insert(&mut self, id: usize, x: AnyTensor, sigs: &[u64]) {
+        match self {
+            ShardState::Resident(s) => s.insert(id, x, sigs),
+            ShardState::Paged(p) => p.insert(id, x, sigs),
+        }
+    }
+
+    /// One slot's tensor: a borrow-free clone on the resident path, a
+    /// positioned read (overlay first) on the paged one.
+    fn item_at(&self, slot: usize) -> Result<AnyTensor> {
+        match self {
+            ShardState::Resident(s) => Ok(s.items[slot].clone()),
+            ShardState::Paged(p) => p.item_at(slot),
+        }
+    }
+
+    /// Candidate generation through the shared kernel — the resident arm
+    /// is exactly the historical `gather_candidates` call.
+    fn gather(
+        &self,
+        sigs: &[Vec<u64>],
+        opts: &QueryOpts,
+        stats: &mut SearchStats,
+    ) -> Result<(Vec<u32>, Vec<u32>)> {
+        match self {
+            ShardState::Resident(s) => Ok(gather_candidates(
+                &s.tables,
+                s.items.len(),
+                s.dead_slice(),
+                sigs,
+                opts,
+                stats,
+            )),
+            ShardState::Paged(p) => gather_candidates_with(
+                &mut |t, sig, emit| p.with_bucket(t, sig, emit),
+                p.len(),
+                self.dead_slice(),
+                sigs,
+                opts,
+                stats,
+            ),
+        }
+    }
+
     /// Exact re-rank of local slots; returns the shard's top-k with global
     /// ids.
     fn rerank(
@@ -166,12 +289,120 @@ impl Shard {
         let mut scored = Vec::with_capacity(slots.len());
         for slot in slots {
             let s = slot as usize;
-            let score = score_candidate(metric, &self.items[s], self.norms[s], q, qn)?;
-            scored.push(SearchResult { id: self.ids[s], score });
+            let score = match self {
+                ShardState::Resident(sh) => {
+                    score_candidate(metric, &sh.items[s], sh.norms[s], q, qn)?
+                }
+                ShardState::Paged(p) => {
+                    let x = p.item_at(s)?;
+                    score_candidate(metric, &x, p.norms()[s], q, qn)?
+                }
+            };
+            scored.push(SearchResult { id: self.ids()[s], score });
         }
         sort_results(metric, &mut scored);
         scored.truncate(k);
         Ok(scored)
+    }
+
+    /// Per-table buckets sorted by signature — the snapshot writer's view.
+    fn sorted_buckets(&self) -> Result<Vec<TableBuckets>> {
+        match self {
+            ShardState::Resident(s) => {
+                Ok(s.tables.iter().map(|t| t.sorted_buckets()).collect())
+            }
+            ShardState::Paged(p) => p.sorted_buckets(),
+        }
+    }
+
+    /// Every slot's tensor for the snapshot writer: borrowed when
+    /// resident, read back from the segment when paged.
+    fn items_for_save(&self) -> Result<Cow<'_, [AnyTensor]>> {
+        match self {
+            ShardState::Resident(s) => Ok(Cow::Borrowed(&s.items[..])),
+            ShardState::Paged(p) => Ok(Cow::Owned(p.all_items()?)),
+        }
+    }
+
+    /// Per-table (bucket count, max bucket size) without touching slot
+    /// lists on disk.
+    fn table_shapes(&self) -> Vec<(usize, usize)> {
+        match self {
+            ShardState::Resident(s) => s
+                .tables
+                .iter()
+                .map(|t| {
+                    let (_, max) = t.occupancy();
+                    (t.n_buckets(), max)
+                })
+                .collect(),
+            ShardState::Paged(p) => p.table_shapes(),
+        }
+    }
+
+    /// Materialize a paged shard back into RAM (tables rebuilt from the
+    /// directory + overlays, items read back from the segment).
+    fn materialize(p: &PagedShard) -> Result<Shard> {
+        let tables = p
+            .sorted_buckets()?
+            .into_iter()
+            .map(HashTable::from_buckets)
+            .collect();
+        Ok(Shard {
+            tables,
+            ids: p.ids().to_vec(),
+            items: p.all_items()?,
+            norms: p.norms().to_vec(),
+            dead: p.dead().to_vec(),
+            n_dead: p.n_dead(),
+        })
+    }
+
+    /// Reclaim tombstoned slots. Compaction rewrites every table and the
+    /// whole item arena anyway, so a paged shard **materializes to
+    /// resident** here (the next [`ShardedLshIndex::save`] +
+    /// `load_with_residency` round-trip restores paging); a paged shard
+    /// with nothing to reclaim is left untouched.
+    fn compact(&mut self) -> Result<usize> {
+        match self {
+            ShardState::Resident(s) => Ok(s.compact()),
+            ShardState::Paged(p) => {
+                if p.n_dead() == 0 {
+                    return Ok(0);
+                }
+                let mut shard = ShardState::materialize(p)?;
+                let reclaimed = shard.compact();
+                *self = ShardState::Resident(shard);
+                Ok(reclaimed)
+            }
+        }
+    }
+
+    /// The `info --store` residency row for this shard.
+    fn paging(&self) -> ShardPaging {
+        match self {
+            ShardState::Resident(s) => {
+                let table_bytes: u64 = s
+                    .tables
+                    .iter()
+                    .map(|t| 24 * t.n_buckets() as u64 + 4 * s.items.len() as u64)
+                    .sum();
+                let item_bytes: u64 = s.items.iter().map(tensor_bytes).sum();
+                ShardPaging {
+                    mode: "resident".to_string(),
+                    resident_bytes: 8 * s.ids.len() as u64
+                        + 8 * s.norms.len() as u64
+                        + s.dead.len() as u64
+                        + table_bytes
+                        + item_bytes,
+                    segment_bytes: 0,
+                    hits: 0,
+                    misses: 0,
+                    evictions: 0,
+                }
+            }
+            ShardState::Paged(p) => p.paging(),
+        }
     }
 }
 
@@ -191,7 +422,7 @@ pub fn merge_partials(
 /// Sharded multi-table LSH index (see the module docs).
 pub struct ShardedLshIndex {
     families: Vec<Arc<dyn HashFamily>>,
-    shards: Vec<RwLock<Shard>>,
+    shards: Vec<RwLock<ShardState>>,
     metric: Metric,
     probes: usize,
     /// Monotonic global id source. Ids are never reused — compaction
@@ -225,7 +456,7 @@ impl ShardedLshIndex {
         }
         let families = build_families(cfg)?;
         let shards = (0..n_shards)
-            .map(|_| RwLock::new(Shard::new(cfg.n_tables)))
+            .map(|_| RwLock::new(ShardState::Resident(Shard::new(cfg.n_tables))))
             .collect();
         Ok(ShardedLshIndex {
             families,
@@ -292,8 +523,30 @@ impl ShardedLshIndex {
             .iter()
             .map(|shard| {
                 let guard = shard.read().unwrap();
-                (guard.items.len() - guard.n_dead, guard.n_dead)
+                (guard.len() - guard.n_dead(), guard.n_dead())
             })
+            .collect()
+    }
+
+    /// Pager counters aggregated over every paged shard (all-zero when the
+    /// whole index is resident) — the coordinator's
+    /// [`crate::coordinator::MetricsSnapshot`] pager section.
+    pub fn pager_stats(&self) -> PagerStats {
+        let mut agg = PagerStats::default();
+        for shard in &self.shards {
+            if let ShardState::Paged(p) = &*shard.read().unwrap() {
+                agg.add(&p.stats());
+            }
+        }
+        agg
+    }
+
+    /// Per-shard residency report (mode, resident vs on-disk bytes, pager
+    /// counters) — the `tensorlsh info --store` view.
+    pub fn shard_paging(&self) -> Vec<ShardPaging> {
+        self.shards
+            .iter()
+            .map(|shard| shard.read().unwrap().paging())
             .collect()
     }
 
@@ -303,8 +556,8 @@ impl ShardedLshIndex {
             return false;
         }
         let guard = self.shards[self.shard_of(id)].read().unwrap();
-        match slot_of(&guard, id, self.shards.len()) {
-            Some(slot) => !guard.dead[slot],
+        match slot_of(guard.ids(), id, self.shards.len()) {
+            Some(slot) => !guard.dead()[slot],
             None => false,
         }
     }
@@ -318,7 +571,7 @@ impl ShardedLshIndex {
             return false;
         }
         let guard = self.shards[self.shard_of(id)].read().unwrap();
-        slot_of(&guard, id, self.shards.len()).is_some()
+        slot_of(guard.ids(), id, self.shards.len()).is_some()
     }
 
     /// Number of shards S.
@@ -359,12 +612,22 @@ impl ShardedLshIndex {
     }
 
     /// Clone out an indexed item by global id (tombstoned items remain
-    /// readable until a compaction reclaims their slot).
+    /// readable until a compaction reclaims their slot). Panics on unknown
+    /// ids and on paged-shard read failures — use
+    /// [`ShardedLshIndex::try_item`] where those must be typed.
     pub fn item(&self, id: usize) -> AnyTensor {
+        self.try_item(id).expect("item read failed")
+    }
+
+    /// [`ShardedLshIndex::item`] with typed errors: unknown/compacted ids
+    /// are [`Error::InvalidParameter`], paged-shard segment damage is
+    /// [`Error::Corrupt`].
+    pub fn try_item(&self, id: usize) -> Result<AnyTensor> {
         let shard = self.shards[self.shard_of(id)].read().unwrap();
-        let slot = slot_of(&shard, id, self.shards.len())
-            .unwrap_or_else(|| panic!("item id {id} not present"));
-        shard.items[slot].clone()
+        let slot = slot_of(shard.ids(), id, self.shards.len()).ok_or_else(|| {
+            Error::InvalidParameter(format!("item id {id} not present"))
+        })?;
+        shard.item_at(slot)
     }
 
     /// Per-table bucket signatures for one item — the exact computation
@@ -407,18 +670,17 @@ impl ShardedLshIndex {
             )));
         }
         let mut guard = self.shards[self.shard_of(id)].write().unwrap();
-        let Some(slot) = slot_of(&guard, id, self.shards.len()) else {
+        let Some(slot) = slot_of(guard.ids(), id, self.shards.len()) else {
             return Err(Error::InvalidParameter(format!(
                 "remove: id {id} was already removed and compacted"
             )));
         };
-        if guard.dead[slot] {
+        if guard.dead()[slot] {
             return Err(Error::InvalidParameter(format!(
                 "remove: id {id} is already removed"
             )));
         }
-        guard.dead[slot] = true;
-        guard.n_dead += 1;
+        guard.set_dead(slot, true);
         drop(guard);
         self.n_dead.fetch_add(1, Ordering::SeqCst);
         Ok(())
@@ -452,7 +714,7 @@ impl ShardedLshIndex {
             )));
         }
         let mut guard = self.shards[self.shard_of(id)].write().unwrap();
-        let Some(slot) = slot_of(&guard, id, self.shards.len()) else {
+        let Some(slot) = slot_of(guard.ids(), id, self.shards.len()) else {
             return Err(Error::InvalidParameter(format!(
                 "upsert: id {id} was removed and compacted; insert it as a new item"
             )));
@@ -460,19 +722,26 @@ impl ShardedLshIndex {
         // Recompute the stored tensor's signatures under the same write
         // lock that applies the swap, so a racing upsert on this id
         // cannot leave the buckets pointing at stale signatures.
-        let old_sigs = self.insert_signatures(&guard.items[slot]);
-        for ((table, &old), &new) in guard.tables.iter_mut().zip(&old_sigs).zip(sigs) {
-            if old != new {
-                let removed = table.remove_slot(old, slot as u32);
-                debug_assert!(removed, "bucket tables out of sync with stored tensor");
-                table.insert_sorted(new, slot as u32);
+        let old_sigs = self.insert_signatures(&guard.item_at(slot)?);
+        match &mut *guard {
+            ShardState::Resident(s) => {
+                for ((table, &old), &new) in s.tables.iter_mut().zip(&old_sigs).zip(sigs)
+                {
+                    if old != new {
+                        let removed = table.remove_slot(old, slot as u32);
+                        debug_assert!(removed, "bucket tables out of sync with stored tensor");
+                        table.insert_sorted(new, slot as u32);
+                    }
+                }
+                s.norms[slot] = x.frob_norm();
+                s.items[slot] = x;
             }
+            // Paged: only the buckets whose signature changed are
+            // rewritten (into the edit overlay) — no materialization.
+            ShardState::Paged(p) => p.apply_upsert(slot as u32, x, &old_sigs, sigs)?,
         }
-        guard.norms[slot] = x.frob_norm();
-        guard.items[slot] = x;
-        if guard.dead[slot] {
-            guard.dead[slot] = false;
-            guard.n_dead -= 1;
+        if guard.dead()[slot] {
+            guard.set_dead(slot, false);
             drop(guard);
             self.n_dead.fetch_sub(1, Ordering::SeqCst);
         }
@@ -488,16 +757,21 @@ impl ShardedLshIndex {
     /// write locks; callers needing a consistent cut with respect to
     /// concurrent mutations must quiesce them first (the durable store
     /// holds its WAL lock across compaction for exactly this reason).
-    pub fn compact_dead(&self) -> usize {
+    ///
+    /// A *paged* shard with tombstones materializes back to resident here
+    /// — compaction rewrites every table and the item arena anyway — and
+    /// the read can surface segment damage, hence the `Result`; resident
+    /// shards never fail.
+    pub fn compact_dead(&self) -> Result<usize> {
         let mut reclaimed = 0usize;
         for shard in &self.shards {
-            reclaimed += shard.write().unwrap().compact();
+            reclaimed += shard.write().unwrap().compact()?;
         }
         self.n_slots.fetch_sub(reclaimed, Ordering::SeqCst);
         self.n_dead.fetch_sub(reclaimed, Ordering::SeqCst);
         self.reclaimed.fetch_add(reclaimed as u64, Ordering::SeqCst);
         self.compactions.fetch_add(1, Ordering::SeqCst);
-        reclaimed
+        Ok(reclaimed)
     }
 
     /// Insert row `b` of a precomputed [`CodeMatrix`] — the flat bulk-build
@@ -682,31 +956,42 @@ impl ShardedLshIndex {
             probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
             ..SearchStats::default()
         };
-        let (cand, counts) = gather_candidates(
-            &guard.tables,
-            guard.items.len(),
-            guard.dead_slice(),
-            sigs,
-            opts,
-            &mut stats,
-        );
-        let hits = rerank_with_policy(
-            self.metric,
-            opts,
-            cand,
-            &counts,
-            |s| {
-                score_candidate(
-                    self.metric,
-                    &guard.items[s as usize],
-                    guard.norms[s as usize],
-                    tensor,
-                    qn,
-                )
-            },
-            |s| guard.ids[s as usize],
-            &mut stats,
-        )?;
+        let (cand, counts) = guard.gather(sigs, opts, &mut stats)?;
+        let hits = match &*guard {
+            ShardState::Resident(s) => rerank_with_policy(
+                self.metric,
+                opts,
+                cand,
+                &counts,
+                |sl| {
+                    score_candidate(
+                        self.metric,
+                        &s.items[sl as usize],
+                        s.norms[sl as usize],
+                        tensor,
+                        qn,
+                    )
+                },
+                |sl| s.ids[sl as usize],
+                &mut stats,
+            )?,
+            // Paged: each scored candidate is one positioned read of its
+            // item record (overlay tensors short-circuit). Scores, and
+            // therefore hits and stats, are bit-identical to the resident
+            // arm — the bytes decode to the same tensors.
+            ShardState::Paged(p) => rerank_with_policy(
+                self.metric,
+                opts,
+                cand,
+                &counts,
+                |sl| {
+                    let x = p.item_at(sl as usize)?;
+                    score_candidate(self.metric, &x, p.norms()[sl as usize], tensor, qn)
+                },
+                |sl| p.ids()[sl as usize],
+                &mut stats,
+            )?,
+        };
         Ok((hits, stats))
     }
 
@@ -774,9 +1059,9 @@ impl ShardedLshIndex {
                     let name = &seg_names[s];
                     scope.spawn(move || -> Result<usize> {
                         let guard = self.shards[s].read().unwrap();
-                        let buckets: Vec<crate::store::segment::TableBuckets> =
-                            guard.tables.iter().map(|t| t.sorted_buckets()).collect();
-                        let sigs = sigs_arena_from_buckets(&buckets, guard.items.len())?;
+                        let buckets = guard.sorted_buckets()?;
+                        let items = guard.items_for_save()?;
+                        let sigs = sigs_arena_from_buckets(&buckets, guard.len())?;
                         // Tombstoned slots stay in every section above (the
                         // segment cross-validation wants each slot exactly
                         // once per table); this ascending list marks which
@@ -785,14 +1070,14 @@ impl ShardedLshIndex {
                         // pre-mutability ones and old readers load new
                         // segments as insert-only.
                         let tombstones: Vec<u32> = guard
-                            .dead
+                            .dead()
                             .iter()
                             .enumerate()
                             .filter_map(|(sl, &d)| if d { Some(sl as u32) } else { None })
                             .collect();
                         let header = SegmentHeader {
                             spec: spec.clone(),
-                            n_items: guard.items.len(),
+                            n_items: guard.len(),
                             n_tables: self.families.len(),
                             probes: self.probes,
                             metric: self.metric,
@@ -802,15 +1087,15 @@ impl ShardedLshIndex {
                             &dir.join(name),
                             SegmentView {
                                 header: &header,
-                                ids: &guard.ids,
+                                ids: guard.ids(),
                                 sigs: &sigs,
                                 buckets: &buckets,
-                                items: &guard.items,
-                                norms: &guard.norms,
+                                items: &items[..],
+                                norms: guard.norms(),
                                 tombstones: &tombstones,
                             },
                         )?;
-                        Ok(guard.items.len())
+                        Ok(guard.len())
                     })
                 })
                 .collect();
@@ -859,8 +1144,23 @@ impl ShardedLshIndex {
     /// parse + cross-validate the manifest, read every shard segment (in
     /// parallel), and verify the shards partition the id space exactly
     /// (`id mod S` placement, every id present once). Any damage or
-    /// inconsistency is a typed [`Error::Corrupt`].
+    /// inconsistency is a typed [`Error::Corrupt`]. Every shard is fully
+    /// materialized — see [`ShardedLshIndex::load_with_residency`] for
+    /// out-of-core serving.
     pub fn load(dir: &Path) -> Result<ShardedLshIndex> {
+        ShardedLshIndex::load_with_residency(dir, Residency::Resident)
+    }
+
+    /// [`ShardedLshIndex::load`] under an explicit [`Residency`] policy.
+    /// `Resident` materializes every shard (the historical path,
+    /// unchanged); `Paged` serves each shard in place from its segment
+    /// file through a [`PagedShard`]; `Auto` decides per shard by segment
+    /// file size. Paged shards answer every query bit-identically to
+    /// resident ones (`tests/paging_equivalence.rs`); the segment reader's
+    /// cross-validation of the signature arena against the buckets is the
+    /// one check the paged open skips (the arena is never consulted at
+    /// serve time — only its framed length is verified).
+    pub fn load_with_residency(dir: &Path, residency: Residency) -> Result<ShardedLshIndex> {
         let corrupt = |m: String| Error::Corrupt(m);
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
         // The manifest is plain JSON with no CRC of its own, so EVERY way
@@ -921,10 +1221,41 @@ impl ShardedLshIndex {
         cfg.probes = probes;
         let families = build_families(&cfg)?;
 
-        let loaded: Vec<Result<SegmentContents>> = std::thread::scope(|scope| {
+        // One segment read per thread; each resolves the residency policy
+        // against its own file size (`Auto` pages only the big ones).
+        enum LoadedShard {
+            Resident(Box<SegmentContents>),
+            Paged(Box<PagedShard>),
+        }
+        impl LoadedShard {
+            fn header(&self) -> &SegmentHeader {
+                match self {
+                    LoadedShard::Resident(c) => &c.header,
+                    LoadedShard::Paged(p) => p.header(),
+                }
+            }
+            fn ids(&self) -> &[usize] {
+                match self {
+                    LoadedShard::Resident(c) => &c.ids,
+                    LoadedShard::Paged(p) => p.ids(),
+                }
+            }
+        }
+        let loaded: Vec<Result<LoadedShard>> = std::thread::scope(|scope| {
             let handles: Vec<_> = names
                 .iter()
-                .map(|name| scope.spawn(move || read_segment(&dir.join(name))))
+                .map(|name| {
+                    scope.spawn(move || -> Result<LoadedShard> {
+                        let path = dir.join(name);
+                        let seg_bytes = std::fs::metadata(&path)?.len();
+                        match residency.resolve(seg_bytes) {
+                            Residency::Paged { lru_cap } => Ok(LoadedShard::Paged(
+                                Box::new(PagedShard::open(&path, lru_cap)?),
+                            )),
+                            _ => Ok(LoadedShard::Resident(Box::new(read_segment(&path)?))),
+                        }
+                    })
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("load thread")).collect()
         });
@@ -935,16 +1266,17 @@ impl ShardedLshIndex {
         let mut contents = Vec::with_capacity(n_shards);
         for (s, c) in loaded.into_iter().enumerate() {
             let c = c?;
-            if c.header.shard != Some((s, n_shards)) {
+            let header = c.header();
+            if header.shard != Some((s, n_shards)) {
                 return Err(corrupt(format!(
                     "segment '{}' labels itself {:?}, expected shard {s} of {n_shards}",
-                    names[s], c.header.shard
+                    names[s], header.shard
                 )));
             }
-            if c.header.spec != spec
-                || c.header.n_tables != n_tables
-                || c.header.probes != probes
-                || c.header.metric != metric
+            if header.spec != spec
+                || header.n_tables != n_tables
+                || header.probes != probes
+                || header.metric != metric
             {
                 return Err(corrupt(format!(
                     "segment '{}' disagrees with the manifest (spec/tables/probes/metric)",
@@ -953,7 +1285,7 @@ impl ShardedLshIndex {
             }
             contents.push(c);
         }
-        let total: usize = contents.iter().map(|c| c.ids.len()).sum();
+        let total: usize = contents.iter().map(|c| c.ids().len()).sum();
         if total != n_items {
             return Err(corrupt(format!(
                 "shard segments hold {total} items, manifest says {n_items}"
@@ -963,7 +1295,7 @@ impl ShardedLshIndex {
         let mut shards = Vec::with_capacity(n_shards);
         let mut total_dead = 0usize;
         for (s, c) in contents.into_iter().enumerate() {
-            for &id in &c.ids {
+            for &id in c.ids() {
                 if id >= next_id || id % n_shards != s || seen[id] {
                     return Err(corrupt(format!(
                         "segment '{}': item id {id} out of range, misplaced, or duplicated",
@@ -972,21 +1304,33 @@ impl ShardedLshIndex {
                 }
                 seen[id] = true;
             }
-            // The segment reader already validated the tombstone list
-            // (strictly ascending, in range); adopt it as a bitmap.
-            let mut dead = vec![false; c.items.len()];
-            for &slot in &c.tombstones {
-                dead[slot as usize] = true;
+            match c {
+                LoadedShard::Resident(c) => {
+                    let c = *c;
+                    // The segment reader already validated the tombstone
+                    // list (strictly ascending, in range); adopt it as a
+                    // bitmap.
+                    let mut dead = vec![false; c.items.len()];
+                    for &slot in &c.tombstones {
+                        dead[slot as usize] = true;
+                    }
+                    total_dead += c.tombstones.len();
+                    shards.push(RwLock::new(ShardState::Resident(Shard {
+                        tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
+                        ids: c.ids,
+                        items: c.items,
+                        norms: c.norms,
+                        n_dead: c.tombstones.len(),
+                        dead,
+                    })));
+                }
+                LoadedShard::Paged(p) => {
+                    // The paged open validated tombstones the same way and
+                    // already holds them as a bitmap.
+                    total_dead += p.n_dead();
+                    shards.push(RwLock::new(ShardState::Paged(p)));
+                }
             }
-            total_dead += c.tombstones.len();
-            shards.push(RwLock::new(Shard {
-                tables: c.buckets.into_iter().map(HashTable::from_buckets).collect(),
-                ids: c.ids,
-                items: c.items,
-                norms: c.norms,
-                n_dead: c.tombstones.len(),
-                dead,
-            }));
         }
         // Without compaction holes (next_id == n_items): total == n_items
         // + all ids distinct and < n_items ⇒ every id is present
@@ -1009,28 +1353,22 @@ impl ShardedLshIndex {
 
     /// Deduplicated global candidate ids for a query (unranked) — the
     /// sharded analogue of [`super::LshIndex::candidates`], through the
-    /// same shared `gather_candidates` path so dedup/ordering semantics
-    /// cannot diverge between the structures.
-    pub fn candidates(&self, q: &AnyTensor) -> Vec<usize> {
+    /// same shared gather kernel so dedup/ordering semantics cannot
+    /// diverge between the structures. Fallible because paged shards read
+    /// buckets from disk; resident shards never fail.
+    pub fn candidates(&self, q: &AnyTensor) -> Result<Vec<usize>> {
         let sigs = self.signatures(q);
         let opts = QueryOpts::top_k(0);
         let mut out = Vec::new();
         for shard in &self.shards {
             let guard = shard.read().unwrap();
             let mut stats = SearchStats::default();
-            let (slots, _) = gather_candidates(
-                &guard.tables,
-                guard.items.len(),
-                guard.dead_slice(),
-                &sigs,
-                &opts,
-                &mut stats,
-            );
+            let (slots, _) = guard.gather(&sigs, &opts, &mut stats)?;
             for slot in slots {
-                out.push(guard.ids[slot as usize]);
+                out.push(guard.ids()[slot as usize]);
             }
         }
-        out
+        Ok(out)
     }
 
     /// Exact (linear-scan) k-NN over the live set — ground truth for
@@ -1041,8 +1379,8 @@ impl ShardedLshIndex {
         let mut partials = Vec::with_capacity(self.shards.len());
         for shard in &self.shards {
             let guard = shard.read().unwrap();
-            let slots: Vec<u32> = (0..guard.items.len() as u32)
-                .filter(|&s| !guard.dead[s as usize])
+            let slots: Vec<u32> = (0..guard.len() as u32)
+                .filter(|&s| !guard.dead()[s as usize])
                 .collect();
             partials.push(guard.rerank(self.metric, q, qn, slots, k)?);
         }
@@ -1058,10 +1396,9 @@ impl ShardedLshIndex {
         let mut max = vec![0usize; n_tables];
         for shard in &self.shards {
             let guard = shard.read().unwrap();
-            for (t, table) in guard.tables.iter().enumerate() {
-                let (_, m) = table.occupancy();
-                entries[t] += guard.items.len();
-                buckets[t] += table.n_buckets();
+            for (t, (n_buckets, m)) in guard.table_shapes().into_iter().enumerate() {
+                entries[t] += guard.len();
+                buckets[t] += n_buckets;
                 max[t] = max[t].max(m);
             }
         }
@@ -1166,7 +1503,7 @@ mod tests {
             assert_eq!(a.stats.probes_used, b.stats.probes_used);
             // Candidate unions agree as sets.
             let mut ca = single.candidates(&q);
-            let mut cb = sharded.candidates(&q);
+            let mut cb = sharded.candidates(&q).unwrap();
             ca.sort_unstable();
             cb.sort_unstable();
             assert_eq!(ca, cb);
@@ -1255,7 +1592,7 @@ mod tests {
         let mut all: Vec<usize> = Vec::new();
         for s in 0..idx.n_shards() {
             let guard = idx.shards[s].read().unwrap();
-            all.extend(guard.ids.iter().copied());
+            all.extend(guard.ids().iter().copied());
         }
         all.sort_unstable();
         assert_eq!(all, (0..120).collect::<Vec<_>>());
@@ -1313,7 +1650,7 @@ mod tests {
 
         // Compaction reclaims the two dead slots; global ids and every
         // query answer are unchanged bit for bit.
-        assert_eq!(sharded.compact_dead(), 2);
+        assert_eq!(sharded.compact_dead().unwrap(), 2);
         assert_eq!(sharded.len(), 20, "the id watermark never shrinks");
         assert_eq!(sharded.live_len(), 18);
         assert_eq!(sharded.dead_len(), 0);
@@ -1367,7 +1704,7 @@ mod tests {
                 assert!(hit.id >= 60, "dead id {} surfaced", hit.id);
             }
         }
-        assert_eq!(idx.compact_dead(), 60);
+        assert_eq!(idx.compact_dead().unwrap(), 60);
         assert_eq!(idx.live_len(), 60);
         for q in items.iter().take(6) {
             for hit in idx.query_with(q, &opts).unwrap().hits {

@@ -48,7 +48,7 @@ use crate::projection::{
     CpRademacher, Distribution, GaussianDense, Precision, SparseGaussian, TtRademacher,
 };
 use crate::stats;
-use crate::store::Store;
+use crate::store::{Residency, Store};
 use crate::tensor::AnyTensor;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
@@ -355,11 +355,21 @@ pub struct StoreSpec {
     /// bucket rewrite). 0 disables the trigger (manual compaction still
     /// reclaims). Must be in `[0, 1)`.
     pub compact_dead_fraction: f64,
+    /// Per-shard residency policy applied when the store opens: keep shards
+    /// fully in RAM (`Resident`, the default), page buckets/items on demand
+    /// through the hot-bucket LRU (`Paged`), or pick per shard by segment
+    /// size (`Auto`). See [`crate::store::Residency`].
+    pub residency: Residency,
 }
 
 impl StoreSpec {
     pub fn new(dir: impl Into<String>) -> StoreSpec {
-        StoreSpec { dir: dir.into(), checkpoint_every: 0, compact_dead_fraction: 0.0 }
+        StoreSpec {
+            dir: dir.into(),
+            checkpoint_every: 0,
+            compact_dead_fraction: 0.0,
+            residency: Residency::Resident,
+        }
     }
 
     pub fn with_checkpoint_every(mut self, n: usize) -> StoreSpec {
@@ -369,6 +379,11 @@ impl StoreSpec {
 
     pub fn with_compact_dead_fraction(mut self, f: f64) -> StoreSpec {
         self.compact_dead_fraction = f;
+        self
+    }
+
+    pub fn with_residency(mut self, residency: Residency) -> StoreSpec {
+        self.residency = residency;
         self
     }
 
@@ -403,13 +418,18 @@ impl StoreSpec {
                 Json::Num(self.compact_dead_fraction),
             );
         }
+        // Same omit-when-default discipline: specs written before residency
+        // tiering existed stay byte-identical through a round-trip.
+        if self.residency != Residency::Resident {
+            m.insert("residency".to_string(), Json::Str(self.residency.name()));
+        }
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<StoreSpec> {
         reject_unknown(
             v,
-            &["dir", "checkpoint_every", "compact_dead_fraction"],
+            &["dir", "checkpoint_every", "compact_dead_fraction", "residency"],
             "store",
         )?;
         Ok(StoreSpec {
@@ -421,6 +441,10 @@ impl StoreSpec {
             compact_dead_fraction: match v.as_obj()?.get("compact_dead_fraction") {
                 Some(n) => n.as_f64()?,
                 None => 0.0,
+            },
+            residency: match v.as_obj()?.get("residency") {
+                Some(s) => Residency::parse(s.as_str()?)?,
+                None => Residency::Resident,
             },
         })
     }
@@ -1296,12 +1320,17 @@ impl CoordinatorBuilder {
     }
 
     /// Warm-start from the spec's durable store: newest valid snapshot +
-    /// WAL replay ([`Store::open`]).
+    /// WAL replay ([`Store::open_with`]), honouring the spec's per-shard
+    /// [`Residency`] policy (paged shards serve buckets/items on demand).
     pub fn open_store(&self) -> Result<Arc<Store>> {
         let store_spec = self.store_spec()?;
         Ok(Arc::new(
-            Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?
-                .with_compact_dead_fraction(store_spec.compact_dead_fraction),
+            Store::open_with(
+                store_spec.dir.as_ref(),
+                store_spec.checkpoint_every,
+                store_spec.residency,
+            )?
+            .with_compact_dead_fraction(store_spec.compact_dead_fraction),
         ))
     }
 
@@ -1384,6 +1413,28 @@ mod tests {
             back.serving.store.as_ref().unwrap().compact_dead_fraction,
             0.25
         );
+        // Residency follows the same omit-when-default rule: Resident emits
+        // no key, every other mode round-trips through its string form.
+        assert!(!durable.to_json_string().contains("residency"));
+        for residency in [
+            crate::store::Residency::Paged { lru_cap: 512 },
+            crate::store::Residency::Paged {
+                lru_cap: crate::store::Residency::DEFAULT_LRU_CAP,
+            },
+            crate::store::Residency::Auto,
+        ] {
+            let paged = spec
+                .clone()
+                .with_store(StoreSpec::new("/var/lib/tensorlsh").with_residency(residency));
+            let text = paged.to_json_string();
+            assert!(text.contains("residency"), "{text}");
+            let back = LshSpec::from_json_str(&text).unwrap();
+            assert_eq!(back, paged);
+            assert_eq!(back.serving.store.as_ref().unwrap().residency, residency);
+        }
+        // An unknown residency string is a typed parse error.
+        let bad = parse(r#"{"dir": "d", "residency": "sometimes"}"#).unwrap();
+        assert!(StoreSpec::from_json(&bad).is_err());
         // An empty store dir is a typed validation error.
         assert!(matches!(
             spec.clone().with_store(StoreSpec::new("")).validate(),

@@ -12,7 +12,9 @@
 //!   info     show effective config + canonical spec JSON, validity report,
 //!            artifact manifest; `info <file.seg>` describes a snapshot
 //!            segment (header, sections, sizes); `info --store <dir>`
-//!            reports per-shard live/tombstone counts and the dead fraction
+//!            reports per-shard live/tombstone counts, the dead fraction,
+//!            and per-shard residency (resident vs on-disk bytes, pager
+//!            hit/miss counters — open paged with `--residency paged`)
 //!   plan     (K, L) parameter planning from collision probabilities;
 //!            prints the planned spec JSON on stdout (summary on stderr),
 //!            so `plan > spec.json` feeds straight back into `--config`
@@ -33,7 +35,9 @@
 //!            config's shape/seed)
 //!   serve    run the coordinator over a synthetic query trace;
 //!            `serve --store <dir>` warm-starts from (or initializes) the
-//!            store and checkpoints on shutdown;
+//!            store and checkpoints on shutdown; `--residency
+//!            resident|paged|paged:<cap>|auto` pages shards on demand so
+//!            an index larger than RAM still serves;
 //!            `serve --listen <addr>` serves the framed TCP wire protocol
 //!            instead of a local trace (composes with --store)
 //!   ping     round-trip a Ping frame to a listening server
@@ -58,7 +62,7 @@ use tensor_lsh::net::{Client, NetConfig, Server};
 use tensor_lsh::query::{Query, QueryOpts, RerankPolicy};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::runtime::{find_artifact_dir, Manifest};
-use tensor_lsh::store::{self, Store};
+use tensor_lsh::store::{self, Residency, Store};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
 use tensor_lsh::workload::{low_rank_corpus, zipf_trace, DatasetSpec, PairFormat};
 
@@ -102,6 +106,8 @@ fn print_usage() {
          \x20          or upsert <addr> <id> (tensor drawn from the config)\n\
          \x20 serve    run the coordinator over a synthetic query trace;\n\
          \x20          --store <dir> warm-starts and checkpoints on shutdown;\n\
+         \x20          --residency resident|paged|paged:<cap>|auto pages shards\n\
+         \x20          on demand (out-of-core serving);\n\
          \x20          --listen <addr> serves the framed TCP wire protocol\n\
          \x20          instead of a local trace (composes with --store)\n\
          \x20 ping     round-trip a Ping frame: ping <addr>\n\
@@ -113,8 +119,8 @@ fn print_usage() {
          config keys: dims rank_proj rank_in k l w family metric probes banded\n\
          \x20            precision sample n_items top_k n_workers shards max_batch\n\
          \x20            max_wait_us seed seed_stride artifact_dir store\n\
-         \x20            checkpoint_every compact_dead_fraction listen max_conns\n\
-         \x20            read_timeout_ms write_timeout_ms max_inflight"
+         \x20            checkpoint_every compact_dead_fraction residency listen\n\
+         \x20            max_conns read_timeout_ms write_timeout_ms max_inflight"
     );
 }
 
@@ -167,10 +173,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
 }
 
 fn cmd_info(cfg: &AppConfig, positional: &[String]) -> Result<()> {
-    // `info --store <dir>`: churn report instead of the config.
+    // `info --store <dir>`: churn + residency report instead of the config.
     let (store_flag, positional) = split_store_flag(positional)?;
+    let (residency_flag, positional) = split_residency_flag(&positional)?;
     if let Some(dir) = store_flag {
-        return cmd_info_store(dir.as_ref());
+        return cmd_info_store(dir.as_ref(), residency_flag.unwrap_or_default());
     }
     // `info <file.seg>`: describe a snapshot segment instead of the config.
     if let Some(path) = positional.first() {
@@ -202,9 +209,11 @@ fn cmd_info(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 }
 
 /// `info --store <dir>`: open the store and report per-shard live/tombstone
-/// slot counts plus the dead fraction the compaction trigger watches.
-fn cmd_info_store(dir: &std::path::Path) -> Result<()> {
-    let store = Store::open(dir, 0)?;
+/// slot counts plus the dead fraction the compaction trigger watches, and —
+/// with `--residency paged|paged:<cap>|auto` — the per-shard residency mode,
+/// resident vs on-disk segment bytes, and pager LRU counters.
+fn cmd_info_store(dir: &std::path::Path, residency: Residency) -> Result<()> {
+    let store = Store::open_with(dir, 0, residency)?;
     let index = store.index();
     let slots = index.live_len() + index.dead_len();
     println!(
@@ -230,6 +239,37 @@ fn cmd_info_store(dir: &std::path::Path) -> Result<()> {
         index.compactions_run(),
         index.reclaimed_slots()
     );
+    println!("residency:");
+    for (s, p) in index.shard_paging().iter().enumerate() {
+        if p.segment_bytes > 0 {
+            println!(
+                "  shard {s}: {} — {} resident of {} on disk | pager {} hits, \
+                 {} misses, {} evictions",
+                p.mode,
+                tensor_lsh::util::fmt_bytes(p.resident_bytes as usize),
+                tensor_lsh::util::fmt_bytes(p.segment_bytes as usize),
+                p.hits,
+                p.misses,
+                p.evictions
+            );
+        } else {
+            println!(
+                "  shard {s}: {} — {} resident",
+                p.mode,
+                tensor_lsh::util::fmt_bytes(p.resident_bytes as usize)
+            );
+        }
+    }
+    let pager = index.pager_stats();
+    if pager != Default::default() {
+        println!(
+            "pager totals: {} hits, {} misses, {} evictions, {} resident",
+            pager.hits,
+            pager.misses,
+            pager.evictions,
+            tensor_lsh::util::fmt_bytes(pager.resident_bytes as usize)
+        );
+    }
     Ok(())
 }
 
@@ -442,38 +482,61 @@ fn split_store_flag(positional: &[String]) -> Result<(Option<String>, Vec<String
     split_value_flag(positional, "--store")
 }
 
+/// Pull the `--residency <mode>` flag (resident | paged | paged:<cap> |
+/// auto) out of the positional args; parse errors are typed.
+fn split_residency_flag(positional: &[String]) -> Result<(Option<Residency>, Vec<String>)> {
+    let (value, rest) = split_value_flag(positional, "--residency")?;
+    Ok((value.map(|v| Residency::parse(&v)).transpose()?, rest))
+}
+
 /// The store to operate on: the `--store` flag wins, otherwise the spec's
 /// `serving.store` section; having neither is a typed config error. The
-/// flag keeps the spec's checkpoint threshold and compaction trigger when
-/// they are configured.
-fn resolve_store(cfg: &AppConfig, flag: Option<String>) -> Result<StoreSpec> {
+/// flag keeps the spec's checkpoint threshold, compaction trigger, and
+/// residency policy when they are configured; a `--residency` flag
+/// overrides the spec's policy either way.
+fn resolve_store(
+    cfg: &AppConfig,
+    flag: Option<String>,
+    residency: Option<Residency>,
+) -> Result<StoreSpec> {
     let configured = cfg.spec.serving.store.clone();
-    match flag {
+    let mut spec = match flag {
         Some(dir) => {
-            let (checkpoint_every, compact_dead_fraction) = configured
-                .map_or((0, 0.0), |s| (s.checkpoint_every, s.compact_dead_fraction));
-            Ok(StoreSpec { dir, checkpoint_every, compact_dead_fraction })
+            let (checkpoint_every, compact_dead_fraction, res) =
+                configured.map_or((0, 0.0, Residency::Resident), |s| {
+                    (s.checkpoint_every, s.compact_dead_fraction, s.residency)
+                });
+            StoreSpec { dir, checkpoint_every, compact_dead_fraction, residency: res }
         }
         None => configured.ok_or_else(|| {
             Error::Config(
                 "no store configured (pass --store <dir> or set store=<dir>)".into(),
             )
-        }),
+        })?,
+    };
+    if let Some(r) = residency {
+        spec.residency = r;
     }
+    Ok(spec)
 }
 
-/// Open an existing store with the spec's checkpoint and compaction knobs
-/// armed.
+/// Open an existing store with the spec's checkpoint, compaction, and
+/// residency knobs armed (paged shards serve buckets/items on demand).
 fn open_store(store_spec: &StoreSpec) -> Result<Store> {
-    Ok(Store::open(store_spec.dir.as_ref(), store_spec.checkpoint_every)?
-        .with_compact_dead_fraction(store_spec.compact_dead_fraction))
+    Ok(Store::open_with(
+        store_spec.dir.as_ref(),
+        store_spec.checkpoint_every,
+        store_spec.residency,
+    )?
+    .with_compact_dead_fraction(store_spec.compact_dead_fraction))
 }
 
 /// Build the spec's index over a synthetic corpus and initialize a durable
 /// store at --store <dir>.
 fn cmd_save(cfg: &AppConfig, positional: &[String]) -> Result<()> {
-    let (flag, _) = split_store_flag(positional)?;
-    let store_spec = resolve_store(cfg, flag)?;
+    let (flag, rest) = split_store_flag(positional)?;
+    let (residency, _) = split_residency_flag(&rest)?;
+    let store_spec = resolve_store(cfg, flag, residency)?;
     let index = Arc::new(ShardedLshIndex::build_from_spec(&cfg.spec, corpus(cfg))?);
     let store = Store::create(store_spec.dir.as_ref(), index, store_spec.checkpoint_every)?
         .with_compact_dead_fraction(store_spec.compact_dead_fraction);
@@ -490,8 +553,9 @@ fn cmd_save(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 
 /// Warm-start from a durable store and verify it answers.
 fn cmd_load(cfg: &AppConfig, positional: &[String]) -> Result<()> {
-    let (flag, _) = split_store_flag(positional)?;
-    let store_spec = resolve_store(cfg, flag)?;
+    let (flag, rest) = split_store_flag(positional)?;
+    let (residency, _) = split_residency_flag(&rest)?;
+    let store_spec = resolve_store(cfg, flag, residency)?;
     let store = open_store(&store_spec)?;
     let rec = store.recovery();
     println!(
@@ -529,8 +593,9 @@ fn cmd_load(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 
 /// Checkpoint a store: fresh snapshot generation, truncated WAL.
 fn cmd_compact(cfg: &AppConfig, positional: &[String]) -> Result<()> {
-    let (flag, _) = split_store_flag(positional)?;
-    let store_spec = resolve_store(cfg, flag)?;
+    let (flag, rest) = split_store_flag(positional)?;
+    let (residency, _) = split_residency_flag(&rest)?;
+    let store_spec = resolve_store(cfg, flag, residency)?;
     let store = open_store(&store_spec)?;
     let pending = store.wal_pending();
     let dead_before = store.index().dead_len();
@@ -557,11 +622,12 @@ fn remote_id(rest: &[String], cmd: &str) -> Result<u64> {
 /// sends a Remove frame to a listening server.
 fn cmd_remove(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (flag, rest) = split_store_flag(positional)?;
+    let (residency, rest) = split_residency_flag(&rest)?;
     let first = rest.first().map(|s| s.as_str()).ok_or_else(|| {
         Error::Config("remove needs an id (remove <id> --store <dir> | remove <addr> <id>)".into())
     })?;
     if let Ok(id) = first.parse::<usize>() {
-        let store_spec = resolve_store(cfg, flag)?;
+        let store_spec = resolve_store(cfg, flag, residency)?;
         let store = open_store(&store_spec)?;
         store.remove(id)?;
         println!(
@@ -585,6 +651,7 @@ fn cmd_remove(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 /// users pass their own via `Store::upsert` / `Client::upsert`.
 fn cmd_upsert(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (flag, rest) = split_store_flag(positional)?;
+    let (residency, rest) = split_residency_flag(&rest)?;
     let first = rest.first().map(|s| s.as_str()).ok_or_else(|| {
         Error::Config("upsert needs an id (upsert <id> --store <dir> | upsert <addr> <id>)".into())
     })?;
@@ -595,7 +662,7 @@ fn cmd_upsert(cfg: &AppConfig, positional: &[String]) -> Result<()> {
         cfg.rank_in,
     ));
     if let Ok(id) = first.parse::<usize>() {
-        let store_spec = resolve_store(cfg, flag)?;
+        let store_spec = resolve_store(cfg, flag, residency)?;
         let store = open_store(&store_spec)?;
         store.upsert(id, x)?;
         println!(
@@ -615,6 +682,7 @@ fn cmd_upsert(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 
 fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
     let (store_flag, rest) = split_store_flag(positional)?;
+    let (residency_flag, rest) = split_residency_flag(&rest)?;
     let (listen_flag, rest) = split_value_flag(&rest, "--listen")?;
     let pjrt = rest.iter().any(|p| p == "pjrt");
     // Wire serving: expose the coordinator over the framed TCP protocol
@@ -625,7 +693,7 @@ fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
                 "serve --listen and the pjrt backend cannot be combined yet".into(),
             ));
         }
-        return cmd_serve_listen(cfg, listen_flag, store_flag);
+        return cmd_serve_listen(cfg, listen_flag, store_flag, residency_flag);
     }
     // Durable serving: warm-start from (or initialize) the store, route the
     // trace through a durable coordinator, checkpoint on shutdown.
@@ -635,7 +703,7 @@ fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
                 "serve --store and the pjrt backend cannot be combined yet".into(),
             ));
         }
-        return cmd_serve_durable(cfg, resolve_store(cfg, store_flag)?);
+        return cmd_serve_durable(cfg, resolve_store(cfg, store_flag, residency_flag)?);
     }
     cmd_serve_memory(cfg, pjrt)
 }
@@ -646,6 +714,7 @@ fn cmd_serve_listen(
     cfg: &AppConfig,
     listen_flag: Option<String>,
     store_flag: Option<String>,
+    residency_flag: Option<Residency>,
 ) -> Result<()> {
     let mut net = cfg.spec.serving.listen.clone().unwrap_or_default();
     if let Some(addr) = listen_flag {
@@ -653,7 +722,7 @@ fn cmd_serve_listen(
     }
     net.validate()?;
     let coord = if store_flag.is_some() || cfg.spec.serving.store.is_some() {
-        let store_spec = resolve_store(cfg, store_flag)?;
+        let store_spec = resolve_store(cfg, store_flag, residency_flag)?;
         let dir: &std::path::Path = store_spec.dir.as_ref();
         let store = if Store::exists(dir) {
             let store = Arc::new(open_store(&store_spec)?);

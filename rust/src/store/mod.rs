@@ -59,10 +59,12 @@
 
 pub mod crc;
 pub mod format;
+pub mod pager;
 pub mod segment;
 pub mod tensors;
 pub mod wal;
 
+pub use pager::{PagedShard, PagerStats, Residency, ShardPaging};
 pub use segment::{
     describe, read_segment, write_segment, SegmentContents, SegmentHeader, SegmentView,
 };
@@ -215,7 +217,23 @@ impl Store {
     /// appending. WAL records that cannot extend the recovered snapshot
     /// (id discontinuity, table-count mismatch, CRC-valid but undecodable)
     /// fail with [`Error::Corrupt`] rather than silently losing inserts.
+    /// Every shard is fully materialized; see [`Store::open_with`] for
+    /// out-of-core serving.
     pub fn open(dir: &Path, checkpoint_every: usize) -> Result<Store> {
+        Store::open_with(dir, checkpoint_every, Residency::Resident)
+    }
+
+    /// [`Store::open`] under an explicit per-shard [`Residency`] policy.
+    /// With `Paged`/`Auto`, shards are served in place from their segment
+    /// files and **WAL replay does not materialize them**: replayed
+    /// inserts/deletes/upserts touch only the buckets (and, for upserts,
+    /// the one item record) each record mutates — mutations land in the
+    /// paged shards' overlays exactly as live ones do.
+    pub fn open_with(
+        dir: &Path,
+        checkpoint_every: usize,
+        residency: Residency,
+    ) -> Result<Store> {
         let gens = list_generations(dir)?;
         if gens.is_empty() {
             return Err(corrupt(format!(
@@ -227,7 +245,7 @@ impl Store {
         let mut loaded: Option<(u64, ShardedLshIndex)> = None;
         let mut first_err: Option<Error> = None;
         for &g in &gens {
-            match ShardedLshIndex::load(&snap_dir(dir, g)) {
+            match ShardedLshIndex::load_with_residency(&snap_dir(dir, g), residency) {
                 Ok(idx) => {
                     loaded = Some((g, idx));
                     break;
@@ -534,7 +552,7 @@ impl Store {
         // segment is a consistent cut and truncating the log afterwards
         // cannot discard a record the snapshot missed.
         if reclaim_dead && self.index.dead_len() > 0 {
-            self.index.compact_dead();
+            self.index.compact_dead()?;
         }
         let generation = wal.generation + 1;
         self.index.save(&snap_dir(&self.dir, generation))?;
@@ -841,6 +859,55 @@ mod tests {
             let got = store.index().query_with(q, &opts).unwrap();
             assert_eq!(got.hits, want.hits, "re-applied upsert must be bit-identical");
             assert_eq!(got.stats, want.stats);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression (out-of-core serving): `Store::open_with(.., Paged)`
+    /// replays the WAL against paged shards *without* materializing them —
+    /// replay touches only the buckets a record mutates (inserts and
+    /// deletes read none at all; an upsert reads its old/new buckets plus
+    /// one item record) — and the replayed paged index answers
+    /// bit-identically to a resident reopen.
+    #[test]
+    fn wal_replay_against_paged_shards_stays_lazy_and_bit_identical() {
+        let dir = temp_dir("paged_replay");
+        let base = tensors(30, 60);
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec(), base.clone()).unwrap());
+        let store = Store::create(&dir, index, 0).unwrap();
+        // Mutations of every kind land in the WAL (checkpoint_every = 0:
+        // nothing folds them into a snapshot before the reopen).
+        let extra = tensors(3, 61);
+        for x in &extra {
+            store.insert(x.clone()).unwrap();
+        }
+        store.remove(4).unwrap();
+        store.upsert(9, tensors(1, 62).pop().unwrap()).unwrap();
+        drop(store);
+
+        let resident = Store::open(&dir, 0).unwrap();
+        let paged = Store::open_with(&dir, 0, Residency::Paged { lru_cap: 8 }).unwrap();
+        assert_eq!(paged.recovery().wal_replayed, 5);
+        for row in paged.index().shard_paging() {
+            assert!(row.mode.starts_with("paged"), "shard not paged: {}", row.mode);
+            assert!(row.segment_bytes > 0);
+        }
+        // Replay stayed lazy: of the 5 records only the upsert reads
+        // buckets (old + new per table whose signature changed), so disk
+        // bucket reads are bounded by 2·L — not the bucket population.
+        let stats = paged.index().pager_stats();
+        let bound = 2 * paged.index().n_tables() as u64;
+        assert!(
+            stats.misses <= bound,
+            "replay read {} buckets (expected ≤ {bound})",
+            stats.misses
+        );
+        let opts = QueryOpts::top_k(6);
+        for q in base.iter().step_by(4).chain(extra.iter()) {
+            let a = resident.index().query_with(q, &opts).unwrap();
+            let b = paged.index().query_with(q, &opts).unwrap();
+            assert_eq!(a.hits, b.hits, "paged reopen diverged from resident");
+            assert_eq!(a.stats, b.stats);
         }
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -1,0 +1,1024 @@
+//! Out-of-core segment access: serve a shard **in place** from its segment
+//! file instead of materializing every section in RAM.
+//!
+//! [`PagedShard`] opens a segment with positioned reads (`pread`), eagerly
+//! CRC-verifying every *small* section (header, id map, norms, tombstones,
+//! bucket structure) while leaving the two big ones on disk:
+//!
+//! * **BUCKETS** is read once at open to build a per-table *directory*
+//!   (signature → byte offset + slot count) and then dropped; the slot
+//!   lists themselves are re-fetched on demand through a capacity-bounded
+//!   LRU of hot buckets (hit/miss/eviction counters exposed).
+//! * **ITEMS** is never touched until the first item access, at which point
+//!   the whole section is read once, checked against its stored CRC, and
+//!   decoded into a per-slot offset index — after which each tensor is a
+//!   single positioned read. A byte flip in the section therefore surfaces
+//!   as a typed [`Error::Corrupt`] at first touch, never a panic and never
+//!   a silently wrong answer.
+//! * **SIGS** is never read at all (queries hash their own signatures; the
+//!   arena exists for cross-validation, which the resident path performs).
+//!   Only its frame length is checked against the header's counts.
+//!
+//! Mutations never force materialization: inserts go to an in-memory
+//! *append overlay* (bucket slot lists are always ascending by slot, so
+//! `disk slots ++ appended slots` is exactly the order the resident path
+//! produces), upserts rewrite only the touched buckets into an *edit
+//! overlay*, and deletes flip the resident tombstone bit. The overlays are
+//! consulted before disk on every bucket read, which is what lets WAL
+//! replay against a paged shard touch only the buckets a record mutates.
+//!
+//! The policy knob is [`Residency`]: `resident` (the unchanged in-RAM
+//! path), `paged`/`paged:<cap>` (this module), or `auto` (paged only when
+//! the segment file exceeds [`Residency::AUTO_PAGED_BYTES`]).
+
+// Not the precision-audited hash path: on-disk fields are fixed-width; widths checked at encode time.
+#![allow(clippy::cast_possible_truncation)]
+
+use super::crc::Crc32;
+use super::format::{tag, Reader, FORMAT_VERSION, SEGMENT_MAGIC};
+use super::segment::{SegmentHeader, TableBuckets};
+use super::tensors::decode_tensor;
+use crate::error::{Error, Result};
+use crate::tensor::AnyTensor;
+use std::collections::{BTreeSet, HashMap};
+use std::fs::File;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Residency policy
+// ---------------------------------------------------------------------------
+
+/// Per-shard residency policy: how a shard's segment is held at serve time.
+///
+/// Parsed from / printed as `"resident"`, `"paged"`, `"paged:<cap>"`, or
+/// `"auto"` (the `StoreSpec` JSON field and the CLI `--residency` flag both
+/// use this string form).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Residency {
+    /// Materialize every section in RAM (the historical path — unchanged,
+    /// bit-identical).
+    #[default]
+    Resident,
+    /// Serve the segment in place through a [`PagedShard`] with an LRU of
+    /// `lru_cap` hot buckets.
+    Paged {
+        /// Maximum number of bucket slot lists held hot at once (≥ 1).
+        lru_cap: usize,
+    },
+    /// Per shard: paged when the segment file exceeds
+    /// [`Residency::AUTO_PAGED_BYTES`], resident otherwise.
+    Auto,
+}
+
+impl Residency {
+    /// Default hot-bucket LRU capacity for `"paged"` without an explicit cap.
+    pub const DEFAULT_LRU_CAP: usize = 4096;
+
+    /// `auto` pages a shard whose segment file exceeds this (256 MiB).
+    pub const AUTO_PAGED_BYTES: u64 = 256 << 20;
+
+    /// Parse the string form (`resident` | `paged` | `paged:<cap>` | `auto`).
+    pub fn parse(s: &str) -> Result<Residency> {
+        match s {
+            "resident" => Ok(Residency::Resident),
+            "paged" => Ok(Residency::Paged { lru_cap: Self::DEFAULT_LRU_CAP }),
+            "auto" => Ok(Residency::Auto),
+            other => {
+                if let Some(cap) = other.strip_prefix("paged:") {
+                    let cap: usize = cap.parse().map_err(|_| {
+                        Error::InvalidParameter(format!(
+                            "residency 'paged:<cap>' needs an integer cap, got '{other}'"
+                        ))
+                    })?;
+                    if cap == 0 {
+                        return Err(Error::InvalidParameter(
+                            "residency LRU cap must be at least 1".into(),
+                        ));
+                    }
+                    Ok(Residency::Paged { lru_cap: cap })
+                } else {
+                    Err(Error::InvalidParameter(format!(
+                        "unknown residency '{other}' \
+                         (expected resident | paged | paged:<cap> | auto)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// The canonical string form ([`Residency::parse`] is its inverse).
+    pub fn name(&self) -> String {
+        match self {
+            Residency::Resident => "resident".to_string(),
+            Residency::Paged { lru_cap } if *lru_cap == Self::DEFAULT_LRU_CAP => {
+                "paged".to_string()
+            }
+            Residency::Paged { lru_cap } => format!("paged:{lru_cap}"),
+            Residency::Auto => "auto".to_string(),
+        }
+    }
+
+    /// Resolve `auto` against a shard's on-disk segment size.
+    pub fn resolve(&self, segment_bytes: u64) -> Residency {
+        match self {
+            Residency::Auto => {
+                if segment_bytes > Self::AUTO_PAGED_BYTES {
+                    Residency::Paged { lru_cap: Self::DEFAULT_LRU_CAP }
+                } else {
+                    Residency::Resident
+                }
+            }
+            other => *other,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pager observability
+// ---------------------------------------------------------------------------
+
+/// Aggregated pager counters (summed over every paged shard of an index).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagerStats {
+    /// Bucket reads answered from the hot-bucket LRU.
+    pub hits: u64,
+    /// Bucket reads that went to disk.
+    pub misses: u64,
+    /// Buckets evicted to stay under the LRU capacity.
+    pub evictions: u64,
+    /// Estimated bytes held resident by paged shards (id map, norms,
+    /// tombstones, directory, overlays, cached buckets, item index).
+    pub resident_bytes: u64,
+}
+
+impl PagerStats {
+    /// Accumulate another shard's counters into this aggregate.
+    pub fn add(&mut self, other: &PagerStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.resident_bytes += other.resident_bytes;
+    }
+}
+
+/// One shard's residency report (the `tensorlsh info --store` view).
+#[derive(Clone, Debug)]
+pub struct ShardPaging {
+    /// `"resident"` or `"paged:<cap>"`.
+    pub mode: String,
+    /// Estimated bytes held in RAM for this shard.
+    pub resident_bytes: u64,
+    /// On-disk segment file size (0 when unknown, e.g. a shard built in
+    /// memory and never saved).
+    pub segment_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Positioned reads
+// ---------------------------------------------------------------------------
+
+/// A segment file readable at absolute offsets from `&self`. On Unix this
+/// is `pread` (no shared cursor, no lock); elsewhere a mutex-guarded
+/// seek+read fallback keeps the same contract.
+struct SegmentFile {
+    #[cfg(unix)]
+    file: File,
+    #[cfg(not(unix))]
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl SegmentFile {
+    fn open(path: &Path) -> Result<SegmentFile> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(not(unix))]
+        let file = Mutex::new(file);
+        Ok(SegmentFile { file, len })
+    }
+
+    /// Fill `buf` from absolute offset `off`. A short read (truncated
+    /// file) is a typed [`Error::Corrupt`], other I/O failures pass
+    /// through as [`Error::Io`].
+    fn read_exact_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        let res = {
+            use std::os::unix::fs::FileExt as _;
+            self.file.read_exact_at(buf, off)
+        };
+        #[cfg(not(unix))]
+        let res = {
+            use std::io::{Read as _, Seek as _, SeekFrom};
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(off)).and_then(|_| f.read_exact(buf))
+        };
+        res.map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                corrupt(format!(
+                    "segment: truncated ({} bytes at offset {off} past EOF {})",
+                    buf.len(),
+                    self.len
+                ))
+            } else {
+                Error::Io(e)
+            }
+        })
+    }
+
+    fn u32_at(&self, off: u64) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact_at(off, &mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hot-bucket LRU
+// ---------------------------------------------------------------------------
+
+/// Capacity-bounded cache of bucket slot lists, keyed by (table, signature).
+/// Recency is a monotonically stamped counter; eviction scans for the
+/// minimum stamp (O(cap), fine at the few-thousand-bucket capacities this
+/// runs at — there is no pointer-chasing list to maintain).
+struct BucketCache {
+    cap: usize,
+    stamp: u64,
+    /// Bytes held by cached slot lists (4 bytes per slot).
+    bytes: u64,
+    map: HashMap<(u32, u64), (Vec<u32>, u64)>,
+}
+
+impl BucketCache {
+    fn new(cap: usize) -> BucketCache {
+        BucketCache { cap: cap.max(1), stamp: 0, bytes: 0, map: HashMap::new() }
+    }
+
+    fn contains(&self, key: &(u32, u64)) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert a freshly-read bucket, evicting least-recently-used entries
+    /// to stay within capacity. Returns how many were evicted.
+    fn insert(&mut self, key: (u32, u64), slots: Vec<u32>) -> u64 {
+        let mut evicted = 0;
+        while self.map.len() >= self.cap {
+            let Some((&victim, _)) = self.map.iter().min_by_key(|(_, (_, s))| *s) else {
+                break;
+            };
+            if let Some((slots, _)) = self.map.remove(&victim) {
+                self.bytes -= 4 * slots.len() as u64;
+            }
+            evicted += 1;
+        }
+        self.bytes += 4 * slots.len() as u64;
+        self.stamp += 1;
+        self.map.insert(key, (slots, self.stamp));
+        evicted
+    }
+
+    /// Refresh a present entry's recency and return its slots.
+    fn touch(&mut self, key: &(u32, u64)) -> &[u32] {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let entry = self.map.get_mut(key).expect("touch after contains/insert");
+        entry.1 = stamp;
+        &entry.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagedShard
+// ---------------------------------------------------------------------------
+
+/// Rough in-memory footprint of a tensor (payload floats + bookkeeping) —
+/// feeds the `resident_bytes` estimate for overlay items (and the resident
+/// shards' rows in the `info --store` residency report).
+pub(crate) fn tensor_bytes(x: &AnyTensor) -> u64 {
+    let floats = match x {
+        AnyTensor::Dense(t) => t.data.len(),
+        AnyTensor::Cp(t) => t.factors.iter().map(|f| f.data.len()).sum(),
+        AnyTensor::Tt(t) => t.cores.iter().map(|c| c.data.len()).sum(),
+    };
+    4 * floats as u64 + 64
+}
+
+/// One section frame located during the open scan.
+struct Frame {
+    payload_off: u64,
+    payload_len: u64,
+    stored_crc: u32,
+}
+
+/// Per-slot (absolute offset, record length) into the ITEMS section.
+type ItemIndex = Arc<Vec<(u64, u32)>>;
+
+/// A shard served in place from its segment file: small sections resident,
+/// buckets demand-loaded through an LRU, items demand-decoded per slot,
+/// mutations in overlays. See the module docs for the full discipline.
+pub struct PagedShard {
+    file: SegmentFile,
+    header: SegmentHeader,
+    lru_cap: usize,
+    /// Slots present in the on-disk segment (overlay slots come after).
+    n_disk: usize,
+    n_tables: usize,
+    ids: Vec<usize>,
+    norms: Vec<f64>,
+    dead: Vec<bool>,
+    n_dead: usize,
+    /// Per table: signature → (absolute byte offset of the slot list, slot
+    /// count). Built from the CRC-verified BUCKETS section at open.
+    directory: Vec<HashMap<u64, (u64, u32)>>,
+    items: Frame,
+    /// Lazily-built per-slot (absolute offset, record length) index over
+    /// the ITEMS section; building it is the section's CRC-at-first-touch.
+    items_index: Mutex<Option<ItemIndex>>,
+    cache: Mutex<BucketCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    /// Buckets rewritten by upserts — authoritative over disk + appends.
+    edits: HashMap<(usize, u64), Vec<u32>>,
+    /// Slots appended by inserts, in ascending order after the disk slots.
+    appends: HashMap<(usize, u64), Vec<u32>>,
+    /// Inserted/replaced tensors, keyed by slot.
+    overrides: HashMap<u32, AnyTensor>,
+    override_bytes: u64,
+}
+
+impl PagedShard {
+    /// Open a segment for in-place serving. Everything except the BUCKETS
+    /// slot lists, the ITEMS payload, and the SIGS payload is read and
+    /// CRC-verified here; structural damage anywhere in the eager sections
+    /// (or the frame skeleton) is a typed [`Error::Corrupt`] now, damage
+    /// in ITEMS surfaces at first item touch, and SIGS — which this path
+    /// never consults — only has its length checked.
+    pub fn open(path: &Path, lru_cap: usize) -> Result<PagedShard> {
+        let file = SegmentFile::open(path)?;
+
+        // Frame skeleton walk (mirrors `format::read_sections`, but with
+        // positioned reads and without pulling the big payloads).
+        let mut head = [0u8; 16];
+        file.read_exact_at(0, &mut head)?;
+        if head[..8] != SEGMENT_MAGIC {
+            return Err(corrupt("segment: bad magic (not a tensor-lsh segment file)"));
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        if version == 0 || version > FORMAT_VERSION {
+            return Err(corrupt(format!(
+                "segment: format version {version} not supported \
+                 (this build reads ≤ {FORMAT_VERSION})"
+            )));
+        }
+        let count = u32::from_le_bytes(head[12..16].try_into().unwrap());
+
+        let mut pos = 16u64;
+        let mut eager: HashMap<u32, Vec<u8>> = HashMap::new();
+        let mut offsets: HashMap<u32, u64> = HashMap::new();
+        let mut lazy: HashMap<u32, Frame> = HashMap::new();
+        let mut seen: BTreeSet<u32> = BTreeSet::new();
+        for i in 0..count {
+            let mut fh = [0u8; 12];
+            file.read_exact_at(pos, &mut fh)?;
+            let tag = u32::from_le_bytes(fh[..4].try_into().unwrap());
+            let len = u64::from_le_bytes(fh[4..12].try_into().unwrap());
+            if len > file.len {
+                return Err(corrupt(format!(
+                    "segment: section length {len} exceeds bound {}",
+                    file.len
+                )));
+            }
+            let payload_off = pos + 12;
+            let crc_off = payload_off + len;
+            let stored_crc = file.u32_at(crc_off)?;
+            if !seen.insert(tag) {
+                return Err(corrupt(format!("segment: duplicate section tag {tag}")));
+            }
+            if tag == tag::ITEMS || tag == tag::SIGS {
+                // The lazy pair: ITEMS is CRC-checked at first item touch,
+                // SIGS is never consulted (length validated below).
+                lazy.insert(tag, Frame { payload_off, payload_len: len, stored_crc });
+            } else {
+                let mut payload = vec![0u8; len as usize];
+                file.read_exact_at(payload_off, &mut payload)?;
+                let mut crc = Crc32::new();
+                crc.update(&tag.to_le_bytes());
+                crc.update(&len.to_le_bytes());
+                crc.update(&payload);
+                let computed = crc.finish();
+                if computed != stored_crc {
+                    return Err(corrupt(format!(
+                        "segment: section {i} (tag {tag}) CRC mismatch \
+                         (stored {stored_crc:#010x}, computed {computed:#010x})"
+                    )));
+                }
+                // Unknown tags are verified then dropped (forward compat,
+                // same as the resident reader's skip-but-keep).
+                eager.insert(tag, payload);
+                offsets.insert(tag, payload_off);
+            }
+            pos = crc_off + 4;
+        }
+        if pos != file.len {
+            return Err(corrupt(format!(
+                "segment: {} trailing bytes after the last section",
+                file.len - pos
+            )));
+        }
+
+        let need = |map: &mut HashMap<u32, Vec<u8>>, t: u32, name: &str| -> Result<Vec<u8>> {
+            map.remove(&t).ok_or_else(|| {
+                corrupt(format!("segment: missing required section '{name}' (tag {t})"))
+            })
+        };
+
+        // Header: same validation as the resident loader.
+        let header_raw = need(&mut eager, tag::HEADER, "header")?;
+        let header_text = std::str::from_utf8(&header_raw)
+            .map_err(|_| corrupt("header section is not UTF-8"))?;
+        let header_json = crate::util::json::parse(header_text)
+            .map_err(|e| corrupt(format!("header JSON unparseable: {e}")))?;
+        let header = SegmentHeader::from_json(&header_json)
+            .map_err(|e| corrupt(format!("header invalid: {e}")))?;
+        let (n, l) = (header.n_items, header.n_tables);
+        if l == 0 || l > header.spec.l {
+            return Err(corrupt(format!(
+                "header n_tables {l} outside 1..={} (the spec's table count)",
+                header.spec.l
+            )));
+        }
+        if header.metric != header.spec.family.metric {
+            return Err(corrupt("header metric disagrees with the spec's family metric"));
+        }
+        let byte_size = |count: usize, what: &str| -> Result<u64> {
+            count
+                .checked_mul(8)
+                .map(|v| v as u64)
+                .ok_or_else(|| corrupt(format!("{what} size overflows for count {count}")))
+        };
+        let n_times_l = n
+            .checked_mul(l)
+            .ok_or_else(|| corrupt(format!("{n} items × {l} tables overflows")))?;
+
+        let ids_raw = need(&mut eager, tag::IDMAP, "id map")?;
+        if ids_raw.len() as u64 != byte_size(n, "id map")? {
+            return Err(corrupt(format!(
+                "id map holds {} bytes, expected {} for {n} items",
+                ids_raw.len(),
+                byte_size(n, "id map")?
+            )));
+        }
+        let ids: Vec<usize> = Reader::new(&ids_raw, "id map")
+            .u64_vec(n)?
+            .into_iter()
+            .map(|v| v as usize)
+            .collect();
+
+        let norms_raw = need(&mut eager, tag::NORMS, "norms")?;
+        if norms_raw.len() as u64 != byte_size(n, "norms")? {
+            return Err(corrupt(format!(
+                "norms section holds {} bytes, expected {}",
+                norms_raw.len(),
+                byte_size(n, "norms")?
+            )));
+        }
+        let norms = Reader::new(&norms_raw, "norms").f64_vec(n)?;
+
+        let sigs = lazy
+            .remove(&tag::SIGS)
+            .ok_or_else(|| corrupt("segment: missing required section 'signature arena' (tag 3)"))?;
+        if sigs.payload_len != byte_size(n_times_l, "signature arena")? {
+            return Err(corrupt(format!(
+                "signature arena holds {} bytes, expected {} for {n} items × {l} tables",
+                sigs.payload_len,
+                byte_size(n_times_l, "signature arena")?
+            )));
+        }
+
+        let items = lazy
+            .remove(&tag::ITEMS)
+            .ok_or_else(|| corrupt("segment: missing required section 'items' (tag 5)"))?;
+
+        // BUCKETS: full read once (already CRC-verified above), validated
+        // like the resident path — every slot exactly once per table —
+        // then reduced to the offset directory and dropped.
+        let buckets_off = offsets.get(&tag::BUCKETS).copied().ok_or_else(|| {
+            corrupt("segment: missing required section 'buckets' (tag 4)")
+        })?;
+        let buckets_raw = need(&mut eager, tag::BUCKETS, "buckets")?;
+        let directory = build_directory(&buckets_raw, n, l, buckets_off)?;
+
+        // Tombstones: optional, validated exactly like the resident path.
+        let mut dead = vec![false; n];
+        let mut n_dead = 0usize;
+        if let Some(raw) = eager.get(&tag::TOMBSTONES) {
+            let mut r = Reader::new(raw, "tombstones");
+            let count = r.len_u64(n as u64, "tombstone count")?;
+            let list = r.u32_vec(count)?;
+            if !r.is_empty() {
+                return Err(corrupt("tombstones section has trailing bytes"));
+            }
+            for w in list.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(corrupt(format!(
+                        "tombstone slots not strictly ascending ({} then {})",
+                        w[0], w[1]
+                    )));
+                }
+            }
+            if let Some(&last) = list.last() {
+                if last as usize >= n {
+                    return Err(corrupt(format!(
+                        "tombstone slot {last} out of range ({n} items)"
+                    )));
+                }
+            }
+            for slot in list {
+                dead[slot as usize] = true;
+                n_dead += 1;
+            }
+        }
+
+        Ok(PagedShard {
+            file,
+            header,
+            lru_cap: lru_cap.max(1),
+            n_disk: n,
+            n_tables: l,
+            ids,
+            norms,
+            dead,
+            n_dead,
+            directory,
+            items,
+            items_index: Mutex::new(None),
+            cache: Mutex::new(BucketCache::new(lru_cap)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            edits: HashMap::new(),
+            appends: HashMap::new(),
+            overrides: HashMap::new(),
+            override_bytes: 0,
+        })
+    }
+
+    /// The segment header the shard was opened with.
+    pub fn header(&self) -> &SegmentHeader {
+        &self.header
+    }
+
+    /// On-disk segment file size.
+    pub fn segment_bytes(&self) -> u64 {
+        self.file.len
+    }
+
+    /// Hot-bucket LRU capacity.
+    pub fn lru_cap(&self) -> usize {
+        self.lru_cap
+    }
+
+    /// Total slots (disk + overlay inserts).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    pub fn dead(&self) -> &[bool] {
+        &self.dead
+    }
+
+    pub fn n_dead(&self) -> usize {
+        self.n_dead
+    }
+
+    /// Flip a slot's tombstone bit; returns the previous liveness.
+    pub fn set_dead(&mut self, slot: usize, dead: bool) {
+        if self.dead[slot] != dead {
+            self.dead[slot] = dead;
+            if dead {
+                self.n_dead += 1;
+            } else {
+                self.n_dead -= 1;
+            }
+        }
+    }
+
+    /// Run `f` over the bucket for `(table, sig)` — overlay edits first,
+    /// else disk slots (through the LRU) followed by appended slots. The
+    /// slice `f` sees is exactly what the resident table's bucket holds.
+    pub fn with_bucket(
+        &self,
+        t: usize,
+        sig: u64,
+        f: &mut dyn FnMut(&[u32]),
+    ) -> Result<()> {
+        if let Some(edit) = self.edits.get(&(t, sig)) {
+            f(edit);
+            return Ok(());
+        }
+        let appended = self.appends.get(&(t, sig));
+        let Some(&(off, len)) = self.directory[t].get(&sig) else {
+            f(appended.map_or(&[][..], |a| a.as_slice()));
+            return Ok(());
+        };
+        let key = (t as u32, sig);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let mut raw = vec![0u8; 4 * len as usize];
+            self.file.read_exact_at(off, &mut raw)?;
+            let slots: Vec<u32> = raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let evicted = cache.insert(key, slots);
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        let slots = cache.touch(&key);
+        match appended {
+            None => f(slots),
+            Some(a) => {
+                let mut merged = Vec::with_capacity(slots.len() + a.len());
+                merged.extend_from_slice(slots);
+                merged.extend_from_slice(a);
+                f(&merged);
+            }
+        }
+        Ok(())
+    }
+
+    /// The bucket's slot list as an owned vector (mutation paths).
+    fn merged_bucket(&self, t: usize, sig: u64) -> Result<Vec<u32>> {
+        let mut out = Vec::new();
+        self.with_bucket(t, sig, &mut |slots| out.extend_from_slice(slots))?;
+        Ok(out)
+    }
+
+    /// Append a new slot: pure overlay, **no disk I/O** — the new slot id
+    /// is greater than every existing one, so appending preserves the
+    /// ascending in-bucket order the resident path maintains.
+    pub fn insert(&mut self, id: usize, x: AnyTensor, sigs: &[u64]) {
+        let slot = self.ids.len() as u32;
+        for (t, &sig) in sigs.iter().take(self.n_tables).enumerate() {
+            if let Some(edit) = self.edits.get_mut(&(t, sig)) {
+                edit.push(slot);
+            } else {
+                self.appends.entry((t, sig)).or_default().push(slot);
+            }
+        }
+        self.norms.push(x.frob_norm());
+        self.ids.push(id);
+        self.dead.push(false);
+        self.override_bytes += tensor_bytes(&x);
+        self.overrides.insert(slot, x);
+    }
+
+    /// Replace a slot's tensor, rewriting only the buckets whose signature
+    /// changed (the touched buckets move to the edit overlay).
+    pub fn apply_upsert(
+        &mut self,
+        slot: u32,
+        x: AnyTensor,
+        old_sigs: &[u64],
+        new_sigs: &[u64],
+    ) -> Result<()> {
+        for (t, (&old, &new)) in old_sigs.iter().zip(new_sigs).enumerate().take(self.n_tables)
+        {
+            if old == new {
+                continue;
+            }
+            let mut from = self.merged_bucket(t, old)?;
+            if let Some(pos) = from.iter().position(|&s| s == slot) {
+                from.remove(pos);
+            }
+            self.appends.remove(&(t, old));
+            self.edits.insert((t, old), from);
+
+            let mut to = self.merged_bucket(t, new)?;
+            let pos = to.partition_point(|&s| s < slot);
+            to.insert(pos, slot);
+            self.appends.remove(&(t, new));
+            self.edits.insert((t, new), to);
+        }
+        self.norms[slot as usize] = x.frob_norm();
+        if let Some(prev) = self.overrides.get(&slot) {
+            self.override_bytes -= tensor_bytes(prev);
+        }
+        self.override_bytes += tensor_bytes(&x);
+        self.overrides.insert(slot, x);
+        Ok(())
+    }
+
+    /// Build (or fetch) the per-slot item index — the ITEMS section's
+    /// CRC-on-first-touch moment: the whole payload is read once, checked
+    /// against the stored CRC, walked to record each record's offset and
+    /// length, then dropped.
+    fn item_index(&self) -> Result<ItemIndex> {
+        let mut guard = self.items_index.lock().unwrap();
+        if let Some(index) = guard.as_ref() {
+            return Ok(index.clone());
+        }
+        let len = self.items.payload_len as usize;
+        let mut buf = vec![0u8; len];
+        self.file.read_exact_at(self.items.payload_off, &mut buf)?;
+        let mut crc = Crc32::new();
+        crc.update(&tag::ITEMS.to_le_bytes());
+        crc.update(&self.items.payload_len.to_le_bytes());
+        crc.update(&buf);
+        let computed = crc.finish();
+        if computed != self.items.stored_crc {
+            return Err(corrupt(format!(
+                "items section CRC mismatch at first touch \
+                 (stored {:#010x}, computed {computed:#010x})",
+                self.items.stored_crc
+            )));
+        }
+        let mut r = Reader::new(&buf, "items");
+        let count = r.len_u64(u32::MAX as u64, "item count")?;
+        if count != self.n_disk {
+            return Err(corrupt(format!(
+                "items section holds {count} tensors, header says {}",
+                self.n_disk
+            )));
+        }
+        let mut index = Vec::with_capacity(count);
+        for _ in 0..count {
+            let before = r.remaining();
+            decode_tensor(&mut r)?;
+            let used = before - r.remaining();
+            let rel = (len - before) as u64;
+            let used = u32::try_from(used)
+                .map_err(|_| corrupt("item record length exceeds u32"))?;
+            index.push((self.items.payload_off + rel, used));
+        }
+        if !r.is_empty() {
+            return Err(corrupt("items section has trailing bytes"));
+        }
+        let index = Arc::new(index);
+        *guard = Some(index.clone());
+        Ok(index)
+    }
+
+    /// Fetch one slot's tensor: overlay first, else a positioned read of
+    /// exactly that record.
+    pub fn item_at(&self, slot: usize) -> Result<AnyTensor> {
+        if let Some(x) = self.overrides.get(&(slot as u32)) {
+            return Ok(x.clone());
+        }
+        if slot >= self.n_disk {
+            return Err(corrupt(format!(
+                "slot {slot} has no stored item (disk holds {})",
+                self.n_disk
+            )));
+        }
+        let index = self.item_index()?;
+        let (off, len) = index[slot];
+        let mut buf = vec![0u8; len as usize];
+        self.file.read_exact_at(off, &mut buf)?;
+        let mut r = Reader::new(&buf, "item record");
+        let x = decode_tensor(&mut r)?;
+        if !r.is_empty() {
+            return Err(corrupt("item record has trailing bytes"));
+        }
+        Ok(x)
+    }
+
+    /// Every slot's tensor in slot order (the save/materialize path).
+    pub fn all_items(&self) -> Result<Vec<AnyTensor>> {
+        (0..self.len()).map(|slot| self.item_at(slot)).collect()
+    }
+
+    /// Per-table buckets sorted by signature — what the resident path's
+    /// `HashTable::sorted_buckets` yields, composed from directory +
+    /// overlays without materializing the tables.
+    pub fn sorted_buckets(&self) -> Result<Vec<TableBuckets>> {
+        let mut out = Vec::with_capacity(self.n_tables);
+        for t in 0..self.n_tables {
+            let mut sigs: BTreeSet<u64> = self.directory[t].keys().copied().collect();
+            sigs.extend(self.edits.keys().filter(|(kt, _)| *kt == t).map(|(_, s)| *s));
+            sigs.extend(self.appends.keys().filter(|(kt, _)| *kt == t).map(|(_, s)| *s));
+            let mut table: TableBuckets = Vec::with_capacity(sigs.len());
+            for sig in sigs {
+                let slots = self.merged_bucket(t, sig)?;
+                if !slots.is_empty() {
+                    table.push((sig, slots));
+                }
+            }
+            out.push(table);
+        }
+        Ok(out)
+    }
+
+    /// Per-table (non-empty bucket count, total entries, max bucket size) —
+    /// computed from the directory + overlays without reading slot lists.
+    pub fn table_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::with_capacity(self.n_tables);
+        for t in 0..self.n_tables {
+            let mut sizes: HashMap<u64, usize> = self.directory[t]
+                .iter()
+                .map(|(&sig, &(_, len))| (sig, len as usize))
+                .collect();
+            for ((_, sig), slots) in self.appends.iter().filter(|((kt, _), _)| *kt == t) {
+                *sizes.entry(*sig).or_insert(0) += slots.len();
+            }
+            for ((_, sig), slots) in self.edits.iter().filter(|((kt, _), _)| *kt == t) {
+                sizes.insert(*sig, slots.len());
+            }
+            let n_buckets = sizes.values().filter(|&&s| s > 0).count();
+            let max = sizes.values().copied().max().unwrap_or(0);
+            shapes.push((n_buckets, max));
+        }
+        shapes
+    }
+
+    /// Pager counters + the resident-footprint estimate for this shard.
+    pub fn stats(&self) -> PagerStats {
+        let cache_bytes = self.cache.lock().unwrap().bytes;
+        let index_bytes = self
+            .items_index
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(0, |ix| 12 * ix.len() as u64);
+        let directory_bytes: u64 =
+            self.directory.iter().map(|d| 24 * d.len() as u64).sum();
+        let overlay_bytes: u64 = self
+            .edits
+            .values()
+            .chain(self.appends.values())
+            .map(|v| 4 * v.len() as u64 + 24)
+            .sum();
+        PagerStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: 8 * self.ids.len() as u64
+                + 8 * self.norms.len() as u64
+                + self.dead.len() as u64
+                + cache_bytes
+                + index_bytes
+                + directory_bytes
+                + overlay_bytes
+                + self.override_bytes,
+        }
+    }
+
+    /// The `info --store` residency row for this shard.
+    pub fn paging(&self) -> ShardPaging {
+        let s = self.stats();
+        ShardPaging {
+            mode: format!("paged:{}", self.lru_cap),
+            resident_bytes: s.resident_bytes,
+            segment_bytes: self.file.len,
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+        }
+    }
+}
+
+/// Parse the BUCKETS payload into the per-table offset directory,
+/// validating — exactly like the resident loader — that every slot
+/// appears exactly once per table and every slot is in range. `base` is
+/// the payload's absolute file offset, so directory entries point straight
+/// into the file.
+fn build_directory(
+    buf: &[u8],
+    n: usize,
+    l: usize,
+    base: u64,
+) -> Result<Vec<HashMap<u64, (u64, u32)>>> {
+    let mut pos = 0usize;
+    let u64_at = |pos: &mut usize| -> Result<u64> {
+        let end = *pos + 8;
+        if end > buf.len() {
+            return Err(corrupt("buckets: truncated (8 bytes needed)"));
+        }
+        let v = u64::from_le_bytes(buf[*pos..end].try_into().unwrap());
+        *pos = end;
+        Ok(v)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32> {
+        let end = *pos + 4;
+        if end > buf.len() {
+            return Err(corrupt("buckets: truncated (4 bytes needed)"));
+        }
+        let v = u32::from_le_bytes(buf[*pos..end].try_into().unwrap());
+        *pos = end;
+        Ok(v)
+    };
+    let mut directory = Vec::with_capacity(l);
+    for t in 0..l {
+        let n_buckets = u64_at(&mut pos)?;
+        if n_buckets > n as u64 {
+            return Err(corrupt(format!(
+                "buckets: bucket count {n_buckets} exceeds bound {n}"
+            )));
+        }
+        let mut table: HashMap<u64, (u64, u32)> =
+            HashMap::with_capacity(n_buckets as usize);
+        let mut seen = vec![false; n];
+        for _ in 0..n_buckets {
+            let sig = u64_at(&mut pos)?;
+            let len = u32_at(&mut pos)?;
+            let slots_off = pos;
+            let end = pos
+                .checked_add(4 * len as usize)
+                .ok_or_else(|| corrupt("buckets: slot list size overflows"))?;
+            if end > buf.len() {
+                return Err(corrupt("buckets: truncated slot list"));
+            }
+            for c in buf[slots_off..end].chunks_exact(4) {
+                let slot = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                if slot >= n || seen[slot] {
+                    return Err(corrupt(format!(
+                        "table {t}: slot {slot} out of range or duplicated"
+                    )));
+                }
+                seen[slot] = true;
+            }
+            pos = end;
+            table.insert(sig, (base + slots_off as u64, len));
+        }
+        if let Some(missing) = seen.iter().position(|&v| !v) {
+            return Err(corrupt(format!(
+                "table {t}: slot {missing} appears in no bucket"
+            )));
+        }
+        directory.push(table);
+    }
+    if pos != buf.len() {
+        return Err(corrupt("buckets section has trailing bytes"));
+    }
+    Ok(directory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_string_forms_roundtrip() {
+        for s in ["resident", "paged", "paged:7", "auto"] {
+            let r = Residency::parse(s).unwrap();
+            assert_eq!(Residency::parse(&r.name()).unwrap(), r, "{s}");
+        }
+        assert_eq!(
+            Residency::parse("paged").unwrap(),
+            Residency::Paged { lru_cap: Residency::DEFAULT_LRU_CAP }
+        );
+        assert_eq!(Residency::Paged { lru_cap: Residency::DEFAULT_LRU_CAP }.name(), "paged");
+        assert!(Residency::parse("paged:0").is_err());
+        assert!(Residency::parse("paged:x").is_err());
+        assert!(Residency::parse("warm").is_err());
+        // Auto resolves by segment size.
+        assert_eq!(
+            Residency::Auto.resolve(Residency::AUTO_PAGED_BYTES + 1),
+            Residency::Paged { lru_cap: Residency::DEFAULT_LRU_CAP }
+        );
+        assert_eq!(Residency::Auto.resolve(1024), Residency::Resident);
+        assert_eq!(Residency::Resident.resolve(u64::MAX), Residency::Resident);
+    }
+
+    #[test]
+    fn bucket_cache_evicts_least_recently_used() {
+        let mut c = BucketCache::new(2);
+        assert_eq!(c.insert((0, 1), vec![1, 2]), 0);
+        assert_eq!(c.insert((0, 2), vec![3]), 0);
+        assert_eq!(c.bytes, 12);
+        c.touch(&(0, 1)); // (0,2) is now the LRU entry
+        assert_eq!(c.insert((0, 3), vec![4]), 1);
+        assert!(c.contains(&(0, 1)));
+        assert!(!c.contains(&(0, 2)));
+        assert!(c.contains(&(0, 3)));
+        assert_eq!(c.bytes, 12);
+        // Capacity 1 (worst case) always holds exactly the last bucket.
+        let mut c = BucketCache::new(1);
+        c.insert((0, 1), vec![1]);
+        assert_eq!(c.insert((0, 2), vec![2]), 1);
+        assert!(c.contains(&(0, 2)) && !c.contains(&(0, 1)));
+    }
+}

@@ -77,7 +77,7 @@ impl SegmentHeader {
         Json::Obj(m)
     }
 
-    fn from_json(v: &Json) -> Result<SegmentHeader> {
+    pub(crate) fn from_json(v: &Json) -> Result<SegmentHeader> {
         let kind = v.get("kind")?.as_str()?;
         if kind != "tensor-lsh-segment" {
             return Err(corrupt(format!("header kind '{kind}' is not a segment header")));

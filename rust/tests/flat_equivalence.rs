@@ -181,8 +181,8 @@ fn sharded_code_matrix_build_matches_per_item_inserts() {
             built.query_with(q, &opts).unwrap().hits,
             manual.query_with(q, &opts).unwrap().hits
         );
-        let mut ca = built.candidates(q);
-        let mut cb = manual.candidates(q);
+        let mut ca = built.candidates(q).unwrap();
+        let mut cb = manual.candidates(q).unwrap();
         ca.sort_unstable();
         cb.sort_unstable();
         assert_eq!(ca, cb);

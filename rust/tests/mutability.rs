@@ -22,6 +22,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use tensor_lsh::index::{LshIndex, Metric, ShardedLshIndex};
 use tensor_lsh::lsh::{FamilyKind, FamilySpec, LshSpec, SeedPolicy, ServingSpec};
+use tensor_lsh::projection::Precision;
 use tensor_lsh::query::{Query, QueryOpts, RerankPolicy, Searcher};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::store::Store;
@@ -50,6 +51,8 @@ fn random_spec(rng: &mut Rng) -> LshSpec {
             k: 2 + rng.below(6),
             metric,
             w: 2.0 + rng.uniform(0.0, 4.0),
+            precision: Precision::F64,
+            sample: 0,
         },
         l: 2 + rng.below(4),
         probes: rng.below(3),
@@ -246,7 +249,7 @@ fn prop_sharded_index_interleaving_matches_direct_mirror() {
                     }
                 }
                 75..=89 => {
-                    subject.compact_dead();
+                    subject.compact_dead().unwrap();
                     assert_eq!(subject.dead_len(), 0);
                 }
                 _ => {

@@ -11,7 +11,7 @@ use tensor_lsh::lsh::{
     E2lshHasher, FamilyKind, FamilySpec, HashFamily, IndexBuilder, LshSpec, SeedPolicy,
     ServingSpec, SrpHasher,
 };
-use tensor_lsh::projection::{CpRademacher, Distribution, TtRademacher};
+use tensor_lsh::projection::{CpRademacher, Distribution, Precision, TtRademacher};
 use tensor_lsh::rng::Rng;
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
 use tensor_lsh::testutil::proptest;
@@ -40,6 +40,8 @@ fn prop_spec_json_roundtrip_identity() {
                 k: 1 + rng.below(24),
                 metric: metrics[rng.below(2)],
                 w: 0.25 + rng.uniform(0.0, 8.0),
+                precision: Precision::F64,
+                sample: 0,
             },
             l: 1 + rng.below(16),
             probes: rng.below(5),
@@ -80,6 +82,8 @@ fn builder_equals_legacy_closure_bit_for_bit() {
                 k: 8,
                 metric,
                 w: 4.0,
+                precision: Precision::F64,
+                sample: 0,
             },
             l: 5,
             probes: 2,

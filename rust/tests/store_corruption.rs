@@ -11,6 +11,11 @@
 //!   inserts, verified bit-identical against a reference index built over
 //!   exactly that prefix. Truncation always recovers the longest whole
 //!   prefix.
+//! * **Lazy reader** (ISSUE 9): the paged open validates everything but
+//!   the ITEMS/SIGS payloads eagerly, so damage there fails typed at
+//!   `load_with_residency`; ITEMS damage surfaces as `Error::Corrupt` at
+//!   the first item touch; SIGS damage — a section the paged path never
+//!   consults — must leave every answer bit-identical to pristine.
 
 // Not the precision-audited hash path: test scaffolding on small bounded values.
 #![allow(clippy::cast_possible_truncation)]
@@ -21,7 +26,7 @@ use tensor_lsh::index::{LshIndex, ShardedLshIndex};
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
 use tensor_lsh::query::QueryOpts;
 use tensor_lsh::rng::Rng;
-use tensor_lsh::store::Store;
+use tensor_lsh::store::{Residency, Store};
 use tensor_lsh::tensor::{AnyTensor, CpTensor};
 use tensor_lsh::testutil::proptest;
 use tensor_lsh::Error;
@@ -141,6 +146,68 @@ fn sharded_snapshot_damage_always_fails_typed() {
     std::fs::write(snap.join("shard-000.seg"), &b).unwrap();
     std::fs::write(snap.join("shard-001.seg"), &a).unwrap();
     assert!(matches!(ShardedLshIndex::load(&snap), Err(Error::Corrupt(_))));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The lazy (paged) reader inherits the corruption contract, just split
+/// across time: eager sections and the frame skeleton fail typed at
+/// `load_with_residency`, the ITEMS payload fails typed at the first item
+/// touch (a reranked query or a direct fetch), and SIGS damage — a
+/// section the paged path never reads — must be invisible: every answer
+/// bit-identical to the pristine resident build. Never a panic, never a
+/// silently wrong answer.
+#[test]
+fn prop_paged_reader_damage_fails_typed_at_open_or_first_touch() {
+    let dir = temp_dir("paged");
+    let index = ShardedLshIndex::build_from_spec(&spec(), tensors(30, 10)).unwrap();
+    let snap = dir.join("snap");
+    index.save(&snap).unwrap();
+    let shard_file = snap.join("shard-000.seg");
+    let pristine = std::fs::read(&shard_file).unwrap();
+
+    // Pristine answers, computed once from the in-memory build. The rerank
+    // in top_k scoring reads item payloads, so a full query pass is a
+    // genuine ITEMS first-touch.
+    let opts = QueryOpts::top_k(5);
+    let queries = tensors(6, 40);
+    let want: Vec<_> = queries.iter().map(|q| index.query_with(q, &opts).unwrap()).collect();
+
+    proptest("paged reader damage", 192, |rng| {
+        let mut bytes = pristine.clone();
+        if rng.below(4) == 0 {
+            bytes.truncate(rng.below(bytes.len()));
+        } else {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        std::fs::write(&shard_file, &bytes).unwrap();
+        let residency = Residency::Paged { lru_cap: 8 };
+        let loaded = match ShardedLshIndex::load_with_residency(&snap, residency) {
+            Err(Error::Corrupt(_)) => return, // structural damage, caught at open
+            Err(other) => panic!("expected Corrupt at open, got {other}"),
+            Ok(ix) => ix,
+        };
+        // Open succeeded, so the damage sits in a lazily-read section.
+        // Touch everything the serving path can touch; each touch either
+        // agrees with pristine bit-exactly or fails typed.
+        for (q, w) in queries.iter().zip(&want) {
+            match loaded.query_with(q, &opts) {
+                Ok(got) => {
+                    assert_eq!(got.hits, w.hits, "lazy reader served a wrong answer");
+                    assert_eq!(got.stats, w.stats);
+                }
+                Err(Error::Corrupt(_)) => return, // ITEMS damage, first touch
+                Err(other) => panic!("expected Corrupt at first touch, got {other}"),
+            }
+        }
+        for id in 0..30 {
+            match loaded.try_item(id) {
+                Ok(_) => {}
+                Err(Error::Corrupt(_)) => return,
+                Err(other) => panic!("expected Corrupt on item fetch, got {other}"),
+            }
+        }
+    });
     let _ = std::fs::remove_dir_all(&dir);
 }
 
