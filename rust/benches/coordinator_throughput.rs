@@ -91,6 +91,7 @@ fn run_family(
             let cfg = CoordinatorConfig {
                 n_workers: workers,
                 batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(200) },
+                ..Default::default()
             };
             let (_resp, snap) =
                 Coordinator::serve_trace(Arc::clone(&index), cfg, HashBackend::Native, queries)

@@ -16,7 +16,9 @@
 //!   compaction pass's reclaim throughput in MB/s;
 //! * an **out-of-core** phase (reopen paged behind the hot-bucket LRU):
 //!   cold vs warm paged-query p99 latency and the pager hit rate, with
-//!   every paged answer checked bit-identical to the resident store.
+//!   every paged answer checked bit-identical to the resident store;
+//! * a **tracing overhead** phase: the full serving pipeline with per-stage
+//!   span tracing on vs off (`trace_overhead_pct`, acceptance < 5%).
 //!
 //! Set `BENCH_SMOKE=1` for a seconds-long smoke run (CI does).
 //!
@@ -28,6 +30,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend, QueryRequest};
 use tensor_lsh::index::ShardedLshIndex;
 use tensor_lsh::lsh::{FamilyKind, LshSpec};
 use tensor_lsh::query::QueryOpts;
@@ -261,6 +264,34 @@ fn main() {
     drop(paged);
     drop(resident);
 
+    // -- tracing overhead: full pipeline, trace on vs off --------------------
+    // Per-stage span tracing costs a handful of clock reads per query; the
+    // acceptance bar is < 5% end-to-end. Min-of-3 passes each way filters
+    // scheduler noise (the same discipline as the kernel benches).
+    let n_trace_q = if smoke { 300 } else { 2000 };
+    let mut qrng = Rng::new(41);
+    let mut best = [f64::INFINITY; 2]; // [untraced, traced]
+    for _ in 0..3 {
+        for (slot, trace) in [(0usize, false), (1usize, true)] {
+            let queries: Vec<QueryRequest> = (0..n_trace_q)
+                .map(|i| QueryRequest::new(i as u64, index.item(qrng.below(index.len())), 10))
+                .collect();
+            let cfg = CoordinatorConfig { n_workers: 2, trace, ..Default::default() };
+            let (_, ns) = time_once(|| {
+                Coordinator::serve_trace(Arc::clone(&index), cfg, HashBackend::Native, queries)
+                    .unwrap()
+            });
+            best[slot] = best[slot].min(ns);
+        }
+    }
+    let trace_overhead_pct = (best[1] - best[0]) / best[0] * 100.0;
+    println!(
+        "tracing overhead: {n_trace_q} queries through the pipeline — untraced {} vs \
+         traced {} ({trace_overhead_pct:+.2}%)",
+        fmt_duration(best[0]),
+        fmt_duration(best[1])
+    );
+
     // -- machine-readable report ---------------------------------------------
     let mut config = BTreeMap::new();
     config.insert(
@@ -287,6 +318,7 @@ fn main() {
         entry("paged_cold_p99_us", paged_cold_p99_us, "us"),
         entry("paged_warm_p99_us", paged_warm_p99_us, "us"),
         entry("pager_hit_rate", pager_hit_rate, "fraction"),
+        entry("trace_overhead_pct", trace_overhead_pct, "%"),
     ];
 
     let mut root_json = BTreeMap::new();

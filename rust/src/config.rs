@@ -155,6 +155,12 @@ impl AppConfig {
             "shards" | "n_shards" => self.spec.serving.shards = parse_pos(value)?,
             "max_batch" => self.spec.serving.max_batch = parse_pos(value)?,
             "max_wait_us" => self.spec.serving.max_wait_us = parse_u64(value)?,
+            "slow_query_us" => self.spec.serving.slow_query_us = parse_u64(value)?,
+            "log_level" => {
+                // Parse eagerly so a typo is a typed error at override time.
+                crate::obs::Level::parse(value)?;
+                self.spec.serving.log_level = value.to_string();
+            }
             "seed" => self.spec.seeds.base = parse_u64(value)?,
             "seed_stride" => self.spec.seeds.stride = parse_u64(value)?,
             "artifact_dir" => self.artifact_dir = Some(value.to_string()),
@@ -278,6 +284,17 @@ impl AppConfig {
         m.insert("max_wait_us".into(), Json::Num(s.serving.max_wait_us as f64));
         m.insert("seed".into(), Json::Num(s.seeds.base as f64));
         m.insert("seed_stride".into(), Json::Num(s.seeds.stride as f64));
+        // Observability knobs follow the omit-when-default rule, so config
+        // files written before the knobs existed round-trip byte-identically.
+        if s.serving.slow_query_us != 0 {
+            m.insert(
+                "slow_query_us".into(),
+                Json::Num(s.serving.slow_query_us as f64),
+            );
+        }
+        if s.serving.log_level != "warn" {
+            m.insert("log_level".into(), Json::Str(s.serving.log_level.clone()));
+        }
         if let Some(store) = &s.serving.store {
             m.insert("store".into(), Json::Str(store.dir.clone()));
             m.insert(
@@ -516,6 +533,34 @@ mod tests {
         let _ = std::fs::remove_file(&tmp);
         assert!(AppConfig::default().apply_override("listen=").is_err());
         assert!(AppConfig::default().apply_override("max_conns=0").is_err());
+    }
+
+    #[test]
+    fn observability_keys_round_trip_and_validate() {
+        let mut c = AppConfig::default();
+        c.apply_override("slow_query_us=2500").unwrap();
+        c.apply_override("log_level=info").unwrap();
+        c.spec.validate().unwrap();
+        assert_eq!(c.spec.serving.slow_query_us, 2500);
+        assert_eq!(c.spec.serving.log_level, "info");
+        // Flat file round trip keeps the knobs.
+        let tmp = std::env::temp_dir().join("tensorlsh_obs_cfg_test.json");
+        std::fs::write(&tmp, c.to_json()).unwrap();
+        let mut c2 = AppConfig::default();
+        c2.apply_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(c2.spec.serving.slow_query_us, 2500);
+        assert_eq!(c2.spec.serving.log_level, "info");
+        let _ = std::fs::remove_file(&tmp);
+        // Typos are typed errors at override time, not at serve time.
+        assert!(AppConfig::default().apply_override("log_level=loud").is_err());
+        // Defaults are omitted: a default config emits neither key.
+        let json = AppConfig::default().to_json();
+        assert!(!json.contains("slow_query_us") && !json.contains("log_level"));
+        // The nested spec document carries the knobs too.
+        let spec_doc = c.spec.to_json_string();
+        assert!(spec_doc.contains("slow_query_us"));
+        let back = LshSpec::from_json_str(&spec_doc).unwrap();
+        assert_eq!(back, c.spec);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::protocol::{QueryRequest, QueryResponse};
-use super::server::{overlay_churn, Coordinator};
+use super::server::{overlay_churn, overlay_store, Coordinator};
 use crate::error::{Error, Result};
 use crate::index::ShardedLshIndex;
 use crate::query::{Query, SearchResponse, Searcher};
@@ -105,9 +105,21 @@ impl Dispatcher {
     }
 
     /// Metrics snapshot (same counters the coordinator records), with the
-    /// index's churn counters overlaid.
+    /// index's churn counters (and the store's WAL fsync totals, when
+    /// durable) overlaid.
     pub fn metrics(&self) -> MetricsSnapshot {
-        overlay_churn(self.metrics.snapshot(), &self.index)
+        let snap = overlay_churn(self.metrics.snapshot(), &self.index);
+        match &self.store {
+            Some(store) => overlay_store(snap, store),
+            None => snap,
+        }
+    }
+
+    /// Fold one wire-encode duration (µs) into the `wire_encode` stage
+    /// histogram — the network layer's span, recorded after a search
+    /// response is framed and written.
+    pub fn record_wire_encode(&self, us: f64) {
+        self.metrics.record_wire_encode(us);
     }
 
     /// The durable store backing the pipeline, if any.
@@ -238,13 +250,27 @@ impl Dispatcher {
         drop(submit); // last sender: the pipeline starts draining
         let deadline = Instant::now() + limit;
         // `JoinHandle` has no timed join; poll under the deadline.
+        let final_snap = |metrics: &Arc<Metrics>| {
+            let snap = overlay_churn(metrics.snapshot(), &index);
+            match &store {
+                Some(s) => overlay_store(snap, s),
+                None => snap,
+            }
+        };
         while !router.is_finished() {
             if Instant::now() >= deadline {
-                eprintln!(
-                    "dispatcher: pipeline did not drain within {limit:?}; detaching it"
+                crate::obs::event::warn(
+                    "drain_timeout",
+                    &[
+                        (
+                            "limit_ms",
+                            crate::obs::event::num(limit.as_secs_f64() * 1e3),
+                        ),
+                        ("where", crate::obs::event::str("dispatcher")),
+                    ],
                 );
                 checkpoint(&store);
-                return overlay_churn(metrics.snapshot(), &index);
+                return final_snap(&metrics);
             }
             std::thread::sleep(Duration::from_millis(2));
         }
@@ -257,9 +283,9 @@ impl Dispatcher {
                 coord.shutdown_deadline(left.max(Duration::from_millis(100)))
             }
             Err(_) => {
-                eprintln!("dispatcher: router thread panicked");
+                crate::obs::event::error("router_panicked", &[]);
                 checkpoint(&store);
-                overlay_churn(metrics.snapshot(), &index)
+                final_snap(&metrics)
             }
         }
     }
@@ -289,7 +315,13 @@ fn timed_out(timeout: Option<Duration>) -> Error {
 fn checkpoint(store: &Option<Arc<Store>>) {
     if let Some(store) = store {
         if let Err(e) = store.checkpoint_if_dirty() {
-            eprintln!("dispatcher: shutdown checkpoint failed: {e}");
+            crate::obs::event::error(
+                "checkpoint_failed",
+                &[
+                    ("error", crate::obs::event::str(e.to_string())),
+                    ("during", crate::obs::event::str("dispatcher shutdown")),
+                ],
+            );
         }
     }
 }

@@ -1,23 +1,43 @@
-//! Serving metrics: latency histogram, counters, throughput, and the
-//! per-query [`SearchStats`] aggregates (probes spent, candidates
+//! Serving metrics: latency + per-stage histograms, counters, throughput,
+//! and the per-query [`SearchStats`] aggregates (probes spent, candidates
 //! re-ranked) the unified query API reports.
+//!
+//! Stage timings come from the [`crate::obs::QueryTrace`] each query
+//! carries through the pipeline; they live beside — never inside —
+//! [`SearchStats`], so answers stay bit-identical with tracing on or off.
 
 // Not the precision-audited hash path: latency buckets saturate well below the cast bounds.
 #![allow(clippy::cast_possible_truncation)]
 
+use crate::obs::QueryTrace;
 use crate::query::SearchStats;
+use crate::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Log-scaled latency histogram (µs buckets: 1, 2, 4, ... ~1.1e6).
-#[derive(Debug)]
+/// Exact samples a [`Histogram`] keeps before switching to reservoir
+/// replacement (Algorithm R). Below the cap quantiles are exact; above
+/// it they are computed over a uniform sample of everything recorded, so
+/// memory stays bounded on a long-running server.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Log-scaled latency histogram (µs buckets: 1, 2, 4, ... ~1.1e6) with a
+/// bounded reservoir of exact values for quantiles.
+#[derive(Clone, Debug)]
 pub struct Histogram {
     /// counts[i] covers [2^i, 2^{i+1}) µs.
     counts: Vec<u64>,
-    /// Exact values kept for precise quantiles up to a cap (reservoir-free:
-    /// serving traces here are ≤ millions of queries, Vec<f32> is fine).
+    /// Uniform sample of recorded values, at most [`RESERVOIR_CAP`] of
+    /// them (Algorithm R: once full, the i-th record replaces a random
+    /// kept sample with probability cap/i).
     samples: Vec<f32>,
+    /// Total values recorded (≥ `samples.len()`).
+    seen: u64,
+    /// Deterministic replacement choices: a fixed seed means the same
+    /// record sequence always yields the same reservoir, so quantiles are
+    /// reproducible run to run.
+    rng: Rng,
 }
 
 impl Default for Histogram {
@@ -28,24 +48,45 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { counts: vec![0; 21], samples: Vec::new() }
+        Histogram {
+            counts: vec![0; 21],
+            samples: Vec::new(),
+            seen: 0,
+            rng: Rng::new(0x0b5e_cafe),
+        }
     }
 
     pub fn record(&mut self, us: f64) {
         let bucket = (us.max(1.0).log2() as usize).min(self.counts.len() - 1);
         self.counts[bucket] += 1;
-        self.samples.push(us as f32);
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(us as f32);
+        } else {
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples[j as usize] = us as f32;
+            }
+        }
     }
 
+    /// Total values recorded (not the reservoir size — see
+    /// [`Histogram::samples_kept`]).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.seen == 0
     }
 
-    /// Exact quantile (q in [0,1]).
+    /// Exact values currently held: `min(len, RESERVOIR_CAP)`.
+    pub fn samples_kept(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Quantile (q in [0,1]): exact while `len() <= RESERVOIR_CAP`,
+    /// reservoir-estimated beyond.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -56,12 +97,23 @@ impl Histogram {
         xs[idx] as f64
     }
 
+    /// Mean over the reservoir (exact while under the cap).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
     }
+}
+
+/// The four pipeline-stage histograms a [`QueryTrace`] folds into; one
+/// lock since they are always recorded together.
+#[derive(Debug, Default)]
+struct StageHists {
+    hash: Histogram,
+    gather: Histogram,
+    rerank: Histogram,
+    merge: Histogram,
 }
 
 /// Shared serving metrics.
@@ -78,7 +130,13 @@ pub struct Metrics {
     pub fallbacks: AtomicU64,
     pub batches: AtomicU64,
     pub batch_items: AtomicU64,
+    /// Queries at or over the configured `slow_query_us` threshold.
+    pub slow_queries: AtomicU64,
     latency: Mutex<Histogram>,
+    stages: Mutex<StageHists>,
+    /// Response serialization time on the wire server (recorded per
+    /// written Results/BatchResults frame, not per query).
+    wire_encode: Mutex<Histogram>,
     started: Instant,
 }
 
@@ -98,7 +156,10 @@ impl Metrics {
             fallbacks: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
+            slow_queries: AtomicU64::new(0),
             latency: Mutex::new(Histogram::new()),
+            stages: Mutex::new(StageHists::default()),
+            wire_encode: Mutex::new(Histogram::new()),
             started: Instant::now(),
         }
     }
@@ -121,6 +182,27 @@ impl Metrics {
         self.batch_items.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Fold one finished query's stage spans into the per-stage
+    /// histograms (the aggregator calls this right after
+    /// [`Metrics::record_query`] when tracing is on).
+    pub fn record_trace(&self, trace: &QueryTrace) {
+        let mut s = self.stages.lock().unwrap();
+        s.hash.record(trace.hash_us());
+        s.gather.record(trace.gather_us());
+        s.rerank.record(trace.rerank_us());
+        s.merge.record(trace.merge_us());
+    }
+
+    /// Record one response-frame serialization span (wire server).
+    pub fn record_wire_encode(&self, us: f64) {
+        self.wire_encode.lock().unwrap().record(us);
+    }
+
+    /// Count one query at or over the slow-query threshold.
+    pub fn record_slow(&self) {
+        self.slow_queries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot for reports. Every mean field is defined as 0.0 (not NaN)
     /// when nothing has been recorded yet — a scrape of an idle server
     /// must serialize to finite numbers.
@@ -134,6 +216,8 @@ impl Metrics {
             }
         }
         let hist = self.latency.lock().unwrap();
+        let stages = self.stages.lock().unwrap();
+        let wire = self.wire_encode.lock().unwrap();
         let queries = self.queries.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let elapsed = self.started.elapsed().as_secs_f64();
@@ -149,8 +233,15 @@ impl Metrics {
             p95_us: hist.quantile(0.95),
             p99_us: hist.quantile(0.99),
             mean_us: hist.mean(),
-            // Churn and pager counters live on the served index, not here:
-            // the coordinator overlays them (Metrics has no index handle).
+            stage_hash: StageStats::from_hist(&stages.hash),
+            stage_gather: StageStats::from_hist(&stages.gather),
+            stage_rerank: StageStats::from_hist(&stages.rerank),
+            stage_merge: StageStats::from_hist(&stages.merge),
+            stage_wire_encode: StageStats::from_hist(&wire),
+            slow_queries: self.slow_queries.load(Ordering::Relaxed),
+            // Churn, pager, and WAL counters live on the served index and
+            // store, not here: the coordinator overlays them (Metrics has
+            // no index or store handle).
             live_items: 0,
             tombstoned: 0,
             compactions_run: 0,
@@ -159,7 +250,63 @@ impl Metrics {
             pager_misses: 0,
             pager_evictions: 0,
             pager_resident_bytes: 0,
+            wal_fsyncs: 0,
+            wal_fsync_us: 0.0,
         }
+    }
+}
+
+/// Count + quantile summary of one pipeline stage's histogram, as
+/// surfaced in [`MetricsSnapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageStats {
+    /// Spans recorded for this stage (equals traced queries for the
+    /// pipeline stages; written response frames for wire encode).
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl StageStats {
+    fn from_hist(h: &Histogram) -> StageStats {
+        StageStats {
+            count: h.len() as u64,
+            mean_us: h.mean(),
+            p50_us: h.quantile(0.50),
+            p95_us: h.quantile(0.95),
+            p99_us: h.quantile(0.99),
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("mean_us".to_string(), Json::Num(self.mean_us));
+        m.insert("p50_us".to_string(), Json::Num(self.p50_us));
+        m.insert("p95_us".to_string(), Json::Num(self.p95_us));
+        m.insert("p99_us".to_string(), Json::Num(self.p99_us));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> crate::error::Result<StageStats> {
+        let obj = v.as_obj()?;
+        for key in obj.keys() {
+            if !["count", "mean_us", "p50_us", "p95_us", "p99_us"].contains(&key.as_str()) {
+                return Err(crate::error::Error::Json(format!(
+                    "unknown stage key '{key}'"
+                )));
+            }
+        }
+        Ok(StageStats {
+            count: v.get("count")?.as_usize()? as u64,
+            mean_us: v.get("mean_us")?.as_f64()?,
+            p50_us: v.get("p50_us")?.as_f64()?,
+            p95_us: v.get("p95_us")?.as_f64()?,
+            p99_us: v.get("p99_us")?.as_f64()?,
+        })
     }
 }
 
@@ -180,6 +327,16 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
+    /// Per-stage span summaries (all-zero when tracing is off or nothing
+    /// has been served; counts equal traced queries).
+    pub stage_hash: StageStats,
+    pub stage_gather: StageStats,
+    pub stage_rerank: StageStats,
+    pub stage_merge: StageStats,
+    /// Response-frame serialization spans on the wire server.
+    pub stage_wire_encode: StageStats,
+    /// Queries at or over the configured `slow_query_us` threshold.
+    pub slow_queries: u64,
     /// Items currently answering queries (slots minus tombstones).
     pub live_items: u64,
     /// Slots tombstoned by deletes, awaiting compaction.
@@ -199,6 +356,11 @@ pub struct MetricsSnapshot {
     pub pager_evictions: u64,
     /// Bytes paged shards currently hold in RAM (overlays + hot buckets).
     pub pager_resident_bytes: u64,
+    /// WAL records fsynced by the store (0 without a store — overlaid like
+    /// the pager section).
+    pub wal_fsyncs: u64,
+    /// Cumulative µs those fsyncs took (mean = `wal_fsync_us / wal_fsyncs`).
+    pub wal_fsync_us: f64,
 }
 
 impl MetricsSnapshot {
@@ -220,6 +382,14 @@ impl MetricsSnapshot {
         m.insert("p95_us".to_string(), Json::Num(self.p95_us));
         m.insert("p99_us".to_string(), Json::Num(self.p99_us));
         m.insert("mean_us".to_string(), Json::Num(self.mean_us));
+        let mut stages = std::collections::BTreeMap::new();
+        stages.insert("hash".to_string(), self.stage_hash.to_json());
+        stages.insert("gather".to_string(), self.stage_gather.to_json());
+        stages.insert("rerank".to_string(), self.stage_rerank.to_json());
+        stages.insert("merge".to_string(), self.stage_merge.to_json());
+        stages.insert("wire_encode".to_string(), self.stage_wire_encode.to_json());
+        m.insert("stages".to_string(), Json::Obj(stages));
+        m.insert("slow_queries".to_string(), Json::Num(self.slow_queries as f64));
         m.insert("live_items".to_string(), Json::Num(self.live_items as f64));
         m.insert("tombstoned".to_string(), Json::Num(self.tombstoned as f64));
         m.insert(
@@ -243,6 +413,8 @@ impl MetricsSnapshot {
             "pager_resident_bytes".to_string(),
             Json::Num(self.pager_resident_bytes as f64),
         );
+        m.insert("wal_fsyncs".to_string(), Json::Num(self.wal_fsyncs as f64));
+        m.insert("wal_fsync_us".to_string(), Json::Num(self.wal_fsync_us));
         Json::Obj(m)
     }
 
@@ -262,6 +434,8 @@ impl MetricsSnapshot {
                 "p95_us",
                 "p99_us",
                 "mean_us",
+                "stages",
+                "slow_queries",
                 "live_items",
                 "tombstoned",
                 "compactions_run",
@@ -270,6 +444,8 @@ impl MetricsSnapshot {
                 "pager_misses",
                 "pager_evictions",
                 "pager_resident_bytes",
+                "wal_fsyncs",
+                "wal_fsync_us",
             ]
             .contains(&key.as_str())
             {
@@ -290,6 +466,14 @@ impl MetricsSnapshot {
             p95_us: v.get("p95_us")?.as_f64()?,
             p99_us: v.get("p99_us")?.as_f64()?,
             mean_us: v.get("mean_us")?.as_f64()?,
+            // Absent on frames from servers that predate tracing: every
+            // stage defaults to all-zero, so old scrapes still parse.
+            stage_hash: opt_stage(v, "hash")?,
+            stage_gather: opt_stage(v, "gather")?,
+            stage_rerank: opt_stage(v, "rerank")?,
+            stage_merge: opt_stage(v, "merge")?,
+            stage_wire_encode: opt_stage(v, "wire_encode")?,
+            slow_queries: opt_u64(v, "slow_queries")?,
             live_items: v.get("live_items")?.as_usize()? as u64,
             tombstoned: v.get("tombstoned")?.as_usize()? as u64,
             compactions_run: v.get("compactions_run")?.as_usize()? as u64,
@@ -300,6 +484,8 @@ impl MetricsSnapshot {
             pager_misses: opt_u64(v, "pager_misses")?,
             pager_evictions: opt_u64(v, "pager_evictions")?,
             pager_resident_bytes: opt_u64(v, "pager_resident_bytes")?,
+            wal_fsyncs: opt_u64(v, "wal_fsyncs")?,
+            wal_fsync_us: opt_f64(v, "wal_fsync_us")?,
         })
     }
 }
@@ -310,6 +496,35 @@ fn opt_u64(v: &crate::util::json::Json, key: &str) -> crate::error::Result<u64> 
     match v.as_obj()?.get(key) {
         Some(n) => Ok(n.as_usize()? as u64),
         None => Ok(0),
+    }
+}
+
+/// Optional f64 field: absent means 0.0.
+fn opt_f64(v: &crate::util::json::Json, key: &str) -> crate::error::Result<f64> {
+    match v.as_obj()?.get(key) {
+        Some(n) => n.as_f64(),
+        None => Ok(0.0),
+    }
+}
+
+/// One stage's summary out of the nested `"stages"` object: absent object
+/// or absent stage parses as all-zero (forward compatibility, like
+/// [`opt_u64`]); present stages reject unknown keys.
+fn opt_stage(v: &crate::util::json::Json, stage: &str) -> crate::error::Result<StageStats> {
+    let Some(stages) = v.as_obj()?.get("stages") else {
+        return Ok(StageStats::default());
+    };
+    let obj = stages.as_obj()?;
+    for key in obj.keys() {
+        if !["hash", "gather", "rerank", "merge", "wire_encode"].contains(&key.as_str()) {
+            return Err(crate::error::Error::Json(format!(
+                "unknown stage '{key}'"
+            )));
+        }
+    }
+    match obj.get(stage) {
+        Some(s) => StageStats::from_json(s),
+        None => Ok(StageStats::default()),
     }
 }
 
@@ -330,6 +545,24 @@ impl std::fmt::Display for MetricsSnapshot {
             self.p99_us,
             self.mean_us
         )?;
+        // Stage spans only appear once a traced query has been recorded —
+        // untraced serving keeps the line unchanged.
+        if self.stage_hash.count > 0 {
+            write!(
+                f,
+                " stages p50(µs) hash={:.0} gather={:.0} rerank={:.0} merge={:.0}",
+                self.stage_hash.p50_us,
+                self.stage_gather.p50_us,
+                self.stage_rerank.p50_us,
+                self.stage_merge.p50_us
+            )?;
+        }
+        if self.stage_wire_encode.count > 0 {
+            write!(f, " wire_encode p50={:.0}µs", self.stage_wire_encode.p50_us)?;
+        }
+        if self.slow_queries > 0 {
+            write!(f, " slow={}", self.slow_queries)?;
+        }
         if self.fallbacks > 0 {
             write!(f, " fallbacks={}", self.fallbacks)?;
         }
@@ -358,6 +591,14 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.pager_resident_bytes
             )?;
         }
+        if self.wal_fsyncs > 0 {
+            write!(
+                f,
+                " wal fsyncs={} mean_us={:.0}",
+                self.wal_fsyncs,
+                self.wal_fsync_us / self.wal_fsyncs as f64
+            )?;
+        }
         Ok(())
     }
 }
@@ -378,6 +619,65 @@ mod tests {
         assert!((h.mean() - 50.5).abs() < 0.5);
     }
 
+    /// Edge cases (ISSUE 10 satellite): empty and single-sample histograms
+    /// are defined (no panic, no NaN), and values beyond the largest bucket
+    /// saturate into it instead of indexing out of bounds.
+    #[test]
+    fn histogram_edge_cases() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.len(), 0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+
+        let mut h = Histogram::new();
+        h.record(42.0);
+        assert_eq!(h.len(), 1);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 42.0);
+        }
+        assert_eq!(h.mean(), 42.0);
+
+        // ~1.1e6 µs is the last bucket's lower bound; 1e12 µs saturates.
+        let mut h = Histogram::new();
+        h.record(1e12);
+        h.record(0.0); // sub-µs clamps into the first bucket
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.counts[h.counts.len() - 1], 1);
+        assert_eq!(h.counts[0], 1);
+    }
+
+    /// The reservoir bounds memory (ISSUE 10 satellite: the old `samples`
+    /// Vec grew forever): far more records than the cap keep only
+    /// RESERVOIR_CAP exact values, quantiles stay close to truth, and a
+    /// fixed RNG seed makes the whole thing deterministic.
+    #[test]
+    fn histogram_reservoir_bounds_memory_deterministically() {
+        let n = 50_000;
+        let mut h = Histogram::new();
+        for i in 0..n {
+            // Shuffled-ish order via a multiplicative stride over 0..n.
+            h.record(((i * 7919) % n) as f64);
+        }
+        assert_eq!(h.len(), n);
+        assert_eq!(h.samples_kept(), RESERVOIR_CAP);
+        // A uniform 4096-sample of Uniform(0, n) estimates quantiles within
+        // a few percent with overwhelming probability; 10% is a safe bound
+        // for a deterministic test.
+        let n = n as f64;
+        assert!((h.quantile(0.5) - 0.5 * n).abs() < 0.1 * n, "{}", h.quantile(0.5));
+        assert!((h.quantile(0.99) - 0.99 * n).abs() < 0.1 * n, "{}", h.quantile(0.99));
+        assert!((h.mean() - 0.5 * n).abs() < 0.1 * n, "{}", h.mean());
+        // Determinism: same record sequence, same reservoir, same numbers.
+        let mut h2 = Histogram::new();
+        for i in 0..50_000 {
+            h2.record(((i * 7919) % 50_000) as f64);
+        }
+        assert_eq!(h.samples, h2.samples);
+        assert_eq!(h.quantile(0.95), h2.quantile(0.95));
+    }
+
     /// A snapshot of an idle server (no queries, no batches) is all finite
     /// zeros — the mean fields must be 0.0, never NaN (ISSUE 5 satellite).
     #[test]
@@ -394,6 +694,9 @@ mod tests {
             ("p95_us", s.p95_us),
             ("p99_us", s.p99_us),
             ("mean_us", s.mean_us),
+            ("stage_hash.mean_us", s.stage_hash.mean_us),
+            ("stage_wire_encode.p99_us", s.stage_wire_encode.p99_us),
+            ("wal_fsync_us", s.wal_fsync_us),
         ] {
             assert!(v.is_finite(), "{name} must be finite, got {v}");
             assert_eq!(v, 0.0, "{name} must be 0.0 with nothing recorded");
@@ -428,11 +731,44 @@ mod tests {
         let text = format!("{s}");
         assert!(text.contains("queries=4"));
         assert!(text.contains("probes≈3.0"));
+        // No trace recorded → the Display line has no stage segment.
+        assert!(!text.contains("stages"));
         m.record_query(
             50.0,
             &SearchStats { exact_fallback: true, ..SearchStats::default() },
         );
         assert_eq!(m.snapshot().fallbacks, 1);
+    }
+
+    /// Traces fold into the per-stage histograms and surface in the
+    /// snapshot + Display (tentpole: per-stage spans).
+    #[test]
+    fn traces_fold_into_stage_histograms() {
+        let m = Metrics::new();
+        for i in 0..5u64 {
+            let t = crate::obs::QueryTrace::new();
+            t.add_hash_ns(10_000 + i * 1_000);
+            t.add_gather_ns(40_000);
+            t.add_rerank_ns(20_000);
+            t.add_merge_ns(5_000);
+            m.record_trace(&t);
+        }
+        m.record_wire_encode(7.5);
+        m.record_slow();
+        let s = m.snapshot();
+        assert_eq!(s.stage_hash.count, 5);
+        assert_eq!(s.stage_gather.count, 5);
+        assert!((s.stage_gather.p50_us - 40.0).abs() < 0.1);
+        assert!((s.stage_rerank.mean_us - 20.0).abs() < 0.1);
+        assert!((s.stage_merge.p99_us - 5.0).abs() < 0.1);
+        assert_eq!(s.stage_wire_encode.count, 1);
+        assert!((s.stage_wire_encode.p50_us - 7.5).abs() < 0.1);
+        assert_eq!(s.slow_queries, 1);
+        let text = format!("{s}");
+        assert!(text.contains("stages p50(µs) hash="), "{text}");
+        assert!(text.contains("gather=40"), "{text}");
+        assert!(text.contains("wire_encode p50=8µs"), "{text}");
+        assert!(text.contains("slow=1"), "{text}");
     }
 
     #[test]
@@ -451,7 +787,15 @@ mod tests {
                     exact_fallback: i == 0,
                 },
             );
+            let t = crate::obs::QueryTrace::new();
+            t.add_hash_ns(12_345 + i * 111);
+            t.add_gather_ns(45_678);
+            t.add_rerank_ns(9_012);
+            t.add_merge_ns(3_456);
+            m.record_trace(&t);
         }
+        m.record_wire_encode(11.25);
+        m.record_slow();
         let mut s = m.snapshot();
         // Churn counters are overlaid by the coordinator from the served
         // index — give them non-zero values so the round-trip covers them.
@@ -465,6 +809,9 @@ mod tests {
         s.pager_misses = 100;
         s.pager_evictions = 40;
         s.pager_resident_bytes = 65536;
+        // WAL fsync attribution is overlaid from the store (ISSUE 10).
+        s.wal_fsyncs = 7;
+        s.wal_fsync_us = 812.5;
         let text = s.to_json().to_string_pretty();
         let back =
             MetricsSnapshot::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -474,14 +821,18 @@ mod tests {
         assert!(shown.contains("tombstoned=13"));
         assert!(shown.contains("compactions=2 reclaimed=31"));
         assert!(shown.contains("pager hits=900 misses=100 evictions=40 hit_rate=0.900"));
+        assert!(shown.contains("wal fsyncs=7 mean_us=116"));
+        assert!(shown.contains("slow=1"));
         // Idle snapshots round-trip too (all-zero means), and their Display
-        // form has no pager segment.
+        // form has no pager/stage/wal segment.
         let idle = Metrics::new().snapshot();
         let back = MetricsSnapshot::from_json(&idle.to_json()).unwrap();
         assert_eq!(back, idle);
         assert!(!format!("{idle}").contains("pager"));
-        // Frames from servers that predate the pager fields still parse
-        // (absent keys default to 0).
+        assert!(!format!("{idle}").contains("stages"));
+        assert!(!format!("{idle}").contains("wal"));
+        // Frames from servers that predate the pager, stage, and WAL fields
+        // still parse (absent keys default to 0 / all-zero stages).
         let mut obj = match idle.to_json() {
             crate::util::json::Json::Obj(m) => m,
             other => panic!("{other:?}"),
@@ -491,10 +842,24 @@ mod tests {
             "pager_misses",
             "pager_evictions",
             "pager_resident_bytes",
+            "stages",
+            "slow_queries",
+            "wal_fsyncs",
+            "wal_fsync_us",
         ] {
             obj.remove(key);
         }
         let back = MetricsSnapshot::from_json(&crate::util::json::Json::Obj(obj)).unwrap();
         assert_eq!(back, idle);
+        // Unknown stage names and unknown stage fields are rejected (the
+        // same strictness the flat keys already have).
+        let mut bad = match idle.to_json() {
+            crate::util::json::Json::Obj(m) => m,
+            other => panic!("{other:?}"),
+        };
+        let mut stages = std::collections::BTreeMap::new();
+        stages.insert("warp".to_string(), StageStats::default().to_json());
+        bad.insert("stages".to_string(), crate::util::json::Json::Obj(stages));
+        assert!(MetricsSnapshot::from_json(&crate::util::json::Json::Obj(bad)).is_err());
     }
 }

@@ -28,6 +28,16 @@
 //!   inserts interleave freely.
 //! * The **aggregator** merges per-shard top-k partials
 //!   ([`crate::index::merge_partials`]) and records end-to-end latency.
+//!
+//! Observability: with [`CoordinatorConfig::trace`] on (the default), every
+//! query carries a [`crate::obs::QueryTrace`] through the pipeline — the
+//! hash stage attributes its batch span evenly, workers record gather and
+//! rerank time per shard, and the aggregator records the merge span, folds
+//! the trace into per-stage [`Histogram`]s ([`StageStats`] in the
+//! snapshot), and emits a `slow_query` event past
+//! [`CoordinatorConfig::slow_query_us`]. Timings never enter
+//! [`crate::query::SearchStats`]: answers are bit-identical with tracing on
+//! or off.
 
 //! The whole pipeline is configurable from one declarative
 //! [`crate::lsh::spec::LshSpec`]: [`CoordinatorConfig::from_spec`] reads the
@@ -61,6 +71,6 @@ mod server;
 
 pub use batcher::{drain_batch, BatcherConfig};
 pub use dispatch::Dispatcher;
-pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot, StageStats, RESERVOIR_CAP};
 pub use protocol::{QueryRequest, QueryResponse};
 pub use server::{Coordinator, CoordinatorConfig, HashBackend, PjrtServingParams, DRAIN_DEADLINE};

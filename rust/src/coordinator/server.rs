@@ -38,11 +38,26 @@ pub struct CoordinatorConfig {
     pub n_workers: usize,
     /// Batching policy (sized to the PJRT artifact batch for that backend).
     pub batcher: BatcherConfig,
+    /// Per-query stage tracing (hash/gather/rerank/merge spans folded into
+    /// the per-stage metrics histograms). Timings never enter
+    /// [`SearchStats`], so answers are bit-identical on or off; off skips
+    /// the clock reads entirely.
+    pub trace: bool,
+    /// Slow-query log threshold in µs: queries at or above it emit a
+    /// `slow_query` event with the full [`crate::query::QueryOpts`] and
+    /// stage breakdown, and count into `MetricsSnapshot::slow_queries`.
+    /// 0 disables the log.
+    pub slow_query_us: u64,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { n_workers: 4, batcher: BatcherConfig::default() }
+        CoordinatorConfig {
+            n_workers: 4,
+            batcher: BatcherConfig::default(),
+            trace: true,
+            slow_query_us: 0,
+        }
     }
 }
 
@@ -57,6 +72,8 @@ impl CoordinatorConfig {
                 max_batch: spec.serving.max_batch,
                 max_wait: std::time::Duration::from_micros(spec.serving.max_wait_us),
             },
+            trace: true,
+            slow_query_us: spec.serving.slow_query_us,
         }
     }
 }
@@ -102,6 +119,10 @@ struct QueryJob {
     /// Per-table signature lists (exact signature [+ multiprobe extras]).
     sigs: Vec<Vec<u64>>,
     submitted: Instant,
+    /// Stage span accumulator ([`CoordinatorConfig::trace`]); atomic, so
+    /// workers record through the shared `Arc<QueryJob>`. `None` = tracing
+    /// off, zero clock reads on the hot path.
+    trace: Option<crate::obs::QueryTrace>,
 }
 
 /// Scatter unit: one per (query, worker).
@@ -176,11 +197,19 @@ impl Coordinator {
             // The artifact returns codes only (no raw projections), so
             // PJRT-hashed queries probe exact buckets; only the native
             // fallback path can add multiprobe signatures.
-            eprintln!(
-                "coordinator: index configured with probes={} but the PJRT backend \
-                 hashes exact-bucket signatures only — multiprobe (including \
-                 per-query overrides) applies on the native path alone",
-                index.probes()
+            crate::obs::event::warn(
+                "pjrt_multiprobe",
+                &[
+                    ("probes", crate::obs::event::num(index.probes() as f64)),
+                    (
+                        "note",
+                        crate::obs::event::str(
+                            "PJRT hashes exact-bucket signatures only; multiprobe \
+                             (including per-query overrides) applies on the native \
+                             path alone",
+                        ),
+                    ),
+                ],
             );
         }
         let (in_tx, in_rx) = channel::<(QueryRequest, Instant)>();
@@ -205,11 +234,12 @@ impl Coordinator {
                     let mut stats = SearchStats::default();
                     let mut error = None;
                     for &s in &shards {
-                        match index.shard_query(
+                        match index.shard_query_traced(
                             s,
                             &job.request.query.tensor,
                             &job.sigs,
                             &job.request.query.opts,
+                            job.trace.as_ref(),
                         ) {
                             Ok((partial, shard_stats)) => {
                                 acc.extend(partial);
@@ -246,6 +276,7 @@ impl Coordinator {
             let index = Arc::clone(&index);
             let metrics = Arc::clone(&metrics);
             let expected = n_workers;
+            let slow_query_us = cfg.slow_query_us;
             threads.push(std::thread::spawn(move || {
                 let mut pending: HashMap<u64, Pending> = HashMap::new();
                 for p in part_rx {
@@ -278,6 +309,7 @@ impl Coordinator {
                             let fallback = stats.candidates_examined == 0
                                 && opts.exact_fallback
                                 && index.live_len() > 0;
+                            let t_merge = job.trace.as_ref().map(|_| Instant::now());
                             let results = if fallback {
                                 stats.exact_fallback = true;
                                 stats.reranked += index.live_len();
@@ -290,10 +322,31 @@ impl Coordinator {
                                     opts.k,
                                 ))
                             };
+                            if let (Some(tr), Some(t0)) = (job.trace.as_ref(), t_merge) {
+                                tr.add_merge_ns(t0.elapsed().as_nanos() as u64);
+                            }
                             results.map(|results| {
                                 let latency_us =
                                     job.submitted.elapsed().as_secs_f64() * 1e6;
                                 metrics.record_query(latency_us, &stats);
+                                if let Some(tr) = job.trace.as_ref() {
+                                    metrics.record_trace(tr);
+                                }
+                                if slow_query_us > 0 && latency_us >= slow_query_us as f64 {
+                                    metrics.record_slow();
+                                    let mut fields = vec![
+                                        ("latency_us", crate::obs::event::num(latency_us)),
+                                        (
+                                            "id",
+                                            crate::obs::event::num(job.request.id as f64),
+                                        ),
+                                        ("opts", opts.to_json()),
+                                    ];
+                                    if let Some(tr) = job.trace.as_ref() {
+                                        fields.push(("stages", tr.to_json()));
+                                    }
+                                    crate::obs::event::warn("slow_query", &fields);
+                                }
                                 QueryResponse {
                                     id: job.request.id,
                                     results,
@@ -319,14 +372,21 @@ impl Coordinator {
             let index = Arc::clone(&index);
             let metrics = Arc::clone(&metrics);
             let batcher = cfg.batcher;
+            let trace_on = cfg.trace;
             threads.push(std::thread::spawn(move || {
                 let mut engine_state = match &backend {
                     HashBackend::Pjrt(p) => match PjrtEngine::new(&p.artifact_dir) {
                         Ok(e) => Some(e),
                         Err(err) => {
-                            eprintln!(
-                                "coordinator: PJRT engine init failed: {err}; \
-                                 using native batched hashing"
+                            crate::obs::event::warn(
+                                "pjrt_init_failed",
+                                &[
+                                    ("error", crate::obs::event::str(err.to_string())),
+                                    (
+                                        "fallback",
+                                        crate::obs::event::str("native batched hashing"),
+                                    ),
+                                ],
                             );
                             None
                         }
@@ -341,7 +401,11 @@ impl Coordinator {
                 let mut warned_probe_override = false;
                 while let Some(batch) = drain_batch(&in_rx, &batcher) {
                     metrics.record_batch(batch.len());
-                    let jobs = match (&backend, engine_state.as_mut()) {
+                    // The whole batch hashes in one pass, so the hash span
+                    // is timed once and attributed evenly across the
+                    // batch's queries.
+                    let t_hash = trace_on.then(Instant::now);
+                    let mut jobs = match (&backend, engine_state.as_mut()) {
                         (HashBackend::Pjrt(p), Some(engine)) => {
                             match hash_batch_pjrt(engine, p, &batch) {
                                 Ok(jobs) => {
@@ -358,19 +422,28 @@ impl Coordinator {
                                         })
                                     {
                                         warned_probe_override = true;
-                                        eprintln!(
-                                            "coordinator: per-query probe overrides are \
-                                             ignored on the PJRT hash path (exact-bucket \
-                                             signatures only); use the native backend \
-                                             for multiprobe"
+                                        crate::obs::event::warn(
+                                            "pjrt_probe_override",
+                                            &[(
+                                                "note",
+                                                crate::obs::event::str(
+                                                    "per-query probe overrides are ignored \
+                                                     on the PJRT hash path (exact-bucket \
+                                                     signatures only); use the native \
+                                                     backend for multiprobe",
+                                                ),
+                                            )],
                                         );
                                     }
                                     jobs
                                 }
                                 Err(err) => {
-                                    eprintln!(
-                                        "coordinator: PJRT hash failed: {err}; \
-                                         falling back to native"
+                                    crate::obs::event::warn(
+                                        "pjrt_hash_fallback",
+                                        &[
+                                            ("error", crate::obs::event::str(err.to_string())),
+                                            ("fallback", crate::obs::event::str("native")),
+                                        ],
                                     );
                                     hash_batch_native(&index, batch, &mut scratch)
                                 }
@@ -378,6 +451,15 @@ impl Coordinator {
                         }
                         _ => hash_batch_native(&index, batch, &mut scratch),
                     };
+                    if let Some(t0) = t_hash {
+                        let per_query_ns =
+                            t0.elapsed().as_nanos() as u64 / jobs.len().max(1) as u64;
+                        for job in &mut jobs {
+                            let tr = crate::obs::QueryTrace::new();
+                            tr.add_hash_ns(per_query_ns);
+                            job.trace = Some(tr);
+                        }
+                    }
                     for job in jobs {
                         let job = Arc::new(job);
                         for wtx in &worker_txs {
@@ -520,9 +602,14 @@ impl Coordinator {
             .collect()
     }
 
-    /// Metrics snapshot with the index's churn counters overlaid.
+    /// Metrics snapshot with the index's churn counters (and, for durable
+    /// coordinators, the store's WAL fsync totals) overlaid.
     pub fn metrics(&self) -> MetricsSnapshot {
-        overlay_churn(self.metrics.snapshot(), &self.index)
+        let snap = overlay_churn(self.metrics.snapshot(), &self.index);
+        match &self.store {
+            Some(store) => overlay_store(snap, store),
+            None => snap,
+        }
     }
 
     /// Close intake, wait for the pipeline to drain, and join threads.
@@ -541,7 +628,11 @@ impl Coordinator {
     /// [`Coordinator::shutdown`] with an explicit drain bound.
     pub fn shutdown_deadline(mut self, limit: Duration) -> MetricsSnapshot {
         self.drain(limit);
-        overlay_churn(self.metrics.snapshot(), &self.index)
+        let snap = overlay_churn(self.metrics.snapshot(), &self.index);
+        match &self.store {
+            Some(store) => overlay_store(snap, store),
+            None => snap,
+        }
     }
 
     /// The actual drain: idempotent (a second call is a no-op) and bounded
@@ -569,10 +660,18 @@ impl Coordinator {
             }
         };
         if timed_out {
-            eprintln!(
-                "coordinator: drain did not finish within {limit:?}; detaching {} \
-                 pipeline threads",
-                self.threads.len()
+            crate::obs::event::warn(
+                "drain_timeout",
+                &[
+                    (
+                        "limit_ms",
+                        crate::obs::event::num(limit.as_secs_f64() * 1e3),
+                    ),
+                    (
+                        "detached_threads",
+                        crate::obs::event::num(self.threads.len() as f64),
+                    ),
+                ],
             );
             self.threads.clear();
         } else {
@@ -582,7 +681,13 @@ impl Coordinator {
         }
         if let Some(store) = &self.store {
             if let Err(e) = store.checkpoint_if_dirty() {
-                eprintln!("coordinator: shutdown checkpoint failed: {e}");
+                crate::obs::event::error(
+                    "checkpoint_failed",
+                    &[
+                        ("error", crate::obs::event::str(e.to_string())),
+                        ("during", crate::obs::event::str("coordinator shutdown")),
+                    ],
+                );
             }
         }
     }
@@ -665,6 +770,15 @@ pub(crate) fn overlay_churn(
     snap
 }
 
+/// Overlay the durable store's WAL fsync totals (they live on the store's
+/// WAL writer, not in [`Metrics`]).
+pub(crate) fn overlay_store(mut snap: MetricsSnapshot, store: &Store) -> MetricsSnapshot {
+    let (fsyncs, fsync_us) = store.wal_fsync_stats();
+    snap.wal_fsyncs = fsyncs;
+    snap.wal_fsync_us = fsync_us;
+    snap
+}
+
 /// Native batched hashing: one flat `project_batch_into` pass per table for
 /// the whole batch (see [`ShardedLshIndex::signatures_batch_probes`]),
 /// honoring every query's probe override. The query tensors are moved out
@@ -696,6 +810,7 @@ fn hash_batch_native(
             request: QueryRequest { id, query: Query { tensor, opts } },
             sigs,
             submitted,
+            trace: None,
         })
         .collect()
 }
@@ -748,7 +863,12 @@ fn hash_batch_pjrt(
     Ok(batch
         .iter()
         .zip(sigs_per_query)
-        .map(|((q, t0), sigs)| QueryJob { request: q.clone(), sigs, submitted: *t0 })
+        .map(|((q, t0), sigs)| QueryJob {
+            request: q.clone(),
+            sigs,
+            submitted: *t0,
+            trace: None,
+        })
         .collect())
 }
 
@@ -790,6 +910,14 @@ mod tests {
         .unwrap();
         assert_eq!(responses.len(), 40);
         assert_eq!(snap.queries, 40);
+        // Tracing is on by default: every query contributes one sample to
+        // each stage histogram (hash is attributed per batch, but still one
+        // record per query).
+        assert_eq!(snap.stage_hash.count, 40);
+        assert_eq!(snap.stage_gather.count, 40);
+        assert_eq!(snap.stage_rerank.count, 40);
+        assert_eq!(snap.stage_merge.count, 40);
+        assert!(snap.stage_gather.mean_us >= 0.0 && snap.stage_gather.p99_us >= 0.0);
         // Every response's top hit must be the query itself (items queried),
         // and the stats must account for the re-ranked candidates.
         for r in &responses {
@@ -966,6 +1094,10 @@ mod tests {
         let snap = warm.metrics();
         assert_eq!(snap.live_items, 80);
         assert_eq!(snap.tombstoned, 1);
+        // Each durable mutation fsyncs the WAL; the totals overlay onto
+        // durable coordinators' snapshots (memory-only ones report 0).
+        assert!(snap.wal_fsyncs >= 2, "got {} fsyncs", snap.wal_fsyncs);
+        assert!(snap.wal_fsync_us > 0.0);
         let resp = warm.query(&Query::new(store.index().item(3), 3)).unwrap();
         assert!(
             resp.hits.iter().all(|h| h.id != 0),

@@ -29,6 +29,11 @@
 //! checksummed snapshot segment ([`crate::store`]) and [`LshIndex::load`]
 //! reconstructs a bit-identical searcher from it; the sharded structure
 //! snapshots per shard in parallel ([`ShardedLshIndex::save`]).
+//!
+//! The per-shard probe is observable: `ShardedLshIndex::shard_query_traced`
+//! accepts an optional [`crate::obs::QueryTrace`] that receives
+//! gather/rerank durations and pager attribution — timings only, never
+//! hits or stats, so traced and untraced answers are bit-identical.
 
 // Not the precision-audited hash path: slot ids are u32 by design (insert caps the item count).
 #![allow(clippy::cast_possible_truncation)]

@@ -949,6 +949,24 @@ impl ShardedLshIndex {
         sigs: &[Vec<u64>],
         opts: &QueryOpts,
     ) -> Result<(Vec<SearchResult>, SearchStats)> {
+        self.shard_query_traced(shard, tensor, sigs, opts, None)
+    }
+
+    /// [`ShardedLshIndex::shard_query`] with optional span accounting:
+    /// when `trace` is given, the gather and rerank phases add their
+    /// durations to it, and a paged shard attributes the pager hits and
+    /// misses it incurred (deltas of the shared shard counters, so
+    /// attribution is approximate under concurrent queries). The trace
+    /// receives timings only — hits and [`SearchStats`] are bit-identical
+    /// with or without it (`tests/observability.rs`).
+    pub fn shard_query_traced(
+        &self,
+        shard: usize,
+        tensor: &AnyTensor,
+        sigs: &[Vec<u64>],
+        opts: &QueryOpts,
+        trace: Option<&crate::obs::QueryTrace>,
+    ) -> Result<(Vec<SearchResult>, SearchStats)> {
         check_table_signatures(sigs.len(), self.n_tables())?;
         let qn = tensor.frob_norm();
         let guard = self.shards[shard].read().unwrap();
@@ -956,7 +974,16 @@ impl ShardedLshIndex {
             probes_used: sigs.iter().map(|s| s.len().saturating_sub(1)).sum(),
             ..SearchStats::default()
         };
+        let pager_before = match (trace, &*guard) {
+            (Some(_), ShardState::Paged(p)) => Some(p.stats()),
+            _ => None,
+        };
+        let t_gather = trace.map(|_| std::time::Instant::now());
         let (cand, counts) = guard.gather(sigs, opts, &mut stats)?;
+        if let (Some(tr), Some(t0)) = (trace, t_gather) {
+            tr.add_gather_ns(t0.elapsed().as_nanos() as u64);
+        }
+        let t_rerank = trace.map(|_| std::time::Instant::now());
         let hits = match &*guard {
             ShardState::Resident(s) => rerank_with_policy(
                 self.metric,
@@ -992,6 +1019,18 @@ impl ShardedLshIndex {
                 &mut stats,
             )?,
         };
+        if let (Some(tr), Some(t0)) = (trace, t_rerank) {
+            tr.add_rerank_ns(t0.elapsed().as_nanos() as u64);
+        }
+        if let (Some(tr), Some(before)) = (trace, pager_before) {
+            if let ShardState::Paged(p) = &*guard {
+                let after = p.stats();
+                tr.add_pager(
+                    after.hits.saturating_sub(before.hits),
+                    after.misses.saturating_sub(before.misses),
+                );
+            }
+        }
         Ok((hits, stats))
     }
 

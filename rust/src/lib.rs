@@ -64,6 +64,10 @@
 //!   thread-per-connection [`net::Server`] with admission control and
 //!   graceful drain, blocking [`net::Client`] whose answers are
 //!   bit-identical to in-process search.
+//! * [`obs`] — the observability layer: per-query stage tracing
+//!   ([`obs::QueryTrace`]), the leveled JSONL event log ([`obs::event`]),
+//!   and Prometheus text exposition ([`obs::render_prometheus`]) behind
+//!   the `Metrics` wire frame and the `tensorlsh metrics` CLI verb.
 //! * [`bench_harness`] — regenerators for every table/figure of the paper.
 //!
 //! ## Quickstart
@@ -170,6 +174,7 @@ pub mod index;
 pub mod linalg;
 pub mod lsh;
 pub mod net;
+pub mod obs;
 pub mod projection;
 pub mod query;
 pub mod rng;

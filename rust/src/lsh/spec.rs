@@ -559,6 +559,15 @@ pub struct ServingSpec {
     pub store: Option<StoreSpec>,
     /// Optional wire listener (`None` = in-process serving only).
     pub listen: Option<NetSpec>,
+    /// Slow-query log threshold in microseconds: queries whose end-to-end
+    /// latency reaches this emit a `slow_query` event with the full
+    /// [`crate::query::QueryOpts`] and per-stage breakdown. 0 (default)
+    /// disables the log.
+    pub slow_query_us: u64,
+    /// Structured event log threshold (`debug` | `info` | `warn` | `error`
+    /// | `off`); parsed with [`crate::obs::Level::parse`] and applied when
+    /// serving starts. Default `"warn"`.
+    pub log_level: String,
 }
 
 impl Default for ServingSpec {
@@ -570,6 +579,8 @@ impl Default for ServingSpec {
             max_wait_us: 500,
             store: None,
             listen: None,
+            slow_query_us: 0,
+            log_level: "warn".to_string(),
         }
     }
 }
@@ -591,6 +602,11 @@ impl ServingSpec {
         if let Some(listen) = &self.listen {
             listen.validate()?;
         }
+        crate::obs::Level::parse(&self.log_level)
+            .map_err(|_| Error::InvalidSpec(format!(
+                "log_level '{}' is not one of debug|info|warn|error|off",
+                self.log_level
+            )))?;
         Ok(())
     }
 
@@ -614,15 +630,36 @@ impl ServingSpec {
                 Some(l) => l.to_json(),
             },
         );
+        // Observability knobs are emitted only when set, so specs written
+        // before the knobs existed round-trip byte-identically.
+        if self.slow_query_us != 0 {
+            m.insert(
+                "slow_query_us".to_string(),
+                Json::Num(self.slow_query_us as f64),
+            );
+        }
+        if self.log_level != "warn" {
+            m.insert("log_level".to_string(), Json::Str(self.log_level.clone()));
+        }
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<ServingSpec> {
         reject_unknown(
             v,
-            &["shards", "n_workers", "max_batch", "max_wait_us", "store", "listen"],
+            &[
+                "shards",
+                "n_workers",
+                "max_batch",
+                "max_wait_us",
+                "store",
+                "listen",
+                "slow_query_us",
+                "log_level",
+            ],
             "serving",
         )?;
+        let defaults = ServingSpec::default();
         Ok(ServingSpec {
             shards: v.get("shards")?.as_usize()?,
             n_workers: v.get("n_workers")?.as_usize()?,
@@ -635,6 +672,14 @@ impl ServingSpec {
             listen: match v.as_obj()?.get("listen") {
                 None | Some(Json::Null) => None,
                 Some(l) => Some(NetSpec::from_json(l)?),
+            },
+            slow_query_us: match v.as_obj()?.get("slow_query_us") {
+                Some(n) => as_u64(n)?,
+                None => defaults.slow_query_us,
+            },
+            log_level: match v.as_obj()?.get("log_level") {
+                Some(l) => l.as_str()?.to_string(),
+                None => defaults.log_level,
             },
         })
     }

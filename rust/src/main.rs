@@ -41,6 +41,10 @@
 //!            `serve --listen <addr>` serves the framed TCP wire protocol
 //!            instead of a local trace (composes with --store)
 //!   ping     round-trip a Ping frame to a listening server
+//!   metrics  scrape metrics in Prometheus text format:
+//!            `metrics <addr>` asks a listening server over the wire;
+//!            `metrics --store <dir>` reports a store's structural
+//!            gauges (churn, pager, WAL fsync totals) offline
 //!   remote-query  query a listening server over the wire (same per-call
 //!            flags as `query`)
 //!   stop     ask a listening server to drain and exit
@@ -111,6 +115,8 @@ fn print_usage() {
          \x20          --listen <addr> serves the framed TCP wire protocol\n\
          \x20          instead of a local trace (composes with --store)\n\
          \x20 ping     round-trip a Ping frame: ping <addr>\n\
+         \x20 metrics  Prometheus text metrics: metrics <addr> scrapes a live\n\
+         \x20          server; metrics --store <dir> reports a store offline\n\
          \x20 remote-query  query a listening server over the wire:\n\
          \x20          remote-query <addr> [--probes N --budget N --rerank ...\n\
          \x20          --fallback --no-dedup]\n\
@@ -120,7 +126,8 @@ fn print_usage() {
          \x20            precision sample n_items top_k n_workers shards max_batch\n\
          \x20            max_wait_us seed seed_stride artifact_dir store\n\
          \x20            checkpoint_every compact_dead_fraction residency listen\n\
-         \x20            max_conns read_timeout_ms write_timeout_ms max_inflight"
+         \x20            max_conns read_timeout_ms write_timeout_ms max_inflight\n\
+         \x20            slow_query_us log_level"
     );
 }
 
@@ -162,6 +169,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         "upsert" => cmd_upsert(&cfg, &positional),
         "serve" => cmd_serve(&cfg, &positional),
         "ping" => cmd_ping(&positional),
+        "metrics" => cmd_metrics(&cfg, &positional),
         "remote-query" => cmd_remote_query(&cfg, &positional),
         "stop" => cmd_stop(&positional),
         "exp" => cmd_exp(&cfg, &positional),
@@ -681,6 +689,11 @@ fn cmd_upsert(cfg: &AppConfig, positional: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    // Arm the event log at the configured threshold (validate() already
+    // proved the level parses).
+    tensor_lsh::obs::set_log_level(tensor_lsh::obs::Level::parse(
+        &cfg.spec.serving.log_level,
+    )?);
     let (store_flag, rest) = split_store_flag(positional)?;
     let (residency_flag, rest) = split_residency_flag(&rest)?;
     let (listen_flag, rest) = split_value_flag(&rest, "--listen")?;
@@ -769,6 +782,40 @@ fn cmd_ping(positional: &[String]) -> Result<()> {
     let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
     let rtt = client.ping()?;
     println!("{addr}: pong in {:.1} µs", rtt.as_secs_f64() * 1e6);
+    Ok(())
+}
+
+/// Scrape metrics in Prometheus text exposition format. `metrics <addr>`
+/// round-trips a Metrics frame to a listening server (the same text a
+/// scraper would pull); `metrics --store <dir>` opens the store offline and
+/// reports its structural gauges — churn, pager counters, WAL fsync totals
+/// — with the query-rate section at zero (nothing is serving).
+fn cmd_metrics(cfg: &AppConfig, positional: &[String]) -> Result<()> {
+    let (store_flag, rest) = split_store_flag(positional)?;
+    let (residency_flag, rest) = split_residency_flag(&rest)?;
+    if store_flag.is_some() {
+        let store_spec = resolve_store(cfg, store_flag, residency_flag)?;
+        let store = open_store(&store_spec)?;
+        let index = store.index();
+        let mut snap = tensor_lsh::coordinator::Metrics::new().snapshot();
+        snap.live_items = index.live_len() as u64;
+        snap.tombstoned = index.dead_len() as u64;
+        snap.compactions_run = index.compactions_run();
+        snap.reclaimed_slots = index.reclaimed_slots();
+        let pager = index.pager_stats();
+        snap.pager_hits = pager.hits;
+        snap.pager_misses = pager.misses;
+        snap.pager_evictions = pager.evictions;
+        snap.pager_resident_bytes = pager.resident_bytes;
+        let (fsyncs, fsync_us) = store.wal_fsync_stats();
+        snap.wal_fsyncs = fsyncs;
+        snap.wal_fsync_us = fsync_us;
+        print!("{}", tensor_lsh::obs::render_prometheus(&snap));
+        return Ok(());
+    }
+    let addr = addr_arg(&rest, "metrics")?;
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
+    print!("{}", client.metrics_text()?);
     Ok(())
 }
 

@@ -150,6 +150,16 @@ impl Client {
         }
     }
 
+    /// The server's metrics in Prometheus text exposition format, ready to
+    /// print or hand to a scraper.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.call(&Request::Metrics)? {
+            Response::MetricsText(text) => Ok(text),
+            Response::Error(m) => Err(Error::Coordinator(m)),
+            other => Err(Client::unexpected(other, "MetricsText")),
+        }
+    }
+
     /// Ask the server to drain and exit; `Ok` once it acknowledges.
     pub fn shutdown_server(&mut self) -> Result<()> {
         match self.call(&Request::Shutdown)? {

@@ -71,6 +71,7 @@ pub mod ftype {
     pub const SHUTDOWN: u8 = 6;
     pub const REMOVE: u8 = 7;
     pub const UPSERT: u8 = 8;
+    pub const METRICS: u8 = 9;
 
     pub const PONG: u8 = 0x81;
     pub const RESULTS: u8 = 0x82;
@@ -82,6 +83,7 @@ pub mod ftype {
     pub const BYE: u8 = 0x88;
     pub const REMOVED: u8 = 0x89;
     pub const UPSERTED: u8 = 0x8A;
+    pub const METRICS_TEXT: u8 = 0x8B;
 }
 
 /// A client→server message.
@@ -97,6 +99,9 @@ pub enum Request {
     Remove(u64),
     /// Durable in-place replace of an existing id's tensor.
     Upsert(u64, AnyTensor),
+    /// Prometheus text exposition of the server's metrics — the scrape
+    /// frame behind `tensorlsh metrics <addr>`.
+    Metrics,
 }
 
 /// A server→client message.
@@ -119,6 +124,8 @@ pub enum Response {
     Removed,
     /// Acknowledges a durable `Upsert`.
     Upserted,
+    /// Prometheus `name{labels} value` text answering `Metrics`.
+    MetricsText(String),
 }
 
 impl Response {
@@ -135,6 +142,7 @@ impl Response {
             Response::Bye => "Bye",
             Response::Removed => "Removed",
             Response::Upserted => "Upserted",
+            Response::MetricsText(_) => "MetricsText",
         }
     }
 }
@@ -229,12 +237,13 @@ impl Request {
             Request::Shutdown => ftype::SHUTDOWN,
             Request::Remove(_) => ftype::REMOVE,
             Request::Upsert(_, _) => ftype::UPSERT,
+            Request::Metrics => ftype::METRICS,
         }
     }
 
     pub fn encode_payload(&self, out: &mut Vec<u8>) {
         match self {
-            Request::Ping | Request::Stats | Request::Shutdown => {}
+            Request::Ping | Request::Stats | Request::Shutdown | Request::Metrics => {}
             Request::Search(q) => encode_query(out, q),
             Request::SearchBatch(qs) => {
                 out.put_u32(qs.len() as u32);
@@ -260,6 +269,7 @@ impl Request {
             ftype::PING => Request::Ping,
             ftype::STATS => Request::Stats,
             ftype::SHUTDOWN => Request::Shutdown,
+            ftype::METRICS => Request::Metrics,
             ftype::SEARCH => Request::Search(decode_query(&mut r)?),
             ftype::SEARCH_BATCH => {
                 let n = r.u32()? as usize;
@@ -302,6 +312,7 @@ impl Response {
             Response::Bye => ftype::BYE,
             Response::Removed => ftype::REMOVED,
             Response::Upserted => ftype::UPSERTED,
+            Response::MetricsText(_) => ftype::METRICS_TEXT,
         }
     }
 
@@ -318,6 +329,7 @@ impl Response {
             Response::Inserted(id) => out.put_u64(*id),
             Response::Stats(snap) => put_json(out, &snap.to_json()),
             Response::Busy(m) | Response::Error(m) => put_str(out, m),
+            Response::MetricsText(text) => put_str(out, text),
         }
     }
 
@@ -349,6 +361,9 @@ impl Response {
             ),
             ftype::BUSY => Response::Busy(read_str(&mut r, "busy")?),
             ftype::ERROR => Response::Error(read_str(&mut r, "error")?),
+            ftype::METRICS_TEXT => {
+                Response::MetricsText(read_str(&mut r, "metrics text")?)
+            }
             other => return Err(corrupt(format!("unknown response frame type {other:#04x}"))),
         };
         if !r.is_empty() {
@@ -549,6 +564,7 @@ mod tests {
             Request::Insert(sample_query(4).tensor),
             Request::Remove(42),
             Request::Upsert(17, sample_query(10).tensor),
+            Request::Metrics,
         ];
         for req in &snapshots {
             let bytes = frame_bytes_request(req);
@@ -556,7 +572,8 @@ mod tests {
             match (req, &back) {
                 (Request::Ping, Request::Ping)
                 | (Request::Stats, Request::Stats)
-                | (Request::Shutdown, Request::Shutdown) => {}
+                | (Request::Shutdown, Request::Shutdown)
+                | (Request::Metrics, Request::Metrics) => {}
                 (Request::Search(a), Request::Search(b)) => {
                     assert_eq!(a.opts, b.opts);
                     assert!(crate::store::tensors_bit_equal(&a.tensor, &b.tensor));
@@ -596,6 +613,7 @@ mod tests {
             Response::Error("no durable store attached".into()),
             Response::Removed,
             Response::Upserted,
+            Response::MetricsText("tensorlsh_queries 1\ntensorlsh_qps 0\n".into()),
         ];
         for resp in &snapshots {
             let bytes = frame_bytes_response(resp);
@@ -610,6 +628,7 @@ mod tests {
                 (Response::Error(a), Response::Error(b)) => assert_eq!(a, b),
                 (Response::Removed, Response::Removed)
                 | (Response::Upserted, Response::Upserted) => {}
+                (Response::MetricsText(a), Response::MetricsText(b)) => assert_eq!(a, b),
                 other => panic!("variant changed in transit: {other:?}"),
             }
         }

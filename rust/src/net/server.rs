@@ -181,10 +181,19 @@ impl Server {
             // thread), but never hang shutdown on a leaked Arc: checkpoint
             // directly and report what we have.
             Err(arc) => {
-                eprintln!("net server: shared state still referenced at shutdown");
+                crate::obs::event::warn(
+                    "shutdown_leak",
+                    &[("where", crate::obs::event::str("net server shared state"))],
+                );
                 if let Some(store) = arc.dispatcher.store() {
                     if let Err(e) = store.checkpoint_if_dirty() {
-                        eprintln!("net server: shutdown checkpoint failed: {e}");
+                        crate::obs::event::error(
+                            "checkpoint_failed",
+                            &[
+                                ("error", crate::obs::event::str(e.to_string())),
+                                ("during", crate::obs::event::str("net server shutdown")),
+                            ],
+                        );
                     }
                 }
                 arc.dispatcher.metrics()
@@ -221,7 +230,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => {
-                eprintln!("net server: accept failed: {e}");
+                crate::obs::event::warn(
+                    "accept_failed",
+                    &[("error", crate::obs::event::str(e.to_string()))],
+                );
                 std::thread::sleep(Duration::from_millis(20));
             }
         }
@@ -231,6 +243,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 /// Over the connection cap: one `Busy` frame, then close.
 fn shed_connection(stream: TcpStream, shared: &Shared) {
     shared.shed.fetch_add(1, Ordering::Relaxed);
+    crate::obs::event::debug(
+        "conn_shed",
+        &[("max_conns", crate::obs::event::num(shared.cfg.max_conns as f64))],
+    );
     let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
     let mut w = BufWriter::new(stream);
     let _ = write_response(
@@ -305,8 +321,16 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
             },
             Err(e) => Response::Error(e.to_string()),
         };
+        // Wire-encode span: serialization + socket write for search
+        // answers (the payloads whose size scales with the result set)
+        // lands in the `wire_encode` stage histogram.
+        let t_wire = matches!(resp, Response::Results(_) | Response::BatchResults(_))
+            .then(Instant::now);
         if write_response(&mut writer, &resp).is_err() {
             return;
+        }
+        if let Some(t0) = t_wire {
+            shared.dispatcher.record_wire_encode(t0.elapsed().as_nanos() as f64 / 1e3);
         }
     }
 }
@@ -316,6 +340,9 @@ fn answer(req: Request, shared: &Shared) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Stats => Response::Stats(shared.dispatcher.metrics()),
+        Request::Metrics => {
+            Response::MetricsText(crate::obs::render_prometheus(&shared.dispatcher.metrics()))
+        }
         Request::Insert(x) => match shared.dispatcher.store() {
             Some(store) => match store.insert(x) {
                 Ok(id) => Response::Inserted(id as u64),
@@ -371,6 +398,14 @@ fn admit(shared: &Shared, n: usize) -> std::result::Result<(), String> {
     let depth = shared.dispatcher.inflight();
     if depth + n > shared.cfg.max_inflight {
         shared.shed.fetch_add(1, Ordering::Relaxed);
+        crate::obs::event::debug(
+            "request_shed",
+            &[
+                ("depth", crate::obs::event::num(depth as f64)),
+                ("batch", crate::obs::event::num(n as f64)),
+                ("max_inflight", crate::obs::event::num(shared.cfg.max_inflight as f64)),
+            ],
+        );
         Err(format!(
             "pipeline depth {depth} + {n} would exceed the {} in-flight cap",
             shared.cfg.max_inflight

@@ -1,0 +1,200 @@
+//! Leveled structured event log: one JSON object per line on stderr
+//! (JSONL), gated by a process-wide level threshold, with a bounded ring
+//! buffer of recent events for in-process inspection.
+//!
+//! Every operational message the serving stack used to `eprintln!` goes
+//! through here instead: machine-parseable (each line is a complete JSON
+//! document), silenceable (`log_level=` config key, default `warn`), and
+//! queryable after the fact ([`recent_events`] keeps the last
+//! [`RING_CAP`] events regardless of the stderr threshold).
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity. `Off` is a threshold-only value (nothing logs *at*
+/// `Off`; setting it as the threshold silences stderr entirely).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+            Level::Off => "off",
+        }
+    }
+
+    /// Parse a `log_level=` config value.
+    pub fn parse(s: &str) -> crate::error::Result<Level> {
+        match s {
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" => Ok(Level::Warn),
+            "error" => Ok(Level::Error),
+            "off" => Ok(Level::Off),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown log level '{other}' (expected debug|info|warn|error|off)"
+            ))),
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Debug,
+            1 => Level::Info,
+            2 => Level::Warn,
+            3 => Level::Error,
+            _ => Level::Off,
+        }
+    }
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One logged event: a short machine-matchable code plus typed fields.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub level: Level,
+    /// Stable snake_case code, e.g. `"compaction"`, `"drain_timeout"`.
+    pub code: String,
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl Event {
+    /// The JSONL form: `level`/`event` first-class, fields inlined.
+    pub fn to_json(&self) -> Json {
+        let mut m = self.fields.clone();
+        m.insert("level".to_string(), Json::Str(self.level.name().to_string()));
+        m.insert("event".to_string(), Json::Str(self.code.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// Events kept in the recent-events ring.
+pub const RING_CAP: usize = 256;
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static RING: Mutex<VecDeque<Event>> = Mutex::new(VecDeque::new());
+
+/// Set the process-wide stderr threshold (events below it still land in
+/// the ring). Default: [`Level::Warn`].
+pub fn set_log_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current stderr threshold.
+pub fn log_level() -> Level {
+    Level::from_u8(THRESHOLD.load(Ordering::Relaxed))
+}
+
+/// Log one structured event. The event always enters the ring buffer;
+/// it is written to stderr (one compact JSON line, with a `ts_ms` unix
+/// timestamp) only when `level` is at or above the configured threshold.
+pub fn log(level: Level, code: &str, fields: &[(&str, Json)]) {
+    debug_assert!(level != Level::Off, "Off is a threshold, not an event level");
+    let event = Event {
+        level,
+        code: code.to_string(),
+        fields: fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    };
+    {
+        let mut ring = RING.lock().unwrap();
+        if ring.len() == RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(event.clone());
+    }
+    if level >= log_level() && level != Level::Off {
+        let mut json = match event.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        json.insert("ts_ms".to_string(), Json::Num(ts_ms));
+        eprintln!("{}", Json::Obj(json).to_string_compact());
+    }
+}
+
+/// Convenience wrappers for the common levels.
+pub fn debug(code: &str, fields: &[(&str, Json)]) {
+    log(Level::Debug, code, fields);
+}
+pub fn info(code: &str, fields: &[(&str, Json)]) {
+    log(Level::Info, code, fields);
+}
+pub fn warn(code: &str, fields: &[(&str, Json)]) {
+    log(Level::Warn, code, fields);
+}
+pub fn error(code: &str, fields: &[(&str, Json)]) {
+    log(Level::Error, code, fields);
+}
+
+/// Shorthand field constructors for call sites.
+pub fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+pub fn str(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+/// Clone out the ring buffer, oldest first (at most [`RING_CAP`] events,
+/// every level — the stderr threshold does not filter the ring).
+pub fn recent_events() -> Vec<Event> {
+    RING.lock().unwrap().iter().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+        assert!(Level::Error < Level::Off);
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error, Level::Off] {
+            assert_eq!(Level::parse(l.name()).unwrap(), l);
+        }
+        assert!(Level::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn events_land_in_ring_below_threshold() {
+        // Default threshold is warn; a debug event must still be captured.
+        debug("obs_test_ring", &[("n", num(3.0)), ("what", str("x"))]);
+        let events = recent_events();
+        let ev = events
+            .iter()
+            .rev()
+            .find(|e| e.code == "obs_test_ring")
+            .expect("event captured");
+        assert_eq!(ev.level, Level::Debug);
+        assert_eq!(ev.fields.get("n"), Some(&Json::Num(3.0)));
+        let line = ev.to_json().to_string_compact();
+        assert!(!line.contains('\n'), "JSONL events are single-line: {line}");
+        let back = crate::util::json::parse(&line).unwrap();
+        assert_eq!(back.get("event").unwrap(), &Json::Str("obs_test_ring".into()));
+        assert_eq!(back.get("level").unwrap(), &Json::Str("debug".into()));
+    }
+}

@@ -1,0 +1,25 @@
+//! Observability layer: per-query stage tracing, the leveled structured
+//! event log, and the Prometheus exposition surface.
+//!
+//! Three pieces, all zero-dependency:
+//!
+//! * [`QueryTrace`] — per-query span accounting (hash / gather / rerank /
+//!   merge durations, pager traffic) carried through the coordinator
+//!   pipeline and folded into [`crate::coordinator::Metrics`] per-stage
+//!   histograms. Timings never touch [`crate::query::SearchStats`]:
+//!   answers are bit-identical with tracing on or off
+//!   (`tests/observability.rs` proves it over the full QueryOpts grid).
+//! * [`event`] — leveled JSONL event log ([`log`], [`recent_events`],
+//!   `log_level=` config key) replacing ad-hoc `eprintln!`s across the
+//!   serving stack with machine-parseable single-line JSON events.
+//! * [`render_prometheus`] — `name{labels} value` text exposition of a
+//!   [`crate::coordinator::MetricsSnapshot`], served over the
+//!   `Request::Metrics` wire frame and the `tensorlsh metrics` CLI verb.
+
+pub mod event;
+pub mod prom;
+pub mod trace;
+
+pub use event::{log, recent_events, set_log_level, Event, Level};
+pub use prom::render_prometheus;
+pub use trace::QueryTrace;

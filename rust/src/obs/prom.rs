@@ -1,0 +1,111 @@
+//! Prometheus text exposition of a [`MetricsSnapshot`].
+//!
+//! Deliberately minimal: every line is `name value` or
+//! `name{labels} value` (Prometheus text format 0.0.4 without `# HELP` /
+//! `# TYPE` comments, which scrapers treat as optional). Flat snapshot
+//! fields map 1:1 to `tensorlsh_<field>`; the per-stage summaries become
+//! one metric family per statistic with a `stage` label, so dashboards
+//! can plot all stages of one statistic with a single selector.
+
+use crate::coordinator::{MetricsSnapshot, StageStats};
+use std::fmt::Write as _;
+
+/// Render one scrape. Values are finite by construction (idle means are
+/// defined as 0.0), so the output always parses as
+/// `name{labels} value` lines.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut line = |name: &str, v: f64| {
+        let _ = writeln!(out, "tensorlsh_{name} {v}");
+    };
+    line("queries", snap.queries as f64);
+    line("qps", snap.qps);
+    line("mean_candidates", snap.mean_candidates);
+    line("mean_probes", snap.mean_probes);
+    line("mean_reranked", snap.mean_reranked);
+    line("fallbacks", snap.fallbacks as f64);
+    line("mean_batch", snap.mean_batch);
+    line("latency_p50_us", snap.p50_us);
+    line("latency_p95_us", snap.p95_us);
+    line("latency_p99_us", snap.p99_us);
+    line("latency_mean_us", snap.mean_us);
+    line("slow_queries", snap.slow_queries as f64);
+    line("live_items", snap.live_items as f64);
+    line("tombstoned", snap.tombstoned as f64);
+    line("compactions_run", snap.compactions_run as f64);
+    line("reclaimed_slots", snap.reclaimed_slots as f64);
+    line("pager_hits", snap.pager_hits as f64);
+    line("pager_misses", snap.pager_misses as f64);
+    line("pager_evictions", snap.pager_evictions as f64);
+    line("pager_resident_bytes", snap.pager_resident_bytes as f64);
+    line("wal_fsyncs", snap.wal_fsyncs as f64);
+    line("wal_fsync_us_total", snap.wal_fsync_us);
+    for (stage, s) in [
+        ("hash", &snap.stage_hash),
+        ("gather", &snap.stage_gather),
+        ("rerank", &snap.stage_rerank),
+        ("merge", &snap.stage_merge),
+        ("wire_encode", &snap.stage_wire_encode),
+    ] {
+        stage_lines(&mut out, stage, s);
+    }
+    out
+}
+
+fn stage_lines(out: &mut String, stage: &str, s: &StageStats) {
+    for (stat, v) in [
+        ("count", s.count as f64),
+        ("mean_us", s.mean_us),
+        ("p50_us", s.p50_us),
+        ("p95_us", s.p95_us),
+        ("p99_us", s.p99_us),
+    ] {
+        let _ = writeln!(out, "tensorlsh_stage_{stat}{{stage=\"{stage}\"}} {v}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every rendered line matches `name{labels} value` with a finite
+    /// value — the same check the CI scrape step runs against a live
+    /// server.
+    #[test]
+    fn rendered_text_parses_line_by_line() {
+        let mut snap = crate::coordinator::Metrics::new().snapshot();
+        snap.queries = 12;
+        snap.qps = 345.625;
+        snap.stage_gather = StageStats {
+            count: 12,
+            mean_us: 40.5,
+            p50_us: 39.0,
+            p95_us: 80.0,
+            p99_us: 95.0,
+        };
+        let text = render_prometheus(&snap);
+        let mut names = std::collections::BTreeSet::new();
+        for l in text.lines() {
+            let (name, value) = l.split_once(' ').expect("name value");
+            assert!(
+                name.chars().next().unwrap().is_ascii_alphabetic(),
+                "metric name must start alphabetic: {l}"
+            );
+            if let Some((base, labels)) = name.split_once('{') {
+                assert!(labels.ends_with('}'), "unclosed labels: {l}");
+                assert!(!base.is_empty() && base.starts_with("tensorlsh_"));
+            } else {
+                assert!(name.starts_with("tensorlsh_"), "{l}");
+            }
+            let v: f64 = value.parse().expect("numeric value");
+            assert!(v.is_finite(), "{l}");
+            names.insert(name.to_string());
+        }
+        // The per-stage families the CI step asserts on are present.
+        for stage in ["hash", "gather", "rerank", "merge", "wire_encode"] {
+            assert!(names.contains(&format!("tensorlsh_stage_p99_us{{stage=\"{stage}\"}}")));
+        }
+        assert!(text.contains("tensorlsh_queries 12\n"));
+        assert!(text.contains("tensorlsh_stage_mean_us{stage=\"gather\"} 40.5\n"));
+    }
+}

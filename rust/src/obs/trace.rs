@@ -1,0 +1,128 @@
+//! Per-query span accounting: a [`QueryTrace`] rides along with each
+//! in-flight query and accumulates how long every pipeline stage spent on
+//! it, plus the pager traffic it caused.
+//!
+//! The trace is **write-only from the hot path** (relaxed atomic adds, no
+//! locks) and deliberately lives outside [`crate::query::SearchStats`]:
+//! stats are part of the answer and must stay bit-identical whether
+//! tracing is on or off, while timings are wall-clock noise. The
+//! coordinator folds finished traces into the per-stage histograms of
+//! [`crate::coordinator::Metrics`] and hands the breakdown to the
+//! slow-query log.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Stage timings (nanoseconds) and pager attribution for one query.
+///
+/// Gather/rerank spans are summed across shards, so on a multi-shard
+/// index they measure CPU time spent on the query, not wall time (shards
+/// are probed in parallel). Pager counters are deltas of the shared
+/// per-shard pager counters taken around the probe, so under concurrent
+/// queries they are attributed approximately — totals in
+/// [`crate::coordinator::MetricsSnapshot`] always come from the exact
+/// index-side counters.
+#[derive(Debug, Default)]
+pub struct QueryTrace {
+    hash_ns: AtomicU64,
+    gather_ns: AtomicU64,
+    rerank_ns: AtomicU64,
+    merge_ns: AtomicU64,
+    pager_hits: AtomicU64,
+    pager_misses: AtomicU64,
+}
+
+impl QueryTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// This query's share of its hash batch (batch time / batch size).
+    pub fn add_hash_ns(&self, ns: u64) {
+        self.hash_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Candidate generation on one shard.
+    pub fn add_gather_ns(&self, ns: u64) {
+        self.gather_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Policy re-rank on one shard.
+    pub fn add_rerank_ns(&self, ns: u64) {
+        self.rerank_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Cross-shard merge in the aggregator.
+    pub fn add_merge_ns(&self, ns: u64) {
+        self.merge_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Pager traffic observed while probing one shard.
+    pub fn add_pager(&self, hits: u64, misses: u64) {
+        self.pager_hits.fetch_add(hits, Ordering::Relaxed);
+        self.pager_misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
+    pub fn hash_us(&self) -> f64 {
+        self.hash_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn gather_us(&self) -> f64 {
+        self.gather_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn rerank_us(&self) -> f64 {
+        self.rerank_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn merge_us(&self) -> f64 {
+        self.merge_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn pager_hits(&self) -> u64 {
+        self.pager_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn pager_misses(&self) -> u64 {
+        self.pager_misses.load(Ordering::Relaxed)
+    }
+
+    /// The slow-query log's stage-breakdown object.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("hash_us".to_string(), Json::Num(self.hash_us()));
+        m.insert("gather_us".to_string(), Json::Num(self.gather_us()));
+        m.insert("rerank_us".to_string(), Json::Num(self.rerank_us()));
+        m.insert("merge_us".to_string(), Json::Num(self.merge_us()));
+        m.insert("pager_hits".to_string(), Json::Num(self.pager_hits() as f64));
+        m.insert(
+            "pager_misses".to_string(),
+            Json::Num(self.pager_misses() as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accumulates_and_converts_units() {
+        let t = QueryTrace::new();
+        t.add_hash_ns(1_500);
+        t.add_gather_ns(2_000);
+        t.add_gather_ns(3_000); // second shard folds in
+        t.add_rerank_ns(500);
+        t.add_merge_ns(250);
+        t.add_pager(7, 3);
+        assert!((t.hash_us() - 1.5).abs() < 1e-12);
+        assert!((t.gather_us() - 5.0).abs() < 1e-12);
+        assert!((t.rerank_us() - 0.5).abs() < 1e-12);
+        assert!((t.merge_us() - 0.25).abs() < 1e-12);
+        assert_eq!((t.pager_hits(), t.pager_misses()), (7, 3));
+        let text = t.to_json().to_string_compact();
+        assert!(text.contains("\"gather_us\":5"), "{text}");
+        assert!(text.contains("\"pager_hits\":7"), "{text}");
+    }
+}

@@ -103,6 +103,12 @@ struct WalState {
     /// current generation's snapshot.
     pending: usize,
     generation: u64,
+    /// Fsync totals from writers retired by compaction (each compaction
+    /// swaps in a fresh [`wal::WalWriter`], whose counters start at zero) —
+    /// accumulated here so [`Store::wal_fsync_stats`] is monotonic over the
+    /// store's lifetime, not per-generation.
+    retired_fsyncs: u64,
+    retired_fsync_ns: u64,
 }
 
 /// Directory-level durable store over a [`ShardedLshIndex`]: numbered
@@ -198,7 +204,13 @@ impl Store {
             index,
             checkpoint_every,
             compact_dead_fraction: 0.0,
-            wal: Mutex::new(WalState { writer, pending: 0, generation: 1 }),
+            wal: Mutex::new(WalState {
+                writer,
+                pending: 0,
+                generation: 1,
+                retired_fsyncs: 0,
+                retired_fsync_ns: 0,
+            }),
             recovery: RecoveryInfo { generation: 1, ..RecoveryInfo::default() },
         })
     }
@@ -270,11 +282,27 @@ impl Store {
             // Falling back is better than refusing to boot, but it can
             // drop inserts that were checkpointed only into the damaged
             // newer generation — say so loudly (and in RecoveryInfo).
-            eprintln!(
-                "store: skipped damaged snapshot generation(s) {skipped:?} in '{}'; \
-                 recovered from generation {generation} — inserts folded only into \
-                 the skipped generation(s) are lost",
-                dir.display()
+            crate::obs::event::error(
+                "generation_fallback",
+                &[
+                    ("dir", crate::obs::event::str(dir.display().to_string())),
+                    (
+                        "skipped",
+                        crate::util::json::Json::Arr(
+                            skipped
+                                .iter()
+                                .map(|&g| crate::obs::event::num(g as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("recovered_generation", crate::obs::event::num(generation as f64)),
+                    (
+                        "note",
+                        crate::obs::event::str(
+                            "inserts folded only into the skipped generation(s) are lost",
+                        ),
+                    ),
+                ],
             );
         }
         let index = Arc::new(index);
@@ -368,6 +396,15 @@ impl Store {
             wal::truncate_wal(&wal_path, replay.valid_len)?;
         }
         let writer = wal::WalWriter::open_append(&wal_path)?;
+        crate::obs::event::info(
+            "wal_recovery",
+            &[
+                ("generation", crate::obs::event::num(generation as f64)),
+                ("replayed", crate::obs::event::num(n_replayed as f64)),
+                ("already_applied", crate::obs::event::num(n_already_applied as f64)),
+                ("torn_bytes", crate::obs::event::num(replay.torn_bytes as f64)),
+            ],
+        );
         Ok(Store {
             dir: dir.to_path_buf(),
             index,
@@ -379,6 +416,8 @@ impl Store {
                 pending: n_replayed + n_already_applied,
                 writer,
                 generation,
+                retired_fsyncs: 0,
+                retired_fsync_ns: 0,
             }),
             recovery: RecoveryInfo {
                 generation,
@@ -427,6 +466,19 @@ impl Store {
     /// replayed, torn bytes dropped).
     pub fn recovery(&self) -> &RecoveryInfo {
         &self.recovery
+    }
+
+    /// Lifetime WAL fsync totals: `(count, total_µs)`. Monotonic across
+    /// compactions (retired writers' counters are folded in before each
+    /// swap) — the numbers the metrics snapshot reports as
+    /// `wal_fsyncs` / `wal_fsync_us`.
+    pub fn wal_fsync_stats(&self) -> (u64, f64) {
+        let wal = self.wal.lock().unwrap();
+        let (n, ns) = wal.writer.fsync_stats();
+        (
+            wal.retired_fsyncs + n,
+            (wal.retired_fsync_ns + ns) as f64 / 1e3,
+        )
     }
 
     /// Durable insert: hash, append to the WAL (flushed before returning),
@@ -511,7 +563,13 @@ impl Store {
         let dead = self.dead_trigger();
         if threshold || dead {
             if let Err(e) = self.compact_locked(wal, dead) {
-                eprintln!("store: threshold checkpoint failed (will retry): {e}");
+                crate::obs::event::error(
+                    "checkpoint_failed",
+                    &[
+                        ("error", crate::obs::event::str(e.to_string())),
+                        ("will_retry", crate::util::json::Json::Bool(true)),
+                    ],
+                );
             }
         }
     }
@@ -551,9 +609,11 @@ impl Store {
         // The WAL lock is held for the whole pass: mutations block, so the
         // segment is a consistent cut and truncating the log afterwards
         // cannot discard a record the snapshot missed.
-        if reclaim_dead && self.index.dead_len() > 0 {
-            self.index.compact_dead()?;
-        }
+        let reclaimed = if reclaim_dead && self.index.dead_len() > 0 {
+            self.index.compact_dead()?
+        } else {
+            0
+        };
         let generation = wal.generation + 1;
         self.index.save(&snap_dir(&self.dir, generation))?;
         // The new generation's directory entry must be durable BEFORE the
@@ -561,6 +621,12 @@ impl Store {
         segment::sync_dir(&self.dir)?;
         let wal_path = self.dir.join(WAL_FILE);
         wal::truncate_wal(&wal_path, 0)?;
+        // The retiring writer's fsync totals fold into the store-lifetime
+        // accumulators before the swap resets them to zero.
+        let (n, ns) = wal.writer.fsync_stats();
+        wal.retired_fsyncs += n;
+        wal.retired_fsync_ns += ns;
+        let folded = wal.pending;
         wal.writer = wal::WalWriter::open_append(&wal_path)?;
         wal.pending = 0;
         let old = wal.generation;
@@ -573,6 +639,14 @@ impl Store {
                 }
             }
         }
+        crate::obs::event::info(
+            "compaction",
+            &[
+                ("generation", crate::obs::event::num(generation as f64)),
+                ("wal_records_folded", crate::obs::event::num(folded as f64)),
+                ("reclaimed_slots", crate::obs::event::num(reclaimed as f64)),
+            ],
+        );
         Ok(generation)
     }
 }

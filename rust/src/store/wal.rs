@@ -157,6 +157,12 @@ impl WalRecord {
 /// mutation acknowledged by the durable [`super::Store`] is on disk).
 pub struct WalWriter {
     file: File,
+    /// Record fsyncs issued (one per appended record).
+    fsyncs: u64,
+    /// Cumulative nanoseconds those fsyncs took — the WAL's contribution
+    /// to mutation latency, overlaid into the coordinator's
+    /// [`crate::coordinator::MetricsSnapshot`].
+    fsync_ns: u64,
 }
 
 impl WalWriter {
@@ -175,7 +181,12 @@ impl WalWriter {
             file.write_all(&header)?;
             file.sync_data()?;
         }
-        Ok(WalWriter { file })
+        Ok(WalWriter { file, fsyncs: 0, fsync_ns: 0 })
+    }
+
+    /// (count, total nanoseconds) of record fsyncs this writer has issued.
+    pub fn fsync_stats(&self) -> (u64, u64) {
+        (self.fsyncs, self.fsync_ns)
     }
 
     /// Append one record and flush it to disk.
@@ -224,7 +235,10 @@ impl WalWriter {
         frame.put_bytes(&payload);
         frame.put_u32(crc.finish());
         self.file.write_all(&frame)?;
+        let t0 = std::time::Instant::now();
         self.file.sync_data()?;
+        self.fsyncs += 1;
+        self.fsync_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
     }
 }

@@ -1,0 +1,207 @@
+//! Observability contract (ISSUE 10 acceptance): tracing is *bit-invisible*
+//! — a coordinator with per-stage tracing on answers the full `QueryOpts`
+//! grid with hits AND stats identical to one with tracing off — while the
+//! traced pipeline's metrics snapshot carries per-stage span summaries, the
+//! slow-query log fires past its threshold, and a live wire server exposes
+//! the whole surface as parseable Prometheus text over the `Metrics` frame.
+
+// Not the precision-audited hash path: test scaffolding on small bounded values.
+#![allow(clippy::cast_possible_truncation)]
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use tensor_lsh::coordinator::{Coordinator, CoordinatorConfig, HashBackend};
+use tensor_lsh::index::{Metric, ShardedLshIndex};
+use tensor_lsh::lsh::{FamilyKind, FamilySpec, LshSpec, SeedPolicy, ServingSpec};
+use tensor_lsh::net::{Client, NetConfig, Server};
+use tensor_lsh::projection::Precision;
+use tensor_lsh::query::{Query, QueryOpts, RerankPolicy, Searcher};
+use tensor_lsh::rng::Rng;
+use tensor_lsh::tensor::AnyTensor;
+use tensor_lsh::testutil::{proptest, random_any_tensor};
+
+/// A randomized but valid spec spanning family kinds, metrics, precisions,
+/// and probes (the same spread the paging-equivalence suite pins).
+fn random_spec(rng: &mut Rng) -> LshSpec {
+    let kinds = [FamilyKind::Cp, FamilyKind::Tt, FamilyKind::Sparse];
+    let kind = kinds[rng.below(3)];
+    let metric = if rng.below(2) == 0 { Metric::Cosine } else { Metric::Euclidean };
+    let precision = if rng.below(2) == 0 { Precision::F64 } else { Precision::F32 };
+    let n_modes = 2 + rng.below(2);
+    let dims: Vec<usize> = (0..n_modes).map(|_| 3 + rng.below(4)).collect();
+    let spec = LshSpec {
+        family: FamilySpec {
+            kind,
+            dims,
+            rank: 1 + rng.below(3),
+            k: 2 + rng.below(6),
+            metric,
+            w: 2.0 + rng.uniform(0.0, 4.0),
+            precision,
+            sample: 0,
+        },
+        l: 2 + rng.below(4),
+        probes: rng.below(3),
+        banded: false,
+        seeds: SeedPolicy::new(rng.next_u64() >> 12, 1 + (rng.next_u64() >> 40)),
+        serving: ServingSpec { shards: 1 + rng.below(4), ..Default::default() },
+    };
+    spec.validate().unwrap();
+    spec
+}
+
+/// The full per-query knob grid the acceptance criteria call for.
+fn opts_grid() -> Vec<QueryOpts> {
+    let mut grid = Vec::new();
+    for rerank in [RerankPolicy::Exact, RerankPolicy::SignatureOnly, RerankPolicy::Budgeted(3)] {
+        for probes in [None, Some(2)] {
+            for cap in [None, Some(4)] {
+                let mut o = QueryOpts::top_k(6).with_rerank(rerank);
+                o.probes = probes;
+                o.max_candidates = cap;
+                grid.push(o);
+            }
+        }
+    }
+    grid.push(QueryOpts::top_k(6).with_dedup(false));
+    grid.push(QueryOpts::top_k(6).with_max_candidates(0).with_exact_fallback(true));
+    grid
+}
+
+/// The tentpole acceptance property: across randomized specs and the full
+/// `QueryOpts` grid, a traced coordinator and an untraced one over the same
+/// index return bit-identical hits AND stats — timings never leak into
+/// answers — while only the traced side accumulates stage histograms.
+#[test]
+fn prop_tracing_is_bit_invisible_over_full_grid() {
+    proptest("traced vs untraced equivalence", 4, |rng| {
+        let spec = random_spec(rng);
+        let dims = spec.family.dims.clone();
+        let items: Vec<AnyTensor> =
+            (0..20 + rng.below(20)).map(|_| random_any_tensor(rng, &dims, 3)).collect();
+        let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items.clone()).unwrap());
+        let traced = Coordinator::start(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 2, trace: true, ..Default::default() },
+            HashBackend::Native,
+        );
+        let untraced = Coordinator::start(
+            Arc::clone(&index),
+            CoordinatorConfig { n_workers: 2, trace: false, ..Default::default() },
+            HashBackend::Native,
+        );
+        let queries: Vec<AnyTensor> = (0..3)
+            .map(|_| random_any_tensor(rng, &dims, 3))
+            .chain(items.iter().take(3).cloned())
+            .collect();
+        let mut served = 0u64;
+        for (qi, q) in queries.iter().enumerate() {
+            for (oi, opts) in opts_grid().iter().enumerate() {
+                let query = Query::with_opts(q.clone(), opts.clone());
+                let rt = traced.search(&query).unwrap();
+                let ru = untraced.search(&query).unwrap();
+                assert_eq!(rt.hits, ru.hits, "hits differ (query {qi}, opts {oi})");
+                assert_eq!(rt.stats, ru.stats, "stats differ (query {qi}, opts {oi})");
+                served += 1;
+            }
+        }
+        let st = traced.shutdown();
+        let su = untraced.shutdown();
+        // Same query accounting on both sides...
+        assert_eq!(st.queries, served);
+        assert_eq!(su.queries, served);
+        // ...but stage spans exist only where tracing ran.
+        for (stage, t, u) in [
+            ("hash", &st.stage_hash, &su.stage_hash),
+            ("gather", &st.stage_gather, &su.stage_gather),
+            ("rerank", &st.stage_rerank, &su.stage_rerank),
+            ("merge", &st.stage_merge, &su.stage_merge),
+        ] {
+            assert_eq!(t.count, served, "traced {stage} count");
+            assert_eq!(u.count, 0, "untraced {stage} must record nothing");
+            assert!(t.p50_us <= t.p95_us && t.p95_us <= t.p99_us, "{stage} quantile order");
+        }
+    });
+}
+
+/// A coordinator with a 1 µs slow-query threshold flags every query: the
+/// `slow_queries` counter moves and a structured `slow_query` event — with
+/// latency, the offending `QueryOpts`, and the per-stage breakdown — lands
+/// in the recent-events ring.
+#[test]
+fn slow_query_log_fires_past_threshold() {
+    let mut rng = Rng::new(17);
+    let dims = [6usize, 5];
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.to_vec(), 3, 7, 4).with_seed(61, 3);
+    let items: Vec<AnyTensor> = (0..60).map(|_| random_any_tensor(&mut rng, &dims, 2)).collect();
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items).unwrap());
+    let coord = Coordinator::start(
+        Arc::clone(&index),
+        CoordinatorConfig { n_workers: 2, slow_query_us: 1, ..Default::default() },
+        HashBackend::Native,
+    );
+    for i in 0..8 {
+        coord.search(&Query::new(index.item(i * 7), 4)).unwrap();
+    }
+    let snap = coord.shutdown();
+    assert!(snap.slow_queries >= 1, "1 µs threshold must flag queries");
+    let ev = tensor_lsh::obs::recent_events()
+        .into_iter()
+        .rev()
+        .find(|e| e.code == "slow_query")
+        .expect("slow_query event in the ring");
+    assert_eq!(ev.level, tensor_lsh::obs::Level::Warn);
+    assert!(ev.fields.contains_key("latency_us"));
+    assert!(ev.fields.contains_key("opts"));
+    assert!(ev.fields.contains_key("stages"), "slow log carries the stage breakdown");
+}
+
+/// Scrape a live wire server: the `Metrics` frame answers with Prometheus
+/// text where every line parses as `name{labels} value`, the per-stage
+/// families carry the traffic just served, and the wire-encode span (taken
+/// on the server around response serialization) has samples.
+#[test]
+fn live_server_scrape_parses_with_stage_keys() {
+    let mut rng = Rng::new(23);
+    let dims = [6usize, 5];
+    let spec = LshSpec::cosine(FamilyKind::Cp, dims.to_vec(), 3, 7, 4).with_seed(61, 3);
+    let items: Vec<AnyTensor> = (0..90).map(|_| random_any_tensor(&mut rng, &dims, 2)).collect();
+    let index = Arc::new(ShardedLshIndex::build_from_spec(&spec, items).unwrap());
+    let coord = Coordinator::start(
+        Arc::clone(&index),
+        CoordinatorConfig { n_workers: 2, ..Default::default() },
+        HashBackend::Native,
+    );
+    let server = Server::start(coord, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let n_queries = 10u64;
+    for i in 0..n_queries {
+        let got = client.search(&Query::new(index.item(i as usize * 3), 5)).unwrap();
+        assert!(!got.hits.is_empty());
+    }
+    let text = client.metrics_text().unwrap();
+    let mut values: BTreeMap<String, f64> = BTreeMap::new();
+    for l in text.lines() {
+        let (name, value) = l.split_once(' ').unwrap_or_else(|| panic!("bad line: {l}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {l}"));
+        assert!(v.is_finite(), "{l}");
+        if let Some((_, labels)) = name.split_once('{') {
+            assert!(labels.ends_with('}'), "unclosed labels: {l}");
+        }
+        assert!(name.starts_with("tensorlsh_"), "{l}");
+        values.insert(name.to_string(), v);
+    }
+    assert_eq!(values["tensorlsh_queries"], n_queries as f64);
+    for stage in ["hash", "gather", "rerank", "merge"] {
+        let key = format!("tensorlsh_stage_count{{stage=\"{stage}\"}}");
+        assert_eq!(values[&key], n_queries as f64, "{key}");
+    }
+    // Wire-encode spans are recorded on the server after each search
+    // response is written — strictly before this same connection's scrape
+    // is read, so the count is exact here too.
+    assert_eq!(values["tensorlsh_stage_count{stage=\"wire_encode\"}"], n_queries as f64);
+    // Memory-backed server: the store overlays stay zero but are present.
+    assert_eq!(values["tensorlsh_wal_fsyncs"], 0.0);
+    assert_eq!(values["tensorlsh_live_items"], 90.0);
+    server.shutdown();
+}
